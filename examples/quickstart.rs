@@ -1,0 +1,64 @@
+//! Quickstart: the whole system in under a minute.
+//!
+//! Generates a small synthetic corpus, splits it into 4 sub-corpora with
+//! the paper's Shuffle strategy, trains 4 SGNS sub-models fully
+//! asynchronously on the PJRT runtime (AOT-compiled JAX/Pallas kernels),
+//! merges them with ALiR and scores the consensus on the gold benchmark
+//! suite.
+//!
+//! Run with:  make artifacts && cargo run --release --example quickstart
+
+use dw2v::coordinator::leader;
+use dw2v::eval::report;
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+
+fn main() -> Result<(), String> {
+    // 1. configure a small experiment (all knobs on ExperimentConfig)
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 4000;
+    cfg.vocab = 800;
+    cfg.clusters = 16;
+    cfg.dim = 32;
+    cfg.epochs = 2;
+    cfg.rate_percent = 25.0; // 4 sub-models
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+
+    // 2. build the synthetic world (corpus + vocab + gold benchmarks)
+    let world = build_world(&cfg);
+    println!(
+        "corpus: {} sentences, {} tokens, vocab {}",
+        world.corpus.len(),
+        world.corpus.total_tokens(),
+        world.vocab.len()
+    );
+
+    // 3. load the AOT artifact (compiled once from python/compile via
+    //    `make artifacts`; python never runs again after that)
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
+    let artifact = manifest.resolve(world.vocab.len(), cfg.dim)?;
+    let rt = Runtime::load(artifact)?;
+    println!("artifact: {} (V={}, D={})", artifact.name, artifact.vocab, artifact.dim);
+
+    // 4. divide -> train -> merge -> eval
+    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)?;
+
+    println!(
+        "\ntrained {} sub-models in {:.2}s ({} pairs), merged in {:.2}s",
+        rep.train.submodels.len(),
+        rep.train.train_secs,
+        rep.train.pairs,
+        rep.merge_secs
+    );
+    for (s, losses) in rep.train.epoch_loss.iter().enumerate() {
+        let fmt: Vec<String> = losses.iter().map(|l| format!("{l:.4}")).collect();
+        println!("  sub-model {s} epoch mean loss: [{}]", fmt.join(" -> "));
+    }
+    println!("\n{}", report::format_header(&rep.scores));
+    println!("{}", report::format_row("Shuffle 25% + ALiR", &rep.scores));
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,139 @@
+"""AOT compiler: lower the Layer-2 model to HLO text artifacts for rust.
+
+Usage (from python/):
+    python -m compile.aot --out-dir ../artifacts                 # default set
+    python -m compile.aot --out-dir ../artifacts --cfg 512,16,32,3,2:unit
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` crate links) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Per config three artifacts are produced:
+  sgns_<name>.hlo.txt     train_many — the hot-path macro-step
+  metrics_<name>.hlo.txt  metrics-row slice (loss counters)
+  sim_<name>.hlo.txt      batched cosine similarity for the eval fast path
+plus one shared ``manifest.json`` describing shapes, row layout and the
+estimated Pallas VMEM footprint, which rust/src/runtime/artifacts.rs reads
+to resolve a runtime config to an artifact.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.sgns import vmem_footprint_bytes
+from .model import ModelConfig, example_args, metrics, similarity, train_many
+
+SIM_Q = 256  # static query-batch size of the similarity artifact
+
+# name -> (vocab, dim, batch, negatives, steps)
+PRESETS = {
+    "unit": ModelConfig(vocab=64, dim=8, batch=8, negatives=2, steps=2),
+    "tiny": ModelConfig(vocab=2000, dim=32, batch=64, negatives=5, steps=4),
+    # scan-length ablation partner of "tiny" (same shapes, steps=1) — used
+    # by perf_hotpath to measure what the lax.scan macro-step buys
+    "tiny_s1": ModelConfig(vocab=2000, dim=32, batch=64, negatives=5, steps=1),
+    "default": ModelConfig(vocab=10000, dim=64, batch=256, negatives=5, steps=8),
+}
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=False)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_config(cfg):
+    """Lower all three entry points for one config; returns name->hlo text."""
+    train = functools.partial(train_many, cfg)
+    hlo_train = to_hlo_text(jax.jit(train).lower(*example_args(cfg)))
+
+    state_spec = jax.ShapeDtypeStruct((cfg.rows, cfg.dim), jnp.float32)
+    hlo_metrics = to_hlo_text(
+        jax.jit(functools.partial(metrics, cfg)).lower(state_spec)
+    )
+
+    q_spec = jax.ShapeDtypeStruct((SIM_Q,), jnp.int32)
+    hlo_sim = to_hlo_text(
+        jax.jit(functools.partial(similarity, cfg)).lower(state_spec, q_spec, q_spec)
+    )
+    return {"train": hlo_train, "metrics": hlo_metrics, "sim": hlo_sim}
+
+
+def manifest_entry(cfg, files):
+    return {
+        "name": cfg.name(),
+        "vocab": cfg.vocab,
+        "dim": cfg.dim,
+        "batch": cfg.batch,
+        "negatives": cfg.negatives,
+        "steps": cfg.steps,
+        "rows": cfg.rows,
+        "pad_row": cfg.pad_row,
+        "metrics_row": cfg.metrics_row,
+        "sim_q": SIM_Q,
+        "vmem_block_bytes": vmem_footprint_bytes(
+            min(cfg.block_b, cfg.batch), cfg.k1, cfg.dim
+        ),
+        "files": files,
+    }
+
+
+def parse_cfg(spec):
+    """Parse 'V,D,B,K,S[:name]' — name is informational only."""
+    body = spec.split(":")[0]
+    v, d, b, k, s = (int(x) for x in body.split(","))
+    return ModelConfig(vocab=v, dim=d, batch=b, negatives=k, steps=s)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--preset",
+        action="append",
+        default=[],
+        help="preset name (unit|tiny|default); repeatable",
+    )
+    ap.add_argument(
+        "--cfg",
+        action="append",
+        default=[],
+        help="custom config V,D,B,K,S; repeatable",
+    )
+    args = ap.parse_args()
+
+    cfgs = [PRESETS[p] for p in args.preset] + [parse_cfg(c) for c in args.cfg]
+    if not cfgs:
+        cfgs = list(PRESETS.values())
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for cfg in cfgs:
+        hlos = lower_config(cfg)
+        files = {}
+        for kind, text in hlos.items():
+            fname = f"{kind}_{cfg.name()}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            files[kind] = fname
+            print(f"  wrote {fname} ({len(text)} chars)")
+        entries.append(manifest_entry(cfg, files))
+
+    manifest = {"version": 1, "sim_q": SIM_Q, "configs": entries}
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json with {len(entries)} configs -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

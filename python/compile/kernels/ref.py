@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the SGNS dense core.
+
+This is the correctness reference the Pallas kernel (sgns.py) is tested
+against. It computes, for a micro-batch of gathered embeddings, the SGNS
+loss and the dense gradients w.r.t. both the center vectors and the
+(positive + negative) context vectors.
+
+Shapes
+------
+w       [B, D]        gathered center-word embeddings
+c       [B, K1, D]    gathered context embeddings; column 0 is the positive
+                      context, columns 1..K1-1 are the K negative samples
+weight  [B]           per-example weight (0.0 = padding, 1.0 = real)
+
+Returns
+-------
+loss    [B]           weighted per-example SGNS loss
+gw      [B, D]        d loss / d w     (already weighted)
+gc      [B, K1, D]    d loss / d c     (already weighted)
+
+The SGNS objective for one (w, c_pos, c_neg[0..K)) example is
+
+    L = -log sigma(w . c_pos) - sum_j log sigma(-w . c_neg_j)
+      =  softplus(-x_0)       + sum_j softplus(x_j)
+
+with x_j = w . c_j. Its gradient w.r.t. x_j is (sigma(x_j) - label_j) with
+label_0 = 1 and label_j = 0 otherwise, which is what both implementations
+use.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def sgns_dense_ref(w, c, weight):
+    """Reference SGNS loss + gradients for a micro-batch.
+
+    All math in float32; see module docstring for shapes.
+    """
+    w = w.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    weight = weight.astype(jnp.float32)
+    k1 = c.shape[1]
+    # logits[b, j] = w[b] . c[b, j]
+    logits = jnp.einsum("bd,bjd->bj", w, c)
+    labels = (jnp.arange(k1) == 0).astype(jnp.float32)[None, :]
+    # loss = softplus(-x_pos) + sum_neg softplus(x_neg)
+    per_pair = jax.nn.softplus(jnp.where(labels > 0, -logits, logits))
+    loss = jnp.sum(per_pair, axis=1) * weight
+    # dL/dx = sigma(x) - label
+    g = (jax.nn.sigmoid(logits) - labels) * weight[:, None]
+    gw = jnp.einsum("bj,bjd->bd", g, c)
+    gc = g[:, :, None] * w[:, None, :]
+    return loss, gw, gc
+
+
+def sgns_loss_scalar(w, c, weight):
+    """Summed scalar loss — used by tests to check gradients via jax.grad."""
+    k1 = c.shape[1]
+    logits = jnp.einsum("bd,bjd->bj", w, c)
+    labels = (jnp.arange(k1) == 0).astype(jnp.float32)[None, :]
+    per_pair = jax.nn.softplus(jnp.where(labels > 0, -logits, logits))
+    return jnp.sum(jnp.sum(per_pair, axis=1) * weight)

@@ -1,0 +1,126 @@
+"""Layer-1 Pallas kernel: the SGNS dense core.
+
+One fused kernel computes, per micro-batch block, the SGNS logits, the
+per-example loss and both dense gradients. This is the compute hot spot of
+the whole system — every (center, context+negatives) training pair flows
+through it.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation)
+------------------------------------------------
+* The grid tiles the batch dimension; each block's working set is
+  ``block_b * (1 + 2*(K+1)) * D`` f32 values (w, c, gc and a few [block_b,
+  K+1] temporaries), sized to sit comfortably in VMEM.
+* The logits contraction ``w[b,:] . c[b,j,:]`` and the gradient
+  contraction ``g[b,:] @ c[b,:,:]`` are expressed as jnp.einsum so the TPU
+  lowering can feed the MXU; the outer product for gc uses the VPU.
+* ``interpret=True`` is mandatory in this environment: the CPU PJRT plugin
+  cannot execute Mosaic custom-calls, and interpret-mode lowers the kernel
+  to plain HLO that any backend runs. The BlockSpec structure (and hence
+  the VMEM schedule) is identical either way.
+
+The kernel is validated against :mod:`.ref` by ``python/tests`` (pytest +
+hypothesis shape/dtype sweeps and a jax.grad cross-check).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgns_kernel(w_ref, c_ref, weight_ref, loss_ref, gw_ref, gc_ref):
+    """Fused SGNS loss + gradients for one batch block.
+
+    Refs (block shapes):
+      w_ref      [BB, D]      center embeddings
+      c_ref      [BB, K1, D]  contexts; col 0 positive, rest negatives
+      weight_ref [BB]         example weights (0 = padding)
+      loss_ref   [BB]         out: weighted per-example loss
+      gw_ref     [BB, D]      out: d loss / d w
+      gc_ref     [BB, K1, D]  out: d loss / d c
+    """
+    w = w_ref[...]
+    c = c_ref[...]
+    weight = weight_ref[...]
+    k1 = c.shape[1]
+
+    # logits[b, j] = w[b] . c[b, j] — batched contraction (MXU-friendly).
+    logits = jnp.einsum("bd,bjd->bj", w, c, preferred_element_type=jnp.float32)
+    labels = (jax.lax.broadcasted_iota(jnp.int32, (1, k1), 1) == 0).astype(
+        jnp.float32
+    )
+
+    # Per-pair loss: softplus(-x) for the positive, softplus(x) for negatives.
+    per_pair = jax.nn.softplus(jnp.where(labels > 0, -logits, logits))
+    loss_ref[...] = jnp.sum(per_pair, axis=1) * weight
+
+    # dL/dx_j = sigma(x_j) - label_j, scaled by the example weight.
+    g = (jax.nn.sigmoid(logits) - labels) * weight[:, None]
+
+    # gw[b] = sum_j g[b,j] * c[b,j]  — second batched contraction.
+    gw_ref[...] = jnp.einsum("bj,bjd->bd", g, c, preferred_element_type=jnp.float32)
+    # gc[b,j] = g[b,j] * w[b]        — outer product (VPU).
+    gc_ref[...] = g[:, :, None] * w[:, None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def sgns_dense(w, c, weight, *, block_b=None):
+    """Pallas-kernel SGNS dense core.
+
+    Args:
+      w:      [B, D] float32 center embeddings.
+      c:      [B, K1, D] float32 context embeddings (col 0 = positive).
+      weight: [B] float32 per-example weights.
+      block_b: batch tile size; must divide B. Defaults to min(B, 256).
+
+    Returns:
+      (loss [B], gw [B, D], gc [B, K1, D]) — see kernels.ref for semantics.
+    """
+    b, d = w.shape
+    k1 = c.shape[1]
+    if block_b is None:
+        block_b = min(b, 256)
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not divisible by block_b {block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _sgns_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k1, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, k1, d), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, k1, d), jnp.float32),
+        ],
+        interpret=True,
+    )(w.astype(jnp.float32), c.astype(jnp.float32), weight.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(block_b, k1, d):
+    """Estimated VMEM working set of one kernel block, in bytes.
+
+    Counts the resident block inputs/outputs plus the [BB, K1] temporaries
+    (logits, per_pair, g). Used by DESIGN.md §Perf and the aot manifest to
+    sanity-check block sizes against the ~16 MiB/core VMEM budget.
+    """
+    f32 = 4
+    tiles = (
+        block_b * d  # w
+        + block_b * k1 * d  # c
+        + block_b  # weight
+        + block_b  # loss
+        + block_b * d  # gw
+        + block_b * k1 * d  # gc
+        + 3 * block_b * k1  # logits, per_pair, g
+    )
+    return tiles * f32

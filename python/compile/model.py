@@ -1,0 +1,180 @@
+"""Layer-2 JAX model: the SGNS train step over the packed parameter state.
+
+The whole trainable state lives in ONE device array so the rust runtime can
+chain ``execute_b`` calls with zero host round-trips (the CPU PJRT wrapper
+returns multi-output computations as a single un-splittable tuple buffer, so
+multi-array state would force a host copy every step — see
+rust/src/bin/bridge_probe.rs):
+
+    state: f32[2V + 2, D]
+      rows [0, V)      W   — center/input embeddings
+      rows [V, 2V)     C   — context/output embeddings
+      row  2V          PAD — the all-zero padding row; padded examples index
+                             it with weight 0, so it never changes
+      row  2V+1        METRICS — running counters:
+                             [0] sum of per-example losses
+                             [1] number of weighted examples
+                             [2] number of micro-steps executed
+                             [3..] zero
+
+One micro-step gathers the touched rows, runs the Layer-1 Pallas kernel for
+the dense math, and applies SGD via scatter-add (duplicate indices in a
+batch accumulate — deterministic, strictly stronger than Hogwild's racy
+semantics that the paper's baseline relies on).
+
+``train_many`` wraps ``steps`` micro-steps in a ``lax.scan`` so one PJRT
+dispatch from rust covers a macro-batch; this is the artifact on the hot
+path. ``metrics`` and ``similarity`` are tiny companion artifacts.
+"""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ref import sgns_dense_ref
+from .kernels.sgns import sgns_dense
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration baked into one AOT artifact."""
+
+    vocab: int  # V — vocabulary size
+    dim: int  # D — embedding dimensionality
+    batch: int  # B — examples per micro-step
+    negatives: int  # K — negative samples per positive
+    steps: int  # S — micro-steps per PJRT dispatch (scan length)
+    block_b: int = 256  # Pallas batch tile
+
+    @property
+    def k1(self):
+        return self.negatives + 1
+
+    @property
+    def rows(self):
+        return 2 * self.vocab + 2
+
+    @property
+    def pad_row(self):
+        return 2 * self.vocab
+
+    @property
+    def metrics_row(self):
+        return 2 * self.vocab + 1
+
+    def name(self):
+        return (
+            f"v{self.vocab}_d{self.dim}_b{self.batch}"
+            f"_k{self.negatives}_s{self.steps}"
+        )
+
+
+def init_state(cfg, key):
+    """Word2vec-style init: W ~ U(-0.5/D, 0.5/D), C = 0, pad/metrics = 0."""
+    w = (
+        jax.random.uniform(key, (cfg.vocab, cfg.dim), jnp.float32) - 0.5
+    ) / cfg.dim
+    rest = jnp.zeros((cfg.vocab + 2, cfg.dim), jnp.float32)
+    return jnp.concatenate([w, rest], axis=0)
+
+
+def _micro_step(cfg, use_kernel, state, centers, ctx, weights, lr):
+    """One SGD micro-step over the packed state.
+
+    centers: i32[B] rows into W (or pad_row); ctx: i32[B, K1] rows into C
+    *relative to the C block* (i.e. 0..V, or pad sentinel V). weights: f32[B].
+    """
+    # Both index tensors use vocab-relative ids: 0..V-1 real, V = padding
+    # sentinel. Centers map the sentinel to pad_row explicitly; contexts get
+    # it for free (V + V == 2V == pad_row).
+    w_rows = jnp.where(centers == cfg.vocab, cfg.pad_row, centers)
+    c_rows = ctx + cfg.vocab
+    w = state[w_rows]  # [B, D]
+    c = state[c_rows]  # [B, K1, D]
+
+    dense = sgns_dense if use_kernel else sgns_dense_ref
+    if use_kernel:
+        loss, gw, gc = dense(w, c, weights, block_b=min(cfg.block_b, cfg.batch))
+    else:
+        loss, gw, gc = dense(w, c, weights)
+
+    state = state.at[w_rows].add(-lr * gw)
+    state = state.at[c_rows].add(-lr * gc)
+    metrics_delta = (
+        jnp.zeros((cfg.dim,), jnp.float32)
+        .at[0]
+        .add(jnp.sum(loss))
+        .at[1]
+        .add(jnp.sum(weights))
+        .at[2]
+        .add(1.0)
+    )
+    state = state.at[cfg.metrics_row].add(metrics_delta)
+    # Padded examples funnel their (zero-weighted, hence zero) gradients into
+    # pad_row; keep it exactly zero regardless of float fuzz.
+    state = state.at[cfg.pad_row].set(jnp.zeros((cfg.dim,), jnp.float32))
+    return state, loss
+
+
+def train_step(cfg, state, centers, ctx, weights, lr, *, use_kernel=True):
+    """Single micro-step entry point (tests + the steps=1 artifact)."""
+    state, _ = _micro_step(cfg, use_kernel, state, centers, ctx, weights, lr[0])
+    return state
+
+
+def train_many(cfg, state, centers, ctx, weights, lr, *, use_kernel=True):
+    """S micro-steps per call via lax.scan — the hot-path artifact.
+
+    Args:
+      state:   f32[2V+2, D]
+      centers: i32[S, B]
+      ctx:     i32[S, B, K1]   (0..V-1 real, V = padding)
+      weights: f32[S, B]
+      lr:      f32[1]
+    Returns: updated state.
+    """
+
+    def body(st, xs):
+        cen, cx, wt = xs
+        st, _ = _micro_step(cfg, use_kernel, st, cen, cx, wt, lr[0])
+        return st, ()
+
+    state, _ = jax.lax.scan(body, state, (centers, ctx, weights))
+    return state
+
+
+def metrics(cfg, state):
+    """Slice out the metrics row (tiny companion artifact)."""
+    return state[cfg.metrics_row]
+
+
+def similarity(cfg, state, queries, candidates):
+    """Cosine similarities between query and candidate W rows.
+
+    queries: i32[Q], candidates: i32[Q] — returns f32[Q]. Used by the rust
+    eval fast path to score similarity benchmarks on-device.
+    """
+    qw = state[queries]
+    cw = state[candidates]
+    qn = qw / jnp.maximum(jnp.linalg.norm(qw, axis=1, keepdims=True), 1e-9)
+    cn = cw / jnp.maximum(jnp.linalg.norm(cw, axis=1, keepdims=True), 1e-9)
+    return jnp.sum(qn * cn, axis=1)
+
+
+def reference_train_many(cfg, state, centers, ctx, weights, lr):
+    """Pure-jnp oracle of train_many (kernel replaced by ref) for pytest."""
+    return train_many(cfg, state, centers, ctx, weights, lr, use_kernel=False)
+
+
+@functools.lru_cache(maxsize=None)
+def example_args(cfg):
+    """ShapeDtypeStructs for lowering train_many."""
+    return (
+        jax.ShapeDtypeStruct((cfg.rows, cfg.dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.steps, cfg.batch), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.steps, cfg.batch, cfg.k1), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.steps, cfg.batch), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )

@@ -1,0 +1,176 @@
+"""Layer-1 correctness: Pallas SGNS kernel vs the pure-jnp oracle.
+
+The hypothesis sweep drives the kernel across batch/dim/negative shapes and
+dtypes and asserts allclose against kernels.ref; an independent jax.grad
+cross-check pins the oracle itself to autodiff ground truth.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sgns_dense_ref, sgns_loss_scalar
+from compile.kernels.sgns import sgns_dense, vmem_footprint_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def random_inputs(rng, b, k1, d, scale=1.0, dtype=np.float32):
+    w = rng.normal(size=(b, d), scale=scale).astype(dtype)
+    c = rng.normal(size=(b, k1, d), scale=scale).astype(dtype)
+    weight = rng.integers(0, 2, size=(b,)).astype(np.float32)
+    return w, c, weight
+
+
+class TestKernelVsRef:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 8, 16, 32]),
+        k=st.integers(min_value=1, max_value=8),
+        d=st.sampled_from([4, 8, 16, 32, 64]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_matches_ref_shapes_sweep(self, b, k, d, seed):
+        rng = np.random.default_rng(seed)
+        w, c, weight = random_inputs(rng, b, k + 1, d)
+        loss_k, gw_k, gc_k = sgns_dense(w, c, weight, block_b=b)
+        loss_r, gw_r, gc_r = sgns_dense_ref(w, c, weight)
+        np.testing.assert_allclose(loss_k, loss_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gw_k, gw_r, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gc_k, gc_r, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        blocks=st.integers(min_value=1, max_value=4),
+        block_b=st.sampled_from([2, 4, 8]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_grid_tiling_invariant(self, blocks, block_b, seed):
+        """Result must not depend on the batch tile size."""
+        rng = np.random.default_rng(seed)
+        b = blocks * block_b
+        w, c, weight = random_inputs(rng, b, 4, 16)
+        loss_t, gw_t, gc_t = sgns_dense(w, c, weight, block_b=block_b)
+        loss_f, gw_f, gc_f = sgns_dense(w, c, weight, block_b=b)
+        np.testing.assert_allclose(loss_t, loss_f, rtol=1e-6)
+        np.testing.assert_allclose(gw_t, gw_f, rtol=1e-6)
+        np.testing.assert_allclose(gc_t, gc_f, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        dtype=st.sampled_from([np.float32, np.float16]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_dtype_inputs_upcast(self, dtype, seed):
+        """Lower-precision inputs are upcast to f32 inside both paths."""
+        rng = np.random.default_rng(seed)
+        w, c, weight = random_inputs(rng, 8, 3, 8, dtype=dtype)
+        loss_k, gw_k, gc_k = sgns_dense(w, c, weight)
+        loss_r, gw_r, gc_r = sgns_dense_ref(w, c, weight)
+        assert loss_k.dtype == jnp.float32
+        np.testing.assert_allclose(loss_k, loss_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gw_k, gw_r, rtol=1e-4, atol=1e-5)
+
+    def test_rejects_indivisible_block(self):
+        rng = np.random.default_rng(0)
+        w, c, weight = random_inputs(rng, 6, 3, 8)
+        with pytest.raises(ValueError, match="not divisible"):
+            sgns_dense(w, c, weight, block_b=4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_zero_weight_examples_contribute_nothing(self, seed):
+        rng = np.random.default_rng(seed)
+        w, c, _ = random_inputs(rng, 8, 4, 16)
+        weight = np.zeros((8,), np.float32)
+        loss, gw, gc = sgns_dense(w, c, weight)
+        assert float(jnp.abs(loss).max()) == 0.0
+        assert float(jnp.abs(gw).max()) == 0.0
+        assert float(jnp.abs(gc).max()) == 0.0
+
+    def test_extreme_logits_are_finite(self):
+        """softplus/sigmoid formulation must not overflow at |x| ~ 1e3."""
+        b, k1, d = 4, 3, 8
+        w = np.full((b, d), 10.0, np.float32)
+        c = np.full((b, k1, d), 10.0, np.float32)  # logits = 800
+        weight = np.ones((b,), np.float32)
+        loss, gw, gc = sgns_dense(w, c, weight)
+        assert np.isfinite(np.asarray(loss)).all()
+        assert np.isfinite(np.asarray(gw)).all()
+        assert np.isfinite(np.asarray(gc)).all()
+
+
+class TestGradientsVsAutodiff:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([1, 4, 8]),
+        k=st.integers(min_value=1, max_value=5),
+        d=st.sampled_from([4, 16]),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_ref_grads_match_jax_grad(self, b, k, d, seed):
+        rng = np.random.default_rng(seed)
+        w, c, weight = random_inputs(rng, b, k + 1, d)
+        gw_auto, gc_auto = jax.grad(sgns_loss_scalar, argnums=(0, 1))(
+            jnp.asarray(w), jnp.asarray(c), jnp.asarray(weight)
+        )
+        _, gw, gc = sgns_dense_ref(w, c, weight)
+        np.testing.assert_allclose(gw, gw_auto, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gc, gc_auto, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        b=st.sampled_from([2, 8]),
+        k=st.integers(min_value=1, max_value=5),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_kernel_grads_match_jax_grad(self, b, k, seed):
+        rng = np.random.default_rng(seed)
+        w, c, weight = random_inputs(rng, b, k + 1, 16)
+        gw_auto, gc_auto = jax.grad(sgns_loss_scalar, argnums=(0, 1))(
+            jnp.asarray(w), jnp.asarray(c), jnp.asarray(weight)
+        )
+        _, gw, gc = sgns_dense(w, c, weight)
+        np.testing.assert_allclose(gw, gw_auto, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(gc, gc_auto, rtol=1e-5, atol=1e-6)
+
+
+class TestLossSemantics:
+    def test_known_value_zero_vectors(self):
+        """All-zero embeddings: every pair has logit 0, loss = (1+k)·ln 2."""
+        b, k1, d = 3, 4, 8
+        loss, gw, gc = sgns_dense_ref(
+            np.zeros((b, d), np.float32),
+            np.zeros((b, k1, d), np.float32),
+            np.ones((b,), np.float32),
+        )
+        np.testing.assert_allclose(loss, np.full((b,), k1 * np.log(2.0)), rtol=1e-6)
+        np.testing.assert_allclose(gw, 0.0, atol=1e-7)
+
+    def test_positive_alignment_reduces_loss(self):
+        """Aligning w with the positive context lowers the loss."""
+        d = 8
+        w = np.ones((1, d), np.float32) * 0.5
+        c_aligned = np.stack([[np.ones(d, np.float32), -np.ones(d, np.float32)]])
+        c_opposed = np.stack([[-np.ones(d, np.float32), np.ones(d, np.float32)]])
+        one = np.ones((1,), np.float32)
+        loss_a, _, _ = sgns_dense_ref(w, c_aligned * 0.5, one)
+        loss_o, _, _ = sgns_dense_ref(w, c_opposed * 0.5, one)
+        assert float(loss_a[0]) < float(loss_o[0])
+
+    def test_gradient_descends_loss(self):
+        """One SGD step on the kernel's own gradients must reduce the loss."""
+        rng = np.random.default_rng(7)
+        w, c, weight = random_inputs(rng, 8, 5, 16, scale=0.3)
+        weight = np.ones_like(weight)
+        loss0, gw, gc = sgns_dense(w, c, weight)
+        lr = 0.1
+        loss1, _, _ = sgns_dense(w - lr * np.asarray(gw), c - lr * np.asarray(gc), weight)
+        assert float(jnp.sum(loss1)) < float(jnp.sum(loss0))
+
+
+def test_vmem_footprint_default_fits_budget():
+    """Default block (256, k=5, d=64) must sit far below ~16 MiB VMEM."""
+    assert vmem_footprint_bytes(256, 6, 64) < 2 * 1024 * 1024

@@ -1,0 +1,196 @@
+"""Layer-2 correctness: packed-state train step semantics.
+
+Covers the state layout invariants the rust runtime depends on (pad row
+stays zero, metrics counters, sentinel index mapping), kernel-vs-ref parity
+of the full step, scan/unroll equivalence, and loss descent on a planted
+co-occurrence structure.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.model import (
+    ModelConfig,
+    example_args,
+    init_state,
+    metrics,
+    reference_train_many,
+    similarity,
+    train_many,
+    train_step,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(vocab=32, dim=8, batch=8, negatives=3, steps=3)
+
+
+def random_batches(rng, cfg, pad_frac=0.0):
+    centers = rng.integers(0, cfg.vocab, size=(cfg.steps, cfg.batch)).astype(np.int32)
+    ctx = rng.integers(0, cfg.vocab, size=(cfg.steps, cfg.batch, cfg.k1)).astype(
+        np.int32
+    )
+    weights = np.ones((cfg.steps, cfg.batch), np.float32)
+    if pad_frac > 0:
+        mask = rng.random(size=weights.shape) < pad_frac
+        weights[mask] = 0.0
+        centers[mask] = cfg.vocab  # padding sentinel
+        ctx[mask] = cfg.vocab
+    return centers, ctx, weights
+
+
+def fresh_state(cfg, seed=0):
+    state = init_state(cfg, jax.random.PRNGKey(seed))
+    # Give C small random values too so context gradients are non-trivial.
+    key = jax.random.PRNGKey(seed + 1)
+    c = (jax.random.uniform(key, (cfg.vocab, cfg.dim)) - 0.5) / cfg.dim
+    return state.at[cfg.vocab : 2 * cfg.vocab].set(c)
+
+
+class TestStateLayout:
+    def test_init_layout(self):
+        state = init_state(CFG, jax.random.PRNGKey(0))
+        assert state.shape == (CFG.rows, CFG.dim)
+        np.testing.assert_array_equal(state[CFG.pad_row], 0.0)
+        np.testing.assert_array_equal(state[CFG.metrics_row], 0.0)
+        w = state[: CFG.vocab]
+        assert float(jnp.abs(w).max()) <= 0.5 / CFG.dim + 1e-7
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_pad_row_stays_zero(self, seed):
+        rng = np.random.default_rng(seed)
+        state = fresh_state(CFG, seed % 97)
+        centers, ctx, weights = random_batches(rng, CFG, pad_frac=0.5)
+        lr = np.array([0.05], np.float32)
+        out = train_many(CFG, state, centers, ctx, weights, lr)
+        np.testing.assert_array_equal(np.asarray(out[CFG.pad_row]), 0.0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_metrics_counters(self, seed):
+        rng = np.random.default_rng(seed)
+        state = fresh_state(CFG)
+        centers, ctx, weights = random_batches(rng, CFG, pad_frac=0.3)
+        lr = np.array([0.05], np.float32)
+        out = train_many(CFG, state, centers, ctx, weights, lr)
+        m = np.asarray(metrics(CFG, out))
+        assert m[0] > 0.0  # loss accumulated
+        np.testing.assert_allclose(m[1], weights.sum(), rtol=1e-6)
+        np.testing.assert_allclose(m[2], CFG.steps)
+
+    def test_padded_examples_leave_params_untouched(self):
+        """A fully-padded macro-batch must only touch the metrics row."""
+        state = fresh_state(CFG)
+        centers = np.full((CFG.steps, CFG.batch), CFG.vocab, np.int32)
+        ctx = np.full((CFG.steps, CFG.batch, CFG.k1), CFG.vocab, np.int32)
+        weights = np.zeros((CFG.steps, CFG.batch), np.float32)
+        out = train_many(CFG, state, centers, ctx, weights, np.array([0.1], np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(out[: CFG.metrics_row]), np.asarray(state[: CFG.metrics_row])
+        )
+
+
+class TestStepSemantics:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_kernel_step_matches_ref_step(self, seed):
+        rng = np.random.default_rng(seed)
+        state = fresh_state(CFG, seed % 31)
+        centers, ctx, weights = random_batches(rng, CFG, pad_frac=0.2)
+        lr = np.array([0.05], np.float32)
+        out_k = train_many(CFG, state, centers, ctx, weights, lr)
+        out_r = reference_train_many(CFG, state, centers, ctx, weights, lr)
+        np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_scan_equals_unrolled_single_steps(self, seed):
+        rng = np.random.default_rng(seed)
+        state = fresh_state(CFG, 3)
+        centers, ctx, weights = random_batches(rng, CFG)
+        lr = np.array([0.05], np.float32)
+        out_scan = train_many(CFG, state, centers, ctx, weights, lr)
+        out_seq = state
+        for s in range(CFG.steps):
+            out_seq = train_step(CFG, out_seq, centers[s], ctx[s], weights[s], lr)
+        np.testing.assert_allclose(out_scan, out_seq, rtol=1e-5, atol=1e-6)
+
+    def test_duplicate_indices_accumulate(self):
+        """Scatter-add must accumulate duplicate center rows in a batch."""
+        cfg = ModelConfig(vocab=8, dim=4, batch=4, negatives=1, steps=1)
+        state = fresh_state(cfg, 11)
+        centers = np.zeros((1, 4), np.int32)  # all the same center word
+        ctx = np.arange(8, dtype=np.int32)[: cfg.k1 * 4].reshape(1, 4, cfg.k1) % 8
+        weights = np.ones((1, 4), np.float32)
+        lr = np.array([0.1], np.float32)
+        out = train_many(cfg, state, centers, ctx, weights, lr)
+        # apply the same batch one example at a time; the summed update of
+        # row 0 must equal the batched scatter-add result
+        seq = state
+        for i in range(4):
+            c1 = centers[:, i : i + 1]
+            x1 = ctx[:, i : i + 1]
+            w1 = weights[:, i : i + 1]
+            cfg1 = ModelConfig(vocab=8, dim=4, batch=1, negatives=1, steps=1)
+            # single-example steps from the SAME starting state, accumulated
+            stepped = train_many(cfg1, state, c1, x1, w1, lr)
+            seq = seq + (stepped - state)
+        np.testing.assert_allclose(
+            np.asarray(out[0]), np.asarray(seq[0]), rtol=1e-5, atol=1e-6
+        )
+
+    def test_loss_decreases_on_planted_structure(self):
+        """Training on a fixed co-occurrence pattern reduces running loss."""
+        cfg = ModelConfig(vocab=16, dim=8, batch=16, negatives=2, steps=8)
+        rng = np.random.default_rng(0)
+        state = fresh_state(cfg, 5)
+        lr = np.array([0.5], np.float32)
+
+        def planted(steps):
+            centers = rng.integers(0, 8, size=(steps, cfg.batch)).astype(np.int32)
+            pos = centers + 8  # word i always co-occurs with word i+8
+            neg = rng.integers(0, 8, size=(steps, cfg.batch, cfg.negatives))
+            ctx = np.concatenate([pos[:, :, None], neg], axis=2).astype(np.int32)
+            return centers, ctx, np.ones((steps, cfg.batch), np.float32)
+
+        losses = []
+        for _ in range(6):
+            before = float(metrics(cfg, state)[0])
+            centers, ctx, weights = planted(cfg.steps)
+            state = train_many(cfg, state, centers, ctx, weights, lr)
+            after = float(metrics(cfg, state)[0])
+            losses.append(after - before)
+        assert losses[-1] < losses[0] * 0.9
+
+    def test_example_args_shapes(self):
+        specs = example_args(CFG)
+        assert specs[0].shape == (CFG.rows, CFG.dim)
+        assert specs[1].shape == (CFG.steps, CFG.batch)
+        assert specs[2].shape == (CFG.steps, CFG.batch, CFG.k1)
+        assert specs[4].shape == (1,)
+
+
+class TestSimilarity:
+    def test_cosine_values(self):
+        cfg = ModelConfig(vocab=8, dim=4, batch=4, negatives=1, steps=1)
+        state = jnp.zeros((cfg.rows, cfg.dim))
+        state = state.at[0].set(jnp.array([1.0, 0, 0, 0]))
+        state = state.at[1].set(jnp.array([2.0, 0, 0, 0]))  # same direction
+        state = state.at[2].set(jnp.array([0, 3.0, 0, 0]))  # orthogonal
+        q = np.array([0, 0], np.int32)
+        cand = np.array([1, 2], np.int32)
+        sims = np.asarray(similarity(cfg, state, q, cand))
+        np.testing.assert_allclose(sims, [1.0, 0.0], atol=1e-6)
+
+    def test_zero_vector_guard(self):
+        cfg = ModelConfig(vocab=4, dim=4, batch=4, negatives=1, steps=1)
+        state = jnp.zeros((cfg.rows, cfg.dim))
+        sims = np.asarray(
+            similarity(cfg, state, np.array([0], np.int32), np.array([1], np.int32))
+        )
+        assert np.isfinite(sims).all()

@@ -1,0 +1,97 @@
+//! Figure 2 — training wallclock vs corpus proportion (25/50/75/100%),
+//! Shuffle r=10% vs the MLlib-style synchronized baseline, plus the
+//! Ordentlich column-partitioning *cost model* row the paper alludes to
+//! in §4.2 (their implementation was too slow to include).
+//!
+//! Expected shape: both real systems scale ~linearly with corpus size;
+//! the Shuffle pipeline's slope is the per-sub-model slope (asynchronous,
+//! no parameter synchronization) while MLlib pays an averaging barrier
+//! per epoch; the colpart model is latency-floored far above both.
+
+use dw2v::baselines::{colpart, param_avg};
+use dw2v::bench_util::{bench_scale, Table};
+use dw2v::coordinator::leader;
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig};
+use dw2v::util::json::{num, obj, s};
+use dw2v::world::build_world;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = (120_000.0 * bench_scale()) as usize;
+    cfg.vocab = 2000;
+    cfg.dim = 32;
+    cfg.epochs = 2;
+    cfg.rate_percent = 10.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    let world = build_world(&cfg);
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
+    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let scfg = leader::sgns_config(&cfg);
+
+    let mut table = Table::new(
+        "fig2_scaling",
+        "Figure 2 — training time (s) vs corpus proportion",
+        &["25%", "50%", "75%", "100%"],
+    );
+    let proportions = [0.25, 0.5, 0.75, 1.0];
+
+    // --- Shuffle 10% pipeline ---------------------------------------------
+    let mut shuffle_secs = Vec::new();
+    for &p in &proportions {
+        let sub = world.corpus.proportion(p);
+        let out = leader::train_submodels(&cfg, &sub, &world.vocab, &rt).expect("train");
+        shuffle_secs.push(out.train_secs);
+    }
+    table.row(
+        "Shuffle 10% (async PJRT)",
+        shuffle_secs.iter().map(|t| format!("{t:.2}")).collect(),
+        obj(vec![
+            ("system", s("shuffle10")),
+            ("secs", dw2v::util::json::arr(shuffle_secs.iter().map(|t| num(*t)).collect())),
+        ]),
+    );
+
+    // --- MLlib-style parameter averaging ------------------------------------
+    let mut mllib_secs = Vec::new();
+    for &p in &proportions {
+        let sub = world.corpus.proportion(p);
+        let (_, stats) = param_avg::train(&sub, &world.vocab, &scfg, 8, cfg.seed);
+        mllib_secs.push(stats.seconds);
+    }
+    table.row(
+        "MLlib-style (8 executors)",
+        mllib_secs.iter().map(|t| format!("{t:.2}")).collect(),
+        obj(vec![
+            ("system", s("mllib8")),
+            ("secs", dw2v::util::json::arr(mllib_secs.iter().map(|t| num(*t)).collect())),
+        ]),
+    );
+
+    // --- Ordentlich cost model ----------------------------------------------
+    // measured per-pair compute from the mllib run, + 50µs simulated RTT
+    let total_tokens = world.corpus.total_tokens() as f64;
+    let per_pair = mllib_secs[3] / (total_tokens * cfg.window as f64 * cfg.epochs as f64);
+    let colpart_secs: Vec<f64> = proportions
+        .iter()
+        .map(|p| {
+            let pairs =
+                (total_tokens * p * cfg.window as f64 * cfg.epochs as f64) as u64;
+            colpart::estimated_seconds(pairs, 10, per_pair, 50e-6)
+        })
+        .collect();
+    table.row(
+        "ColPart model (10 srv, 50µs RTT)",
+        colpart_secs.iter().map(|t| format!("{t:.1}")).collect(),
+        obj(vec![
+            ("system", s("colpart_model")),
+            ("secs", dw2v::util::json::arr(colpart_secs.iter().map(|t| num(*t)).collect())),
+        ]),
+    );
+    table.finish();
+
+    // linearity check for the headline system
+    let r = shuffle_secs[3] / shuffle_secs[0].max(1e-9);
+    println!("\nShuffle 100%/25% time ratio: {r:.2} (linear scaling → ~4; paper Fig. 2)");
+}

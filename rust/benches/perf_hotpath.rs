@@ -1,0 +1,243 @@
+//! Performance micro/meso benches for the hot path — the §Perf evidence.
+//!
+//! Measures, at each layer:
+//!   L3  batch assembly throughput (pairs/s), alias vs CDF negative
+//!       sampling, merge-phase linalg (procrustes / PCA);
+//!   bridge  PJRT dispatch latency per macro-batch and the cost of the
+//!       device-resident design vs a forced host round-trip per step
+//!       (the ablation that justifies the packed single-array state);
+//!   end-to-end  PJRT trainer pairs/s vs the Hogwild scalar baseline.
+
+use dw2v::bench_util::{time_it, Table};
+use dw2v::linalg::mat::Mat;
+use dw2v::linalg::pca;
+use dw2v::linalg::procrustes::orthogonal_procrustes;
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::runtime::params::SubModel;
+use dw2v::sgns::batch::{BatchBuilder, BatchShape};
+use dw2v::sgns::negative::{AliasTable, CdfTable};
+use dw2v::util::json::{num, obj, s};
+use dw2v::util::rng::Pcg64;
+
+fn main() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).expect("artifacts");
+    let mut table = Table::new(
+        "perf_hotpath",
+        "§Perf — hot-path measurements",
+        &["metric", "value"],
+    );
+
+    // ---- L3: negative sampling ---------------------------------------------
+    let mut rng = Pcg64::new(1);
+    let weights: Vec<f64> = (0..10_000).map(|_| rng.gen_f64() + 0.01).collect();
+    let alias = AliasTable::new(&weights);
+    let cdf = CdfTable::new(&weights);
+    let n_draws = 1_000_000u64;
+    let t_alias = time_it(1, 5, || {
+        let mut r = Pcg64::new(2);
+        let mut acc = 0u64;
+        for _ in 0..n_draws {
+            acc += alias.sample(&mut r) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    let t_cdf = time_it(1, 5, || {
+        let mut r = Pcg64::new(2);
+        let mut acc = 0u64;
+        for _ in 0..n_draws {
+            acc += cdf.sample(&mut r) as u64;
+        }
+        std::hint::black_box(acc);
+    });
+    table.row(
+        "alias sampling (10k vocab)",
+        vec![
+            "Mdraws/s".into(),
+            format!("{:.1}", n_draws as f64 / t_alias.min_secs / 1e6),
+        ],
+        obj(vec![
+            ("bench", s("alias_msamples_per_s")),
+            ("value", num(n_draws as f64 / t_alias.min_secs / 1e6)),
+        ]),
+    );
+    table.row(
+        "cdf sampling (ablation)",
+        vec![
+            "Mdraws/s".into(),
+            format!("{:.1}", n_draws as f64 / t_cdf.min_secs / 1e6),
+        ],
+        obj(vec![
+            ("bench", s("cdf_msamples_per_s")),
+            ("value", num(n_draws as f64 / t_cdf.min_secs / 1e6)),
+        ]),
+    );
+
+    // ---- L3: batch assembly --------------------------------------------------
+    let shape = BatchShape {
+        batch: 256,
+        steps: 8,
+        negatives: 5,
+        vocab: 10_000,
+    };
+    let sentences: Vec<Vec<u32>> = {
+        let mut r = Pcg64::new(3);
+        (0..2000)
+            .map(|_| (0..20).map(|_| r.gen_range(10_000) as u32).collect())
+            .collect()
+    };
+    let mut pairs_out = 0u64;
+    let t_batch = time_it(1, 5, || {
+        let mut b = BatchBuilder::new(
+            shape,
+            5,
+            Vec::new(),
+            AliasTable::new(&vec![1.0; 10_000]),
+            Pcg64::new(4),
+        );
+        let mut sink = 0usize;
+        for (i, sent) in sentences.iter().enumerate() {
+            b.push_sentence(i as u64, sent, &mut |mb| sink += mb.real_pairs);
+        }
+        b.flush(&mut |mb| sink += mb.real_pairs);
+        pairs_out = sink as u64;
+        std::hint::black_box(sink);
+    });
+    table.row(
+        "batch assembly",
+        vec![
+            "Mpairs/s".into(),
+            format!("{:.2}", pairs_out as f64 / t_batch.min_secs / 1e6),
+        ],
+        obj(vec![
+            ("bench", s("batch_mpairs_per_s")),
+            ("value", num(pairs_out as f64 / t_batch.min_secs / 1e6)),
+        ]),
+    );
+
+    // ---- merge-phase linalg ---------------------------------------------------
+    let mut r = Pcg64::new(5);
+    let m = Mat::from_vec(2000, 32, (0..2000 * 32).map(|_| r.gen_gauss()).collect());
+    let y = Mat::from_vec(2000, 32, (0..2000 * 32).map(|_| r.gen_gauss()).collect());
+    let t_proc = time_it(1, 5, || {
+        std::hint::black_box(orthogonal_procrustes(&m, &y));
+    });
+    table.row(
+        "procrustes 2000x32",
+        vec!["ms".into(), format!("{:.2}", t_proc.min_secs * 1e3)],
+        obj(vec![("bench", s("procrustes_ms")), ("value", num(t_proc.min_secs * 1e3))]),
+    );
+    let x = Mat::from_vec(2000, 320, (0..2000 * 320).map(|_| r.gen_gauss()).collect());
+    let t_pca = time_it(1, 3, || {
+        std::hint::black_box(pca::project(&x, 32));
+    });
+    table.row(
+        "pca 2000x320 -> 32",
+        vec!["ms".into(), format!("{:.1}", t_pca.min_secs * 1e3)],
+        obj(vec![("bench", s("pca_ms")), ("value", num(t_pca.min_secs * 1e3))]),
+    );
+
+    // ---- L2: scan-length (steps-per-call) ablation ---------------------------
+    // same shapes, steps=1 vs steps=4: measures what the lax.scan macro-step
+    // buys in dispatch amortization (per-pair cost at equal total work)
+    {
+        let mut per_pair = Vec::new();
+        for name in ["v2000_d32_b64_k5_s1", "v2000_d32_b64_k5_s4"] {
+            let artifact = manifest.by_name(name).expect("artifact");
+            let rt = Runtime::load(artifact).expect("compile");
+            let a = &rt.artifact;
+            let cap = a.batch_capacity();
+            let mut rb = Pcg64::new(66);
+            let centers: Vec<i32> =
+                (0..cap).map(|_| rb.gen_range(a.vocab as u64) as i32).collect();
+            let ctx: Vec<i32> = (0..cap * a.k1())
+                .map(|_| rb.gen_range(a.vocab as u64) as i32)
+                .collect();
+            let weights = vec![1.0f32; cap];
+            let mut model = SubModel::init(&rt, 9).unwrap();
+            // equal total pairs per measured iteration: s1 runs 4 dispatches
+            let reps = 4 / a.steps.max(1);
+            let t = time_it(3, 20, || {
+                for _ in 0..reps.max(1) {
+                    model
+                        .train_macro_batch(&rt, &centers, &ctx, &weights, 0.01)
+                        .unwrap();
+                }
+            });
+            per_pair.push(t.p50_secs / (cap * reps.max(1)) as f64);
+        }
+        table.row(
+            "scan ablation steps=1 vs 4",
+            vec![
+                "µs/pair | speedup".into(),
+                format!(
+                    "{:.2} vs {:.2} | {:.2}x",
+                    per_pair[0] * 1e6,
+                    per_pair[1] * 1e6,
+                    per_pair[0] / per_pair[1]
+                ),
+            ],
+            obj(vec![
+                ("bench", s("scan_ablation")),
+                ("s1_us_per_pair", num(per_pair[0] * 1e6)),
+                ("s4_us_per_pair", num(per_pair[1] * 1e6)),
+                ("speedup", num(per_pair[0] / per_pair[1])),
+            ]),
+        );
+    }
+
+    // ---- bridge: dispatch latency + device-resident ablation -----------------
+    for name in ["v2000_d32_b64_k5_s4", "v10000_d64_b256_k5_s8"] {
+        let artifact = manifest.by_name(name).expect("artifact");
+        let rt = Runtime::load(artifact).expect("compile");
+        let a = &rt.artifact;
+        let cap = a.batch_capacity();
+        let mut rb = Pcg64::new(6);
+        let centers: Vec<i32> = (0..cap).map(|_| rb.gen_range(a.vocab as u64) as i32).collect();
+        let ctx: Vec<i32> = (0..cap * a.k1())
+            .map(|_| rb.gen_range(a.vocab as u64) as i32)
+            .collect();
+        let weights = vec![1.0f32; cap];
+        let mut model = SubModel::init(&rt, 7).unwrap();
+        let t_step = time_it(3, 20, || {
+            model
+                .train_macro_batch(&rt, &centers, &ctx, &weights, 0.01)
+                .unwrap();
+        });
+        let pairs_per_s = cap as f64 / t_step.p50_secs;
+        table.row(
+            &format!("dispatch {name}"),
+            vec![
+                "ms/batch | Kpairs/s".into(),
+                format!("{:.2} | {:.0}", t_step.p50_secs * 1e3, pairs_per_s / 1e3),
+            ],
+            obj(vec![
+                ("bench", s(&format!("dispatch_{name}"))),
+                ("ms_per_batch", num(t_step.p50_secs * 1e3)),
+                ("kpairs_per_s", num(pairs_per_s / 1e3)),
+            ]),
+        );
+        // ablation: force a full host round-trip of the state every step
+        // (what a tuple-output / non-chained design would cost)
+        let mut host_state = SubModel::init(&rt, 8).unwrap().download_packed(&rt).unwrap();
+        let t_rt = time_it(2, 10, || {
+            let mut m2 = SubModel::from_host(&rt, &host_state).unwrap();
+            m2.train_macro_batch(&rt, &centers, &ctx, &weights, 0.01).unwrap();
+            host_state = m2.download_packed(&rt).unwrap();
+        });
+        table.row(
+            &format!("  + host round-trip (ablation)"),
+            vec![
+                "ms/batch".into(),
+                format!("{:.2} ({:.1}x)", t_rt.p50_secs * 1e3, t_rt.p50_secs / t_step.p50_secs),
+            ],
+            obj(vec![
+                ("bench", s(&format!("roundtrip_{name}"))),
+                ("ms_per_batch", num(t_rt.p50_secs * 1e3)),
+                ("slowdown", num(t_rt.p50_secs / t_step.p50_secs)),
+            ]),
+        );
+    }
+
+    table.finish();
+}

@@ -1,0 +1,87 @@
+//! Table 3 — benchmark quality per merge method (Concat / PCA /
+//! ALiR(rand) / ALiR(PCA) / SingleModel / naive Average ablation) at
+//! multiple sampling rates, over the SAME trained sub-models per rate.
+//!
+//! Expected shape: ALiR best-or-competitive per rate (clearly ahead on
+//! OOV-heavy benchmarks), Concat the closest competitor at n·d
+//! dimensionality, SingleModel notably worse, Average (the §3.3.1
+//! counter-example) catastrophically worse.
+
+use dw2v::bench_util::{bench_scale, Table};
+use dw2v::coordinator::leader;
+use dw2v::eval::report::{evaluate_suite, format_cell, scores_to_json};
+use dw2v::merge::average;
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::sgns::hogwild;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = (100_000.0 * bench_scale()) as usize;
+    cfg.vocab = 2000;
+    cfg.dim = 32;
+    cfg.epochs = 3;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.min_count_base = 20.0;
+    let world = build_world(&cfg);
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
+    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+
+    let bench_names: Vec<String> = world.suite.iter().map(|b| b.name.clone()).collect();
+    let headers: Vec<&str> = bench_names.iter().map(|x| x.as_str()).collect();
+    let mut table = Table::new(
+        "table3_merging",
+        "Table 3 — quality per merge method (divider = Shuffle)",
+        &headers,
+    );
+
+    let mut rates = vec![25.0, 10.0];
+    if bench_scale() >= 1.0 {
+        rates.push(5.0);
+    }
+    for &rate in &rates {
+        cfg.rate_percent = rate;
+        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt)
+            .expect("train");
+        for method in [
+            MergeMethod::Concat,
+            MergeMethod::Pca,
+            MergeMethod::AlirRand,
+            MergeMethod::AlirPca,
+            MergeMethod::Single,
+        ] {
+            cfg.merge = method.clone();
+            let merged = leader::merge_trained(&cfg, &out.submodels);
+            let scores = evaluate_suite(&merged.embedding, &world.suite, cfg.seed);
+            let label = format!("{}% {}", rate, method.name());
+            table.row(
+                &label,
+                scores.iter().map(format_cell).collect(),
+                scores_to_json(&label, &scores),
+            );
+        }
+        // ablation: the naive averaging counter-example from §3.3.1
+        let avg = average::merge(&out.submodels);
+        let scores = evaluate_suite(&avg, &world.suite, cfg.seed);
+        let label = format!("{rate}% average (ablation)");
+        table.row(
+            &label,
+            scores.iter().map(format_cell).collect(),
+            scores_to_json(&label, &scores),
+        );
+    }
+
+    let scfg = leader::sgns_config(&cfg);
+    let (hog, _) = hogwild::train(&world.corpus, &world.vocab, &scfg, 4, cfg.seed);
+    let hog_scores = evaluate_suite(&hog, &world.suite, cfg.seed);
+    table.row(
+        "Hogwild",
+        hog_scores.iter().map(format_cell).collect(),
+        scores_to_json("hogwild", &hog_scores),
+    );
+    table.finish();
+    println!("\nexpected shape: ALiR best-or-competitive; higher rates beat lower;");
+    println!("single model clearly below merged; naive average collapses (paper Table 3).");
+}

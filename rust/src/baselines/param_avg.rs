@@ -1,0 +1,263 @@
+//! Parameter-averaging distributed SGNS — the Spark-MLlib baseline.
+//!
+//! MLlib's word2vec is synchronized data parallelism: every iteration each
+//! of E executors trains a replica of the full model on its partition,
+//! then the driver averages the replicas into the next global model. This
+//! reproduces the paper's observation (Tables 2/4) that quality *degrades*
+//! as executors grow — unlike sub-model training + alignment-aware
+//! merging, naive averaging of diverging replicas cancels signal — while
+//! wall-clock improves with parallelism until averaging overhead bites.
+
+use crate::embedding::Embedding;
+use crate::sgns::batch::BatchBuilder;
+use crate::sgns::config::SgnsConfig;
+use crate::sgns::hogwild::SigmoidTable;
+use crate::sgns::negative::AliasTable;
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::rng::Pcg64;
+
+/// Train one executor's replica in place over its sentence partition.
+#[allow(clippy::too_many_arguments)]
+fn train_replica(
+    w: &mut [f32],
+    c: &mut [f32],
+    sentences: &[Vec<u32>],
+    cfg: &SgnsConfig,
+    noise: &AliasTable,
+    keep: &[f32],
+    sigmoid: &SigmoidTable,
+    lr: f32,
+    rng: &mut Pcg64,
+) -> u64 {
+    let d = cfg.dim;
+    let mut pairs = 0u64;
+    let mut kept: Vec<u32> = Vec::new();
+    let mut neu = vec![0.0f32; d];
+    for sent in sentences {
+        kept.clear();
+        for &word in sent {
+            let p = keep.get(word as usize).copied().unwrap_or(1.0);
+            if p >= 1.0 || rng.gen_f32() < p {
+                kept.push(word);
+            }
+        }
+        if kept.len() < 2 {
+            continue;
+        }
+        for pos in 0..kept.len() {
+            let center = kept[pos] as usize;
+            let win = 1 + rng.gen_range_usize(cfg.window);
+            let lo = pos.saturating_sub(win);
+            let hi = (pos + win + 1).min(kept.len());
+            for other in lo..hi {
+                if other == pos {
+                    continue;
+                }
+                let target = kept[other] as usize;
+                neu.fill(0.0);
+                for s in 0..=cfg.negatives {
+                    let (ctx_id, label) = if s == 0 {
+                        (target, 1.0f32)
+                    } else {
+                        (noise.sample(rng) as usize, 0.0f32)
+                    };
+                    let crow = &mut c[ctx_id * d..(ctx_id + 1) * d];
+                    let wrow = &w[center * d..(center + 1) * d];
+                    let mut dot = 0.0f32;
+                    for k in 0..d {
+                        dot += wrow[k] * crow[k];
+                    }
+                    let g = (label - sigmoid.get(dot)) * lr;
+                    for k in 0..d {
+                        neu[k] += g * crow[k];
+                        crow[k] += g * wrow[k];
+                    }
+                }
+                let wrow = &mut w[center * d..(center + 1) * d];
+                for k in 0..d {
+                    wrow[k] += neu[k];
+                }
+                pairs += 1;
+            }
+        }
+    }
+    pairs
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ParamAvgStats {
+    pub pairs: u64,
+    pub seconds: f64,
+    pub sync_rounds: usize,
+}
+
+/// Train with `executors` synchronized replicas, averaging every epoch.
+pub fn train(
+    corpus: &Corpus,
+    vocab: &Vocab,
+    cfg: &SgnsConfig,
+    executors: usize,
+    seed: u64,
+) -> (Embedding, ParamAvgStats) {
+    let v = vocab.len();
+    let d = cfg.dim;
+    let executors = executors.max(1);
+    let mut rng = Pcg64::new_stream(seed, 0x7061); // "pa"
+    let mut w_global = vec![0.0f32; v * d];
+    for x in &mut w_global {
+        *x = (rng.gen_f32() - 0.5) / d as f32;
+    }
+    let mut c_global = vec![0.0f32; v * d];
+    let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
+    let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
+    let sigmoid = SigmoidTable::new();
+    let start = std::time::Instant::now();
+    let mut stats = ParamAvgStats::default();
+
+    for epoch in 0..cfg.epochs {
+        // linear decay per epoch (MLlib decays per iteration)
+        let lr = cfg.lr_at(
+            (epoch as u64) * corpus.total_tokens(),
+            (cfg.epochs as u64) * corpus.total_tokens(),
+        );
+        // every executor starts from the current global model
+        let results: Vec<(Vec<f32>, Vec<f32>, u64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..executors)
+                .map(|e| {
+                    let range = corpus.shard_range(e, executors);
+                    let sentences = &corpus.sentences[range];
+                    let mut w = w_global.clone();
+                    let mut c = c_global.clone();
+                    let cfg = cfg.clone();
+                    let noise = &noise;
+                    let keep = &keep;
+                    let sigmoid = &sigmoid;
+                    let mut erng =
+                        Pcg64::new_stream(seed ^ 0x6578, (epoch * executors + e) as u64);
+                    scope.spawn(move || {
+                        let pairs = train_replica(
+                            &mut w, &mut c, sentences, &cfg, noise, keep, sigmoid, lr,
+                            &mut erng,
+                        );
+                        (w, c, pairs)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // the synchronization the paper's approach avoids: average replicas
+        w_global.iter_mut().for_each(|x| *x = 0.0);
+        c_global.iter_mut().for_each(|x| *x = 0.0);
+        let inv = 1.0 / executors as f32;
+        for (w, c, pairs) in results {
+            stats.pairs += pairs;
+            for (g, l) in w_global.iter_mut().zip(&w) {
+                *g += l * inv;
+            }
+            for (g, l) in c_global.iter_mut().zip(&c) {
+                *g += l * inv;
+            }
+        }
+        stats.sync_rounds += 1;
+    }
+    stats.seconds = start.elapsed().as_secs_f64();
+    (Embedding::from_rows(v, d, w_global), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
+
+    fn setup() -> (Corpus, Vocab) {
+        let gcfg = GeneratorConfig {
+            vocab: 60,
+            clusters: 6,
+            truth_dim: 8,
+            avg_sentence_len: 10,
+            ..Default::default()
+        };
+        let gt = build_ground_truth(&gcfg, 11);
+        let corpus = generate_corpus(&gt, 1200, 11);
+        let vocab = vocab_of(&corpus, gcfg.vocab);
+        (corpus, vocab)
+    }
+
+    #[test]
+    fn single_executor_learns() {
+        let (corpus, vocab) = setup();
+        let cfg = SgnsConfig {
+            dim: 12,
+            epochs: 3,
+            ..Default::default()
+        };
+        let (emb, stats) = train(&corpus, &vocab, &cfg, 1, 3);
+        assert!(stats.pairs > 5000);
+        assert_eq!(stats.sync_rounds, 3);
+        assert!(emb.data.iter().all(|x| x.is_finite()));
+        // learned something: embeddings moved away from tiny init
+        let max_abs = emb.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        assert!(max_abs > 0.1, "max_abs={max_abs}");
+    }
+
+    #[test]
+    fn many_executors_still_produce_finite_model() {
+        let (corpus, vocab) = setup();
+        let cfg = SgnsConfig {
+            dim: 8,
+            epochs: 2,
+            ..Default::default()
+        };
+        let (emb, stats) = train(&corpus, &vocab, &cfg, 8, 5);
+        assert!(emb.data.iter().all(|x| x.is_finite()));
+        assert_eq!(stats.sync_rounds, 2);
+    }
+
+    #[test]
+    fn averaging_degrades_vs_single_executor() {
+        // the MLlib pathology the paper points at: with few epochs, more
+        // executors => averaged replicas diverge => weaker structure.
+        let (corpus, vocab) = setup();
+        let gcfg = GeneratorConfig {
+            vocab: 60,
+            clusters: 6,
+            truth_dim: 8,
+            avg_sentence_len: 10,
+            ..Default::default()
+        };
+        let gt = build_ground_truth(&gcfg, 11);
+        let cfg = SgnsConfig {
+            dim: 12,
+            epochs: 2,
+            ..Default::default()
+        };
+        let score = |emb: &Embedding| {
+            // same-cluster minus cross-cluster mean cosine
+            let mut rng = Pcg64::new(2);
+            let (mut same, mut cross) = (Vec::new(), Vec::new());
+            for _ in 0..4000 {
+                let a = rng.gen_range(60) as u32;
+                let b = rng.gen_range(60) as u32;
+                if a == b {
+                    continue;
+                }
+                let cos = emb.cosine(a, b).unwrap();
+                if gt.cluster_of[a as usize] == gt.cluster_of[b as usize] {
+                    same.push(cos);
+                } else {
+                    cross.push(cos);
+                }
+            }
+            let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+            avg(&same) - avg(&cross)
+        };
+        let (e1, _) = train(&corpus, &vocab, &cfg, 1, 7);
+        let (e16, _) = train(&corpus, &vocab, &cfg, 16, 7);
+        let (s1, s16) = (score(&e1), score(&e16));
+        assert!(
+            s1 > s16,
+            "expected single-executor to beat 16 executors: {s1} vs {s16}"
+        );
+    }
+}

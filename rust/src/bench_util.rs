@@ -1,0 +1,161 @@
+//! Hand-rolled bench harness (criterion is unavailable offline).
+//!
+//! Two modes cover the repo's needs:
+//! * [`time_it`] — statistical micro/meso timing (warmup + N iterations,
+//!   min/mean/p50/p95) for the perf benches;
+//! * [`Table`] — paper-style result tables (one row per configuration)
+//!   that print to stdout AND persist as JSON under `bench_results/` so
+//!   EXPERIMENTS.md can quote them.
+
+use crate::util::json::{arr, num, obj, s, Json};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct TimingStats {
+    pub iters: usize,
+    pub min_secs: f64,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+}
+
+impl TimingStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "min {:.3}ms  mean {:.3}ms  p50 {:.3}ms  p95 {:.3}ms  ({} iters)",
+            self.min_secs * 1e3,
+            self.mean_secs * 1e3,
+            self.p50_secs * 1e3,
+            self.p95_secs * 1e3,
+            self.iters
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("iters", num(self.iters as f64)),
+            ("min_secs", num(self.min_secs)),
+            ("mean_secs", num(self.mean_secs)),
+            ("p50_secs", num(self.p50_secs)),
+            ("p95_secs", num(self.p95_secs)),
+        ])
+    }
+}
+
+/// Time a closure: `warmup` unmeasured runs, then `iters` measured runs.
+pub fn time_it<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> TimingStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    TimingStats {
+        iters: n,
+        min_secs: samples[0],
+        mean_secs: samples.iter().sum::<f64>() / n as f64,
+        p50_secs: samples[n / 2],
+        p95_secs: samples[(n * 95 / 100).min(n - 1)],
+    }
+}
+
+/// A paper-style results table that also persists as JSON.
+pub struct Table {
+    name: String,
+    title: String,
+    header: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+    json_rows: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(name: &str, title: &str, header: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            json_rows: Vec::new(),
+        }
+    }
+
+    /// Add a display row plus its machine-readable form.
+    pub fn row(&mut self, label: &str, cells: Vec<String>, json: Json) {
+        self.rows.push((label.to_string(), cells));
+        self.json_rows.push(json);
+    }
+
+    /// Print to stdout and write `bench_results/<name>.json`.
+    pub fn finish(self) {
+        println!("\n=== {} ===", self.title);
+        let mut head = format!("{:<30}", "");
+        for h in &self.header {
+            head.push_str(&format!(" {h:<13}"));
+        }
+        println!("{head}");
+        for (label, cells) in &self.rows {
+            let mut line = format!("{label:<30}");
+            for c in cells {
+                line.push_str(&format!(" {c:<13}"));
+            }
+            println!("{line}");
+        }
+        let out = obj(vec![
+            ("bench", s(&self.name)),
+            ("title", s(&self.title)),
+            ("header", arr(self.header.iter().map(|h| s(h)).collect())),
+            ("rows", arr(self.json_rows)),
+        ]);
+        let dir = std::path::Path::new("bench_results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let path = dir.join(format!("{}.json", self.name));
+            if let Err(e) = std::fs::write(&path, out.to_string_pretty()) {
+                eprintln!("warn: could not persist {}: {e}", path.display());
+            } else {
+                println!("[saved {}]", path.display());
+            }
+        }
+    }
+}
+
+/// Quick scale knob for benches: DW2V_BENCH_SCALE=small|full (default small
+/// keeps every bench under a couple of minutes on CPU).
+pub fn bench_scale() -> f64 {
+    match std::env::var("DW2V_BENCH_SCALE").as_deref() {
+        Ok("full") => 1.0,
+        _ => 0.25,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let stats = time_it(1, 5, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(stats.min_secs >= 0.0015);
+        assert!(stats.mean_secs >= stats.min_secs);
+        assert!(stats.p95_secs >= stats.p50_secs);
+        assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn table_does_not_panic_and_persists() {
+        let mut t = Table::new("unit_test_table", "Unit", &["a", "b"]);
+        t.row(
+            "row1",
+            vec!["1".into(), "2".into()],
+            obj(vec![("a", num(1.0))]),
+        );
+        t.finish();
+        let path = std::path::Path::new("bench_results/unit_test_table.json");
+        assert!(path.exists());
+        let _ = std::fs::remove_file(path);
+    }
+}

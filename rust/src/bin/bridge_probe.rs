@@ -1,0 +1,37 @@
+// One-off probe for the AOT bridge invariants the runtime relies on:
+//  1. a single-array-output HLO comes back as exactly one chainable buffer
+//  2. execute_b can feed that buffer straight back in (device-resident state)
+//  3. int32 index inputs + scatter-add lower and run on xla_extension 0.5.1
+//  4. copy_raw_to_host_sync with an offset reads just the metrics row
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("/tmp/bridge_test/step2.hlo.txt")?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    const V: usize = 8;
+    const D: usize = 4;
+    let state_host = vec![0f32; (2 * V + 1) * D];
+    let mut state = client.buffer_from_host_buffer(&state_host, &[2 * V + 1, D], None)?;
+    let idx: Vec<i32> = vec![1, 1, 7]; // duplicate index: scatter-add must accumulate
+    let delta = vec![1f32; 3 * D];
+    for step in 0..3 {
+        let idx_b = client.buffer_from_host_buffer(&idx, &[3], None)?;
+        let delta_b = client.buffer_from_host_buffer(&delta, &[3, D], None)?;
+        let mut out = exe.execute_b(&[&state, &idx_b, &delta_b])?;
+        let row = out.remove(0).remove(0);
+        println!("step {step}: outputs chained ok, shape={:?}", row.on_device_shape()?);
+        state = row;
+    }
+    // read only the metrics row via a tiny on-device slice executable
+    // (CopyRawToHost is unimplemented on the CPU PJRT client)
+    let mproto = xla::HloModuleProto::from_text_file("/tmp/bridge_test/metrics.hlo.txt")?;
+    let mexe = client.compile(&xla::XlaComputation::from_proto(&mproto))?;
+    let metrics = mexe.execute_b(&[&state])?[0][0].to_literal_sync()?.to_vec::<f32>()?;
+    println!("metrics row = {metrics:?}");
+    let full = state.to_literal_sync()?.to_vec::<f32>()?;
+    // after 3 steps: row1 += 2 per step -> 6, row7 += 1 per step -> 3
+    assert_eq!(full[D], 6.0, "duplicate-index scatter-add accumulates");
+    assert_eq!(full[7 * D], 3.0);
+    assert_eq!(metrics[0], 12.0, "loss = sum(delta^2) = 12");
+    println!("bridge_probe OK");
+    Ok(())
+}

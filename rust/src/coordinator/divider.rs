@@ -1,0 +1,239 @@
+//! The divide phase: assigning sentences to sub-corpora.
+//!
+//! Three strategies from the paper (§3.1–3.2):
+//!
+//! * **EqualPartitioning** — sentence `i` goes to the single sub-corpus
+//!   `i / (N/n)`; identical every epoch.
+//! * **RandomSampling** — every (sentence, sub-corpus) pair is an
+//!   independent Bernoulli(r/100) draw, *fixed across epochs* (the same
+//!   sample is replayed every round).
+//! * **Shuffle** — the same Bernoulli draws but re-randomized each epoch:
+//!   a sub-model sees the same *fraction* of data every round but not the
+//!   same sentences (the paper's stateless, regularizing contribution).
+//!
+//! All three are implemented **counter-based** (a hash of
+//! (seed, strategy, sub-corpus, sentence[, epoch]) drives each decision),
+//! so any mapper thread can compute any sentence's routing without shared
+//! state or coordination — precisely the statelessness the paper claims
+//! for its MapReduce mappers.
+
+use crate::util::config::DivideStrategy;
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct Divider {
+    pub strategy: DivideStrategy,
+    pub num_submodels: usize,
+    /// sampling rate r as a fraction (r% / 100)
+    pub rate: f64,
+    pub seed: u64,
+    pub total_sentences: usize,
+}
+
+impl Divider {
+    pub fn new(
+        strategy: DivideStrategy,
+        rate_percent: f64,
+        seed: u64,
+        total_sentences: usize,
+    ) -> Self {
+        let num = ((100.0 / rate_percent).round() as usize).max(1);
+        Self {
+            strategy,
+            num_submodels: num,
+            rate: rate_percent / 100.0,
+            seed,
+            total_sentences,
+        }
+    }
+
+    /// Stateless uniform hash in [0,1) for one routing decision.
+    #[inline]
+    fn decision(&self, epoch: usize, sentence: usize, submodel: usize) -> f64 {
+        // one SplitMix64 step over a mixed key: cheap, high-quality, and
+        // reproducible regardless of mapper threading
+        let epoch_key = match self.strategy {
+            DivideStrategy::Shuffle => epoch as u64,
+            _ => 0, // Random/Equal replay the same decisions each epoch
+        };
+        let key = self
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add((sentence as u64).rotate_left(17))
+            .wrapping_add((submodel as u64).rotate_left(39))
+            .wrapping_add(epoch_key.rotate_left(51));
+        let mut sm = SplitMix64::new(key);
+        (sm.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Append the sub-model indices sentence `sentence` is routed to in
+    /// `epoch` onto `out` (cleared first). A sentence may go to zero, one
+    /// or several sub-corpora under Random/Shuffle.
+    pub fn targets(&self, epoch: usize, sentence: usize, out: &mut Vec<usize>) {
+        out.clear();
+        match self.strategy {
+            DivideStrategy::EqualPartitioning => {
+                let chunk = self.total_sentences.div_ceil(self.num_submodels).max(1);
+                out.push((sentence / chunk).min(self.num_submodels - 1));
+            }
+            DivideStrategy::RandomSampling | DivideStrategy::Shuffle => {
+                for s in 0..self.num_submodels {
+                    if self.decision(epoch, sentence, s) < self.rate {
+                        out.push(s);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Expected number of sentences routed to one sub-model per epoch.
+    pub fn expected_per_submodel(&self) -> f64 {
+        match self.strategy {
+            DivideStrategy::EqualPartitioning => {
+                self.total_sentences as f64 / self.num_submodels as f64
+            }
+            _ => self.total_sentences as f64 * self.rate,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(d: &Divider, epoch: usize) -> Vec<Vec<usize>> {
+        // per-submodel sentence lists
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); d.num_submodels];
+        let mut buf = Vec::new();
+        for i in 0..d.total_sentences {
+            d.targets(epoch, i, &mut buf);
+            for &s in &buf {
+                per[s].push(i);
+            }
+        }
+        per
+    }
+
+    #[test]
+    fn equal_partitioning_is_contiguous_and_disjoint() {
+        let d = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000);
+        assert_eq!(d.num_submodels, 10);
+        let per = collect(&d, 0);
+        let mut all: Vec<usize> = per.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..1000).collect::<Vec<_>>()); // partition
+        for (s, list) in per.iter().enumerate() {
+            assert_eq!(list.len(), 100);
+            assert_eq!(list[0], s * 100); // contiguous blocks
+        }
+        // identical across epochs
+        assert_eq!(collect(&d, 0), collect(&d, 3));
+    }
+
+    #[test]
+    fn random_sampling_rate_and_epoch_stability() {
+        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 2, 5000);
+        let per0 = collect(&d, 0);
+        let per5 = collect(&d, 5);
+        assert_eq!(per0, per5, "RandomSampling must replay the same sample");
+        for list in &per0 {
+            let frac = list.len() as f64 / 5000.0;
+            assert!((frac - 0.1).abs() < 0.02, "rate off: {frac}");
+        }
+    }
+
+    #[test]
+    fn shuffle_resamples_each_epoch() {
+        let d = Divider::new(DivideStrategy::Shuffle, 10.0, 3, 5000);
+        let per0 = collect(&d, 0);
+        let per1 = collect(&d, 1);
+        assert_ne!(per0, per1, "Shuffle must draw fresh samples per epoch");
+        for per in [&per0, &per1] {
+            for list in per {
+                let frac = list.len() as f64 / 5000.0;
+                assert!((frac - 0.1).abs() < 0.02, "rate off: {frac}");
+            }
+        }
+    }
+
+    #[test]
+    fn sentences_can_go_to_multiple_submodels() {
+        let d = Divider::new(DivideStrategy::Shuffle, 50.0, 4, 2000);
+        assert_eq!(d.num_submodels, 2);
+        let mut buf = Vec::new();
+        let mut multi = 0;
+        for i in 0..2000 {
+            d.targets(0, i, &mut buf);
+            if buf.len() > 1 {
+                multi += 1;
+            }
+        }
+        // P(both) = 0.25 -> expect ~500
+        assert!(multi > 300, "expected overlapping assignment, got {multi}");
+    }
+
+    #[test]
+    fn routing_is_order_independent() {
+        // the same (epoch, sentence) query must give the same answer no
+        // matter when it is asked — the statelessness property
+        let d = Divider::new(DivideStrategy::Shuffle, 20.0, 5, 100);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        d.targets(2, 57, &mut a);
+        for i in (0..100).rev() {
+            d.targets(2, i, &mut b); // interleave other queries
+        }
+        d.targets(2, 57, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let d1 = Divider::new(DivideStrategy::RandomSampling, 10.0, 100, 3000);
+        let d2 = Divider::new(DivideStrategy::RandomSampling, 10.0, 101, 3000);
+        assert_ne!(collect(&d1, 0), collect(&d2, 0));
+    }
+
+    #[test]
+    fn expected_per_submodel() {
+        let eq = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000);
+        assert_eq!(eq.expected_per_submodel(), 100.0);
+        let sh = Divider::new(DivideStrategy::Shuffle, 10.0, 1, 1000);
+        assert_eq!(sh.expected_per_submodel(), 100.0);
+    }
+
+    #[test]
+    fn theorem2_frequent_words_never_missed() {
+        // Paper Theorem 2: with u = r/100 and sentence length ℓ, a word
+        // with occurrence probability above 1-(1-u)^((1-u)/(ℓu)) is missed
+        // by a sub-corpus with exponentially small probability. Empirical
+        // check: plant a word in 2% of sentences (well above the u=0.1,
+        // ℓ=20 threshold ≈ 0.0095 for per-token probability; per-sentence
+        // here) and verify no sub-corpus misses it.
+        let n_sentences = 20_000;
+        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 77, n_sentences);
+        // the "word" occurs in every 50th sentence
+        let occurs: Vec<usize> = (0..n_sentences).step_by(50).collect();
+        let mut buf = Vec::new();
+        let mut seen = vec![false; d.num_submodels];
+        for &i in &occurs {
+            d.targets(0, i, &mut buf);
+            for &s in &buf {
+                seen[s] = true;
+            }
+        }
+        assert!(
+            seen.iter().all(|&s| s),
+            "a frequent word was missed by some sub-corpus: {seen:?}"
+        );
+    }
+
+    #[test]
+    fn rate_100_single_model_gets_everything() {
+        let d = Divider::new(DivideStrategy::Shuffle, 100.0, 9, 500);
+        assert_eq!(d.num_submodels, 1);
+        let per = collect(&d, 0);
+        // Bernoulli(1.0) -> all sentences
+        assert_eq!(per[0].len(), 500);
+    }
+}

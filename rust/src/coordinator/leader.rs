@@ -1,0 +1,188 @@
+//! The leader: orchestrates the full divide → train → merge → eval run.
+//!
+//! This is the entry point the CLI, the examples and every bench harness
+//! drive. It owns phase timing (the numbers behind Table 4 / Figure 2),
+//! constructs the MapReduce topology (mappers route, reducers train
+//! PJRT-backed sub-models), and hands the trained sub-models to the merge
+//! phase and the merged consensus to the evaluation harness.
+
+use super::divider::Divider;
+use super::mapper::{CorpusSource, SentenceRouter};
+use super::reducer::TrainReducer;
+use crate::embedding::Embedding;
+use crate::eval::report::{evaluate_suite, BenchmarkScore};
+use crate::exec::mapreduce::{MapReduce, RunStats};
+use crate::gen::benchmarks::Benchmark;
+use crate::merge::alir::AlirOptions;
+use crate::merge::{merge_models, MergeResult};
+use crate::runtime::client::Runtime;
+use crate::sgns::config::SgnsConfig;
+use crate::sgns::trainer::SubModelTrainer;
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::config::ExperimentConfig;
+use crate::util::logging::Timer;
+use crate::util::rng::Pcg64;
+use crate::info;
+use std::sync::Arc;
+
+/// Result of the train phase.
+pub struct TrainOutput {
+    pub submodels: Vec<Embedding>,
+    /// per-sub-model, per-epoch mean loss (the e2e loss curves)
+    pub epoch_loss: Vec<Vec<f64>>,
+    pub train_secs: f64,
+    pub mr_stats: RunStats,
+    pub pairs: u64,
+    pub dispatches: u64,
+    /// mean per-reducer device busy time — what a dedicated node per
+    /// reducer would see as its train phase (the paper's Table 4 metric)
+    pub avg_reducer_busy_secs: f64,
+    pub max_reducer_busy_secs: f64,
+}
+
+/// Extract the SGNS hyperparameters from the experiment config.
+pub fn sgns_config(cfg: &ExperimentConfig) -> SgnsConfig {
+    SgnsConfig {
+        dim: cfg.dim,
+        window: cfg.window,
+        negatives: cfg.negatives,
+        subsample_t: cfg.subsample_t,
+        lr0: cfg.lr0,
+        lr_min: cfg.lr_min,
+        epochs: cfg.epochs,
+        noise_power: 0.75,
+    }
+}
+
+/// Divide + train: run `cfg.epochs` MapReduce rounds with one PJRT-backed
+/// trainer per sub-model and return the trained sub-models.
+pub fn train_submodels(
+    cfg: &ExperimentConfig,
+    corpus: &Corpus,
+    vocab: &Vocab,
+    rt: &Runtime,
+) -> Result<TrainOutput, String> {
+    let scfg = sgns_config(cfg);
+    let divider = Arc::new(Divider::new(
+        cfg.strategy.clone(),
+        cfg.rate_percent,
+        cfg.seed ^ 0xD1, // decorrelate from model init
+        corpus.len(),
+    ));
+    let n = divider.num_submodels;
+    let avg_len = corpus.total_tokens() as f64 / corpus.len().max(1) as f64;
+    let expected_pairs = (divider.expected_per_submodel()
+        * avg_len
+        * scfg.window as f64
+        * cfg.epochs as f64) as u64;
+
+    info!(
+        "train: {} sub-models (strategy={}, r={}%), {} epochs, expected ~{} pairs each",
+        n,
+        cfg.strategy.name(),
+        cfg.rate_percent,
+        cfg.epochs,
+        expected_pairs
+    );
+
+    let root = Pcg64::new(cfg.seed);
+    let mut reducers = Vec::with_capacity(n);
+    for s in 0..n {
+        let seed = root.derive(s as u64).next_u64();
+        let trainer = SubModelTrainer::new(rt, vocab, &scfg, expected_pairs, seed)?;
+        reducers.push(TrainReducer::new(trainer));
+    }
+
+    let timer = Timer::start("train phase");
+    let mr = MapReduce {
+        num_mappers: cfg.mappers,
+        queue_capacity: cfg.queue_capacity,
+    };
+    let mr_stats = mr.run(
+        cfg.epochs,
+        &CorpusSource { corpus },
+        |epoch, _shard| SentenceRouter::new(Arc::clone(&divider), epoch),
+        &mut reducers,
+    );
+    let train_secs = timer.stop_quiet();
+
+    let min_count = cfg.submodel_min_count();
+    let mut submodels = Vec::with_capacity(n);
+    let mut epoch_loss = Vec::with_capacity(n);
+    let mut pairs = 0;
+    let mut dispatches = 0;
+    let mut busy = Vec::with_capacity(n);
+    for red in reducers {
+        if let Some(e) = red.error {
+            return Err(format!("reducer failed: {e}"));
+        }
+        epoch_loss.push(red.epoch_mean_loss.clone());
+        pairs += red.trainer.pairs_emitted();
+        dispatches += red.trainer.dispatches();
+        busy.push(red.trainer.device_secs);
+        submodels.push(red.trainer.into_embedding(min_count)?);
+    }
+    info!(
+        "train done: {:.2}s, {} pairs, {} dispatches, {:.2}s sender-blocked",
+        train_secs, pairs, dispatches, mr_stats.send_blocked_secs
+    );
+    let avg_busy = busy.iter().sum::<f64>() / busy.len().max(1) as f64;
+    let max_busy = busy.iter().cloned().fold(0.0, f64::max);
+    Ok(TrainOutput {
+        submodels,
+        epoch_loss,
+        train_secs,
+        mr_stats,
+        pairs,
+        dispatches,
+        avg_reducer_busy_secs: avg_busy,
+        max_reducer_busy_secs: max_busy,
+    })
+}
+
+/// Full-pipeline report: everything the paper's tables need for one row.
+pub struct PipelineReport {
+    pub scores: Vec<BenchmarkScore>,
+    pub train: TrainOutput,
+    pub merge_secs: f64,
+    pub eval_secs: f64,
+    pub merged_vocab: usize,
+    pub alir_rounds: usize,
+    pub alir_displacement: Vec<f64>,
+}
+
+/// divide → train → merge → eval with the experiment's configured
+/// strategy/rate/merge method.
+pub fn run_pipeline(
+    cfg: &ExperimentConfig,
+    corpus: &Corpus,
+    vocab: &Vocab,
+    suite: &[Benchmark],
+    rt: &Runtime,
+) -> Result<PipelineReport, String> {
+    let train = train_submodels(cfg, corpus, vocab, rt)?;
+    let merged = merge_trained(cfg, &train.submodels);
+    let timer = Timer::start("eval phase");
+    let scores = evaluate_suite(&merged.embedding, suite, cfg.seed);
+    let eval_secs = timer.stop_quiet();
+    Ok(PipelineReport {
+        scores,
+        merged_vocab: merged.embedding.present_count(),
+        merge_secs: merged.seconds,
+        alir_rounds: merged.alir_rounds,
+        alir_displacement: merged.alir_displacement.clone(),
+        eval_secs,
+        train,
+    })
+}
+
+/// Merge already-trained sub-models with the experiment's merge settings.
+pub fn merge_trained(cfg: &ExperimentConfig, submodels: &[Embedding]) -> MergeResult {
+    let alir_opts = AlirOptions {
+        init: crate::merge::alir::AlirInit::Pca,
+        max_rounds: cfg.alir_rounds,
+        tol: cfg.alir_tol,
+    };
+    merge_models(submodels, &cfg.merge, &alir_opts, cfg.seed ^ 0x4D)
+}

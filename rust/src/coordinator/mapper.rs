@@ -1,0 +1,155 @@
+//! Mapper side of the train phase: stateless sentence routing.
+//!
+//! A [`SentenceRouter`] is constructed fresh for every (epoch, mapper
+//! shard) — it holds nothing but a handle to the [`Divider`], whose
+//! counter-based hashing makes every routing decision a pure function of
+//! (seed, epoch, sentence index, sub-model). Sentences are routed by
+//! reference: the corpus outlives the MapReduce scope, so the channels
+//! carry `&[u32]` with zero copies.
+
+use super::divider::Divider;
+use crate::exec::mapreduce::{Mapper, RoundSource};
+use crate::text::corpus::Corpus;
+use std::sync::Arc;
+
+/// RoundSource over an in-memory corpus: shard = contiguous sentence range,
+/// items are (global sentence index, sentence).
+pub struct CorpusSource<'c> {
+    pub corpus: &'c Corpus,
+}
+
+impl<'c> RoundSource for CorpusSource<'c> {
+    type Item = (usize, &'c [u32]);
+
+    fn shard(
+        &self,
+        _round: usize,
+        shard: usize,
+        num_shards: usize,
+    ) -> Box<dyn Iterator<Item = (usize, &'c [u32])> + '_> {
+        let range = self.corpus.shard_range(shard, num_shards);
+        let lo = range.start;
+        Box::new(
+            self.corpus.sentences[range]
+                .iter()
+                .enumerate()
+                .map(move |(i, s)| (lo + i, s.as_slice())),
+        )
+    }
+}
+
+/// The mapper: applies the divider for the current epoch.
+pub struct SentenceRouter {
+    divider: Arc<Divider>,
+    epoch: usize,
+    targets: Vec<usize>, // reusable buffer
+}
+
+impl SentenceRouter {
+    pub fn new(divider: Arc<Divider>, epoch: usize) -> Self {
+        Self {
+            divider,
+            epoch,
+            targets: Vec::new(),
+        }
+    }
+}
+
+impl<'c> Mapper<(usize, &'c [u32]), (u64, &'c [u32])> for SentenceRouter {
+    fn map(
+        &mut self,
+        (idx, sentence): (usize, &'c [u32]),
+        emit: &mut dyn FnMut(usize, (u64, &'c [u32])),
+    ) {
+        self.divider.targets(self.epoch, idx, &mut self.targets);
+        // the routed id mixes epoch and sentence index: reducers draw all
+        // per-sentence randomness from it, so training is reproducible
+        // regardless of mapper interleaving, and epochs differ (word2vec
+        // re-draws windows/subsampling every pass)
+        let sid = (self.epoch as u64) << 40 | idx as u64;
+        for &t in &self.targets {
+            emit(t, (sid, sentence));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::mapreduce::{MapReduce, Reducer};
+    use crate::util::config::DivideStrategy;
+
+    #[derive(Default)]
+    struct Collect {
+        sentences: Vec<Vec<u32>>,
+        rounds: usize,
+    }
+
+    impl<'c> Reducer<(u64, &'c [u32])> for Collect {
+        fn reduce(&mut self, (_, s): (u64, &'c [u32])) {
+            self.sentences.push(s.to_vec());
+        }
+        fn end_round(&mut self, _r: usize) {
+            self.rounds += 1;
+        }
+    }
+
+    fn corpus(n: usize) -> Corpus {
+        Corpus::new((0..n as u32).map(|i| vec![i, i + 1]).collect())
+    }
+
+    #[test]
+    fn equal_partitioning_routes_contiguous_blocks() {
+        let c = corpus(100);
+        let divider = Arc::new(Divider::new(
+            DivideStrategy::EqualPartitioning,
+            25.0,
+            7,
+            c.len(),
+        ));
+        let mr = MapReduce {
+            num_mappers: 3,
+            queue_capacity: 16,
+        };
+        let mut reducers: Vec<Collect> = (0..4).map(|_| Collect::default()).collect();
+        mr.run(
+            1,
+            &CorpusSource { corpus: &c },
+            |epoch, _shard| SentenceRouter::new(Arc::clone(&divider), epoch),
+            &mut reducers,
+        );
+        // each reducer got its contiguous quarter (order within may vary
+        // across mapper threads)
+        for (r, red) in reducers.iter().enumerate() {
+            assert_eq!(red.sentences.len(), 25, "reducer {r}");
+            let mut firsts: Vec<u32> = red.sentences.iter().map(|s| s[0]).collect();
+            firsts.sort_unstable();
+            assert_eq!(firsts[0] as usize, r * 25);
+            assert_eq!(*firsts.last().unwrap() as usize, r * 25 + 24);
+        }
+    }
+
+    #[test]
+    fn shuffle_rounds_differ_but_rates_hold() {
+        let c = corpus(2000);
+        let divider = Arc::new(Divider::new(DivideStrategy::Shuffle, 20.0, 9, c.len()));
+        let mr = MapReduce {
+            num_mappers: 2,
+            queue_capacity: 64,
+        };
+        let mut reducers: Vec<Collect> = (0..5).map(|_| Collect::default()).collect();
+        let stats = mr.run(
+            2,
+            &CorpusSource { corpus: &c },
+            |epoch, _| SentenceRouter::new(Arc::clone(&divider), epoch),
+            &mut reducers,
+        );
+        assert_eq!(stats.rounds, 2);
+        for red in &reducers {
+            assert_eq!(red.rounds, 2);
+            // ~20% per epoch × 2 epochs = ~800
+            let frac = red.sentences.len() as f64 / (2.0 * 2000.0);
+            assert!((frac - 0.2).abs() < 0.03, "frac={frac}");
+        }
+    }
+}

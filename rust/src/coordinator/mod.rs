@@ -1,0 +1,11 @@
+//! Layer-3 coordination: the paper's divide / train / merge pipeline.
+//!
+//! * [`divider`] — EqualPartitioning / RandomSampling / Shuffle (divide phase)
+//! * [`mapper`] / [`reducer`] — the MapReduce roles (train phase)
+//! * [`leader`] — end-to-end orchestration + phase timing
+//! * [`stats`] — unigram/bigram KL divergence (Figure 1) + vocab coverage
+pub mod divider;
+pub mod leader;
+pub mod mapper;
+pub mod reducer;
+pub mod stats;

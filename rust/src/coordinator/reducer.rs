@@ -1,0 +1,64 @@
+//! Reducer side of the train phase: one PJRT-backed sub-model per reducer.
+//!
+//! A [`TrainReducer`] consumes the sentences its mapper routed to it and
+//! feeds them to its [`SubModelTrainer`]. Reducers share **nothing** with
+//! each other — no parameters, no RNG, no locks — which is the paper's
+//! central asynchrony claim. At each round barrier the partial batch is
+//! flushed and the on-device loss counters are snapshotted, giving the
+//! per-epoch loss curve the e2e example logs.
+
+use crate::exec::mapreduce::Reducer;
+use crate::runtime::params::Metrics;
+use crate::sgns::trainer::SubModelTrainer;
+
+pub struct TrainReducer<'rt> {
+    pub trainer: SubModelTrainer<'rt>,
+    /// mean loss per finished epoch (delta of the running counters)
+    pub epoch_mean_loss: Vec<f64>,
+    prev: Metrics,
+    /// first error encountered (training continues degenerate after that;
+    /// the leader surfaces it)
+    pub error: Option<String>,
+}
+
+impl<'rt> TrainReducer<'rt> {
+    pub fn new(trainer: SubModelTrainer<'rt>) -> Self {
+        Self {
+            trainer,
+            epoch_mean_loss: Vec::new(),
+            prev: Metrics::default(),
+            error: None,
+        }
+    }
+}
+
+impl<'rt, 'c> Reducer<(u64, &'c [u32])> for TrainReducer<'rt> {
+    fn reduce(&mut self, (sentence_id, sentence): (u64, &'c [u32])) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = self.trainer.push_sentence(sentence_id, sentence) {
+            self.error = Some(e);
+        }
+    }
+
+    fn end_round(&mut self, _round: usize) {
+        if self.error.is_some() {
+            return;
+        }
+        if let Err(e) = self.trainer.flush() {
+            self.error = Some(e);
+            return;
+        }
+        match self.trainer.metrics() {
+            Ok(m) => {
+                let d_loss = m.loss_sum - self.prev.loss_sum;
+                let d_ex = m.examples - self.prev.examples;
+                self.epoch_mean_loss
+                    .push(if d_ex > 0.0 { d_loss / d_ex } else { 0.0 });
+                self.prev = m;
+            }
+            Err(e) => self.error = Some(e),
+        }
+    }
+}

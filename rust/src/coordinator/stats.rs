@@ -1,0 +1,197 @@
+//! Distributional statistics: the empirical evidence behind Hypothesis 1.
+//!
+//! Figure 1 of the paper plots the KL divergence of each sub-corpus's
+//! unigram and bigram distributions from the full corpus's, comparing
+//! RandomSampling against EqualPartitioning. This module computes exactly
+//! those quantities, plus the vocabulary-coverage statistics quoted in
+//! §3.1 (common-vocabulary fraction across sub-corpora).
+
+use crate::text::corpus::Corpus;
+use std::collections::HashMap;
+
+/// Empirical unigram + (adjacent) bigram distribution of a corpus sample.
+#[derive(Clone, Debug, Default)]
+pub struct DistStats {
+    pub unigram: HashMap<u32, u64>,
+    pub bigram: HashMap<(u32, u32), u64>,
+    pub tokens: u64,
+    pub bigrams: u64,
+}
+
+impl DistStats {
+    pub fn add_sentence(&mut self, sentence: &[u32]) {
+        for &w in sentence {
+            *self.unigram.entry(w).or_insert(0) += 1;
+            self.tokens += 1;
+        }
+        for pair in sentence.windows(2) {
+            *self.bigram.entry((pair[0], pair[1])).or_insert(0) += 1;
+            self.bigrams += 1;
+        }
+    }
+
+    pub fn from_sentences<'a>(sentences: impl Iterator<Item = &'a Vec<u32>>) -> Self {
+        let mut s = Self::default();
+        for sent in sentences {
+            s.add_sentence(sent);
+        }
+        s
+    }
+
+    pub fn from_corpus(corpus: &Corpus) -> Self {
+        Self::from_sentences(corpus.sentences.iter())
+    }
+
+    /// Vocabulary (distinct unigrams) of this sample.
+    pub fn vocab_set(&self) -> std::collections::HashSet<u32> {
+        self.unigram.keys().copied().collect()
+    }
+}
+
+/// KL(P‖Q) over the *support of P* with add-α smoothing on Q (a sub-corpus
+/// can miss words; the full corpus never misses sub-corpus words, but
+/// smoothing keeps the estimator finite in both directions).
+fn kl(
+    p_counts: impl Iterator<Item = (u64, u64)> + Clone,
+    p_total: u64,
+    q_total: u64,
+    q_support: usize,
+    alpha: f64,
+) -> f64 {
+    // items are (p_count, q_count)
+    let q_denom = q_total as f64 + alpha * q_support as f64;
+    let mut sum = 0.0;
+    for (pc, qc) in p_counts {
+        if pc == 0 {
+            continue;
+        }
+        let p = pc as f64 / p_total as f64;
+        let q = (qc as f64 + alpha) / q_denom;
+        sum += p * (p / q).ln();
+    }
+    sum.max(0.0)
+}
+
+/// KL divergence of the sample's unigram distribution from the reference's.
+pub fn unigram_kl(sample: &DistStats, full: &DistStats) -> f64 {
+    kl(
+        sample
+            .unigram
+            .iter()
+            .map(|(w, c)| (*c, full.unigram.get(w).copied().unwrap_or(0)))
+            .collect::<Vec<_>>()
+            .into_iter(),
+        sample.tokens.max(1),
+        full.tokens.max(1),
+        full.unigram.len().max(1),
+        0.5,
+    )
+}
+
+/// KL divergence of the sample's bigram distribution from the reference's.
+pub fn bigram_kl(sample: &DistStats, full: &DistStats) -> f64 {
+    kl(
+        sample
+            .bigram
+            .iter()
+            .map(|(b, c)| (*c, full.bigram.get(b).copied().unwrap_or(0)))
+            .collect::<Vec<_>>()
+            .into_iter(),
+        sample.bigrams.max(1),
+        full.bigrams.max(1),
+        full.bigram.len().max(1),
+        0.5,
+    )
+}
+
+/// §3.1 coverage numbers: fraction of the full vocabulary covered by the
+/// union and by the intersection of the sub-corpora vocabularies.
+pub fn vocab_coverage(subs: &[DistStats], full: &DistStats) -> (f64, f64) {
+    let full_vocab = full.vocab_set();
+    if full_vocab.is_empty() || subs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mut union = std::collections::HashSet::new();
+    let mut intersection = subs[0].vocab_set();
+    for s in subs {
+        let vs = s.vocab_set();
+        union.extend(vs.iter().copied());
+        intersection = intersection.intersection(&vs).copied().collect();
+    }
+    (
+        union.intersection(&full_vocab).count() as f64 / full_vocab.len() as f64,
+        intersection.intersection(&full_vocab).count() as f64 / full_vocab.len() as f64,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus_of(sents: Vec<Vec<u32>>) -> Corpus {
+        Corpus::new(sents)
+    }
+
+    #[test]
+    fn counts_unigrams_and_bigrams() {
+        let c = corpus_of(vec![vec![1, 2, 3], vec![2, 2]]);
+        let s = DistStats::from_corpus(&c);
+        assert_eq!(s.tokens, 5);
+        assert_eq!(s.bigrams, 3);
+        assert_eq!(s.unigram[&2], 3);
+        assert_eq!(s.bigram[&(1, 2)], 1);
+        assert_eq!(s.bigram[&(2, 2)], 1);
+    }
+
+    #[test]
+    fn kl_zero_for_identical_distributions() {
+        let c = corpus_of((0..100).map(|i| vec![i % 7, (i + 1) % 7]).collect());
+        let s = DistStats::from_corpus(&c);
+        let d = unigram_kl(&s, &s);
+        assert!(d < 0.01, "self-KL should be ~0, got {d}");
+    }
+
+    #[test]
+    fn kl_increases_with_distribution_skew() {
+        // full corpus: uniform over 10 words; skewed sample: only 2 words
+        let full = DistStats::from_corpus(&corpus_of(
+            (0..1000).map(|i| vec![i % 10, (i + 1) % 10]).collect(),
+        ));
+        let uniform_sample = DistStats::from_corpus(&corpus_of(
+            (0..100).map(|i| vec![i % 10, (i + 1) % 10]).collect(),
+        ));
+        let skewed_sample = DistStats::from_corpus(&corpus_of(
+            (0..100).map(|i| vec![i % 2, (i + 1) % 2]).collect(),
+        ));
+        assert!(unigram_kl(&skewed_sample, &full) > unigram_kl(&uniform_sample, &full) + 0.3);
+        assert!(bigram_kl(&skewed_sample, &full) > bigram_kl(&uniform_sample, &full));
+    }
+
+    #[test]
+    fn kl_is_nonnegative() {
+        let full = DistStats::from_corpus(&corpus_of(
+            (0..500).map(|i| vec![i % 20, i % 3]).collect(),
+        ));
+        let sample = DistStats::from_corpus(&corpus_of(
+            (0..50).map(|i| vec![i % 20, i % 3]).collect(),
+        ));
+        assert!(unigram_kl(&sample, &full) >= 0.0);
+        assert!(bigram_kl(&sample, &full) >= 0.0);
+    }
+
+    #[test]
+    fn coverage_union_and_intersection() {
+        let full = DistStats::from_corpus(&corpus_of(vec![vec![0, 1, 2, 3]]));
+        let s1 = DistStats::from_corpus(&corpus_of(vec![vec![0, 1]]));
+        let s2 = DistStats::from_corpus(&corpus_of(vec![vec![1, 2]]));
+        let (union, inter) = vocab_coverage(&[s1, s2], &full);
+        assert!((union - 0.75).abs() < 1e-9); // {0,1,2} of 4
+        assert!((inter - 0.25).abs() < 1e-9); // {1} of 4
+    }
+
+    #[test]
+    fn coverage_handles_empty() {
+        let full = DistStats::default();
+        assert_eq!(vocab_coverage(&[], &full), (0.0, 0.0));
+    }
+}

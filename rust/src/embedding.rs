@@ -1,0 +1,243 @@
+//! The common embedding representation shared by trainers, the merge
+//! phase and the evaluation harness.
+//!
+//! All sub-models live in the same global id space `0..V`; a sub-model
+//! trained on a sub-corpus simply marks words it never (sufficiently) saw
+//! as absent via the `present` mask — that sparsity is exactly what the
+//! ALiR merge reconstructs (paper §3.3.2).
+
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub vocab: usize,
+    pub dim: usize,
+    /// row-major vocab × dim
+    pub data: Vec<f32>,
+    /// presence mask: false = this word is missing from this sub-model
+    pub present: Vec<bool>,
+}
+
+impl Embedding {
+    pub fn zeros(vocab: usize, dim: usize) -> Self {
+        Self {
+            vocab,
+            dim,
+            data: vec![0.0; vocab * dim],
+            present: vec![true; vocab],
+        }
+    }
+
+    pub fn from_rows(vocab: usize, dim: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), vocab * dim);
+        Self {
+            vocab,
+            dim,
+            data,
+            present: vec![true; vocab],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, w: u32) -> &[f32] {
+        &self.data[w as usize * self.dim..(w as usize + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, w: u32) -> &mut [f32] {
+        &mut self.data[w as usize * self.dim..(w as usize + 1) * self.dim]
+    }
+
+    pub fn is_present(&self, w: u32) -> bool {
+        self.present[w as usize]
+    }
+
+    pub fn present_count(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+
+    /// Cosine similarity; returns None if either word is absent.
+    pub fn cosine(&self, a: u32, b: u32) -> Option<f64> {
+        if !self.is_present(a) || !self.is_present(b) {
+            return None;
+        }
+        let ra = self.row(a);
+        let rb = self.row(b);
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for (x, y) in ra.iter().zip(rb) {
+            dot += (*x as f64) * (*y as f64);
+            na += (*x as f64) * (*x as f64);
+            nb += (*y as f64) * (*y as f64);
+        }
+        Some(dot / (na.sqrt() * nb.sqrt()).max(1e-12))
+    }
+
+    /// L2-normalized copy of the present rows (absent rows zeroed) — the
+    /// usual preprocessing for analogy search.
+    pub fn normalized(&self) -> Embedding {
+        let mut out = self.clone();
+        for w in 0..self.vocab as u32 {
+            if !self.is_present(w) {
+                out.row_mut(w).fill(0.0);
+                continue;
+            }
+            let norm: f32 = self.row(w).iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-12 {
+                for v in out.row_mut(w) {
+                    *v /= norm;
+                }
+            }
+        }
+        out
+    }
+
+    /// Indices of the `k` nearest present rows to `query` by cosine,
+    /// excluding `exclude`.
+    pub fn nearest(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
+        let qn: f64 = query.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+        let mut scored: Vec<(u32, f64)> = (0..self.vocab as u32)
+            .filter(|w| self.is_present(*w) && !exclude.contains(w))
+            .map(|w| {
+                let row = self.row(w);
+                let dot: f64 = row
+                    .iter()
+                    .zip(query)
+                    .map(|(a, b)| (*a as f64) * (*b as f64))
+                    .sum();
+                let rn: f64 = row.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+                (w, dot / (qn * rn).max(1e-12))
+            })
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.truncate(k);
+        scored
+    }
+}
+
+impl Embedding {
+    const MAGIC: u32 = 0x6457_4532; // "dWE2"
+
+    /// Persist as a simple binary: magic | vocab | dim | present bitmapish
+    /// bytes | f32 rows.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        w.write_all(&(self.vocab as u64).to_le_bytes())?;
+        w.write_all(&(self.dim as u64).to_le_bytes())?;
+        for &p in &self.present {
+            w.write_all(&[p as u8])?;
+        }
+        for &v in &self.data {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        w.flush()
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Embedding> {
+        use std::io::Read;
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut b4 = [0u8; 4];
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != Self::MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "not a dw2v embedding file",
+            ));
+        }
+        r.read_exact(&mut b8)?;
+        let vocab = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let dim = u64::from_le_bytes(b8) as usize;
+        let mut present_bytes = vec![0u8; vocab];
+        r.read_exact(&mut present_bytes)?;
+        let mut data_bytes = vec![0u8; vocab * dim * 4];
+        r.read_exact(&mut data_bytes)?;
+        Ok(Embedding {
+            vocab,
+            dim,
+            data: data_bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+            present: present_bytes.into_iter().map(|b| b != 0).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut e = sample();
+        e.present[2] = false;
+        let path = std::env::temp_dir().join(format!("dw2v_emb_{}.bin", std::process::id()));
+        e.save(&path).unwrap();
+        let back = Embedding::load(&path).unwrap();
+        assert_eq!(back.vocab, e.vocab);
+        assert_eq!(back.dim, e.dim);
+        assert_eq!(back.data, e.data);
+        assert_eq!(back.present, e.present);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = std::env::temp_dir().join(format!("dw2v_bad_{}.bin", std::process::id()));
+        std::fs::write(&path, b"garbage").unwrap();
+        assert!(Embedding::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    fn sample() -> Embedding {
+        let mut e = Embedding::zeros(4, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[2.0, 0.0]);
+        e.row_mut(2).copy_from_slice(&[0.0, 1.0]);
+        e.row_mut(3).copy_from_slice(&[-1.0, 0.0]);
+        e
+    }
+
+    #[test]
+    fn cosine_basics() {
+        let e = sample();
+        assert!((e.cosine(0, 1).unwrap() - 1.0).abs() < 1e-9);
+        assert!(e.cosine(0, 2).unwrap().abs() < 1e-9);
+        assert!((e.cosine(0, 3).unwrap() + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absent_words_yield_none() {
+        let mut e = sample();
+        e.present[1] = false;
+        assert!(e.cosine(0, 1).is_none());
+        assert_eq!(e.present_count(), 3);
+    }
+
+    #[test]
+    fn normalized_rows_unit_length() {
+        let e = sample().normalized();
+        for w in 0..4u32 {
+            let n: f32 = e.row(w).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nearest_orders_by_cosine_and_respects_exclusions() {
+        let e = sample();
+        let res = e.nearest(&[1.0, 0.1], 2, &[0]);
+        assert_eq!(res[0].0, 1); // same direction as query, 0 excluded
+        assert!(res[0].1 > res[1].1);
+        assert!(!res.iter().any(|(w, _)| *w == 0));
+    }
+
+    #[test]
+    fn nearest_skips_absent() {
+        let mut e = sample();
+        e.present[1] = false;
+        let res = e.nearest(&[1.0, 0.0], 4, &[]);
+        assert!(!res.iter().any(|(w, _)| *w == 1));
+    }
+}

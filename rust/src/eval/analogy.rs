@@ -1,0 +1,143 @@
+//! Analogy evaluation: 3CosAdd accuracy (Mikolov et al.), the protocol
+//! behind the paper's Google/SemEval columns.
+//!
+//! For a question a : b :: c : ?, the prediction is
+//! `argmax_w cos(w, b − a + c)` over present words excluding {a, b, c};
+//! the question scores 1 iff the argmax is the gold d. Questions touching
+//! an absent word are skipped and counted as OOV.
+
+use crate::embedding::Embedding;
+use crate::gen::benchmarks::AnalogyQuad;
+
+#[derive(Clone, Debug)]
+pub struct AnalogyResult {
+    pub accuracy: f64,
+    pub questions_used: usize,
+    pub questions_skipped: usize,
+    pub oov_words: usize,
+}
+
+/// Evaluate 3CosAdd accuracy of `quads` against an embedding.
+pub fn evaluate(emb: &Embedding, quads: &[AnalogyQuad]) -> AnalogyResult {
+    let unit = emb.normalized();
+    let mut correct = 0usize;
+    let mut used = 0usize;
+    let mut skipped = 0usize;
+    let mut oov = std::collections::HashSet::new();
+    let dim = emb.dim;
+    let mut query = vec![0.0f32; dim];
+    for q in quads {
+        let absent: Vec<u32> = [q.a, q.b, q.c, q.d]
+            .into_iter()
+            .filter(|&w| !emb.is_present(w))
+            .collect();
+        if !absent.is_empty() {
+            oov.extend(absent);
+            skipped += 1;
+            continue;
+        }
+        let (a, b, c) = (unit.row(q.a), unit.row(q.b), unit.row(q.c));
+        for i in 0..dim {
+            query[i] = b[i] - a[i] + c[i];
+        }
+        let top = unit.nearest(&query, 1, &[q.a, q.b, q.c]);
+        used += 1;
+        if top.first().map(|(w, _)| *w) == Some(q.d) {
+            correct += 1;
+        }
+    }
+    AnalogyResult {
+        accuracy: if used > 0 {
+            correct as f64 / used as f64
+        } else {
+            0.0
+        },
+        questions_used: used,
+        questions_skipped: skipped,
+        oov_words: oov.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Embedding with perfect offset structure: word w = base(w%2) + group(w/2).
+    fn offset_embedding() -> Embedding {
+        let mut e = Embedding::zeros(8, 4);
+        for w in 0..8u32 {
+            let group = (w / 2) as usize;
+            let sex = (w % 2) as f32; // the "relation" offset
+            let mut v = [0.0f32; 4];
+            v[group] = 1.0;
+            v[3] += sex * 0.5;
+            e.row_mut(w).copy_from_slice(&v);
+        }
+        e
+    }
+
+    #[test]
+    fn perfect_offsets_score_full_accuracy() {
+        let e = offset_embedding();
+        // 0:1 :: 2:3, 2:3 :: 4:5, etc.
+        let quads = vec![
+            AnalogyQuad { a: 0, b: 1, c: 2, d: 3 },
+            AnalogyQuad { a: 2, b: 3, c: 4, d: 5 },
+            AnalogyQuad { a: 4, b: 5, c: 0, d: 1 },
+        ];
+        let r = evaluate(&e, &quads);
+        assert_eq!(r.questions_used, 3);
+        assert!(r.accuracy > 0.99, "accuracy={}", r.accuracy);
+    }
+
+    #[test]
+    fn skips_questions_with_absent_words() {
+        let mut e = offset_embedding();
+        e.present[3] = false;
+        let quads = vec![
+            AnalogyQuad { a: 0, b: 1, c: 2, d: 3 }, // d absent
+            AnalogyQuad { a: 2, b: 3, c: 4, d: 5 }, // b absent
+            AnalogyQuad { a: 4, b: 5, c: 6, d: 7 }, // fine
+        ];
+        let r = evaluate(&e, &quads);
+        assert_eq!(r.questions_used, 1);
+        assert_eq!(r.questions_skipped, 2);
+        assert_eq!(r.oov_words, 1);
+    }
+
+    #[test]
+    fn excludes_question_words_from_candidates() {
+        // degenerate embedding where c itself would otherwise win
+        let mut e = Embedding::zeros(4, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[1.0, 0.1]);
+        e.row_mut(2).copy_from_slice(&[1.0, 0.05]);
+        e.row_mut(3).copy_from_slice(&[1.0, 0.15]);
+        let quads = vec![AnalogyQuad { a: 0, b: 1, c: 2, d: 3 }];
+        let r = evaluate(&e, &quads);
+        // whatever the winner, it cannot be a/b/c — with d the only other
+        // word, accuracy must be 1
+        assert_eq!(r.accuracy, 1.0);
+    }
+
+    #[test]
+    fn random_embedding_scores_low() {
+        let mut e = Embedding::zeros(50, 8);
+        let mut rng = crate::util::rng::Pcg64::new(9);
+        for w in 0..50u32 {
+            for v in e.row_mut(w) {
+                *v = rng.gen_gauss() as f32;
+            }
+        }
+        let quads: Vec<AnalogyQuad> = (0..40)
+            .map(|i| AnalogyQuad {
+                a: i % 50,
+                b: (i + 11) % 50,
+                c: (i + 23) % 50,
+                d: (i + 37) % 50,
+            })
+            .collect();
+        let r = evaluate(&e, &quads);
+        assert!(r.accuracy < 0.2, "random should be near chance: {}", r.accuracy);
+    }
+}

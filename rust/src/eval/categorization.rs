@@ -1,0 +1,223 @@
+//! Categorization evaluation: cluster the benchmark words' embeddings with
+//! k-means (k = number of gold categories) and score cluster **purity**,
+//! exactly the protocol behind the paper's AP/Battig columns.
+
+use crate::embedding::Embedding;
+use crate::gen::benchmarks::CatItem;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct CatResult {
+    pub purity: f64,
+    pub items_used: usize,
+    pub oov_words: usize,
+}
+
+/// Standard k-means with k-means++-style farthest-first seeding on unit-
+/// normalized vectors (cosine k-means).
+pub fn kmeans(points: &[Vec<f32>], k: usize, seed: u64, iters: usize) -> Vec<usize> {
+    let n = points.len();
+    assert!(k >= 1);
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = points[0].len();
+    let mut rng = Pcg64::new_stream(seed, 0x6B6D); // "km"
+    // unit-normalize input so euclidean kmeans ≈ cosine clustering
+    let unit: Vec<Vec<f32>> = points
+        .iter()
+        .map(|p| {
+            let norm: f32 = p.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-12 {
+                p.iter().map(|x| x / norm).collect()
+            } else {
+                p.clone()
+            }
+        })
+        .collect();
+    let dist2 = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+    };
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centers.push(unit[rng.gen_range_usize(n)].clone());
+    while centers.len() < k.min(n) {
+        let d2: Vec<f32> = unit
+            .iter()
+            .map(|p| {
+                centers
+                    .iter()
+                    .map(|c| dist2(p, c))
+                    .fold(f32::INFINITY, f32::min)
+            })
+            .collect();
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let mut pick = 0;
+        if total > 0.0 {
+            let mut u = rng.gen_f64() * total;
+            for (i, &x) in d2.iter().enumerate() {
+                u -= x as f64;
+                if u <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+        } else {
+            pick = rng.gen_range_usize(n);
+        }
+        centers.push(unit[pick].clone());
+    }
+    while centers.len() < k {
+        centers.push(vec![0.0; d]); // degenerate k > n case
+    }
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for (i, p) in unit.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centers[a])
+                        .partial_cmp(&dist2(p, &centers[b]))
+                        .unwrap()
+                })
+                .unwrap();
+            if best != assign[i] {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![vec![0.0f32; d]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in unit.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for (s, x) in sums[assign[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f32;
+                }
+                centers[c] = sums[c].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    assign
+}
+
+/// Purity: each cluster votes for its majority gold category;
+/// purity = (Σ_cluster majority-count) / N.
+pub fn purity(assign: &[usize], gold: &[usize], k: usize, num_categories: usize) -> f64 {
+    assert_eq!(assign.len(), gold.len());
+    if assign.is_empty() {
+        return 0.0;
+    }
+    let mut table = vec![vec![0usize; num_categories]; k];
+    for (&a, &g) in assign.iter().zip(gold) {
+        table[a][g] += 1;
+    }
+    let correct: usize = table
+        .iter()
+        .map(|row| row.iter().copied().max().unwrap_or(0))
+        .sum();
+    correct as f64 / assign.len() as f64
+}
+
+/// Evaluate a categorization benchmark against an embedding.
+pub fn evaluate(
+    emb: &Embedding,
+    items: &[CatItem],
+    num_categories: usize,
+    seed: u64,
+) -> CatResult {
+    let mut points = Vec::new();
+    let mut gold = Vec::new();
+    let mut oov = std::collections::HashSet::new();
+    for it in items {
+        if emb.is_present(it.word) {
+            points.push(emb.row(it.word).to_vec());
+            gold.push(it.category);
+        } else {
+            oov.insert(it.word);
+        }
+    }
+    let assign = kmeans(&points, num_categories, seed, 50);
+    CatResult {
+        purity: purity(&assign, &gold, num_categories, num_categories),
+        items_used: points.len(),
+        oov_words: oov.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmeans_separates_obvious_clusters() {
+        // two tight blobs on orthogonal axes
+        let mut points = Vec::new();
+        for i in 0..20 {
+            let e = 0.01 * i as f32;
+            points.push(vec![1.0, e]);
+            points.push(vec![e, 1.0]);
+        }
+        let assign = kmeans(&points, 2, 1, 50);
+        // all even indices together, all odd together
+        let a0 = assign[0];
+        for i in (0..40).step_by(2) {
+            assert_eq!(assign[i], a0);
+        }
+        assert_ne!(assign[1], a0);
+    }
+
+    #[test]
+    fn purity_perfect_and_chance() {
+        let assign = vec![0, 0, 1, 1];
+        let gold = vec![1, 1, 0, 0];
+        assert_eq!(purity(&assign, &gold, 2, 2), 1.0); // labels permuted is fine
+        let mixed = vec![0, 1, 0, 1];
+        assert_eq!(purity(&mixed, &gold, 2, 2), 0.5);
+    }
+
+    #[test]
+    fn purity_empty() {
+        assert_eq!(purity(&[], &[], 2, 2), 0.0);
+    }
+
+    #[test]
+    fn evaluate_counts_oov() {
+        let mut e = Embedding::zeros(6, 2);
+        for w in 0..3u32 {
+            e.row_mut(w).copy_from_slice(&[1.0, 0.0]);
+        }
+        for w in 3..6u32 {
+            e.row_mut(w).copy_from_slice(&[0.0, 1.0]);
+        }
+        e.present[5] = false;
+        let items: Vec<CatItem> = (0..6)
+            .map(|w| CatItem {
+                word: w,
+                category: (w / 3) as usize,
+            })
+            .collect();
+        let r = evaluate(&e, &items, 2, 7);
+        assert_eq!(r.items_used, 5);
+        assert_eq!(r.oov_words, 1);
+        assert!(r.purity > 0.99, "purity={}", r.purity);
+    }
+
+    #[test]
+    fn kmeans_handles_k_greater_than_n() {
+        let points = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let assign = kmeans(&points, 5, 3, 10);
+        assert_eq!(assign.len(), 2);
+        for &a in &assign {
+            assert!(a < 5);
+        }
+    }
+}

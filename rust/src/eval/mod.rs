@@ -1,0 +1,6 @@
+//! Evaluation harness: similarity (Spearman ρ), categorization (k-means
+//! purity) and analogy (3CosAdd accuracy) with the paper's OOV accounting.
+pub mod analogy;
+pub mod categorization;
+pub mod report;
+pub mod similarity;

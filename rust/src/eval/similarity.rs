@@ -1,0 +1,150 @@
+//! Word-similarity evaluation: Spearman rank correlation between model
+//! cosines and gold scores, with OOV accounting identical to the paper's
+//! tables (pairs containing an absent word are skipped; the count of
+//! absent benchmark words is reported in parentheses).
+
+use crate::embedding::Embedding;
+use crate::gen::benchmarks::SimPair;
+
+/// Result of one similarity benchmark run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub spearman: f64,
+    pub pairs_used: usize,
+    pub pairs_skipped: usize,
+    pub oov_words: usize,
+}
+
+/// Rank a slice (average ranks for ties), 1-based.
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Pearson correlation.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let (mut cov, mut vx, mut vy) = (0.0, 0.0, 0.0);
+    for (x, y) in xs.iter().zip(ys) {
+        cov += (x - mx) * (y - my);
+        vx += (x - mx).powi(2);
+        vy += (y - my).powi(2);
+    }
+    let denom = (vx * vy).sqrt();
+    if denom < 1e-300 {
+        0.0
+    } else {
+        cov / denom
+    }
+}
+
+/// Spearman ρ = Pearson of the ranks.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    pearson(&ranks(xs), &ranks(ys))
+}
+
+/// Evaluate a similarity benchmark against an embedding.
+pub fn evaluate(emb: &Embedding, pairs: &[SimPair]) -> SimResult {
+    let mut gold = Vec::with_capacity(pairs.len());
+    let mut model = Vec::with_capacity(pairs.len());
+    let mut skipped = 0;
+    let mut oov = std::collections::HashSet::new();
+    for p in pairs {
+        for w in [p.a, p.b] {
+            if !emb.is_present(w) {
+                oov.insert(w);
+            }
+        }
+        match emb.cosine(p.a, p.b) {
+            Some(cos) => {
+                gold.push(p.gold);
+                model.push(cos);
+            }
+            None => skipped += 1,
+        }
+    }
+    SimResult {
+        spearman: spearman(&gold, &model),
+        pairs_used: gold.len(),
+        pairs_skipped: skipped,
+        oov_words: oov.len(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_with_ties() {
+        assert_eq!(ranks(&[10.0, 20.0, 20.0, 30.0]), vec![1.0, 2.5, 2.5, 4.0]);
+        assert_eq!(ranks(&[3.0, 1.0, 2.0]), vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverted() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((spearman(&xs, &[10.0, 20.0, 30.0, 40.0]) - 1.0).abs() < 1e-12);
+        assert!((spearman(&xs, &[4.0, 3.0, 2.0, 1.0]) + 1.0).abs() < 1e-12);
+        // monotone transform leaves spearman at 1
+        assert!((spearman(&xs, &[1.0, 8.0, 27.0, 64.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_of_constant_is_zero() {
+        assert_eq!(spearman(&[1.0, 2.0, 3.0], &[5.0, 5.0, 5.0]), 0.0);
+    }
+
+    #[test]
+    fn evaluate_skips_oov_and_counts() {
+        let mut e = Embedding::zeros(4, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[0.9, 0.1]);
+        e.row_mut(2).copy_from_slice(&[0.0, 1.0]);
+        e.present[3] = false;
+        let pairs = vec![
+            SimPair { a: 0, b: 1, gold: 0.9 },
+            SimPair { a: 0, b: 2, gold: 0.1 },
+            SimPair { a: 0, b: 3, gold: 0.5 }, // skipped: 3 absent
+        ];
+        let r = evaluate(&e, &pairs);
+        assert_eq!(r.pairs_used, 2);
+        assert_eq!(r.pairs_skipped, 1);
+        assert_eq!(r.oov_words, 1);
+        assert!(r.spearman > 0.99); // order matches gold
+    }
+
+    #[test]
+    fn evaluate_detects_anticorrelation() {
+        let mut e = Embedding::zeros(3, 2);
+        e.row_mut(0).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(1).copy_from_slice(&[0.0, 1.0]); // dissimilar to 0
+        e.row_mut(2).copy_from_slice(&[1.0, 0.05]); // similar to 0
+        let pairs = vec![
+            SimPair { a: 0, b: 1, gold: 0.9 }, // gold says similar, model says no
+            SimPair { a: 0, b: 2, gold: 0.1 }, // gold says dissimilar, model says yes
+        ];
+        let r = evaluate(&e, &pairs);
+        assert!(r.spearman < 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! Bounded channels with backpressure metrics.
+//!
+//! The mapper→reducer data path is a set of bounded queues: when a reducer
+//! (training worker) falls behind, its queue fills and the mapper blocks —
+//! that *is* the backpressure mechanism, and these wrappers make it
+//! observable (blocked time, message counts) so the leader can report
+//! whether routing or training is the bottleneck.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Shared counters for one channel.
+#[derive(Default, Debug)]
+pub struct ChannelStats {
+    pub sent: AtomicU64,
+    pub received: AtomicU64,
+    /// nanoseconds senders spent blocked on a full queue
+    pub send_blocked_ns: AtomicU64,
+}
+
+impl ChannelStats {
+    pub fn send_blocked_secs(&self) -> f64 {
+        self.send_blocked_ns.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    pub fn in_flight(&self) -> u64 {
+        self.sent
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.received.load(Ordering::Relaxed))
+    }
+}
+
+pub struct BoundedSender<T> {
+    tx: SyncSender<T>,
+    stats: Arc<ChannelStats>,
+}
+
+impl<T> Clone for BoundedSender<T> {
+    fn clone(&self) -> Self {
+        Self {
+            tx: self.tx.clone(),
+            stats: Arc::clone(&self.stats),
+        }
+    }
+}
+
+pub struct BoundedReceiver<T> {
+    rx: Receiver<T>,
+    stats: Arc<ChannelStats>,
+}
+
+/// Create a bounded channel of the given capacity with shared stats.
+pub fn bounded<T>(capacity: usize) -> (BoundedSender<T>, BoundedReceiver<T>) {
+    let (tx, rx) = sync_channel(capacity);
+    let stats = Arc::new(ChannelStats::default());
+    (
+        BoundedSender {
+            tx,
+            stats: Arc::clone(&stats),
+        },
+        BoundedReceiver { rx, stats },
+    )
+}
+
+impl<T> BoundedSender<T> {
+    /// Blocking send; records time spent blocked when the queue is full.
+    /// Returns Err when the receiver is gone.
+    pub fn send(&self, value: T) -> Result<(), T> {
+        match self.tx.try_send(value) {
+            Ok(()) => {
+                self.stats.sent.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(TrySendError::Disconnected(v)) => Err(v),
+            Err(TrySendError::Full(v)) => {
+                let start = Instant::now();
+                let res = self.tx.send(v).map_err(|e| e.0);
+                self.stats
+                    .send_blocked_ns
+                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                if res.is_ok() {
+                    self.stats.sent.fetch_add(1, Ordering::Relaxed);
+                }
+                res
+            }
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ChannelStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+impl<T> BoundedReceiver<T> {
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let v = self.rx.recv()?;
+        self.stats.received.fetch_add(1, Ordering::Relaxed);
+        Ok(v)
+    }
+
+    /// Drain into an iterator until all senders hang up.
+    pub fn iter(&self) -> impl Iterator<Item = T> + '_ {
+        std::iter::from_fn(move || self.recv().ok())
+    }
+
+    pub fn stats(&self) -> Arc<ChannelStats> {
+        Arc::clone(&self.stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sends_and_receives_in_order() {
+        let (tx, rx) = bounded::<u32>(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        let got: Vec<u32> = (0..4).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert_eq!(rx.stats().sent.load(Ordering::Relaxed), 4);
+        assert_eq!(rx.stats().received.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn blocked_time_is_recorded_under_backpressure() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap();
+        let h = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until the receiver drains
+            tx.stats().send_blocked_secs()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        let blocked = h.join().unwrap();
+        assert!(blocked > 0.010, "blocked={blocked}");
+    }
+
+    #[test]
+    fn send_fails_when_receiver_dropped() {
+        let (tx, rx) = bounded::<u32>(1);
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn iter_drains_until_senders_gone() {
+        let (tx, rx) = bounded::<u32>(8);
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            for i in 0..5 {
+                tx.send(i).unwrap();
+            }
+        });
+        std::thread::spawn(move || {
+            for i in 5..10 {
+                tx2.send(i).unwrap();
+            }
+        });
+        let mut got: Vec<u32> = rx.iter().collect();
+        got.sort_unstable();
+        assert_eq!(got, (0..10).collect::<Vec<_>>());
+        assert_eq!(rx.stats().in_flight(), 0);
+    }
+}

@@ -1,0 +1,289 @@
+//! MapReduce-lite: the distributed-runtime substrate the paper assumes.
+//!
+//! The paper trains on a Hadoop cluster: *mappers* sample/route sentences,
+//! *reducers* train sub-models, one MapReduce round per epoch. This module
+//! reproduces that execution model in-process with OS threads and bounded
+//! channels (see DESIGN.md §3 for why this preserves the paper's claims:
+//! reducers share no parameters, rounds are barriers, routing is stateless).
+//!
+//! Genericity: a [`RoundSource`] yields the input shard for (round, mapper);
+//! a [`Mapper`] emits `(reducer_index, item)` pairs; each [`Reducer`]
+//! consumes its queue. Reducer state lives across rounds — exactly like the
+//! paper's reducers that keep training the same sub-model every epoch.
+
+use super::channel::{bounded, ChannelStats};
+use std::sync::Arc;
+
+/// Supplies the input stream for a given round and mapper shard.
+pub trait RoundSource: Sync {
+    type Item: Send;
+    fn shard(
+        &self,
+        round: usize,
+        shard: usize,
+        num_shards: usize,
+    ) -> Box<dyn Iterator<Item = Self::Item> + '_>;
+}
+
+/// Stateless-per-item mapper: inspects an item and emits zero or more
+/// routed outputs. A fresh mapper is constructed per (round, shard), so
+/// per-epoch re-seeding (the Shuffle divider) is natural.
+pub trait Mapper<In, Out>: Send {
+    fn map(&mut self, item: In, emit: &mut dyn FnMut(usize, Out));
+}
+
+/// Stateful reducer; lives across rounds.
+pub trait Reducer<In>: Send {
+    /// Consume one routed item.
+    fn reduce(&mut self, item: In);
+    /// Called at the round barrier after this reducer's queue drained.
+    fn end_round(&mut self, _round: usize) {}
+}
+
+/// Wall-clock + backpressure accounting for a run.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    pub rounds: usize,
+    pub round_secs: Vec<f64>,
+    pub messages: u64,
+    pub send_blocked_secs: f64,
+}
+
+impl RunStats {
+    pub fn total_secs(&self) -> f64 {
+        self.round_secs.iter().sum()
+    }
+}
+
+/// Execution-shape knobs.
+pub struct MapReduce {
+    pub num_mappers: usize,
+    pub queue_capacity: usize,
+}
+
+impl Default for MapReduce {
+    fn default() -> Self {
+        Self {
+            num_mappers: 2,
+            queue_capacity: 64,
+        }
+    }
+}
+
+impl MapReduce {
+    /// Run `rounds` rounds over `source`, building a fresh mapper per
+    /// (round, shard) via `make_mapper`, routing into `reducers`.
+    pub fn run<S, M, Out, R>(
+        &self,
+        rounds: usize,
+        source: &S,
+        make_mapper: impl Fn(usize, usize) -> M + Sync,
+        reducers: &mut [R],
+    ) -> RunStats
+    where
+        S: RoundSource,
+        M: Mapper<S::Item, Out>,
+        Out: Send,
+        R: Reducer<Out>,
+    {
+        let num_reducers = reducers.len();
+        assert!(num_reducers > 0, "need at least one reducer");
+        let mut stats = RunStats {
+            rounds,
+            ..Default::default()
+        };
+        for round in 0..rounds {
+            let timer = std::time::Instant::now();
+            let mut txs = Vec::with_capacity(num_reducers);
+            let mut rxs = Vec::with_capacity(num_reducers);
+            for _ in 0..num_reducers {
+                let (tx, rx) = bounded::<Out>(self.queue_capacity);
+                txs.push(tx);
+                rxs.push(rx);
+            }
+            let chan_stats: Vec<Arc<ChannelStats>> =
+                txs.iter().map(|t| t.stats()).collect();
+
+            std::thread::scope(|scope| {
+                // reducer threads: drain own queue until mappers hang up
+                for (rdx, (reducer, rx)) in
+                    reducers.iter_mut().zip(rxs.into_iter()).enumerate()
+                {
+                    scope.spawn(move || {
+                        while let Ok(item) = rx.recv() {
+                            reducer.reduce(item);
+                        }
+                        let _ = rdx;
+                    });
+                }
+                // mapper threads: each owns a clone of every sender; when
+                // the last mapper finishes, receivers see disconnect — the
+                // round barrier.
+                for shard in 0..self.num_mappers {
+                    let txs = txs.clone();
+                    let make_mapper = &make_mapper;
+                    let source = &source;
+                    scope.spawn(move || {
+                        let mut mapper = make_mapper(round, shard);
+                        let mut emit = |target: usize, out: Out| {
+                            let _ = txs[target].send(out);
+                        };
+                        for item in source.shard(round, shard, self.num_mappers) {
+                            mapper.map(item, &mut emit);
+                        }
+                    });
+                }
+                drop(txs); // release the scope-held copies
+            });
+
+            for r in reducers.iter_mut() {
+                r.end_round(round);
+            }
+            stats.round_secs.push(timer.elapsed().as_secs_f64());
+            for cs in &chan_stats {
+                stats.messages += cs.sent.load(std::sync::atomic::Ordering::Relaxed);
+                stats.send_blocked_secs += cs.send_blocked_secs();
+            }
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Source: the numbers [0, n), round-independent, sharded contiguously.
+    struct Numbers(usize);
+
+    impl RoundSource for Numbers {
+        type Item = usize;
+        fn shard(
+            &self,
+            _round: usize,
+            shard: usize,
+            num_shards: usize,
+        ) -> Box<dyn Iterator<Item = usize> + '_> {
+            let chunk = self.0.div_ceil(num_shards);
+            let lo = shard * chunk;
+            let hi = ((shard + 1) * chunk).min(self.0);
+            Box::new(lo..hi)
+        }
+    }
+
+    /// Mapper: route each number to (n mod reducers), emitting n*2.
+    struct ModRouter(usize);
+
+    impl Mapper<usize, usize> for ModRouter {
+        fn map(&mut self, item: usize, emit: &mut dyn FnMut(usize, usize)) {
+            emit(item % self.0, item * 2);
+        }
+    }
+
+    #[derive(Default)]
+    struct Summer {
+        sum: u64,
+        rounds_seen: usize,
+        count: u64,
+    }
+
+    impl Reducer<usize> for Summer {
+        fn reduce(&mut self, item: usize) {
+            self.sum += item as u64;
+            self.count += 1;
+        }
+        fn end_round(&mut self, _round: usize) {
+            self.rounds_seen += 1;
+        }
+    }
+
+    #[test]
+    fn routes_every_item_to_the_right_reducer() {
+        let mr = MapReduce {
+            num_mappers: 3,
+            queue_capacity: 8,
+        };
+        let mut reducers = vec![Summer::default(), Summer::default()];
+        let n = 1000;
+        let stats = mr.run(1, &Numbers(n), |_, _| ModRouter(2), &mut reducers);
+        // reducer 0 gets evens*2, reducer 1 odds*2
+        let even_sum: u64 = (0..n as u64).filter(|x| x % 2 == 0).map(|x| x * 2).sum();
+        let odd_sum: u64 = (0..n as u64).filter(|x| x % 2 == 1).map(|x| x * 2).sum();
+        assert_eq!(reducers[0].sum, even_sum);
+        assert_eq!(reducers[1].sum, odd_sum);
+        assert_eq!(stats.messages, n as u64);
+        assert_eq!(stats.round_secs.len(), 1);
+    }
+
+    #[test]
+    fn reducer_state_persists_across_rounds() {
+        let mr = MapReduce::default();
+        let mut reducers = vec![Summer::default()];
+        mr.run(3, &Numbers(10), |_, _| ModRouter(1), &mut reducers);
+        assert_eq!(reducers[0].rounds_seen, 3);
+        assert_eq!(reducers[0].count, 30); // 10 items × 3 rounds
+    }
+
+    #[test]
+    fn round_is_a_barrier() {
+        // A mapper that tags items with the round; the reducer asserts it
+        // never sees round r+1 before end_round(r) ran.
+        struct RoundTag;
+        impl Mapper<usize, (usize, usize)> for RoundTag {
+            fn map(&mut self, item: usize, emit: &mut dyn FnMut(usize, (usize, usize))) {
+                emit(0, (item, item));
+            }
+        }
+        struct TagSource;
+        impl RoundSource for TagSource {
+            type Item = usize;
+            fn shard(
+                &self,
+                round: usize,
+                _s: usize,
+                _n: usize,
+            ) -> Box<dyn Iterator<Item = usize> + '_> {
+                Box::new(std::iter::repeat(round).take(50))
+            }
+        }
+        #[derive(Default)]
+        struct BarrierCheck {
+            current_round: usize,
+            violations: usize,
+        }
+        impl Reducer<(usize, usize)> for BarrierCheck {
+            fn reduce(&mut self, (round, _): (usize, usize)) {
+                if round != self.current_round {
+                    self.violations += 1;
+                }
+            }
+            fn end_round(&mut self, _round: usize) {
+                self.current_round += 1;
+            }
+        }
+        let mr = MapReduce {
+            num_mappers: 4,
+            queue_capacity: 4,
+        };
+        let mut reducers = vec![BarrierCheck::default()];
+        mr.run(4, &TagSource, |round, _| {
+            let _ = round;
+            RoundTag
+        }, &mut reducers);
+        assert_eq!(reducers[0].violations, 0);
+    }
+
+    #[test]
+    fn fan_out_to_many_reducers_under_tiny_queues() {
+        let mr = MapReduce {
+            num_mappers: 2,
+            queue_capacity: 1, // force heavy backpressure
+        };
+        let mut reducers: Vec<Summer> = (0..8).map(|_| Summer::default()).collect();
+        let stats = mr.run(2, &Numbers(400), |_, _| ModRouter(8), &mut reducers);
+        let total: u64 = reducers.iter().map(|r| r.sum).sum();
+        let expected: u64 = (0..400u64).map(|x| x * 2).sum::<u64>() * 2;
+        assert_eq!(total, expected);
+        assert_eq!(stats.messages, 800);
+    }
+}

@@ -1,0 +1,4 @@
+//! Execution substrates: thread pool, bounded channels, MapReduce-lite.
+pub mod channel;
+pub mod mapreduce;
+pub mod pool;

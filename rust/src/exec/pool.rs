@@ -1,0 +1,189 @@
+//! Thread-pool substrate (tokio/rayon are unavailable offline).
+//!
+//! Two primitives cover everything the coordinator needs:
+//! * [`ThreadPool`] — long-lived workers consuming boxed jobs, used for
+//!   background work with `'static` lifetimes.
+//! * [`parallel_for`] / [`parallel_map`] — fork-join over borrowed data via
+//!   `std::thread::scope`, used by the trainers and the merge phase.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size pool of long-lived worker threads.
+pub struct ThreadPool {
+    tx: Sender<Message>,
+    handles: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let handles = (0..workers)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let queued = Arc::clone(&queued);
+                std::thread::spawn(move || loop {
+                    let msg = { rx.lock().unwrap().recv() };
+                    match msg {
+                        Ok(Message::Run(job)) => {
+                            job();
+                            queued.fetch_sub(1, Ordering::Release);
+                        }
+                        Ok(Message::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        Self {
+            tx,
+            handles,
+            queued,
+        }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.queued.fetch_add(1, Ordering::Acquire);
+        self.tx
+            .send(Message::Run(Box::new(f)))
+            .expect("pool receiver alive");
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            std::thread::yield_now();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Message::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Run `f(chunk_index, item_index_range)` over `n` items split into
+/// `workers` contiguous chunks, in parallel, borrowing the environment.
+pub fn parallel_for<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let workers = workers.max(1).min(n.max(1));
+    let chunk = n.div_ceil(workers);
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let lo = w * chunk;
+            let hi = ((w + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(w, lo..hi));
+        }
+    });
+}
+
+/// Parallel map over items; preserves input order in the output.
+pub fn parallel_map<T: Sync, R: Send, F>(items: &[T], workers: usize, f: F) -> Vec<R>
+where
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<R>>> =
+        out.iter_mut().map(Mutex::new).collect();
+    parallel_for(n, workers, |_, range| {
+        for i in range {
+            let r = f(&items[i]);
+            **slots[i].lock().unwrap() = Some(r);
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|r| r.expect("all slots filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool); // must wait for queued jobs' workers to finish current job
+        // all ten may not run (shutdown drains), but no panic/hang allowed
+    }
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 8, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_handles_edge_sizes() {
+        parallel_for(0, 4, |_, _| panic!("no work expected"));
+        let hits = AtomicU64::new(0);
+        parallel_for(1, 16, |_, range| {
+            hits.fetch_add(range.len() as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..500).collect();
+        let out = parallel_map(&items, 7, |x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+}

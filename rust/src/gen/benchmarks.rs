@@ -1,0 +1,347 @@
+//! Gold evaluation benchmarks derived from the planted ground truth —
+//! the substitutes for MEN/RG65/RareWords/WS353 (similarity), AP/Battig
+//! (categorization) and Google/SemEval (analogy). Sizes and difficulty
+//! tiers mirror the paper's Table 1; the evaluation *code paths*
+//! (Spearman ρ, purity, 3CosAdd accuracy, OOV accounting) are identical to
+//! what the real benchmarks would exercise.
+
+use super::corpus::GroundTruth;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum BenchmarkKind {
+    Similarity,
+    Categorization,
+    Analogy,
+}
+
+/// One gold similarity pair: two word ids + ground-truth score.
+#[derive(Clone, Debug)]
+pub struct SimPair {
+    pub a: u32,
+    pub b: u32,
+    pub gold: f64,
+}
+
+/// One analogy question a : b :: c : d (d is the gold answer).
+#[derive(Clone, Debug)]
+pub struct AnalogyQuad {
+    pub a: u32,
+    pub b: u32,
+    pub c: u32,
+    pub d: u32,
+}
+
+/// A categorization item: word id + gold category.
+#[derive(Clone, Debug)]
+pub struct CatItem {
+    pub word: u32,
+    pub category: usize,
+}
+
+#[derive(Clone, Debug)]
+pub enum BenchmarkData {
+    Similarity(Vec<SimPair>),
+    Categorization { items: Vec<CatItem>, num_categories: usize },
+    Analogy(Vec<AnalogyQuad>),
+}
+
+#[derive(Clone, Debug)]
+pub struct Benchmark {
+    pub name: String,
+    pub kind: BenchmarkKind,
+    pub data: BenchmarkData,
+}
+
+impl Benchmark {
+    pub fn unique_words(&self) -> Vec<u32> {
+        let mut ws: Vec<u32> = match &self.data {
+            BenchmarkData::Similarity(pairs) => {
+                pairs.iter().flat_map(|p| [p.a, p.b]).collect()
+            }
+            BenchmarkData::Categorization { items, .. } => {
+                items.iter().map(|i| i.word).collect()
+            }
+            BenchmarkData::Analogy(quads) => {
+                quads.iter().flat_map(|q| [q.a, q.b, q.c, q.d]).collect()
+            }
+        };
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    }
+
+    pub fn len(&self) -> usize {
+        match &self.data {
+            BenchmarkData::Similarity(p) => p.len(),
+            BenchmarkData::Categorization { items, .. } => items.len(),
+            BenchmarkData::Analogy(q) => q.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Frequency tier helpers: word id == frequency rank under Zipf.
+fn tier(vocab: usize, lo_frac: f64, hi_frac: f64) -> std::ops::Range<u32> {
+    let lo = (vocab as f64 * lo_frac) as u32;
+    let hi = (vocab as f64 * hi_frac) as u32;
+    lo..hi.max(lo + 1)
+}
+
+fn gen_sim_pairs(
+    gt: &GroundTruth,
+    rng: &mut Pcg64,
+    n: usize,
+    words: std::ops::Range<u32>,
+) -> Vec<SimPair> {
+    let span = (words.end - words.start) as u64;
+    let mut pairs = Vec::with_capacity(n);
+    for i in 0..n {
+        // mix: 1/3 same-cluster (high sim), 1/3 paired-cluster, 1/3 random
+        let a = words.start + rng.gen_range(span) as u32;
+        let random_b = words.start + rng.gen_range(span) as u32;
+        let b = match i % 3 {
+            0 => {
+                // same-cluster pick, restricted to the frequency tier
+                let members: Vec<u32> = gt
+                    .cluster_members(gt.cluster_of[a as usize])
+                    .into_iter()
+                    .filter(|w| words.contains(w))
+                    .collect();
+                if members.is_empty() {
+                    random_b
+                } else {
+                    members[rng.gen_range_usize(members.len())]
+                }
+            }
+            1 => gt.partner[a as usize].filter(|p| words.contains(p)).unwrap_or(random_b),
+            _ => random_b,
+        };
+        if a == b {
+            continue;
+        }
+        pairs.push(SimPair {
+            a,
+            b,
+            gold: gt.cosine(a, b),
+        });
+    }
+    pairs
+}
+
+/// Build the full 8-benchmark suite mirroring the paper's Table 1.
+///
+/// | here       | paper analogue | role                                |
+/// |------------|----------------|-------------------------------------|
+/// | sim-men    | MEN (3000)     | large similarity, common words      |
+/// | sim-rg65   | RG65 (65)      | tiny similarity set                 |
+/// | sim-rare   | RareWords      | similarity over the Zipf tail       |
+/// | sim-ws353  | WS353 (353)    | medium, mixed frequencies           |
+/// | cat-broad  | AP (21 cls)    | categorization, few categories      |
+/// | cat-fine   | Battig (56 cls)| categorization, many categories     |
+/// | ana-google | Google         | analogy over common words           |
+/// | ana-sem    | SemEval        | analogy incl. rarer words           |
+pub fn build_suite(gt: &GroundTruth, seed: u64) -> Vec<Benchmark> {
+    let v = gt.cfg.vocab;
+    let mut rng = Pcg64::new_stream(seed, 0x6265); // "be"
+    let mut out = Vec::new();
+
+    out.push(Benchmark {
+        name: "sim-men".into(),
+        kind: BenchmarkKind::Similarity,
+        data: BenchmarkData::Similarity(gen_sim_pairs(gt, &mut rng, 600, tier(v, 0.0, 0.5))),
+    });
+    out.push(Benchmark {
+        name: "sim-rg65".into(),
+        kind: BenchmarkKind::Similarity,
+        data: BenchmarkData::Similarity(gen_sim_pairs(gt, &mut rng, 65, tier(v, 0.0, 0.25))),
+    });
+    out.push(Benchmark {
+        name: "sim-rare".into(),
+        kind: BenchmarkKind::Similarity,
+        data: BenchmarkData::Similarity(gen_sim_pairs(gt, &mut rng, 400, tier(v, 0.7, 1.0))),
+    });
+    out.push(Benchmark {
+        name: "sim-ws353".into(),
+        kind: BenchmarkKind::Similarity,
+        data: BenchmarkData::Similarity(gen_sim_pairs(gt, &mut rng, 353, tier(v, 0.0, 0.8))),
+    });
+
+    // categorization: sample words, gold category = coarse/fine cluster id
+    let broad_cats = (gt.cfg.clusters / 2).max(2); // paired clusters merged
+    let mut broad_items = Vec::new();
+    let mut fine_items = Vec::new();
+    for w in tier(v, 0.0, 0.6) {
+        if rng.gen_bool(0.35) {
+            broad_items.push(CatItem {
+                word: w,
+                category: gt.cluster_of[w as usize] / 2,
+            });
+        }
+        if rng.gen_bool(0.5) {
+            fine_items.push(CatItem {
+                word: w,
+                category: gt.cluster_of[w as usize],
+            });
+        }
+    }
+    out.push(Benchmark {
+        name: "cat-broad".into(),
+        kind: BenchmarkKind::Categorization,
+        data: BenchmarkData::Categorization {
+            items: broad_items,
+            num_categories: broad_cats,
+        },
+    });
+    out.push(Benchmark {
+        name: "cat-fine".into(),
+        kind: BenchmarkKind::Categorization,
+        data: BenchmarkData::Categorization {
+            items: fine_items,
+            num_categories: gt.cfg.clusters,
+        },
+    });
+
+    // analogy: a : partner(a) :: c : partner(c) within the same cluster pair
+    let mut quads_common = Vec::new();
+    let mut quads_rare = Vec::new();
+    for _ in 0..4000 {
+        let a = rng.gen_range(v as u64) as u32;
+        let Some(b) = gt.partner[a as usize] else { continue };
+        let members = gt.cluster_members(gt.cluster_of[a as usize]);
+        let c = members[rng.gen_range_usize(members.len())];
+        if c == a {
+            continue;
+        }
+        let Some(d) = gt.partner[c as usize] else { continue };
+        let quad = AnalogyQuad { a, b, c, d };
+        let rare_cut = (v as f64 * 0.6) as u32;
+        if a < rare_cut && c < rare_cut {
+            if quads_common.len() < 500 {
+                quads_common.push(quad);
+            }
+        } else if quads_rare.len() < 300 {
+            quads_rare.push(quad);
+        }
+    }
+    out.push(Benchmark {
+        name: "ana-google".into(),
+        kind: BenchmarkKind::Analogy,
+        data: BenchmarkData::Analogy(quads_common),
+    });
+    out.push(Benchmark {
+        name: "ana-sem".into(),
+        kind: BenchmarkKind::Analogy,
+        data: BenchmarkData::Analogy(quads_rare),
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::corpus::{build_ground_truth, GeneratorConfig};
+
+    fn gt() -> GroundTruth {
+        build_ground_truth(
+            &GeneratorConfig {
+                vocab: 400,
+                clusters: 10,
+                truth_dim: 8,
+                ..Default::default()
+            },
+            77,
+        )
+    }
+
+    #[test]
+    fn suite_has_eight_benchmarks() {
+        let suite = build_suite(&gt(), 1);
+        assert_eq!(suite.len(), 8);
+        let names: Vec<&str> = suite.iter().map(|b| b.name.as_str()).collect();
+        assert!(names.contains(&"sim-rare"));
+        assert!(names.contains(&"ana-google"));
+        for b in &suite {
+            assert!(!b.is_empty(), "{} is empty", b.name);
+        }
+    }
+
+    #[test]
+    fn sim_gold_scores_are_cosines() {
+        let g = gt();
+        let suite = build_suite(&g, 2);
+        let BenchmarkData::Similarity(pairs) = &suite[0].data else {
+            panic!("expected similarity")
+        };
+        for p in pairs.iter().take(50) {
+            assert!((-1.0..=1.0).contains(&p.gold));
+            assert!((p.gold - g.cosine(p.a, p.b)).abs() < 1e-12);
+            assert_ne!(p.a, p.b);
+        }
+    }
+
+    #[test]
+    fn rare_benchmark_uses_tail_words() {
+        let g = gt();
+        let suite = build_suite(&g, 3);
+        let rare = suite.iter().find(|b| b.name == "sim-rare").unwrap();
+        let cut = (g.cfg.vocab as f64 * 0.7) as u32;
+        for w in rare.unique_words() {
+            assert!(w >= cut, "rare benchmark contains common word {w}");
+        }
+    }
+
+    #[test]
+    fn analogy_quads_are_gold_consistent() {
+        let g = gt();
+        let suite = build_suite(&g, 4);
+        let ana = suite.iter().find(|b| b.name == "ana-google").unwrap();
+        let BenchmarkData::Analogy(quads) = &ana.data else { panic!() };
+        for q in quads.iter().take(100) {
+            assert_eq!(g.partner[q.a as usize], Some(q.b));
+            assert_eq!(g.partner[q.c as usize], Some(q.d));
+            assert_eq!(g.cluster_of[q.a as usize], g.cluster_of[q.c as usize]);
+            assert_ne!(q.a, q.c);
+        }
+    }
+
+    #[test]
+    fn categorization_items_match_clusters() {
+        let g = gt();
+        let suite = build_suite(&g, 5);
+        let cat = suite.iter().find(|b| b.name == "cat-fine").unwrap();
+        let BenchmarkData::Categorization { items, num_categories } = &cat.data else {
+            panic!()
+        };
+        assert_eq!(*num_categories, g.cfg.clusters);
+        for it in items.iter().take(100) {
+            assert_eq!(it.category, g.cluster_of[it.word as usize]);
+        }
+    }
+
+    #[test]
+    fn suite_is_deterministic() {
+        let g = gt();
+        let a = build_suite(&g, 6);
+        let b = build_suite(&g, 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.unique_words(), y.unique_words());
+        }
+    }
+
+    #[test]
+    fn unique_words_dedup() {
+        let b = Benchmark {
+            name: "t".into(),
+            kind: BenchmarkKind::Similarity,
+            data: BenchmarkData::Similarity(vec![
+                SimPair { a: 3, b: 1, gold: 0.5 },
+                SimPair { a: 1, b: 3, gold: 0.5 },
+            ]),
+        };
+        assert_eq!(b.unique_words(), vec![1, 3]);
+    }
+}

@@ -1,0 +1,461 @@
+//! Synthetic corpus generator — the substitute for the paper's Wikipedia
+//! (14 GB) and Web (268 GB) corpora (see DESIGN.md §3 Substitutions).
+//!
+//! The generator plants a *ground-truth semantic geometry* and emits a
+//! corpus whose unigram and bigram distributions carry it, which is exactly
+//! the property the paper's Hypothesis 1 (via Levy–Goldberg) relies on:
+//!
+//! * every word `w` has a ground-truth vector `g_w = ĉ(cluster(w)) + δ_w`
+//!   — a cluster center plus a word-specific identity component;
+//! * the unigram distribution is Zipf with configurable exponent (word id
+//!   = frequency rank), matching natural-language marginals;
+//! * sentences are cluster random-walks: consecutive words come from the
+//!   same or a geometrically-close cluster (transition ∝ exp(ĉ_i·ĉ_j/τ)),
+//!   so the bigram distribution encodes cluster geometry;
+//! * within a cluster, word choice is biased by a per-sentence style
+//!   vector against `δ_w`, making the identity component observable from
+//!   co-occurrence too.
+//!
+//! SGNS trained on such a corpus recovers an embedding whose similarity
+//! structure correlates with `g`, which is what the gold benchmarks in
+//! [`super::benchmarks`] score against.
+
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::rng::Pcg64;
+
+/// Parameters of the generative model.
+#[derive(Clone, Debug)]
+pub struct GeneratorConfig {
+    pub vocab: usize,
+    pub clusters: usize,
+    pub truth_dim: usize,
+    pub zipf_exponent: f64,
+    pub avg_sentence_len: usize,
+    /// probability of staying in the current cluster between tokens
+    pub stay_prob: f64,
+    /// temperature of the cluster-transition softmax
+    pub transition_temp: f64,
+    /// scale of the word identity component δ relative to the unit centers
+    pub identity_scale: f64,
+    /// strength of the style-vector bias on within-cluster word choice
+    pub style_strength: f64,
+    /// sentences per document — consecutive sentences share a document
+    /// anchor cluster, and anchors drift across the corpus. This is the
+    /// topical locality of real corpora (Wikipedia articles) that makes
+    /// EqualPartitioning's sequential chunks distributionally skewed
+    /// (Figure 1's whole point). 0 disables document structure.
+    pub doc_sentences: usize,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        Self {
+            vocab: 2000,
+            clusters: 40,
+            truth_dim: 16,
+            zipf_exponent: 1.0,
+            avg_sentence_len: 18,
+            stay_prob: 0.7,
+            transition_temp: 0.5,
+            identity_scale: 0.45,
+            style_strength: 2.0,
+            doc_sentences: 40,
+        }
+    }
+}
+
+/// The planted geometry: everything gold benchmarks need.
+pub struct GroundTruth {
+    pub cfg: GeneratorConfig,
+    /// cluster centers, clusters × truth_dim, unit norm
+    pub centers: Vec<Vec<f64>>,
+    /// word identity components δ_w, vocab × truth_dim
+    pub identity: Vec<Vec<f64>>,
+    /// cluster assignment per word
+    pub cluster_of: Vec<usize>,
+    /// unnormalized Zipf mass per word (word id = rank)
+    pub zipf_mass: Vec<f64>,
+    /// relation partner: analogy pairing word ↔ partner in the paired
+    /// cluster (see `relation_partner`); None when clusters is odd at edges
+    pub partner: Vec<Option<u32>>,
+}
+
+impl GroundTruth {
+    /// The full ground-truth vector g_w = ĉ + δ (not normalized; benchmarks
+    /// use cosine so scale is irrelevant).
+    pub fn vector(&self, w: u32) -> Vec<f64> {
+        let c = &self.centers[self.cluster_of[w as usize]];
+        let d = &self.identity[w as usize];
+        c.iter().zip(d).map(|(a, b)| a + b).collect()
+    }
+
+    pub fn cosine(&self, a: u32, b: u32) -> f64 {
+        let va = self.vector(a);
+        let vb = self.vector(b);
+        let dot: f64 = va.iter().zip(&vb).map(|(x, y)| x * y).sum();
+        let na: f64 = va.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let nb: f64 = vb.iter().map(|x| x * x).sum::<f64>().sqrt();
+        dot / (na * nb).max(1e-12)
+    }
+
+    /// Words of one cluster, ordered by frequency rank.
+    pub fn cluster_members(&self, c: usize) -> Vec<u32> {
+        (0..self.cfg.vocab as u32)
+            .filter(|&w| self.cluster_of[w as usize] == c)
+            .collect()
+    }
+}
+
+/// Build the planted geometry deterministically from a seed.
+pub fn build_ground_truth(cfg: &GeneratorConfig, seed: u64) -> GroundTruth {
+    assert!(cfg.clusters >= 2 && cfg.vocab >= cfg.clusters);
+    let mut rng = Pcg64::new_stream(seed, 0x6774); // "gt"
+    // Unit-norm cluster centers. Paired clusters (2i, 2i+1) are related by
+    // ONE global relation direction: center[2i+1] ∝ center[2i] + 0.6·r.
+    // This makes (a) the planted analogies' offsets globally consistent
+    // (good 3CosAdd structure) and (b) pair-merged categories (cat-broad)
+    // geometrically coherent.
+    let relation: Vec<f64> = {
+        let mut v: Vec<f64> = (0..cfg.truth_dim).map(|_| rng.gen_gauss()).collect();
+        let n = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        v.iter_mut().for_each(|x| *x /= n);
+        v
+    };
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(cfg.clusters);
+    for c in 0..cfg.clusters {
+        let mut v: Vec<f64> = if c % 2 == 1 {
+            centers[c - 1]
+                .iter()
+                .zip(&relation)
+                .map(|(a, r)| a + 0.6 * r)
+                .collect()
+        } else {
+            (0..cfg.truth_dim).map(|_| rng.gen_gauss()).collect()
+        };
+        let n = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+        v.iter_mut().for_each(|x| *x /= n);
+        centers.push(v);
+    }
+    // round-robin cluster assignment: every cluster gets words across the
+    // whole frequency spectrum (so no cluster is all-rare)
+    let cluster_of: Vec<usize> = (0..cfg.vocab).map(|w| w % cfg.clusters).collect();
+    // analogy pairing: cluster 2i ↔ 2i+1; the j-th member of 2i pairs with
+    // the j-th member of 2i+1 and SHARES its identity δ (so the ground
+    // truth offset g_partner − g_w is the same center difference for every
+    // pair of the relation — a planted analogy).
+    let mut identity: Vec<Vec<f64>> = (0..cfg.vocab)
+        .map(|_| {
+            (0..cfg.truth_dim)
+                .map(|_| rng.gen_gauss() * cfg.identity_scale)
+                .collect()
+        })
+        .collect();
+    let mut partner: Vec<Option<u32>> = vec![None; cfg.vocab];
+    let members_of: Vec<Vec<u32>> = (0..cfg.clusters)
+        .map(|c| (0..cfg.vocab as u32).filter(|&w| cluster_of[w as usize] == c).collect())
+        .collect();
+    for pair in 0..cfg.clusters / 2 {
+        let (a, b) = (2 * pair, 2 * pair + 1);
+        let n = members_of[a].len().min(members_of[b].len());
+        for j in 0..n {
+            let wa = members_of[a][j];
+            let wb = members_of[b][j];
+            identity[wb as usize] = identity[wa as usize].clone();
+            partner[wa as usize] = Some(wb);
+            partner[wb as usize] = Some(wa);
+        }
+    }
+    let zipf_mass: Vec<f64> = (0..cfg.vocab)
+        .map(|w| 1.0 / ((w + 1) as f64).powf(cfg.zipf_exponent))
+        .collect();
+    GroundTruth {
+        cfg: cfg.clone(),
+        centers,
+        identity,
+        cluster_of,
+        zipf_mass,
+        partner,
+    }
+}
+
+/// Sampling tables derived from the ground truth.
+struct SamplingTables {
+    /// per-cluster member list + their zipf masses (cdf)
+    members: Vec<Vec<u32>>,
+    member_cdf: Vec<Vec<f64>>,
+    /// cluster transition cdf rows (clusters × clusters)
+    transition_cdf: Vec<Vec<f64>>,
+    /// initial-cluster cdf (by total zipf mass)
+    initial_cdf: Vec<f64>,
+}
+
+fn build_tables(gt: &GroundTruth) -> SamplingTables {
+    let m = gt.cfg.clusters;
+    let members: Vec<Vec<u32>> = (0..m).map(|c| gt.cluster_members(c)).collect();
+    let member_cdf = members
+        .iter()
+        .map(|ws| cdf_of(ws.iter().map(|&w| gt.zipf_mass[w as usize])))
+        .collect();
+    let mut transition_cdf = Vec::with_capacity(m);
+    for i in 0..m {
+        let weights = (0..m).map(|j| {
+            let dot: f64 = gt.centers[i]
+                .iter()
+                .zip(&gt.centers[j])
+                .map(|(a, b)| a * b)
+                .sum();
+            (dot / gt.cfg.transition_temp).exp()
+        });
+        transition_cdf.push(cdf_of(weights));
+    }
+    let initial_cdf = cdf_of(
+        members
+            .iter()
+            .map(|ws| ws.iter().map(|&w| gt.zipf_mass[w as usize]).sum::<f64>()),
+    );
+    SamplingTables {
+        members,
+        member_cdf,
+        transition_cdf,
+        initial_cdf,
+    }
+}
+
+fn cdf_of(weights: impl Iterator<Item = f64>) -> Vec<f64> {
+    let mut cdf: Vec<f64> = weights.collect();
+    let mut acc = 0.0;
+    for w in &mut cdf {
+        acc += *w;
+        *w = acc;
+    }
+    let total = acc.max(1e-300);
+    for w in &mut cdf {
+        *w /= total;
+    }
+    cdf
+}
+
+fn sample_cdf(cdf: &[f64], rng: &mut Pcg64) -> usize {
+    let u = rng.gen_f64();
+    match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        Ok(i) => (i + 1).min(cdf.len() - 1),
+        Err(i) => i.min(cdf.len() - 1),
+    }
+}
+
+/// Generate `n_sentences` sentences from the planted model.
+pub fn generate_corpus(gt: &GroundTruth, n_sentences: usize, seed: u64) -> Corpus {
+    let tables = build_tables(gt);
+    let mut rng = Pcg64::new_stream(seed, 0x636F); // "co"
+    let mut sentences = Vec::with_capacity(n_sentences);
+    let dg = gt.cfg.truth_dim;
+    let mut style = vec![0.0f64; dg];
+    let m = gt.cfg.clusters;
+    for sent_idx in 0..n_sentences {
+        // sentence length: uniform in [avg/2, 3*avg/2]
+        let avg = gt.cfg.avg_sentence_len.max(2);
+        let len = avg / 2 + rng.gen_range_usize(avg + 1).max(1);
+        for s in style.iter_mut() {
+            *s = rng.gen_gauss();
+        }
+        // Document locality: consecutive sentences of one "document" start
+        // their cluster walk at the document's anchor, and anchors sweep
+        // the cluster space across the corpus — sequential chunks are
+        // therefore topically skewed, like contiguous Wikipedia articles.
+        let mut cluster = if gt.cfg.doc_sentences > 0 {
+            let doc = sent_idx / gt.cfg.doc_sentences;
+            let num_docs = n_sentences.div_ceil(gt.cfg.doc_sentences).max(1);
+            ((doc * m) / num_docs + (doc % 3)) % m
+        } else {
+            sample_cdf(&tables.initial_cdf, &mut rng)
+        };
+        let mut sent = Vec::with_capacity(len);
+        for _ in 0..len {
+            if !rng.gen_bool(gt.cfg.stay_prob) {
+                cluster = sample_cdf(&tables.transition_cdf[cluster], &mut rng);
+            }
+            let members = &tables.members[cluster];
+            // style-biased within-cluster choice: rejection-sample against
+            // exp(style·δ) capped via logistic acceptance — cheap and avoids
+            // recomputing a softmax per token.
+            let mut pick = members[sample_cdf(&tables.member_cdf[cluster], &mut rng)];
+            for _ in 0..4 {
+                let dot: f64 = gt.identity[pick as usize]
+                    .iter()
+                    .zip(&style)
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let accept = 1.0 / (1.0 + (-gt.cfg.style_strength * dot).exp());
+                if rng.gen_bool(accept) {
+                    break;
+                }
+                pick = members[sample_cdf(&tables.member_cdf[cluster], &mut rng)];
+            }
+            sent.push(pick);
+        }
+        sentences.push(sent);
+    }
+    Corpus::new(sentences)
+}
+
+/// The matching `Vocab`: word string `w<id>`, counts from the actual corpus.
+pub fn vocab_of(corpus: &Corpus, vocab_size: usize) -> Vocab {
+    let mut counts = vec![0u64; vocab_size];
+    for s in &corpus.sentences {
+        for &t in s {
+            counts[t as usize] += 1;
+        }
+    }
+    // Word ids must stay identical to generator ids (the corpus is already
+    // id-encoded), so build the vocab order-preserving: vocab id i == word
+    // "w<i>" == generator id i. Counts are taken from the actual corpus so
+    // subsampling/negative tables see the realized distribution.
+    let pairs: Vec<(String, u64)> = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| (format!("w{i}"), c.max(1)))
+        .collect();
+    Vocab::from_ordered(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> GeneratorConfig {
+        GeneratorConfig {
+            vocab: 120,
+            clusters: 8,
+            truth_dim: 8,
+            avg_sentence_len: 12,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn ground_truth_is_deterministic() {
+        let cfg = small_cfg();
+        let a = build_ground_truth(&cfg, 9);
+        let b = build_ground_truth(&cfg, 9);
+        assert_eq!(a.cluster_of, b.cluster_of);
+        assert_eq!(a.identity, b.identity);
+        let c = build_ground_truth(&cfg, 10);
+        assert_ne!(a.identity, c.identity);
+    }
+
+    #[test]
+    fn centers_are_unit_norm() {
+        let gt = build_ground_truth(&small_cfg(), 1);
+        for c in &gt.centers {
+            let n: f64 = c.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn partners_share_identity_and_are_symmetric() {
+        let gt = build_ground_truth(&small_cfg(), 2);
+        let mut found = 0;
+        for w in 0..gt.cfg.vocab as u32 {
+            if let Some(p) = gt.partner[w as usize] {
+                assert_eq!(gt.partner[p as usize], Some(w));
+                assert_eq!(gt.identity[w as usize], gt.identity[p as usize]);
+                // partners live in paired clusters (2i, 2i+1)
+                let (cw, cp) = (gt.cluster_of[w as usize], gt.cluster_of[p as usize]);
+                assert_eq!(cw / 2, cp / 2);
+                assert_ne!(cw, cp);
+                found += 1;
+            }
+        }
+        assert!(found > gt.cfg.vocab / 2, "most words should be paired");
+    }
+
+    #[test]
+    fn same_cluster_words_more_similar_on_average() {
+        let gt = build_ground_truth(&small_cfg(), 3);
+        let (mut same, mut cross) = (Vec::new(), Vec::new());
+        for a in 0..60u32 {
+            for b in (a + 1)..60u32 {
+                let cos = gt.cosine(a, b);
+                if gt.cluster_of[a as usize] == gt.cluster_of[b as usize] {
+                    same.push(cos);
+                } else {
+                    cross.push(cos);
+                }
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(avg(&same) > avg(&cross) + 0.2, "same={} cross={}", avg(&same), avg(&cross));
+    }
+
+    #[test]
+    fn corpus_has_requested_shape() {
+        let cfg = small_cfg();
+        let gt = build_ground_truth(&cfg, 4);
+        let corpus = generate_corpus(&gt, 500, 4);
+        assert_eq!(corpus.len(), 500);
+        let avg = corpus.total_tokens() as f64 / 500.0;
+        assert!((avg - cfg.avg_sentence_len as f64).abs() < 3.0, "avg={avg}");
+        for s in &corpus.sentences {
+            assert!(s.iter().all(|&t| (t as usize) < cfg.vocab));
+        }
+    }
+
+    #[test]
+    fn corpus_unigram_is_roughly_zipf() {
+        let cfg = small_cfg();
+        let gt = build_ground_truth(&cfg, 5);
+        let corpus = generate_corpus(&gt, 4000, 5);
+        let mut counts = vec![0u64; cfg.vocab];
+        for s in &corpus.sentences {
+            for &t in s {
+                counts[t as usize] += 1;
+            }
+        }
+        // head words must be much more frequent than tail words
+        let head: u64 = counts[..10].iter().sum();
+        let tail: u64 = counts[cfg.vocab - 10..].iter().sum();
+        assert!(head > tail * 5, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn bigrams_prefer_same_cluster() {
+        let cfg = small_cfg();
+        let gt = build_ground_truth(&cfg, 6);
+        let corpus = generate_corpus(&gt, 2000, 6);
+        let (mut same, mut total) = (0u64, 0u64);
+        for s in &corpus.sentences {
+            for w in s.windows(2) {
+                total += 1;
+                if gt.cluster_of[w[0] as usize] == gt.cluster_of[w[1] as usize] {
+                    same += 1;
+                }
+            }
+        }
+        let frac = same as f64 / total as f64;
+        // random assignment would give 1/clusters = 0.125
+        assert!(frac > 0.4, "same-cluster bigram fraction {frac}");
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        let cfg = small_cfg();
+        let gt = build_ground_truth(&cfg, 7);
+        let a = generate_corpus(&gt, 50, 123);
+        let b = generate_corpus(&gt, 50, 123);
+        let c = generate_corpus(&gt, 50, 124);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn vocab_of_covers_all_words() {
+        let cfg = small_cfg();
+        let gt = build_ground_truth(&cfg, 8);
+        let corpus = generate_corpus(&gt, 300, 8);
+        let v = vocab_of(&corpus, cfg.vocab);
+        assert_eq!(v.len(), cfg.vocab);
+        assert!(v.id("w0").is_some());
+    }
+}

@@ -1,0 +1,5 @@
+//! Synthetic data: planted-geometry corpus generator + gold benchmarks
+//! (the substitution for the paper's Wikipedia/Web corpora and NLP
+//! benchmark suite — see DESIGN.md §3).
+pub mod benchmarks;
+pub mod corpus;

@@ -1,0 +1,37 @@
+//! # dist-w2v
+//!
+//! A reproduction of **“Asynchronous Training of Word Embeddings for Large
+//! Text Corpora”** (Anand, Khosla, Singh, Zab, Zhang — WSDM 2019) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the distributed-training coordinator:
+//!   corpus pipeline, the divide phase (EqualPartitioning / RandomSampling /
+//!   Shuffle), a MapReduce-lite runtime whose reducers train SGNS sub-models
+//!   fully asynchronously, the merge phase (Concat / PCA / ALiR), the
+//!   evaluation harness and the Hogwild / parameter-averaging baselines.
+//! * **Layer 2 (python/compile/model.py)** — the SGNS train step as a JAX
+//!   function over a packed parameter state, AOT-lowered to HLO text.
+//! * **Layer 1 (python/compile/kernels/sgns.py)** — the fused SGNS
+//!   loss+gradient Pallas kernel invoked by Layer 2.
+//!
+//! Python runs only at build time (`make artifacts`); the training hot path
+//! is rust driving PJRT-compiled executables with device-resident
+//! parameters.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for measured reproductions of every table and figure.
+
+pub mod baselines;
+pub mod bench_util;
+pub mod coordinator;
+pub mod eval;
+pub mod embedding;
+pub mod exec;
+pub mod gen;
+pub mod linalg;
+pub mod merge;
+pub mod runtime;
+pub mod sgns;
+pub mod text;
+pub mod util;
+pub mod world;

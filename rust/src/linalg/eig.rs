@@ -1,0 +1,289 @@
+//! Symmetric eigendecomposition via the classical (cyclic) Jacobi method.
+//!
+//! Used by PCA on Gram matrices of size (n·d) — a few hundred to ~2k for
+//! realistic merge configurations. Jacobi is O(n³) per sweep but converges
+//! in a handful of sweeps and is unconditionally stable on symmetric input.
+
+use super::mat::Mat;
+
+pub struct Eig {
+    /// Eigenvalues, descending.
+    pub values: Vec<f64>,
+    /// Column j of `vectors` is the eigenvector for `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix.
+pub fn eig_sym(a: &Mat) -> Eig {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eig_sym needs a square matrix");
+    let mut m = a.clone();
+    let mut v = Mat::identity(n);
+    let eps = 1e-12;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < eps * (1.0 + m.frobenius_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                // A <- Jᵀ A J applied to rows/cols p and q
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&a, &b| diag[b].partial_cmp(&diag[a]).unwrap());
+    let mut values = vec![0.0; n];
+    let mut vectors = Mat::zeros(n, n);
+    for (dst, &src) in order.iter().enumerate() {
+        values[dst] = diag[src];
+        for i in 0..n {
+            vectors[(i, dst)] = v[(i, src)];
+        }
+    }
+    Eig { values, vectors }
+}
+
+/// Top-k eigenpairs of a symmetric PSD matrix by subspace (block power)
+/// iteration with Gram–Schmidt re-orthogonalization.
+///
+/// PCA only needs the leading d components of an (n·d)² Gram matrix, and
+/// full Jacobi is O(m³) per sweep — for the merge phase's m ≈ n·d ≈ 320
+/// this dominated the whole merge (see EXPERIMENTS.md §Perf). Subspace
+/// iteration costs O(m²k) per iteration and converges geometrically with
+/// the eigenvalue gap.
+pub fn eig_sym_topk(a: &Mat, k: usize, seed: u64) -> Eig {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eig_sym_topk needs a square matrix");
+    let k = k.min(n);
+    // small problems: exact Jacobi is already fast and unconditionally robust
+    if n <= 64 || k * 3 >= n {
+        let full = eig_sym(a);
+        let mut vectors = Mat::zeros(n, k);
+        for j in 0..k {
+            for i in 0..n {
+                vectors[(i, j)] = full.vectors[(i, j)];
+            }
+        }
+        return Eig {
+            values: full.values[..k].to_vec(),
+            vectors,
+        };
+    }
+    // oversample the subspace: boundary eigenpairs converge ∝ (λ_p+1/λ_j)^t,
+    // so iterating with a buffer of extra columns sharpens the k-th pair
+    let p = (k + 8).min(n);
+    let mut rng = crate::util::rng::Pcg64::new_stream(seed, 0x6569); // "ei"
+    let mut q = Mat::zeros(n, p);
+    for i in 0..n {
+        for j in 0..p {
+            q[(i, j)] = rng.gen_gauss();
+        }
+    }
+    orthonormalize_cols(&mut q);
+    let mut prev_trace = f64::NEG_INFINITY;
+    for _ in 0..150 {
+        // one matmul per iteration: z = A·Q serves both as the next iterate
+        // and as the Rayleigh-trace source (trace(QᵀAQ) = Σ q_ij·z_ij)
+        let mut z = a.matmul(&q);
+        let mut trace = 0.0;
+        for j in 0..p {
+            for i in 0..n {
+                trace += q[(i, j)] * z[(i, j)];
+            }
+        }
+        let converged = (trace - prev_trace).abs() <= 1e-8 * trace.abs().max(1.0);
+        prev_trace = trace;
+        orthonormalize_cols(&mut z);
+        q = z;
+        if converged {
+            break;
+        }
+    }
+    // Rayleigh–Ritz: project A into the subspace, solve the small problem,
+    // keep the leading k pairs
+    let aq = a.matmul(&q);
+    let small = q.t_matmul(&aq); // p × p
+    let small_eig = eig_sym(&small);
+    let ritz = q.matmul(&small_eig.vectors);
+    let mut vectors = Mat::zeros(n, k);
+    for j in 0..k {
+        for i in 0..n {
+            vectors[(i, j)] = ritz[(i, j)];
+        }
+    }
+    Eig {
+        values: small_eig.values[..k].to_vec(),
+        vectors,
+    }
+}
+
+/// Modified Gram–Schmidt on the columns of Q (in place).
+fn orthonormalize_cols(q: &mut Mat) {
+    let (n, k) = (q.rows(), q.cols());
+    for j in 0..k {
+        for prev in 0..j {
+            let mut dot = 0.0;
+            for i in 0..n {
+                dot += q[(i, j)] * q[(i, prev)];
+            }
+            for i in 0..n {
+                q[(i, j)] -= dot * q[(i, prev)];
+            }
+        }
+        let norm: f64 = (0..n).map(|i| q[(i, j)] * q[(i, j)]).sum::<f64>().sqrt();
+        if norm > 1e-300 {
+            for i in 0..n {
+                q[(i, j)] /= norm;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_symmetric(rng: &mut Pcg64, n: usize) -> Mat {
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.gen_gauss();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let a = Mat::from_rows(&[vec![2.0, 0.0], vec![0.0, 5.0]]);
+        let e = eig_sym(&a);
+        assert!((e.values[0] - 5.0).abs() < 1e-10);
+        assert!((e.values[1] - 2.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eig_reconstructs_and_is_orthogonal() {
+        let mut rng = Pcg64::new(9);
+        for n in [2, 5, 12, 30] {
+            let a = random_symmetric(&mut rng, n);
+            let e = eig_sym(&a);
+            // A V = V Λ
+            let av = a.matmul(&e.vectors);
+            let mut vl = e.vectors.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vl[(i, j)] *= e.values[j];
+                }
+            }
+            assert!(av.max_abs_diff(&vl) < 1e-8, "AV != VΛ at n={n}");
+            // Vᵀ V = I
+            let g = e.vectors.t_matmul(&e.vectors);
+            assert!(g.max_abs_diff(&Mat::identity(n)) < 1e-9);
+            // descending
+            for w in e.values.windows(2) {
+                assert!(w[0] >= w[1] - 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eig_trace_preserved() {
+        let mut rng = Pcg64::new(10);
+        let a = random_symmetric(&mut rng, 8);
+        let e = eig_sym(&a);
+        let tr: f64 = (0..8).map(|i| a[(i, i)]).sum();
+        let sum: f64 = e.values.iter().sum();
+        assert!((tr - sum).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        // [[0,1],[1,0]] has eigenvalues ±1
+        let a = Mat::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let e = eig_sym(&a);
+        assert!((e.values[0] - 1.0).abs() < 1e-10);
+        assert!((e.values[1] + 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn topk_matches_full_jacobi_on_psd() {
+        let mut rng = Pcg64::new(41);
+        // PSD Gram matrix, 200×200 (forces the iterative path)
+        let x = Mat::from_vec(300, 200, (0..60_000).map(|_| rng.gen_gauss()).collect());
+        let g = x.t_matmul(&x);
+        let full = eig_sym(&g);
+        let top = eig_sym_topk(&g, 8, 1);
+        for j in 0..8 {
+            let rel = (top.values[j] - full.values[j]).abs() / full.values[j].abs().max(1.0);
+            assert!(rel < 1e-6, "eigenvalue {j}: {} vs {}", top.values[j], full.values[j]);
+            // eigenvector match up to sign
+            let dot: f64 = (0..200)
+                .map(|i| top.vectors[(i, j)] * full.vectors[(i, j)])
+                .sum();
+            assert!(dot.abs() > 0.999, "eigenvector {j} misaligned: |dot|={}", dot.abs());
+        }
+    }
+
+    #[test]
+    fn topk_small_matrix_falls_back_to_jacobi() {
+        let mut rng = Pcg64::new(42);
+        let a = random_symmetric(&mut rng, 10);
+        let full = eig_sym(&a);
+        let top = eig_sym_topk(&a, 3, 2);
+        for j in 0..3 {
+            assert!((top.values[j] - full.values[j]).abs() < 1e-9);
+        }
+        assert_eq!(top.vectors.cols(), 3);
+    }
+
+    #[test]
+    fn eig_psd_gram_matrix_nonnegative() {
+        let mut rng = Pcg64::new(11);
+        let x = Mat::from_vec(20, 6, (0..120).map(|_| rng.gen_gauss()).collect());
+        let g = x.t_matmul(&x);
+        let e = eig_sym(&g);
+        for v in &e.values {
+            assert!(*v > -1e-9, "PSD matrix produced negative eigenvalue {v}");
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! Dense row-major f64 matrices.
+//!
+//! The merge phase (Concat/PCA/ALiR) does all its math in f64 for numerical
+//! headroom; embeddings are converted from f32 at the merge boundary. The
+//! matmul is cache-blocked with a transposed-B inner kernel — enough to keep
+//! the merge phase a small fraction of training time (Table 4's claim),
+//! without pulling in BLAS.
+
+use std::ops::{Index, IndexMut};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    /// Cache-blocked matmul: C = A · B.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "dim mismatch {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        const BK: usize = 64;
+        // loop order i-kk-k-j over B rows gives sequential access to both
+        // B and C rows — effectively a transpose-free SAXPY kernel.
+        for i in 0..m {
+            let a_row = self.row(i);
+            for kk in (0..k).step_by(BK) {
+                let k_hi = (kk + BK).min(k);
+                let out_row = out.row_mut(i);
+                for kx in kk..k_hi {
+                    let a = a_row[kx];
+                    let b_row = b.row(kx);
+                    // slice-zipped SAXPY lets LLVM autovectorize (no bounds
+                    // checks, no data-dependent branch)
+                    for (o, bv) in out_row[..n].iter_mut().zip(&b_row[..n]) {
+                        *o += a * bv;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// A^T · B without materializing the transpose.
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let (k, m, n) = (self.rows, self.cols, b.cols);
+        let mut out = Mat::zeros(m, n);
+        for kx in 0..k {
+            let a_row = self.row(kx);
+            let b_row = b.row(kx);
+            for i in 0..m {
+                let a = a_row[i];
+                let out_row = out.row_mut(i);
+                for (o, bv) in out_row[..n].iter_mut().zip(&b_row[..n]) {
+                    *o += a * bv;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f64) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Mean of each column.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut means = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (m, v) in means.iter_mut().zip(self.row(i)) {
+                *m += v;
+            }
+        }
+        let inv = 1.0 / self.rows.max(1) as f64;
+        for m in &mut means {
+            *m *= inv;
+        }
+        means
+    }
+
+    /// Subtract a row vector from every row.
+    pub fn center_cols(&mut self, means: &[f64]) {
+        assert_eq!(means.len(), self.cols);
+        for i in 0..self.rows {
+            for (v, m) in self.row_mut(i).iter_mut().zip(means) {
+                *v -= m;
+            }
+        }
+    }
+
+    /// Horizontal concatenation [A | B].
+    pub fn hcat(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + b.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(b.row(i));
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_mat(rng: &mut Pcg64, r: usize, c: usize) -> Mat {
+        Mat::from_vec(r, c, (0..r * c).map(|_| rng.gen_gauss()).collect())
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_rows(&[vec![19.0, 22.0], vec![43.0, 50.0]]));
+    }
+
+    #[test]
+    fn matmul_identity_is_noop() {
+        let mut rng = Pcg64::new(1);
+        let a = random_mat(&mut rng, 7, 7);
+        let i = Mat::identity(7);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+        assert!(i.matmul(&a).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_random() {
+        let mut rng = Pcg64::new(2);
+        let a = random_mat(&mut rng, 13, 70);
+        let b = random_mat(&mut rng, 70, 9);
+        let fast = a.matmul(&b);
+        let mut naive = Mat::zeros(13, 9);
+        for i in 0..13 {
+            for j in 0..9 {
+                let mut s = 0.0;
+                for k in 0..70 {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                naive[(i, j)] = s;
+            }
+        }
+        assert!(fast.max_abs_diff(&naive) < 1e-10);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Pcg64::new(3);
+        let a = random_mat(&mut rng, 40, 6);
+        let b = random_mat(&mut rng, 40, 5);
+        let viat = a.transpose().matmul(&b);
+        let fused = a.t_matmul(&b);
+        assert!(viat.max_abs_diff(&fused) < 1e-10);
+    }
+
+    #[test]
+    fn center_cols_zeroes_means() {
+        let mut rng = Pcg64::new(4);
+        let mut a = random_mat(&mut rng, 50, 4);
+        let means = a.col_means();
+        a.center_cols(&means);
+        for m in a.col_means() {
+            assert!(m.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn hcat_concatenates() {
+        let a = Mat::from_rows(&[vec![1.0], vec![2.0]]);
+        let b = Mat::from_rows(&[vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let c = a.hcat(&b);
+        assert_eq!(c.row(0), &[1.0, 3.0, 4.0]);
+        assert_eq!(c.row(1), &[2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn frobenius_norm_known() {
+        let a = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((a.frobenius_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let a = Mat::from_f32(2, 2, &[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(a.to_f32(), vec![1.0f32, 2.0, 3.0, 4.0]);
+    }
+}

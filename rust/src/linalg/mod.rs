@@ -1,0 +1,6 @@
+//! Self-contained dense linear algebra for the merge phase.
+pub mod eig;
+pub mod mat;
+pub mod pca;
+pub mod procrustes;
+pub mod svd;

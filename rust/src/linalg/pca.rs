@@ -1,0 +1,136 @@
+//! Principal component analysis for the PCA merge strategy.
+//!
+//! The merge input is the concatenated matrix X of shape |V'| × (n·d); the
+//! target dimensionality is d. We never form the |V'|×|V'| Gram — the
+//! covariance XᵀX is (n·d)², a few-hundred-squared, and its
+//! eigendecomposition gives the principal axes directly.
+
+use super::eig;
+use super::mat::Mat;
+
+pub struct Pca {
+    /// Column means used for centering (length = input cols).
+    pub means: Vec<f64>,
+    /// Projection matrix, input_cols × k (columns = principal axes).
+    pub components: Mat,
+    /// Explained variance per component, descending.
+    pub explained: Vec<f64>,
+}
+
+/// Fit a k-component PCA on X (rows = samples) and return the fit.
+///
+/// Perf note (EXPERIMENTS.md §Perf): only the top-k eigenpairs of the
+/// covariance are needed, so large covariances use subspace iteration
+/// (`eig_sym_topk`, O(m²k)/iter) instead of full Jacobi (O(m³)/sweep) —
+/// this took the n=10 merge-phase PCA from ~1.4 s to tens of ms.
+pub fn fit(x: &Mat, k: usize) -> Pca {
+    let k = k.min(x.cols());
+    let mut centered = x.clone();
+    let means = centered.col_means();
+    centered.center_cols(&means);
+    let mut cov = centered.t_matmul(&centered);
+    let denom = (x.rows().max(2) - 1) as f64;
+    cov.scale(1.0 / denom);
+    let e = eig::eig_sym_topk(&cov, k, 0x9CA);
+    let mut components = Mat::zeros(x.cols(), k);
+    for j in 0..k {
+        for i in 0..x.cols() {
+            components[(i, j)] = e.vectors[(i, j)];
+        }
+    }
+    Pca {
+        means,
+        components,
+        explained: e.values[..k].to_vec(),
+    }
+}
+
+impl Pca {
+    /// Project rows of X (centering with the fit's means).
+    pub fn transform(&self, x: &Mat) -> Mat {
+        let mut centered = x.clone();
+        centered.center_cols(&self.means);
+        centered.matmul(&self.components)
+    }
+}
+
+/// Fit + transform in one call: the top-k representation of X.
+pub fn project(x: &Mat, k: usize) -> Mat {
+    fit(x, k).transform(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // points along (1,1) with small orthogonal noise
+        let mut rng = Pcg64::new(21);
+        let mut rows = Vec::new();
+        for _ in 0..300 {
+            let t = rng.gen_gauss() * 10.0;
+            let n = rng.gen_gauss() * 0.1;
+            rows.push(vec![t + n, t - n]);
+        }
+        let x = Mat::from_rows(&rows);
+        let p = fit(&x, 1);
+        let c = (p.components[(0, 0)], p.components[(1, 0)]);
+        let dot = (c.0 + c.1).abs() / (2.0f64).sqrt();
+        assert!(dot > 0.999, "first PC should be ±(1,1)/√2, got {c:?}");
+        assert!(p.explained[0] > 90.0);
+    }
+
+    #[test]
+    fn projection_preserves_pairwise_distances_when_full_rank() {
+        let mut rng = Pcg64::new(22);
+        let x = Mat::from_vec(40, 5, (0..200).map(|_| rng.gen_gauss()).collect());
+        let y = project(&x, 5); // full-dim projection = rotation
+        for i in 0..10 {
+            for j in 0..10 {
+                let dx: f64 = (0..5)
+                    .map(|k| (x[(i, k)] - x[(j, k)]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let dy: f64 = (0..5)
+                    .map(|k| (y[(i, k)] - y[(j, k)]).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                assert!((dx - dy).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn explained_variance_descends_and_sums_to_total() {
+        let mut rng = Pcg64::new(23);
+        let x = Mat::from_vec(100, 6, (0..600).map(|_| rng.gen_gauss()).collect());
+        let p = fit(&x, 6);
+        for w in p.explained.windows(2) {
+            assert!(w[0] >= w[1] - 1e-10);
+        }
+        // total variance = sum of per-column variances
+        let mut centered = x.clone();
+        let means = centered.col_means();
+        centered.center_cols(&means);
+        let total: f64 = (0..6)
+            .map(|j| {
+                (0..100).map(|i| centered[(i, j)].powi(2)).sum::<f64>() / 99.0
+            })
+            .sum();
+        let sum: f64 = p.explained.iter().sum();
+        assert!((total - sum).abs() < 1e-8);
+    }
+
+    #[test]
+    fn transform_uses_fit_means() {
+        let x = Mat::from_rows(&[vec![1.0, 0.0], vec![3.0, 0.0]]);
+        let p = fit(&x, 1);
+        let y = p.transform(&x);
+        // centered values ±1 along the first axis
+        assert!((y[(0, 0)].abs() - 1.0).abs() < 1e-9);
+        assert!((y[(1, 0)].abs() - 1.0).abs() < 1e-9);
+        assert!((y[(0, 0)] + y[(1, 0)]).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,99 @@
+//! Orthogonal Procrustes alignment (Schönemann 1966).
+//!
+//! Given source rows M and target rows Y (same shape), find the orthogonal
+//! W minimizing ‖M·W − Y‖_F: W = U·Vᵀ where M ᵀY = U·Σ·Vᵀ. This is the
+//! inner step of ALiR — each sub-model is rotated into the consensus frame,
+//! and the *same* rotation is then used to reconstruct missing rows.
+
+use super::mat::Mat;
+use super::svd::svd;
+
+/// Solve min_W ‖M·W − Y‖_F s.t. WᵀW = I. M, Y are n×d with n ≥ 1.
+pub fn orthogonal_procrustes(m: &Mat, y: &Mat) -> Mat {
+    assert_eq!(m.rows(), y.rows());
+    assert_eq!(m.cols(), y.cols());
+    let cross = m.t_matmul(y); // d × d
+    let s = svd(&cross);
+    s.u.matmul(&s.v.transpose())
+}
+
+/// Alignment residual ‖M·W − Y‖_F, normalized by sqrt(n·d) (the paper's
+/// displacement-norm convergence metric).
+pub fn alignment_residual(m: &Mat, w: &Mat, y: &Mat) -> f64 {
+    let aligned = m.matmul(w);
+    let diff = aligned.sub(y);
+    diff.frobenius_norm() / ((m.rows() * m.cols()) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_rotation(rng: &mut Pcg64, d: usize) -> Mat {
+        // QR-free: orthogonalize a random matrix via procrustes against I
+        let a = Mat::from_vec(d, d, (0..d * d).map(|_| rng.gen_gauss()).collect());
+        let s = svd(&a);
+        s.u.matmul(&s.v.transpose())
+    }
+
+    fn assert_orthogonal(w: &Mat, tol: f64) {
+        let g = w.t_matmul(w);
+        assert!(g.max_abs_diff(&Mat::identity(w.cols())) < tol);
+    }
+
+    #[test]
+    fn recovers_planted_rotation_exactly() {
+        let mut rng = Pcg64::new(31);
+        for d in [2, 4, 8, 16] {
+            let r = random_rotation(&mut rng, d);
+            let m = Mat::from_vec(50, d, (0..50 * d).map(|_| rng.gen_gauss()).collect());
+            let y = m.matmul(&r);
+            let w = orthogonal_procrustes(&m, &y);
+            assert!(w.max_abs_diff(&r) < 1e-8, "failed at d={d}");
+            assert!(alignment_residual(&m, &w, &y) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn result_is_orthogonal_even_under_noise() {
+        let mut rng = Pcg64::new(32);
+        let d = 6;
+        let r = random_rotation(&mut rng, d);
+        let m = Mat::from_vec(100, d, (0..100 * d).map(|_| rng.gen_gauss()).collect());
+        let mut y = m.matmul(&r);
+        for i in 0..y.rows() {
+            for j in 0..d {
+                y[(i, j)] += 0.05 * rng.gen_gauss();
+            }
+        }
+        let w = orthogonal_procrustes(&m, &y);
+        assert_orthogonal(&w, 1e-9);
+        // still close to the planted rotation
+        assert!(w.max_abs_diff(&r) < 0.1);
+    }
+
+    #[test]
+    fn alignment_beats_identity_for_rotated_data() {
+        let mut rng = Pcg64::new(33);
+        let d = 8;
+        let r = random_rotation(&mut rng, d);
+        let m = Mat::from_vec(64, d, (0..64 * d).map(|_| rng.gen_gauss()).collect());
+        let y = m.matmul(&r);
+        let w = orthogonal_procrustes(&m, &y);
+        let res_aligned = alignment_residual(&m, &w, &y);
+        let res_identity = alignment_residual(&m, &Mat::identity(d), &y);
+        assert!(res_aligned < res_identity * 0.01);
+    }
+
+    #[test]
+    fn sign_flip_case() {
+        // the classic averaging-failure example from the paper §3.3.1:
+        // model 2 is model 1 mirrored; procrustes must recover the mirror
+        let m1 = Mat::from_rows(&[vec![1.0, 1.0], vec![99.0, 0.0], vec![1.0, -1.0]]);
+        let m2 = Mat::from_rows(&[vec![-1.0, 1.0], vec![-99.0, 0.0], vec![-1.0, -1.0]]);
+        let w = orthogonal_procrustes(&m2, &m1);
+        let aligned = m2.matmul(&w);
+        assert!(aligned.max_abs_diff(&m1) < 1e-9);
+    }
+}

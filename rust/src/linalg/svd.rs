@@ -1,0 +1,165 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! Sizes here are small — Procrustes needs the SVD of a d×d cross-
+//! covariance (d = embedding dim, ≤ a few hundred) — so the simple,
+//! numerically robust one-sided Jacobi method (Hestenes) is the right
+//! tool: it orthogonalizes the columns of A by plane rotations, yielding
+//! A·V = U·Σ with machine-precision orthogonality.
+
+use super::mat::Mat;
+
+pub struct Svd {
+    pub u: Mat,     // m × n, orthonormal columns
+    pub sigma: Vec<f64>, // n singular values, descending
+    pub v: Mat,     // n × n orthogonal
+}
+
+/// One-sided Jacobi SVD of an m×n matrix with m ≥ n.
+pub fn svd(a: &Mat) -> Svd {
+    let m = a.rows();
+    let n = a.cols();
+    assert!(m >= n, "svd expects m >= n (got {m}x{n}); pass the transpose");
+    let mut u = a.clone();
+    let mut v = Mat::identity(n);
+    let eps = 1e-13;
+    let max_sweeps = 60;
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p, q) column pair
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                off = off.max(apq.abs() / (app.sqrt() * aqq.sqrt() + 1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[(i, p)];
+                    let uq = u[(i, q)];
+                    u[(i, p)] = c * up - s * uq;
+                    u[(i, q)] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps {
+            break;
+        }
+    }
+    // column norms = singular values; normalize U
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigma = vec![0.0; n];
+    for j in 0..n {
+        let norm: f64 = (0..m).map(|i| u[(i, j)] * u[(i, j)]).sum::<f64>().sqrt();
+        sigma[j] = norm;
+    }
+    order.sort_by(|&a, &b| sigma[b].partial_cmp(&sigma[a]).unwrap());
+    let mut u_sorted = Mat::zeros(m, n);
+    let mut v_sorted = Mat::zeros(n, n);
+    let mut sigma_sorted = vec![0.0; n];
+    for (dst, &src) in order.iter().enumerate() {
+        sigma_sorted[dst] = sigma[src];
+        let inv = if sigma[src] > 1e-300 { 1.0 / sigma[src] } else { 0.0 };
+        for i in 0..m {
+            u_sorted[(i, dst)] = u[(i, src)] * inv;
+        }
+        for i in 0..n {
+            v_sorted[(i, dst)] = v[(i, src)];
+        }
+    }
+    Svd {
+        u: u_sorted,
+        sigma: sigma_sorted,
+        v: v_sorted,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn reconstruct(s: &Svd) -> Mat {
+        let n = s.sigma.len();
+        let mut us = s.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..n {
+                us[(i, j)] *= s.sigma[j];
+            }
+        }
+        us.matmul(&s.v.transpose())
+    }
+
+    fn assert_orthonormal_cols(m: &Mat, tol: f64) {
+        let g = m.t_matmul(m);
+        let eye = Mat::identity(m.cols());
+        assert!(
+            g.max_abs_diff(&eye) < tol,
+            "not orthonormal: err={}",
+            g.max_abs_diff(&eye)
+        );
+    }
+
+    #[test]
+    fn svd_diagonal_matrix() {
+        let a = Mat::from_rows(&[vec![3.0, 0.0], vec![0.0, -2.0], vec![0.0, 0.0]]);
+        let s = svd(&a);
+        assert!((s.sigma[0] - 3.0).abs() < 1e-10);
+        assert!((s.sigma[1] - 2.0).abs() < 1e-10);
+        assert!(reconstruct(&s).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn svd_reconstructs_random_matrices() {
+        let mut rng = Pcg64::new(5);
+        for (m, n) in [(4, 4), (10, 3), (20, 8), (6, 6)] {
+            let a = Mat::from_vec(m, n, (0..m * n).map(|_| rng.gen_gauss()).collect());
+            let s = svd(&a);
+            assert!(
+                reconstruct(&s).max_abs_diff(&a) < 1e-9,
+                "reconstruction failed for {m}x{n}"
+            );
+            assert_orthonormal_cols(&s.u, 1e-9);
+            assert_orthonormal_cols(&s.v, 1e-9);
+            // descending order
+            for w in s.sigma.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-1 matrix: second singular value must be ~0
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]]);
+        let s = svd(&a);
+        assert!(s.sigma[1].abs() < 1e-10);
+        assert!(reconstruct(&s).max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn svd_matches_known_frobenius_identity() {
+        let mut rng = Pcg64::new(6);
+        let a = Mat::from_vec(12, 5, (0..60).map(|_| rng.gen_gauss()).collect());
+        let s = svd(&a);
+        let fro2: f64 = s.sigma.iter().map(|x| x * x).sum();
+        assert!((fro2 - a.frobenius_norm().powi(2)).abs() < 1e-8);
+    }
+}

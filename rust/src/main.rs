@@ -1,0 +1,296 @@
+//! dw2v — the leader binary.
+//!
+//! Subcommands:
+//!   pipeline    full divide → train → merge → eval run (the paper system)
+//!   hogwild     single-node lock-free baseline (paper's comparator)
+//!   mllib       parameter-averaging distributed baseline
+//!   kl          Figure-1 distribution statistics for the dividers
+//!   gen-corpus  generate + persist a synthetic corpus
+//!   artifacts   show the AOT artifact manifest
+//!
+//! Every flag maps to a key of `ExperimentConfig`; `--config file.json`
+//! loads a base config that individual flags then override.
+
+use dw2v::coordinator::divider::Divider;
+use dw2v::coordinator::leader;
+use dw2v::coordinator::stats::{bigram_kl, unigram_kl, vocab_coverage, DistStats};
+use dw2v::eval::report::{self, evaluate_suite};
+use dw2v::runtime::artifacts::Manifest;
+use dw2v::runtime::client::Runtime;
+use dw2v::sgns::hogwild;
+use dw2v::util::cli::Command;
+use dw2v::util::config::ExperimentConfig;
+use dw2v::util::logging::{self, Timer};
+use dw2v::world::build_world;
+
+fn main() {
+    logging::level_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("pipeline") => cmd_pipeline(&argv[1..]),
+        Some("hogwild") => cmd_hogwild(&argv[1..]),
+        Some("mllib") => cmd_mllib(&argv[1..]),
+        Some("kl") => cmd_kl(&argv[1..]),
+        Some("gen-corpus") => cmd_gen_corpus(&argv[1..]),
+        Some("artifacts") => cmd_artifacts(&argv[1..]),
+        Some("--help") | Some("-h") | None => {
+            eprintln!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => Err(format!("unknown subcommand '{other}'\n\n{USAGE}")),
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("{e}");
+        1
+    });
+    std::process::exit(code);
+}
+
+const USAGE: &str = "dw2v — asynchronous word-embedding training (WSDM'19 reproduction)
+
+subcommands:
+  pipeline     divide -> train -> merge -> eval (the paper's system)
+  hogwild      single-node lock-free baseline
+  mllib        parameter-averaging distributed baseline
+  kl           figure-1 KL-divergence statistics for the dividers
+  gen-corpus   generate + persist a synthetic corpus
+  artifacts    show the AOT artifact manifest
+
+run `dw2v <subcommand> --help` for flags.";
+
+/// Flags shared by every experiment-driving subcommand.
+fn experiment_command(name: &str, about: &str) -> Command {
+    Command::new(name, about)
+        .flag("config", None, "JSON config file to start from")
+        .flag("set", None, "comma-separated key=value config overrides")
+        .flag("seed", None, "root RNG seed")
+        .flag("sentences", None, "synthetic corpus size")
+        .flag("vocab", None, "vocabulary size")
+        .flag("dim", None, "embedding dimensionality")
+        .flag("epochs", None, "training epochs")
+        .flag("strategy", None, "divider: equal | random | shuffle")
+        .flag("rate", None, "sampling rate r% (submodels = 100/r)")
+        .flag("merge", None, "merge: concat | pca | alir_rand | alir_pca | single")
+        .flag("mappers", None, "mapper threads")
+        .flag("artifact-dir", None, "AOT artifact directory")
+}
+
+fn parse_experiment(args: &dw2v::util::cli::Args) -> Result<ExperimentConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::load(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(sets) = args.get("set") {
+        for kv in sets.split(',') {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("--set expects key=value, got '{kv}'"))?;
+            cfg.apply(k.trim(), v.trim())?;
+        }
+    }
+    for (flag, key) in [
+        ("seed", "seed"),
+        ("sentences", "sentences"),
+        ("vocab", "vocab"),
+        ("dim", "dim"),
+        ("epochs", "epochs"),
+        ("strategy", "strategy"),
+        ("rate", "rate_percent"),
+        ("merge", "merge"),
+        ("mappers", "mappers"),
+        ("artifact-dir", "artifact_dir"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.apply(key, v)?;
+        }
+    }
+    Ok(cfg)
+}
+
+fn cmd_pipeline(argv: &[String]) -> Result<(), String> {
+    let cmd = experiment_command("pipeline", "full divide → train → merge → eval run");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+
+    let t_setup = Timer::start("setup");
+    let world = build_world(&cfg);
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
+    let artifact = manifest.resolve(world.vocab.len(), cfg.dim)?;
+    let rt = Runtime::load(artifact)?;
+    println!(
+        "setup: corpus {} sentences / {} tokens, vocab {}, artifact {} ({:.1}s)",
+        world.corpus.len(),
+        world.corpus.total_tokens(),
+        world.vocab.len(),
+        artifact.name,
+        t_setup.stop_quiet()
+    );
+
+    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)?;
+    println!(
+        "train {:.2}s ({} pairs, {} dispatches) | merge {:.2}s | eval {:.2}s",
+        rep.train.train_secs, rep.train.pairs, rep.train.dispatches, rep.merge_secs, rep.eval_secs
+    );
+    println!("merged vocab: {} / {}", rep.merged_vocab, world.vocab.len());
+    for (s, losses) in rep.train.epoch_loss.iter().enumerate().take(4) {
+        let fmt: Vec<String> = losses.iter().map(|l| format!("{l:.4}")).collect();
+        println!("submodel {s} epoch losses: [{}]", fmt.join(", "));
+    }
+    println!("\n{}", report::format_header(&rep.scores));
+    println!(
+        "{}",
+        report::format_row(
+            &format!(
+                "{} {}% + {}",
+                cfg.strategy.name(),
+                cfg.rate_percent,
+                cfg.merge.name()
+            ),
+            &rep.scores
+        )
+    );
+    Ok(())
+}
+
+fn cmd_hogwild(argv: &[String]) -> Result<(), String> {
+    let cmd = experiment_command("hogwild", "single-node lock-free baseline")
+        .flag("threads", Some("4"), "hogwild threads");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let threads = args
+        .get_usize("threads")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(4);
+    let world = build_world(&cfg);
+    let scfg = leader::sgns_config(&cfg);
+    let (emb, stats) = hogwild::train(&world.corpus, &world.vocab, &scfg, threads, cfg.seed);
+    println!(
+        "hogwild: {:.2}s, {} pairs, final-epoch loss {:.4}",
+        stats.seconds, stats.pairs, stats.final_epoch_loss
+    );
+    let scores = evaluate_suite(&emb, &world.suite, cfg.seed);
+    println!("\n{}", report::format_header(&scores));
+    println!("{}", report::format_row("Hogwild", &scores));
+    Ok(())
+}
+
+fn cmd_mllib(argv: &[String]) -> Result<(), String> {
+    let cmd = experiment_command("mllib", "parameter-averaging distributed baseline")
+        .flag("executors", Some("10"), "synchronized executors");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let executors = args
+        .get_usize("executors")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(10);
+    let world = build_world(&cfg);
+    let scfg = leader::sgns_config(&cfg);
+    let (emb, stats) =
+        dw2v::baselines::param_avg::train(&world.corpus, &world.vocab, &scfg, executors, cfg.seed);
+    println!(
+        "mllib-style: {:.2}s, {} pairs, {} sync rounds",
+        stats.seconds, stats.pairs, stats.sync_rounds
+    );
+    let scores = evaluate_suite(&emb, &world.suite, cfg.seed);
+    println!("\n{}", report::format_header(&scores));
+    println!(
+        "{}",
+        report::format_row(&format!("MLlib, {executors} executors"), &scores)
+    );
+    Ok(())
+}
+
+fn cmd_kl(argv: &[String]) -> Result<(), String> {
+    let cmd = experiment_command("kl", "figure-1 KL statistics (divider quality)")
+        .flag("samples", Some("10"), "sub-corpora to average over");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let samples = args
+        .get_usize("samples")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(10);
+    let world = build_world(&cfg);
+    let corpus = &world.corpus;
+    let full = DistStats::from_corpus(corpus);
+    println!("strategy       unigram-KL   bigram-KL   union-cov  inter-cov");
+    for strategy in [
+        dw2v::util::config::DivideStrategy::EqualPartitioning,
+        dw2v::util::config::DivideStrategy::RandomSampling,
+        dw2v::util::config::DivideStrategy::Shuffle,
+    ] {
+        let divider = Divider::new(strategy.clone(), cfg.rate_percent, cfg.seed, corpus.len());
+        let take = samples.min(divider.num_submodels);
+        let mut subs = Vec::new();
+        let mut buf = Vec::new();
+        for s in 0..take {
+            let mut st = DistStats::default();
+            for (i, sent) in corpus.sentences.iter().enumerate() {
+                divider.targets(0, i, &mut buf);
+                if buf.contains(&s) {
+                    st.add_sentence(sent);
+                }
+            }
+            subs.push(st);
+        }
+        let ukl: f64 = subs.iter().map(|s| unigram_kl(s, &full)).sum::<f64>() / take as f64;
+        let bkl: f64 = subs.iter().map(|s| bigram_kl(s, &full)).sum::<f64>() / take as f64;
+        let (union, inter) = vocab_coverage(&subs, &full);
+        println!(
+            "{:<14} {ukl:>10.4} {bkl:>11.4} {union:>10.3} {inter:>10.3}",
+            strategy.name()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen_corpus(argv: &[String]) -> Result<(), String> {
+    let cmd = experiment_command("gen-corpus", "generate + persist a synthetic corpus")
+        .flag("out", Some("corpus_out"), "output directory")
+        .flag("shards", Some("4"), "number of shard files");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let out = args.get_str("out", "corpus_out");
+    let shards = args
+        .get_usize("shards")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(4);
+    let world = build_world(&cfg);
+    let dir = std::path::Path::new(&out);
+    world
+        .corpus
+        .write_sharded(dir, shards)
+        .map_err(|e| format!("write corpus: {e}"))?;
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).map_err(|e| e.to_string())?;
+    println!(
+        "wrote {} sentences / {} tokens in {shards} shards + vocab.tsv to {out}",
+        world.corpus.len(),
+        world.corpus.total_tokens()
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("artifacts", "show the AOT artifact manifest")
+        .flag("artifact-dir", Some("artifacts"), "artifact directory");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let dir = args.get_str("artifact-dir", "artifacts");
+    let manifest = Manifest::load(std::path::Path::new(&dir))?;
+    println!(
+        "{:<28} {:>8} {:>6} {:>6} {:>4} {:>6} {:>12}",
+        "name", "vocab", "dim", "batch", "k", "steps", "vmem/block"
+    );
+    for c in &manifest.configs {
+        println!(
+            "{:<28} {:>8} {:>6} {:>6} {:>4} {:>6} {:>10}KB",
+            c.name,
+            c.vocab,
+            c.dim,
+            c.batch,
+            c.negatives,
+            c.steps,
+            c.vmem_block_bytes / 1024
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Vocabulary bookkeeping for the merge phase.
+//!
+//! Sub-models live in a shared global id space with per-word presence
+//! masks; merging needs the *intersection* vocabulary (Concat/PCA operate
+//! there) and the *union* vocabulary (ALiR reconstructs everything in it).
+
+use crate::embedding::Embedding;
+use crate::linalg::mat::Mat;
+
+/// Word ids present in every sub-model.
+pub fn intersection_vocab(models: &[Embedding]) -> Vec<u32> {
+    if models.is_empty() {
+        return Vec::new();
+    }
+    (0..models[0].vocab as u32)
+        .filter(|&w| models.iter().all(|m| m.is_present(w)))
+        .collect()
+}
+
+/// Word ids present in at least one sub-model.
+pub fn union_vocab(models: &[Embedding]) -> Vec<u32> {
+    if models.is_empty() {
+        return Vec::new();
+    }
+    (0..models[0].vocab as u32)
+        .filter(|&w| models.iter().any(|m| m.is_present(w)))
+        .collect()
+}
+
+/// Extract rows `words` of a sub-model as an f64 matrix (absent rows are
+/// the caller's responsibility — use `present_positions` to avoid them).
+pub fn extract_rows(model: &Embedding, words: &[u32]) -> Mat {
+    let mut out = Mat::zeros(words.len(), model.dim);
+    for (i, &w) in words.iter().enumerate() {
+        for (j, &v) in model.row(w).iter().enumerate() {
+            out[(i, j)] = v as f64;
+        }
+    }
+    out
+}
+
+/// Positions (into `words`) whose word is present in `model`.
+pub fn present_positions(model: &Embedding, words: &[u32]) -> Vec<usize> {
+    words
+        .iter()
+        .enumerate()
+        .filter(|(_, &w)| model.is_present(w))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Gather a row subset of a matrix.
+pub fn gather_rows(m: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(rows.len(), m.cols());
+    for (i, &r) in rows.iter().enumerate() {
+        out.row_mut(i).copy_from_slice(m.row(r));
+    }
+    out
+}
+
+/// Build the final `Embedding` over the full global vocab from a matrix
+/// whose rows correspond to `words` (everything else marked absent).
+pub fn embedding_from_rows(vocab: usize, words: &[u32], rows: &Mat) -> Embedding {
+    assert_eq!(words.len(), rows.rows());
+    let dim = rows.cols();
+    let mut out = Embedding {
+        vocab,
+        dim,
+        data: vec![0.0; vocab * dim],
+        present: vec![false; vocab],
+    };
+    for (i, &w) in words.iter().enumerate() {
+        out.present[w as usize] = true;
+        for (j, v) in rows.row(i).iter().enumerate() {
+            out.row_mut(w)[j] = *v as f32;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(present: &[bool]) -> Embedding {
+        let v = present.len();
+        let mut e = Embedding::zeros(v, 2);
+        e.present = present.to_vec();
+        for w in 0..v as u32 {
+            let val = w as f32 + 1.0;
+            e.row_mut(w).copy_from_slice(&[val, -val]);
+        }
+        e
+    }
+
+    #[test]
+    fn intersection_and_union() {
+        let m1 = model(&[true, true, false, true]);
+        let m2 = model(&[true, false, true, true]);
+        assert_eq!(intersection_vocab(&[m1.clone(), m2.clone()]), vec![0, 3]);
+        assert_eq!(union_vocab(&[m1, m2]), vec![0, 1, 2, 3]);
+        assert!(intersection_vocab(&[]).is_empty());
+    }
+
+    #[test]
+    fn extract_and_rebuild_roundtrip() {
+        let m = model(&[true, true, true]);
+        let words = vec![0u32, 2];
+        let mat = extract_rows(&m, &words);
+        assert_eq!(mat[(1, 0)], 3.0);
+        let back = embedding_from_rows(3, &words, &mat);
+        assert!(back.is_present(0));
+        assert!(!back.is_present(1));
+        assert_eq!(back.row(2), &[3.0f32, -3.0]);
+    }
+
+    #[test]
+    fn present_positions_filter() {
+        let m = model(&[true, false, true, false]);
+        let words = vec![0u32, 1, 2, 3];
+        assert_eq!(present_positions(&m, &words), vec![0, 2]);
+    }
+
+    #[test]
+    fn gather_rows_subset() {
+        let m = Mat::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let g = gather_rows(&m, &[2, 0]);
+        assert_eq!(g.row(0), &[3.0]);
+        assert_eq!(g.row(1), &[1.0]);
+    }
+}

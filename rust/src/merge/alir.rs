@@ -1,0 +1,312 @@
+//! ALiR — Alternating Linear Regression (the paper's merge contribution).
+//!
+//! A Generalized-Procrustes-style iteration over the **union** vocabulary
+//! that tolerates missing rows (paper §3.3.2):
+//!
+//! 1. *Estimate translation*: for each sub-model `M_i`, align its present
+//!    rows to the consensus: `W_i = argmin ‖M_i' W − Y'‖` (orthogonal
+//!    Procrustes).
+//! 2. *Estimate missing values*: reconstruct `M_i* = Y* W_iᵀ` — valid
+//!    because `W_i` is orthogonal, so `Y = M W ⇒ M = Y Wᵀ`.
+//! 3. *Update joint embedding*: `Y ← mean_i (M_i W_i)`. A reconstructed
+//!    row contributes `Y* W_iᵀ W_i = Y*`, i.e. exactly the current
+//!    consensus, so the update equals the mean over models where the word
+//!    is *actually present* — which is how we compute it.
+//!
+//! Convergence is declared when the change in the average normalized
+//! Frobenius displacement `(1/n) Σ ‖Y − M_i W_i‖_F / √(|V|·d)` falls below
+//! `tol`, or after `max_rounds` (the paper uses 3 epochs).
+
+use super::align::{embedding_from_rows, extract_rows, gather_rows, present_positions, union_vocab};
+use super::pca_merge;
+use crate::embedding::Embedding;
+use crate::linalg::mat::Mat;
+use crate::linalg::procrustes::orthogonal_procrustes;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub enum AlirInit {
+    Random,
+    Pca,
+}
+
+#[derive(Clone, Debug)]
+pub struct AlirOptions {
+    pub init: AlirInit,
+    pub max_rounds: usize,
+    pub tol: f64,
+}
+
+impl Default for AlirOptions {
+    fn default() -> Self {
+        Self {
+            init: AlirInit::Pca,
+            max_rounds: 3,
+            tol: 1e-4,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct AlirReport {
+    pub rounds: usize,
+    /// avg normalized displacement after each round
+    pub displacement: Vec<f64>,
+}
+
+/// Run ALiR over the union vocabulary of `models`. The output embedding has
+/// dimension d (same as the inputs) and presence = union.
+pub fn merge(models: &[Embedding], opts: &AlirOptions, seed: u64) -> (Embedding, AlirReport) {
+    assert!(!models.is_empty(), "no sub-models to merge");
+    let vocab = models[0].vocab;
+    let d = models[0].dim;
+    let union: Vec<u32> = union_vocab(models);
+    let nu = union.len();
+    assert!(nu > 0, "union vocabulary is empty");
+
+    // per-model: positions into `union` that the model actually has, and
+    // the extracted present-row matrices
+    let positions: Vec<Vec<usize>> = models
+        .iter()
+        .map(|m| present_positions(m, &union))
+        .collect();
+    let rows: Vec<Mat> = models
+        .iter()
+        .zip(&positions)
+        .map(|(m, pos)| {
+            let words: Vec<u32> = pos.iter().map(|&p| union[p]).collect();
+            extract_rows(m, &words)
+        })
+        .collect();
+
+    // ---- initialization ---------------------------------------------------
+    let mut y = match opts.init {
+        AlirInit::Random => {
+            let mut rng = Pcg64::new_stream(seed, 0x616C); // "al"
+            let mut y = Mat::zeros(nu, d);
+            // scale matches word2vec init so the first Procrustes is sane
+            for i in 0..nu {
+                for j in 0..d {
+                    y[(i, j)] = rng.gen_gauss() / d as f64;
+                }
+            }
+            y
+        }
+        AlirInit::Pca => {
+            // PCA over the concatenated intersection rows gives consensus
+            // coordinates for the words every model has; the rest start at
+            // the mean of whatever models do have them (coarse but fine —
+            // one ALiR round re-estimates them through the rotations).
+            let (pca_emb, _) = pca_merge::merge(models, d);
+            let mut y = Mat::zeros(nu, d);
+            let mut rng = Pcg64::new_stream(seed, 0x616C);
+            for (i, &w) in union.iter().enumerate() {
+                if pca_emb.is_present(w) {
+                    for (j, &v) in pca_emb.row(w).iter().enumerate() {
+                        y[(i, j)] = v as f64;
+                    }
+                } else {
+                    for j in 0..d {
+                        y[(i, j)] = rng.gen_gauss() / d as f64;
+                    }
+                }
+            }
+            y
+        }
+    };
+
+    // ---- alternate ---------------------------------------------------------
+    let n = models.len();
+    let norm = ((nu * d) as f64).sqrt();
+    let mut report = AlirReport {
+        rounds: 0,
+        displacement: Vec::new(),
+    };
+    let mut prev_disp = f64::INFINITY;
+    for _round in 0..opts.max_rounds {
+        let mut sum = Mat::zeros(nu, d);
+        let mut count = vec![0.0f64; nu];
+        let mut disp = 0.0;
+        for i in 0..n {
+            let y_present = gather_rows(&y, &positions[i]);
+            // (1) translation
+            let w_i = orthogonal_procrustes(&rows[i], &y_present);
+            // displacement over present rows
+            let aligned = rows[i].matmul(&w_i);
+            disp += aligned.sub(&y_present).frobenius_norm() / norm;
+            // (3) mean update contribution (present rows only — see module
+            // docs for why reconstructed rows are a no-op in the mean)
+            for (local, &pos) in positions[i].iter().enumerate() {
+                count[pos] += 1.0;
+                for j in 0..d {
+                    sum[(pos, j)] += aligned[(local, j)];
+                }
+            }
+        }
+        for p in 0..nu {
+            if count[p] > 0.0 {
+                for j in 0..d {
+                    y[(p, j)] = sum[(p, j)] / count[p];
+                }
+            }
+            // count == 0 cannot happen: union vocabulary
+        }
+        disp /= n as f64;
+        report.rounds += 1;
+        report.displacement.push(disp);
+        if (prev_disp - disp).abs() < opts.tol {
+            break;
+        }
+        prev_disp = disp;
+    }
+
+    (embedding_from_rows(vocab, &union, &y), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build `n` sub-models that are random rotations (+noise) of one
+    /// ground-truth matrix, with optional missing words.
+    fn rotated_models(
+        n: usize,
+        vocab: usize,
+        d: usize,
+        noise: f64,
+        missing: &[(usize, Vec<u32>)],
+        seed: u64,
+    ) -> (Mat, Vec<Embedding>) {
+        let mut rng = Pcg64::new(seed);
+        let truth = Mat::from_vec(
+            vocab,
+            d,
+            (0..vocab * d).map(|_| rng.gen_gauss()).collect(),
+        );
+        let models = (0..n)
+            .map(|i| {
+                // random rotation via procrustes of random matrix onto identity
+                let a = Mat::from_vec(d, d, (0..d * d).map(|_| rng.gen_gauss()).collect());
+                let s = crate::linalg::svd::svd(&a);
+                let rot = s.u.matmul(&s.v.transpose());
+                let mut m = truth.matmul(&rot);
+                for r in 0..vocab {
+                    for c in 0..d {
+                        m[(r, c)] += noise * rng.gen_gauss();
+                    }
+                }
+                let mut e = Embedding::from_rows(vocab, d, m.to_f32());
+                if let Some((_, words)) = missing.iter().find(|(mi, _)| *mi == i) {
+                    for &w in words {
+                        e.present[w as usize] = false;
+                        e.row_mut(w).fill(0.0);
+                    }
+                }
+                e
+            })
+            .collect();
+        (truth, models)
+    }
+
+    fn consensus_vs_truth_correlation(y: &Embedding, truth: &Mat, words: &[u32]) -> f64 {
+        // compare cosine-similarity structure: corr of pairwise sims
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for (ai, &a) in words.iter().enumerate() {
+            for &b in &words[ai + 1..] {
+                let (ta, tb) = (truth.row(a as usize), truth.row(b as usize));
+                let dot: f64 = ta.iter().zip(tb).map(|(x, y)| x * y).sum();
+                let na: f64 = ta.iter().map(|x| x * x).sum::<f64>().sqrt();
+                let nb: f64 = tb.iter().map(|x| x * x).sum::<f64>().sqrt();
+                xs.push(dot / (na * nb));
+                ys.push(y.cosine(a, b).unwrap());
+            }
+        }
+        correlation(&xs, &ys)
+    }
+
+    fn correlation(xs: &[f64], ys: &[f64]) -> f64 {
+        let n = xs.len() as f64;
+        let mx = xs.iter().sum::<f64>() / n;
+        let my = ys.iter().sum::<f64>() / n;
+        let (mut cov, mut vx, mut vy) = (0.0, 0.0, 0.0);
+        for (x, y) in xs.iter().zip(ys) {
+            cov += (x - mx) * (y - my);
+            vx += (x - mx) * (x - mx);
+            vy += (y - my) * (y - my);
+        }
+        cov / (vx.sqrt() * vy.sqrt()).max(1e-12)
+    }
+
+    #[test]
+    fn recovers_consensus_from_rotated_copies() {
+        let (truth, models) = rotated_models(4, 30, 6, 0.01, &[], 1);
+        let (merged, report) = merge(&models, &AlirOptions::default(), 1);
+        assert_eq!(merged.present_count(), 30);
+        let words: Vec<u32> = (0..30).collect();
+        let corr = consensus_vs_truth_correlation(&merged, &truth, &words);
+        assert!(corr > 0.99, "corr={corr}");
+        assert!(report.rounds >= 1);
+    }
+
+    #[test]
+    fn reconstructs_missing_words() {
+        // word 3 missing from model 0, word 7 from model 1
+        let missing = vec![(0usize, vec![3u32]), (1usize, vec![7u32])];
+        let (truth, models) = rotated_models(4, 30, 6, 0.01, &missing, 2);
+        let (merged, _) = merge(&models, &AlirOptions::default(), 2);
+        // union covers everything
+        assert_eq!(merged.present_count(), 30);
+        let words: Vec<u32> = (0..30).collect();
+        let corr = consensus_vs_truth_correlation(&merged, &truth, &words);
+        assert!(corr > 0.98, "corr={corr}");
+    }
+
+    #[test]
+    fn word_present_in_single_model_survives() {
+        // word 5 present ONLY in model 2
+        let missing = vec![
+            (0usize, vec![5u32]),
+            (1usize, vec![5u32]),
+            (3usize, vec![5u32]),
+        ];
+        let (truth, models) = rotated_models(4, 20, 5, 0.02, &missing, 3);
+        let (merged, _) = merge(&models, &AlirOptions::default(), 3);
+        assert!(merged.is_present(5));
+        let words: Vec<u32> = (0..20).collect();
+        let corr = consensus_vs_truth_correlation(&merged, &truth, &words);
+        assert!(corr > 0.95, "corr={corr}");
+    }
+
+    #[test]
+    fn random_init_also_converges() {
+        let (truth, models) = rotated_models(3, 25, 5, 0.01, &[], 4);
+        let opts = AlirOptions {
+            init: AlirInit::Random,
+            max_rounds: 10,
+            tol: 1e-6,
+        };
+        let (merged, report) = merge(&models, &opts, 4);
+        let words: Vec<u32> = (0..25).collect();
+        let corr = consensus_vs_truth_correlation(&merged, &truth, &words);
+        assert!(corr > 0.98, "corr={corr}");
+        // displacement should be non-increasing (up to numerical fuzz)
+        for w in report.displacement.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "displacement increased: {:?}", report.displacement);
+        }
+    }
+
+    #[test]
+    fn displacement_shrinks_relative_to_first_round() {
+        let (_, models) = rotated_models(5, 40, 8, 0.05, &[], 5);
+        let opts = AlirOptions {
+            init: AlirInit::Random,
+            max_rounds: 8,
+            tol: 0.0,
+        };
+        let (_, report) = merge(&models, &opts, 5);
+        let first = report.displacement[0];
+        let last = *report.displacement.last().unwrap();
+        assert!(last < first, "no progress: {:?}", report.displacement);
+    }
+}

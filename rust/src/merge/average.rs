@@ -1,0 +1,81 @@
+//! Naive element-wise averaging — the counter-example from paper §3.3.1.
+//!
+//! Averaging unaligned embeddings destroys similarity structure because
+//! independently trained models live in arbitrarily rotated/reflected
+//! spaces (the paper's 3-word example: word 1 is closest to word 3 in both
+//! sub-models but not in their average). Kept as an ablation so the
+//! table-3 bench can demonstrate *why* alignment (ALiR) is necessary.
+
+use crate::embedding::Embedding;
+
+/// Element-wise mean over models where each word is present.
+pub fn merge(models: &[Embedding]) -> Embedding {
+    assert!(!models.is_empty());
+    let vocab = models[0].vocab;
+    let d = models[0].dim;
+    let mut out = Embedding {
+        vocab,
+        dim: d,
+        data: vec![0.0; vocab * d],
+        present: vec![false; vocab],
+    };
+    for w in 0..vocab as u32 {
+        let mut count = 0.0f32;
+        for m in models {
+            if m.is_present(w) {
+                count += 1.0;
+                let row = m.row(w).to_vec();
+                for (o, v) in out.row_mut(w).iter_mut().zip(row) {
+                    *o += v;
+                }
+            }
+        }
+        if count > 0.0 {
+            out.present[w as usize] = true;
+            for v in out.row_mut(w) {
+                *v /= count;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_counterexample_breaks_similarity() {
+        // the exact §3.3.1 example: two mirrored sub-models
+        let mut m1 = Embedding::zeros(3, 2);
+        m1.row_mut(0).copy_from_slice(&[1.0, 1.0]);
+        m1.row_mut(1).copy_from_slice(&[99.0, 0.0]);
+        m1.row_mut(2).copy_from_slice(&[1.0, -1.0]);
+        let mut m2 = Embedding::zeros(3, 2);
+        m2.row_mut(0).copy_from_slice(&[-1.0, 1.0]);
+        m2.row_mut(1).copy_from_slice(&[-99.0, 0.0]);
+        m2.row_mut(2).copy_from_slice(&[-1.0, -1.0]);
+        // both sub-models agree: cos(word0, word2) = 0 (orthogonal)
+        let before1 = m1.cosine(0, 2).unwrap();
+        let before2 = m2.cosine(0, 2).unwrap();
+        assert!(before1.abs() < 1e-9 && before2.abs() < 1e-9);
+        let avg = merge(&[m1, m2]);
+        // after averaging: row0=[0,1], row2=[0,-1] — antipodal. The
+        // similarity structure both sub-models agreed on is destroyed.
+        assert!(avg.cosine(0, 2).unwrap() < -0.9);
+    }
+
+    #[test]
+    fn averages_only_present_models() {
+        let mut m1 = Embedding::zeros(2, 1);
+        m1.row_mut(0).copy_from_slice(&[2.0]);
+        m1.row_mut(1).copy_from_slice(&[4.0]);
+        let mut m2 = Embedding::zeros(2, 1);
+        m2.row_mut(0).copy_from_slice(&[6.0]);
+        m2.present[1] = false;
+        let avg = merge(&[m1, m2]);
+        assert_eq!(avg.row(0), &[4.0]); // (2+6)/2
+        assert_eq!(avg.row(1), &[4.0]); // m1 only
+        assert!(avg.is_present(1));
+    }
+}

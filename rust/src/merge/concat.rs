@@ -1,0 +1,81 @@
+//! Concat merge: the literature's standard baseline (paper §3.3.1).
+//!
+//! Over the intersection vocabulary V', the merged representation is the
+//! column concatenation `[M_1 | M_2 | … | M_n]` of dimension |V'| × n·d.
+//! Effective (it preserves every sub-model's geometry exactly) but
+//! impractical for many sub-models — dimensionality and memory grow with
+//! n, and any word missing from even one sub-model is dropped entirely.
+
+use super::align::intersection_vocab;
+use crate::embedding::Embedding;
+
+/// Concatenate sub-models over their common vocabulary.
+pub fn merge(models: &[Embedding]) -> Embedding {
+    assert!(!models.is_empty(), "no sub-models to merge");
+    let vocab = models[0].vocab;
+    let d = models[0].dim;
+    let n = models.len();
+    let common = intersection_vocab(models);
+    let out_dim = n * d;
+    let mut out = Embedding {
+        vocab,
+        dim: out_dim,
+        data: vec![0.0; vocab * out_dim],
+        present: vec![false; vocab],
+    };
+    for &w in &common {
+        out.present[w as usize] = true;
+        for (i, m) in models.iter().enumerate() {
+            out.row_mut(w)[i * d..(i + 1) * d].copy_from_slice(m.row(w));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(vals: &[(u32, [f32; 2])], vocab: usize, missing: &[u32]) -> Embedding {
+        let mut e = Embedding::zeros(vocab, 2);
+        for (w, v) in vals {
+            e.row_mut(*w).copy_from_slice(v);
+        }
+        for &w in missing {
+            e.present[w as usize] = false;
+        }
+        e
+    }
+
+    #[test]
+    fn concatenates_in_model_order() {
+        let m1 = model(&[(0, [1.0, 2.0]), (1, [3.0, 4.0])], 2, &[]);
+        let m2 = model(&[(0, [5.0, 6.0]), (1, [7.0, 8.0])], 2, &[]);
+        let merged = merge(&[m1, m2]);
+        assert_eq!(merged.dim, 4);
+        assert_eq!(merged.row(0), &[1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(merged.row(1), &[3.0, 4.0, 7.0, 8.0]);
+        assert_eq!(merged.present_count(), 2);
+    }
+
+    #[test]
+    fn drops_words_missing_anywhere() {
+        let m1 = model(&[(0, [1.0, 0.0])], 3, &[2]);
+        let m2 = model(&[(0, [0.0, 1.0])], 3, &[1]);
+        let merged = merge(&[m1, m2]);
+        assert!(merged.is_present(0));
+        assert!(!merged.is_present(1));
+        assert!(!merged.is_present(2));
+    }
+
+    #[test]
+    fn preserves_per_model_similarity_structure() {
+        // cosine in the concat space is the norm-weighted average of the
+        // sub-model cosines; identical sub-models => identical cosine
+        let m = model(&[(0, [1.0, 0.0]), (1, [0.0, 1.0]), (2, [1.0, 0.1])], 3, &[]);
+        let merged = merge(&[m.clone(), m.clone()]);
+        let a = m.cosine(0, 2).unwrap();
+        let b = merged.cosine(0, 2).unwrap();
+        assert!((a - b).abs() < 1e-9);
+    }
+}

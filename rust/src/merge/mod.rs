@@ -1,0 +1,102 @@
+//! The merge phase: combining asynchronously trained sub-models into one
+//! consensus embedding (paper §3.3).
+//!
+//! * [`concat`] — column concatenation over the common vocabulary (baseline)
+//! * [`pca_merge`] — PCA of the concatenation back to d dims (baseline)
+//! * [`alir`] — ALiR, the paper's Procrustes-style method over the union
+//!   vocabulary with missing-row reconstruction
+//! * [`average`] — naive element-wise averaging (the §3.3.1 counter-example;
+//!   kept as an ablation)
+
+pub mod align;
+pub mod alir;
+pub mod average;
+pub mod concat;
+pub mod pca_merge;
+
+use crate::embedding::Embedding;
+use crate::util::config::MergeMethod;
+use crate::util::logging::Timer;
+
+/// Outcome of a merge: the consensus embedding + bookkeeping for Table 4.
+pub struct MergeResult {
+    pub embedding: Embedding,
+    pub method: MergeMethod,
+    pub seconds: f64,
+    /// ALiR only: rounds executed and displacement trace
+    pub alir_rounds: usize,
+    pub alir_displacement: Vec<f64>,
+}
+
+/// Dispatch a merge method over trained sub-models.
+pub fn merge_models(
+    models: &[Embedding],
+    method: &MergeMethod,
+    alir_opts: &alir::AlirOptions,
+    seed: u64,
+) -> MergeResult {
+    assert!(!models.is_empty());
+    let timer = Timer::start(&format!("merge/{}", method.name()));
+    let target_dim = models[0].dim;
+    let (embedding, rounds, disp) = match method {
+        MergeMethod::Concat => (concat::merge(models), 0, Vec::new()),
+        MergeMethod::Pca => (pca_merge::merge(models, target_dim).0, 0, Vec::new()),
+        MergeMethod::AlirRand => {
+            let opts = alir::AlirOptions {
+                init: alir::AlirInit::Random,
+                ..alir_opts.clone()
+            };
+            let (e, r) = alir::merge(models, &opts, seed);
+            (e, r.rounds, r.displacement)
+        }
+        MergeMethod::AlirPca => {
+            let opts = alir::AlirOptions {
+                init: alir::AlirInit::Pca,
+                ..alir_opts.clone()
+            };
+            let (e, r) = alir::merge(models, &opts, seed);
+            (e, r.rounds, r.displacement)
+        }
+        MergeMethod::Single => (models[0].clone(), 0, Vec::new()),
+    };
+    MergeResult {
+        embedding,
+        method: method.clone(),
+        seconds: timer.stop_quiet(),
+        alir_rounds: rounds,
+        alir_displacement: disp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn models() -> Vec<Embedding> {
+        let mut rng = Pcg64::new(5);
+        (0..3)
+            .map(|_| {
+                let data = (0..40).map(|_| rng.gen_gauss() as f32).collect();
+                Embedding::from_rows(10, 4, data)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_produces_expected_dims() {
+        let ms = models();
+        assert_eq!(merge_models(&ms, &MergeMethod::Concat, &Default::default(), 1).embedding.dim, 12);
+        assert_eq!(merge_models(&ms, &MergeMethod::Pca, &Default::default(), 1).embedding.dim, 4);
+        let alir = merge_models(&ms, &MergeMethod::AlirPca, &Default::default(), 1);
+        assert_eq!(alir.embedding.dim, 4);
+        assert!(alir.alir_rounds > 0);
+        assert_eq!(merge_models(&ms, &MergeMethod::Single, &Default::default(), 1).embedding.dim, 4);
+    }
+
+    #[test]
+    fn timing_is_recorded() {
+        let r = merge_models(&models(), &MergeMethod::Concat, &Default::default(), 1);
+        assert!(r.seconds >= 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! PCA merge: top-d principal components of the concatenated matrix
+//! (paper §3.3.1), restoring the original dimensionality while keeping
+//! most of the concatenation's variance.
+
+use super::align::{embedding_from_rows, intersection_vocab};
+use super::concat;
+use crate::embedding::Embedding;
+use crate::linalg::mat::Mat;
+use crate::linalg::pca;
+
+/// PCA-merge to `target_dim` dimensions over the common vocabulary.
+/// Returns the merged embedding and the explained-variance spectrum.
+pub fn merge(models: &[Embedding], target_dim: usize) -> (Embedding, Vec<f64>) {
+    assert!(!models.is_empty(), "no sub-models to merge");
+    let vocab = models[0].vocab;
+    let common = intersection_vocab(models);
+    let cat = concat::merge(models);
+    // extract the common rows of the concat matrix into f64
+    let mut x = Mat::zeros(common.len(), cat.dim);
+    for (i, &w) in common.iter().enumerate() {
+        for (j, &v) in cat.row(w).iter().enumerate() {
+            x[(i, j)] = v as f64;
+        }
+    }
+    let fit = pca::fit(&x, target_dim);
+    let projected = fit.transform(&x);
+    (
+        embedding_from_rows(vocab, &common, &projected),
+        fit.explained,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_model(vocab: usize, d: usize, seed: u64) -> Embedding {
+        let mut rng = Pcg64::new(seed);
+        let data = (0..vocab * d).map(|_| rng.gen_gauss() as f32).collect();
+        Embedding::from_rows(vocab, d, data)
+    }
+
+    #[test]
+    fn output_has_target_dim_over_common_vocab() {
+        let mut m1 = random_model(20, 4, 1);
+        let m2 = random_model(20, 4, 2);
+        m1.present[5] = false;
+        let (merged, explained) = merge(&[m1, m2], 4);
+        assert_eq!(merged.dim, 4);
+        assert!(!merged.is_present(5));
+        assert_eq!(merged.present_count(), 19);
+        assert_eq!(explained.len(), 4);
+        for w in explained.windows(2) {
+            assert!(w[0] >= w[1] - 1e-10);
+        }
+    }
+
+    #[test]
+    fn identical_submodels_preserve_structure() {
+        // n identical copies: PCA back to d must preserve pairwise
+        // distances up to rotation (cosine structure preserved)
+        let m = random_model(30, 6, 3);
+        let (merged, _) = merge(&[m.clone(), m.clone(), m.clone()], 6);
+        let mut diffs = 0.0;
+        let mut count = 0;
+        // centering shifts cosines, so compare distance ratios instead
+        let dist = |e: &Embedding, a: u32, b: u32| {
+            e.row(a)
+                .iter()
+                .zip(e.row(b))
+                .map(|(x, y)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        for a in 0..10u32 {
+            for b in (a + 1)..10u32 {
+                let da = dist(&m, a, b);
+                let db = dist(&merged, a, b) / (3.0f64).sqrt();
+                diffs += (da - db).abs();
+                count += 1;
+            }
+        }
+        let avg_diff = diffs / count as f64;
+        assert!(avg_diff < 1e-5, "avg distance distortion {avg_diff}");
+    }
+
+    #[test]
+    fn reduces_dim_of_concat() {
+        let models: Vec<Embedding> = (0..5).map(|i| random_model(15, 3, i)).collect();
+        let (merged, _) = merge(&models, 3);
+        assert_eq!(merged.dim, 3); // not 15 = 5 × 3
+    }
+}

@@ -1,0 +1,219 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! and the rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.json` describing every
+//! lowered configuration (shapes, packed-state row layout, file names).
+//! The runtime resolves an experiment's (vocab, dim) requirement to the
+//! smallest compatible artifact — the HLO's vocab is a static shape, so a
+//! corpus with fewer words simply leaves the upper rows untouched.
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One lowered model configuration (mirrors aot.py's manifest_entry).
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub dim: usize,
+    pub batch: usize,
+    pub negatives: usize,
+    pub steps: usize,
+    pub rows: usize,
+    pub pad_row: usize,
+    pub metrics_row: usize,
+    pub sim_q: usize,
+    pub vmem_block_bytes: usize,
+    pub train_file: PathBuf,
+    pub metrics_file: PathBuf,
+    pub sim_file: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let mut configs = Vec::new();
+        for entry in j.get("configs").as_arr().ok_or("manifest: missing configs")? {
+            let need_usize = |key: &str| {
+                entry
+                    .get(key)
+                    .as_usize()
+                    .ok_or_else(|| format!("manifest entry missing '{key}'"))
+            };
+            let file = |key: &str| -> Result<PathBuf, String> {
+                Ok(dir.join(
+                    entry
+                        .get("files")
+                        .get(key)
+                        .as_str()
+                        .ok_or_else(|| format!("manifest entry missing file '{key}'"))?,
+                ))
+            };
+            configs.push(ArtifactConfig {
+                name: entry
+                    .get("name")
+                    .as_str()
+                    .ok_or("manifest entry missing 'name'")?
+                    .to_string(),
+                vocab: need_usize("vocab")?,
+                dim: need_usize("dim")?,
+                batch: need_usize("batch")?,
+                negatives: need_usize("negatives")?,
+                steps: need_usize("steps")?,
+                rows: need_usize("rows")?,
+                pad_row: need_usize("pad_row")?,
+                metrics_row: need_usize("metrics_row")?,
+                sim_q: need_usize("sim_q")?,
+                vmem_block_bytes: need_usize("vmem_block_bytes")?,
+                train_file: file("train")?,
+                metrics_file: file("metrics")?,
+                sim_file: file("sim")?,
+            });
+        }
+        if configs.is_empty() {
+            return Err("manifest has no configs".to_string());
+        }
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            configs,
+        })
+    }
+
+    /// Smallest artifact that can host `vocab` words at dimensionality
+    /// `dim`. Returns a helpful error when nothing fits.
+    pub fn resolve(&self, vocab: usize, dim: usize) -> Result<&ArtifactConfig, String> {
+        self.configs
+            .iter()
+            .filter(|c| c.dim == dim && c.vocab >= vocab)
+            .min_by_key(|c| c.vocab)
+            .ok_or_else(|| {
+                let have: Vec<String> = self
+                    .configs
+                    .iter()
+                    .map(|c| format!("{} (V={}, D={})", c.name, c.vocab, c.dim))
+                    .collect();
+                format!(
+                    "no artifact fits vocab={vocab} dim={dim}; available: [{}]. \
+                     Rebuild with: cd python && python -m compile.aot \
+                     --out-dir ../artifacts --cfg {vocab},{dim},256,5,8",
+                    have.join(", ")
+                )
+            })
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactConfig> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+}
+
+impl ArtifactConfig {
+    pub fn k1(&self) -> usize {
+        self.negatives + 1
+    }
+
+    /// Shape of one macro-batch dispatch.
+    pub fn batch_capacity(&self) -> usize {
+        self.batch * self.steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, entries: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let text = format!(r#"{{"version": 1, "configs": [{entries}]}}"#);
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    fn entry(name: &str, vocab: usize, dim: usize) -> String {
+        format!(
+            r#"{{"name": "{name}", "vocab": {vocab}, "dim": {dim}, "batch": 8,
+                "negatives": 2, "steps": 2, "rows": {}, "pad_row": {},
+                "metrics_row": {}, "sim_q": 256, "vmem_block_bytes": 1024,
+                "files": {{"train": "t.hlo.txt", "metrics": "m.hlo.txt",
+                           "sim": "s.hlo.txt"}}}}"#,
+            2 * vocab + 2,
+            2 * vocab,
+            2 * vocab + 1
+        )
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("dw2v_manifest_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_and_resolves() {
+        let dir = tmp("resolve");
+        write_manifest(
+            &dir,
+            &format!("{}, {}, {}", entry("a", 64, 8), entry("b", 2000, 8), entry("c", 2000, 32)),
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.configs.len(), 3);
+        // smallest fitting artifact
+        assert_eq!(m.resolve(50, 8).unwrap().name, "a");
+        assert_eq!(m.resolve(100, 8).unwrap().name, "b");
+        assert_eq!(m.resolve(100, 32).unwrap().name, "c");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resolve_failure_is_actionable() {
+        let dir = tmp("fail");
+        write_manifest(&dir, &entry("a", 64, 8));
+        let m = Manifest::load(&dir).unwrap();
+        let err = m.resolve(1_000_000, 8).unwrap_err();
+        assert!(err.contains("compile.aot"), "error should tell the user how to fix: {err}");
+        assert!(m.resolve(10, 999).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn row_layout_fields() {
+        let dir = tmp("layout");
+        write_manifest(&dir, &entry("a", 64, 8));
+        let m = Manifest::load(&dir).unwrap();
+        let c = &m.configs[0];
+        assert_eq!(c.rows, 130);
+        assert_eq!(c.pad_row, 128);
+        assert_eq!(c.metrics_row, 129);
+        assert_eq!(c.k1(), 3);
+        assert_eq!(c.batch_capacity(), 16);
+        assert!(c.train_file.ends_with("t.hlo.txt"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        let dir = tmp("byname");
+        write_manifest(&dir, &format!("{}, {}", entry("x", 64, 8), entry("y", 128, 8)));
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.by_name("y").is_some());
+        assert!(m.by_name("zzz").is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,154 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! many reducer threads with device-resident parameters.
+//!
+//! Thread-safety: the `xla` crate's wrappers hold raw pointers and are
+//! `!Send`, but the underlying PJRT CPU client *is* thread-safe (the C++
+//! TfrtCpuClient serializes what it must internally and supports concurrent
+//! `Execute`). We therefore wrap the handles in newtypes that assert
+//! `Send`/`Sync`; every call still goes through `&self`.
+//!
+//! Key bridge facts (established by `rust/src/bin/bridge_probe.rs`):
+//! * a single-array-output computation returns exactly one chainable
+//!   buffer — this is why the whole model state is ONE packed array;
+//! * `execute_b` accepts prior output buffers directly → zero host copies
+//!   on the train path;
+//! * `CopyRawToHost` is unimplemented on CPU, so the metrics row is read
+//!   through a tiny companion executable that slices it on-device.
+
+use super::artifacts::ArtifactConfig;
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled executable, shareable across threads.
+pub struct Executable(PjRtLoadedExecutable);
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// A device buffer whose ownership may cross threads (PJRT buffers are
+/// plain handles; all operations go through the thread-safe client).
+pub struct DeviceBuffer(PjRtBuffer);
+unsafe impl Send for DeviceBuffer {}
+unsafe impl Sync for DeviceBuffer {}
+
+/// The process-wide PJRT runtime: one client + the compiled executables of
+/// one artifact configuration.
+pub struct Runtime {
+    client: PjRtClient,
+    pub artifact: ArtifactConfig,
+    train: Executable,
+    metrics: Executable,
+    sim: Executable,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile the three executables of
+    /// `artifact`. Compilation happens once; reducers share the result.
+    pub fn load(artifact: &ArtifactConfig) -> Result<Self, String> {
+        let client = PjRtClient::cpu().map_err(|e| format!("PjRtClient::cpu: {e}"))?;
+        let compile = |path: &std::path::Path| -> Result<Executable, String> {
+            let proto = HloModuleProto::from_text_file(path)
+                .map_err(|e| format!("parse {}: {e}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map(Executable)
+                .map_err(|e| format!("compile {}: {e}", path.display()))
+        };
+        Ok(Self {
+            train: compile(&artifact.train_file)?,
+            metrics: compile(&artifact.metrics_file)?,
+            sim: compile(&artifact.sim_file)?,
+            artifact: artifact.clone(),
+            client,
+        })
+    }
+
+    /// Upload a host f32 tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceBuffer, String> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(DeviceBuffer)
+            .map_err(|e| format!("upload_f32: {e}"))
+    }
+
+    /// Upload a host i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<DeviceBuffer, String> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map(DeviceBuffer)
+            .map_err(|e| format!("upload_i32: {e}"))
+    }
+
+    /// One training macro-step: state' = train(state, centers, ctx,
+    /// weights, lr). All inputs already on device; output stays on device.
+    pub fn train_step(
+        &self,
+        state: &DeviceBuffer,
+        centers: &DeviceBuffer,
+        ctx: &DeviceBuffer,
+        weights: &DeviceBuffer,
+        lr: &DeviceBuffer,
+    ) -> Result<DeviceBuffer, String> {
+        let mut out = self
+            .train
+            .0
+            .execute_b(&[&state.0, &centers.0, &ctx.0, &weights.0, &lr.0])
+            .map_err(|e| format!("train execute: {e}"))?;
+        Ok(DeviceBuffer(out.remove(0).remove(0)))
+    }
+
+    /// Read the metrics row [loss_sum, examples, steps, ...] without
+    /// copying the whole state to the host.
+    pub fn read_metrics(&self, state: &DeviceBuffer) -> Result<Vec<f32>, String> {
+        let out = self
+            .metrics
+            .0
+            .execute_b(&[&state.0])
+            .map_err(|e| format!("metrics execute: {e}"))?;
+        out[0][0]
+            .to_literal_sync()
+            .and_then(|l| l.to_vec::<f32>())
+            .map_err(|e| format!("metrics readback: {e}"))
+    }
+
+    /// Batched on-device cosine similarity between query/candidate rows
+    /// (the eval fast path). Inputs are padded to the artifact's sim_q.
+    pub fn similarity(
+        &self,
+        state: &DeviceBuffer,
+        queries: &[i32],
+        candidates: &[i32],
+    ) -> Result<Vec<f32>, String> {
+        assert_eq!(queries.len(), candidates.len());
+        let q = self.artifact.sim_q;
+        assert!(queries.len() <= q, "query batch exceeds artifact sim_q");
+        let mut qb = queries.to_vec();
+        let mut cb = candidates.to_vec();
+        qb.resize(q, 0);
+        cb.resize(q, 0);
+        let qbuf = self.upload_i32(&qb, &[q])?;
+        let cbuf = self.upload_i32(&cb, &[q])?;
+        let out = self
+            .sim
+            .0
+            .execute_b(&[&state.0, &qbuf.0, &cbuf.0])
+            .map_err(|e| format!("sim execute: {e}"))?;
+        let mut vals = out[0][0]
+            .to_literal_sync()
+            .and_then(|l| l.to_vec::<f32>())
+            .map_err(|e| format!("sim readback: {e}"))?;
+        vals.truncate(queries.len());
+        Ok(vals)
+    }
+
+    /// Download the full packed state (end of training only).
+    pub fn download_state(&self, state: &DeviceBuffer) -> Result<Vec<f32>, String> {
+        state
+            .0
+            .to_literal_sync()
+            .and_then(|l: Literal| l.to_vec::<f32>())
+            .map_err(|e| format!("state download: {e}"))
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT runtime: artifact manifest resolution, executable loading, and
+//! device-resident sub-model state (the rust side of the AOT bridge).
+pub mod artifacts;
+pub mod client;
+pub mod params;

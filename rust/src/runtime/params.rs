@@ -1,0 +1,143 @@
+//! Device-resident sub-model state management.
+//!
+//! A [`SubModel`] owns the packed `[2V+2, D]` parameter buffer of one
+//! reducer's SGNS model. It is initialized host-side (word2vec init),
+//! uploaded once, then only ever touched on-device by chaining
+//! `train_step` outputs back as inputs. The embedding is downloaded a
+//! single time when training finishes.
+
+use super::client::{DeviceBuffer, Runtime};
+use crate::embedding::Embedding;
+use crate::util::rng::Pcg64;
+
+/// Metrics row interpretation (mirrors python/compile/model.py).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Metrics {
+    pub loss_sum: f64,
+    pub examples: f64,
+    pub micro_steps: f64,
+}
+
+impl Metrics {
+    pub fn from_row(row: &[f32]) -> Self {
+        Self {
+            loss_sum: row.first().copied().unwrap_or(0.0) as f64,
+            examples: row.get(1).copied().unwrap_or(0.0) as f64,
+            micro_steps: row.get(2).copied().unwrap_or(0.0) as f64,
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.examples > 0.0 {
+            self.loss_sum / self.examples
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One reducer's device-resident model.
+pub struct SubModel {
+    state: DeviceBuffer,
+    /// dispatches executed (each = artifact.steps micro-steps)
+    pub dispatches: u64,
+}
+
+impl SubModel {
+    /// word2vec init: W ~ U(−0.5/D, 0.5/D), C/pad/metrics zero; uploaded
+    /// to the device once.
+    pub fn init(rt: &Runtime, seed: u64) -> Result<Self, String> {
+        let a = &rt.artifact;
+        let mut host = vec![0.0f32; a.rows * a.dim];
+        let mut rng = Pcg64::new_stream(seed, 0x7374); // "st"
+        for x in host[..a.vocab * a.dim].iter_mut() {
+            *x = (rng.gen_f32() - 0.5) / a.dim as f32;
+        }
+        let state = rt.upload_f32(&host, &[a.rows, a.dim])?;
+        Ok(Self {
+            state,
+            dispatches: 0,
+        })
+    }
+
+    /// Restore from a previously downloaded packed state (tests/checkpoints).
+    pub fn from_host(rt: &Runtime, host: &[f32]) -> Result<Self, String> {
+        let a = &rt.artifact;
+        assert_eq!(host.len(), a.rows * a.dim);
+        Ok(Self {
+            state: rt.upload_f32(host, &[a.rows, a.dim])?,
+            dispatches: 0,
+        })
+    }
+
+    /// Execute one macro-batch (uploads the index tensors, chains the
+    /// state buffer on-device).
+    pub fn train_macro_batch(
+        &mut self,
+        rt: &Runtime,
+        centers: &[i32],
+        ctx: &[i32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<(), String> {
+        let a = &rt.artifact;
+        debug_assert_eq!(centers.len(), a.batch_capacity());
+        debug_assert_eq!(ctx.len(), a.batch_capacity() * a.k1());
+        debug_assert_eq!(weights.len(), a.batch_capacity());
+        let c = rt.upload_i32(centers, &[a.steps, a.batch])?;
+        let x = rt.upload_i32(ctx, &[a.steps, a.batch, a.k1()])?;
+        let w = rt.upload_f32(weights, &[a.steps, a.batch])?;
+        let l = rt.upload_f32(&[lr], &[1])?;
+        self.state = rt.train_step(&self.state, &c, &x, &w, &l)?;
+        self.dispatches += 1;
+        Ok(())
+    }
+
+    /// Running loss counters (cheap on-device slice + tiny readback).
+    pub fn metrics(&self, rt: &Runtime) -> Result<Metrics, String> {
+        Ok(Metrics::from_row(&rt.read_metrics(&self.state)?))
+    }
+
+    /// On-device cosine similarity between word pairs.
+    pub fn similarity(
+        &self,
+        rt: &Runtime,
+        pairs: &[(u32, u32)],
+    ) -> Result<Vec<f32>, String> {
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(rt.artifact.sim_q) {
+            let q: Vec<i32> = chunk.iter().map(|p| p.0 as i32).collect();
+            let c: Vec<i32> = chunk.iter().map(|p| p.1 as i32).collect();
+            out.extend(rt.similarity(&self.state, &q, &c)?);
+        }
+        Ok(out)
+    }
+
+    /// Download the full packed state (checkpointing / the round-trip
+    /// ablation bench). Pair with [`SubModel::from_host`].
+    pub fn download_packed(&self, rt: &Runtime) -> Result<Vec<f32>, String> {
+        rt.download_state(&self.state)
+    }
+
+    /// Download the trained input embeddings (`W` block), restricted to the
+    /// experiment's actual vocabulary. `present` marks which words this
+    /// sub-model is allowed to claim (per-sub-model count thresholding).
+    pub fn into_embedding(
+        self,
+        rt: &Runtime,
+        actual_vocab: usize,
+        present: Vec<bool>,
+    ) -> Result<Embedding, String> {
+        let a = &rt.artifact;
+        assert!(actual_vocab <= a.vocab);
+        assert_eq!(present.len(), actual_vocab);
+        let host = rt.download_state(&self.state)?;
+        let data = host[..actual_vocab * a.dim].to_vec();
+        Ok(Embedding {
+            vocab: actual_vocab,
+            dim: a.dim,
+            data,
+            present,
+        })
+    }
+}

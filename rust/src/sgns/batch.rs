@@ -1,0 +1,347 @@
+//! Training-pair extraction and macro-batch assembly.
+//!
+//! This is the Layer-3 side of the hot path: sentences stream in, and out
+//! come fixed-shape macro-batches matching the AOT artifact's signature
+//! (`centers[S,B]`, `ctx[S,B,K+1]`, `weights[S,B]`). Semantics follow
+//! word2vec: dynamic window (uniform in [1, window]), frequent-word
+//! subsampling applied *before* windowing, `K` negatives per positive from
+//! the unigram^0.75 alias table.
+//!
+//! Index convention (shared with python/compile/model.py): ids are
+//! vocab-relative `0..V-1`; `V` is the padding sentinel that maps to the
+//! artifact's zero pad-row with weight 0.
+
+use super::negative::AliasTable;
+use crate::util::rng::Pcg64;
+
+/// One dispatch-ready macro-batch (S micro-steps × B examples).
+#[derive(Clone, Debug)]
+pub struct MacroBatch {
+    pub centers: Vec<i32>, // S*B
+    pub ctx: Vec<i32>,     // S*B*(K+1); col 0 = positive
+    pub weights: Vec<f32>, // S*B
+    pub real_pairs: usize,
+}
+
+/// Shape parameters of the artifact the batches must match.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchShape {
+    pub batch: usize,     // B
+    pub steps: usize,     // S
+    pub negatives: usize, // K
+    pub vocab: usize,     // V (also the padding sentinel)
+}
+
+impl BatchShape {
+    pub fn k1(&self) -> usize {
+        self.negatives + 1
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.batch * self.steps
+    }
+}
+
+/// Streaming builder: feed sentences, emit full macro-batches via callback.
+pub struct BatchBuilder {
+    shape: BatchShape,
+    window: usize,
+    /// per-word keep probability for subsampling (empty = disabled)
+    keep_prob: Vec<f32>,
+    noise: AliasTable,
+    rng: Pcg64,
+    // fill state
+    centers: Vec<i32>,
+    ctx: Vec<i32>,
+    weights: Vec<f32>,
+    fill: usize,
+    /// total real (non-pad) pairs emitted so far — drives lr decay
+    pub pairs_emitted: u64,
+    /// scratch: subsampled sentence
+    kept: Vec<u32>,
+}
+
+impl BatchBuilder {
+    pub fn new(
+        shape: BatchShape,
+        window: usize,
+        keep_prob: Vec<f32>,
+        noise: AliasTable,
+        rng: Pcg64,
+    ) -> Self {
+        let cap = shape.capacity();
+        let k1 = shape.k1();
+        Self {
+            shape,
+            window: window.max(1),
+            keep_prob,
+            noise,
+            rng,
+            centers: vec![shape.vocab as i32; cap],
+            ctx: vec![shape.vocab as i32; cap * k1],
+            weights: vec![0.0; cap],
+            fill: 0,
+            pairs_emitted: 0,
+            kept: Vec::new(),
+        }
+    }
+
+    /// Build the keep-probability table from vocab counts.
+    pub fn keep_table(counts: &[u64], t: f64) -> Vec<f32> {
+        if t <= 0.0 {
+            return Vec::new();
+        }
+        let total: u64 = counts.iter().sum();
+        counts
+            .iter()
+            .map(|&c| {
+                let f = c as f64 / total.max(1) as f64;
+                if f <= t {
+                    1.0
+                } else {
+                    (((t / f).sqrt() + t / f) as f32).min(1.0)
+                }
+            })
+            .collect()
+    }
+
+    #[inline]
+    fn push_pair(
+        &mut self,
+        center: u32,
+        pos: u32,
+        rng: &mut Pcg64,
+        emit: &mut impl FnMut(MacroBatch),
+    ) {
+        let k1 = self.shape.k1();
+        let i = self.fill;
+        self.centers[i] = center as i32;
+        self.weights[i] = 1.0;
+        self.ctx[i * k1] = pos as i32;
+        for j in 1..k1 {
+            // word2vec keeps negatives even when they collide with the
+            // positive — the expectation argument tolerates it
+            self.ctx[i * k1 + j] = self.noise.sample(rng) as i32;
+        }
+        self.fill += 1;
+        self.pairs_emitted += 1;
+        if self.fill == self.shape.capacity() {
+            emit(self.take_batch());
+        }
+    }
+
+    fn take_batch(&mut self) -> MacroBatch {
+        let cap = self.shape.capacity();
+        let k1 = self.shape.k1();
+        let pad = self.shape.vocab as i32;
+        let batch = MacroBatch {
+            centers: std::mem::replace(&mut self.centers, vec![pad; cap]),
+            ctx: std::mem::replace(&mut self.ctx, vec![pad; cap * k1]),
+            weights: std::mem::replace(&mut self.weights, vec![0.0; cap]),
+            real_pairs: self.fill,
+        };
+        self.fill = 0;
+        batch
+    }
+
+    /// Process one sentence; full macro-batches are handed to `emit`.
+    ///
+    /// All randomness for a sentence (subsampling, window widths, negative
+    /// draws) comes from a stream derived from `(builder seed, sentence_id)`
+    /// — **order-independent**, so a run's pair extraction is reproducible
+    /// no matter how mapper threads interleave deliveries. `sentence_id`
+    /// should be the global sentence index mixed with the epoch.
+    pub fn push_sentence(
+        &mut self,
+        sentence_id: u64,
+        sentence: &[u32],
+        emit: &mut impl FnMut(MacroBatch),
+    ) {
+        let mut rng = self.rng.derive(sentence_id);
+        // subsample frequent words first (word2vec order)
+        self.kept.clear();
+        for &w in sentence {
+            debug_assert!((w as usize) < self.shape.vocab);
+            let keep = self
+                .keep_prob
+                .get(w as usize)
+                .copied()
+                .unwrap_or(1.0);
+            if keep >= 1.0 || rng.gen_f32() < keep {
+                self.kept.push(w);
+            }
+        }
+        if self.kept.len() < 2 {
+            return;
+        }
+        let kept = std::mem::take(&mut self.kept); // appease the borrow checker
+        for (pos, &center) in kept.iter().enumerate() {
+            let win = 1 + rng.gen_range_usize(self.window);
+            let lo = pos.saturating_sub(win);
+            let hi = (pos + win + 1).min(kept.len());
+            for other in lo..hi {
+                if other != pos {
+                    self.push_pair(center, kept[other], &mut rng, emit);
+                }
+            }
+        }
+        self.kept = kept;
+    }
+
+    /// Flush the partially-filled batch (padded with sentinels).
+    pub fn flush(&mut self, emit: &mut impl FnMut(MacroBatch)) {
+        if self.fill > 0 {
+            emit(self.take_batch());
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.fill
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape() -> BatchShape {
+        BatchShape {
+            batch: 4,
+            steps: 2,
+            negatives: 2,
+            vocab: 50,
+        }
+    }
+
+    fn builder(subsample: Vec<f32>) -> BatchBuilder {
+        let noise = AliasTable::new(&vec![1.0; 50]);
+        BatchBuilder::new(shape(), 2, subsample, noise, Pcg64::new(1))
+    }
+
+    fn collect_batches(b: &mut BatchBuilder, sentences: &[Vec<u32>]) -> Vec<MacroBatch> {
+        let mut out = Vec::new();
+        for (i, s) in sentences.iter().enumerate() {
+            b.push_sentence(i as u64, s, &mut |mb| out.push(mb));
+        }
+        b.flush(&mut |mb| out.push(mb));
+        out
+    }
+
+    #[test]
+    fn emits_full_shape_batches() {
+        let mut b = builder(Vec::new());
+        let sentences: Vec<Vec<u32>> = (0..6).map(|_| (0..6).collect()).collect();
+        let batches = collect_batches(&mut b, &sentences);
+        assert!(!batches.is_empty());
+        for mb in &batches {
+            assert_eq!(mb.centers.len(), 8);
+            assert_eq!(mb.ctx.len(), 8 * 3);
+            assert_eq!(mb.weights.len(), 8);
+        }
+    }
+
+    #[test]
+    fn pairs_are_center_context_within_window() {
+        let mut b = builder(Vec::new());
+        let batches = collect_batches(&mut b, &[vec![1, 2, 3, 4, 5]]);
+        for mb in &batches {
+            for i in 0..mb.centers.len() {
+                if mb.weights[i] == 0.0 {
+                    assert_eq!(mb.centers[i], 50); // padding sentinel
+                    continue;
+                }
+                let c = mb.centers[i];
+                let pos = mb.ctx[i * 3];
+                assert!((1..=5).contains(&c));
+                assert!((1..=5).contains(&pos));
+                assert_ne!(c, pos, "center cannot be its own positive");
+                assert!((c - pos).abs() <= 2, "window violated: {c} {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_is_sentinel_with_zero_weight() {
+        let mut b = builder(Vec::new());
+        // one tiny sentence -> partial batch, flushed with padding
+        let batches = collect_batches(&mut b, &[vec![1, 2]]);
+        assert_eq!(batches.len(), 1);
+        let mb = &batches[0];
+        assert!(mb.real_pairs >= 2);
+        for i in mb.real_pairs..mb.centers.len() {
+            assert_eq!(mb.centers[i], 50);
+            assert_eq!(mb.weights[i], 0.0);
+            for j in 0..3 {
+                assert_eq!(mb.ctx[i * 3 + j], 50);
+            }
+        }
+    }
+
+    #[test]
+    fn pair_count_conservation() {
+        let mut b = builder(Vec::new());
+        let sentences: Vec<Vec<u32>> = (0..20).map(|i| vec![i, i + 1, i + 2, i + 3]).collect();
+        let batches = collect_batches(&mut b, &sentences);
+        let total_real: usize = batches.iter().map(|mb| mb.real_pairs).sum();
+        let weight_sum: f32 = batches.iter().flat_map(|mb| &mb.weights).sum();
+        assert_eq!(total_real as f32, weight_sum);
+        assert_eq!(total_real as u64, b.pairs_emitted);
+    }
+
+    #[test]
+    fn subsampling_drops_frequent_word() {
+        // word 0 has keep prob 0 — it must never appear
+        let mut keep = vec![1.0f32; 50];
+        keep[0] = 0.0;
+        let mut b = builder(keep);
+        let sentences: Vec<Vec<u32>> = (0..50).map(|_| vec![0, 1, 2, 0, 3]).collect();
+        let batches = collect_batches(&mut b, &sentences);
+        for mb in &batches {
+            for i in 0..mb.centers.len() {
+                if mb.weights[i] > 0.0 {
+                    assert_ne!(mb.centers[i], 0);
+                    assert_ne!(mb.ctx[i * 3], 0); // positive can't be word 0
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn short_sentences_produce_nothing() {
+        let mut b = builder(Vec::new());
+        let batches = collect_batches(&mut b, &[vec![7], vec![]]);
+        assert!(batches.is_empty());
+        assert_eq!(b.pairs_emitted, 0);
+    }
+
+    #[test]
+    fn keep_table_matches_word2vec_formula() {
+        let counts = [900u64, 90, 10];
+        let t = 0.05;
+        let table = BatchBuilder::keep_table(&counts, t);
+        // word 0: f = 0.9 >> t -> heavily subsampled
+        assert!(table[0] < 0.5);
+        // word 2: f = 0.01 <= t -> always kept
+        assert_eq!(table[2], 1.0);
+        // disabled
+        assert!(BatchBuilder::keep_table(&counts, 0.0).is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = || {
+            let noise = AliasTable::new(&vec![1.0; 50]);
+            BatchBuilder::new(shape(), 2, Vec::new(), noise, Pcg64::new(9))
+        };
+        let mut b1 = mk();
+        let mut b2 = mk();
+        let s: Vec<Vec<u32>> = (0..10).map(|_| (0..8).collect()).collect();
+        let x1 = collect_batches(&mut b1, &s);
+        let x2 = collect_batches(&mut b2, &s);
+        assert_eq!(x1.len(), x2.len());
+        for (a, b) in x1.iter().zip(&x2) {
+            assert_eq!(a.centers, b.centers);
+            assert_eq!(a.ctx, b.ctx);
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! SGNS hyperparameters shared by every trainer implementation
+//! (PJRT-backed, Hogwild baseline, parameter-averaging baseline).
+
+#[derive(Clone, Debug)]
+pub struct SgnsConfig {
+    /// embedding dimensionality d
+    pub dim: usize,
+    /// max window size (actual window per center is uniform in [1, window])
+    pub window: usize,
+    /// negative samples per positive pair
+    pub negatives: usize,
+    /// frequent-word subsampling threshold t (0 disables)
+    pub subsample_t: f64,
+    /// initial learning rate
+    pub lr0: f32,
+    /// floor for the linear lr decay
+    pub lr_min: f32,
+    /// training epochs (passes over each sub-corpus)
+    pub epochs: usize,
+    /// noise distribution exponent (word2vec: 0.75)
+    pub noise_power: f64,
+}
+
+impl Default for SgnsConfig {
+    fn default() -> Self {
+        Self {
+            dim: 32,
+            window: 5,
+            negatives: 5,
+            subsample_t: 1e-3,
+            lr0: 0.05,
+            lr_min: 1e-4,
+            epochs: 3,
+            noise_power: 0.75,
+        }
+    }
+}
+
+impl SgnsConfig {
+    /// Linearly decayed learning rate after `done` of `total` expected
+    /// training pairs (word2vec schedule).
+    pub fn lr_at(&self, done: u64, total: u64) -> f32 {
+        if total == 0 {
+            return self.lr0;
+        }
+        let frac = (done as f64 / total as f64).min(1.0);
+        let lr = self.lr0 as f64 * (1.0 - frac);
+        lr.max(self.lr_min as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_decays_linearly_to_floor() {
+        let cfg = SgnsConfig {
+            lr0: 0.1,
+            lr_min: 0.001,
+            ..Default::default()
+        };
+        assert_eq!(cfg.lr_at(0, 100), 0.1);
+        assert!((cfg.lr_at(50, 100) - 0.05).abs() < 1e-6);
+        assert_eq!(cfg.lr_at(100, 100), 0.001);
+        assert_eq!(cfg.lr_at(1000, 100), 0.001); // clamped past the end
+    }
+
+    #[test]
+    fn zero_total_keeps_lr0() {
+        let cfg = SgnsConfig::default();
+        assert_eq!(cfg.lr_at(5, 0), cfg.lr0);
+    }
+}

@@ -1,0 +1,350 @@
+//! Hogwild SGNS: the paper's single-node baseline (Gensim/word2vec.c).
+//!
+//! Lock-free multithreaded SGD exactly as in Recht et al. [27] / the
+//! original word2vec: all threads update the shared `W`/`C` matrices
+//! through raw pointers with **no synchronization whatsoever** — races are
+//! tolerated by design (conflicts are rare for large vocabularies). The
+//! sigmoid is a lookup table like word2vec's `expTable`, and the learning
+//! rate decays linearly on a shared pair counter.
+//!
+//! This is deliberately the *CPU scalar* implementation the paper timed as
+//! its baseline; the PJRT trainer (`super::trainer`) is the paper-system's
+//! per-reducer engine.
+
+use super::batch::BatchBuilder;
+use super::config::SgnsConfig;
+use super::negative::AliasTable;
+use crate::embedding::Embedding;
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const SIGMOID_TABLE_SIZE: usize = 1024;
+const SIGMOID_CLAMP: f32 = 6.0;
+
+/// word2vec-style sigmoid lookup table over [-CLAMP, CLAMP].
+pub struct SigmoidTable {
+    table: Vec<f32>,
+}
+
+impl SigmoidTable {
+    pub fn new() -> Self {
+        let table = (0..SIGMOID_TABLE_SIZE)
+            .map(|i| {
+                let x = (i as f32 / SIGMOID_TABLE_SIZE as f32 * 2.0 - 1.0) * SIGMOID_CLAMP;
+                1.0 / (1.0 + (-x).exp())
+            })
+            .collect();
+        Self { table }
+    }
+
+    #[inline]
+    pub fn get(&self, x: f32) -> f32 {
+        if x >= SIGMOID_CLAMP {
+            1.0
+        } else if x <= -SIGMOID_CLAMP {
+            0.0
+        } else {
+            let idx = ((x + SIGMOID_CLAMP) / (2.0 * SIGMOID_CLAMP)
+                * (SIGMOID_TABLE_SIZE - 1) as f32) as usize;
+            self.table[idx]
+        }
+    }
+}
+
+impl Default for SigmoidTable {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Raw shared parameter block. Safety: Hogwild semantics — concurrent
+/// unsynchronized writes are *intended*; torn f32 writes are benign on
+/// x86-64 (aligned 4-byte stores are atomic at the hardware level).
+struct SharedParams {
+    w: *mut f32,
+    c: *mut f32,
+}
+
+unsafe impl Send for SharedParams {}
+unsafe impl Sync for SharedParams {}
+
+/// Training statistics returned with the embedding.
+#[derive(Debug, Clone, Default)]
+pub struct TrainStats {
+    pub pairs: u64,
+    pub seconds: f64,
+    /// mean SGNS loss over the final epoch (monitoring only)
+    pub final_epoch_loss: f64,
+}
+
+/// Train SGNS with Hogwild threads over the whole corpus.
+///
+/// Returns the input-embedding matrix `W` (the usual word vectors) plus
+/// run statistics. `threads` sentence shards are trained concurrently per
+/// epoch.
+pub fn train(
+    corpus: &Corpus,
+    vocab: &Vocab,
+    cfg: &SgnsConfig,
+    threads: usize,
+    seed: u64,
+) -> (Embedding, TrainStats) {
+    let v = vocab.len();
+    let d = cfg.dim;
+    let mut rng = Pcg64::new_stream(seed, 0x6877); // "hw"
+    let mut w = vec![0.0f32; v * d];
+    for x in &mut w {
+        *x = (rng.gen_f32() - 0.5) / d as f32;
+    }
+    let mut c = vec![0.0f32; v * d];
+    let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
+    let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
+    let sigmoid = SigmoidTable::new();
+
+    // expected total pairs for the lr schedule: tokens × window (upper
+    // bound halved by the dynamic window) × epochs
+    let expected_pairs = (corpus.total_tokens() as f64
+        * cfg.window as f64
+        * cfg.epochs as f64) as u64;
+    let pair_counter = AtomicU64::new(0);
+    let loss_accum = AtomicU64::new(0); // micro-units of 1e-6
+    let loss_pairs = AtomicU64::new(0);
+
+    let params = SharedParams {
+        w: w.as_mut_ptr(),
+        c: c.as_mut_ptr(),
+    };
+    let start = std::time::Instant::now();
+    let threads = threads.max(1);
+
+    for epoch in 0..cfg.epochs {
+        let last_epoch = epoch + 1 == cfg.epochs;
+        if last_epoch {
+            loss_accum.store(0, Ordering::Relaxed);
+            loss_pairs.store(0, Ordering::Relaxed);
+        }
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let range = corpus.shard_range(t, threads);
+                let sentences = &corpus.sentences[range];
+                let noise = &noise;
+                let keep = &keep;
+                let sigmoid = &sigmoid;
+                let params = &params;
+                let pair_counter = &pair_counter;
+                let loss_accum = &loss_accum;
+                let loss_pairs = &loss_pairs;
+                let mut trng =
+                    Pcg64::new_stream(seed ^ 0x7468_7264, (epoch * threads + t) as u64);
+                scope.spawn(move || {
+                    let mut kept: Vec<u32> = Vec::new();
+                    let mut neu: Vec<f32> = vec![0.0; d];
+                    let mut local_pairs = 0u64;
+                    let mut local_loss = 0.0f64;
+                    for sent in sentences {
+                        // subsample
+                        kept.clear();
+                        for &word in sent {
+                            let p = keep.get(word as usize).copied().unwrap_or(1.0);
+                            if p >= 1.0 || trng.gen_f32() < p {
+                                kept.push(word);
+                            }
+                        }
+                        if kept.len() < 2 {
+                            continue;
+                        }
+                        for pos in 0..kept.len() {
+                            let center = kept[pos] as usize;
+                            let win = 1 + trng.gen_range_usize(cfg.window);
+                            let lo = pos.saturating_sub(win);
+                            let hi = (pos + win + 1).min(kept.len());
+                            for other in lo..hi {
+                                if other == pos {
+                                    continue;
+                                }
+                                let done = pair_counter.fetch_add(1, Ordering::Relaxed);
+                                let lr = cfg.lr_at(done, expected_pairs);
+                                let target = kept[other] as usize;
+                                // SAFETY: Hogwild — racy but benign
+                                unsafe {
+                                    let wrow = std::slice::from_raw_parts_mut(
+                                        params.w.add(center * d),
+                                        d,
+                                    );
+                                    neu.fill(0.0);
+                                    // positive + negatives
+                                    for s in 0..=cfg.negatives {
+                                        let (ctx_id, label) = if s == 0 {
+                                            (target, 1.0f32)
+                                        } else {
+                                            (noise.sample(&mut trng) as usize, 0.0f32)
+                                        };
+                                        let crow = std::slice::from_raw_parts_mut(
+                                            params.c.add(ctx_id * d),
+                                            d,
+                                        );
+                                        let mut dot = 0.0f32;
+                                        for k in 0..d {
+                                            dot += wrow[k] * crow[k];
+                                        }
+                                        let sig = sigmoid.get(dot);
+                                        let g = (label - sig) * lr;
+                                        if last_epoch {
+                                            // softplus loss for monitoring
+                                            let x = if label > 0.5 { -dot } else { dot };
+                                            local_loss +=
+                                                (1.0 + x.exp()).ln().min(20.0) as f64;
+                                        }
+                                        for k in 0..d {
+                                            neu[k] += g * crow[k];
+                                            crow[k] += g * wrow[k];
+                                        }
+                                    }
+                                    for k in 0..d {
+                                        wrow[k] += neu[k];
+                                    }
+                                }
+                                local_pairs += 1;
+                            }
+                        }
+                    }
+                    if last_epoch && local_pairs > 0 {
+                        loss_accum.fetch_add(
+                            (local_loss * 1e6) as u64,
+                            Ordering::Relaxed,
+                        );
+                        loss_pairs.fetch_add(local_pairs, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+    }
+
+    let pairs = pair_counter.load(Ordering::Relaxed);
+    let lp = loss_pairs.load(Ordering::Relaxed).max(1);
+    let stats = TrainStats {
+        pairs,
+        seconds: start.elapsed().as_secs_f64(),
+        final_epoch_loss: loss_accum.load(Ordering::Relaxed) as f64 * 1e-6 / lp as f64,
+    };
+    (Embedding::from_rows(v, d, w), stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
+
+    #[test]
+    fn sigmoid_table_accuracy() {
+        let t = SigmoidTable::new();
+        for x in [-5.0f32, -1.0, -0.1, 0.0, 0.1, 1.0, 5.0] {
+            let exact = 1.0 / (1.0 + (-x).exp());
+            assert!(
+                (t.get(x) - exact).abs() < 0.01,
+                "x={x}: table {} exact {exact}",
+                t.get(x)
+            );
+        }
+        assert_eq!(t.get(100.0), 1.0);
+        assert_eq!(t.get(-100.0), 0.0);
+    }
+
+    fn tiny_setup() -> (Corpus, Vocab, GeneratorConfig) {
+        let gcfg = GeneratorConfig {
+            vocab: 80,
+            clusters: 8,
+            truth_dim: 8,
+            avg_sentence_len: 10,
+            ..Default::default()
+        };
+        let gt = build_ground_truth(&gcfg, 5);
+        let corpus = generate_corpus(&gt, 1500, 5);
+        let vocab = vocab_of(&corpus, gcfg.vocab);
+        (corpus, vocab, gcfg)
+    }
+
+    #[test]
+    fn training_learns_cluster_structure() {
+        let (corpus, vocab, gcfg) = tiny_setup();
+        let gt = build_ground_truth(&gcfg, 5);
+        let cfg = SgnsConfig {
+            dim: 16,
+            epochs: 4,
+            window: 4,
+            negatives: 4,
+            ..Default::default()
+        };
+        let (emb, stats) = train(&corpus, &vocab, &cfg, 2, 7);
+        assert!(stats.pairs > 10_000, "too few pairs: {}", stats.pairs);
+        // same-cluster cosine must exceed cross-cluster on average
+        let mut rng = Pcg64::new(1);
+        let (mut same, mut cross) = (Vec::new(), Vec::new());
+        for _ in 0..3000 {
+            let a = rng.gen_range(80) as u32;
+            let b = rng.gen_range(80) as u32;
+            if a == b {
+                continue;
+            }
+            let cos = emb.cosine(a, b).unwrap();
+            if gt.cluster_of[a as usize] == gt.cluster_of[b as usize] {
+                same.push(cos);
+            } else {
+                cross.push(cos);
+            }
+        }
+        let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            avg(&same) > avg(&cross) + 0.05,
+            "same={:.3} cross={:.3}",
+            avg(&same),
+            avg(&cross)
+        );
+    }
+
+    #[test]
+    fn multithreaded_matches_singlethread_quality() {
+        let (corpus, vocab, _) = tiny_setup();
+        let cfg = SgnsConfig {
+            dim: 12,
+            epochs: 2,
+            ..Default::default()
+        };
+        let (e1, s1) = train(&corpus, &vocab, &cfg, 1, 3);
+        let (e4, s4) = train(&corpus, &vocab, &cfg, 4, 3);
+        // same total work
+        // different shardings use different RNG streams, so subsampling
+        // draws differ stochastically — counts agree only in expectation
+        let rel = (s1.pairs as f64 - s4.pairs as f64).abs() / (s1.pairs as f64);
+        assert!(rel < 0.05, "pair counts diverge: {rel}");
+        // both produce finite, non-degenerate embeddings
+        for e in [&e1, &e4] {
+            assert!(e.data.iter().all(|x| x.is_finite()));
+            let norm: f32 = e.row(0).iter().map(|x| x * x).sum();
+            assert!(norm > 0.0);
+        }
+    }
+
+    #[test]
+    fn loss_monitoring_is_positive_and_finite() {
+        let (corpus, vocab, _) = tiny_setup();
+        let cfg = SgnsConfig {
+            dim: 8,
+            epochs: 2,
+            ..Default::default()
+        };
+        let (_, stats) = train(&corpus, &vocab, &cfg, 2, 11);
+        assert!(stats.final_epoch_loss.is_finite());
+        assert!(stats.final_epoch_loss > 0.0);
+        // a trained model should beat the untrained loss (1+k)·ln2 ≈ 4.16
+        let untrained = (1.0 + cfg.negatives as f64) * std::f64::consts::LN_2;
+        assert!(
+            stats.final_epoch_loss < untrained,
+            "loss {} should be below untrained {}",
+            stats.final_epoch_loss,
+            untrained
+        );
+    }
+}

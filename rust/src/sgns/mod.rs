@@ -1,0 +1,9 @@
+//! SGNS (skip-gram with negative sampling): configuration, negative
+//! sampling, batch assembly, and the two trainer implementations —
+//! the PJRT-backed per-reducer trainer (the paper system's engine) and
+//! the lock-free Hogwild CPU baseline the paper compares against.
+pub mod batch;
+pub mod config;
+pub mod hogwild;
+pub mod negative;
+pub mod trainer;

@@ -1,0 +1,199 @@
+//! Negative sampling from the unigram^0.75 noise distribution.
+//!
+//! word2vec draws k negatives per positive from P(w) ∝ count(w)^{3/4}.
+//! The original implementation materializes a 100M-slot table; we use
+//! Walker's alias method instead: same O(1) draw, O(V) memory, exact
+//! probabilities. An optional CDF binary-search sampler is kept as the
+//! ablation comparator (`cargo bench --bench perf_hotpath`).
+
+use crate::util::rng::Pcg64;
+
+/// Alias-method sampler over word ids.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from unnormalized weights.
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "empty weight vector");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must have positive mass");
+        let scale = n as f64 / total;
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * scale).collect();
+        let mut alias: Vec<u32> = (0..n as u32).collect();
+        let mut small: Vec<u32> = Vec::with_capacity(n);
+        let mut large: Vec<u32> = Vec::with_capacity(n);
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            // large donates its excess to small
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // leftovers are numerically 1.0
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        Self { prob, alias }
+    }
+
+    /// Build the word2vec noise distribution count^power (power = 0.75).
+    pub fn unigram_noise(counts: &[u64], power: f64) -> Self {
+        let weights: Vec<f64> = counts.iter().map(|&c| (c as f64).powf(power)).collect();
+        Self::new(&weights)
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        let n = self.prob.len();
+        let i = rng.gen_range_usize(n);
+        if rng.gen_f64() < self.prob[i] {
+            i as u32
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+/// CDF + binary-search sampler — the ablation baseline for the alias table.
+#[derive(Clone, Debug)]
+pub struct CdfTable {
+    cdf: Vec<f64>,
+}
+
+impl CdfTable {
+    pub fn new(weights: &[f64]) -> Self {
+        let mut cdf: Vec<f64> = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in weights {
+            acc += w;
+            cdf.push(acc);
+        }
+        for c in &mut cdf {
+            *c /= acc;
+        }
+        Self { cdf }
+    }
+
+    pub fn unigram_noise(counts: &[u64], power: f64) -> Self {
+        let weights: Vec<f64> = counts.iter().map(|&c| (c as f64).powf(power)).collect();
+        Self::new(&weights)
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> u32 {
+        let u = rng.gen_f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => ((i + 1).min(self.cdf.len() - 1)) as u32,
+            Err(i) => (i.min(self.cdf.len() - 1)) as u32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(table: &AliasTable, draws: usize, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        let mut counts = vec![0u64; n];
+        for _ in 0..draws {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / draws as f64).collect()
+    }
+
+    #[test]
+    fn alias_matches_target_distribution() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let table = AliasTable::new(&weights);
+        let freq = empirical(&table, 200_000, 4, 1);
+        for (i, w) in weights.iter().enumerate() {
+            let expect = w / 10.0;
+            assert!(
+                (freq[i] - expect).abs() < 0.01,
+                "slot {i}: got {} want {expect}",
+                freq[i]
+            );
+        }
+    }
+
+    #[test]
+    fn alias_handles_degenerate_single_element() {
+        let table = AliasTable::new(&[5.0]);
+        let mut rng = Pcg64::new(2);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn alias_handles_zero_weights() {
+        let table = AliasTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..1000 {
+            let s = table.sample(&mut rng);
+            assert!(s == 1 || s == 3, "sampled zero-weight slot {s}");
+        }
+    }
+
+    #[test]
+    fn unigram_power_flattens_distribution() {
+        // ^0.75 must give the tail more mass than raw counts
+        let counts = [1000u64, 10];
+        let raw = AliasTable::unigram_noise(&counts, 1.0);
+        let flat = AliasTable::unigram_noise(&counts, 0.75);
+        let f_raw = empirical(&raw, 100_000, 2, 4)[1];
+        let f_flat = empirical(&flat, 100_000, 2, 4)[1];
+        assert!(f_flat > f_raw, "0.75 power should upweight rare words");
+    }
+
+    #[test]
+    fn cdf_and_alias_agree() {
+        let weights = [0.5, 0.1, 3.0, 1.2, 0.7];
+        let alias = AliasTable::new(&weights);
+        let cdf = CdfTable::new(&weights);
+        let mut rng1 = Pcg64::new(5);
+        let mut rng2 = Pcg64::new(6);
+        let n = 100_000;
+        let mut c1 = vec![0u64; 5];
+        let mut c2 = vec![0u64; 5];
+        for _ in 0..n {
+            c1[alias.sample(&mut rng1) as usize] += 1;
+            c2[cdf.sample(&mut rng2) as usize] += 1;
+        }
+        for i in 0..5 {
+            let f1 = c1[i] as f64 / n as f64;
+            let f2 = c2[i] as f64 / n as f64;
+            assert!((f1 - f2).abs() < 0.012, "slot {i}: alias {f1} cdf {f2}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive mass")]
+    fn rejects_all_zero_weights() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

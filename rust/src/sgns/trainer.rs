@@ -1,0 +1,151 @@
+//! The PJRT-backed SGNS trainer: one instance per reducer/sub-model.
+//!
+//! Wires the streaming [`BatchBuilder`] to a device-resident [`SubModel`]:
+//! sentences come in from the mapper, full macro-batches are dispatched to
+//! the AOT executable, the learning rate follows the word2vec linear decay
+//! on the dispatched-pair counter, and per-word receive counts drive the
+//! sub-model's presence mask (paper §4.2: per-sub-model frequency
+//! threshold 100/k).
+
+use super::batch::{BatchBuilder, BatchShape, MacroBatch};
+use super::config::SgnsConfig;
+use super::negative::AliasTable;
+use crate::embedding::Embedding;
+use crate::runtime::client::Runtime;
+use crate::runtime::params::{Metrics, SubModel};
+use crate::text::vocab::Vocab;
+use crate::util::rng::Pcg64;
+
+pub struct SubModelTrainer<'rt> {
+    rt: &'rt Runtime,
+    model: SubModel,
+    builder: BatchBuilder,
+    cfg: SgnsConfig,
+    actual_vocab: usize,
+    /// expected total pairs across all epochs (lr schedule denominator)
+    expected_pairs: u64,
+    /// pairs already sent to the device (lr schedule numerator)
+    dispatched_pairs: u64,
+    /// per-word tokens routed to this sub-model (presence mask)
+    seen_counts: Vec<u64>,
+    /// reusable emission buffer (steady-state: capacity stays allocated)
+    ready: Vec<MacroBatch>,
+    pub sentences_received: u64,
+    /// cumulative wall-clock spent in device dispatches — the per-reducer
+    /// "busy time" a dedicated cluster node would experience as its train
+    /// phase (Table 4's per-model training time)
+    pub device_secs: f64,
+}
+
+impl<'rt> SubModelTrainer<'rt> {
+    /// `expected_pairs` should estimate the total pairs this trainer will
+    /// see over the whole run (tokens_routed × window × epochs) — it only
+    /// shapes the lr decay.
+    pub fn new(
+        rt: &'rt Runtime,
+        vocab: &Vocab,
+        cfg: &SgnsConfig,
+        expected_pairs: u64,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let a = &rt.artifact;
+        assert!(vocab.len() <= a.vocab, "vocab exceeds artifact capacity");
+        assert_eq!(cfg.dim, a.dim, "dim mismatch with artifact");
+        let shape = BatchShape {
+            batch: a.batch,
+            steps: a.steps,
+            negatives: a.negatives,
+            vocab: a.vocab, // padding sentinel = artifact vocab
+        };
+        let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
+        let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
+        let builder = BatchBuilder::new(
+            shape,
+            cfg.window,
+            keep,
+            noise,
+            Pcg64::new_stream(seed, 0x6261), // "ba"
+        );
+        Ok(Self {
+            rt,
+            model: SubModel::init(rt, seed)?,
+            builder,
+            cfg: cfg.clone(),
+            actual_vocab: vocab.len(),
+            expected_pairs: expected_pairs.max(1),
+            dispatched_pairs: 0,
+            seen_counts: vec![0; vocab.len()],
+            ready: Vec::new(),
+            sentences_received: 0,
+            device_secs: 0.0,
+        })
+    }
+
+    fn drain_ready(&mut self) -> Result<(), String> {
+        // take the buffer to avoid borrowing self twice
+        let mut ready = std::mem::take(&mut self.ready);
+        for mb in ready.drain(..) {
+            let lr = self.cfg.lr_at(self.dispatched_pairs, self.expected_pairs);
+            self.dispatched_pairs += mb.real_pairs as u64;
+            let t = std::time::Instant::now();
+            self.model
+                .train_macro_batch(self.rt, &mb.centers, &mb.ctx, &mb.weights, lr)?;
+            self.device_secs += t.elapsed().as_secs_f64();
+        }
+        self.ready = ready; // keep the allocation
+        Ok(())
+    }
+
+    /// Feed one sentence; dispatches to the device whenever macro-batches
+    /// fill up. `sentence_id` must identify the (epoch, sentence) pair so
+    /// pair extraction is independent of delivery order.
+    pub fn push_sentence(&mut self, sentence_id: u64, sentence: &[u32]) -> Result<(), String> {
+        self.sentences_received += 1;
+        for &w in sentence {
+            if (w as usize) < self.actual_vocab {
+                self.seen_counts[w as usize] += 1;
+            }
+        }
+        let ready = &mut self.ready;
+        self.builder.push_sentence(sentence_id, sentence, &mut |mb| ready.push(mb));
+        if self.ready.is_empty() {
+            Ok(())
+        } else {
+            self.drain_ready()
+        }
+    }
+
+    /// Flush the partial batch (padded) — call at the end of every epoch.
+    pub fn flush(&mut self) -> Result<(), String> {
+        let ready = &mut self.ready;
+        self.builder.flush(&mut |mb| ready.push(mb));
+        self.drain_ready()
+    }
+
+    pub fn pairs_emitted(&self) -> u64 {
+        self.builder.pairs_emitted
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.model.dispatches
+    }
+
+    pub fn metrics(&self) -> Result<Metrics, String> {
+        self.model.metrics(self.rt)
+    }
+
+    /// Words this trainer would mark present at threshold `min_count`.
+    pub fn present_mask(&self, min_count: u64) -> Vec<bool> {
+        self.seen_counts
+            .iter()
+            .map(|&c| c >= min_count.max(1))
+            .collect()
+    }
+
+    /// Finish training: flush, apply the presence threshold, download `W`.
+    pub fn into_embedding(mut self, min_count: u64) -> Result<Embedding, String> {
+        self.flush()?;
+        let present = self.present_mask(min_count);
+        self.model.into_embedding(self.rt, self.actual_vocab, present)
+    }
+}

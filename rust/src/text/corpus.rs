@@ -1,0 +1,245 @@
+//! Token-id corpus: in-memory store + sharded binary on-disk format.
+//!
+//! Sentences are `Vec<u32>` over a frozen [`super::vocab::Vocab`]. The
+//! binary format is deliberately simple and streaming-friendly:
+//!
+//! ```text
+//! shard file  := MAGIC u32 | VERSION u32 | n_sentences u64 | sentence*
+//! sentence    := len u32 | token u32 × len
+//! ```
+//!
+//! Shards let the mapper side of the MapReduce runtime assign contiguous
+//! shard ranges to mapper threads (paper: HDFS splits → mappers).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: u32 = 0x6457_3256; // "dW2V"
+const VERSION: u32 = 1;
+
+/// In-memory corpus of id-encoded sentences.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Corpus {
+    pub sentences: Vec<Vec<u32>>,
+}
+
+impl Corpus {
+    pub fn new(sentences: Vec<Vec<u32>>) -> Self {
+        Self { sentences }
+    }
+
+    pub fn len(&self) -> usize {
+        self.sentences.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sentences.is_empty()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.sentences.iter().map(|s| s.len() as u64).sum()
+    }
+
+    /// Contiguous slice of sentences for mapper shard `shard` of `num`.
+    pub fn shard_range(&self, shard: usize, num: usize) -> std::ops::Range<usize> {
+        let chunk = self.len().div_ceil(num.max(1));
+        let lo = (shard * chunk).min(self.len());
+        let hi = ((shard + 1) * chunk).min(self.len());
+        lo..hi
+    }
+
+    /// A sub-corpus restricted to the first `frac` of sentences — used by
+    /// the Figure-2 proportion sweep.
+    pub fn proportion(&self, frac: f64) -> Corpus {
+        let n = ((self.len() as f64) * frac.clamp(0.0, 1.0)).round() as usize;
+        Corpus::new(self.sentences[..n].to_vec())
+    }
+
+    // ---- binary shard I/O --------------------------------------------------
+
+    pub fn write_shard(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.sentences.len() as u64).to_le_bytes())?;
+        for s in &self.sentences {
+            w.write_all(&(s.len() as u32).to_le_bytes())?;
+            for &t in s {
+                w.write_all(&t.to_le_bytes())?;
+            }
+        }
+        w.flush()
+    }
+
+    pub fn read_shard(path: &Path) -> std::io::Result<Corpus> {
+        let mut r = BufReader::new(File::open(path)?);
+        let magic = read_u32(&mut r)?;
+        if magic != MAGIC {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("bad magic {magic:#x} in {}", path.display()),
+            ));
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("unsupported corpus version {version}"),
+            ));
+        }
+        let n = read_u64(&mut r)? as usize;
+        let mut sentences = Vec::with_capacity(n);
+        for _ in 0..n {
+            let len = read_u32(&mut r)? as usize;
+            let mut buf = vec![0u8; len * 4];
+            r.read_exact(&mut buf)?;
+            let sent = buf
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            sentences.push(sent);
+        }
+        Ok(Corpus { sentences })
+    }
+
+    /// Write the corpus as `num_shards` files `<dir>/shard_<i>.bin`.
+    pub fn write_sharded(&self, dir: &Path, num_shards: usize) -> std::io::Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(dir)?;
+        let mut paths = Vec::with_capacity(num_shards);
+        for i in 0..num_shards {
+            let range = self.shard_range(i, num_shards);
+            let sub = Corpus::new(self.sentences[range].to_vec());
+            let path = dir.join(format!("shard_{i}.bin"));
+            sub.write_shard(&path)?;
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+
+    /// Load every `shard_*.bin` in a directory, in shard order.
+    pub fn read_sharded(dir: &Path) -> std::io::Result<Corpus> {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        entries.sort_by_key(|p| {
+            p.file_stem()
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.strip_prefix("shard_"))
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(usize::MAX)
+        });
+        let mut all = Corpus::default();
+        for path in entries {
+            all.sentences.extend(Self::read_shard(&path)?.sentences);
+        }
+        Ok(all)
+    }
+}
+
+fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Corpus {
+        Corpus::new(vec![vec![1, 2, 3], vec![], vec![7], vec![4, 4, 4, 4]])
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dw2v_corpus_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn token_counts() {
+        let c = sample();
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.total_tokens(), 8);
+    }
+
+    #[test]
+    fn shard_ranges_partition() {
+        let c = Corpus::new((0..10).map(|i| vec![i]).collect());
+        let mut seen = Vec::new();
+        for s in 0..3 {
+            seen.extend(c.shard_range(s, 3));
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        // more shards than sentences still partitions
+        let mut seen2 = Vec::new();
+        for s in 0..20 {
+            seen2.extend(c.shard_range(s, 20));
+        }
+        assert_eq!(seen2, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn proportion_slices() {
+        let c = Corpus::new((0..100).map(|i| vec![i]).collect());
+        assert_eq!(c.proportion(0.25).len(), 25);
+        assert_eq!(c.proportion(1.0).len(), 100);
+        assert_eq!(c.proportion(0.0).len(), 0);
+    }
+
+    #[test]
+    fn single_shard_roundtrip() {
+        let dir = tmpdir("single");
+        let path = dir.join("x.bin");
+        let c = sample();
+        c.write_shard(&path).unwrap();
+        let back = Corpus::read_shard(&path).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn sharded_roundtrip_preserves_order() {
+        let dir = tmpdir("sharded");
+        let c = Corpus::new((0..57).map(|i| vec![i, i + 1]).collect());
+        let paths = c.write_sharded(&dir, 5).unwrap();
+        assert_eq!(paths.len(), 5);
+        let back = Corpus::read_sharded(&dir).unwrap();
+        assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_corrupt_files() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"not a corpus").unwrap();
+        assert!(Corpus::read_shard(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_corpus_roundtrip() {
+        let dir = tmpdir("empty");
+        let path = dir.join("e.bin");
+        let c = Corpus::default();
+        c.write_shard(&path).unwrap();
+        assert_eq!(Corpus::read_shard(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,4 @@
+//! Text pipeline: tokenization, vocabulary, token-id corpus storage.
+pub mod corpus;
+pub mod tokenize;
+pub mod vocab;

@@ -1,0 +1,95 @@
+//! Tokenization and sentence splitting.
+//!
+//! The paper pre-processes Wikipedia/Web by removing non-textual elements,
+//! sentence splitting and tokenization. This module provides the same
+//! pipeline for raw-text ingestion: unicode-aware lowercasing, alphanumeric
+//! token extraction, and sentence segmentation on terminal punctuation.
+
+/// Split raw text into sentences on `.`, `!`, `?` and newlines, skipping
+/// empties.
+pub fn split_sentences(text: &str) -> Vec<&str> {
+    text.split(|c| matches!(c, '.' | '!' | '?' | '\n'))
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+/// Tokenize one sentence: lowercase alphanumeric runs; apostrophes are kept
+/// inside words ("don't"), every other character is a separator.
+pub fn tokenize(sentence: &str) -> Vec<String> {
+    let mut tokens = Vec::new();
+    let mut current = String::new();
+    for ch in sentence.chars() {
+        if ch.is_alphanumeric() || (ch == '\'' && !current.is_empty()) {
+            for lc in ch.to_lowercase() {
+                current.push(lc);
+            }
+        } else if !current.is_empty() {
+            tokens.push(std::mem::take(&mut current).trim_end_matches('\'').to_string());
+        }
+    }
+    if !current.is_empty() {
+        tokens.push(current.trim_end_matches('\'').to_string());
+    }
+    tokens.retain(|t| !t.is_empty());
+    tokens
+}
+
+/// Full pipeline: raw text → tokenized sentences.
+pub fn sentences_of(text: &str) -> Vec<Vec<String>> {
+    split_sentences(text)
+        .into_iter()
+        .map(tokenize)
+        .filter(|s| !s.is_empty())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_on_terminal_punctuation() {
+        let s = split_sentences("Hello world. How are you? Fine!\nGreat");
+        assert_eq!(s, vec!["Hello world", "How are you", "Fine", "Great"]);
+    }
+
+    #[test]
+    fn tokenize_lowercases_and_strips_punct() {
+        assert_eq!(
+            tokenize("The Quick, Brown FOX!"),
+            vec!["the", "quick", "brown", "fox"]
+        );
+    }
+
+    #[test]
+    fn keeps_interior_apostrophes() {
+        assert_eq!(tokenize("Don't stop"), vec!["don't", "stop"]);
+        // leading/trailing apostrophes are separators/stripped
+        assert_eq!(tokenize("'quoted' word'"), vec!["quoted", "word"]);
+    }
+
+    #[test]
+    fn numbers_survive() {
+        assert_eq!(tokenize("in 1984 there were 2 pigs"), vec![
+            "in", "1984", "there", "were", "2", "pigs"
+        ]);
+    }
+
+    #[test]
+    fn unicode_lowercase() {
+        assert_eq!(tokenize("Überraschung CAFÉ"), vec!["überraschung", "café"]);
+    }
+
+    #[test]
+    fn full_pipeline_skips_empty_sentences() {
+        let out = sentences_of("First one. ... Second two.");
+        assert_eq!(out, vec![vec!["first", "one"], vec!["second", "two"]]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(sentences_of("").is_empty());
+        assert!(tokenize("!!!").is_empty());
+    }
+}

@@ -1,0 +1,301 @@
+//! Vocabulary: word ↔ id mapping, frequency statistics, subsampling.
+//!
+//! Mirrors word2vec/Gensim semantics: words are ranked by corpus frequency,
+//! the vocabulary is capped to the most frequent `max_size` words above
+//! `min_count`, and frequent-word subsampling uses the word2vec keep
+//! probability `(sqrt(f/t) + 1) · t/f`.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    words: Vec<String>,
+    counts: Vec<u64>,
+    index: HashMap<String, u32>,
+    total_tokens: u64,
+}
+
+/// Incremental counter used before freezing into a `Vocab`.
+#[derive(Default, Clone, Debug)]
+pub struct VocabBuilder {
+    counts: HashMap<String, u64>,
+    total: u64,
+}
+
+impl VocabBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_token(&mut self, token: &str) {
+        *self.counts.entry(token.to_string()).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    pub fn add_sentence<S: AsRef<str>>(&mut self, tokens: &[S]) {
+        for t in tokens {
+            self.add_token(t.as_ref());
+        }
+    }
+
+    /// Merge another builder's counts into this one (mapper-side partials).
+    pub fn merge(&mut self, other: VocabBuilder) {
+        for (w, c) in other.counts {
+            *self.counts.entry(w).or_insert(0) += c;
+        }
+        self.total += other.total;
+    }
+
+    /// Freeze: keep words with count ≥ `min_count`, capped at the
+    /// `max_size` most frequent; ids are assigned by descending frequency
+    /// (ties broken lexicographically for determinism).
+    pub fn build(self, min_count: u64, max_size: usize) -> Vocab {
+        let mut entries: Vec<(String, u64)> = self
+            .counts
+            .into_iter()
+            .filter(|(_, c)| *c >= min_count)
+            .collect();
+        entries.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        entries.truncate(max_size);
+        let mut words = Vec::with_capacity(entries.len());
+        let mut counts = Vec::with_capacity(entries.len());
+        let mut index = HashMap::with_capacity(entries.len());
+        for (i, (w, c)) in entries.into_iter().enumerate() {
+            index.insert(w.clone(), i as u32);
+            words.push(w);
+            counts.push(c);
+        }
+        Vocab {
+            words,
+            counts,
+            index,
+            total_tokens: self.total,
+        }
+    }
+}
+
+impl Vocab {
+    /// Build preserving the given id order (no frequency re-ranking). Used
+    /// by the synthetic generator, where corpus token ids must stay
+    /// identical to generator word ids.
+    pub fn from_ordered(pairs: Vec<(String, u64)>) -> Self {
+        let mut words = Vec::with_capacity(pairs.len());
+        let mut counts = Vec::with_capacity(pairs.len());
+        let mut index = HashMap::with_capacity(pairs.len());
+        let mut total = 0;
+        for (i, (w, c)) in pairs.into_iter().enumerate() {
+            index.insert(w.clone(), i as u32);
+            words.push(w);
+            counts.push(c);
+            total += c;
+        }
+        Vocab {
+            words,
+            counts,
+            index,
+            total_tokens: total,
+        }
+    }
+
+    /// Build directly from known (word, count) pairs — used by the synthetic
+    /// generator where words are just `w<id>`.
+    pub fn from_counts(pairs: Vec<(String, u64)>) -> Self {
+        let mut b = VocabBuilder::new();
+        for (w, c) in &pairs {
+            b.counts.insert(w.clone(), *c);
+            b.total += *c;
+        }
+        b.build(1, usize::MAX)
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn id(&self, word: &str) -> Option<u32> {
+        self.index.get(word).copied()
+    }
+
+    pub fn word(&self, id: u32) -> &str {
+        &self.words[id as usize]
+    }
+
+    pub fn count(&self, id: u32) -> u64 {
+        self.counts[id as usize]
+    }
+
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total tokens seen at build time (including out-of-vocab tokens).
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// In-vocabulary token mass.
+    pub fn in_vocab_tokens(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Unigram probability of an in-vocab word (relative to in-vocab mass).
+    pub fn unigram_prob(&self, id: u32) -> f64 {
+        self.counts[id as usize] as f64 / self.in_vocab_tokens().max(1) as f64
+    }
+
+    /// word2vec keep-probability for frequent-word subsampling with
+    /// threshold `t`; returns 1.0 for rare words.
+    pub fn keep_probability(&self, id: u32, t: f64) -> f64 {
+        if t <= 0.0 {
+            return 1.0;
+        }
+        let f = self.unigram_prob(id);
+        if f <= t {
+            return 1.0;
+        }
+        ((t / f).sqrt() + t / f).min(1.0)
+    }
+
+    /// Map a tokenized sentence to ids, dropping OOV tokens.
+    pub fn encode<S: AsRef<str>>(&self, tokens: &[S]) -> Vec<u32> {
+        tokens
+            .iter()
+            .filter_map(|t| self.id(t.as_ref()))
+            .collect()
+    }
+
+    /// Serialize as TSV lines `word<TAB>count`.
+    pub fn to_tsv(&self) -> String {
+        let mut out = String::new();
+        for (w, c) in self.words.iter().zip(&self.counts) {
+            out.push_str(w);
+            out.push('\t');
+            out.push_str(&c.to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_tsv(text: &str) -> Result<Self, String> {
+        let mut pairs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let (w, c) = line
+                .split_once('\t')
+                .ok_or_else(|| format!("line {}: missing tab", lineno + 1))?;
+            let count: u64 = c
+                .parse()
+                .map_err(|_| format!("line {}: bad count '{c}'", lineno + 1))?;
+            pairs.push((w.to_string(), count));
+        }
+        Ok(Self::from_counts(pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_vocab() -> Vocab {
+        let mut b = VocabBuilder::new();
+        for (w, n) in [("the", 50), ("cat", 10), ("sat", 10), ("rare", 1)] {
+            for _ in 0..n {
+                b.add_token(w);
+            }
+        }
+        b.build(1, usize::MAX)
+    }
+
+    #[test]
+    fn ids_ordered_by_frequency() {
+        let v = sample_vocab();
+        assert_eq!(v.word(0), "the");
+        assert_eq!(v.count(0), 50);
+        // ties broken lexicographically: cat before sat
+        assert_eq!(v.word(1), "cat");
+        assert_eq!(v.word(2), "sat");
+        assert_eq!(v.id("rare"), Some(3));
+    }
+
+    #[test]
+    fn min_count_and_cap() {
+        let mut b = VocabBuilder::new();
+        for (w, n) in [("a", 5), ("b", 4), ("c", 3), ("d", 1)] {
+            for _ in 0..n {
+                b.add_token(w);
+            }
+        }
+        let v = b.clone().build(3, usize::MAX);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.id("d"), None);
+        let capped = b.build(1, 2);
+        assert_eq!(capped.len(), 2);
+        assert_eq!(capped.word(0), "a");
+    }
+
+    #[test]
+    fn encode_drops_oov() {
+        let v = sample_vocab();
+        let ids = v.encode(&["the", "unknown", "cat"]);
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn keep_probability_penalizes_frequent_words() {
+        let v = sample_vocab();
+        let p_the = v.keep_probability(0, 1e-2);
+        let p_rare = v.keep_probability(3, 1e-2);
+        assert!(p_the < 1.0);
+        assert_eq!(p_rare, 1.0);
+        assert!(p_the > 0.0);
+    }
+
+    #[test]
+    fn keep_probability_disabled_with_zero_threshold() {
+        let v = sample_vocab();
+        assert_eq!(v.keep_probability(0, 0.0), 1.0);
+    }
+
+    #[test]
+    fn merge_combines_counts() {
+        let mut a = VocabBuilder::new();
+        a.add_sentence(&["x", "y"]);
+        let mut b = VocabBuilder::new();
+        b.add_sentence(&["y", "z"]);
+        a.merge(b);
+        let v = a.build(1, usize::MAX);
+        assert_eq!(v.count(v.id("y").unwrap()), 2);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.total_tokens(), 4);
+    }
+
+    #[test]
+    fn tsv_roundtrip() {
+        let v = sample_vocab();
+        let v2 = Vocab::from_tsv(&v.to_tsv()).unwrap();
+        assert_eq!(v2.len(), v.len());
+        for i in 0..v.len() as u32 {
+            assert_eq!(v2.word(i), v.word(i));
+            assert_eq!(v2.count(i), v.count(i));
+        }
+    }
+
+    #[test]
+    fn tsv_rejects_malformed() {
+        assert!(Vocab::from_tsv("word_without_tab").is_err());
+        assert!(Vocab::from_tsv("w\tnotanumber").is_err());
+    }
+
+    #[test]
+    fn unigram_probs_sum_to_one() {
+        let v = sample_vocab();
+        let total: f64 = (0..v.len() as u32).map(|i| v.unigram_prob(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+}

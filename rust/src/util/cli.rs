@@ -1,0 +1,242 @@
+//! Declarative command-line flag parsing (clap is unavailable offline).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments; generates `--help` text from the declarations.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Clone)]
+struct FlagSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_bool: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, CliError> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| CliError(format!("--{name}: expected number, got '{v}'"))),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Builder for one command's flag set.
+pub struct Command {
+    name: String,
+    about: String,
+    flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            about: about.to_string(),
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &str, default: Option<&str>, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: default.map(|s| s.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push(FlagSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nflags:\n", self.name, self.about);
+        for f in &self.flags {
+            let default = f
+                .default
+                .as_ref()
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            let kind = if f.is_bool { "" } else { " <value>" };
+            out.push_str(&format!("  --{}{kind}\t{}{default}\n", f.name, f.help));
+        }
+        out
+    }
+
+    /// Parse raw argv (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                values.insert(f.name.clone(), d.clone());
+            }
+        }
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.usage()));
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError(format!("unknown flag --{name}\n\n{}", self.usage())))?;
+                if spec.is_bool {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    bools.insert(name, true);
+                } else {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} needs a value")))?
+                        }
+                    };
+                    values.insert(name, value);
+                }
+            } else {
+                positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(Args {
+            values,
+            bools,
+            positional,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("train", "train things")
+            .flag("epochs", Some("3"), "number of epochs")
+            .flag("out", None, "output path")
+            .bool_flag("verbose", "chatty mode")
+    }
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(3));
+        assert_eq!(a.get("out"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn parses_space_and_equals_forms() {
+        let a = cmd()
+            .parse(&argv(&["--epochs", "7", "--out=/tmp/x", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(7));
+        assert_eq!(a.get("out"), Some("/tmp/x"));
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_bad_types() {
+        assert!(cmd().parse(&argv(&["--nope", "1"])).is_err());
+        let a = cmd().parse(&argv(&["--epochs", "abc"])).unwrap();
+        assert!(a.get_usize("epochs").is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&argv(&["--out"])).is_err());
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("--epochs"));
+        assert!(err.0.contains("default: 3"));
+    }
+}

@@ -1,0 +1,319 @@
+//! Experiment configuration: one flat struct covering every phase knob,
+//! loadable from JSON with CLI overrides. This is the single source of
+//! truth an experiment run is reproducible from (together with `seed`).
+
+use super::json::{num, obj, s, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum DivideStrategy {
+    /// Sequential split into equal contiguous chunks (paper: EQUAL PARTITIONING).
+    EqualPartitioning,
+    /// Fixed per-sub-corpus random sample, identical across epochs.
+    RandomSampling,
+    /// Fresh random sample per epoch (the paper's Shuffle contribution).
+    Shuffle,
+}
+
+impl DivideStrategy {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "equal" | "equal_partitioning" => Some(Self::EqualPartitioning),
+            "random" | "random_sampling" => Some(Self::RandomSampling),
+            "shuffle" => Some(Self::Shuffle),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::EqualPartitioning => "equal",
+            Self::RandomSampling => "random",
+            Self::Shuffle => "shuffle",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum MergeMethod {
+    Concat,
+    Pca,
+    AlirRand,
+    AlirPca,
+    /// Use a single sub-model unmerged (paper's SINGLE MODEL row).
+    Single,
+}
+
+impl MergeMethod {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "concat" => Some(Self::Concat),
+            "pca" => Some(Self::Pca),
+            "alir_rand" | "alir-rand" => Some(Self::AlirRand),
+            "alir_pca" | "alir-pca" | "alir" => Some(Self::AlirPca),
+            "single" => Some(Self::Single),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Concat => "concat",
+            Self::Pca => "pca",
+            Self::AlirRand => "alir_rand",
+            Self::AlirPca => "alir_pca",
+            Self::Single => "single",
+        }
+    }
+}
+
+/// Full experiment configuration. Defaults reproduce the quickstart run.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+
+    // -- synthetic corpus ---------------------------------------------------
+    pub sentences: usize,
+    pub vocab: usize,
+    pub clusters: usize,
+    pub truth_dim: usize,
+    pub zipf_exponent: f64,
+    pub avg_sentence_len: usize,
+
+    // -- SGNS hyperparameters ----------------------------------------------
+    pub dim: usize,
+    pub window: usize,
+    pub negatives: usize,
+    pub subsample_t: f64,
+    pub lr0: f32,
+    pub lr_min: f32,
+    pub epochs: usize,
+    pub min_count_base: f64, // per-sub-model threshold = min_count_base / n_models
+
+    // -- divide phase --------------------------------------------------------
+    pub strategy: DivideStrategy,
+    pub rate_percent: f64, // r% — number of sub-models = 100/r
+
+    // -- merge phase ---------------------------------------------------------
+    pub merge: MergeMethod,
+    pub alir_rounds: usize,
+    pub alir_tol: f64,
+
+    // -- execution shape ------------------------------------------------------
+    pub mappers: usize,
+    pub queue_capacity: usize,
+    pub artifact_dir: String,
+    pub trainer_batch: usize,
+    pub trainer_steps: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            sentences: 20_000,
+            vocab: 2000,
+            clusters: 40,
+            truth_dim: 16,
+            zipf_exponent: 1.0,
+            avg_sentence_len: 18,
+            dim: 32,
+            window: 5,
+            negatives: 5,
+            subsample_t: 1e-3,
+            lr0: 0.05,
+            lr_min: 0.0001,
+            epochs: 3,
+            min_count_base: 100.0,
+            strategy: DivideStrategy::Shuffle,
+            rate_percent: 10.0,
+            merge: MergeMethod::AlirPca,
+            alir_rounds: 3,
+            alir_tol: 1e-4,
+            mappers: 2,
+            queue_capacity: 128,
+            artifact_dir: "artifacts".to_string(),
+            trainer_batch: 64,
+            trainer_steps: 4,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Number of sub-models implied by the sampling rate.
+    pub fn num_submodels(&self) -> usize {
+        ((100.0 / self.rate_percent).round() as usize).max(1)
+    }
+
+    /// Per-sub-model vocabulary threshold (paper §4.2: 100/k).
+    pub fn submodel_min_count(&self) -> u64 {
+        (self.min_count_base / self.num_submodels() as f64).ceil() as u64
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("seed", num(self.seed as f64)),
+            ("sentences", num(self.sentences as f64)),
+            ("vocab", num(self.vocab as f64)),
+            ("clusters", num(self.clusters as f64)),
+            ("truth_dim", num(self.truth_dim as f64)),
+            ("zipf_exponent", num(self.zipf_exponent)),
+            ("avg_sentence_len", num(self.avg_sentence_len as f64)),
+            ("dim", num(self.dim as f64)),
+            ("window", num(self.window as f64)),
+            ("negatives", num(self.negatives as f64)),
+            ("subsample_t", num(self.subsample_t)),
+            ("lr0", num(self.lr0 as f64)),
+            ("lr_min", num(self.lr_min as f64)),
+            ("epochs", num(self.epochs as f64)),
+            ("min_count_base", num(self.min_count_base)),
+            ("strategy", s(self.strategy.name())),
+            ("rate_percent", num(self.rate_percent)),
+            ("merge", s(self.merge.name())),
+            ("alir_rounds", num(self.alir_rounds as f64)),
+            ("alir_tol", num(self.alir_tol)),
+            ("mappers", num(self.mappers as f64)),
+            ("queue_capacity", num(self.queue_capacity as f64)),
+            ("artifact_dir", s(&self.artifact_dir)),
+            ("trainer_batch", num(self.trainer_batch as f64)),
+            ("trainer_steps", num(self.trainer_steps as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let mut cfg = Self::default();
+        let o = j.as_obj().ok_or("config must be a JSON object")?;
+        for (key, val) in o {
+            cfg.apply(key, &value_to_string(val))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one `key=value` override (CLI flags and JSON funnel here).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(k: &str, v: &str) -> Result<T, String> {
+            v.parse()
+                .map_err(|_| format!("bad value '{v}' for config key '{k}'"))
+        }
+        match key {
+            "seed" => self.seed = p(key, value)?,
+            "sentences" => self.sentences = p(key, value)?,
+            "vocab" => self.vocab = p(key, value)?,
+            "clusters" => self.clusters = p(key, value)?,
+            "truth_dim" => self.truth_dim = p(key, value)?,
+            "zipf_exponent" => self.zipf_exponent = p(key, value)?,
+            "avg_sentence_len" => self.avg_sentence_len = p(key, value)?,
+            "dim" => self.dim = p(key, value)?,
+            "window" => self.window = p(key, value)?,
+            "negatives" => self.negatives = p(key, value)?,
+            "subsample_t" => self.subsample_t = p(key, value)?,
+            "lr0" => self.lr0 = p(key, value)?,
+            "lr_min" => self.lr_min = p(key, value)?,
+            "epochs" => self.epochs = p(key, value)?,
+            "min_count_base" => self.min_count_base = p(key, value)?,
+            "strategy" => {
+                self.strategy = DivideStrategy::parse(value)
+                    .ok_or_else(|| format!("unknown strategy '{value}'"))?
+            }
+            "rate_percent" => self.rate_percent = p(key, value)?,
+            "merge" => {
+                self.merge = MergeMethod::parse(value)
+                    .ok_or_else(|| format!("unknown merge method '{value}'"))?
+            }
+            "alir_rounds" => self.alir_rounds = p(key, value)?,
+            "alir_tol" => self.alir_tol = p(key, value)?,
+            "mappers" => self.mappers = p(key, value)?,
+            "queue_capacity" => self.queue_capacity = p(key, value)?,
+            "artifact_dir" => self.artifact_dir = value.to_string(),
+            "trainer_batch" => self.trainer_batch = p(key, value)?,
+            "trainer_steps" => self.trainer_steps = p(key, value)?,
+            _ => return Err(format!("unknown config key '{key}'")),
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+}
+
+fn value_to_string(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrips_through_json() {
+        let cfg = ExperimentConfig::default();
+        let j = cfg.to_json();
+        let back = ExperimentConfig::from_json(&j).unwrap();
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.merge, cfg.merge);
+        assert_eq!(back.rate_percent, cfg.rate_percent);
+        assert_eq!(back.lr0, cfg.lr0);
+    }
+
+    #[test]
+    fn num_submodels_from_rate() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.rate_percent = 10.0;
+        assert_eq!(cfg.num_submodels(), 10);
+        cfg.rate_percent = 1.0;
+        assert_eq!(cfg.num_submodels(), 100);
+        cfg.rate_percent = 33.0;
+        assert_eq!(cfg.num_submodels(), 3);
+        cfg.rate_percent = 100.0;
+        assert_eq!(cfg.num_submodels(), 1);
+    }
+
+    #[test]
+    fn submodel_min_count_scales_with_models() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.min_count_base = 100.0;
+        cfg.rate_percent = 10.0;
+        assert_eq!(cfg.submodel_min_count(), 10);
+        cfg.rate_percent = 50.0;
+        assert_eq!(cfg.submodel_min_count(), 50);
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("strategy", "equal").unwrap();
+        assert_eq!(cfg.strategy, DivideStrategy::EqualPartitioning);
+        cfg.apply("merge", "concat").unwrap();
+        assert_eq!(cfg.merge, MergeMethod::Concat);
+        cfg.apply("epochs", "7").unwrap();
+        assert_eq!(cfg.epochs, 7);
+        assert!(cfg.apply("nonsense", "1").is_err());
+        assert!(cfg.apply("epochs", "x").is_err());
+    }
+
+    #[test]
+    fn strategy_and_merge_names_roundtrip() {
+        for s in [
+            DivideStrategy::EqualPartitioning,
+            DivideStrategy::RandomSampling,
+            DivideStrategy::Shuffle,
+        ] {
+            assert_eq!(DivideStrategy::parse(s.name()), Some(s));
+        }
+        for m in [
+            MergeMethod::Concat,
+            MergeMethod::Pca,
+            MergeMethod::AlirRand,
+            MergeMethod::AlirPca,
+            MergeMethod::Single,
+        ] {
+            assert_eq!(MergeMethod::parse(m.name()), Some(m));
+        }
+    }
+}

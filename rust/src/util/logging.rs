@@ -1,0 +1,130 @@
+//! Leveled stderr logging + scoped wall-clock timers.
+//!
+//! The coordinator reports phase timings (divide/train/merge/eval) through
+//! [`Timer`]; benches and examples read the same numbers the paper's
+//! Table 4 reports.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_env() {
+    if let Ok(v) = std::env::var("DW2V_LOG") {
+        let lvl = match v.to_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            _ => Level::Info,
+        };
+        set_level(lvl);
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, module: &str, msg: &str) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warnln {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debugln {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), &format!($($arg)*))
+    };
+}
+
+/// Scoped wall-clock timer. `stop()` (or `Drop` with logging) returns the
+/// elapsed seconds; phases aggregate these into the run report.
+pub struct Timer {
+    label: String,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Self {
+            label: label.to_string(),
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Stop and log at info level; returns elapsed seconds.
+    pub fn stop(self) -> f64 {
+        let secs = self.elapsed_secs();
+        log(
+            Level::Info,
+            "timer",
+            &format!("{} took {:.3}s", self.label, secs),
+        );
+        secs
+    }
+
+    /// Stop silently; returns elapsed seconds.
+    pub fn stop_quiet(self) -> f64 {
+        self.elapsed_secs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_time() {
+        let t = Timer::start("unit");
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let secs = t.stop_quiet();
+        assert!(secs >= 0.014, "elapsed={secs}");
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

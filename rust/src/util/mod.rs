@@ -1,0 +1,6 @@
+//! Cross-cutting substrates: RNG, JSON, CLI, logging, configuration.
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod rng;

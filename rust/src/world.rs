@@ -1,0 +1,76 @@
+//! Experiment "world" construction: the synthetic corpus, its vocabulary,
+//! the planted ground truth and the gold benchmark suite, all derived
+//! deterministically from one `ExperimentConfig`. Shared by the CLI, the
+//! examples and every bench harness so that rows of the same table are
+//! always measured against the same data.
+
+use crate::gen::benchmarks::{build_suite, Benchmark};
+use crate::gen::corpus::{
+    build_ground_truth, generate_corpus, vocab_of, GeneratorConfig, GroundTruth,
+};
+use crate::text::corpus::Corpus;
+use crate::text::vocab::Vocab;
+use crate::util::config::ExperimentConfig;
+
+pub struct World {
+    pub gt: GroundTruth,
+    pub corpus: Corpus,
+    pub vocab: Vocab,
+    pub suite: Vec<Benchmark>,
+}
+
+/// Build the full synthetic world for a config.
+pub fn build_world(cfg: &ExperimentConfig) -> World {
+    let gcfg = GeneratorConfig {
+        vocab: cfg.vocab,
+        clusters: cfg.clusters,
+        truth_dim: cfg.truth_dim,
+        zipf_exponent: cfg.zipf_exponent,
+        avg_sentence_len: cfg.avg_sentence_len,
+        ..Default::default()
+    };
+    let gt = build_ground_truth(&gcfg, cfg.seed);
+    let corpus = generate_corpus(&gt, cfg.sentences, cfg.seed ^ 0xC0);
+    let vocab = vocab_of(&corpus, cfg.vocab);
+    let suite = build_suite(&gt, cfg.seed ^ 0xBE);
+    World {
+        gt,
+        corpus,
+        vocab,
+        suite,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn world_is_deterministic_and_consistent() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sentences = 200;
+        cfg.vocab = 150;
+        cfg.clusters = 6;
+        let w1 = build_world(&cfg);
+        let w2 = build_world(&cfg);
+        assert_eq!(w1.corpus, w2.corpus);
+        assert_eq!(w1.vocab.len(), 150);
+        assert_eq!(w1.suite.len(), 8);
+        // corpus tokens all within vocab
+        for s in &w1.corpus.sentences {
+            assert!(s.iter().all(|&t| (t as usize) < 150));
+        }
+    }
+
+    #[test]
+    fn different_seeds_different_worlds() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.sentences = 100;
+        cfg.vocab = 100;
+        cfg.clusters = 4;
+        let w1 = build_world(&cfg);
+        cfg.seed = 999;
+        let w2 = build_world(&cfg);
+        assert_ne!(w1.corpus, w2.corpus);
+    }
+}
