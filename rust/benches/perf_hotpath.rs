@@ -1,14 +1,22 @@
 //! Performance micro/meso benches for the hot path — the §Perf evidence.
 //!
 //! Measures, at each layer:
-//!   L3  batch assembly throughput (pairs/s), alias vs CDF negative
+//!   L3  kernel dot-product (scalar reference vs vectorized), the
+//!       contended vs batched pair counter, Hogwild end-to-end pairs/s,
+//!       batch assembly throughput (pairs/s), alias vs CDF negative
 //!       sampling, merge-phase linalg (procrustes / PCA);
 //!   bridge  PJRT dispatch latency per macro-batch and the cost of the
 //!       device-resident design vs a forced host round-trip per step
 //!       (the ablation that justifies the packed single-array state);
 //!   end-to-end  PJRT trainer pairs/s vs the Hogwild scalar baseline.
+//!
+//! The PJRT sections need `artifacts/manifest.json` (`make artifacts`) and
+//! a build with `--features xla`; without either they are skipped so the
+//! CPU rows still land in `bench_results/perf_hotpath.json`.
 
 use dw2v::bench_util::{time_it, Table};
+use dw2v::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
+use dw2v::kernels;
 use dw2v::linalg::mat::Mat;
 use dw2v::linalg::pca;
 use dw2v::linalg::procrustes::orthogonal_procrustes;
@@ -16,17 +24,166 @@ use dw2v::runtime::artifacts::Manifest;
 use dw2v::runtime::client::Runtime;
 use dw2v::runtime::params::SubModel;
 use dw2v::sgns::batch::{BatchBuilder, BatchShape};
+use dw2v::sgns::config::SgnsConfig;
+use dw2v::sgns::hogwild;
 use dw2v::sgns::negative::{AliasTable, CdfTable};
 use dw2v::util::json::{num, obj, s};
 use dw2v::util::rng::Pcg64;
+use std::hint::black_box;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 fn main() {
-    let manifest = Manifest::load(std::path::Path::new("artifacts")).expect("artifacts");
     let mut table = Table::new(
         "perf_hotpath",
         "§Perf — hot-path measurements",
         &["metric", "value"],
     );
+
+    // ---- L3: kernel dot product, scalar reference vs vectorized -------------
+    // d=300 is the realistic upper row length; black_box the inputs per call
+    // so the loop-invariant dot cannot be hoisted.
+    {
+        let d = 300usize;
+        let mut rk = Pcg64::new(11);
+        let a: Vec<f32> = (0..d).map(|_| rk.gen_f32() - 0.5).collect();
+        let b: Vec<f32> = (0..d).map(|_| rk.gen_f32() - 0.5).collect();
+        let reps = 100_000u64;
+        let t_scalar = time_it(2, 7, || {
+            let mut acc = 0.0f32;
+            for _ in 0..reps {
+                acc += kernels::scalar::dot(black_box(&a), black_box(&b));
+            }
+            black_box(acc);
+        });
+        let t_vec = time_it(2, 7, || {
+            let mut acc = 0.0f32;
+            for _ in 0..reps {
+                acc += kernels::dot(black_box(&a), black_box(&b));
+            }
+            black_box(acc);
+        });
+        let flops = (2 * d) as f64 * reps as f64;
+        let scalar_gflops = flops / t_scalar.min_secs / 1e9;
+        let vec_gflops = flops / t_vec.min_secs / 1e9;
+        let speedup = t_scalar.min_secs / t_vec.min_secs;
+        table.row(
+            "kernel dot d=300",
+            vec![
+                "GFLOP/s scalar|vec|x".into(),
+                format!("{scalar_gflops:.2} | {vec_gflops:.2} | {speedup:.2}x"),
+            ],
+            obj(vec![
+                ("bench", s("kernel_dot_d300")),
+                ("scalar_gflops", num(scalar_gflops)),
+                ("vectorized_gflops", num(vec_gflops)),
+                ("speedup", num(speedup)),
+            ]),
+        );
+    }
+
+    // ---- L3: pair counter, contended fetch_add vs batched flush @ 4 threads --
+    // the exact access patterns of the old and new Hogwild lr bookkeeping
+    {
+        let threads = 4usize;
+        let n_per_thread = 2_000_000u64;
+        let t_contended = time_it(1, 5, || {
+            let ctr = AtomicU64::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {
+                        for _ in 0..n_per_thread {
+                            black_box(ctr.fetch_add(1, Ordering::Relaxed));
+                        }
+                    });
+                }
+            });
+            assert_eq!(ctr.load(Ordering::Relaxed), threads as u64 * n_per_thread);
+        });
+        let t_batched = time_it(1, 5, || {
+            let ctr = AtomicU64::new(0);
+            std::thread::scope(|scope| {
+                for _ in 0..threads {
+                    scope.spawn(|| {
+                        let mut snapshot = ctr.load(Ordering::Relaxed);
+                        let mut pending = 0u64;
+                        for _ in 0..n_per_thread {
+                            black_box(snapshot + pending);
+                            pending += 1;
+                            if pending >= hogwild::COUNTER_FLUSH {
+                                snapshot =
+                                    ctr.fetch_add(pending, Ordering::Relaxed) + pending;
+                                pending = 0;
+                            }
+                        }
+                        ctr.fetch_add(pending, Ordering::Relaxed);
+                    });
+                }
+            });
+            assert_eq!(ctr.load(Ordering::Relaxed), threads as u64 * n_per_thread);
+        });
+        let total = (threads as u64 * n_per_thread) as f64;
+        let contended_mops = total / t_contended.min_secs / 1e6;
+        let batched_mops = total / t_batched.min_secs / 1e6;
+        let speedup = t_contended.min_secs / t_batched.min_secs;
+        table.row(
+            "pair counter @4 threads",
+            vec![
+                "Mops/s cont|batch|x".into(),
+                format!("{contended_mops:.0} | {batched_mops:.0} | {speedup:.1}x"),
+            ],
+            obj(vec![
+                ("bench", s("pair_counter_4t")),
+                ("contended_mops_per_s", num(contended_mops)),
+                ("batched_mops_per_s", num(batched_mops)),
+                ("speedup", num(speedup)),
+            ]),
+        );
+    }
+
+    // ---- L3: Hogwild end-to-end pairs/s (vectorized kernels + batched ctr) ---
+    {
+        let gcfg = GeneratorConfig {
+            vocab: 2000,
+            clusters: 20,
+            truth_dim: 16,
+            avg_sentence_len: 12,
+            ..Default::default()
+        };
+        let gt = build_ground_truth(&gcfg, 5);
+        let corpus = generate_corpus(&gt, 4000, 5);
+        let vocab = vocab_of(&corpus, gcfg.vocab);
+        let cfg = SgnsConfig {
+            dim: 64,
+            epochs: 2,
+            ..Default::default()
+        };
+        for threads in [1usize, 4] {
+            // report the best (minimum-wall-time) run's own pairs/seconds
+            // so throughput and wall clock come from the same repetition
+            let mut best_pairs_per_s = 0.0f64;
+            let mut best_secs = f64::INFINITY;
+            time_it(1, 3, || {
+                let (emb, stats) = hogwild::train(&corpus, &vocab, &cfg, threads, 7);
+                if stats.seconds < best_secs {
+                    best_secs = stats.seconds;
+                    best_pairs_per_s = stats.pairs as f64 / stats.seconds;
+                }
+                black_box(emb.data.len());
+            });
+            table.row(
+                &format!("hogwild pairs/s ({threads}t, d=64)"),
+                vec![
+                    "Mpairs/s".into(),
+                    format!("{:.2}", best_pairs_per_s / 1e6),
+                ],
+                obj(vec![
+                    ("bench", s(&format!("hogwild_pairs_per_s_{threads}t"))),
+                    ("mpairs_per_s", num(best_pairs_per_s / 1e6)),
+                    ("wall_secs", num(best_secs)),
+                ]),
+            );
+        }
+    }
 
     // ---- L3: negative sampling ---------------------------------------------
     let mut rng = Pcg64::new(1);
@@ -40,7 +197,7 @@ fn main() {
         for _ in 0..n_draws {
             acc += alias.sample(&mut r) as u64;
         }
-        std::hint::black_box(acc);
+        black_box(acc);
     });
     let t_cdf = time_it(1, 5, || {
         let mut r = Pcg64::new(2);
@@ -48,7 +205,7 @@ fn main() {
         for _ in 0..n_draws {
             acc += cdf.sample(&mut r) as u64;
         }
-        std::hint::black_box(acc);
+        black_box(acc);
     });
     table.row(
         "alias sampling (10k vocab)",
@@ -101,7 +258,7 @@ fn main() {
         }
         b.flush(&mut |mb| sink += mb.real_pairs);
         pairs_out = sink as u64;
-        std::hint::black_box(sink);
+        black_box(sink);
     });
     table.row(
         "batch assembly",
@@ -120,7 +277,7 @@ fn main() {
     let m = Mat::from_vec(2000, 32, (0..2000 * 32).map(|_| r.gen_gauss()).collect());
     let y = Mat::from_vec(2000, 32, (0..2000 * 32).map(|_| r.gen_gauss()).collect());
     let t_proc = time_it(1, 5, || {
-        std::hint::black_box(orthogonal_procrustes(&m, &y));
+        black_box(orthogonal_procrustes(&m, &y));
     });
     table.row(
         "procrustes 2000x32",
@@ -129,7 +286,7 @@ fn main() {
     );
     let x = Mat::from_vec(2000, 320, (0..2000 * 320).map(|_| r.gen_gauss()).collect());
     let t_pca = time_it(1, 3, || {
-        std::hint::black_box(pca::project(&x, 32));
+        black_box(pca::project(&x, 32));
     });
     table.row(
         "pca 2000x320 -> 32",
@@ -137,14 +294,41 @@ fn main() {
         obj(vec![("bench", s("pca_ms")), ("value", num(t_pca.min_secs * 1e3))]),
     );
 
+    // ---- bridge + end-to-end PJRT sections (need artifacts + xla feature) ----
+    match Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(manifest) => pjrt_sections(&mut table, &manifest),
+        Err(e) => eprintln!("skipping PJRT bench sections: {e}"),
+    }
+
+    table.finish();
+}
+
+/// Resolve + compile one artifact, or announce the skip once and bail.
+fn runtime_or_skip(manifest: &Manifest, name: &str) -> Option<Runtime> {
+    let artifact = match manifest.by_name(name) {
+        Some(a) => a,
+        None => {
+            eprintln!("skipping PJRT bench sections: artifact {name} not in manifest");
+            return None;
+        }
+    };
+    match Runtime::load(artifact) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT bench sections: {e}");
+            None
+        }
+    }
+}
+
+fn pjrt_sections(table: &mut Table, manifest: &Manifest) {
     // ---- L2: scan-length (steps-per-call) ablation ---------------------------
     // same shapes, steps=1 vs steps=4: measures what the lax.scan macro-step
     // buys in dispatch amortization (per-pair cost at equal total work)
     {
         let mut per_pair = Vec::new();
         for name in ["v2000_d32_b64_k5_s1", "v2000_d32_b64_k5_s4"] {
-            let artifact = manifest.by_name(name).expect("artifact");
-            let rt = Runtime::load(artifact).expect("compile");
+            let Some(rt) = runtime_or_skip(manifest, name) else { return };
             let a = &rt.artifact;
             let cap = a.batch_capacity();
             let mut rb = Pcg64::new(66);
@@ -188,8 +372,7 @@ fn main() {
 
     // ---- bridge: dispatch latency + device-resident ablation -----------------
     for name in ["v2000_d32_b64_k5_s4", "v10000_d64_b256_k5_s8"] {
-        let artifact = manifest.by_name(name).expect("artifact");
-        let rt = Runtime::load(artifact).expect("compile");
+        let Some(rt) = runtime_or_skip(manifest, name) else { return };
         let a = &rt.artifact;
         let cap = a.batch_capacity();
         let mut rb = Pcg64::new(6);
@@ -226,7 +409,7 @@ fn main() {
             host_state = m2.download_packed(&rt).unwrap();
         });
         table.row(
-            &format!("  + host round-trip (ablation)"),
+            "  + host round-trip (ablation)",
             vec![
                 "ms/batch".into(),
                 format!("{:.2} ({:.1}x)", t_rt.p50_secs * 1e3, t_rt.p50_secs / t_step.p50_secs),
@@ -238,6 +421,4 @@ fn main() {
             ]),
         );
     }
-
-    table.finish();
 }

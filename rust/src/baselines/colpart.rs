@@ -12,8 +12,9 @@
 //! cluster behaviour: per-batch time = compute/servers + 2·RTT.
 
 use crate::embedding::Embedding;
+use crate::kernels;
+use crate::kernels::SigmoidTable;
 use crate::sgns::config::SgnsConfig;
-use crate::sgns::hogwild::SigmoidTable;
 use crate::sgns::negative::AliasTable;
 use crate::sgns::batch::BatchBuilder;
 use crate::text::corpus::Corpus;
@@ -119,7 +120,7 @@ pub fn train(
                                     .iter()
                                     .map(|&cid| {
                                         let crow = &cs[cid * width..(cid + 1) * width];
-                                        wrow.iter().zip(crow).map(|(a, b)| a * b).sum()
+                                        kernels::dot(wrow, crow)
                                     })
                                     .collect();
                                 let _ = tx.send(partials);
@@ -153,19 +154,13 @@ pub fn train(
                             scope.spawn(move || {
                                 let mut neu = vec![0.0f32; width];
                                 for (j, &cid) in ctx_ids.iter().enumerate() {
-                                    let wrow =
-                                        ws[center * width..(center + 1) * width].to_vec();
+                                    let wrow = &ws[center * width..(center + 1) * width];
                                     let crow =
                                         &mut cs[cid * width..(cid + 1) * width];
-                                    for k in 0..width {
-                                        neu[k] += gs[j] * crow[k];
-                                        crow[k] += gs[j] * wrow[k];
-                                    }
+                                    kernels::dual_axpy(gs[j], wrow, crow, &mut neu);
                                 }
                                 let wrow = &mut ws[center * width..(center + 1) * width];
-                                for k in 0..width {
-                                    wrow[k] += neu[k];
-                                }
+                                kernels::axpy(1.0, &neu, wrow);
                             });
                         }
                     });

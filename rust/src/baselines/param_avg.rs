@@ -9,9 +9,10 @@
 //! wall-clock improves with parallelism until averaging overhead bites.
 
 use crate::embedding::Embedding;
+use crate::kernels;
+use crate::kernels::SigmoidTable;
 use crate::sgns::batch::BatchBuilder;
 use crate::sgns::config::SgnsConfig;
-use crate::sgns::hogwild::SigmoidTable;
 use crate::sgns::negative::AliasTable;
 use crate::text::corpus::Corpus;
 use crate::text::vocab::Vocab;
@@ -64,20 +65,10 @@ fn train_replica(
                     };
                     let crow = &mut c[ctx_id * d..(ctx_id + 1) * d];
                     let wrow = &w[center * d..(center + 1) * d];
-                    let mut dot = 0.0f32;
-                    for k in 0..d {
-                        dot += wrow[k] * crow[k];
-                    }
-                    let g = (label - sigmoid.get(dot)) * lr;
-                    for k in 0..d {
-                        neu[k] += g * crow[k];
-                        crow[k] += g * wrow[k];
-                    }
+                    kernels::dot_sigmoid_update(wrow, crow, &mut neu, label, lr, sigmoid);
                 }
                 let wrow = &mut w[center * d..(center + 1) * d];
-                for k in 0..d {
-                    wrow[k] += neu[k];
-                }
+                kernels::axpy(1.0, &neu, wrow);
                 pairs += 1;
             }
         }
@@ -152,12 +143,8 @@ pub fn train(
         let inv = 1.0 / executors as f32;
         for (w, c, pairs) in results {
             stats.pairs += pairs;
-            for (g, l) in w_global.iter_mut().zip(&w) {
-                *g += l * inv;
-            }
-            for (g, l) in c_global.iter_mut().zip(&c) {
-                *g += l * inv;
-            }
+            kernels::axpy(inv, &w, &mut w_global);
+            kernels::axpy(inv, &c, &mut c_global);
         }
         stats.sync_rounds += 1;
     }

@@ -3,6 +3,18 @@
 //  2. execute_b can feed that buffer straight back in (device-resident state)
 //  3. int32 index inputs + scatter-add lower and run on xla_extension 0.5.1
 //  4. copy_raw_to_host_sync with an offset reads just the metrics row
+//
+// Requires the `xla` feature (the probe talks to the real bridge).
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!(
+        "bridge_probe requires the PJRT bridge: rebuild with `cargo run \
+         --features xla --bin bridge_probe`"
+    );
+    std::process::exit(1);
+}
+
+#[cfg(feature = "xla")]
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let client = xla::PjRtClient::cpu()?;
     let proto = xla::HloModuleProto::from_text_file("/tmp/bridge_test/step2.hlo.txt")?;

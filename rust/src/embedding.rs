@@ -5,6 +5,13 @@
 //! trained on a sub-corpus simply marks words it never (sufficiently) saw
 //! as absent via the `present` mask — that sparsity is exactly what the
 //! ALiR merge reconstructs (paper §3.3.2).
+//!
+//! Row reductions (cosine, norms, nearest-neighbour scans) run on the
+//! vectorized `crate::kernels`; `nearest` additionally takes precomputed
+//! row norms and a partial top-k selection so a V-row scan is O(V) work
+//! and one pass, not O(V log V) and two norm passes per query.
+
+use crate::kernels;
 
 #[derive(Clone, Debug)]
 pub struct Embedding {
@@ -61,12 +68,9 @@ impl Embedding {
         }
         let ra = self.row(a);
         let rb = self.row(b);
-        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
-        for (x, y) in ra.iter().zip(rb) {
-            dot += (*x as f64) * (*y as f64);
-            na += (*x as f64) * (*x as f64);
-            nb += (*y as f64) * (*y as f64);
-        }
+        let dot = kernels::dot_wide(ra, rb);
+        let na = kernels::norm_sq_wide(ra);
+        let nb = kernels::norm_sq_wide(rb);
         Some(dot / (na.sqrt() * nb.sqrt()).max(1e-12))
     }
 
@@ -79,41 +83,78 @@ impl Embedding {
                 out.row_mut(w).fill(0.0);
                 continue;
             }
-            let norm: f32 = self.row(w).iter().map(|x| x * x).sum::<f32>().sqrt();
+            let norm = kernels::norm_sq(self.row(w)).sqrt();
             if norm > 1e-12 {
-                for v in out.row_mut(w) {
-                    *v /= norm;
-                }
+                kernels::scale(out.row_mut(w), 1.0 / norm);
             }
         }
         out
     }
 
-    /// Indices of the `k` nearest present rows to `query` by cosine,
-    /// excluding `exclude`.
-    pub fn nearest(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
-        let qn: f64 = query.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
-        let mut scored: Vec<(u32, f64)> = (0..self.vocab as u32)
-            .filter(|w| self.is_present(*w) && !exclude.contains(w))
+    /// Per-row L2 norms (0.0 for absent rows), accumulated in f64 like all
+    /// eval-path scoring. Compute once and hand to
+    /// [`Embedding::nearest_with_norms`] when scanning many queries — the
+    /// analogy eval does exactly this.
+    pub fn row_norms(&self) -> Vec<f64> {
+        (0..self.vocab as u32)
             .map(|w| {
-                let row = self.row(w);
-                let dot: f64 = row
-                    .iter()
-                    .zip(query)
-                    .map(|(a, b)| (*a as f64) * (*b as f64))
-                    .sum();
-                let rn: f64 = row.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+                if self.is_present(w) {
+                    kernels::norm_sq_wide(self.row(w)).sqrt()
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Indices of the `k` nearest present rows to `query` by cosine,
+    /// excluding `exclude`. Row norms are computed on the fly; for
+    /// repeated queries use [`Embedding::nearest_with_norms`].
+    pub fn nearest(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
+        self.nearest_with_norms(query, k, exclude, &self.row_norms())
+    }
+
+    /// [`Embedding::nearest`] with caller-precomputed `row_norms()`.
+    ///
+    /// One vectorized dot per candidate row, exclusion via binary search
+    /// on a sorted copy of `exclude`, and an O(V) partial top-k
+    /// (`select_nth_unstable_by`) instead of sorting the whole scan.
+    pub fn nearest_with_norms(
+        &self,
+        query: &[f32],
+        k: usize,
+        exclude: &[u32],
+        norms: &[f64],
+    ) -> Vec<(u32, f64)> {
+        debug_assert_eq!(norms.len(), self.vocab);
+        if k == 0 {
+            return Vec::new();
+        }
+        let qn = kernels::norm_sq_wide(query).sqrt();
+        let mut excl = exclude.to_vec();
+        excl.sort_unstable();
+        let mut scored: Vec<(u32, f64)> = (0..self.vocab as u32)
+            .filter(|w| self.is_present(*w) && excl.binary_search(w).is_err())
+            .map(|w| {
+                let dot = kernels::dot_wide(self.row(w), query);
+                let rn = norms[w as usize];
                 (w, dot / (qn * rn).max(1e-12))
             })
             .collect();
+        let k = k.min(scored.len());
+        if k > 0 && k < scored.len() {
+            scored.select_nth_unstable_by(k - 1, |a, b| b.1.partial_cmp(&a.1).unwrap());
+            scored.truncate(k);
+        }
         scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-        scored.truncate(k);
         scored
     }
 }
 
 impl Embedding {
     const MAGIC: u32 = 0x6457_4532; // "dWE2"
+    /// magic + vocab + dim header bytes preceding the presence bitmap.
+    const HEADER_BYTES: u64 = 4 + 8 + 8;
 
     /// Persist as a simple binary: magic | vocab | dim | present bitmapish
     /// bytes | f32 rows.
@@ -134,20 +175,39 @@ impl Embedding {
 
     pub fn load(path: &std::path::Path) -> std::io::Result<Embedding> {
         use std::io::Read;
+        let invalid =
+            |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
         let mut b4 = [0u8; 4];
         let mut b8 = [0u8; 8];
         r.read_exact(&mut b4)?;
         if u32::from_le_bytes(b4) != Self::MAGIC {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "not a dw2v embedding file",
-            ));
+            return Err(invalid("not a dw2v embedding file".to_string()));
         }
         r.read_exact(&mut b8)?;
-        let vocab = u64::from_le_bytes(b8) as usize;
+        let vocab = u64::from_le_bytes(b8);
         r.read_exact(&mut b8)?;
-        let dim = u64::from_le_bytes(b8) as usize;
+        let dim = u64::from_le_bytes(b8);
+        // validate the header against the actual file length *before*
+        // allocating vocab × dim × 4 bytes: a corrupt/truncated header must
+        // come back as InvalidData, not abort the process on a huge alloc
+        let actual_len = std::fs::metadata(path)?.len();
+        let expected_len = vocab
+            .checked_mul(dim)
+            .and_then(|vd| vd.checked_mul(4))
+            .and_then(|data| data.checked_add(vocab))
+            .and_then(|body| body.checked_add(Self::HEADER_BYTES))
+            .ok_or_else(|| {
+                invalid(format!("embedding header overflows: vocab={vocab} dim={dim}"))
+            })?;
+        if expected_len != actual_len {
+            return Err(invalid(format!(
+                "embedding header (vocab={vocab}, dim={dim}) implies {expected_len} \
+                 bytes but file is {actual_len}"
+            )));
+        }
+        let vocab = vocab as usize;
+        let dim = dim as usize;
         let mut present_bytes = vec![0u8; vocab];
         r.read_exact(&mut present_bytes)?;
         let mut data_bytes = vec![0u8; vocab * dim * 4];
@@ -187,6 +247,41 @@ mod tests {
         let path = std::env::temp_dir().join(format!("dw2v_bad_{}.bin", std::process::id()));
         std::fs::write(&path, b"garbage").unwrap();
         assert!(Embedding::load(&path).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_corrupt_header_without_allocating() {
+        // valid magic, then a vocab/dim pair claiming ~10^38 bytes: must be
+        // InvalidData from the length check, not an allocation abort
+        let path =
+            std::env::temp_dir().join(format!("dw2v_hdr_{}.bin", std::process::id()));
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&Embedding::MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // vocab
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // dim
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Embedding::load(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_rejects_truncated_file() {
+        let e = sample();
+        let path =
+            std::env::temp_dir().join(format!("dw2v_trunc_{}.bin", std::process::id()));
+        e.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 5]).unwrap();
+        let err = Embedding::load(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // and a file with trailing junk is rejected too
+        let mut padded = full.clone();
+        padded.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&path, &padded).unwrap();
+        let err = Embedding::load(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -239,5 +334,45 @@ mod tests {
         e.present[1] = false;
         let res = e.nearest(&[1.0, 0.0], 4, &[]);
         assert!(!res.iter().any(|(w, _)| *w == 1));
+    }
+
+    #[test]
+    fn nearest_with_norms_matches_fresh_computation() {
+        // a larger random embedding: precomputed-norm path must agree with
+        // the self-computing path on both order and scores
+        let mut e = Embedding::zeros(50, 7);
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        for w in 0..50u32 {
+            for v in e.row_mut(w) {
+                *v = rng.gen_gauss() as f32;
+            }
+        }
+        e.present[13] = false;
+        let norms = e.row_norms();
+        let query: Vec<f32> = (0..7).map(|_| rng.gen_gauss() as f32).collect();
+        let a = e.nearest(&query, 5, &[3, 40]);
+        let b = e.nearest_with_norms(&query, 5, &[3, 40], &norms);
+        assert_eq!(a.len(), 5);
+        for ((wa, sa), (wb, sb)) in a.iter().zip(&b) {
+            assert_eq!(wa, wb);
+            assert!((sa - sb).abs() < 1e-12);
+        }
+        // top-k selection returns the same set as a full sort
+        let full = {
+            let mut all = e.nearest_with_norms(&query, 48, &[3, 40], &norms);
+            all.truncate(5);
+            all
+        };
+        assert_eq!(
+            a.iter().map(|(w, _)| *w).collect::<Vec<_>>(),
+            full.iter().map(|(w, _)| *w).collect::<Vec<_>>()
+        );
+        // k larger than the candidate set returns everything, ordered
+        let everything = e.nearest(&query, 500, &[]);
+        assert_eq!(everything.len(), 49); // 50 minus the absent row
+        for pair in everything.windows(2) {
+            assert!(pair[0].1 >= pair[1].1);
+        }
+        assert!(e.nearest(&query, 0, &[]).is_empty());
     }
 }

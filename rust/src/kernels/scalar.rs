@@ -1,0 +1,37 @@
+//! Scalar reference implementations of the vectorized kernels.
+//!
+//! These are the ground truth the parity suite checks `super`'s chunked
+//! kernels against, and the "before" side of the `perf_hotpath` kernel
+//! rows. Single sequential accumulator, element-at-a-time — exactly the
+//! shape LLVM must *not* reassociate, so they stay scalar at every opt
+//! level and preserve the seed implementation's rounding order.
+
+/// Sequential dot product — the loop the Hogwild trainer shipped with.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Sequential squared L2 norm.
+#[inline]
+pub fn norm_sq(a: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for &x in a {
+        acc += x * x;
+    }
+    acc
+}
+
+/// Sequential y ← y + α·x.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}

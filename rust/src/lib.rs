@@ -28,6 +28,7 @@ pub mod eval;
 pub mod embedding;
 pub mod exec;
 pub mod gen;
+pub mod kernels;
 pub mod linalg;
 pub mod merge;
 pub mod runtime;

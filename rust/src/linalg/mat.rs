@@ -6,6 +6,7 @@
 //! the merge phase a small fraction of training time (Table 4's claim),
 //! without pulling in BLAS.
 
+use crate::kernels;
 use std::ops::{Index, IndexMut};
 
 #[derive(Clone, Debug, PartialEq)]
@@ -107,11 +108,7 @@ impl Mat {
                 for kx in kk..k_hi {
                     let a = a_row[kx];
                     let b_row = b.row(kx);
-                    // slice-zipped SAXPY lets LLVM autovectorize (no bounds
-                    // checks, no data-dependent branch)
-                    for (o, bv) in out_row[..n].iter_mut().zip(&b_row[..n]) {
-                        *o += a * bv;
-                    }
+                    kernels::axpy64(a, &b_row[..n], &mut out_row[..n]);
                 }
             }
         }
@@ -128,26 +125,19 @@ impl Mat {
             let b_row = b.row(kx);
             for i in 0..m {
                 let a = a_row[i];
-                let out_row = out.row_mut(i);
-                for (o, bv) in out_row[..n].iter_mut().zip(&b_row[..n]) {
-                    *o += a * bv;
-                }
+                kernels::axpy64(a, &b_row[..n], &mut out.row_mut(i)[..n]);
             }
         }
         out
     }
 
     pub fn scale(&mut self, s: f64) {
-        for v in &mut self.data {
-            *v *= s;
-        }
+        kernels::scale64(&mut self.data, s);
     }
 
     pub fn add_assign(&mut self, other: &Mat) {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
-            *a += b;
-        }
+        kernels::axpy64(1.0, &other.data, &mut self.data);
     }
 
     pub fn sub(&self, other: &Mat) -> Mat {
@@ -160,21 +150,16 @@ impl Mat {
     }
 
     pub fn frobenius_norm(&self) -> f64 {
-        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+        kernels::norm_sq64(&self.data).sqrt()
     }
 
     /// Mean of each column.
     pub fn col_means(&self) -> Vec<f64> {
         let mut means = vec![0.0; self.cols];
         for i in 0..self.rows {
-            for (m, v) in means.iter_mut().zip(self.row(i)) {
-                *m += v;
-            }
+            kernels::axpy64(1.0, self.row(i), &mut means);
         }
-        let inv = 1.0 / self.rows.max(1) as f64;
-        for m in &mut means {
-            *m *= inv;
-        }
+        kernels::scale64(&mut means, 1.0 / self.rows.max(1) as f64);
         means
     }
 

@@ -5,6 +5,7 @@
 //! there) and the *union* vocabulary (ALiR reconstructs everything in it).
 
 use crate::embedding::Embedding;
+use crate::kernels;
 use crate::linalg::mat::Mat;
 
 /// Word ids present in every sub-model.
@@ -32,9 +33,7 @@ pub fn union_vocab(models: &[Embedding]) -> Vec<u32> {
 pub fn extract_rows(model: &Embedding, words: &[u32]) -> Mat {
     let mut out = Mat::zeros(words.len(), model.dim);
     for (i, &w) in words.iter().enumerate() {
-        for (j, &v) in model.row(w).iter().enumerate() {
-            out[(i, j)] = v as f64;
-        }
+        kernels::widen(out.row_mut(i), model.row(w));
     }
     out
 }
@@ -71,9 +70,7 @@ pub fn embedding_from_rows(vocab: usize, words: &[u32], rows: &Mat) -> Embedding
     };
     for (i, &w) in words.iter().enumerate() {
         out.present[w as usize] = true;
-        for (j, v) in rows.row(i).iter().enumerate() {
-            out.row_mut(w)[j] = *v as f32;
-        }
+        kernels::narrow(out.row_mut(w), rows.row(i));
     }
     out
 }

@@ -7,6 +7,7 @@
 //! table-3 bench can demonstrate *why* alignment (ALiR) is necessary.
 
 use crate::embedding::Embedding;
+use crate::kernels;
 
 /// Element-wise mean over models where each word is present.
 pub fn merge(models: &[Embedding]) -> Embedding {
@@ -24,17 +25,12 @@ pub fn merge(models: &[Embedding]) -> Embedding {
         for m in models {
             if m.is_present(w) {
                 count += 1.0;
-                let row = m.row(w).to_vec();
-                for (o, v) in out.row_mut(w).iter_mut().zip(row) {
-                    *o += v;
-                }
+                kernels::axpy(1.0, m.row(w), out.row_mut(w));
             }
         }
         if count > 0.0 {
             out.present[w as usize] = true;
-            for v in out.row_mut(w) {
-                *v /= count;
-            }
+            kernels::scale(out.row_mut(w), 1.0 / count);
         }
     }
     out

@@ -5,59 +5,38 @@
 //! through raw pointers with **no synchronization whatsoever** — races are
 //! tolerated by design (conflicts are rare for large vocabularies). The
 //! sigmoid is a lookup table like word2vec's `expTable`, and the learning
-//! rate decays linearly on a shared pair counter.
+//! rate decays linearly on a pair counter.
 //!
-//! This is deliberately the *CPU scalar* implementation the paper timed as
-//! its baseline; the PJRT trainer (`super::trainer`) is the paper-system's
+//! Two deliberate perf choices in the inner loop (see `crate::kernels`):
+//! * the per-pair dot/update runs on the shared vectorized kernels
+//!   (`dot_sigmoid_update` + `axpy`) instead of scalar loops;
+//! * the lr schedule reads a **thread-local** pair count that is flushed
+//!   to the shared atomic only every [`COUNTER_FLUSH`] pairs — word2vec's
+//!   `word_count_actual` trick. A per-pair `fetch_add` puts one cache-line
+//!   ping-pong on the critical path of every pair; the schedule happily
+//!   tolerates a count that is stale by ≤ threads × COUNTER_FLUSH pairs,
+//!   so we batch. Final totals stay exact because each thread flushes its
+//!   remainder before exiting.
+//!
+//! This is deliberately the *CPU* implementation the paper timed as its
+//! baseline; the PJRT trainer (`super::trainer`) is the paper-system's
 //! per-reducer engine.
 
 use super::batch::BatchBuilder;
 use super::config::SgnsConfig;
 use super::negative::AliasTable;
 use crate::embedding::Embedding;
+use crate::kernels;
 use crate::text::corpus::Corpus;
 use crate::text::vocab::Vocab;
 use crate::util::rng::Pcg64;
 use std::sync::atomic::{AtomicU64, Ordering};
 
-const SIGMOID_TABLE_SIZE: usize = 1024;
-const SIGMOID_CLAMP: f32 = 6.0;
+pub use crate::kernels::sigmoid::SigmoidTable;
 
-/// word2vec-style sigmoid lookup table over [-CLAMP, CLAMP].
-pub struct SigmoidTable {
-    table: Vec<f32>,
-}
-
-impl SigmoidTable {
-    pub fn new() -> Self {
-        let table = (0..SIGMOID_TABLE_SIZE)
-            .map(|i| {
-                let x = (i as f32 / SIGMOID_TABLE_SIZE as f32 * 2.0 - 1.0) * SIGMOID_CLAMP;
-                1.0 / (1.0 + (-x).exp())
-            })
-            .collect();
-        Self { table }
-    }
-
-    #[inline]
-    pub fn get(&self, x: f32) -> f32 {
-        if x >= SIGMOID_CLAMP {
-            1.0
-        } else if x <= -SIGMOID_CLAMP {
-            0.0
-        } else {
-            let idx = ((x + SIGMOID_CLAMP) / (2.0 * SIGMOID_CLAMP)
-                * (SIGMOID_TABLE_SIZE - 1) as f32) as usize;
-            self.table[idx]
-        }
-    }
-}
-
-impl Default for SigmoidTable {
-    fn default() -> Self {
-        Self::new()
-    }
-}
+/// Pairs accumulated locally before a thread publishes them to the shared
+/// counter (word2vec flushes every 10k words for the same reason).
+pub const COUNTER_FLUSH: u64 = 10_000;
 
 /// Raw shared parameter block. Safety: Hogwild semantics — concurrent
 /// unsynchronized writes are *intended*; torn f32 writes are benign on
@@ -143,6 +122,10 @@ pub fn train(
                     let mut neu: Vec<f32> = vec![0.0; d];
                     let mut local_pairs = 0u64;
                     let mut local_loss = 0.0f64;
+                    // batched counter: lr reads done_snapshot + pending,
+                    // the shared atomic is touched once per COUNTER_FLUSH
+                    let mut done_snapshot = pair_counter.load(Ordering::Relaxed);
+                    let mut pending = 0u64;
                     for sent in sentences {
                         // subsample
                         kept.clear();
@@ -164,8 +147,15 @@ pub fn train(
                                 if other == pos {
                                     continue;
                                 }
-                                let done = pair_counter.fetch_add(1, Ordering::Relaxed);
-                                let lr = cfg.lr_at(done, expected_pairs);
+                                let lr =
+                                    cfg.lr_at(done_snapshot + pending, expected_pairs);
+                                pending += 1;
+                                if pending >= COUNTER_FLUSH {
+                                    done_snapshot = pair_counter
+                                        .fetch_add(pending, Ordering::Relaxed)
+                                        + pending;
+                                    pending = 0;
+                                }
                                 let target = kept[other] as usize;
                                 // SAFETY: Hogwild — racy but benign
                                 unsafe {
@@ -185,30 +175,24 @@ pub fn train(
                                             params.c.add(ctx_id * d),
                                             d,
                                         );
-                                        let mut dot = 0.0f32;
-                                        for k in 0..d {
-                                            dot += wrow[k] * crow[k];
-                                        }
-                                        let sig = sigmoid.get(dot);
-                                        let g = (label - sig) * lr;
+                                        let dot = kernels::dot_sigmoid_update(
+                                            wrow, crow, &mut neu, label, lr, sigmoid,
+                                        );
                                         if last_epoch {
                                             // softplus loss for monitoring
                                             let x = if label > 0.5 { -dot } else { dot };
                                             local_loss +=
                                                 (1.0 + x.exp()).ln().min(20.0) as f64;
                                         }
-                                        for k in 0..d {
-                                            neu[k] += g * crow[k];
-                                            crow[k] += g * wrow[k];
-                                        }
                                     }
-                                    for k in 0..d {
-                                        wrow[k] += neu[k];
-                                    }
+                                    kernels::axpy(1.0, &neu, wrow);
                                 }
                                 local_pairs += 1;
                             }
                         }
+                    }
+                    if pending > 0 {
+                        pair_counter.fetch_add(pending, Ordering::Relaxed);
                     }
                     if last_epoch && local_pairs > 0 {
                         loss_accum.fetch_add(
@@ -237,21 +221,6 @@ mod tests {
     use super::*;
     use crate::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
 
-    #[test]
-    fn sigmoid_table_accuracy() {
-        let t = SigmoidTable::new();
-        for x in [-5.0f32, -1.0, -0.1, 0.0, 0.1, 1.0, 5.0] {
-            let exact = 1.0 / (1.0 + (-x).exp());
-            assert!(
-                (t.get(x) - exact).abs() < 0.01,
-                "x={x}: table {} exact {exact}",
-                t.get(x)
-            );
-        }
-        assert_eq!(t.get(100.0), 1.0);
-        assert_eq!(t.get(-100.0), 0.0);
-    }
-
     fn tiny_setup() -> (Corpus, Vocab, GeneratorConfig) {
         let gcfg = GeneratorConfig {
             vocab: 80,
@@ -266,20 +235,8 @@ mod tests {
         (corpus, vocab, gcfg)
     }
 
-    #[test]
-    fn training_learns_cluster_structure() {
-        let (corpus, vocab, gcfg) = tiny_setup();
-        let gt = build_ground_truth(&gcfg, 5);
-        let cfg = SgnsConfig {
-            dim: 16,
-            epochs: 4,
-            window: 4,
-            negatives: 4,
-            ..Default::default()
-        };
-        let (emb, stats) = train(&corpus, &vocab, &cfg, 2, 7);
-        assert!(stats.pairs > 10_000, "too few pairs: {}", stats.pairs);
-        // same-cluster cosine must exceed cross-cluster on average
+    fn cluster_separation(emb: &Embedding, gcfg: &GeneratorConfig) -> (f64, f64) {
+        let gt = build_ground_truth(gcfg, 5);
         let mut rng = Pcg64::new(1);
         let (mut same, mut cross) = (Vec::new(), Vec::new());
         for _ in 0..3000 {
@@ -296,12 +253,24 @@ mod tests {
             }
         }
         let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
-        assert!(
-            avg(&same) > avg(&cross) + 0.05,
-            "same={:.3} cross={:.3}",
-            avg(&same),
-            avg(&cross)
-        );
+        (avg(&same), avg(&cross))
+    }
+
+    #[test]
+    fn training_learns_cluster_structure() {
+        let (corpus, vocab, gcfg) = tiny_setup();
+        let cfg = SgnsConfig {
+            dim: 16,
+            epochs: 4,
+            window: 4,
+            negatives: 4,
+            ..Default::default()
+        };
+        let (emb, stats) = train(&corpus, &vocab, &cfg, 2, 7);
+        assert!(stats.pairs > 10_000, "too few pairs: {}", stats.pairs);
+        // same-cluster cosine must exceed cross-cluster on average
+        let (same, cross) = cluster_separation(&emb, &gcfg);
+        assert!(same > cross + 0.05, "same={same:.3} cross={cross:.3}");
     }
 
     #[test]
@@ -325,6 +294,28 @@ mod tests {
             let norm: f32 = e.row(0).iter().map(|x| x * x).sum();
             assert!(norm > 0.0);
         }
+    }
+
+    /// The batched counter must not change what a single thread computes:
+    /// two identical 1-thread runs are bitwise equal (no races, exact lr
+    /// sequence), the reported pair count is exact, and the run still
+    /// learns the planted cluster structure.
+    #[test]
+    fn single_thread_batched_counter_is_deterministic_and_learns() {
+        let (corpus, vocab, gcfg) = tiny_setup();
+        let cfg = SgnsConfig {
+            dim: 16,
+            epochs: 3,
+            window: 4,
+            negatives: 4,
+            ..Default::default()
+        };
+        let (e1, s1) = train(&corpus, &vocab, &cfg, 1, 13);
+        let (e2, s2) = train(&corpus, &vocab, &cfg, 1, 13);
+        assert_eq!(s1.pairs, s2.pairs, "1-thread pair counts must be exact");
+        assert_eq!(e1.data, e2.data, "1-thread training must be deterministic");
+        let (same, cross) = cluster_separation(&e1, &gcfg);
+        assert!(same > cross + 0.05, "same={same:.3} cross={cross:.3}");
     }
 
     #[test]

@@ -3,7 +3,10 @@
 //! the trainers and the full pipeline end to end.
 //!
 //! Requires `artifacts/manifest.json` (run `make artifacts` first) — the
-//! tests fail with an actionable message otherwise.
+//! tests fail with an actionable message otherwise — and the `xla`
+//! feature: without it the whole file compiles to nothing, because the
+//! stub runtime cannot execute anything.
+#![cfg(feature = "xla")]
 
 use dw2v::coordinator::leader;
 use dw2v::eval::report::{evaluate_suite, mean_score};
