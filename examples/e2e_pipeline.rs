@@ -1,24 +1,25 @@
 //! END-TO-END driver (DESIGN.md §5, last row): the full paper system vs
 //! the Hogwild baseline on one real (synthetic-corpus) workload.
 //!
-//! What it does — all on the PJRT hot path, python only at build time:
+//! What it does — on the configured compute backend (PJRT when artifacts
+//! load, the native rust engine otherwise):
 //!   1. generates a corpus large enough to be a real training run
 //!      (~50k sentences / ~1M tokens by default; DW2V_E2E_SCALE=full
 //!      multiplies that ×4),
 //!   2. trains the Hogwild baseline (the paper's 17.8 h comparator, scaled
 //!      down), logging its wallclock,
-//!   3. runs the paper pipeline: Shuffle 10% → 10 asynchronous PJRT
+//!   3. runs the paper pipeline: Shuffle 10% → 10 asynchronous backend
 //!      sub-models × 3 epochs with per-epoch loss curves → ALiR merge,
 //!   4. evaluates both on the 8 gold benchmarks and prints the headline
 //!      table the paper's abstract summarizes (comparable-or-better
 //!      quality at a fraction of the sequential cost).
 //!
-//! Run with:  make artifacts && cargo run --release --example e2e_pipeline
+//! Run with:  cargo run --release --example e2e_pipeline
+//! (uses XLA artifacts when present; falls back to the native backend)
 
 use dw2v::coordinator::leader;
 use dw2v::eval::report::{self, evaluate_suite};
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::world::build_world;
@@ -49,9 +50,8 @@ fn main() -> Result<(), String> {
         world.vocab.len()
     );
 
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
-    let artifact = manifest.resolve(world.vocab.len(), cfg.dim)?;
-    let rt = Runtime::load(artifact)?;
+    let backend = load_backend(&cfg, world.vocab.len())?;
+    println!("backend: {}", backend.name());
 
     // ---- baseline: Hogwild (the paper's sequential-input comparator) ----
     println!("\n=== e2e: Hogwild baseline ===");
@@ -65,7 +65,7 @@ fn main() -> Result<(), String> {
 
     // ---- the paper system ------------------------------------------------
     println!("\n=== e2e: Shuffle 10% + ALiR (10 async sub-models) ===");
-    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)?;
+    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &backend)?;
     println!(
         "pipeline: train {:.1}s ({} pairs over {} sub-models, {} dispatches), merge {:.1}s ({} ALiR rounds), eval {:.1}s",
         rep.train.train_secs,

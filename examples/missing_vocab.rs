@@ -4,13 +4,13 @@
 //! copes. ALiR reconstructs deleted rows through the learned rotations;
 //! Concat/PCA can only drop them.
 //!
-//! Run with:  make artifacts && cargo run --release --example missing_vocab
+//! Run with:  cargo run --release --example missing_vocab
+//! (uses XLA artifacts when present; falls back to the native backend)
 
 use dw2v::coordinator::leader;
 use dw2v::embedding::Embedding;
 use dw2v::eval::report::{evaluate_suite, mean_score};
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::load_backend;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::util::rng::Pcg64;
 use dw2v::world::build_world;
@@ -40,11 +40,10 @@ fn main() -> Result<(), String> {
     cfg.strategy = DivideStrategy::Shuffle;
 
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim)?)?;
+    let backend = load_backend(&cfg, world.vocab.len())?;
 
     println!("training {} sub-models once…", cfg.num_submodels());
-    let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt)?;
+    let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &backend)?;
 
     // all words the benchmarks touch
     let mut bench_words: Vec<u32> = world

@@ -2,16 +2,18 @@
 //!
 //! Generates a small synthetic corpus, splits it into 4 sub-corpora with
 //! the paper's Shuffle strategy, trains 4 SGNS sub-models fully
-//! asynchronously on the PJRT runtime (AOT-compiled JAX/Pallas kernels),
-//! merges them with ALiR and scores the consensus on the gold benchmark
-//! suite.
+//! asynchronously, merges them with ALiR and scores the consensus on the
+//! gold benchmark suite.
 //!
-//! Run with:  make artifacts && cargo run --release --example quickstart
+//! Run with:  cargo run --release --example quickstart
+//!
+//! No setup needed: the default `auto` backend uses the PJRT/XLA AOT
+//! artifacts when present (`make artifacts` + `--features xla`) and
+//! falls back to the pure-rust native backend otherwise.
 
 use dw2v::coordinator::leader;
 use dw2v::eval::report;
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::world::build_world;
 
@@ -36,15 +38,14 @@ fn main() -> Result<(), String> {
         world.vocab.len()
     );
 
-    // 3. load the AOT artifact (compiled once from python/compile via
-    //    `make artifacts`; python never runs again after that)
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
-    let artifact = manifest.resolve(world.vocab.len(), cfg.dim)?;
-    let rt = Runtime::load(artifact)?;
-    println!("artifact: {} (V={}, D={})", artifact.name, artifact.vocab, artifact.dim);
+    // 3. resolve the compute backend (xla artifacts when loadable, else
+    //    the pure-rust native engine — same protocol either way)
+    let backend = load_backend(&cfg, world.vocab.len())?;
+    let sh = backend.shape();
+    println!("backend: {} (V={}, D={})", backend.name(), sh.vocab, sh.dim);
 
     // 4. divide -> train -> merge -> eval
-    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)?;
+    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &backend)?;
 
     println!(
         "\ntrained {} sub-models in {:.2}s ({} pairs), merged in {:.2}s",

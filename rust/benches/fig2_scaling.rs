@@ -11,8 +11,7 @@
 use dw2v::baselines::{colpart, param_avg};
 use dw2v::bench_util::{bench_scale, Table};
 use dw2v::coordinator::leader;
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig};
 use dw2v::util::json::{num, obj, s};
 use dw2v::world::build_world;
@@ -26,8 +25,8 @@ fn main() {
     cfg.rate_percent = 10.0;
     cfg.strategy = DivideStrategy::Shuffle;
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let backend = load_backend(&cfg, world.vocab.len()).expect("backend");
+    println!("backend: {}", backend.name());
     let scfg = leader::sgns_config(&cfg);
 
     let mut table = Table::new(
@@ -41,11 +40,11 @@ fn main() {
     let mut shuffle_secs = Vec::new();
     for &p in &proportions {
         let sub = world.corpus.proportion(p);
-        let out = leader::train_submodels(&cfg, &sub, &world.vocab, &rt).expect("train");
+        let out = leader::train_submodels(&cfg, &sub, &world.vocab, &backend).expect("train");
         shuffle_secs.push(out.train_secs);
     }
     table.row(
-        "Shuffle 10% (async PJRT)",
+        "Shuffle 10% (async)",
         shuffle_secs.iter().map(|t| format!("{t:.2}")).collect(),
         obj(vec![
             ("system", s("shuffle10")),
@@ -57,7 +56,8 @@ fn main() {
     let mut mllib_secs = Vec::new();
     for &p in &proportions {
         let sub = world.corpus.proportion(p);
-        let (_, stats) = param_avg::train(&sub, &world.vocab, &scfg, 8, cfg.seed);
+        let (_, stats) =
+            param_avg::train(&sub, &world.vocab, &scfg, &backend, 8, cfg.seed).expect("mllib");
         mllib_secs.push(stats.seconds);
     }
     table.row(

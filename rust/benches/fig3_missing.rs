@@ -12,8 +12,7 @@ use dw2v::coordinator::leader;
 use dw2v::embedding::Embedding;
 use dw2v::eval::report::{evaluate_suite, format_cell, mean_score, scores_to_json, BenchmarkScore};
 use dw2v::gen::benchmarks::Benchmark;
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::util::rng::Pcg64;
 use dw2v::world::build_world;
@@ -40,11 +39,11 @@ fn main() {
     cfg.strategy = DivideStrategy::Shuffle;
     cfg.min_count_base = 20.0;
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let backend = load_backend(&cfg, world.vocab.len()).expect("backend");
+    println!("backend: {}", backend.name());
 
     println!("training {} sub-models once…", cfg.num_submodels());
-    let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt).expect("train");
+    let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &backend).expect("train");
 
     let mut bench_words: Vec<u32> = world.suite.iter().flat_map(|b| b.unique_words()).collect();
     bench_words.sort_unstable();

@@ -22,7 +22,9 @@ use dw2v::linalg::pca;
 use dw2v::linalg::procrustes::orthogonal_procrustes;
 use dw2v::runtime::artifacts::Manifest;
 use dw2v::runtime::client::Runtime;
+use dw2v::runtime::native::NativeBackend;
 use dw2v::runtime::params::SubModel;
+use dw2v::runtime::{Backend, ModelShape};
 use dw2v::sgns::batch::{BatchBuilder, BatchShape};
 use dw2v::sgns::config::SgnsConfig;
 use dw2v::sgns::hogwild;
@@ -293,6 +295,41 @@ fn main() {
         vec!["ms".into(), format!("{:.1}", t_pca.min_secs * 1e3)],
         obj(vec![("bench", s("pca_ms")), ("value", num(t_pca.min_secs * 1e3))]),
     );
+
+    // ---- native backend: macro-batch dispatch throughput ---------------------
+    // the CPU twin of the PJRT dispatch rows below — always runs, so every
+    // machine gets a backend-dispatch baseline in the JSON
+    {
+        let be = NativeBackend::new(ModelShape::native(2000, 32, 64, 5, 4));
+        let sh = be.shape().clone();
+        let cap = sh.batch_capacity();
+        let mut rb = Pcg64::new(66);
+        let centers: Vec<i32> =
+            (0..cap).map(|_| rb.gen_range(sh.vocab as u64) as i32).collect();
+        let ctx: Vec<i32> = (0..cap * sh.k1())
+            .map(|_| rb.gen_range(sh.vocab as u64) as i32)
+            .collect();
+        let weights = vec![1.0f32; cap];
+        let mut model = SubModel::init(&be, 9).unwrap();
+        let t_step = time_it(3, 20, || {
+            model
+                .train_macro_batch(&be, &centers, &ctx, &weights, 0.01)
+                .unwrap();
+        });
+        let pairs_per_s = cap as f64 / t_step.p50_secs;
+        table.row(
+            "native dispatch v2000_d32_b64_k5_s4",
+            vec![
+                "ms/batch | Kpairs/s".into(),
+                format!("{:.2} | {:.0}", t_step.p50_secs * 1e3, pairs_per_s / 1e3),
+            ],
+            obj(vec![
+                ("bench", s("native_dispatch_v2000_d32")),
+                ("ms_per_batch", num(t_step.p50_secs * 1e3)),
+                ("kpairs_per_s", num(pairs_per_s / 1e3)),
+            ]),
+        );
+    }
 
     // ---- bridge + end-to-end PJRT sections (need artifacts + xla feature) ----
     match Manifest::load(std::path::Path::new("artifacts")) {

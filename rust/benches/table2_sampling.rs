@@ -11,8 +11,7 @@ use dw2v::baselines::param_avg;
 use dw2v::bench_util::{bench_scale, Table};
 use dw2v::coordinator::leader;
 use dw2v::eval::report::{evaluate_suite, format_cell};
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::util::json::{num, obj, s};
@@ -28,8 +27,8 @@ fn main() {
     // paper: thresholds at full scale; keep masks meaningful on this corpus
     cfg.min_count_base = 20.0;
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let backend = load_backend(&cfg, world.vocab.len()).expect("backend");
+    println!("backend: {}", backend.name());
 
     let bench_names: Vec<String> = world.suite.iter().map(|b| b.name.clone()).collect();
     let headers: Vec<&str> = bench_names.iter().map(|x| x.as_str()).collect();
@@ -55,7 +54,7 @@ fn main() {
             cfg.rate_percent = rate;
             cfg.strategy = strategy.clone();
             let rep =
-                leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)
+                leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &backend)
                     .expect("pipeline");
             let label = format!("{} {}%", strategy.name(), rate);
             table.row(
@@ -76,7 +75,9 @@ fn main() {
         dw2v::eval::report::scores_to_json("hogwild", &hog_scores),
     );
     for executors in [8, 32] {
-        let (emb, _) = param_avg::train(&world.corpus, &world.vocab, &scfg, executors, cfg.seed);
+        let (emb, _) =
+            param_avg::train(&world.corpus, &world.vocab, &scfg, &backend, executors, cfg.seed)
+                .expect("mllib");
         let scores = evaluate_suite(&emb, &world.suite, cfg.seed);
         let label = format!("MLlib-style, {executors} exec");
         table.row(

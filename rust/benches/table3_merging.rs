@@ -11,8 +11,7 @@ use dw2v::bench_util::{bench_scale, Table};
 use dw2v::coordinator::leader;
 use dw2v::eval::report::{evaluate_suite, format_cell, scores_to_json};
 use dw2v::merge::average;
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::world::build_world;
@@ -26,8 +25,8 @@ fn main() {
     cfg.strategy = DivideStrategy::Shuffle;
     cfg.min_count_base = 20.0;
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let backend = load_backend(&cfg, world.vocab.len()).expect("backend");
+    println!("backend: {}", backend.name());
 
     let bench_names: Vec<String> = world.suite.iter().map(|b| b.name.clone()).collect();
     let headers: Vec<&str> = bench_names.iter().map(|x| x.as_str()).collect();
@@ -43,7 +42,7 @@ fn main() {
     }
     for &rate in &rates {
         cfg.rate_percent = rate;
-        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt)
+        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &backend)
             .expect("train");
         for method in [
             MergeMethod::Concat,

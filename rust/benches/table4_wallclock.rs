@@ -10,8 +10,7 @@
 use dw2v::baselines::param_avg;
 use dw2v::bench_util::{bench_scale, Table};
 use dw2v::coordinator::leader;
-use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
 use dw2v::util::json::{num, obj, s};
@@ -26,8 +25,8 @@ fn main() {
     cfg.strategy = DivideStrategy::Shuffle;
     cfg.min_count_base = 20.0;
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir)).expect("artifacts");
-    let rt = Runtime::load(manifest.resolve(world.vocab.len(), cfg.dim).unwrap()).unwrap();
+    let backend = load_backend(&cfg, world.vocab.len()).expect("backend");
+    println!("backend: {}", backend.name());
 
     let mut table = Table::new(
         "table4_wallclock",
@@ -42,7 +41,7 @@ fn main() {
     };
     for &rate in rates {
         cfg.rate_percent = rate;
-        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &rt)
+        let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &backend)
             .expect("train");
         cfg.merge = MergeMethod::Pca;
         let pca = leader::merge_trained(&cfg, &out.submodels);
@@ -85,7 +84,9 @@ fn main() {
         obj(vec![("system", s("hogwild")), ("train_secs", num(hog_stats.seconds))]),
     );
     for executors in [8, 32] {
-        let (_, st) = param_avg::train(&world.corpus, &world.vocab, &scfg, executors, cfg.seed);
+        let (_, st) =
+            param_avg::train(&world.corpus, &world.vocab, &scfg, &backend, executors, cfg.seed)
+                .expect("mllib");
         table.row(
             &format!("MLlib-style ({executors} exec)"),
             vec![

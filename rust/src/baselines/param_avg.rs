@@ -7,74 +7,23 @@
 //! as executors grow — unlike sub-model training + alignment-aware
 //! merging, naive averaging of diverging replicas cancels signal — while
 //! wall-clock improves with parallelism until averaging overhead bites.
+//!
+//! Backend-generic: each executor replica is a [`SubModel`] trained
+//! through the same macro-batch [`Backend`] protocol as the paper
+//! system's reducers (native kernels by default, PJRT with artifacts), so
+//! baseline and system rows of a table always measure the same compute
+//! engine. Averaging happens on the downloaded packed states.
 
 use crate::embedding::Embedding;
 use crate::kernels;
-use crate::kernels::SigmoidTable;
-use crate::sgns::batch::BatchBuilder;
+use crate::runtime::backend::Backend;
+use crate::runtime::params::{init_host, SubModel};
+use crate::sgns::batch::{BatchBuilder, BatchShape};
 use crate::sgns::config::SgnsConfig;
 use crate::sgns::negative::AliasTable;
 use crate::text::corpus::Corpus;
 use crate::text::vocab::Vocab;
 use crate::util::rng::Pcg64;
-
-/// Train one executor's replica in place over its sentence partition.
-#[allow(clippy::too_many_arguments)]
-fn train_replica(
-    w: &mut [f32],
-    c: &mut [f32],
-    sentences: &[Vec<u32>],
-    cfg: &SgnsConfig,
-    noise: &AliasTable,
-    keep: &[f32],
-    sigmoid: &SigmoidTable,
-    lr: f32,
-    rng: &mut Pcg64,
-) -> u64 {
-    let d = cfg.dim;
-    let mut pairs = 0u64;
-    let mut kept: Vec<u32> = Vec::new();
-    let mut neu = vec![0.0f32; d];
-    for sent in sentences {
-        kept.clear();
-        for &word in sent {
-            let p = keep.get(word as usize).copied().unwrap_or(1.0);
-            if p >= 1.0 || rng.gen_f32() < p {
-                kept.push(word);
-            }
-        }
-        if kept.len() < 2 {
-            continue;
-        }
-        for pos in 0..kept.len() {
-            let center = kept[pos] as usize;
-            let win = 1 + rng.gen_range_usize(cfg.window);
-            let lo = pos.saturating_sub(win);
-            let hi = (pos + win + 1).min(kept.len());
-            for other in lo..hi {
-                if other == pos {
-                    continue;
-                }
-                let target = kept[other] as usize;
-                neu.fill(0.0);
-                for s in 0..=cfg.negatives {
-                    let (ctx_id, label) = if s == 0 {
-                        (target, 1.0f32)
-                    } else {
-                        (noise.sample(rng) as usize, 0.0f32)
-                    };
-                    let crow = &mut c[ctx_id * d..(ctx_id + 1) * d];
-                    let wrow = &w[center * d..(center + 1) * d];
-                    kernels::dot_sigmoid_update(wrow, crow, &mut neu, label, lr, sigmoid);
-                }
-                let wrow = &mut w[center * d..(center + 1) * d];
-                kernels::axpy(1.0, &neu, wrow);
-                pairs += 1;
-            }
-        }
-    }
-    pairs
-}
 
 #[derive(Debug, Clone, Default)]
 pub struct ParamAvgStats {
@@ -83,26 +32,65 @@ pub struct ParamAvgStats {
     pub sync_rounds: usize,
 }
 
+/// Train one executor's replica from the current global state over its
+/// sentence partition; returns the trained packed state + pair count.
+#[allow(clippy::too_many_arguments)]
+fn train_replica<B: Backend>(
+    backend: &B,
+    global: &[f32],
+    sentences: &[Vec<u32>],
+    first_sentence: usize,
+    epoch: usize,
+    cfg: &SgnsConfig,
+    noise: &AliasTable,
+    keep: &[f32],
+    lr: f32,
+    seed: u64,
+) -> Result<(Vec<f32>, u64), String> {
+    let sh = backend.shape();
+    let shape = BatchShape {
+        batch: sh.batch,
+        steps: sh.steps,
+        negatives: sh.negatives,
+        vocab: sh.vocab,
+    };
+    let rng = Pcg64::new_stream(seed, 0x7061); // "pa"
+    let mut builder = BatchBuilder::new(shape, cfg.window, keep.to_vec(), noise.clone(), rng);
+    let mut model = SubModel::from_host(backend, global)?;
+    let mut ready = Vec::new();
+    for (i, sent) in sentences.iter().enumerate() {
+        let sid = (epoch as u64) << 40 | (first_sentence + i) as u64;
+        builder.push_sentence(sid, sent, &mut |mb| ready.push(mb));
+        for mb in ready.drain(..) {
+            model.train_macro_batch(backend, &mb.centers, &mb.ctx, &mb.weights, lr)?;
+        }
+    }
+    builder.flush(&mut |mb| ready.push(mb));
+    for mb in ready.drain(..) {
+        model.train_macro_batch(backend, &mb.centers, &mb.ctx, &mb.weights, lr)?;
+    }
+    let pairs = builder.pairs_emitted;
+    Ok((model.download_packed(backend)?, pairs))
+}
+
 /// Train with `executors` synchronized replicas, averaging every epoch.
-pub fn train(
+pub fn train<B: Backend>(
     corpus: &Corpus,
     vocab: &Vocab,
     cfg: &SgnsConfig,
+    backend: &B,
     executors: usize,
     seed: u64,
-) -> (Embedding, ParamAvgStats) {
-    let v = vocab.len();
-    let d = cfg.dim;
+) -> Result<(Embedding, ParamAvgStats), String> {
+    let sh = backend.shape();
+    assert!(vocab.len() <= sh.vocab, "vocab exceeds backend capacity");
+    assert_eq!(cfg.dim, sh.dim, "dim mismatch with backend shape");
     let executors = executors.max(1);
-    let mut rng = Pcg64::new_stream(seed, 0x7061); // "pa"
-    let mut w_global = vec![0.0f32; v * d];
-    for x in &mut w_global {
-        *x = (rng.gen_f32() - 0.5) / d as f32;
-    }
-    let mut c_global = vec![0.0f32; v * d];
+    let mut global = init_host(sh, seed ^ 0x7061_7661); // "pava"
+    // built once and shared; replicas clone the (cheap) finished tables
+    // instead of re-deriving them from counts every epoch
     let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
     let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
-    let sigmoid = SigmoidTable::new();
     let start = std::time::Instant::now();
     let mut stats = ParamAvgStats::default();
 
@@ -113,49 +101,46 @@ pub fn train(
             (cfg.epochs as u64) * corpus.total_tokens(),
         );
         // every executor starts from the current global model
-        let results: Vec<(Vec<f32>, Vec<f32>, u64)> = std::thread::scope(|scope| {
+        let results: Vec<Result<(Vec<f32>, u64), String>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..executors)
                 .map(|e| {
                     let range = corpus.shard_range(e, executors);
+                    let first = range.start;
                     let sentences = &corpus.sentences[range];
-                    let mut w = w_global.clone();
-                    let mut c = c_global.clone();
-                    let cfg = cfg.clone();
-                    let noise = &noise;
-                    let keep = &keep;
-                    let sigmoid = &sigmoid;
-                    let mut erng =
-                        Pcg64::new_stream(seed ^ 0x6578, (epoch * executors + e) as u64);
+                    let (global, noise, keep) = (&global, &noise, &keep);
+                    let eseed = seed ^ 0x6578 ^ ((epoch * executors + e) as u64).rotate_left(23);
                     scope.spawn(move || {
-                        let pairs = train_replica(
-                            &mut w, &mut c, sentences, &cfg, noise, keep, sigmoid, lr,
-                            &mut erng,
-                        );
-                        (w, c, pairs)
+                        train_replica(
+                            backend, global, sentences, first, epoch, cfg, noise, keep, lr,
+                            eseed,
+                        )
                     })
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         });
         // the synchronization the paper's approach avoids: average replicas
-        w_global.iter_mut().for_each(|x| *x = 0.0);
-        c_global.iter_mut().for_each(|x| *x = 0.0);
+        global.iter_mut().for_each(|x| *x = 0.0);
         let inv = 1.0 / executors as f32;
-        for (w, c, pairs) in results {
+        for r in results {
+            let (packed, pairs) = r?;
             stats.pairs += pairs;
-            kernels::axpy(inv, &w, &mut w_global);
-            kernels::axpy(inv, &c, &mut c_global);
+            kernels::axpy(inv, &packed, &mut global);
         }
         stats.sync_rounds += 1;
     }
     stats.seconds = start.elapsed().as_secs_f64();
-    (Embedding::from_rows(v, d, w_global), stats)
+    let v = vocab.len();
+    let emb = Embedding::from_rows(v, sh.dim, global[..v * sh.dim].to_vec());
+    Ok((emb, stats))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
+    use crate::runtime::backend::ModelShape;
+    use crate::runtime::native::NativeBackend;
 
     fn setup() -> (Corpus, Vocab) {
         let gcfg = GeneratorConfig {
@@ -171,6 +156,10 @@ mod tests {
         (corpus, vocab)
     }
 
+    fn backend(dim: usize, negatives: usize) -> NativeBackend {
+        NativeBackend::new(ModelShape::native(60, dim, 16, negatives, 2))
+    }
+
     #[test]
     fn single_executor_learns() {
         let (corpus, vocab) = setup();
@@ -179,7 +168,8 @@ mod tests {
             epochs: 3,
             ..Default::default()
         };
-        let (emb, stats) = train(&corpus, &vocab, &cfg, 1, 3);
+        let be = backend(12, cfg.negatives);
+        let (emb, stats) = train(&corpus, &vocab, &cfg, &be, 1, 3).unwrap();
         assert!(stats.pairs > 5000);
         assert_eq!(stats.sync_rounds, 3);
         assert!(emb.data.iter().all(|x| x.is_finite()));
@@ -196,7 +186,8 @@ mod tests {
             epochs: 2,
             ..Default::default()
         };
-        let (emb, stats) = train(&corpus, &vocab, &cfg, 8, 5);
+        let be = backend(8, cfg.negatives);
+        let (emb, stats) = train(&corpus, &vocab, &cfg, &be, 8, 5).unwrap();
         assert!(emb.data.iter().all(|x| x.is_finite()));
         assert_eq!(stats.sync_rounds, 2);
     }
@@ -239,12 +230,28 @@ mod tests {
             let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
             avg(&same) - avg(&cross)
         };
-        let (e1, _) = train(&corpus, &vocab, &cfg, 1, 7);
-        let (e16, _) = train(&corpus, &vocab, &cfg, 16, 7);
+        let be = backend(12, cfg.negatives);
+        let (e1, _) = train(&corpus, &vocab, &cfg, &be, 1, 7).unwrap();
+        let (e16, _) = train(&corpus, &vocab, &cfg, &be, 16, 7).unwrap();
         let (s1, s16) = (score(&e1), score(&e16));
         assert!(
             s1 > s16,
             "expected single-executor to beat 16 executors: {s1} vs {s16}"
         );
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_executors() {
+        let (corpus, vocab) = setup();
+        let cfg = SgnsConfig {
+            dim: 8,
+            epochs: 2,
+            ..Default::default()
+        };
+        let be = backend(8, cfg.negatives);
+        let (e1, s1) = train(&corpus, &vocab, &cfg, &be, 4, 9).unwrap();
+        let (e2, s2) = train(&corpus, &vocab, &cfg, &be, 4, 9).unwrap();
+        assert_eq!(s1.pairs, s2.pairs);
+        assert_eq!(e1.data, e2.data, "param-avg must be reproducible");
     }
 }

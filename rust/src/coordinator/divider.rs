@@ -236,4 +236,109 @@ mod tests {
         // Bernoulli(1.0) -> all sentences
         assert_eq!(per[0].len(), 500);
     }
+
+    // ---- property-style tests over random corpora ---------------------------
+
+    use crate::util::rng::Pcg64;
+
+    const STRATEGIES: [DivideStrategy; 3] = [
+        DivideStrategy::EqualPartitioning,
+        DivideStrategy::RandomSampling,
+        DivideStrategy::Shuffle,
+    ];
+
+    /// Every routing decision lands in bounds, no sub-model appears twice
+    /// for one sentence, and EqualPartitioning multiplicity is exactly 1 —
+    /// across random corpus sizes, rates, seeds and epochs.
+    #[test]
+    fn property_targets_are_within_bounds_and_duplicate_free() {
+        let mut rng = Pcg64::new(0xD1D1);
+        let mut buf = Vec::new();
+        for _case in 0..8 {
+            let total = 200 + rng.gen_range_usize(2000);
+            let rate = [5.0, 10.0, 25.0, 50.0][rng.gen_range_usize(4)];
+            let seed = rng.next_u64();
+            for strategy in STRATEGIES {
+                let d = Divider::new(strategy, rate, seed, total);
+                for epoch in 0..3 {
+                    for i in 0..total {
+                        d.targets(epoch, i, &mut buf);
+                        for &s in &buf {
+                            assert!(s < d.num_submodels, "target {s} out of bounds");
+                        }
+                        let mut uniq = buf.clone();
+                        uniq.sort_unstable();
+                        uniq.dedup();
+                        assert_eq!(uniq.len(), buf.len(), "duplicate targets: {buf:?}");
+                        if d.strategy == DivideStrategy::EqualPartitioning {
+                            assert_eq!(buf.len(), 1, "equal must route to exactly one");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Mean routing multiplicity matches the strategy's expectation:
+    /// exactly 1 for EqualPartitioning, n·r ≈ 1 for the Bernoulli
+    /// strategies — within a 5-sigma tolerance of the binomial std dev.
+    #[test]
+    fn property_expected_multiplicity_holds() {
+        let mut rng = Pcg64::new(0xD1D2);
+        let mut buf = Vec::new();
+        for _case in 0..6 {
+            let total = 2000 + rng.gen_range_usize(4000);
+            let rate = [10.0, 20.0, 25.0][rng.gen_range_usize(3)];
+            let seed = rng.next_u64();
+            for strategy in STRATEGIES {
+                let d = Divider::new(strategy, rate, seed, total);
+                let mut routed = 0usize;
+                for i in 0..total {
+                    d.targets(0, i, &mut buf);
+                    routed += buf.len();
+                }
+                let mean = routed as f64 / total as f64;
+                match d.strategy {
+                    DivideStrategy::EqualPartitioning => assert_eq!(routed, total),
+                    _ => {
+                        // per sentence: Binomial(n, r) with mean n·r and
+                        // variance n·r·(1−r); 5σ of the empirical mean
+                        let expect = d.num_submodels as f64 * d.rate;
+                        let sigma = (d.num_submodels as f64 * d.rate * (1.0 - d.rate)
+                            / total as f64)
+                            .sqrt();
+                        assert!(
+                            (mean - expect).abs() < 5.0 * sigma + 1e-9,
+                            "multiplicity {mean:.4} vs expected {expect:.4} (σ={sigma:.5})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shuffle draws a fresh assignment every epoch, but two dividers with
+    /// identical seeds replay identical assignments epoch by epoch (and a
+    /// different seed diverges).
+    #[test]
+    fn property_shuffle_epochs_differ_but_seeds_reproduce() {
+        let mut rng = Pcg64::new(0xD1D3);
+        for _case in 0..5 {
+            let total = 1000 + rng.gen_range_usize(2000);
+            let seed = rng.next_u64();
+            let a = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total);
+            let b = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total);
+            let c = Divider::new(DivideStrategy::Shuffle, 20.0, seed ^ 0x5EED, total);
+            for epoch in 0..3 {
+                assert_eq!(
+                    collect(&a, epoch),
+                    collect(&b, epoch),
+                    "same seed must replay the same epoch-{epoch} assignment"
+                );
+            }
+            assert_ne!(collect(&a, 0), collect(&a, 1), "epochs must differ");
+            assert_ne!(collect(&a, 1), collect(&a, 2), "epochs must differ");
+            assert_ne!(collect(&a, 0), collect(&c, 0), "seeds must decorrelate");
+        }
+    }
 }

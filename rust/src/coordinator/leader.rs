@@ -3,8 +3,12 @@
 //! This is the entry point the CLI, the examples and every bench harness
 //! drive. It owns phase timing (the numbers behind Table 4 / Figure 2),
 //! constructs the MapReduce topology (mappers route, reducers train
-//! PJRT-backed sub-models), and hands the trained sub-models to the merge
-//! phase and the merged consensus to the evaluation harness.
+//! backend-resident sub-models), and hands the trained sub-models to the
+//! merge phase and the merged consensus to the evaluation harness.
+//!
+//! Everything is generic over [`Backend`]: the same orchestration runs
+//! the native CPU engine (default builds, CI) and the PJRT/XLA bridge
+//! (`--features xla` + artifacts) unchanged.
 
 use super::divider::Divider;
 use super::mapper::{CorpusSource, SentenceRouter};
@@ -15,7 +19,7 @@ use crate::exec::mapreduce::{MapReduce, RunStats};
 use crate::gen::benchmarks::Benchmark;
 use crate::merge::alir::AlirOptions;
 use crate::merge::{merge_models, MergeResult};
-use crate::runtime::client::Runtime;
+use crate::runtime::backend::Backend;
 use crate::sgns::config::SgnsConfig;
 use crate::sgns::trainer::SubModelTrainer;
 use crate::text::corpus::Corpus;
@@ -55,13 +59,14 @@ pub fn sgns_config(cfg: &ExperimentConfig) -> SgnsConfig {
     }
 }
 
-/// Divide + train: run `cfg.epochs` MapReduce rounds with one PJRT-backed
-/// trainer per sub-model and return the trained sub-models.
-pub fn train_submodels(
+/// Divide + train: run `cfg.epochs` MapReduce rounds with one
+/// backend-resident trainer per sub-model and return the trained
+/// sub-models.
+pub fn train_submodels<B: Backend>(
     cfg: &ExperimentConfig,
     corpus: &Corpus,
     vocab: &Vocab,
-    rt: &Runtime,
+    backend: &B,
 ) -> Result<TrainOutput, String> {
     let scfg = sgns_config(cfg);
     let divider = Arc::new(Divider::new(
@@ -90,7 +95,7 @@ pub fn train_submodels(
     let mut reducers = Vec::with_capacity(n);
     for s in 0..n {
         let seed = root.derive(s as u64).next_u64();
-        let trainer = SubModelTrainer::new(rt, vocab, &scfg, expected_pairs, seed)?;
+        let trainer = SubModelTrainer::new(backend, vocab, &scfg, expected_pairs, seed)?;
         reducers.push(TrainReducer::new(trainer));
     }
 
@@ -154,14 +159,14 @@ pub struct PipelineReport {
 
 /// divide → train → merge → eval with the experiment's configured
 /// strategy/rate/merge method.
-pub fn run_pipeline(
+pub fn run_pipeline<B: Backend>(
     cfg: &ExperimentConfig,
     corpus: &Corpus,
     vocab: &Vocab,
     suite: &[Benchmark],
-    rt: &Runtime,
+    backend: &B,
 ) -> Result<PipelineReport, String> {
-    let train = train_submodels(cfg, corpus, vocab, rt)?;
+    let train = train_submodels(cfg, corpus, vocab, backend)?;
     let merged = merge_trained(cfg, &train.submodels);
     let timer = Timer::start("eval phase");
     let scores = evaluate_suite(&merged.embedding, suite, cfg.seed);

@@ -1,18 +1,20 @@
-//! Reducer side of the train phase: one PJRT-backed sub-model per reducer.
+//! Reducer side of the train phase: one backend-resident sub-model per
+//! reducer.
 //!
 //! A [`TrainReducer`] consumes the sentences its mapper routed to it and
 //! feeds them to its [`SubModelTrainer`]. Reducers share **nothing** with
 //! each other — no parameters, no RNG, no locks — which is the paper's
 //! central asynchrony claim. At each round barrier the partial batch is
-//! flushed and the on-device loss counters are snapshotted, giving the
+//! flushed and the running loss counters are snapshotted, giving the
 //! per-epoch loss curve the e2e example logs.
 
 use crate::exec::mapreduce::Reducer;
+use crate::runtime::backend::Backend;
 use crate::runtime::params::Metrics;
 use crate::sgns::trainer::SubModelTrainer;
 
-pub struct TrainReducer<'rt> {
-    pub trainer: SubModelTrainer<'rt>,
+pub struct TrainReducer<'b, B: Backend> {
+    pub trainer: SubModelTrainer<'b, B>,
     /// mean loss per finished epoch (delta of the running counters)
     pub epoch_mean_loss: Vec<f64>,
     prev: Metrics,
@@ -21,8 +23,8 @@ pub struct TrainReducer<'rt> {
     pub error: Option<String>,
 }
 
-impl<'rt> TrainReducer<'rt> {
-    pub fn new(trainer: SubModelTrainer<'rt>) -> Self {
+impl<'b, B: Backend> TrainReducer<'b, B> {
+    pub fn new(trainer: SubModelTrainer<'b, B>) -> Self {
         Self {
             trainer,
             epoch_mean_loss: Vec::new(),
@@ -32,7 +34,7 @@ impl<'rt> TrainReducer<'rt> {
     }
 }
 
-impl<'rt, 'c> Reducer<(u64, &'c [u32])> for TrainReducer<'rt> {
+impl<'b, 'c, B: Backend> Reducer<(u64, &'c [u32])> for TrainReducer<'b, B> {
     fn reduce(&mut self, (sentence_id, sentence): (u64, &'c [u32])) {
         if self.error.is_some() {
             return;

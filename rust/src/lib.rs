@@ -14,12 +14,33 @@
 //! * **Layer 1 (python/compile/kernels/sgns.py)** — the fused SGNS
 //!   loss+gradient Pallas kernel invoked by Layer 2.
 //!
-//! Python runs only at build time (`make artifacts`); the training hot path
-//! is rust driving PJRT-compiled executables with device-resident
+//! ## Compute backends
+//!
+//! Training dispatches go through the [`runtime::Backend`] abstraction
+//! (`runtime/backend.rs`); the same batched `(centers, ctx, weights)`
+//! protocol runs on either engine, selected per experiment with
+//! `--backend` / the `backend` config key:
+//!
+//! | backend  | engine                                  | needs                               |
+//! |----------|-----------------------------------------|-------------------------------------|
+//! | `native` | pure-rust vectorized kernels ([`kernels`]) | nothing — default builds, CI     |
+//! | `xla`    | PJRT AOT executables (`runtime/client.rs`) | `--features xla` + `make artifacts` |
+//! | `auto`   | `xla` when loadable, else `native`      | nothing (the default)               |
+//!
+//! With the native backend the full divide → train → merge → eval
+//! pipeline, the examples and the bench harnesses run — and are tested —
+//! on any machine with no XLA toolchain; with the `xla` feature the hot
+//! path is rust driving PJRT-compiled executables with device-resident
 //! parameters.
 //!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions of every table and figure.
+
+// Style lints we deliberately keep: indexed loops mirror the papers'
+// notation in the numeric kernels, and test/bench fixtures mutate a
+// Default config field-by-field for readability.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::field_reassign_with_default)]
 
 pub mod baselines;
 pub mod bench_util;

@@ -10,13 +10,32 @@
 //!
 //! Every flag maps to a key of `ExperimentConfig`; `--config file.json`
 //! loads a base config that individual flags then override.
+//!
+//! ## Backend selection (`--backend auto|native|xla`)
+//!
+//! Training dispatches run on a compute backend (see
+//! `dw2v::runtime::backend`):
+//!
+//! | `--backend` | engine            | requirements                         |
+//! |-------------|-------------------|--------------------------------------|
+//! | `auto`      | xla when loadable, else native | none (the default)      |
+//! | `native`    | pure-rust kernels | none — runs everywhere               |
+//! | `xla`       | PJRT AOT bridge   | `--features xla` + `make artifacts`  |
+//!
+//! `auto` tries to resolve `--artifact-dir` and compile the PJRT
+//! executables; any failure (feature not compiled, no manifest, no
+//! fitting artifact) logs the reason and falls back to the native
+//! backend, so `dw2v pipeline` completes on a machine with no XLA
+//! toolchain at all.
+
+#![allow(clippy::field_reassign_with_default)]
 
 use dw2v::coordinator::divider::Divider;
 use dw2v::coordinator::leader;
 use dw2v::coordinator::stats::{bigram_kl, unigram_kl, vocab_coverage, DistStats};
 use dw2v::eval::report::{self, evaluate_suite};
 use dw2v::runtime::artifacts::Manifest;
-use dw2v::runtime::client::Runtime;
+use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::cli::Command;
 use dw2v::util::config::ExperimentConfig;
@@ -57,6 +76,12 @@ subcommands:
   gen-corpus   generate + persist a synthetic corpus
   artifacts    show the AOT artifact manifest
 
+backends (--backend auto|native|xla):
+  auto         use the PJRT/XLA artifacts when they load, else fall back
+               to the pure-rust native backend (default)
+  native       pure-rust CPU kernels — no artifacts, runs everywhere
+  xla          PJRT AOT bridge — needs --features xla and `make artifacts`
+
 run `dw2v <subcommand> --help` for flags.";
 
 /// Flags shared by every experiment-driving subcommand.
@@ -73,6 +98,7 @@ fn experiment_command(name: &str, about: &str) -> Command {
         .flag("rate", None, "sampling rate r% (submodels = 100/r)")
         .flag("merge", None, "merge: concat | pca | alir_rand | alir_pca | single")
         .flag("mappers", None, "mapper threads")
+        .flag("backend", None, "compute backend: auto | native | xla")
         .flag("artifact-dir", None, "AOT artifact directory")
 }
 
@@ -99,6 +125,7 @@ fn parse_experiment(args: &dw2v::util::cli::Args) -> Result<ExperimentConfig, St
         ("rate", "rate_percent"),
         ("merge", "merge"),
         ("mappers", "mappers"),
+        ("backend", "backend"),
         ("artifact-dir", "artifact_dir"),
     ] {
         if let Some(v) = args.get(flag) {
@@ -115,19 +142,17 @@ fn cmd_pipeline(argv: &[String]) -> Result<(), String> {
 
     let t_setup = Timer::start("setup");
     let world = build_world(&cfg);
-    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
-    let artifact = manifest.resolve(world.vocab.len(), cfg.dim)?;
-    let rt = Runtime::load(artifact)?;
+    let backend = load_backend(&cfg, world.vocab.len())?;
     println!(
-        "setup: corpus {} sentences / {} tokens, vocab {}, artifact {} ({:.1}s)",
+        "setup: corpus {} sentences / {} tokens, vocab {}, backend {} ({:.1}s)",
         world.corpus.len(),
         world.corpus.total_tokens(),
         world.vocab.len(),
-        artifact.name,
+        backend.name(),
         t_setup.stop_quiet()
     );
 
-    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &rt)?;
+    let rep = leader::run_pipeline(&cfg, &world.corpus, &world.vocab, &world.suite, &backend)?;
     println!(
         "train {:.2}s ({} pairs, {} dispatches) | merge {:.2}s | eval {:.2}s",
         rep.train.train_secs, rep.train.pairs, rep.train.dispatches, rep.merge_secs, rep.eval_secs
@@ -186,8 +211,15 @@ fn cmd_mllib(argv: &[String]) -> Result<(), String> {
         .unwrap_or(10);
     let world = build_world(&cfg);
     let scfg = leader::sgns_config(&cfg);
-    let (emb, stats) =
-        dw2v::baselines::param_avg::train(&world.corpus, &world.vocab, &scfg, executors, cfg.seed);
+    let backend = load_backend(&cfg, world.vocab.len())?;
+    let (emb, stats) = dw2v::baselines::param_avg::train(
+        &world.corpus,
+        &world.vocab,
+        &scfg,
+        &backend,
+        executors,
+        cfg.seed,
+    )?;
     println!(
         "mllib-style: {:.2}s, {} pairs, {} sync rounds",
         stats.seconds, stats.pairs, stats.sync_rounds

@@ -14,6 +14,15 @@ pub fn merge(models: &[Embedding], target_dim: usize) -> (Embedding, Vec<f64>) {
     assert!(!models.is_empty(), "no sub-models to merge");
     let vocab = models[0].vocab;
     let common = intersection_vocab(models);
+    if common.is_empty() {
+        // nothing survives the intersection (e.g. disjoint sub-model
+        // vocabularies — the Fig-3 stress case): like Concat, PCA can only
+        // drop every word; return an all-absent embedding rather than
+        // fitting a PCA on zero samples
+        let mut out = Embedding::zeros(vocab, target_dim);
+        out.present = vec![false; vocab];
+        return (out, Vec::new());
+    }
     let cat = concat::merge(models);
     // extract the common rows of the concat matrix into f64
     let mut x = Mat::zeros(common.len(), cat.dim);

@@ -1,0 +1,358 @@
+//! The compute-backend abstraction: one trait, two engines.
+//!
+//! Everything above this module (trainers, reducers, the leader, the
+//! baselines, benches, examples) drives a sub-model through [`Backend`]:
+//! a packed `[rows, dim]` parameter state plus the batched
+//! `(centers, ctx, weights, lr)` SGNS macro-step protocol of
+//! `python/compile/model.py`. Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure rust on the shared
+//!   vectorized kernels (`crate::kernels`); always available, fully
+//!   deterministic, what CI exercises end to end.
+//! * [`crate::runtime::client::Runtime`] — the PJRT/XLA AOT bridge,
+//!   compiled behind the `xla` feature; needs `make artifacts`.
+//!
+//! [`load_backend`] resolves an experiment's `BackendKind` to a concrete
+//! engine, with `auto` preferring XLA artifacts when they load and
+//! falling back to native otherwise — so `dw2v pipeline`, the examples
+//! and every bench harness run on any machine with no XLA toolchain.
+
+use crate::info;
+use crate::runtime::artifacts::{ArtifactConfig, Manifest};
+use crate::runtime::client::Runtime;
+use crate::runtime::native::{NativeBackend, NativeState};
+use crate::runtime::params::Metrics;
+use crate::util::config::{BackendKind, ExperimentConfig};
+
+/// Static shape of the sub-model a backend hosts — the backend-neutral
+/// half of the artifact contract. The packed state is `[rows, dim]` with
+/// rows `0..vocab` = input embeddings `W`, `vocab..2·vocab` = context
+/// embeddings `C`, one zero pad row (the target of the padding sentinel
+/// `vocab`) and one metrics row `[loss_sum, examples, micro_steps, …]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelShape {
+    /// vocabulary capacity V (ids `0..V`; `V` itself is the pad sentinel)
+    pub vocab: usize,
+    /// embedding dimensionality d
+    pub dim: usize,
+    /// examples per micro-step B
+    pub batch: usize,
+    /// negatives per positive K
+    pub negatives: usize,
+    /// micro-steps per dispatch S
+    pub steps: usize,
+    /// total packed rows (2·V + 2 in the canonical layout)
+    pub rows: usize,
+}
+
+impl ModelShape {
+    /// Canonical native layout for a `(vocab, dim)` model.
+    pub fn native(
+        vocab: usize,
+        dim: usize,
+        batch: usize,
+        negatives: usize,
+        steps: usize,
+    ) -> Self {
+        assert!(vocab > 0, "empty vocabulary");
+        assert!(dim >= 3, "dim must be >= 3 to hold the metrics row");
+        Self {
+            vocab,
+            dim,
+            batch: batch.max(1),
+            negatives,
+            steps: steps.max(1),
+            rows: 2 * vocab + 2,
+        }
+    }
+
+    /// The shape an AOT artifact implements.
+    pub fn from_artifact(a: &ArtifactConfig) -> Self {
+        Self {
+            vocab: a.vocab,
+            dim: a.dim,
+            batch: a.batch,
+            negatives: a.negatives,
+            steps: a.steps,
+            rows: a.rows,
+        }
+    }
+
+    /// Native shape sized for an experiment's actual vocabulary.
+    pub fn for_experiment(cfg: &ExperimentConfig, vocab: usize) -> Self {
+        Self::native(
+            vocab,
+            cfg.dim,
+            cfg.trainer_batch,
+            cfg.negatives,
+            cfg.trainer_steps,
+        )
+    }
+
+    /// Context ids per example (positive + negatives).
+    pub fn k1(&self) -> usize {
+        self.negatives + 1
+    }
+
+    /// Examples per macro-batch dispatch.
+    pub fn batch_capacity(&self) -> usize {
+        self.batch * self.steps
+    }
+
+    /// Row index the pad sentinel maps to.
+    pub fn pad_row(&self) -> usize {
+        2 * self.vocab
+    }
+
+    /// Row index of the running metrics counters.
+    pub fn metrics_row(&self) -> usize {
+        2 * self.vocab + 1
+    }
+
+    /// Total f32 elements in the packed state.
+    pub fn state_len(&self) -> usize {
+        self.rows * self.dim
+    }
+}
+
+/// A compute engine executing the SGNS macro-batch protocol over opaque
+/// per-sub-model state. `Sync` because many reducer threads share one
+/// backend; `State: Send` because each reducer owns its state on its own
+/// thread.
+pub trait Backend: Sync {
+    type State: Send;
+
+    /// The model shape every state of this backend has.
+    fn shape(&self) -> &ModelShape;
+
+    /// Short human-readable engine name (`"native"` / `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Materialize a packed host state (length `shape().state_len()`)
+    /// wherever this backend computes.
+    fn state_from_host(&self, host: &[f32]) -> Result<Self::State, String>;
+
+    /// One training macro-step over `steps × batch` examples: fwd + grad +
+    /// update, in place. `centers[S·B]`, `ctx[S·B·(K+1)]` (col 0 = the
+    /// positive), `weights[S·B]` (0 = padding), one scalar `lr`.
+    fn train_macro_batch(
+        &self,
+        state: &mut Self::State,
+        centers: &[i32],
+        ctx: &[i32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<(), String>;
+
+    /// Read the running loss counters (cheap; no full download).
+    fn metrics(&self, state: &Self::State) -> Result<Metrics, String>;
+
+    /// Cosine similarity between `W` rows for each (query, candidate) pair.
+    fn similarity(&self, state: &Self::State, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String>;
+
+    /// Download the full packed state (end of training / checkpoints).
+    fn download(&self, state: &Self::State) -> Result<Vec<f32>, String>;
+}
+
+/// Runtime-selected backend for the CLI / examples / bench harnesses,
+/// where the engine is picked from config rather than a type parameter.
+/// The PJRT engine is boxed: it drags the whole artifact config along,
+/// and the enum is constructed once per run.
+pub enum AnyBackend {
+    Native(NativeBackend),
+    Xla(Box<Runtime>),
+}
+
+/// State of an [`AnyBackend`] — tagged with the engine that owns it.
+pub enum AnyState {
+    Native(NativeState),
+    Xla(crate::runtime::client::DeviceBuffer),
+}
+
+const STATE_MISMATCH: &str = "sub-model state belongs to a different backend";
+
+impl Backend for AnyBackend {
+    type State = AnyState;
+
+    fn shape(&self) -> &ModelShape {
+        match self {
+            AnyBackend::Native(b) => b.shape(),
+            AnyBackend::Xla(b) => b.shape(),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        match self {
+            AnyBackend::Native(b) => b.name(),
+            AnyBackend::Xla(b) => b.name(),
+        }
+    }
+
+    fn state_from_host(&self, host: &[f32]) -> Result<AnyState, String> {
+        match self {
+            AnyBackend::Native(b) => b.state_from_host(host).map(AnyState::Native),
+            AnyBackend::Xla(b) => b.state_from_host(host).map(AnyState::Xla),
+        }
+    }
+
+    fn train_macro_batch(
+        &self,
+        state: &mut AnyState,
+        centers: &[i32],
+        ctx: &[i32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<(), String> {
+        match (self, state) {
+            (AnyBackend::Native(b), AnyState::Native(s)) => {
+                b.train_macro_batch(s, centers, ctx, weights, lr)
+            }
+            (AnyBackend::Xla(b), AnyState::Xla(s)) => {
+                b.train_macro_batch(s, centers, ctx, weights, lr)
+            }
+            _ => Err(STATE_MISMATCH.to_string()),
+        }
+    }
+
+    fn metrics(&self, state: &AnyState) -> Result<Metrics, String> {
+        match (self, state) {
+            (AnyBackend::Native(b), AnyState::Native(s)) => b.metrics(s),
+            (AnyBackend::Xla(b), AnyState::Xla(s)) => b.metrics(s),
+            _ => Err(STATE_MISMATCH.to_string()),
+        }
+    }
+
+    fn similarity(&self, state: &AnyState, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
+        // fully-qualified: `Runtime` also has an inherent (query, candidate)
+        // `similarity` whose name would otherwise shadow the trait method
+        match (self, state) {
+            (AnyBackend::Native(b), AnyState::Native(s)) => Backend::similarity(b, s, pairs),
+            (AnyBackend::Xla(b), AnyState::Xla(s)) => Backend::similarity(b, s, pairs),
+            _ => Err(STATE_MISMATCH.to_string()),
+        }
+    }
+
+    fn download(&self, state: &AnyState) -> Result<Vec<f32>, String> {
+        match (self, state) {
+            (AnyBackend::Native(b), AnyState::Native(s)) => b.download(s),
+            (AnyBackend::Xla(b), AnyState::Xla(s)) => b.download(s),
+            _ => Err(STATE_MISMATCH.to_string()),
+        }
+    }
+}
+
+/// Try to stand up the PJRT/XLA engine for an experiment: resolve the
+/// artifact manifest and compile the executables.
+fn load_xla(cfg: &ExperimentConfig, vocab: usize) -> Result<Runtime, String> {
+    let manifest = Manifest::load(std::path::Path::new(&cfg.artifact_dir))?;
+    let artifact = manifest.resolve(vocab, cfg.dim)?;
+    Runtime::load(artifact)
+}
+
+/// Stand up the native engine, turning bad experiment config into a
+/// clean error (the asserts in [`ModelShape::native`] guard programmer
+/// misuse, not user flags).
+fn load_native(cfg: &ExperimentConfig, vocab: usize) -> Result<AnyBackend, String> {
+    if vocab == 0 {
+        return Err("cannot build a native backend over an empty vocabulary".to_string());
+    }
+    if cfg.dim < 3 {
+        return Err(format!(
+            "the native backend needs dim >= 3 to hold the metrics row (got {})",
+            cfg.dim
+        ));
+    }
+    Ok(AnyBackend::Native(NativeBackend::new(
+        ModelShape::for_experiment(cfg, vocab),
+    )))
+}
+
+/// Resolve the experiment's configured [`BackendKind`] to a live engine.
+///
+/// `auto` prefers the XLA artifacts when they load (feature compiled,
+/// manifest present, artifact fits) and otherwise falls back to the
+/// native backend with a log line explaining why — the pipeline, the
+/// examples and the bench harnesses therefore run everywhere.
+pub fn load_backend(cfg: &ExperimentConfig, vocab: usize) -> Result<AnyBackend, String> {
+    match cfg.backend {
+        BackendKind::Native => load_native(cfg, vocab),
+        BackendKind::Xla => load_xla(cfg, vocab).map(|rt| AnyBackend::Xla(Box::new(rt))),
+        BackendKind::Auto => match load_xla(cfg, vocab) {
+            Ok(rt) => Ok(AnyBackend::Xla(Box::new(rt))),
+            Err(why) => {
+                info!("xla backend unavailable ({why}); falling back to native");
+                load_native(cfg, vocab)
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_layout_invariants() {
+        let sh = ModelShape::native(100, 16, 8, 3, 2);
+        assert_eq!(sh.rows, 202);
+        assert_eq!(sh.pad_row(), 200);
+        assert_eq!(sh.metrics_row(), 201);
+        assert_eq!(sh.k1(), 4);
+        assert_eq!(sh.batch_capacity(), 16);
+        assert_eq!(sh.state_len(), 202 * 16);
+    }
+
+    #[test]
+    fn for_experiment_uses_trainer_knobs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.dim = 16;
+        cfg.negatives = 3;
+        cfg.trainer_batch = 32;
+        cfg.trainer_steps = 2;
+        let sh = ModelShape::for_experiment(&cfg, 500);
+        assert_eq!(sh.vocab, 500);
+        assert_eq!(sh.dim, 16);
+        assert_eq!(sh.batch, 32);
+        assert_eq!(sh.steps, 2);
+        assert_eq!(sh.negatives, 3);
+    }
+
+    #[test]
+    fn auto_falls_back_to_native_without_artifacts() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.artifact_dir = "/nonexistent/artifacts".to_string();
+        cfg.dim = 8;
+        let b = load_backend(&cfg, 64).expect("auto must always produce a backend");
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.shape().vocab, 64);
+    }
+
+    #[test]
+    fn explicit_xla_without_artifacts_is_an_error() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = BackendKind::Xla;
+        cfg.artifact_dir = "/nonexistent/artifacts".to_string();
+        assert!(load_backend(&cfg, 64).is_err());
+    }
+
+    #[test]
+    fn explicit_native_ignores_artifacts() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = BackendKind::Native;
+        cfg.artifact_dir = "/nonexistent/artifacts".to_string();
+        cfg.dim = 8;
+        let b = load_backend(&cfg, 32).unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn bad_user_config_is_an_error_not_a_panic() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.backend = BackendKind::Native;
+        cfg.dim = 2; // too small for the metrics row
+        let err = load_backend(&cfg, 32).unwrap_err();
+        assert!(err.contains("dim"), "error should name the knob: {err}");
+        cfg.dim = 8;
+        assert!(load_backend(&cfg, 0).is_err(), "empty vocab must not panic");
+    }
+}

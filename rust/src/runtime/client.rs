@@ -27,6 +27,7 @@
 #[cfg(feature = "xla")]
 mod pjrt {
     use crate::runtime::artifacts::ArtifactConfig;
+    use crate::runtime::backend::ModelShape;
     use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
     /// A compiled executable, shareable across threads.
@@ -45,6 +46,7 @@ mod pjrt {
     pub struct Runtime {
         client: PjRtClient,
         pub artifact: ArtifactConfig,
+        pub shape: ModelShape,
         train: Executable,
         metrics: Executable,
         sim: Executable,
@@ -72,6 +74,7 @@ mod pjrt {
                 metrics: compile(&artifact.metrics_file)?,
                 sim: compile(&artifact.sim_file)?,
                 artifact: artifact.clone(),
+                shape: ModelShape::from_artifact(artifact),
                 client,
             })
         }
@@ -171,11 +174,13 @@ pub use pjrt::{DeviceBuffer, Executable, Runtime};
 #[cfg(not(feature = "xla"))]
 mod stub {
     use crate::runtime::artifacts::ArtifactConfig;
+    use crate::runtime::backend::ModelShape;
 
     const UNAVAILABLE: &str = "dw2v was built without the `xla` feature, so the PJRT \
          runtime is unavailable; add the vendored xla crate to rust/Cargo.toml \
          [dependencies] and rebuild with `cargo build --features xla` (see the \
-         feature notes in rust/Cargo.toml)";
+         feature notes in rust/Cargo.toml), or run with the native backend \
+         (`--backend native`, the default fallback)";
 
     /// Stub device buffer: never constructed (the stub `Runtime` cannot be
     /// instantiated), exists so the runtime API typechecks feature-off.
@@ -184,6 +189,7 @@ mod stub {
     /// Stub runtime with the real bridge's surface; `load` always errors.
     pub struct Runtime {
         pub artifact: ArtifactConfig,
+        pub shape: ModelShape,
         _sealed: (),
     }
 
@@ -232,6 +238,75 @@ mod stub {
 
 #[cfg(not(feature = "xla"))]
 pub use stub::{DeviceBuffer, Runtime};
+
+// The PJRT engine as a [`Backend`]: the macro-batch protocol maps to
+// uploads of the index tensors plus one chained `train_step` whose output
+// state buffer replaces the input. Written once against the shared
+// surface of the real bridge and the stub, so generic callers compile —
+// and unit-test — with or without the `xla` feature.
+impl crate::runtime::backend::Backend for Runtime {
+    type State = DeviceBuffer;
+
+    fn shape(&self) -> &crate::runtime::backend::ModelShape {
+        &self.shape
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn state_from_host(&self, host: &[f32]) -> Result<DeviceBuffer, String> {
+        let a = &self.artifact;
+        if host.len() != a.rows * a.dim {
+            return Err(format!(
+                "packed state length {} != rows*dim = {}",
+                host.len(),
+                a.rows * a.dim
+            ));
+        }
+        self.upload_f32(host, &[a.rows, a.dim])
+    }
+
+    fn train_macro_batch(
+        &self,
+        state: &mut DeviceBuffer,
+        centers: &[i32],
+        ctx: &[i32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<(), String> {
+        let a = &self.artifact;
+        debug_assert_eq!(centers.len(), a.batch_capacity());
+        debug_assert_eq!(ctx.len(), a.batch_capacity() * a.k1());
+        debug_assert_eq!(weights.len(), a.batch_capacity());
+        let c = self.upload_i32(centers, &[a.steps, a.batch])?;
+        let x = self.upload_i32(ctx, &[a.steps, a.batch, a.k1()])?;
+        let w = self.upload_f32(weights, &[a.steps, a.batch])?;
+        let l = self.upload_f32(&[lr], &[1])?;
+        *state = self.train_step(state, &c, &x, &w, &l)?;
+        Ok(())
+    }
+
+    fn metrics(&self, state: &DeviceBuffer) -> Result<crate::runtime::params::Metrics, String> {
+        Ok(crate::runtime::params::Metrics::from_row(
+            &self.read_metrics(state)?,
+        ))
+    }
+
+    fn similarity(&self, state: &DeviceBuffer, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
+        let mut out = Vec::with_capacity(pairs.len());
+        for chunk in pairs.chunks(self.artifact.sim_q.max(1)) {
+            let q: Vec<i32> = chunk.iter().map(|p| p.0 as i32).collect();
+            let c: Vec<i32> = chunk.iter().map(|p| p.1 as i32).collect();
+            out.extend(Runtime::similarity(self, state, &q, &c)?);
+        }
+        Ok(out)
+    }
+
+    fn download(&self, state: &DeviceBuffer) -> Result<Vec<f32>, String> {
+        self.download_state(state)
+    }
+}
 
 #[cfg(test)]
 mod tests {

@@ -1,5 +1,11 @@
-//! PJRT runtime: artifact manifest resolution, executable loading, and
-//! device-resident sub-model state (the rust side of the AOT bridge).
+//! Runtime layer: the [`backend::Backend`] abstraction over the SGNS
+//! macro-batch protocol, its two engines (the pure-rust
+//! [`native::NativeBackend`] and the PJRT/XLA bridge in [`client`]),
+//! artifact manifest resolution, and backend-resident sub-model state.
 pub mod artifacts;
+pub mod backend;
 pub mod client;
+pub mod native;
 pub mod params;
+
+pub use backend::{load_backend, AnyBackend, Backend, ModelShape};

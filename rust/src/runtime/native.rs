@@ -1,0 +1,355 @@
+//! The pure-rust compute backend: the SGNS macro-batch step executed
+//! directly on the shared vectorized kernels (`crate::kernels`).
+//!
+//! Semantics mirror the AOT artifact (`python/compile/model.py`) over the
+//! same packed `[rows, dim]` state and the same batched
+//! `(centers, ctx, weights)` protocol — validated by the shared trainer
+//! and pipeline tests — with two deliberate differences:
+//!
+//! * examples inside one dispatch are applied **sequentially** (classic
+//!   SGD order) rather than as the artifact's per-micro-step vectorized
+//!   update; per Ji et al. (arXiv:1604.04661) minibatched/shared-memory
+//!   SGNS steps match sequential quality, so the two engines are
+//!   statistically interchangeable;
+//! * the metrics counters live in f64 shadows (materialized into the f32
+//!   metrics row on download), so long runs don't lose monitoring
+//!   precision once the running sums outgrow f32's 2^24 integer range.
+//!
+//! The backend is `Sync` and stateless across calls — every reducer owns
+//! its [`NativeState`] — and a run is bitwise deterministic given the
+//! same batch sequence.
+
+use super::backend::{Backend, ModelShape};
+use super::params::Metrics;
+use crate::kernels;
+use crate::kernels::SigmoidTable;
+
+/// Host-resident packed sub-model state (`shape.rows × shape.dim` f32).
+///
+/// The metrics counters are additionally shadowed in f64: an f32 running
+/// sum stops absorbing per-dispatch deltas near 2^24, which would flatten
+/// per-epoch loss deltas on long runs. The packed row is materialized
+/// from the shadows on every [`Backend::download`], so
+/// download → `state_from_host` round trips preserve the counters.
+pub struct NativeState {
+    pub data: Vec<f32>,
+    /// f64 twins of the metrics row's `[loss_sum, examples, micro_steps]`
+    counters: [f64; 3],
+}
+
+/// CPU engine executing macro-batches on the PR-1 kernels
+/// (`dot_sigmoid_update`, `dual_axpy`, `axpy`).
+pub struct NativeBackend {
+    shape: ModelShape,
+    sigmoid: SigmoidTable,
+}
+
+impl NativeBackend {
+    pub fn new(shape: ModelShape) -> Self {
+        assert!(shape.dim >= 3, "dim must be >= 3 to hold the metrics row");
+        assert!(
+            shape.rows >= 2 * shape.vocab + 2,
+            "packed layout needs 2V+2 rows"
+        );
+        Self {
+            shape,
+            sigmoid: SigmoidTable::new(),
+        }
+    }
+}
+
+/// Monitoring loss for one (dot, label): softplus of the signed logit,
+/// clamped like the Hogwild baseline so saturated pairs can't blow up
+/// the counter.
+#[inline]
+fn pair_loss(dot: f32, label: f32) -> f64 {
+    let x = f64::from(if label > 0.5 { -dot } else { dot });
+    (1.0 + x.exp()).ln().min(20.0)
+}
+
+impl Backend for NativeBackend {
+    type State = NativeState;
+
+    fn shape(&self) -> &ModelShape {
+        &self.shape
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn state_from_host(&self, host: &[f32]) -> Result<NativeState, String> {
+        if host.len() != self.shape.state_len() {
+            return Err(format!(
+                "native state length {} != rows*dim = {}",
+                host.len(),
+                self.shape.state_len()
+            ));
+        }
+        let m = self.shape.metrics_row() * self.shape.dim;
+        Ok(NativeState {
+            counters: [host[m] as f64, host[m + 1] as f64, host[m + 2] as f64],
+            data: host.to_vec(),
+        })
+    }
+
+    fn train_macro_batch(
+        &self,
+        state: &mut NativeState,
+        centers: &[i32],
+        ctx: &[i32],
+        weights: &[f32],
+        lr: f32,
+    ) -> Result<(), String> {
+        let sh = &self.shape;
+        let (v, d, k1, cap) = (sh.vocab, sh.dim, sh.k1(), sh.batch_capacity());
+        if centers.len() != cap || weights.len() != cap || ctx.len() != cap * k1 {
+            return Err(format!(
+                "macro-batch shape mismatch: centers {} weights {} ctx {} \
+                 vs capacity {cap} (k+1 = {k1})",
+                centers.len(),
+                weights.len(),
+                ctx.len(),
+            ));
+        }
+        // split the packed state into the W block and everything after it
+        // (C rows, pad row, metrics row) so a center row and its context
+        // rows can be borrowed simultaneously
+        let (wblock, cblock) = state.data.split_at_mut(v * d);
+        let mut neu = vec![0.0f32; d];
+        let mut loss = 0.0f64;
+        let mut examples = 0.0f64;
+        for i in 0..cap {
+            let weight = weights[i];
+            let center = centers[i] as usize;
+            // padding sentinel (or weight 0) → the artifact's pad row: a no-op
+            if weight <= 0.0 || center >= v {
+                continue;
+            }
+            examples += weight as f64;
+            let wrow = center * d;
+            neu.fill(0.0);
+            for j in 0..k1 {
+                // clamp out-of-range ids onto the pad row like the artifact's
+                // gather does (cblock row v IS the pad row)
+                let cid = (ctx[i * k1 + j] as usize).min(v);
+                let label = if j == 0 { 1.0f32 } else { 0.0 };
+                let crow = &mut cblock[cid * d..(cid + 1) * d];
+                let dot = kernels::dot_sigmoid_update(
+                    &wblock[wrow..wrow + d],
+                    crow,
+                    &mut neu,
+                    label,
+                    lr * weight,
+                    &self.sigmoid,
+                );
+                loss += weight as f64 * pair_loss(dot, label);
+            }
+            kernels::axpy(1.0, &neu, &mut wblock[wrow..wrow + d]);
+        }
+        // fold the dispatch's counters into the f64 shadows (the packed
+        // row is materialized from these on download)
+        state.counters[0] += loss;
+        state.counters[1] += examples;
+        state.counters[2] += sh.steps as f64;
+        Ok(())
+    }
+
+    fn metrics(&self, state: &NativeState) -> Result<Metrics, String> {
+        Ok(Metrics {
+            loss_sum: state.counters[0],
+            examples: state.counters[1],
+            micro_steps: state.counters[2],
+        })
+    }
+
+    fn similarity(&self, state: &NativeState, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
+        let (v, d) = (self.shape.vocab, self.shape.dim);
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (a, b) = (a as usize, b as usize);
+                if a >= v || b >= v {
+                    return Err(format!("similarity ids ({a}, {b}) out of vocab {v}"));
+                }
+                let ra = &state.data[a * d..(a + 1) * d];
+                let rb = &state.data[b * d..(b + 1) * d];
+                let dot = kernels::dot_wide(ra, rb);
+                let na = kernels::norm_sq_wide(ra).sqrt();
+                let nb = kernels::norm_sq_wide(rb).sqrt();
+                Ok((dot / (na * nb).max(1e-12)) as f32)
+            })
+            .collect()
+    }
+
+    fn download(&self, state: &NativeState) -> Result<Vec<f32>, String> {
+        let mut out = state.data.clone();
+        let m = self.shape.metrics_row() * self.shape.dim;
+        for (cell, &c) in out[m..m + 3].iter_mut().zip(&state.counters) {
+            *cell = c as f32;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::params::SubModel;
+    use crate::util::rng::Pcg64;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(ModelShape::native(64, 8, 8, 2, 2))
+    }
+
+    #[test]
+    fn metrics_row_starts_zero_and_counts_steps() {
+        let be = backend();
+        let sh = be.shape().clone();
+        let mut model = SubModel::init(&be, 1).unwrap();
+        let m0 = model.metrics(&be).unwrap();
+        assert_eq!(m0.loss_sum, 0.0);
+        assert_eq!(m0.micro_steps, 0.0);
+
+        let cap = sh.batch_capacity();
+        let centers = vec![0i32; cap];
+        let ctx = vec![1i32; cap * sh.k1()];
+        let weights = vec![1.0f32; cap];
+        model
+            .train_macro_batch(&be, &centers, &ctx, &weights, 0.01)
+            .unwrap();
+        let m1 = model.metrics(&be).unwrap();
+        assert_eq!(m1.micro_steps, sh.steps as f64);
+        assert_eq!(m1.examples, cap as f64);
+        assert!(m1.loss_sum > 0.0);
+        // untrained loss per example ≈ (1+k)·ln2
+        let per = m1.loss_sum / m1.examples;
+        let expect = (1.0 + sh.negatives as f64) * std::f64::consts::LN_2;
+        assert!((per - expect).abs() < 0.2, "per-example loss {per} vs {expect}");
+    }
+
+    #[test]
+    fn padding_batches_touch_nothing_but_metrics() {
+        let be = backend();
+        let sh = be.shape().clone();
+        let mut model = SubModel::init(&be, 2).unwrap();
+        let before = model.download_packed(&be).unwrap();
+        let cap = sh.batch_capacity();
+        let centers = vec![sh.vocab as i32; cap]; // all padding sentinel
+        let ctx = vec![sh.vocab as i32; cap * sh.k1()];
+        let weights = vec![0.0f32; cap];
+        model
+            .train_macro_batch(&be, &centers, &ctx, &weights, 0.5)
+            .unwrap();
+        let after = model.download_packed(&be).unwrap();
+        let params = sh.metrics_row() * sh.dim;
+        assert_eq!(
+            before[..params],
+            after[..params],
+            "padding must not move parameters"
+        );
+        // micro_steps still advance
+        assert_eq!(model.metrics(&be).unwrap().micro_steps, sh.steps as f64);
+        assert_eq!(model.metrics(&be).unwrap().examples, 0.0);
+    }
+
+    #[test]
+    fn training_reduces_loss_on_planted_pattern() {
+        let be = NativeBackend::new(ModelShape::native(64, 8, 8, 2, 2));
+        let sh = be.shape().clone();
+        let mut model = SubModel::init(&be, 3).unwrap();
+        let cap = sh.batch_capacity();
+        // planted: word i co-occurs with word i+32; negatives from 0..32
+        let mut rng = Pcg64::new(5);
+        let mut make_batch = |rng: &mut Pcg64| {
+            let mut centers = Vec::with_capacity(cap);
+            let mut ctx = Vec::with_capacity(cap * sh.k1());
+            for _ in 0..cap {
+                let c = rng.gen_range(32) as i32;
+                centers.push(c);
+                ctx.push(c + 32); // positive
+                for _ in 0..sh.negatives {
+                    ctx.push(rng.gen_range(32) as i32);
+                }
+            }
+            (centers, ctx, vec![1.0f32; cap])
+        };
+        let mut losses = Vec::new();
+        let mut prev = 0.0;
+        for _ in 0..80 {
+            let (c, x, w) = make_batch(&mut rng);
+            model.train_macro_batch(&be, &c, &x, &w, 0.3).unwrap();
+            let m = model.metrics(&be).unwrap();
+            losses.push(m.loss_sum - prev);
+            prev = m.loss_sum;
+        }
+        let early: f64 = losses[..5].iter().sum();
+        let late: f64 = losses[75..].iter().sum();
+        assert!(
+            late < early * 0.8,
+            "loss should drop: early {early:.2} late {late:.2}"
+        );
+    }
+
+    #[test]
+    fn similarity_matches_host_cosine_via_embedding() {
+        let be = backend();
+        let sh = be.shape().clone();
+        let mut model = SubModel::init(&be, 7).unwrap();
+        let cap = sh.batch_capacity();
+        let centers: Vec<i32> = (0..cap as i32).map(|i| i % 60).collect();
+        let ctx: Vec<i32> = (0..(cap * sh.k1()) as i32).map(|i| i % 60).collect();
+        model
+            .train_macro_batch(&be, &centers, &ctx, &vec![1.0; cap], 0.5)
+            .unwrap();
+        let pairs: Vec<(u32, u32)> = vec![(0, 1), (2, 3), (10, 50), (5, 5)];
+        let dev = model.similarity(&be, &pairs).unwrap();
+        let emb = model
+            .into_embedding(&be, sh.vocab, vec![true; sh.vocab])
+            .unwrap();
+        for ((x, y), s) in pairs.iter().zip(dev) {
+            let host = emb.cosine(*x, *y).unwrap();
+            assert!(
+                (host - s as f64).abs() < 1e-4,
+                "({x},{y}): host {host} backend {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn out_of_vocab_similarity_is_an_error() {
+        let be = backend();
+        let model = SubModel::init(&be, 9).unwrap();
+        assert!(model.similarity(&be, &[(0, 10_000)]).is_err());
+    }
+
+    #[test]
+    fn dispatch_is_deterministic() {
+        let be = backend();
+        let sh = be.shape().clone();
+        let run = || {
+            let mut model = SubModel::init(&be, 11).unwrap();
+            let cap = sh.batch_capacity();
+            let mut rng = Pcg64::new(4);
+            for _ in 0..10 {
+                let centers: Vec<i32> = (0..cap).map(|_| rng.gen_range(64) as i32).collect();
+                let ctx: Vec<i32> =
+                    (0..cap * sh.k1()).map(|_| rng.gen_range(64) as i32).collect();
+                model
+                    .train_macro_batch(&be, &centers, &ctx, &vec![1.0; cap], 0.1)
+                    .unwrap();
+            }
+            model.download_packed(&be).unwrap()
+        };
+        assert_eq!(run(), run(), "native training must be bitwise deterministic");
+    }
+
+    #[test]
+    fn shape_mismatch_is_an_error() {
+        let be = backend();
+        let mut model = SubModel::init(&be, 1).unwrap();
+        let err = model.train_macro_batch(&be, &[0, 1], &[0, 1, 2], &[1.0, 1.0], 0.1);
+        assert!(err.is_err());
+        assert!(be.state_from_host(&[0.0; 3]).is_err());
+    }
+}

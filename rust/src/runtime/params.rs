@@ -1,12 +1,13 @@
-//! Device-resident sub-model state management.
+//! Backend-resident sub-model state management.
 //!
-//! A [`SubModel`] owns the packed `[2V+2, D]` parameter buffer of one
-//! reducer's SGNS model. It is initialized host-side (word2vec init),
-//! uploaded once, then only ever touched on-device by chaining
-//! `train_step` outputs back as inputs. The embedding is downloaded a
-//! single time when training finishes.
+//! A [`SubModel`] owns the packed `[2V+2, D]` parameter state of one
+//! reducer's SGNS model, wherever its [`Backend`] keeps it (host memory
+//! for the native engine, a device buffer for PJRT). It is initialized
+//! host-side (word2vec init), materialized once, then only ever touched
+//! through the backend's macro-batch protocol. The embedding is
+//! downloaded a single time when training finishes.
 
-use super::client::{DeviceBuffer, Runtime};
+use super::backend::{Backend, ModelShape};
 use crate::embedding::Embedding;
 use crate::util::rng::Pcg64;
 
@@ -36,87 +37,69 @@ impl Metrics {
     }
 }
 
-/// One reducer's device-resident model.
-pub struct SubModel {
-    state: DeviceBuffer,
-    /// dispatches executed (each = artifact.steps micro-steps)
+/// word2vec host-side init of a packed state: `W ~ U(−0.5/D, 0.5/D)`,
+/// C/pad/metrics rows zero. Shared by every backend and the
+/// parameter-averaging baseline.
+pub fn init_host(shape: &ModelShape, seed: u64) -> Vec<f32> {
+    let mut host = vec![0.0f32; shape.state_len()];
+    let mut rng = Pcg64::new_stream(seed, 0x7374); // "st"
+    for x in host[..shape.vocab * shape.dim].iter_mut() {
+        *x = (rng.gen_f32() - 0.5) / shape.dim as f32;
+    }
+    host
+}
+
+/// One reducer's backend-resident model.
+pub struct SubModel<B: Backend> {
+    state: B::State,
+    /// dispatches executed (each = shape.steps micro-steps)
     pub dispatches: u64,
 }
 
-impl SubModel {
-    /// word2vec init: W ~ U(−0.5/D, 0.5/D), C/pad/metrics zero; uploaded
-    /// to the device once.
-    pub fn init(rt: &Runtime, seed: u64) -> Result<Self, String> {
-        let a = &rt.artifact;
-        let mut host = vec![0.0f32; a.rows * a.dim];
-        let mut rng = Pcg64::new_stream(seed, 0x7374); // "st"
-        for x in host[..a.vocab * a.dim].iter_mut() {
-            *x = (rng.gen_f32() - 0.5) / a.dim as f32;
-        }
-        let state = rt.upload_f32(&host, &[a.rows, a.dim])?;
+impl<B: Backend> SubModel<B> {
+    /// word2vec init, materialized on the backend once.
+    pub fn init(backend: &B, seed: u64) -> Result<Self, String> {
+        let host = init_host(backend.shape(), seed);
+        Self::from_host(backend, &host)
+    }
+
+    /// Restore from a previously downloaded packed state (tests /
+    /// checkpoints / the parameter-averaging baseline).
+    pub fn from_host(backend: &B, host: &[f32]) -> Result<Self, String> {
         Ok(Self {
-            state,
+            state: backend.state_from_host(host)?,
             dispatches: 0,
         })
     }
 
-    /// Restore from a previously downloaded packed state (tests/checkpoints).
-    pub fn from_host(rt: &Runtime, host: &[f32]) -> Result<Self, String> {
-        let a = &rt.artifact;
-        assert_eq!(host.len(), a.rows * a.dim);
-        Ok(Self {
-            state: rt.upload_f32(host, &[a.rows, a.dim])?,
-            dispatches: 0,
-        })
-    }
-
-    /// Execute one macro-batch (uploads the index tensors, chains the
-    /// state buffer on-device).
+    /// Execute one macro-batch through the backend.
     pub fn train_macro_batch(
         &mut self,
-        rt: &Runtime,
+        backend: &B,
         centers: &[i32],
         ctx: &[i32],
         weights: &[f32],
         lr: f32,
     ) -> Result<(), String> {
-        let a = &rt.artifact;
-        debug_assert_eq!(centers.len(), a.batch_capacity());
-        debug_assert_eq!(ctx.len(), a.batch_capacity() * a.k1());
-        debug_assert_eq!(weights.len(), a.batch_capacity());
-        let c = rt.upload_i32(centers, &[a.steps, a.batch])?;
-        let x = rt.upload_i32(ctx, &[a.steps, a.batch, a.k1()])?;
-        let w = rt.upload_f32(weights, &[a.steps, a.batch])?;
-        let l = rt.upload_f32(&[lr], &[1])?;
-        self.state = rt.train_step(&self.state, &c, &x, &w, &l)?;
+        backend.train_macro_batch(&mut self.state, centers, ctx, weights, lr)?;
         self.dispatches += 1;
         Ok(())
     }
 
-    /// Running loss counters (cheap on-device slice + tiny readback).
-    pub fn metrics(&self, rt: &Runtime) -> Result<Metrics, String> {
-        Ok(Metrics::from_row(&rt.read_metrics(&self.state)?))
+    /// Running loss counters (cheap; no full state download).
+    pub fn metrics(&self, backend: &B) -> Result<Metrics, String> {
+        backend.metrics(&self.state)
     }
 
-    /// On-device cosine similarity between word pairs.
-    pub fn similarity(
-        &self,
-        rt: &Runtime,
-        pairs: &[(u32, u32)],
-    ) -> Result<Vec<f32>, String> {
-        let mut out = Vec::with_capacity(pairs.len());
-        for chunk in pairs.chunks(rt.artifact.sim_q) {
-            let q: Vec<i32> = chunk.iter().map(|p| p.0 as i32).collect();
-            let c: Vec<i32> = chunk.iter().map(|p| p.1 as i32).collect();
-            out.extend(rt.similarity(&self.state, &q, &c)?);
-        }
-        Ok(out)
+    /// Cosine similarity between word pairs, computed by the backend.
+    pub fn similarity(&self, backend: &B, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
+        backend.similarity(&self.state, pairs)
     }
 
     /// Download the full packed state (checkpointing / the round-trip
     /// ablation bench). Pair with [`SubModel::from_host`].
-    pub fn download_packed(&self, rt: &Runtime) -> Result<Vec<f32>, String> {
-        rt.download_state(&self.state)
+    pub fn download_packed(&self, backend: &B) -> Result<Vec<f32>, String> {
+        backend.download(&self.state)
     }
 
     /// Download the trained input embeddings (`W` block), restricted to the
@@ -124,20 +107,53 @@ impl SubModel {
     /// sub-model is allowed to claim (per-sub-model count thresholding).
     pub fn into_embedding(
         self,
-        rt: &Runtime,
+        backend: &B,
         actual_vocab: usize,
         present: Vec<bool>,
     ) -> Result<Embedding, String> {
-        let a = &rt.artifact;
-        assert!(actual_vocab <= a.vocab);
+        let shape = backend.shape();
+        assert!(actual_vocab <= shape.vocab);
         assert_eq!(present.len(), actual_vocab);
-        let host = rt.download_state(&self.state)?;
-        let data = host[..actual_vocab * a.dim].to_vec();
+        let host = backend.download(&self.state)?;
+        let data = host[..actual_vocab * shape.dim].to_vec();
         Ok(Embedding {
             vocab: actual_vocab,
-            dim: a.dim,
+            dim: shape.dim,
             data,
             present,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_host_layout() {
+        let sh = ModelShape::native(10, 4, 2, 1, 1);
+        let host = init_host(&sh, 7);
+        assert_eq!(host.len(), sh.state_len());
+        // W block initialized within the word2vec range
+        for &x in &host[..10 * 4] {
+            assert!(x.abs() <= 0.5 / 4.0 + 1e-6);
+        }
+        // at least one W value is non-zero
+        assert!(host[..10 * 4].iter().any(|&x| x != 0.0));
+        // C / pad / metrics rows are zero
+        assert!(host[10 * 4..].iter().all(|&x| x == 0.0));
+        // deterministic per seed, distinct across seeds
+        assert_eq!(host, init_host(&sh, 7));
+        assert_ne!(host, init_host(&sh, 8));
+    }
+
+    #[test]
+    fn metrics_from_short_row_is_zero_filled() {
+        let m = Metrics::from_row(&[1.5]);
+        assert_eq!(m.loss_sum, 1.5);
+        assert_eq!(m.examples, 0.0);
+        assert_eq!(m.mean_loss(), 0.0);
+        let m2 = Metrics::from_row(&[6.0, 2.0, 1.0]);
+        assert_eq!(m2.mean_loss(), 3.0);
     }
 }

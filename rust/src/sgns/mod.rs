@@ -1,7 +1,8 @@
 //! SGNS (skip-gram with negative sampling): configuration, negative
 //! sampling, batch assembly, and the two trainer implementations —
-//! the PJRT-backed per-reducer trainer (the paper system's engine) and
-//! the lock-free Hogwild CPU baseline the paper compares against.
+//! the backend-driven per-reducer trainer (the paper system's engine,
+//! running on the native or PJRT [`crate::runtime::Backend`]) and the
+//! lock-free Hogwild CPU baseline the paper compares against.
 pub mod batch;
 pub mod config;
 pub mod hogwild;

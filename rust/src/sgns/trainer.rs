@@ -1,9 +1,10 @@
-//! The PJRT-backed SGNS trainer: one instance per reducer/sub-model.
+//! The backend-driven SGNS trainer: one instance per reducer/sub-model.
 //!
-//! Wires the streaming [`BatchBuilder`] to a device-resident [`SubModel`]:
-//! sentences come in from the mapper, full macro-batches are dispatched to
-//! the AOT executable, the learning rate follows the word2vec linear decay
-//! on the dispatched-pair counter, and per-word receive counts drive the
+//! Wires the streaming [`BatchBuilder`] to a backend-resident
+//! [`SubModel`]: sentences come in from the mapper, full macro-batches
+//! are dispatched through the [`Backend`] (native kernels or the PJRT
+//! executable), the learning rate follows the word2vec linear decay on
+//! the dispatched-pair counter, and per-word receive counts drive the
 //! sub-model's presence mask (paper §4.2: per-sub-model frequency
 //! threshold 100/k).
 
@@ -11,51 +12,51 @@ use super::batch::{BatchBuilder, BatchShape, MacroBatch};
 use super::config::SgnsConfig;
 use super::negative::AliasTable;
 use crate::embedding::Embedding;
-use crate::runtime::client::Runtime;
+use crate::runtime::backend::Backend;
 use crate::runtime::params::{Metrics, SubModel};
 use crate::text::vocab::Vocab;
 use crate::util::rng::Pcg64;
 
-pub struct SubModelTrainer<'rt> {
-    rt: &'rt Runtime,
-    model: SubModel,
+pub struct SubModelTrainer<'b, B: Backend> {
+    backend: &'b B,
+    model: SubModel<B>,
     builder: BatchBuilder,
     cfg: SgnsConfig,
     actual_vocab: usize,
     /// expected total pairs across all epochs (lr schedule denominator)
     expected_pairs: u64,
-    /// pairs already sent to the device (lr schedule numerator)
+    /// pairs already dispatched to the backend (lr schedule numerator)
     dispatched_pairs: u64,
     /// per-word tokens routed to this sub-model (presence mask)
     seen_counts: Vec<u64>,
     /// reusable emission buffer (steady-state: capacity stays allocated)
     ready: Vec<MacroBatch>,
     pub sentences_received: u64,
-    /// cumulative wall-clock spent in device dispatches — the per-reducer
+    /// cumulative wall-clock spent in backend dispatches — the per-reducer
     /// "busy time" a dedicated cluster node would experience as its train
     /// phase (Table 4's per-model training time)
     pub device_secs: f64,
 }
 
-impl<'rt> SubModelTrainer<'rt> {
+impl<'b, B: Backend> SubModelTrainer<'b, B> {
     /// `expected_pairs` should estimate the total pairs this trainer will
     /// see over the whole run (tokens_routed × window × epochs) — it only
     /// shapes the lr decay.
     pub fn new(
-        rt: &'rt Runtime,
+        backend: &'b B,
         vocab: &Vocab,
         cfg: &SgnsConfig,
         expected_pairs: u64,
         seed: u64,
     ) -> Result<Self, String> {
-        let a = &rt.artifact;
-        assert!(vocab.len() <= a.vocab, "vocab exceeds artifact capacity");
-        assert_eq!(cfg.dim, a.dim, "dim mismatch with artifact");
+        let sh = backend.shape();
+        assert!(vocab.len() <= sh.vocab, "vocab exceeds backend capacity");
+        assert_eq!(cfg.dim, sh.dim, "dim mismatch with backend shape");
         let shape = BatchShape {
-            batch: a.batch,
-            steps: a.steps,
-            negatives: a.negatives,
-            vocab: a.vocab, // padding sentinel = artifact vocab
+            batch: sh.batch,
+            steps: sh.steps,
+            negatives: sh.negatives,
+            vocab: sh.vocab, // padding sentinel = backend vocab capacity
         };
         let noise = AliasTable::unigram_noise(vocab.counts(), cfg.noise_power);
         let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
@@ -67,8 +68,8 @@ impl<'rt> SubModelTrainer<'rt> {
             Pcg64::new_stream(seed, 0x6261), // "ba"
         );
         Ok(Self {
-            rt,
-            model: SubModel::init(rt, seed)?,
+            backend,
+            model: SubModel::init(backend, seed)?,
             builder,
             cfg: cfg.clone(),
             actual_vocab: vocab.len(),
@@ -89,14 +90,14 @@ impl<'rt> SubModelTrainer<'rt> {
             self.dispatched_pairs += mb.real_pairs as u64;
             let t = std::time::Instant::now();
             self.model
-                .train_macro_batch(self.rt, &mb.centers, &mb.ctx, &mb.weights, lr)?;
+                .train_macro_batch(self.backend, &mb.centers, &mb.ctx, &mb.weights, lr)?;
             self.device_secs += t.elapsed().as_secs_f64();
         }
         self.ready = ready; // keep the allocation
         Ok(())
     }
 
-    /// Feed one sentence; dispatches to the device whenever macro-batches
+    /// Feed one sentence; dispatches to the backend whenever macro-batches
     /// fill up. `sentence_id` must identify the (epoch, sentence) pair so
     /// pair extraction is independent of delivery order.
     pub fn push_sentence(&mut self, sentence_id: u64, sentence: &[u32]) -> Result<(), String> {
@@ -131,7 +132,7 @@ impl<'rt> SubModelTrainer<'rt> {
     }
 
     pub fn metrics(&self) -> Result<Metrics, String> {
-        self.model.metrics(self.rt)
+        self.model.metrics(self.backend)
     }
 
     /// Words this trainer would mark present at threshold `min_count`.
@@ -146,6 +147,66 @@ impl<'rt> SubModelTrainer<'rt> {
     pub fn into_embedding(mut self, min_count: u64) -> Result<Embedding, String> {
         self.flush()?;
         let present = self.present_mask(min_count);
-        self.model.into_embedding(self.rt, self.actual_vocab, present)
+        self.model
+            .into_embedding(self.backend, self.actual_vocab, present)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::ModelShape;
+    use crate::runtime::native::NativeBackend;
+
+    fn vocab(n: usize) -> Vocab {
+        Vocab::from_ordered((0..n).map(|i| (format!("w{i}"), 10)).collect())
+    }
+
+    #[test]
+    fn trainer_presence_mask_respects_min_count() {
+        let be = NativeBackend::new(ModelShape::native(64, 8, 8, 2, 2));
+        let vocab = vocab(60);
+        let cfg = SgnsConfig {
+            dim: 8,
+            negatives: 2,
+            ..Default::default()
+        };
+        let mut trainer = SubModelTrainer::new(&be, &vocab, &cfg, 1000, 11).unwrap();
+        // words 0..5 appear 4 times each, word 6 once
+        for _ in 0..4 {
+            trainer.push_sentence(0, &[0, 1, 2, 3, 4, 5]).unwrap();
+        }
+        trainer.push_sentence(99, &[6, 0]).unwrap();
+        let mask = trainer.present_mask(3);
+        assert!(mask[..6].iter().all(|&m| m));
+        assert!(!mask[6]);
+        assert!(!mask[30]);
+        let emb = trainer.into_embedding(3).unwrap();
+        assert_eq!(emb.present_count(), 6);
+        assert_eq!(emb.vocab, 60);
+    }
+
+    #[test]
+    fn trainer_dispatches_and_counts_pairs() {
+        let be = NativeBackend::new(ModelShape::native(64, 8, 4, 2, 2));
+        let vocab = vocab(64);
+        let cfg = SgnsConfig {
+            dim: 8,
+            negatives: 2,
+            window: 3,
+            subsample_t: 0.0,
+            ..Default::default()
+        };
+        let mut trainer = SubModelTrainer::new(&be, &vocab, &cfg, 10_000, 3).unwrap();
+        for sid in 0..40u64 {
+            let sent: Vec<u32> = (0..10).map(|i| ((sid as u32 * 7 + i) % 64)).collect();
+            trainer.push_sentence(sid, &sent).unwrap();
+        }
+        trainer.flush().unwrap();
+        assert!(trainer.pairs_emitted() > 100);
+        assert!(trainer.dispatches() > 0);
+        let m = trainer.metrics().unwrap();
+        assert!(m.loss_sum > 0.0);
+        assert!((m.examples - trainer.pairs_emitted() as f64).abs() < 1e-3);
     }
 }

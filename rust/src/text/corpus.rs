@@ -72,33 +72,75 @@ impl Corpus {
         w.flush()
     }
 
+    /// Shard header (magic + version + n_sentences) in bytes.
+    const SHARD_HEADER_BYTES: u64 = 4 + 4 + 8;
+
     pub fn read_shard(path: &Path) -> std::io::Result<Corpus> {
-        let mut r = BufReader::new(File::open(path)?);
+        let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let file = File::open(path)?;
+        // every claim in the header is validated against the actual file
+        // length *before* any sized allocation (mirroring
+        // `Embedding::load`): a corrupt/truncated header must come back as
+        // InvalidData, not abort the process on a huge Vec
+        let file_len = file.metadata()?.len();
+        if file_len < Self::SHARD_HEADER_BYTES {
+            return Err(invalid(format!(
+                "corpus shard {} is {file_len} bytes — shorter than the header",
+                path.display()
+            )));
+        }
+        let mut r = BufReader::new(file);
         let magic = read_u32(&mut r)?;
         if magic != MAGIC {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("bad magic {magic:#x} in {}", path.display()),
-            ));
+            return Err(invalid(format!(
+                "bad magic {magic:#x} in {}",
+                path.display()
+            )));
         }
         let version = read_u32(&mut r)?;
         if version != VERSION {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                format!("unsupported corpus version {version}"),
-            ));
+            return Err(invalid(format!("unsupported corpus version {version}")));
         }
-        let n = read_u64(&mut r)? as usize;
+        let n = read_u64(&mut r)?;
+        let mut remaining = file_len - Self::SHARD_HEADER_BYTES;
+        // each sentence needs at least its 4-byte length prefix
+        if n > remaining / 4 {
+            return Err(invalid(format!(
+                "shard header claims {n} sentences but only {remaining} bytes follow"
+            )));
+        }
+        let n = n as usize;
         let mut sentences = Vec::with_capacity(n);
-        for _ in 0..n {
-            let len = read_u32(&mut r)? as usize;
-            let mut buf = vec![0u8; len * 4];
+        for i in 0..n {
+            if remaining < 4 {
+                return Err(invalid(format!(
+                    "shard truncated before the length prefix of sentence {i}"
+                )));
+            }
+            let len = read_u32(&mut r)? as u64;
+            remaining -= 4;
+            let body = len
+                .checked_mul(4)
+                .filter(|&b| b <= remaining)
+                .ok_or_else(|| {
+                    invalid(format!(
+                        "sentence {i} claims {len} tokens but only {remaining} bytes remain"
+                    ))
+                })?;
+            remaining -= body;
+            let mut buf = vec![0u8; body as usize];
             r.read_exact(&mut buf)?;
             let sent = buf
                 .chunks_exact(4)
                 .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                 .collect();
             sentences.push(sent);
+        }
+        if remaining != 0 {
+            return Err(invalid(format!(
+                "{remaining} trailing bytes after the last sentence of {}",
+                path.display()
+            )));
         }
         Ok(Corpus { sentences })
     }
@@ -240,6 +282,107 @@ mod tests {
         let c = Corpus::default();
         c.write_shard(&path).unwrap();
         assert_eq!(Corpus::read_shard(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn expect_invalid(path: &Path) {
+        let err = Corpus::read_shard(path).unwrap_err();
+        assert_eq!(
+            err.kind(),
+            std::io::ErrorKind::InvalidData,
+            "expected InvalidData, got {err:?}"
+        );
+    }
+
+    #[test]
+    fn truncated_shard_is_invalid_data() {
+        let dir = tmpdir("trunc");
+        let path = dir.join("t.bin");
+        let c = Corpus::new(vec![vec![1, 2, 3], vec![4, 5, 6, 7], vec![8]]);
+        c.write_shard(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut at several points: inside the header, inside a sentence body,
+        // inside a later length prefix
+        for cut in [3usize, 10, full.len() - 5, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            expect_invalid(&path);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bad_version_is_invalid_data() {
+        let dir = tmpdir("version");
+        let path = dir.join("v.bin");
+        sample().write_shard(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99; // version field follows the 4-byte magic
+        std::fs::write(&path, &bytes).unwrap();
+        expect_invalid(&path);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn huge_sentence_count_fails_before_allocating() {
+        let dir = tmpdir("huge_n");
+        let path = dir.join("h.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // ~2^64 sentences
+        std::fs::write(&path, &bytes).unwrap();
+        expect_invalid(&path);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn huge_sentence_length_fails_before_allocating() {
+        let dir = tmpdir("huge_len");
+        let path = dir.join("l.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // ~4 GiB sentence
+        std::fs::write(&path, &bytes).unwrap();
+        expect_invalid(&path);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn trailing_garbage_is_invalid_data() {
+        let dir = tmpdir("trailing");
+        let path = dir.join("g.bin");
+        sample().write_shard(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xAB; 7]);
+        std::fs::write(&path, &bytes).unwrap();
+        expect_invalid(&path);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Property: any corpus (random sentence counts/lengths/tokens,
+    /// including empty sentences and an empty corpus) survives a
+    /// write → read round trip bit-exactly.
+    #[test]
+    fn shard_roundtrip_property() {
+        use crate::util::rng::Pcg64;
+        let dir = tmpdir("prop");
+        let path = dir.join("p.bin");
+        let mut rng = Pcg64::new(0xC0FF);
+        for case in 0..20 {
+            let n = rng.gen_range_usize(40);
+            let sentences: Vec<Vec<u32>> = (0..n)
+                .map(|_| {
+                    let len = rng.gen_range_usize(25);
+                    (0..len).map(|_| rng.next_u32()).collect()
+                })
+                .collect();
+            let c = Corpus::new(sentences);
+            c.write_shard(&path).unwrap();
+            let back = Corpus::read_shard(&path).unwrap();
+            assert_eq!(back, c, "case {case} failed round trip");
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -66,6 +66,37 @@ impl MergeMethod {
     }
 }
 
+/// Which compute backend executes the SGNS macro-batch protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BackendKind {
+    /// Prefer the PJRT/XLA artifacts when loadable, else fall back to the
+    /// pure-rust native backend (the default: runs everywhere).
+    Auto,
+    /// Pure-rust CPU backend on the shared vectorized kernels.
+    Native,
+    /// PJRT/XLA AOT artifacts only (requires `--features xla` + artifacts).
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "auto" => Some(Self::Auto),
+            "native" | "cpu" => Some(Self::Native),
+            "xla" | "pjrt" => Some(Self::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Native => "native",
+            Self::Xla => "xla",
+        }
+    }
+}
+
 /// Full experiment configuration. Defaults reproduce the quickstart run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -101,6 +132,8 @@ pub struct ExperimentConfig {
     // -- execution shape ------------------------------------------------------
     pub mappers: usize,
     pub queue_capacity: usize,
+    /// compute backend for trainers (auto = xla when loadable, else native)
+    pub backend: BackendKind,
     pub artifact_dir: String,
     pub trainer_batch: usize,
     pub trainer_steps: usize,
@@ -131,6 +164,7 @@ impl Default for ExperimentConfig {
             alir_tol: 1e-4,
             mappers: 2,
             queue_capacity: 128,
+            backend: BackendKind::Auto,
             artifact_dir: "artifacts".to_string(),
             trainer_batch: 64,
             trainer_steps: 4,
@@ -173,6 +207,7 @@ impl ExperimentConfig {
             ("alir_tol", num(self.alir_tol)),
             ("mappers", num(self.mappers as f64)),
             ("queue_capacity", num(self.queue_capacity as f64)),
+            ("backend", s(self.backend.name())),
             ("artifact_dir", s(&self.artifact_dir)),
             ("trainer_batch", num(self.trainer_batch as f64)),
             ("trainer_steps", num(self.trainer_steps as f64)),
@@ -223,6 +258,10 @@ impl ExperimentConfig {
             "alir_tol" => self.alir_tol = p(key, value)?,
             "mappers" => self.mappers = p(key, value)?,
             "queue_capacity" => self.queue_capacity = p(key, value)?,
+            "backend" => {
+                self.backend = BackendKind::parse(value)
+                    .ok_or_else(|| format!("unknown backend '{value}' (auto | native | xla)"))?
+            }
             "artifact_dir" => self.artifact_dir = value.to_string(),
             "trainer_batch" => self.trainer_batch = p(key, value)?,
             "trainer_steps" => self.trainer_steps = p(key, value)?,
@@ -259,6 +298,22 @@ mod tests {
         assert_eq!(back.merge, cfg.merge);
         assert_eq!(back.rate_percent, cfg.rate_percent);
         assert_eq!(back.lr0, cfg.lr0);
+        assert_eq!(back.backend, cfg.backend);
+    }
+
+    #[test]
+    fn backend_kind_parses_and_roundtrips() {
+        for b in [BackendKind::Auto, BackendKind::Native, BackendKind::Xla] {
+            assert_eq!(BackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(BackendKind::parse("cpu"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Xla));
+        assert!(BackendKind::parse("gpu").is_none());
+        let mut cfg = ExperimentConfig::default();
+        assert_eq!(cfg.backend, BackendKind::Auto);
+        cfg.apply("backend", "native").unwrap();
+        assert_eq!(cfg.backend, BackendKind::Native);
+        assert!(cfg.apply("backend", "nonsense").is_err());
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! Merge robustness to missing vocabulary (the paper's Fig-3 scenario):
+//! sub-models with deliberately partial — down to fully disjoint —
+//! presence masks must merge without panicking under **every**
+//! `MergeMethod`, and words present in at least one sub-model must be
+//! reconstructed wherever the method's vocabulary semantics allow
+//! (union for ALiR, intersection for Concat/PCA).
+
+use dw2v::embedding::Embedding;
+use dw2v::merge::alir::AlirOptions;
+use dw2v::merge::merge_models;
+use dw2v::util::config::MergeMethod;
+use dw2v::util::rng::Pcg64;
+
+const ALL_METHODS: [MergeMethod; 5] = [
+    MergeMethod::Concat,
+    MergeMethod::Pca,
+    MergeMethod::AlirRand,
+    MergeMethod::AlirPca,
+    MergeMethod::Single,
+];
+
+fn random_model(vocab: usize, dim: usize, seed: u64) -> Embedding {
+    let mut rng = Pcg64::new(seed);
+    let data = (0..vocab * dim).map(|_| rng.gen_gauss() as f32).collect();
+    Embedding::from_rows(vocab, dim, data)
+}
+
+fn drop_word(m: &mut Embedding, w: u32) {
+    m.present[w as usize] = false;
+    m.row_mut(w).fill(0.0);
+}
+
+/// 4 models over 40 words, each missing a different 10-word block —
+/// pairwise-overlapping presence, empty intersection on the blocks.
+fn partial_models(dim: usize) -> Vec<Embedding> {
+    (0..4u64)
+        .map(|i| {
+            let mut m = random_model(40, dim, 100 + i);
+            let lo = (i as u32) * 10;
+            for w in lo..lo + 10 {
+                drop_word(&mut m, w);
+            }
+            m
+        })
+        .collect()
+}
+
+/// 4 models over 40 words with fully disjoint presence: model i owns
+/// exactly words [10·i, 10·i+10).
+fn disjoint_models(dim: usize) -> Vec<Embedding> {
+    (0..4u64)
+        .map(|i| {
+            let mut m = random_model(40, dim, 200 + i);
+            let lo = (i as u32) * 10;
+            for w in 0..40u32 {
+                if !(lo..lo + 10).contains(&w) {
+                    drop_word(&mut m, w);
+                }
+            }
+            m
+        })
+        .collect()
+}
+
+fn assert_finite(e: &Embedding) {
+    assert!(
+        e.data.iter().all(|x| x.is_finite()),
+        "merged embedding contains non-finite values"
+    );
+}
+
+#[test]
+fn partial_vocab_merges_without_panic_for_every_method() {
+    let models = partial_models(8);
+    for method in ALL_METHODS {
+        let r = merge_models(&models, &method, &AlirOptions::default(), 7);
+        assert_finite(&r.embedding);
+        match method {
+            // union semantics: every word is present somewhere, so the
+            // merged model reconstructs all 40
+            MergeMethod::AlirRand | MergeMethod::AlirPca => {
+                assert_eq!(
+                    r.embedding.present_count(),
+                    40,
+                    "{} must reconstruct the union",
+                    method.name()
+                );
+                // reconstructed rows are usable, not zero placeholders
+                for w in 0..40u32 {
+                    let norm: f32 = r.embedding.row(w).iter().map(|x| x * x).sum();
+                    assert!(norm > 0.0, "{} left word {w} empty", method.name());
+                }
+            }
+            // intersection semantics: every word is missing somewhere
+            MergeMethod::Concat | MergeMethod::Pca => {
+                assert_eq!(
+                    r.embedding.present_count(),
+                    0,
+                    "{} keeps only the (empty) intersection",
+                    method.name()
+                );
+            }
+            MergeMethod::Single => {
+                assert_eq!(r.embedding.present_count(), 30);
+            }
+        }
+    }
+}
+
+#[test]
+fn disjoint_vocab_merges_without_panic_for_every_method() {
+    let models = disjoint_models(8);
+    for method in ALL_METHODS {
+        let r = merge_models(&models, &method, &AlirOptions::default(), 9);
+        assert_finite(&r.embedding);
+        match method {
+            MergeMethod::AlirRand | MergeMethod::AlirPca => {
+                assert_eq!(r.embedding.present_count(), 40);
+            }
+            MergeMethod::Concat | MergeMethod::Pca => {
+                assert_eq!(r.embedding.present_count(), 0);
+            }
+            MergeMethod::Single => {
+                assert_eq!(r.embedding.present_count(), 10);
+            }
+        }
+    }
+}
+
+#[test]
+fn word_present_in_one_model_survives_alir_and_correlates() {
+    // near-identical copies of one truth matrix, with word 5 present only
+    // in model 2 — ALiR must keep it AND place it consistently with the
+    // consensus (cosine structure, not just non-zero)
+    let vocab = 24;
+    let dim = 6;
+    let truth = random_model(vocab, dim, 77);
+    let models: Vec<Embedding> = (0..4)
+        .map(|i| {
+            let mut m = truth.clone();
+            // small per-model perturbation so models aren't identical
+            let mut nrng = Pcg64::new_stream(31, i as u64);
+            for v in m.data.iter_mut() {
+                *v += 0.01 * nrng.gen_gauss() as f32;
+            }
+            if i != 2 {
+                drop_word(&mut m, 5);
+            }
+            m
+        })
+        .collect();
+    for method in [MergeMethod::AlirPca, MergeMethod::AlirRand] {
+        let r = merge_models(&models, &method, &AlirOptions::default(), 13);
+        assert!(r.embedding.is_present(5), "{}", method.name());
+        assert_finite(&r.embedding);
+        // word 5's nearest relations should mirror the truth's: compare
+        // cosine to a word it is similar/dissimilar to in truth space
+        let mut best = (0u32, -1.0f64);
+        for w in 0..vocab as u32 {
+            if w == 5 {
+                continue;
+            }
+            let c = truth.cosine(5, w).unwrap();
+            if c > best.1 {
+                best = (w, c);
+            }
+        }
+        let merged_cos = r.embedding.cosine(5, best.0).unwrap();
+        assert!(
+            merged_cos > 0.3,
+            "{}: reconstructed word lost its structure (cos {merged_cos:.3} to truth-nearest)",
+            method.name()
+        );
+    }
+}
+
+#[test]
+fn single_missing_word_per_method_keeps_everyone_else() {
+    // the gentle version: one word missing from one model — Concat/PCA
+    // drop exactly that word, ALiR keeps everything
+    let mut models: Vec<Embedding> = (0..3u64).map(|i| random_model(20, 6, 300 + i)).collect();
+    drop_word(&mut models[1], 7);
+    for method in ALL_METHODS {
+        let r = merge_models(&models, &method, &AlirOptions::default(), 5);
+        assert_finite(&r.embedding);
+        let present = r.embedding.present_count();
+        match method {
+            MergeMethod::Concat | MergeMethod::Pca => {
+                assert_eq!(present, 19, "{}", method.name());
+                assert!(!r.embedding.is_present(7));
+            }
+            MergeMethod::AlirRand | MergeMethod::AlirPca => {
+                assert_eq!(present, 20, "{}", method.name());
+            }
+            MergeMethod::Single => assert_eq!(present, 20), // model 0 is full
+        }
+    }
+}
