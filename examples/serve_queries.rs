@@ -1,0 +1,121 @@
+//! Serving a trained model: train → save → load → query, the full
+//! post-training flow through the `serve/` subsystem.
+//!
+//! Trains a small SGNS model on a synthetic corpus, persists it the way
+//! the pipeline would, loads it back into a [`ServeEngine`] (HNSW ANN
+//! index + int8 quantized store), and then
+//!   * answers nearest-neighbor and analogy queries,
+//!   * fans a mixed batch out across the worker pool,
+//!   * reconstructs a word deleted from the served model on the fly from
+//!     rotated sub-model projections (the paper's missing-word scenario).
+//!
+//! Run with:  cargo run --release --example serve_queries
+
+use dw2v::embedding::Embedding;
+use dw2v::linalg::mat::Mat;
+use dw2v::linalg::svd::svd;
+use dw2v::serve::{Query, ServeConfig, ServeEngine};
+use dw2v::sgns::config::SgnsConfig;
+use dw2v::sgns::hogwild;
+use dw2v::util::config::ExperimentConfig;
+use dw2v::util::rng::Pcg64;
+use dw2v::world::build_world;
+use std::time::Instant;
+
+fn main() -> Result<(), String> {
+    // 1. train a small model (single-node hogwild keeps the example quick)
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 3000;
+    cfg.vocab = 500;
+    cfg.clusters = 10;
+    let world = build_world(&cfg);
+    let scfg = SgnsConfig {
+        dim: 32,
+        epochs: 2,
+        ..Default::default()
+    };
+    println!("training on {} sentences…", world.corpus.len());
+    let (emb, stats) = hogwild::train(&world.corpus, &world.vocab, &scfg, 2, cfg.seed);
+    println!("trained in {:.2}s ({} pairs)", stats.seconds, stats.pairs);
+
+    // 2. save + load — serving always starts from a persisted model
+    let path = std::env::temp_dir().join(format!("serve_example_{}.bin", std::process::id()));
+    emb.save(&path).map_err(|e| e.to_string())?;
+    let served = Embedding::load(&path).map_err(|e| e.to_string())?;
+    std::fs::remove_file(&path).ok();
+
+    // 3. build the engine: ANN index + int8 store behind an Arc
+    let t = Instant::now();
+    let engine =
+        ServeEngine::new(served.clone(), Some(world.vocab.clone()), ServeConfig::default());
+    println!(
+        "engine up in {:.2}s — {} words, {} index, int8 store {} KB",
+        t.elapsed().as_secs_f64(),
+        engine.index().len(),
+        if engine.index().is_brute_force() { "exact-scan" } else { "HNSW" },
+        engine.store_bytes() / 1024
+    );
+
+    // 4. single queries
+    for probe in ["w3", "w42", "w117"] {
+        let ns = engine.nearest_words(probe, 4)?;
+        let cells: Vec<String> =
+            ns.iter().map(|n| format!("{} {:.3}", n.word, n.score)).collect();
+        println!("nearest({probe}):  {}", cells.join("  "));
+    }
+    let ns = engine.analogy("w1", "w2", "w10", 3)?;
+    println!(
+        "analogy(w1 : w2 :: w10 : ?):  {}",
+        ns.iter().map(|n| n.word.clone()).collect::<Vec<_>>().join(" ")
+    );
+
+    // 5. a concurrent batch over the worker pool
+    let batch: Vec<Query> = (0..200)
+        .map(|i| Query::Nearest { word: format!("w{}", i % 500), k: 10 })
+        .collect();
+    let t = Instant::now();
+    let results = engine.batch(&batch);
+    let secs = t.elapsed().as_secs_f64();
+    let ok = results.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "batch: {ok}/{} queries answered in {:.3}s ({:.0} qps)",
+        batch.len(),
+        secs,
+        batch.len() as f64 / secs.max(1e-9)
+    );
+
+    // 6. missing-word reconstruction: delete w7 from the served model,
+    //    attach two rotated "sub-models" that still have it
+    let dim = served.dim;
+    let mut rng = Pcg64::new(cfg.seed ^ 0x5E);
+    let truth_mat = Mat::from_f32(served.vocab, dim, &served.data);
+    let submodels: Vec<Embedding> = (0..2)
+        .map(|_| {
+            let a = Mat::from_vec(dim, dim, (0..dim * dim).map(|_| rng.gen_gauss()).collect());
+            let sv = svd(&a);
+            let rot = sv.u.matmul(&sv.v.transpose());
+            Embedding::from_rows(served.vocab, dim, truth_mat.matmul(&rot).to_f32())
+        })
+        .collect();
+    let mut lossy = served.clone();
+    let deleted = world.vocab.id("w7").expect("w7 in vocab");
+    lossy.present[deleted as usize] = false;
+    lossy.row_mut(deleted).fill(0.0);
+    let engine2 = ServeEngine::with_submodels(
+        lossy,
+        Some(world.vocab.clone()),
+        ServeConfig::default(),
+        submodels,
+    );
+    let ns = engine2.nearest_words("w7", 4)?;
+    println!(
+        "nearest(w7, reconstructed from sub-models):  {}",
+        ns.iter()
+            .map(|n| format!("{} {:.3}", n.word, n.score))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+
+    println!("\nserve_queries OK");
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! Serving-layer throughput/recall bench: exact O(V) scan vs the HNSW
+//! index vs HNSW + int8 quantized store, on the native backend with no
+//! artifacts. Reports queries/sec and recall@10 (exact = 1.0 by
+//! definition) plus the resident bytes of each row store — the
+//! memory-for-speed-for-recall triangle the `serve/` subsystem trades in.
+//!
+//! `DW2V_BENCH_SCALE=full` runs the larger vocabulary; the default small
+//! scale keeps the bench CI-smoke friendly (a few seconds).
+
+use dw2v::bench_util::{bench_scale, time_it, Table};
+use dw2v::embedding::Embedding;
+use dw2v::serve::{AnnIndex, AnnParams};
+use dw2v::util::json::{num, obj, s};
+use dw2v::util::rng::Pcg64;
+use std::collections::HashSet;
+use std::hint::black_box;
+use std::time::Instant;
+
+fn main() {
+    let scale = bench_scale();
+    let vocab = (8000.0 * scale) as usize; // 2000 small, 8000 full
+    let dim = 64usize;
+    let k = 10usize;
+    let n_queries = 200usize;
+
+    // random unit-ish rows — serving cost depends on V and d, not content
+    let mut emb = Embedding::zeros(vocab, dim);
+    let mut rng = Pcg64::new(3);
+    for w in 0..vocab as u32 {
+        for v in emb.row_mut(w) {
+            *v = rng.gen_gauss() as f32;
+        }
+    }
+    let queries: Vec<u32> = (0..n_queries)
+        .map(|i| ((i * vocab) / n_queries) as u32)
+        .collect();
+
+    let mut table = Table::new(
+        "serve_qps",
+        "§Serve — queries/sec + recall@10, exact vs ANN vs ANN+int8",
+        &["metric", "value"],
+    );
+
+    let params = AnnParams::default();
+    let t_build = Instant::now();
+    let index = AnnIndex::build(&emb, params.clone());
+    let build_secs = t_build.elapsed().as_secs_f64();
+    let store = index.quantize();
+    table.row(
+        &format!("index build V={vocab} d={dim}"),
+        vec![
+            "secs | mode".into(),
+            format!(
+                "{build_secs:.2} | {}",
+                if index.is_brute_force() { "brute" } else { "hnsw" }
+            ),
+        ],
+        obj(vec![
+            ("bench", s("index_build")),
+            ("vocab", num(vocab as f64)),
+            ("dim", num(dim as f64)),
+            ("secs", num(build_secs)),
+        ]),
+    );
+
+    // ground truth + recall bookkeeping (outside the timed sections)
+    let norms = emb.row_norms();
+    let exact_sets: Vec<HashSet<u32>> = queries
+        .iter()
+        .map(|&q| {
+            emb.nearest_with_norms(emb.row(q), k, &[q], &norms)
+                .into_iter()
+                .map(|(w, _)| w)
+                .collect()
+        })
+        .collect();
+    let recall_of = |hits: &[Vec<(u32, f32)>]| -> f64 {
+        let mut total = 0.0;
+        for (set, h) in exact_sets.iter().zip(hits) {
+            total += h.iter().filter(|(w, _)| set.contains(w)).count() as f64
+                / set.len().max(1) as f64;
+        }
+        total / exact_sets.len() as f64
+    };
+
+    // ---- exact scan ----------------------------------------------------------
+    let t_exact = time_it(1, 5, || {
+        for &q in &queries {
+            black_box(emb.nearest_with_norms(emb.row(q), k, &[q], &norms));
+        }
+    });
+    let exact_qps = n_queries as f64 / t_exact.min_secs;
+    table.row(
+        "exact scan",
+        vec![
+            "qps | recall@10".into(),
+            format!("{exact_qps:.0} | 1.000"),
+        ],
+        obj(vec![
+            ("bench", s("exact_scan")),
+            ("qps", num(exact_qps)),
+            ("recall_at_10", num(1.0)),
+        ]),
+    );
+
+    // ---- ANN over f32 rows ---------------------------------------------------
+    let ann_hits: Vec<Vec<(u32, f32)>> = queries
+        .iter()
+        .map(|&q| index.search(emb.row(q), k, 0, &[q]))
+        .collect();
+    let t_ann = time_it(1, 5, || {
+        for &q in &queries {
+            black_box(index.search(emb.row(q), k, 0, &[q]));
+        }
+    });
+    let ann_qps = n_queries as f64 / t_ann.min_secs;
+    let ann_recall = recall_of(&ann_hits);
+    table.row(
+        &format!("ANN f32 (ef={})", params.ef_search),
+        vec![
+            "qps | recall@10".into(),
+            format!("{ann_qps:.0} | {ann_recall:.3}"),
+        ],
+        obj(vec![
+            ("bench", s("ann_f32")),
+            ("qps", num(ann_qps)),
+            ("recall_at_10", num(ann_recall)),
+            ("ef_search", num(params.ef_search as f64)),
+            ("speedup_vs_exact", num(ann_qps / exact_qps)),
+        ]),
+    );
+
+    // ---- ANN over the int8 store ---------------------------------------------
+    let annq_hits: Vec<Vec<(u32, f32)>> = queries
+        .iter()
+        .map(|&q| index.search_quantized(&store, emb.row(q), k, 0, &[q]))
+        .collect();
+    let t_annq = time_it(1, 5, || {
+        for &q in &queries {
+            black_box(index.search_quantized(&store, emb.row(q), k, 0, &[q]));
+        }
+    });
+    let annq_qps = n_queries as f64 / t_annq.min_secs;
+    let annq_recall = recall_of(&annq_hits);
+    table.row(
+        &format!("ANN int8 (ef={})", params.ef_search),
+        vec![
+            "qps | recall@10".into(),
+            format!("{annq_qps:.0} | {annq_recall:.3}"),
+        ],
+        obj(vec![
+            ("bench", s("ann_int8")),
+            ("qps", num(annq_qps)),
+            ("recall_at_10", num(annq_recall)),
+            ("ef_search", num(params.ef_search as f64)),
+            ("speedup_vs_exact", num(annq_qps / exact_qps)),
+        ]),
+    );
+
+    // ---- resident store memory -----------------------------------------------
+    let f32_bytes = index.rows().len() * 4;
+    let int8_bytes = store.resident_bytes();
+    table.row(
+        "row store bytes f32 | int8",
+        vec![
+            "bytes | ratio".into(),
+            format!(
+                "{f32_bytes} | {int8_bytes} ({:.2}x)",
+                f32_bytes as f64 / int8_bytes as f64
+            ),
+        ],
+        obj(vec![
+            ("bench", s("store_bytes")),
+            ("f32_bytes", num(f32_bytes as f64)),
+            ("int8_bytes", num(int8_bytes as f64)),
+            ("ratio", num(f32_bytes as f64 / int8_bytes as f64)),
+        ]),
+    );
+
+    table.finish();
+}

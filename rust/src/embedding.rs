@@ -119,6 +119,11 @@ impl Embedding {
     /// One vectorized dot per candidate row, exclusion via binary search
     /// on a sorted copy of `exclude`, and an O(V) partial top-k
     /// (`select_nth_unstable_by`) instead of sorting the whole scan.
+    ///
+    /// Ordering is fully deterministic: score descending, ties broken by
+    /// ascending word id. Equal-score rows (duplicate vectors, symmetric
+    /// constructions) therefore always come back in the same order, which
+    /// the serving layer's exact-vs-ANN recall tests rely on.
     pub fn nearest_with_norms(
         &self,
         query: &[f32],
@@ -133,6 +138,9 @@ impl Embedding {
         let qn = kernels::norm_sq_wide(query).sqrt();
         let mut excl = exclude.to_vec();
         excl.sort_unstable();
+        let by_score_then_id = |a: &(u32, f64), b: &(u32, f64)| {
+            b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0))
+        };
         let mut scored: Vec<(u32, f64)> = (0..self.vocab as u32)
             .filter(|w| self.is_present(*w) && excl.binary_search(w).is_err())
             .map(|w| {
@@ -143,10 +151,10 @@ impl Embedding {
             .collect();
         let k = k.min(scored.len());
         if k > 0 && k < scored.len() {
-            scored.select_nth_unstable_by(k - 1, |a, b| b.1.partial_cmp(&a.1).unwrap());
+            scored.select_nth_unstable_by(k - 1, by_score_then_id);
             scored.truncate(k);
         }
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        scored.sort_by(by_score_then_id);
         scored
     }
 }
@@ -240,6 +248,78 @@ mod tests {
         assert_eq!(back.data, e.data);
         assert_eq!(back.present, e.present);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn save_load_roundtrip_property() {
+        // randomized shapes and payloads, bitwise equality on every field —
+        // the serving layer deserializes models saved by the training
+        // pipeline, so the on-disk format must round-trip exactly
+        let mut rng = crate::util::rng::Pcg64::new(0x5EED);
+        for case in 0..12u32 {
+            let vocab = 1 + rng.gen_range_usize(40);
+            let dim = 1 + rng.gen_range_usize(24);
+            let mut e = Embedding::zeros(vocab, dim);
+            for v in e.data.iter_mut() {
+                // mix magnitudes (incl. subnormal-ish and negative zero
+                // territory) while staying NaN-free
+                let raw = rng.gen_gauss() as f32;
+                *v = match rng.gen_range(4) {
+                    0 => raw * 1e-30,
+                    1 => raw * 1e30,
+                    2 => -0.0,
+                    _ => raw,
+                };
+            }
+            for p in e.present.iter_mut() {
+                *p = rng.gen_bool(0.8);
+            }
+            let path = std::env::temp_dir().join(format!(
+                "dw2v_prop_{}_{case}.bin",
+                std::process::id()
+            ));
+            e.save(&path).unwrap();
+            let back = Embedding::load(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            assert_eq!(back.vocab, e.vocab);
+            assert_eq!(back.dim, e.dim);
+            assert_eq!(back.present, e.present);
+            assert_eq!(back.data.len(), e.data.len());
+            for (i, (a, b)) in e.data.iter().zip(&back.data).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case}: f32 at {i} not bitwise equal: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nearest_breaks_score_ties_by_ascending_id() {
+        // rows 1, 3, 4 are identical → identical scores; the returned order
+        // must be deterministic (ascending id) regardless of k or the
+        // partial-selection pivot choices
+        let mut e = Embedding::zeros(6, 2);
+        e.row_mut(0).copy_from_slice(&[0.0, 1.0]);
+        e.row_mut(1).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(2).copy_from_slice(&[-1.0, 0.0]);
+        e.row_mut(3).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(4).copy_from_slice(&[1.0, 0.0]);
+        e.row_mut(5).copy_from_slice(&[0.5, 0.5]);
+        let query = [1.0f32, 0.0];
+        let full = e.nearest(&query, 6, &[]);
+        assert_eq!(
+            full.iter().map(|(w, _)| *w).collect::<Vec<_>>(),
+            vec![1, 3, 4, 5, 0, 2]
+        );
+        // truncated k that cuts through the tie group still honors id order
+        let top2 = e.nearest(&query, 2, &[]);
+        assert_eq!(top2.iter().map(|(w, _)| *w).collect::<Vec<_>>(), vec![1, 3]);
+        // and repeated runs agree exactly
+        for _ in 0..5 {
+            assert_eq!(e.nearest(&query, 4, &[]), e.nearest(&query, 4, &[]));
+        }
     }
 
     #[test]

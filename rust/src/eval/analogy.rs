@@ -9,6 +9,7 @@
 use crate::embedding::Embedding;
 use crate::gen::benchmarks::AnalogyQuad;
 use crate::kernels;
+use crate::serve::index::AnnIndex;
 
 #[derive(Clone, Debug)]
 pub struct AnalogyResult {
@@ -18,22 +19,55 @@ pub struct AnalogyResult {
     pub oov_words: usize,
 }
 
-/// Evaluate 3CosAdd accuracy of `quads` against an embedding.
+/// Evaluate 3CosAdd accuracy of `quads` against an embedding (exact scan).
 pub fn evaluate(emb: &Embedding, quads: &[AnalogyQuad]) -> AnalogyResult {
     let unit = emb.normalized();
     // one norm pass for the whole benchmark — every query reuses it
     // instead of recomputing V norms inside `nearest`
     let norms = unit.row_norms();
+    evaluate_via(&unit, quads, |query, excl| {
+        unit.nearest_with_norms(query, 1, excl, &norms)
+            .first()
+            .map(|(w, _)| *w)
+    })
+}
+
+/// [`evaluate`] with the argmax served by an ANN index instead of the
+/// exact scan — the approximate side of the exact-vs-ANN benchmark
+/// comparison. `index` must be built over the same embedding; `ef_search
+/// = 0` uses the index's configured default.
+pub fn evaluate_indexed(
+    emb: &Embedding,
+    quads: &[AnalogyQuad],
+    index: &AnnIndex,
+    ef_search: usize,
+) -> AnalogyResult {
+    let unit = emb.normalized();
+    evaluate_via(&unit, quads, |query, excl| {
+        index
+            .search(query, 1, ef_search, excl)
+            .first()
+            .map(|(w, _)| *w)
+    })
+}
+
+/// The shared 3CosAdd protocol: assemble `b − a + c` over unit rows, ask
+/// `top1` for the argmax (excluding the question words), score against d.
+fn evaluate_via<F: FnMut(&[f32], &[u32]) -> Option<u32>>(
+    unit: &Embedding,
+    quads: &[AnalogyQuad],
+    mut top1: F,
+) -> AnalogyResult {
     let mut correct = 0usize;
     let mut used = 0usize;
     let mut skipped = 0usize;
     let mut oov = std::collections::HashSet::new();
-    let dim = emb.dim;
+    let dim = unit.dim;
     let mut query = vec![0.0f32; dim];
     for q in quads {
         let absent: Vec<u32> = [q.a, q.b, q.c, q.d]
             .into_iter()
-            .filter(|&w| !emb.is_present(w))
+            .filter(|&w| !unit.is_present(w))
             .collect();
         if !absent.is_empty() {
             oov.extend(absent);
@@ -44,9 +78,8 @@ pub fn evaluate(emb: &Embedding, quads: &[AnalogyQuad]) -> AnalogyResult {
         // query = b − a + c in two fused passes
         kernels::scaled_add(&mut query, b, a, -1.0);
         kernels::axpy(1.0, c, &mut query);
-        let top = unit.nearest_with_norms(&query, 1, &[q.a, q.b, q.c], &norms);
         used += 1;
-        if top.first().map(|(w, _)| *w) == Some(q.d) {
+        if top1(&query, &[q.a, q.b, q.c]) == Some(q.d) {
             correct += 1;
         }
     }
@@ -122,6 +155,24 @@ mod tests {
         // whatever the winner, it cannot be a/b/c — with d the only other
         // word, accuracy must be 1
         assert_eq!(r.accuracy, 1.0);
+    }
+
+    #[test]
+    fn indexed_evaluation_matches_exact_on_clean_structure() {
+        let e = offset_embedding();
+        let quads = vec![
+            AnalogyQuad { a: 0, b: 1, c: 2, d: 3 },
+            AnalogyQuad { a: 2, b: 3, c: 4, d: 5 },
+            AnalogyQuad { a: 4, b: 5, c: 0, d: 1 },
+        ];
+        let exact = evaluate(&e, &quads);
+        // tiny vocab → the index's brute-force fallback, so accuracy must
+        // agree exactly with the scan
+        let index = AnnIndex::build(&e.normalized(), Default::default());
+        let approx = evaluate_indexed(&e, &quads, &index, 0);
+        assert_eq!(exact.questions_used, approx.questions_used);
+        assert!((exact.accuracy - approx.accuracy).abs() < 1e-12);
+        assert!(approx.accuracy > 0.99);
     }
 
     #[test]

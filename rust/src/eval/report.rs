@@ -57,6 +57,38 @@ pub fn evaluate_suite(emb: &Embedding, suite: &[Benchmark], seed: u64) -> Vec<Be
         .collect()
 }
 
+/// [`evaluate_suite`] with the analogy benchmarks' argmax served by an
+/// ANN index ([`analogy::evaluate_indexed`]) instead of the exact scan —
+/// similarity and categorization score pairwise/cluster-wise and have no
+/// nearest-neighbor search to approximate, so they run identically.
+/// Diffing this against [`evaluate_suite`] quantifies what approximate
+/// search costs in benchmark accuracy at a given `ef_search`.
+pub fn evaluate_suite_indexed(
+    emb: &Embedding,
+    suite: &[Benchmark],
+    seed: u64,
+    index: &crate::serve::index::AnnIndex,
+    ef_search: usize,
+) -> Vec<BenchmarkScore> {
+    suite
+        .iter()
+        .map(|b| match &b.data {
+            BenchmarkData::Analogy(quads) => {
+                let r = analogy::evaluate_indexed(emb, quads, index, ef_search);
+                BenchmarkScore {
+                    name: b.name.clone(),
+                    score: r.accuracy,
+                    oov_words: r.oov_words,
+                    items_used: r.questions_used,
+                }
+            }
+            _ => evaluate_suite(emb, std::slice::from_ref(b), seed)
+                .pop()
+                .expect("one benchmark in, one score out"),
+        })
+        .collect()
+}
+
 /// Paper-style cell: "0.614 (12)".
 pub fn format_cell(score: &BenchmarkScore) -> String {
     format!("{:.3} ({})", score.score, score.oov_words)
@@ -151,6 +183,33 @@ mod tests {
                     assert!(sc.score > 0.6, "{n}: {}", sc.score)
                 }
                 other => panic!("unknown benchmark {other}"),
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_suite_tracks_exact_suite() {
+        let (e, suite) = ground_truth_embedding();
+        // 300 words > brute threshold → real graph search for the analogies
+        let index = crate::serve::index::AnnIndex::build(&e, Default::default());
+        let exact = evaluate_suite(&e, &suite, 1);
+        let approx = evaluate_suite_indexed(&e, &suite, 1, &index, 0);
+        assert_eq!(exact.len(), approx.len());
+        for (a, b) in exact.iter().zip(&approx) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.oov_words, b.oov_words);
+            if a.name.starts_with("ana") {
+                // approximate argmax may miss the odd question
+                assert!(
+                    (a.score - b.score).abs() < 0.15,
+                    "{}: exact {} vs indexed {}",
+                    a.name,
+                    a.score,
+                    b.score
+                );
+            } else {
+                // sim/cat paths are untouched by the index
+                assert!((a.score - b.score).abs() < 1e-12, "{}", a.name);
             }
         }
     }

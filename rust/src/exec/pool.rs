@@ -6,6 +6,7 @@
 //! * [`parallel_for`] / [`parallel_map`] — fork-join over borrowed data via
 //!   `std::thread::scope`, used by the trainers and the merge phase.
 
+use crate::util::logging;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -39,7 +40,29 @@ impl ThreadPool {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
                         Ok(Message::Run(job)) => {
-                            job();
+                            // a panicking job must neither kill this worker
+                            // (the pool would silently lose capacity) nor
+                            // leak the queued count (wait_idle would spin
+                            // forever) — contain the unwind, always
+                            // decrement, and keep the payload debuggable
+                            if let Err(payload) = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(job),
+                            ) {
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| {
+                                        payload.downcast_ref::<String>().cloned()
+                                    })
+                                    .unwrap_or_else(|| {
+                                        "non-string panic payload".to_string()
+                                    });
+                                logging::log(
+                                    logging::Level::Warn,
+                                    "exec::pool",
+                                    &format!("worker job panicked: {msg}"),
+                                );
+                            }
                             queued.fetch_sub(1, Ordering::Release);
                         }
                         Ok(Message::Shutdown) | Err(_) => break,
@@ -157,6 +180,61 @@ mod tests {
         }
         drop(pool); // must wait for queued jobs' workers to finish current job
         // all ten may not run (shutdown drains), but no panic/hang allowed
+    }
+
+    #[test]
+    fn pool_survives_contended_submit_and_drain_cycles() {
+        // many producers hammering execute() while the main thread drains:
+        // every job must run exactly once across repeated drain cycles
+        let pool = Arc::new(ThreadPool::new(4));
+        let counter = Arc::new(AtomicU64::new(0));
+        for _cycle in 0..5 {
+            std::thread::scope(|scope| {
+                for _ in 0..8 {
+                    let pool = Arc::clone(&pool);
+                    let counter = Arc::clone(&counter);
+                    scope.spawn(move || {
+                        for _ in 0..50 {
+                            let c = Arc::clone(&counter);
+                            pool.execute(move || {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            });
+                        }
+                    });
+                }
+            });
+            pool.wait_idle();
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 5 * 8 * 50);
+        assert_eq!(pool.pending(), 0);
+    }
+
+    #[test]
+    fn panicking_job_does_not_poison_the_pool() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        // interleave panicking and normal jobs onto both workers
+        for i in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                if i % 4 == 0 {
+                    panic!("job {i} exploded");
+                }
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // wait_idle must terminate (panicked jobs still decrement queued)…
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 15);
+        // …and the workers must still be alive for a fresh round of work
+        for _ in 0..30 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::Relaxed), 45);
     }
 
     #[test]

@@ -208,6 +208,33 @@ pub fn dot_sigmoid_update(
     x
 }
 
+/// Vectorized int8-dequantizing dot product: Σ codes[i]·q[i].
+///
+/// The distance hot path of the serving layer's quantized row store
+/// (`serve::quant`): rows live as int8 codes with one f32 scale per row,
+/// and the query stays f32, so the reduction widens each code to f32 in
+/// the lane loop. The caller multiplies the result by the row scale — one
+/// multiply per row instead of one per element.
+#[inline]
+pub fn dot_i8_dequant(codes: &[i8], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let main = codes.len() - codes.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (cc, cq) in codes[..main]
+        .chunks_exact(LANES)
+        .zip(q[..main].chunks_exact(LANES))
+    {
+        for l in 0..LANES {
+            acc[l] += cc[l] as f32 * cq[l];
+        }
+    }
+    let mut sum: f32 = acc.iter().sum();
+    for (c, x) in codes[main..].iter().zip(&q[main..]) {
+        sum += *c as f32 * x;
+    }
+    sum
+}
+
 // ---------------------------------------------------------------- f64 ----
 // The merge-phase linalg (`linalg::mat`) reduces in f64; same contract.
 
@@ -408,6 +435,24 @@ mod tests {
                 assert!((c1[k] - c2[k]).abs() < 1e-5, "c parity n={n} k={k}");
                 assert!((n1[k] - n2[k]).abs() < 1e-5, "neu parity n={n} k={k}");
             }
+        }
+    }
+
+    #[test]
+    fn dot_i8_dequant_matches_scalar_reference() {
+        let mut rng = Pcg64::new(47);
+        for n in PARITY_LENS {
+            let codes: Vec<i8> =
+                (0..n).map(|_| (rng.gen_range(255) as i64 - 127) as i8).collect();
+            let q = rand_vec(&mut rng, n);
+            let fast = dot_i8_dequant(&codes, &q);
+            let slow = scalar::dot_i8_dequant(&codes, &q);
+            // codes span ±127, so partial sums are ~100× larger than the
+            // f32 parity kernels' — scale the reassociation tolerance
+            assert!(
+                (fast - slow).abs() < 1e-2 + slow.abs() * 1e-4,
+                "dot_i8_dequant parity n={n}: {fast} vs {slow}"
+            );
         }
     }
 

@@ -35,3 +35,15 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
         y[i] += alpha * x[i];
     }
 }
+
+/// Sequential int8-dequantizing dot product: Σ codes[i]·q[i], one widening
+/// multiply-add at a time (the caller applies the per-row scale).
+#[inline]
+pub fn dot_i8_dequant(codes: &[i8], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    let mut acc = 0.0f32;
+    for i in 0..codes.len() {
+        acc += codes[i] as f32 * q[i];
+    }
+    acc
+}

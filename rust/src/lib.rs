@@ -33,6 +33,18 @@
 //! path is rust driving PJRT-compiled executables with device-resident
 //! parameters.
 //!
+//! ## Serving layer
+//!
+//! Trained models are *used* through [`serve`]: an HNSW-style ANN index +
+//! int8-quantized row store + concurrent batch query engine over any
+//! merged/saved [`embedding::Embedding`] (`dw2v serve` on the CLI). The
+//! exact-vs-approximate trade-off is one knob — `ef_search` (higher =
+//! better recall, slower) — plus `quantize` on/off for the ~4× smaller
+//! int8 store; `cargo bench --bench serve_qps` reports queries/sec and
+//! recall@10 for exact vs ANN vs ANN+int8, and
+//! [`eval::analogy::evaluate_indexed`] runs the analogy benchmark through
+//! the index so approximate accuracy can be compared with the exact scan.
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions of every table and figure.
 
@@ -53,6 +65,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod merge;
 pub mod runtime;
+pub mod serve;
 pub mod sgns;
 pub mod text;
 pub mod util;

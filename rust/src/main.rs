@@ -6,6 +6,8 @@
 //!   mllib       parameter-averaging distributed baseline
 //!   kl          Figure-1 distribution statistics for the dividers
 //!   gen-corpus  generate + persist a synthetic corpus
+//!   serve       ANN-indexed query engine over a saved embedding
+//!               (`--model model.bin [--vocab vocab.tsv] [--queries f]`)
 //!   artifacts   show the AOT artifact manifest
 //!
 //! Every flag maps to a key of `ExperimentConfig`; `--config file.json`
@@ -51,6 +53,7 @@ fn main() {
         Some("mllib") => cmd_mllib(&argv[1..]),
         Some("kl") => cmd_kl(&argv[1..]),
         Some("gen-corpus") => cmd_gen_corpus(&argv[1..]),
+        Some("serve") => cmd_serve(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{USAGE}");
@@ -74,6 +77,7 @@ subcommands:
   mllib        parameter-averaging distributed baseline
   kl           figure-1 KL-divergence statistics for the dividers
   gen-corpus   generate + persist a synthetic corpus
+  serve        ANN-indexed query engine over a saved embedding
   artifacts    show the AOT artifact manifest
 
 backends (--backend auto|native|xla):
@@ -299,6 +303,154 @@ fn cmd_gen_corpus(argv: &[String]) -> Result<(), String> {
         world.corpus.len(),
         world.corpus.total_tokens()
     );
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> Result<(), String> {
+    use dw2v::serve::{Query, QueryResult, ServeConfig, ServeEngine};
+
+    let cmd = Command::new(
+        "serve",
+        "ANN-indexed nearest-neighbor / analogy queries over a saved embedding",
+    )
+    .flag("model", None, "saved embedding file (Embedding::save format) [required]")
+    .flag("vocab", None, "vocab.tsv (word<TAB>count); without it queries address word ids")
+    .flag("queries", None, "query file, one per line (default: interactive stdin loop)")
+    .flag("k", Some("10"), "neighbors per query")
+    .flag("ef-search", None, "ANN beam width — higher = better recall, slower")
+    .flag("m", None, "HNSW out-degree per layer")
+    .flag("workers", Some("4"), "worker threads for batched --queries mode")
+    .bool_flag("no-quant", "score on f32 rows instead of the int8 quantized store")
+    .bool_flag("exact", "print the exact-scan answer next to the ANN answer");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+
+    let model_path = args
+        .get("model")
+        .ok_or_else(|| format!("serve: --model is required\n\n{}", cmd.usage()))?;
+    let emb = dw2v::embedding::Embedding::load(std::path::Path::new(model_path))
+        .map_err(|e| format!("load {model_path}: {e}"))?;
+    let vocab = match args.get("vocab") {
+        Some(p) => {
+            let text = std::fs::read_to_string(p).map_err(|e| format!("read {p}: {e}"))?;
+            Some(dw2v::text::vocab::Vocab::from_tsv(&text)?)
+        }
+        None => None,
+    };
+
+    let mut cfg = ServeConfig::default();
+    if let Some(ef) = args.get_usize("ef-search").map_err(|e| e.to_string())? {
+        cfg.ann.ef_search = ef;
+    }
+    if let Some(m) = args.get_usize("m").map_err(|e| e.to_string())? {
+        cfg.ann.m = m;
+    }
+    if let Some(w) = args.get_usize("workers").map_err(|e| e.to_string())? {
+        cfg.workers = w;
+    }
+    cfg.quantize = !args.get_bool("no-quant");
+    let k = args
+        .get_usize("k")
+        .map_err(|e| e.to_string())?
+        .unwrap_or(10);
+    let show_exact = args.get_bool("exact");
+
+    let t = Timer::start("serve setup");
+    let engine = ServeEngine::new(emb, vocab, cfg);
+    eprintln!(
+        "serving {} words (dim {}) — {} index, {} store, ef_search {} ({:.2}s build)",
+        engine.index().len(),
+        engine.index().dim(),
+        if engine.index().is_brute_force() { "exact-scan" } else { "HNSW" },
+        if engine.config().quantize { "int8" } else { "f32" },
+        engine.config().ann.ef_search,
+        t.stop_quiet()
+    );
+
+    let print_result = |line: &str, res: &QueryResult| match res {
+        Ok(ns) => {
+            let cells: Vec<String> =
+                ns.iter().map(|n| format!("{} {:.3}", n.word, n.score)).collect();
+            println!("{line} -> {}", cells.join("  "));
+        }
+        Err(e) => println!("{line} -> error: {e}"),
+    };
+
+    // a line is either `word` (nearest) or `a b c` (analogy a : b :: c : ?)
+    let parse = |line: &str| -> Option<Query> {
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.as_slice() {
+            [w] => Some(Query::Nearest { word: w.to_string(), k }),
+            [a, b, c] => Some(Query::Analogy {
+                a: a.to_string(),
+                b: b.to_string(),
+                c: c.to_string(),
+                k,
+            }),
+            _ => None,
+        }
+    };
+
+    match args.get("queries") {
+        Some(path) => {
+            // batch mode: all queries fanned out across the worker pool
+            let text =
+                std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+            let lines: Vec<&str> = text
+                .lines()
+                .map(str::trim)
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .collect();
+            let queries: Vec<Query> = lines
+                .iter()
+                .map(|l| {
+                    parse(l).ok_or_else(|| {
+                        format!("bad query line '{l}' (want `word` or `a b c`)")
+                    })
+                })
+                .collect::<Result<_, _>>()?;
+            let t = Timer::start("serve batch");
+            let results = engine.batch(&queries);
+            let secs = t.stop_quiet();
+            for ((line, q), res) in lines.iter().zip(&queries).zip(&results) {
+                print_result(line, res);
+                if show_exact {
+                    print_result(&format!("{line} [exact]"), &engine.exact_answer(q));
+                }
+            }
+            eprintln!(
+                "{} queries in {:.3}s ({:.0} qps)",
+                queries.len(),
+                secs,
+                queries.len() as f64 / secs.max(1e-9)
+            );
+        }
+        None => {
+            // interactive loop: one query per stdin line
+            use std::io::BufRead;
+            eprintln!("enter `word` or `a b c` per line (ctrl-d to quit):");
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            loop {
+                line.clear();
+                if stdin.lock().read_line(&mut line).map_err(|e| e.to_string())? == 0 {
+                    break;
+                }
+                let trimmed = line.trim();
+                if trimmed.is_empty() || trimmed.starts_with('#') {
+                    continue;
+                }
+                match parse(trimmed) {
+                    Some(q) => {
+                        print_result(trimmed, &engine.answer(&q));
+                        if show_exact {
+                            print_result(&format!("{trimmed} [exact]"), &engine.exact_answer(&q));
+                        }
+                    }
+                    None => println!("bad query '{trimmed}' (want `word` or `a b c`)"),
+                }
+            }
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,526 @@
+//! The serving engine: ANN index + quantized store + batch query API.
+//!
+//! [`ServeEngine`] is the read-optimized front end for a merged/saved
+//! [`Embedding`]: it builds the [`AnnIndex`](super::index::AnnIndex) (and,
+//! by default, its int8 [`QuantizedStore`](super::quant::QuantizedStore))
+//! once, parks everything immutable behind an `Arc`, and answers
+//!
+//! * `nearest_words` — top-k cosine neighbors of a word,
+//! * `analogy` — 3CosAdd `b − a + c` queries,
+//! * `batch` — a slice of mixed queries fanned out across an
+//!   [`exec::pool::ThreadPool`](crate::exec::pool::ThreadPool), with
+//!   results reassembled in request order so concurrent answers are
+//!   *identical* to sequential ones,
+//!
+//! plus **missing-word reconstruction** (paper §5.4): when the engine is
+//! given the trained sub-models, it fits one orthogonal-Procrustes
+//! rotation per sub-model onto the consensus (the merge-phase linalg,
+//! reused), precomputes every missing word as the mean of its rotated
+//! sub-model rows — the same estimate the ALiR merge would have produced —
+//! and drops the sub-models; a query for an absent word is then an O(1)
+//! lookup into those reconstructions.
+
+use super::index::{AnnIndex, AnnParams};
+use super::quant::QuantizedStore;
+use crate::embedding::Embedding;
+use crate::exec::pool::ThreadPool;
+use crate::kernels;
+use crate::linalg::mat::Mat;
+use crate::linalg::procrustes::orthogonal_procrustes;
+use crate::merge::align::extract_rows;
+use crate::text::vocab::Vocab;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// Engine-level knobs; the ANN build/search knobs live in [`AnnParams`].
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub ann: AnnParams,
+    /// Score candidates on the int8 store instead of the f32 rows
+    /// (~4× smaller resident vectors, ≤ ~1e-2 cosine error).
+    pub quantize: bool,
+    /// Worker threads answering batched queries.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            ann: AnnParams::default(),
+            quantize: true,
+            workers: 4,
+        }
+    }
+}
+
+/// One serving request, as carried by [`ServeEngine::batch`].
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// Top-k neighbors of `word` (itself excluded).
+    Nearest { word: String, k: usize },
+    /// 3CosAdd analogy a : b :: c : ? (a, b, c excluded).
+    Analogy {
+        a: String,
+        b: String,
+        c: String,
+        k: usize,
+    },
+}
+
+/// One ranked answer row.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Neighbor {
+    pub id: u32,
+    pub word: String,
+    pub score: f32,
+}
+
+/// Every query answers with a ranked list or a human-readable error.
+pub type QueryResult = Result<Vec<Neighbor>, String>;
+
+/// The immutable serving state shared (via `Arc`) by all worker threads.
+struct Inner {
+    emb: Embedding,
+    /// precomputed row norms for the exact-scan path
+    norms: Vec<f64>,
+    index: AnnIndex,
+    quant: Option<QuantizedStore>,
+    vocab: Option<Vocab>,
+    /// missing word id → vector reconstructed from sub-model projections.
+    /// Precomputed at startup (the missing set is exactly `!present`), so
+    /// the full f32 sub-models never stay resident and a missing-word
+    /// query is an O(1) lookup.
+    reconstructed: std::collections::HashMap<u32, Vec<f32>>,
+    cfg: ServeConfig,
+}
+
+pub struct ServeEngine {
+    inner: Arc<Inner>,
+    pool: ThreadPool,
+}
+
+impl ServeEngine {
+    /// Build the engine from a merged/saved embedding. `vocab` enables
+    /// querying by surface word; without it words are addressed as
+    /// numeric ids (`"17"` or `"#17"`).
+    pub fn new(emb: Embedding, vocab: Option<Vocab>, cfg: ServeConfig) -> Self {
+        Self::with_submodels(emb, vocab, cfg, Vec::new())
+    }
+
+    /// [`ServeEngine::new`] plus the trained sub-models, enabling
+    /// missing-word reconstruction. At startup one d×d Procrustes rotation
+    /// is fitted per sub-model (skipped when a sub-model shares fewer than
+    /// `dim` present words with the consensus — underdetermined), every
+    /// missing word's vector is reconstructed as the mean of its rotated
+    /// sub-model rows, and the sub-models are then dropped — only the
+    /// handful of reconstructed d-vectors stays resident.
+    pub fn with_submodels(
+        emb: Embedding,
+        vocab: Option<Vocab>,
+        cfg: ServeConfig,
+        submodels: Vec<Embedding>,
+    ) -> Self {
+        let mut index = AnnIndex::build(&emb, cfg.ann.clone());
+        let quant = cfg.quantize.then(|| index.quantize());
+        if quant.is_some() {
+            // the int8 store now carries all scoring; dropping the index's
+            // f32 rows is what actually delivers the ~4× memory cut
+            index.release_rows();
+        }
+        let norms = emb.row_norms();
+        let mut rotations: Vec<(usize, Mat)> = Vec::new();
+        for (mi, m) in submodels.iter().enumerate() {
+            assert_eq!(m.dim, emb.dim, "sub-model {mi} dim mismatch");
+            assert_eq!(m.vocab, emb.vocab, "sub-model {mi} vocab mismatch");
+            let shared: Vec<u32> = (0..emb.vocab as u32)
+                .filter(|&w| m.is_present(w) && emb.is_present(w))
+                .collect();
+            if shared.len() < emb.dim {
+                continue;
+            }
+            let a = extract_rows(m, &shared);
+            let b = extract_rows(&emb, &shared);
+            rotations.push((mi, orthogonal_procrustes(&a, &b)));
+        }
+        // precompute every missing word once — the missing set is exactly
+        // the !present rows of the merged embedding
+        let d = emb.dim;
+        let mut reconstructed = std::collections::HashMap::new();
+        for w in 0..emb.vocab as u32 {
+            if emb.is_present(w) {
+                continue;
+            }
+            let mut acc = vec![0.0f64; d];
+            let mut count = 0usize;
+            for (mi, rot) in &rotations {
+                let m = &submodels[*mi];
+                if !m.is_present(w) {
+                    continue;
+                }
+                // acc += row · W   (1×d times d×d)
+                for (i, &x) in m.row(w).iter().enumerate() {
+                    let xi = x as f64;
+                    for j in 0..d {
+                        acc[j] += xi * rot[(i, j)];
+                    }
+                }
+                count += 1;
+            }
+            if count > 0 {
+                let row: Vec<f32> =
+                    acc.iter().map(|v| (*v / count as f64) as f32).collect();
+                reconstructed.insert(w, row);
+            }
+        }
+        drop(submodels);
+        let workers = cfg.workers.max(1);
+        let inner = Inner {
+            emb,
+            norms,
+            index,
+            quant,
+            vocab,
+            reconstructed,
+            cfg,
+        };
+        Self {
+            inner: Arc::new(inner),
+            pool: ThreadPool::new(workers),
+        }
+    }
+
+    pub fn embedding(&self) -> &Embedding {
+        &self.inner.emb
+    }
+
+    pub fn index(&self) -> &AnnIndex {
+        &self.inner.index
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.inner.cfg
+    }
+
+    /// Resident bytes of the vector store actually used for scoring
+    /// (int8 codes + scales when quantization is on, f32 rows otherwise).
+    pub fn store_bytes(&self) -> usize {
+        match &self.inner.quant {
+            Some(q) => q.resident_bytes(),
+            None => self.inner.index.rows().len() * 4,
+        }
+    }
+
+    /// Top-k neighbors of one word (served from the reconstruction path
+    /// when the word is absent from the merged embedding).
+    pub fn nearest_words(&self, word: &str, k: usize) -> QueryResult {
+        self.inner.nearest(word, k, false)
+    }
+
+    /// 3CosAdd analogy a : b :: c : ?.
+    pub fn analogy(&self, a: &str, b: &str, c: &str, k: usize) -> QueryResult {
+        self.inner.analogy(a, b, c, k, false)
+    }
+
+    /// Answer one [`Query`] (the sequential reference for [`Self::batch`]).
+    pub fn answer(&self, q: &Query) -> QueryResult {
+        self.inner.answer(q)
+    }
+
+    /// Answer one [`Query`] with the exact O(V) scan instead of the ANN
+    /// index — the ground truth the approximate answers are measured
+    /// against (`dw2v serve --exact` prints both side by side).
+    pub fn exact_answer(&self, q: &Query) -> QueryResult {
+        self.inner.answer_impl(q, true)
+    }
+
+    /// Answer a batch of queries concurrently on the worker pool. Results
+    /// come back in request order and are bit-identical to calling
+    /// [`Self::answer`] sequentially — the shared state is immutable and
+    /// each index search is deterministic.
+    pub fn batch(&self, queries: &[Query]) -> Vec<QueryResult> {
+        let (tx, rx) = mpsc::channel();
+        for (i, q) in queries.iter().cloned().enumerate() {
+            let inner = Arc::clone(&self.inner);
+            let tx = tx.clone();
+            self.pool.execute(move || {
+                let _ = tx.send((i, inner.answer(&q)));
+            });
+        }
+        drop(tx);
+        let mut out: Vec<QueryResult> = vec![Err("unanswered".to_string()); queries.len()];
+        for (i, r) in rx {
+            out[i] = r;
+        }
+        out
+    }
+
+    /// ANN search for a raw query vector (ids are global word ids).
+    pub fn nearest_vector(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f32)> {
+        self.inner.search_vec(query, k, exclude)
+    }
+
+    /// Exact O(V) scan for the same query — the recall reference.
+    pub fn exact_nearest(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f64)> {
+        self.inner
+            .emb
+            .nearest_with_norms(query, k, exclude, &self.inner.norms)
+    }
+
+    /// An absent word's vector as reconstructed from the sub-model
+    /// projections at startup (errors when the word is present — use the
+    /// stored row — or when no rotated sub-model contained it).
+    pub fn reconstruct(&self, word: &str) -> Result<Vec<f32>, String> {
+        let id = self.inner.resolve(word)?;
+        if self.inner.emb.is_present(id) {
+            return Err(format!("'{word}' is present; reconstruction is for missing words"));
+        }
+        self.inner
+            .reconstruct(id)
+            .cloned()
+            .ok_or_else(|| format!("'{word}' absent from every rotated sub-model"))
+    }
+}
+
+impl Inner {
+    fn resolve(&self, word: &str) -> Result<u32, String> {
+        if let Some(v) = &self.vocab {
+            let id = v
+                .id(word)
+                .ok_or_else(|| format!("unknown word '{word}'"))?;
+            // the vocab file may be larger than the model (mismatched
+            // artifacts): reject instead of indexing out of bounds
+            if (id as usize) >= self.emb.vocab {
+                return Err(format!(
+                    "word '{word}' (id {id}) is outside the model's vocab of {}",
+                    self.emb.vocab
+                ));
+            }
+            return Ok(id);
+        }
+        word.trim_start_matches('#')
+            .parse::<u32>()
+            .ok()
+            .filter(|&id| (id as usize) < self.emb.vocab)
+            .ok_or_else(|| {
+                format!(
+                    "no vocab loaded; expected a word id < {}, got '{word}'",
+                    self.emb.vocab
+                )
+            })
+    }
+
+    fn word_of(&self, id: u32) -> String {
+        match &self.vocab {
+            // a vocab file smaller than the model must not panic while
+            // formatting an answer — fall back to id addressing for rows
+            // it doesn't cover
+            Some(v) if (id as usize) < v.len() => v.word(id).to_string(),
+            _ => format!("#{id}"),
+        }
+    }
+
+    /// The query row for a word: its stored row when present, else the
+    /// sub-model reconstruction.
+    fn query_vector(&self, word: &str) -> Result<(u32, Vec<f32>), String> {
+        let id = self.resolve(word)?;
+        if self.emb.is_present(id) {
+            return Ok((id, self.emb.row(id).to_vec()));
+        }
+        match self.reconstruct(id) {
+            Some(v) => Ok((id, v.clone())),
+            None => Err(format!(
+                "'{word}' is missing from the merged embedding and cannot be \
+                 reconstructed (no sub-models attached, or none contain it)"
+            )),
+        }
+    }
+
+    fn search_vec(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f32)> {
+        match &self.quant {
+            Some(store) => self.index.search_quantized(store, query, k, 0, exclude),
+            None => self.index.search(query, k, 0, exclude),
+        }
+    }
+
+    /// The exact-scan twin of [`Inner::search_vec`] (same cosine scores,
+    /// f64-accumulated then narrowed).
+    fn exact_hits(&self, query: &[f32], k: usize, exclude: &[u32]) -> Vec<(u32, f32)> {
+        self.emb
+            .nearest_with_norms(query, k, exclude, &self.norms)
+            .into_iter()
+            .map(|(w, s)| (w, s as f32))
+            .collect()
+    }
+
+    fn to_neighbors(&self, hits: Vec<(u32, f32)>) -> Vec<Neighbor> {
+        hits.into_iter()
+            .map(|(id, score)| Neighbor {
+                id,
+                word: self.word_of(id),
+                score,
+            })
+            .collect()
+    }
+
+    fn nearest(&self, word: &str, k: usize, exact: bool) -> QueryResult {
+        let (id, query) = self.query_vector(word)?;
+        let hits = if exact {
+            self.exact_hits(&query, k, &[id])
+        } else {
+            self.search_vec(&query, k, &[id])
+        };
+        Ok(self.to_neighbors(hits))
+    }
+
+    fn analogy(&self, a: &str, b: &str, c: &str, k: usize, exact: bool) -> QueryResult {
+        let (ia, va) = self.query_vector(a)?;
+        let (ib, vb) = self.query_vector(b)?;
+        let (ic, vc) = self.query_vector(c)?;
+        // 3CosAdd works on unit vectors: query = b̂ − â + ĉ
+        let ua = unit(&va);
+        let ub = unit(&vb);
+        let uc = unit(&vc);
+        let mut query = vec![0.0f32; self.emb.dim];
+        kernels::scaled_add(&mut query, &ub, &ua, -1.0);
+        kernels::axpy(1.0, &uc, &mut query);
+        let excl = [ia, ib, ic];
+        let hits = if exact {
+            self.exact_hits(&query, k, &excl)
+        } else {
+            self.search_vec(&query, k, &excl)
+        };
+        Ok(self.to_neighbors(hits))
+    }
+
+    fn answer(&self, q: &Query) -> QueryResult {
+        self.answer_impl(q, false)
+    }
+
+    fn answer_impl(&self, q: &Query, exact: bool) -> QueryResult {
+        match q {
+            Query::Nearest { word, k } => self.nearest(word, *k, exact),
+            Query::Analogy { a, b, c, k } => self.analogy(a, b, c, *k, exact),
+        }
+    }
+
+    /// The startup-precomputed reconstruction of a missing word — `None`
+    /// when no rotated sub-model had it.
+    fn reconstruct(&self, word: u32) -> Option<&Vec<f32>> {
+        self.reconstructed.get(&word)
+    }
+}
+
+/// L2-normalized copy of a row (zero rows pass through unchanged).
+fn unit(v: &[f32]) -> Vec<f32> {
+    let mut out = v.to_vec();
+    let norm = kernels::norm_sq(&out).sqrt();
+    if norm > 1e-12 {
+        kernels::scale(&mut out, 1.0 / norm);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_embedding(vocab: usize, dim: usize, seed: u64) -> Embedding {
+        let mut e = Embedding::zeros(vocab, dim);
+        let mut rng = Pcg64::new(seed);
+        for w in 0..vocab as u32 {
+            for v in e.row_mut(w) {
+                *v = rng.gen_gauss() as f32;
+            }
+        }
+        e
+    }
+
+    fn id_vocab(n: usize) -> Vocab {
+        Vocab::from_ordered((0..n).map(|i| (format!("w{i}"), 1u64)).collect())
+    }
+
+    #[test]
+    fn nearest_words_round_trips_through_vocab() {
+        let e = random_embedding(200, 16, 21);
+        let engine = ServeEngine::new(e, Some(id_vocab(200)), ServeConfig::default());
+        let res = engine.nearest_words("w5", 4).unwrap();
+        assert_eq!(res.len(), 4);
+        assert!(res.iter().all(|n| n.word != "w5"));
+        assert!(engine.nearest_words("nope", 4).is_err());
+    }
+
+    #[test]
+    fn id_addressing_without_vocab() {
+        let e = random_embedding(100, 8, 22);
+        let engine = ServeEngine::new(e, None, ServeConfig::default());
+        let res = engine.nearest_words("#7", 3).unwrap();
+        assert_eq!(res.len(), 3);
+        assert!(res.iter().all(|n| n.id != 7));
+        assert!(engine.nearest_words("w7", 3).is_err(), "surface words need a vocab");
+        assert!(engine.nearest_words("9999", 3).is_err(), "id out of range");
+    }
+
+    #[test]
+    fn undersized_vocab_renders_uncovered_ids_instead_of_panicking() {
+        // vocab covers only the first 30 of 120 rows: queries on covered
+        // words work, neighbors outside the vocab render as "#id"
+        let e = random_embedding(120, 8, 25);
+        let engine = ServeEngine::new(e, Some(id_vocab(30)), ServeConfig::default());
+        let res = engine.nearest_words("w3", 10).unwrap();
+        assert_eq!(res.len(), 10);
+        for n in &res {
+            if n.id < 30 {
+                assert_eq!(n.word, format!("w{}", n.id));
+            } else {
+                assert_eq!(n.word, format!("#{}", n.id));
+            }
+        }
+    }
+
+    #[test]
+    fn batch_is_identical_to_sequential() {
+        let e = random_embedding(300, 16, 23);
+        let engine = ServeEngine::new(e, Some(id_vocab(300)), ServeConfig::default());
+        let queries: Vec<Query> = (0..40)
+            .map(|i| {
+                if i % 3 == 0 {
+                    Query::Analogy {
+                        a: format!("w{i}"),
+                        b: format!("w{}", i + 1),
+                        c: format!("w{}", i + 2),
+                        k: 5,
+                    }
+                } else {
+                    Query::Nearest { word: format!("w{i}"), k: 5 }
+                }
+            })
+            .collect();
+        let sequential: Vec<QueryResult> = queries.iter().map(|q| engine.answer(q)).collect();
+        for _ in 0..3 {
+            assert_eq!(engine.batch(&queries), sequential);
+        }
+    }
+
+    #[test]
+    fn quantize_off_serves_from_f32_rows() {
+        let e = random_embedding(150, 16, 24);
+        let mut cfg = ServeConfig::default();
+        cfg.quantize = false;
+        let f32_engine = ServeEngine::new(e.clone(), None, cfg);
+        let q_engine = ServeEngine::new(e, None, ServeConfig::default());
+        assert!(q_engine.store_bytes() < f32_engine.store_bytes() / 3);
+        // both agree on the neighbor *sets* for a few probes
+        for w in ["#3", "#77", "#149"] {
+            let ids = |e: &ServeEngine| -> Vec<u32> {
+                e.nearest_words(w, 5).unwrap().iter().map(|n| n.id).collect()
+            };
+            let a = ids(&f32_engine);
+            let b = ids(&q_engine);
+            let inter = a.iter().filter(|id| b.contains(id)).count();
+            // int8 scoring may legitimately swap true near-ties at the k
+            // boundary; a majority overlap is the meaningful invariant
+            assert!(inter >= 3, "{w}: {a:?} vs {b:?}");
+        }
+    }
+}

@@ -1,0 +1,635 @@
+//! HNSW-style approximate nearest-neighbor index over normalized rows.
+//!
+//! The structure is the standard hierarchical navigable-small-world graph
+//! (Malkov & Yashunin): every present word becomes a node with a
+//! geometrically distributed top level (`mL = 1/ln(M)`), upper layers are
+//! sparse expressways descended greedily, and layer 0 holds the dense
+//! neighborhood graph searched with an `ef`-bounded best-first beam.
+//! Similarity is the cosine (rows are L2-normalized at build time, so one
+//! vectorized [`crate::kernels::dot`] per candidate), and *higher is
+//! better* throughout — the heaps are similarity-ordered, not
+//! distance-ordered.
+//!
+//! Determinism: level draws come from a seeded [`Pcg64`] stream, nodes are
+//! inserted in ascending word-id order, and every comparison breaks score
+//! ties by ascending node id (`Cand`'s `Ord`). Two builds from the same
+//! embedding + params produce the identical graph, and repeated searches
+//! the identical result list — the property the exact-vs-ANN recall tests
+//! in `rust/tests/serve_e2e.rs` pin down.
+//!
+//! Tiny vocabularies (≤ [`AnnParams::brute_force_below`]) skip graph
+//! construction entirely and serve exact scans over the same normalized
+//! row store — at that scale the O(V) scan is both faster and trivially
+//! recall-1.0.
+//!
+//! Scoring is pluggable per search: [`AnnIndex::search`] runs on the f32
+//! rows, [`AnnIndex::search_quantized`] on an int8
+//! [`QuantizedStore`](super::quant::QuantizedStore) built over the same
+//! compact node space — the graph is shared, only the distance kernel
+//! changes.
+
+use super::quant::QuantizedStore;
+use crate::embedding::Embedding;
+use crate::kernels;
+use crate::util::rng::Pcg64;
+use std::cell::RefCell;
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Hard cap on node levels — with mL = 1/ln(16), P(level ≥ 16) < 1e-19.
+const MAX_LEVEL: usize = 16;
+
+thread_local! {
+    /// Reusable visited-stamp scratch for [`AnnIndex::search_layer`]:
+    /// `(stamps, epoch)` where `stamps[node] == epoch` means "visited in
+    /// the current search". Bumping the epoch invalidates the whole array
+    /// in O(1), so per-query work is proportional to the nodes actually
+    /// touched, not to V — allocating and zeroing an O(V) bitmap per
+    /// query would reintroduce the linear cost the index exists to avoid.
+    /// Per-thread, shared by all indexes (searches never nest).
+    static VISITED: RefCell<(Vec<u64>, u64)> = const { RefCell::new((Vec::new(), 0)) };
+}
+
+/// Tunable build/search knobs of the [`AnnIndex`].
+#[derive(Clone, Debug)]
+pub struct AnnParams {
+    /// Target out-degree per node and layer (layer 0 allows 2·M).
+    pub m: usize,
+    /// Beam width while inserting nodes (build-time graph quality).
+    pub ef_construction: usize,
+    /// Default beam width at query time; larger = higher recall, slower.
+    pub ef_search: usize,
+    /// At or below this many present words, serve exact scans instead of
+    /// building a graph.
+    pub brute_force_below: usize,
+    /// Seed of the level-draw RNG stream (build determinism).
+    pub seed: u64,
+}
+
+impl Default for AnnParams {
+    fn default() -> Self {
+        Self {
+            m: 16,
+            ef_construction: 100,
+            ef_search: 64,
+            brute_force_below: 128,
+            seed: 0x5EA7,
+        }
+    }
+}
+
+/// A scored candidate; `Ord` is score-descending with ascending-id
+/// tie-break so heap pops (and therefore whole searches) are deterministic.
+#[derive(Copy, Clone, Debug, PartialEq)]
+struct Cand {
+    score: f32,
+    idx: u32,
+}
+
+impl Eq for Cand {}
+
+impl Ord for Cand {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.score
+            .total_cmp(&other.score)
+            .then_with(|| other.idx.cmp(&self.idx))
+    }
+}
+
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The built index: compact node space over the present words, normalized
+/// row store, and the layered neighbor lists.
+pub struct AnnIndex {
+    params: AnnParams,
+    dim: usize,
+    /// compact node index → global word id (ascending)
+    words: Vec<u32>,
+    /// n × dim, L2-normalized copies of the present rows
+    rows: Vec<f32>,
+    /// `neighbors[node][level]` → adjacent nodes; a node owns
+    /// `its_level + 1` layers
+    neighbors: Vec<Vec<Vec<u32>>>,
+    entry: u32,
+    max_level: usize,
+    brute: bool,
+}
+
+impl AnnIndex {
+    /// Build the index over every present row of `emb`. Deterministic for
+    /// fixed `(emb, params)`. Degenerate knobs are clamped to sane minima
+    /// (`m ≥ 2`, `ef_construction ≥ m`, `ef_search ≥ 1`) — an `m` of 0
+    /// would otherwise build an edgeless graph that silently answers every
+    /// query with just the entry point.
+    pub fn build(emb: &Embedding, mut params: AnnParams) -> Self {
+        params.m = params.m.max(2);
+        params.ef_construction = params.ef_construction.max(params.m);
+        params.ef_search = params.ef_search.max(1);
+        let dim = emb.dim;
+        let words: Vec<u32> = (0..emb.vocab as u32).filter(|&w| emb.is_present(w)).collect();
+        let n = words.len();
+        let mut rows = vec![0.0f32; n * dim];
+        for (i, &w) in words.iter().enumerate() {
+            let dst = &mut rows[i * dim..(i + 1) * dim];
+            dst.copy_from_slice(emb.row(w));
+            let norm = kernels::norm_sq(dst).sqrt();
+            if norm > 1e-12 {
+                kernels::scale(dst, 1.0 / norm);
+            }
+        }
+        let brute = n <= params.brute_force_below;
+        let mut index = Self {
+            params,
+            dim,
+            words,
+            rows,
+            neighbors: Vec::new(),
+            entry: 0,
+            max_level: 0,
+            brute,
+        };
+        if !index.brute {
+            let ml = 1.0 / (index.params.m as f64).ln();
+            let mut rng = Pcg64::new_stream(index.params.seed, 0x484E_5357); // "HNSW"
+            index.neighbors.reserve(n);
+            for node in 0..n as u32 {
+                let draw = rng.gen_f64().max(1e-12);
+                let level = ((-draw.ln() * ml) as usize).min(MAX_LEVEL);
+                index.insert(node, level);
+            }
+        }
+        index
+    }
+
+    /// Number of indexed (present) words.
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// True when the tiny-vocabulary exact-scan fallback is active.
+    pub fn is_brute_force(&self) -> bool {
+        self.brute
+    }
+
+    pub fn params(&self) -> &AnnParams {
+        &self.params
+    }
+
+    /// Global word ids in compact node order.
+    pub fn words(&self) -> &[u32] {
+        &self.words
+    }
+
+    /// The normalized row store (compact node order, row-major).
+    pub fn rows(&self) -> &[f32] {
+        &self.rows
+    }
+
+    /// Int8-quantize the index's own row store; node indices line up, so
+    /// the result plugs straight into [`AnnIndex::search_quantized`].
+    pub fn quantize(&self) -> QuantizedStore {
+        QuantizedStore::from_rows(&self.rows, self.words.len(), self.dim)
+    }
+
+    /// Drop the f32 row store once an int8 store (from
+    /// [`AnnIndex::quantize`]) has taken over scoring — this is what
+    /// actually realizes the ~4× resident-memory cut; keeping both stores
+    /// would make quantization a pure slowdown. Afterwards only
+    /// [`AnnIndex::search_quantized`] works; [`AnnIndex::search`] asserts.
+    pub fn release_rows(&mut self) {
+        self.rows = Vec::new();
+    }
+
+    /// False after [`AnnIndex::release_rows`] on a non-empty index.
+    pub fn has_rows(&self) -> bool {
+        !self.rows.is_empty() || self.words.is_empty()
+    }
+
+    /// Top-`k` most-cosine-similar words to `query` (any scale — it is
+    /// normalized internally), excluding the global ids in `exclude`.
+    /// `ef = 0` means "use `params.ef_search`".
+    pub fn search(&self, query: &[f32], k: usize, ef: usize, exclude: &[u32]) -> Vec<(u32, f32)> {
+        assert!(
+            self.has_rows(),
+            "f32 rows were released (release_rows); use search_quantized"
+        );
+        let qn = self.normalize_query(query);
+        self.search_with(&|i| self.score_node(i, &qn), k, ef, exclude)
+    }
+
+    /// [`AnnIndex::search`] but scoring through an int8 store built by
+    /// [`AnnIndex::quantize`] — same graph walk, quantized distance kernel.
+    pub fn search_quantized(
+        &self,
+        store: &QuantizedStore,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        exclude: &[u32],
+    ) -> Vec<(u32, f32)> {
+        debug_assert_eq!(store.len(), self.words.len());
+        let qn = self.normalize_query(query);
+        self.search_with(&|i| store.dot(i as usize, &qn), k, ef, exclude)
+    }
+
+    /// Mean recall@k versus the exact scan, averaged over `queries` (each
+    /// a present global word id queried by its own row, self-excluded).
+    pub fn measure_recall(
+        &self,
+        emb: &Embedding,
+        queries: &[u32],
+        k: usize,
+        ef: usize,
+    ) -> f64 {
+        let norms = emb.row_norms();
+        let mut total = 0.0;
+        let mut used = 0usize;
+        for &q in queries {
+            if !emb.is_present(q) {
+                continue;
+            }
+            let exact = emb.nearest_with_norms(emb.row(q), k, &[q], &norms);
+            if exact.is_empty() {
+                continue;
+            }
+            let approx = self.search(emb.row(q), k, ef, &[q]);
+            let exact_ids: std::collections::HashSet<u32> =
+                exact.iter().map(|(w, _)| *w).collect();
+            let hits = approx.iter().filter(|(w, _)| exact_ids.contains(w)).count();
+            total += hits as f64 / exact.len() as f64;
+            used += 1;
+        }
+        if used == 0 {
+            0.0
+        } else {
+            total / used as f64
+        }
+    }
+
+    // ---------------------------------------------------------- internals ----
+
+    fn normalize_query(&self, query: &[f32]) -> Vec<f32> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let mut qn = query.to_vec();
+        let norm = kernels::norm_sq(&qn).sqrt();
+        if norm > 1e-12 {
+            kernels::scale(&mut qn, 1.0 / norm);
+        }
+        qn
+    }
+
+    #[inline]
+    fn node_row(&self, i: u32) -> &[f32] {
+        &self.rows[i as usize * self.dim..(i as usize + 1) * self.dim]
+    }
+
+    #[inline]
+    fn score_node(&self, i: u32, query: &[f32]) -> f32 {
+        kernels::dot(self.node_row(i), query)
+    }
+
+    fn max_conn(&self, level: usize) -> usize {
+        if level == 0 {
+            self.params.m * 2
+        } else {
+            self.params.m
+        }
+    }
+
+    /// Insert `node` (compact index, == `self.neighbors.len()`) at `level`.
+    fn insert(&mut self, node: u32, level: usize) {
+        debug_assert_eq!(node as usize, self.neighbors.len());
+        self.neighbors.push(vec![Vec::new(); level + 1]);
+        if node == 0 {
+            self.entry = 0;
+            self.max_level = level;
+            return;
+        }
+        let query: Vec<f32> = self.node_row(node).to_vec();
+        let mut ep = self.entry;
+        // greedy descent through layers above the new node's level
+        if level < self.max_level {
+            for l in ((level + 1)..=self.max_level).rev() {
+                ep = self.greedy_with(&|i| self.score_node(i, &query), ep, l);
+            }
+        }
+        // connect at every shared layer, top-down
+        for l in (0..=level.min(self.max_level)).rev() {
+            // the scorer borrows `self` only for this statement, so the
+            // neighbor-list mutations below stay legal
+            let cands = self.search_layer(
+                &|i| self.score_node(i, &query),
+                &[ep],
+                l,
+                self.params.ef_construction,
+            );
+            let selected: Vec<u32> =
+                cands.iter().take(self.params.m).map(|c| c.idx).collect();
+            if let Some(best) = cands.first() {
+                ep = best.idx;
+            }
+            let max_conn = self.max_conn(l);
+            self.neighbors[node as usize][l].clone_from(&selected);
+            for &nb in &selected {
+                self.neighbors[nb as usize][l].push(node);
+                if self.neighbors[nb as usize][l].len() > max_conn {
+                    self.prune(nb, l, max_conn);
+                }
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry = node;
+        }
+    }
+
+    /// Shrink an over-full neighbor list to the `max_conn` most similar
+    /// (to the owning node's row), deterministically.
+    fn prune(&mut self, node: u32, level: usize, max_conn: usize) {
+        let mut scored: Vec<Cand> = self.neighbors[node as usize][level]
+            .iter()
+            .map(|&j| Cand {
+                score: kernels::dot(
+                    &self.rows[node as usize * self.dim..(node as usize + 1) * self.dim],
+                    &self.rows[j as usize * self.dim..(j as usize + 1) * self.dim],
+                ),
+                idx: j,
+            })
+            .collect();
+        scored.sort_by(|a, b| b.cmp(a));
+        scored.truncate(max_conn);
+        self.neighbors[node as usize][level] = scored.into_iter().map(|c| c.idx).collect();
+    }
+
+    /// Greedy hill-climb at one (sparse) layer: move to the best-scoring
+    /// neighbor until no neighbor improves.
+    fn greedy_with<S: Fn(u32) -> f32>(&self, score: &S, start: u32, level: usize) -> u32 {
+        let mut cur = start;
+        let mut cur_score = score(cur);
+        loop {
+            let mut best = cur;
+            let mut best_score = cur_score;
+            for &nb in &self.neighbors[cur as usize][level] {
+                let s = score(nb);
+                if s > best_score || (s == best_score && nb < best) {
+                    best = nb;
+                    best_score = s;
+                }
+            }
+            if best == cur {
+                return cur;
+            }
+            cur = best;
+            cur_score = best_score;
+        }
+    }
+
+    /// `ef`-bounded best-first beam at one layer; returns up to `ef`
+    /// candidates sorted score-descending (ties by ascending id).
+    fn search_layer<S: Fn(u32) -> f32>(
+        &self,
+        score: &S,
+        entries: &[u32],
+        level: usize,
+        ef: usize,
+    ) -> Vec<Cand> {
+        let ef = ef.max(1);
+        VISITED.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            if scratch.0.len() < self.words.len() {
+                let n = self.words.len();
+                scratch.0.resize(n, 0);
+            }
+            scratch.1 += 1;
+            let epoch = scratch.1;
+            let stamps = &mut scratch.0;
+            let mut frontier: BinaryHeap<Cand> = BinaryHeap::new();
+            let mut results: BinaryHeap<Reverse<Cand>> = BinaryHeap::new();
+            for &e in entries {
+                if std::mem::replace(&mut stamps[e as usize], epoch) == epoch {
+                    continue;
+                }
+                let c = Cand { score: score(e), idx: e };
+                frontier.push(c);
+                results.push(Reverse(c));
+                if results.len() > ef {
+                    results.pop();
+                }
+            }
+            while let Some(c) = frontier.pop() {
+                let worst = results.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
+                if results.len() >= ef && c.score < worst {
+                    break; // no frontier candidate can improve the result set
+                }
+                for &nb in &self.neighbors[c.idx as usize][level] {
+                    if std::mem::replace(&mut stamps[nb as usize], epoch) == epoch {
+                        continue;
+                    }
+                    let s = score(nb);
+                    let worst =
+                        results.peek().map(|r| r.0.score).unwrap_or(f32::NEG_INFINITY);
+                    if results.len() < ef || s > worst {
+                        let cand = Cand { score: s, idx: nb };
+                        frontier.push(cand);
+                        results.push(Reverse(cand));
+                        if results.len() > ef {
+                            results.pop();
+                        }
+                    }
+                }
+            }
+            let mut out: Vec<Cand> = results.into_iter().map(|r| r.0).collect();
+            out.sort_by(|a, b| b.cmp(a));
+            out
+        })
+    }
+
+    /// Shared top-k driver over an arbitrary node scorer.
+    fn search_with<S: Fn(u32) -> f32>(
+        &self,
+        score: &S,
+        k: usize,
+        ef: usize,
+        exclude: &[u32],
+    ) -> Vec<(u32, f32)> {
+        if self.words.is_empty() || k == 0 {
+            return Vec::new();
+        }
+        let mut excl = exclude.to_vec();
+        excl.sort_unstable();
+        let keep = |idx: u32| excl.binary_search(&self.words[idx as usize]).is_err();
+        if self.brute {
+            let mut all: Vec<Cand> = (0..self.words.len() as u32)
+                .filter(|&i| keep(i))
+                .map(|i| Cand { score: score(i), idx: i })
+                .collect();
+            all.sort_by(|a, b| b.cmp(a));
+            all.truncate(k);
+            return all
+                .into_iter()
+                .map(|c| (self.words[c.idx as usize], c.score))
+                .collect();
+        }
+        // ef = 0 means the built default; any explicit value — larger or
+        // smaller — is honored (recall-vs-ef sweeps depend on this).
+        // Excluded nodes stay traversable; widen the beam so the top-k
+        // survive the final filter.
+        let ef = if ef == 0 { self.params.ef_search } else { ef };
+        let ef = ef.max(k + excl.len());
+        let mut ep = self.entry;
+        for l in (1..=self.max_level).rev() {
+            ep = self.greedy_with(score, ep, l);
+        }
+        let cands = self.search_layer(score, &[ep], 0, ef);
+        cands
+            .into_iter()
+            .filter(|c| keep(c.idx))
+            .take(k)
+            .map(|c| (self.words[c.idx as usize], c.score))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_embedding(vocab: usize, dim: usize, seed: u64) -> Embedding {
+        let mut e = Embedding::zeros(vocab, dim);
+        let mut rng = Pcg64::new(seed);
+        for w in 0..vocab as u32 {
+            for v in e.row_mut(w) {
+                *v = rng.gen_gauss() as f32;
+            }
+        }
+        e
+    }
+
+    #[test]
+    fn brute_force_fallback_matches_exact_scan() {
+        let e = random_embedding(60, 12, 3);
+        let idx = AnnIndex::build(&e, AnnParams::default());
+        assert!(idx.is_brute_force());
+        let norms = e.row_norms();
+        for q in [0u32, 17, 59] {
+            let exact = e.nearest_with_norms(e.row(q), 5, &[q], &norms);
+            let approx = idx.search(e.row(q), 5, 0, &[q]);
+            assert_eq!(approx.len(), 5);
+            for ((we, _), (wa, _)) in exact.iter().zip(&approx) {
+                assert_eq!(we, wa, "query {q}");
+            }
+        }
+    }
+
+    #[test]
+    fn graph_search_has_high_recall_on_random_rows() {
+        let e = random_embedding(600, 24, 5);
+        let idx = AnnIndex::build(&e, AnnParams::default());
+        assert!(!idx.is_brute_force());
+        let queries: Vec<u32> = (0..60).map(|i| i * 10).collect();
+        let recall = idx.measure_recall(&e, &queries, 10, 0);
+        assert!(recall >= 0.9, "recall@10 = {recall}");
+    }
+
+    #[test]
+    fn build_and_search_are_deterministic() {
+        let e = random_embedding(400, 16, 7);
+        let a = AnnIndex::build(&e, AnnParams::default());
+        let b = AnnIndex::build(&e, AnnParams::default());
+        assert_eq!(a.neighbors, b.neighbors);
+        assert_eq!(a.entry, b.entry);
+        for q in [1u32, 100, 399] {
+            assert_eq!(
+                a.search(e.row(q), 8, 0, &[q]),
+                b.search(e.row(q), 8, 0, &[q])
+            );
+        }
+    }
+
+    #[test]
+    fn respects_exclusions_and_absent_words() {
+        let mut e = random_embedding(300, 16, 9);
+        e.present[42] = false;
+        let idx = AnnIndex::build(&e, AnnParams::default());
+        assert_eq!(idx.len(), 299);
+        let res = idx.search(e.row(7), 10, 0, &[7, 8, 9]);
+        assert_eq!(res.len(), 10);
+        for (w, _) in &res {
+            assert!(![7u32, 8, 9, 42].contains(w), "{w} should be excluded");
+        }
+        // scores come back sorted descending
+        for pair in res.windows(2) {
+            assert!(pair[0].1 >= pair[1].1);
+        }
+    }
+
+    #[test]
+    fn quantized_search_agrees_with_f32_search() {
+        let e = random_embedding(500, 32, 11);
+        let idx = AnnIndex::build(&e, AnnParams::default());
+        let store = idx.quantize();
+        let mut overlap = 0usize;
+        let mut total = 0usize;
+        for q in (0..500u32).step_by(25) {
+            let f = idx.search(e.row(q), 10, 0, &[q]);
+            let qz = idx.search_quantized(&store, e.row(q), 10, 0, &[q]);
+            let fs: std::collections::HashSet<u32> = f.iter().map(|(w, _)| *w).collect();
+            overlap += qz.iter().filter(|(w, _)| fs.contains(w)).count();
+            total += f.len();
+        }
+        let agreement = overlap as f64 / total as f64;
+        assert!(agreement >= 0.8, "quantized/f32 top-10 agreement {agreement}");
+    }
+
+    #[test]
+    fn degenerate_params_are_clamped_and_still_answer() {
+        let e = random_embedding(300, 16, 15);
+        let mut p = AnnParams::default();
+        p.m = 0; // would be an edgeless graph without the clamp
+        p.ef_construction = 0;
+        p.brute_force_below = 0;
+        let idx = AnnIndex::build(&e, p);
+        assert_eq!(idx.params().m, 2);
+        assert!(idx.params().ef_construction >= 2);
+        let res = idx.search(e.row(5), 8, 0, &[5]);
+        assert_eq!(res.len(), 8);
+        let ids: std::collections::HashSet<u32> = res.iter().map(|(w, _)| *w).collect();
+        assert_eq!(ids.len(), 8, "results must be distinct nodes");
+    }
+
+    #[test]
+    fn released_rows_still_serve_quantized_searches() {
+        let e = random_embedding(400, 16, 17);
+        let mut idx = AnnIndex::build(&e, AnnParams::default());
+        let store = idx.quantize();
+        let before = idx.search_quantized(&store, e.row(9), 5, 0, &[9]);
+        idx.release_rows();
+        assert!(!idx.has_rows());
+        let after = idx.search_quantized(&store, e.row(9), 5, 0, &[9]);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn zero_k_and_empty_index_are_safe() {
+        let e = random_embedding(50, 8, 13);
+        let idx = AnnIndex::build(&e, AnnParams::default());
+        assert!(idx.search(e.row(0), 0, 0, &[]).is_empty());
+        let mut none = Embedding::zeros(4, 8);
+        none.present = vec![false; 4];
+        let empty = AnnIndex::build(&none, AnnParams::default());
+        assert!(empty.is_empty());
+        assert!(empty.search(&[0.0; 8], 5, 0, &[]).is_empty());
+    }
+}

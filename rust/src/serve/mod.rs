@@ -1,0 +1,32 @@
+//! The embedding-serving layer: what happens *after* training.
+//!
+//! The paper's end product is a merged embedding meant to answer
+//! similarity, analogy and missing-word queries at interactive rates over
+//! huge vocabularies; a brute-force `O(V)` scan per query cannot carry
+//! that. This subsystem is the read-optimized path:
+//!
+//! * [`index`] — an HNSW-style approximate nearest-neighbor graph over the
+//!   normalized rows (deterministic seeded build, tunable `M` /
+//!   `ef_construction` / `ef_search`, exact-scan fallback for tiny
+//!   vocabularies, recall measured against the exact scan);
+//! * [`quant`] — int8 scalar quantization of the row store (per-row scale,
+//!   the widening [`crate::kernels::dot_i8_dequant`] kernel on the
+//!   distance hot path, ~4× smaller resident vectors);
+//! * [`engine`] — the [`ServeEngine`](engine::ServeEngine) tying both
+//!   together behind an `Arc`: word/analogy/batched queries answered
+//!   concurrently on an [`exec::pool`](crate::exec::pool) worker pool, and
+//!   missing words served from reconstructions precomputed at startup
+//!   through per-sub-model Procrustes rotations (the merge-phase linalg,
+//!   reused — the sub-models themselves are not kept resident).
+//!
+//! Entry points: `dw2v serve` (CLI), `examples/serve_queries.rs`
+//! (library usage), `rust/benches/serve_qps.rs` (exact vs ANN vs ANN+int8
+//! throughput/recall), `rust/tests/serve_e2e.rs` (acceptance suite).
+
+pub mod engine;
+pub mod index;
+pub mod quant;
+
+pub use engine::{Neighbor, Query, QueryResult, ServeConfig, ServeEngine};
+pub use index::{AnnIndex, AnnParams};
+pub use quant::QuantizedStore;

@@ -1,0 +1,161 @@
+//! Int8 scalar quantization of the serving row store.
+//!
+//! Each row is quantized symmetrically against its own max-|v| — one f32
+//! scale per row, `code = round(v / scale)` clamped to ±127 — which cuts
+//! resident memory for the vectors ~4× (4 bytes/element → 1 byte + the
+//! amortized per-row scale). The distance hot path never materializes the
+//! dequantized row: [`QuantizedStore::dot`] runs the widening
+//! [`crate::kernels::dot_i8_dequant`] kernel over the codes and applies
+//! the scale once per row.
+//!
+//! For the L2-normalized rows the ANN index serves (|v| ≤ 1), the
+//! worst-case per-element rounding error is `scale/2 = max|v|/254`, so
+//! quantized cosine scores stay within ~1e-2 of their f32 values — tight
+//! enough that top-k neighbor sets are essentially unchanged (the
+//! `serve_e2e` suite asserts a 2e-2 bound and the `serve_qps` bench
+//! reports the measured recall cost).
+
+use crate::kernels;
+
+/// Read-optimized int8 row store: `n` rows of `dim` codes + one scale each.
+#[derive(Clone, Debug)]
+pub struct QuantizedStore {
+    n: usize,
+    dim: usize,
+    codes: Vec<i8>,
+    scales: Vec<f32>,
+}
+
+impl QuantizedStore {
+    /// Quantize `n` contiguous row-major `dim`-wide f32 rows.
+    pub fn from_rows(rows: &[f32], n: usize, dim: usize) -> Self {
+        assert_eq!(rows.len(), n * dim);
+        let mut codes = vec![0i8; n * dim];
+        let mut scales = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &rows[i * dim..(i + 1) * dim];
+            let max_abs = row.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            if max_abs == 0.0 {
+                continue; // all-zero row: scale 0, codes stay 0
+            }
+            let scale = max_abs / 127.0;
+            scales[i] = scale;
+            let out = &mut codes[i * dim..(i + 1) * dim];
+            for (c, &v) in out.iter_mut().zip(row) {
+                *c = (v / scale).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+        Self {
+            n,
+            dim,
+            codes,
+            scales,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// ⟨row i, query⟩ computed on the int8 codes (one scale multiply per
+    /// row) — the quantized serving hot path.
+    #[inline]
+    pub fn dot(&self, i: usize, query: &[f32]) -> f32 {
+        let codes = &self.codes[i * self.dim..(i + 1) * self.dim];
+        kernels::dot_i8_dequant(codes, query) * self.scales[i]
+    }
+
+    /// Materialize row `i` back to f32 (result return path, not scoring).
+    pub fn dequantize(&self, i: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let codes = &self.codes[i * self.dim..(i + 1) * self.dim];
+        let s = self.scales[i];
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = c as f32 * s;
+        }
+    }
+
+    /// Resident bytes of the quantized store (codes + scales).
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn unit_rows(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed);
+        let mut rows = vec![0.0f32; n * dim];
+        for r in rows.chunks_exact_mut(dim) {
+            for v in r.iter_mut() {
+                *v = rng.gen_gauss() as f32;
+            }
+            let norm = kernels::norm_sq(r).sqrt();
+            kernels::scale(r, 1.0 / norm.max(1e-12));
+        }
+        rows
+    }
+
+    #[test]
+    fn quantized_dot_tracks_f32_dot() {
+        let (n, dim) = (40, 48);
+        let rows = unit_rows(n, dim, 7);
+        let store = QuantizedStore::from_rows(&rows, n, dim);
+        for i in 0..n {
+            for j in 0..n {
+                let q = &rows[j * dim..(j + 1) * dim];
+                let exact = kernels::dot(&rows[i * dim..(i + 1) * dim], q);
+                let approx = store.dot(i, q);
+                assert!(
+                    (exact - approx).abs() < 2e-2,
+                    "dot({i},{j}): exact {exact} vs quantized {approx}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dequantize_reconstructs_rows_closely() {
+        let (n, dim) = (10, 32);
+        let rows = unit_rows(n, dim, 9);
+        let store = QuantizedStore::from_rows(&rows, n, dim);
+        let mut back = vec![0.0f32; dim];
+        for i in 0..n {
+            store.dequantize(i, &mut back);
+            for (a, b) in rows[i * dim..(i + 1) * dim].iter().zip(&back) {
+                // per-element error bound: scale/2 with scale = max|v|/127
+                assert!((a - b).abs() <= 1.0 / 254.0 + 1e-6, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_survive() {
+        let rows = vec![0.0f32; 3 * 8];
+        let store = QuantizedStore::from_rows(&rows, 3, 8);
+        assert_eq!(store.dot(1, &[1.0; 8]), 0.0);
+        let mut back = [9.0f32; 8];
+        store.dequantize(2, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn memory_is_roughly_quartered() {
+        let (n, dim) = (100, 64);
+        let rows = unit_rows(n, dim, 11);
+        let store = QuantizedStore::from_rows(&rows, n, dim);
+        let f32_bytes = n * dim * 4;
+        assert!(store.resident_bytes() < f32_bytes / 3);
+    }
+}

@@ -1,0 +1,200 @@
+//! Serving-layer acceptance suite (ISSUE 3): on a generated corpus +
+//! trained model,
+//!   * ANN recall@10 ≥ 0.9 vs the exact scan at the default `ef_search`,
+//!   * int8-quantized cosine within 2e-2 of f32,
+//!   * batched concurrent queries identical to sequential answers,
+//!   * missing-word reconstruction yields a finite vector and sane
+//!     neighbors.
+//!
+//! Everything runs on the native backend with no artifacts or XLA.
+
+use dw2v::embedding::Embedding;
+use dw2v::kernels;
+use dw2v::linalg::mat::Mat;
+use dw2v::linalg::svd::svd;
+use dw2v::serve::{AnnIndex, AnnParams, Query, QueryResult, ServeConfig, ServeEngine};
+use dw2v::sgns::config::SgnsConfig;
+use dw2v::sgns::hogwild;
+use dw2v::util::config::ExperimentConfig;
+use dw2v::util::rng::Pcg64;
+use dw2v::world::build_world;
+
+/// Train one small-but-real model on a generated corpus — cached in a
+/// `OnceLock` so the recall / quantization / batching tests share one
+/// training run per process.
+fn trained_model() -> Embedding {
+    static MODEL: std::sync::OnceLock<Embedding> = std::sync::OnceLock::new();
+    MODEL.get_or_init(build_trained_model).clone()
+}
+
+fn build_trained_model() -> Embedding {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 2500;
+    cfg.vocab = 600;
+    cfg.clusters = 12;
+    cfg.truth_dim = 8;
+    cfg.seed = 41;
+    let world = build_world(&cfg);
+    let scfg = SgnsConfig {
+        dim: 16,
+        epochs: 2,
+        ..Default::default()
+    };
+    let (emb, _) = hogwild::train(&world.corpus, &world.vocab, &scfg, 2, 41);
+    assert!(emb.vocab > 128, "need the graph path, not the brute fallback");
+    assert!(emb.data.iter().all(|v| v.is_finite()));
+    emb
+}
+
+#[test]
+fn ann_recall_at_10_meets_bar_at_default_ef() {
+    let emb = trained_model();
+    let index = AnnIndex::build(&emb, AnnParams::default());
+    assert!(!index.is_brute_force());
+    // every 7th word as a query, self-excluded, default ef_search
+    let queries: Vec<u32> = (0..emb.vocab as u32).step_by(7).collect();
+    let recall = index.measure_recall(&emb, &queries, 10, 0);
+    assert!(
+        recall >= 0.9,
+        "ANN recall@10 = {recall} over {} queries",
+        queries.len()
+    );
+}
+
+#[test]
+fn int8_cosine_stays_within_2e2_of_f32() {
+    let emb = trained_model();
+    let index = AnnIndex::build(&emb, AnnParams::default());
+    let store = index.quantize();
+    let n = index.len();
+    let dim = index.dim();
+    let rows = index.rows(); // unit rows → dot == cosine
+    let mut rng = Pcg64::new(99);
+    let mut worst = 0.0f32;
+    for _ in 0..2000 {
+        let i = rng.gen_range_usize(n);
+        let j = rng.gen_range_usize(n);
+        let q = &rows[j * dim..(j + 1) * dim];
+        let exact = kernels::dot(&rows[i * dim..(i + 1) * dim], q);
+        let approx = store.dot(i, q);
+        worst = worst.max((exact - approx).abs());
+    }
+    assert!(worst < 2e-2, "worst |cos_f32 − cos_int8| = {worst}");
+}
+
+#[test]
+fn batched_concurrent_queries_match_sequential() {
+    let emb = trained_model();
+    let engine = ServeEngine::new(emb, None, ServeConfig::default());
+    let mut queries = Vec::new();
+    for i in (0..500u32).step_by(9) {
+        queries.push(Query::Nearest {
+            word: format!("#{i}"),
+            k: 10,
+        });
+        queries.push(Query::Analogy {
+            a: format!("#{i}"),
+            b: format!("#{}", i + 1),
+            c: format!("#{}", i + 2),
+            k: 5,
+        });
+    }
+    // one deliberately failing query: errors must batch deterministically too
+    queries.push(Query::Nearest {
+        word: "#999999".to_string(),
+        k: 3,
+    });
+    let sequential: Vec<QueryResult> = queries.iter().map(|q| engine.answer(q)).collect();
+    assert!(sequential.last().unwrap().is_err());
+    for round in 0..3 {
+        let batched = engine.batch(&queries);
+        assert_eq!(batched, sequential, "round {round}");
+    }
+}
+
+/// Random d×d rotation via SVD of a gaussian matrix.
+fn random_rotation(d: usize, rng: &mut Pcg64) -> Mat {
+    let a = Mat::from_vec(d, d, (0..d * d).map(|_| rng.gen_gauss()).collect());
+    let s = svd(&a);
+    s.u.matmul(&s.v.transpose())
+}
+
+#[test]
+fn missing_word_is_reconstructed_with_sane_neighbors() {
+    // consensus embedding with clear cluster structure
+    let (vocab, dim) = (240, 12);
+    let mut rng = Pcg64::new(7);
+    let mut truth = Embedding::zeros(vocab, dim);
+    for w in 0..vocab as u32 {
+        for v in truth.row_mut(w) {
+            *v = rng.gen_gauss() as f32;
+        }
+    }
+    // sub-models: rotated copies of the truth (what async training +
+    // per-model coordinate frames produce)
+    let truth_mat = Mat::from_f32(vocab, dim, &truth.data);
+    let submodels: Vec<Embedding> = (0..3)
+        .map(|_| {
+            let rot = random_rotation(dim, &mut rng);
+            Embedding::from_rows(vocab, dim, truth_mat.matmul(&rot).to_f32())
+        })
+        .collect();
+    // the merged model lost a handful of words entirely
+    let missing = [5u32, 77, 191];
+    let mut merged = truth.clone();
+    for &w in &missing {
+        merged.present[w as usize] = false;
+        merged.row_mut(w).fill(0.0);
+    }
+    let engine = ServeEngine::with_submodels(
+        merged,
+        None,
+        ServeConfig::default(),
+        submodels,
+    );
+
+    let norms = truth.row_norms();
+    for &w in &missing {
+        // reconstruction is finite and close to the true (never-stored) row
+        let rec = engine.reconstruct(&format!("#{w}")).unwrap();
+        assert_eq!(rec.len(), dim);
+        assert!(rec.iter().all(|v| v.is_finite()));
+        let cos = kernels::dot_wide(&rec, truth.row(w))
+            / (kernels::norm_sq_wide(&rec).sqrt() * norms[w as usize]).max(1e-12);
+        assert!(cos > 0.95, "word {w}: reconstruction cosine {cos}");
+
+        // …and the served neighbors match the ground truth's neighborhood
+        let served = engine.nearest_words(&format!("#{w}"), 5).unwrap();
+        assert_eq!(served.len(), 5);
+        assert!(served.iter().all(|n| n.score.is_finite() && n.id != w));
+        // gold excludes every missing word — the index cannot return them
+        let gold: Vec<u32> = truth
+            .nearest_with_norms(truth.row(w), 5, &missing, &norms)
+            .iter()
+            .map(|(id, _)| *id)
+            .collect();
+        let overlap = served.iter().filter(|n| gold.contains(&n.id)).count();
+        assert!(
+            overlap >= 3,
+            "word {w}: served {:?} vs gold {gold:?}",
+            served.iter().map(|n| n.id).collect::<Vec<_>>()
+        );
+    }
+
+    // a word absent everywhere is a clean error, not a crash
+    let mut merged2 = truth.clone();
+    merged2.present[3] = false;
+    let engine2 = ServeEngine::with_submodels(
+        merged2,
+        None,
+        ServeConfig::default(),
+        vec![{
+            let mut m = truth.clone();
+            m.present[3] = false;
+            m.row_mut(3).fill(0.0);
+            m
+        }],
+    );
+    assert!(engine2.nearest_words("#3", 5).is_err());
+    assert!(engine2.reconstruct("#3").is_err());
+}
