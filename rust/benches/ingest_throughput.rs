@@ -1,0 +1,102 @@
+//! Raw-text ingestion throughput: the preprocess-side number every
+//! corpus-scaling claim rests on (paper: Wikipedia/Web → tokenize →
+//! vocab → HDFS shards before any training starts).
+//!
+//! Generates a Zipf-ish raw text file, then measures the full two-pass
+//! ingest (parallel tokenize + vocab count, id-encode + shard write) at
+//! 1/2/4 workers: MB/s per pass, end-to-end tokens/s, OOV rate, shard
+//! count. DW2V_BENCH_SCALE=full quadruples the corpus.
+//!
+//! Run with: cargo bench --bench ingest_throughput
+
+use dw2v::bench_util::{bench_scale, Table};
+use dw2v::text::ingest::{ingest_file, IngestConfig};
+use dw2v::util::json::{num, obj, s};
+use dw2v::util::rng::Pcg64;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Write a synthetic raw-text corpus of roughly `target_bytes` and return
+/// its path. Word ranks are drawn with a quadratic skew toward the head —
+/// close enough to Zipf for tokenizer/vocab cache behaviour.
+fn generate_text_file(dir: &PathBuf, target_bytes: usize, vocab: usize, seed: u64) -> PathBuf {
+    let path = dir.join("corpus.txt");
+    let mut out = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    let mut rng = Pcg64::new(seed);
+    let mut written = 0usize;
+    while written < target_bytes {
+        let len = 5 + rng.gen_range_usize(20);
+        let mut line = String::with_capacity(len * 8);
+        for i in 0..len {
+            if i > 0 {
+                line.push(' ');
+            }
+            let u = rng.gen_f64();
+            let id = ((u * u) * vocab as f64) as usize;
+            line.push_str(&format!("word{id}"));
+        }
+        line.push_str(".\n");
+        written += line.len();
+        out.write_all(line.as_bytes()).unwrap();
+    }
+    out.flush().unwrap();
+    path
+}
+
+fn main() {
+    let scale = bench_scale();
+    let target_bytes = (24.0 * 1e6 * scale) as usize;
+    let dir = std::env::temp_dir().join(format!("dw2v_ingest_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    println!("generating ~{:.1} MB raw text ...", target_bytes as f64 / 1e6);
+    let input = generate_text_file(&dir, target_bytes, 30_000, 0xB3);
+
+    let mut table = Table::new(
+        "ingest_throughput",
+        "Raw-text ingestion throughput (two-pass, streaming)",
+        &["pass1 MB/s", "pass2 MB/s", "tokens/s", "oov %", "vocab", "shards"],
+    );
+
+    for workers in [1usize, 2, 4] {
+        let cfg = IngestConfig {
+            min_count: 2,
+            max_vocab: 1_000_000,
+            workers,
+            chunk_bytes: 4 << 20,
+            shard_tokens: 500_000,
+        };
+        let out_dir = dir.join(format!("shards_w{workers}"));
+        let result = ingest_file(&input, &out_dir, &cfg).expect("ingest");
+        let st = &result.stats;
+        let p1 = st.bytes as f64 / st.pass1_secs.max(1e-9) / 1e6;
+        let p2 = st.bytes as f64 / st.pass2_secs.max(1e-9) / 1e6;
+        let tok_s = st.raw_tokens as f64 / (st.pass1_secs + st.pass2_secs).max(1e-9);
+        table.row(
+            &format!("{workers} workers"),
+            vec![
+                format!("{p1:.1}"),
+                format!("{p2:.1}"),
+                format!("{:.0}", tok_s),
+                format!("{:.2}", 100.0 * st.oov_rate()),
+                format!("{}", st.vocab_size),
+                format!("{}", st.shards),
+            ],
+            obj(vec![
+                ("label", s(&format!("{workers}_workers"))),
+                ("workers", num(workers as f64)),
+                ("bytes", num(st.bytes as f64)),
+                ("pass1_mb_per_s", num(p1)),
+                ("pass2_mb_per_s", num(p2)),
+                ("tokens_per_s", num(tok_s)),
+                ("oov_rate", num(st.oov_rate())),
+                ("vocab", num(st.vocab_size as f64)),
+                ("shards", num(st.shards as f64)),
+            ]),
+        );
+    }
+
+    table.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}

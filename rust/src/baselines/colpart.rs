@@ -69,8 +69,8 @@ pub fn train(
 
     let start = std::time::Instant::now();
     let mut stats = ColPartStats::default();
-    let expected_pairs =
-        (corpus.total_tokens() as f64 * cfg.window as f64 * cfg.epochs as f64) as u64;
+    // calibrated like the Hogwild baseline (see `sgns::schedule`)
+    let expected_pairs = crate::sgns::schedule::expected_pairs(corpus, vocab, cfg);
 
     // The driver walks pairs; per pair, a fan-out/fan-in over servers.
     // (Single-threaded orchestration of the exchange keeps the dataflow —

@@ -76,11 +76,12 @@ pub fn train_submodels<B: Backend>(
         corpus.len(),
     ));
     let n = divider.num_submodels;
-    let avg_len = corpus.total_tokens() as f64 / corpus.len().max(1) as f64;
-    let expected_pairs = (divider.expected_per_submodel()
-        * avg_len
-        * scfg.window as f64
-        * cfg.epochs as f64) as u64;
+    // calibrated pair expectation (subsampling keep-mass × mean dynamic
+    // window, see `sgns::schedule`), scaled to each sub-model's expected
+    // share of the corpus sentences
+    let per_epoch = crate::sgns::schedule::expected_pairs_per_epoch(corpus, vocab, &scfg);
+    let submodel_share = divider.expected_per_submodel() / corpus.len().max(1) as f64;
+    let expected_pairs = (per_epoch * submodel_share * cfg.epochs as f64) as u64;
 
     info!(
         "train: {} sub-models (strategy={}, r={}%), {} epochs, expected ~{} pairs each",

@@ -1,6 +1,9 @@
 //! Evaluation harness: similarity (Spearman ρ), categorization (k-means
-//! purity) and analogy (3CosAdd accuracy) with the paper's OOV accounting.
+//! purity) and analogy (3CosAdd accuracy) with the paper's OOV accounting,
+//! plus the loader for the standard `questions-words.txt` analogy format
+//! ([`questions`]) used when training on real ingested corpora.
 pub mod analogy;
 pub mod categorization;
+pub mod questions;
 pub mod report;
 pub mod similarity;

@@ -1,0 +1,230 @@
+//! Loader for the standard `questions-words.txt` analogy benchmark format
+//! (Mikolov et al.), so models trained on real ingested corpora are scored
+//! on real benchmarks instead of the synthetic gold suite.
+//!
+//! The format is line-oriented:
+//!
+//! ```text
+//! : capital-common-countries
+//! Athens Greece Baghdad Iraq
+//! Athens Greece Bangkok Thailand
+//! : gram1-adjective-to-adverb
+//! amazing amazingly apparent apparently
+//! ```
+//!
+//! Every `: name` line starts a section; every other non-empty line is one
+//! `a : b :: c : d` question. Words are run through the **same
+//! normalization the tokenizer applies to the corpus** (lowercasing,
+//! U+2019 → `'`, punctuation stripped) before the vocabulary lookup, so
+//! "Don’t" in a questions file matches the "don't" the ingest stored.
+//! Questions with any out-of-vocabulary word are dropped at load time
+//! (they could never be answered — the evaluator's own OOV accounting
+//! covers words dropped later by sub-model presence masks).
+
+use crate::gen::benchmarks::{AnalogyQuad, Benchmark, BenchmarkData, BenchmarkKind};
+use crate::text::tokenize::tokenize;
+use crate::text::vocab::Vocab;
+
+/// One parsed questions-words file: a benchmark per non-empty section,
+/// plus load accounting.
+#[derive(Clone, Debug, Default)]
+pub struct QuestionsWords {
+    /// one analogy [`Benchmark`] per section that kept ≥ 1 question
+    pub suite: Vec<Benchmark>,
+    /// sections seen in the file (kept or not)
+    pub sections: usize,
+    /// well-formed questions seen
+    pub total_questions: usize,
+    /// questions dropped because a word is not in the vocabulary
+    pub oov_questions: usize,
+    /// lines that were neither a section header nor 4 words
+    pub malformed_lines: usize,
+}
+
+impl QuestionsWords {
+    pub fn kept_questions(&self) -> usize {
+        self.total_questions - self.oov_questions
+    }
+
+    /// One-line human report.
+    pub fn summary(&self) -> String {
+        format!(
+            "questions-words: {} sections, {}/{} questions in-vocab ({} malformed lines skipped)",
+            self.sections,
+            self.kept_questions(),
+            self.total_questions,
+            self.malformed_lines
+        )
+    }
+}
+
+/// Parse questions-words text against a frozen vocabulary.
+pub fn parse_questions_words(text: &str, vocab: &Vocab) -> QuestionsWords {
+    let mut out = QuestionsWords::default();
+    let mut section = String::from("all");
+    let mut quads: Vec<AnalogyQuad> = Vec::new();
+    let flush = |name: &str, quads: &mut Vec<AnalogyQuad>, suite: &mut Vec<Benchmark>| {
+        if quads.is_empty() {
+            return;
+        }
+        suite.push(Benchmark {
+            name: format!("qw-{name}"),
+            kind: BenchmarkKind::Analogy,
+            data: BenchmarkData::Analogy(std::mem::take(quads)),
+        });
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix(':') {
+            flush(&section, &mut quads, &mut out.suite);
+            section = name.trim().to_string();
+            out.sections += 1;
+            continue;
+        }
+        let words: Vec<&str> = line.split_whitespace().collect();
+        if words.len() != 4 {
+            out.malformed_lines += 1;
+            continue;
+        }
+        out.total_questions += 1;
+        // tokenizer-identical normalization; a word that does not survive
+        // as exactly one token could never appear in the vocab either
+        let ids: Vec<Option<u32>> = words
+            .iter()
+            .map(|w| {
+                let mut toks = tokenize(w);
+                match toks.len() {
+                    1 => vocab.id(&toks.pop().expect("len checked")),
+                    _ => None,
+                }
+            })
+            .collect();
+        match (ids[0], ids[1], ids[2], ids[3]) {
+            (Some(a), Some(b), Some(c), Some(d)) => quads.push(AnalogyQuad { a, b, c, d }),
+            _ => out.oov_questions += 1,
+        }
+    }
+    flush(&section, &mut quads, &mut out.suite);
+    out
+}
+
+/// [`parse_questions_words`] from a file path.
+pub fn load_questions_words(
+    path: &std::path::Path,
+    vocab: &Vocab,
+) -> Result<QuestionsWords, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read questions file {}: {e}", path.display()))?;
+    Ok(parse_questions_words(&text, vocab))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::text::vocab::VocabBuilder;
+
+    fn vocab_of(words: &[&str]) -> Vocab {
+        let mut b = VocabBuilder::new();
+        for (i, w) in words.iter().enumerate() {
+            // distinct counts keep id assignment unambiguous
+            for _ in 0..(words.len() - i) {
+                b.add_token(w);
+            }
+        }
+        b.build(1, usize::MAX)
+    }
+
+    const SAMPLE: &str = "\
+: capital-common
+Athens Greece Oslo Norway
+Athens Greece Paris France
+: family
+boy girl king queen
+boy girl brother sister
+";
+
+    #[test]
+    fn sections_become_benchmarks() {
+        let v = vocab_of(&[
+            "athens", "greece", "oslo", "norway", "paris", "france", "boy", "girl", "king",
+            "queen", "brother", "sister",
+        ]);
+        let qw = parse_questions_words(SAMPLE, &v);
+        assert_eq!(qw.sections, 2);
+        assert_eq!(qw.total_questions, 4);
+        assert_eq!(qw.oov_questions, 0);
+        assert_eq!(qw.suite.len(), 2);
+        assert_eq!(qw.suite[0].name, "qw-capital-common");
+        assert_eq!(qw.suite[1].name, "qw-family");
+        assert_eq!(qw.suite[0].len(), 2);
+        // words map through lowercasing: "Athens" → id of "athens"
+        let BenchmarkData::Analogy(quads) = &qw.suite[0].data else {
+            panic!("expected analogy data")
+        };
+        assert_eq!(quads[0].a, v.id("athens").unwrap());
+        assert_eq!(quads[0].d, v.id("norway").unwrap());
+    }
+
+    #[test]
+    fn oov_questions_are_dropped_and_counted() {
+        // no "paris"/"france": second capital question must drop
+        let v = vocab_of(&[
+            "athens", "greece", "oslo", "norway", "boy", "girl", "king", "queen", "brother",
+            "sister",
+        ]);
+        let qw = parse_questions_words(SAMPLE, &v);
+        assert_eq!(qw.total_questions, 4);
+        assert_eq!(qw.oov_questions, 1);
+        assert_eq!(qw.kept_questions(), 3);
+        assert_eq!(qw.suite[0].len(), 1);
+    }
+
+    #[test]
+    fn sections_with_no_surviving_questions_are_omitted() {
+        let v = vocab_of(&["boy", "girl", "king", "queen", "brother", "sister"]);
+        let qw = parse_questions_words(SAMPLE, &v);
+        assert_eq!(qw.sections, 2);
+        assert_eq!(qw.suite.len(), 1, "capital section is all-OOV");
+        assert_eq!(qw.suite[0].name, "qw-family");
+    }
+
+    #[test]
+    fn questions_before_any_header_and_malformed_lines() {
+        let v = vocab_of(&["a", "b", "c", "d"]);
+        let text = "a b c d\nnot enough words\na b c d e\n";
+        let qw = parse_questions_words(text, &v);
+        assert_eq!(qw.sections, 0);
+        assert_eq!(qw.total_questions, 1);
+        assert_eq!(qw.malformed_lines, 2);
+        assert_eq!(qw.suite.len(), 1);
+        assert_eq!(qw.suite[0].name, "qw-all");
+    }
+
+    #[test]
+    fn words_get_tokenizer_normalization() {
+        // vocab stores what the corpus tokenizer produced: "don't"
+        let v = vocab_of(&["don't", "do", "can't", "cannot"]);
+        // questions file typeset with curly apostrophes + mixed case
+        let text = ": contractions\nDon\u{2019}t do Can\u{2019}t cannot\n";
+        let qw = parse_questions_words(text, &v);
+        assert_eq!(qw.total_questions, 1);
+        assert_eq!(qw.oov_questions, 0, "curly apostrophes must normalize");
+        let BenchmarkData::Analogy(quads) = &qw.suite[0].data else {
+            panic!("expected analogy data")
+        };
+        assert_eq!(quads[0].a, v.id("don't").unwrap());
+        assert_eq!(quads[0].c, v.id("can't").unwrap());
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        let v = vocab_of(&["a"]);
+        let qw = parse_questions_words("", &v);
+        assert!(qw.suite.is_empty());
+        assert_eq!(qw.total_questions, 0);
+        assert!(qw.summary().contains("0 sections"));
+    }
+}

@@ -82,6 +82,60 @@ impl Benchmark {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Remap every word id through `f`, dropping items touching an id `f`
+    /// cannot map. Carries a gold suite across vocabularies — e.g. from
+    /// the synthetic generator's ids onto the frequency-ranked ids a
+    /// re-ingested copy of the same corpus gets.
+    pub fn remap_words(&self, f: impl Fn(u32) -> Option<u32>) -> Benchmark {
+        let data = match &self.data {
+            BenchmarkData::Similarity(pairs) => BenchmarkData::Similarity(
+                pairs
+                    .iter()
+                    .filter_map(|p| {
+                        Some(SimPair {
+                            a: f(p.a)?,
+                            b: f(p.b)?,
+                            gold: p.gold,
+                        })
+                    })
+                    .collect(),
+            ),
+            BenchmarkData::Categorization {
+                items,
+                num_categories,
+            } => BenchmarkData::Categorization {
+                items: items
+                    .iter()
+                    .filter_map(|i| {
+                        Some(CatItem {
+                            word: f(i.word)?,
+                            category: i.category,
+                        })
+                    })
+                    .collect(),
+                num_categories: *num_categories,
+            },
+            BenchmarkData::Analogy(quads) => BenchmarkData::Analogy(
+                quads
+                    .iter()
+                    .filter_map(|q| {
+                        Some(AnalogyQuad {
+                            a: f(q.a)?,
+                            b: f(q.b)?,
+                            c: f(q.c)?,
+                            d: f(q.d)?,
+                        })
+                    })
+                    .collect(),
+            ),
+        };
+        Benchmark {
+            name: self.name.clone(),
+            kind: self.kind.clone(),
+            data,
+        }
+    }
 }
 
 /// Frequency tier helpers: word id == frequency rank under Zipf.
@@ -330,6 +384,33 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.unique_words(), y.unique_words());
         }
+    }
+
+    #[test]
+    fn remap_words_translates_and_drops() {
+        let b = Benchmark {
+            name: "t".into(),
+            kind: BenchmarkKind::Analogy,
+            data: BenchmarkData::Analogy(vec![
+                AnalogyQuad { a: 0, b: 1, c: 2, d: 3 },
+                AnalogyQuad { a: 0, b: 1, c: 2, d: 9 }, // 9 unmappable
+            ]),
+        };
+        let mapped = b.remap_words(|w| if w < 4 { Some(w + 100) } else { None });
+        assert_eq!(mapped.len(), 1);
+        let BenchmarkData::Analogy(quads) = &mapped.data else { panic!() };
+        assert_eq!(quads[0].a, 100);
+        assert_eq!(quads[0].d, 103);
+        // similarity keeps gold scores through the remap
+        let sim = Benchmark {
+            name: "s".into(),
+            kind: BenchmarkKind::Similarity,
+            data: BenchmarkData::Similarity(vec![SimPair { a: 1, b: 2, gold: 0.7 }]),
+        };
+        let mapped = sim.remap_words(|w| Some(w * 2));
+        let BenchmarkData::Similarity(pairs) = &mapped.data else { panic!() };
+        assert_eq!(pairs[0].a, 2);
+        assert!((pairs[0].gold - 0.7).abs() < 1e-12);
     }
 
     #[test]

@@ -33,6 +33,27 @@
 //! path is rust driving PJRT-compiled executables with device-resident
 //! parameters.
 //!
+//! ## Corpus sources
+//!
+//! Every experiment trains from one of two corpus sources behind the same
+//! [`world::World`]:
+//!
+//! * **synthetic** ([`world::build_world`]) — the planted-ground-truth
+//!   generator with its gold benchmark suite; deterministic from one
+//!   seed, used by the bench harnesses and tests;
+//! * **raw text** ([`world::World::from_text`], CLI `--text`) — a real
+//!   text file streamed through [`text::ingest`]: pass 1 tokenizes and
+//!   counts the vocabulary in parallel chunks (partial
+//!   [`text::vocab::VocabBuilder`]s merged mapper-style), pass 2
+//!   re-streams, id-encodes against the frozen vocab and spills binary
+//!   [`text::corpus::Corpus`] shards every `shard_tokens` tokens. Peak
+//!   memory is one chunk of raw text + one shard of ids — never the
+//!   corpus. Real-corpus models are scored with
+//!   [`eval::questions`] (the standard `questions-words.txt` analogy
+//!   format); `cargo bench --bench ingest_throughput` measures the
+//!   two-pass MB/s, and `cargo run --example text_ingest` shows the text
+//!   round trip matching the direct synthetic run.
+//!
 //! ## Serving layer
 //!
 //! Trained models are *used* through [`serve`]: an HNSW-style ANN index +

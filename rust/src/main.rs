@@ -5,13 +5,28 @@
 //!   hogwild     single-node lock-free baseline (paper's comparator)
 //!   mllib       parameter-averaging distributed baseline
 //!   kl          Figure-1 distribution statistics for the dividers
-//!   gen-corpus  generate + persist a synthetic corpus
+//!   gen-corpus  generate (synthetic) or ingest (`--text`) + persist a corpus
 //!   serve       ANN-indexed query engine over a saved embedding
 //!               (`--model model.bin [--vocab vocab.tsv] [--queries f]`)
 //!   artifacts   show the AOT artifact manifest
 //!
 //! Every flag maps to a key of `ExperimentConfig`; `--config file.json`
 //! loads a base config that individual flags then override.
+//!
+//! ## Corpus sources (`--text`)
+//!
+//! Every experiment subcommand trains from one of two corpus sources:
+//!
+//! * **synthetic** (default) — the planted-ground-truth generator
+//!   (`--sentences`/`--vocab`/... knobs), evaluated on the gold benchmark
+//!   suite;
+//! * **raw text** (`--text file`) — the file is streamed through the
+//!   two-pass ingestion pipeline (`text::ingest`: parallel tokenize +
+//!   vocab count, then id-encode into binary corpus shards; memory stays
+//!   bounded by chunk/shard size, not corpus size). `--min-count` /
+//!   `--max-vocab` control the vocabulary, `--eval questions-words.txt`
+//!   supplies a real analogy benchmark, and `--shard-dir` persists the
+//!   shard + vocab.tsv layout for reuse.
 //!
 //! ## Backend selection (`--backend auto|native|xla`)
 //!
@@ -42,7 +57,7 @@ use dw2v::sgns::hogwild;
 use dw2v::util::cli::Command;
 use dw2v::util::config::ExperimentConfig;
 use dw2v::util::logging::{self, Timer};
-use dw2v::world::build_world;
+use dw2v::world::{build_world, TextWorldOptions, World};
 
 fn main() {
     logging::level_from_env();
@@ -76,9 +91,16 @@ subcommands:
   hogwild      single-node lock-free baseline
   mllib        parameter-averaging distributed baseline
   kl           figure-1 KL-divergence statistics for the dividers
-  gen-corpus   generate + persist a synthetic corpus
+  gen-corpus   generate (synthetic) or ingest (--text) + persist a corpus
   serve        ANN-indexed query engine over a saved embedding
   artifacts    show the AOT artifact manifest
+
+corpus sources (pipeline / hogwild / mllib / kl / gen-corpus):
+  default      synthetic planted-ground-truth generator (--sentences ...)
+  --text FILE  stream a raw text file through the two-pass ingestion
+               pipeline (tokenize -> parallel vocab -> binary shards);
+               tune with --min-count / --max-vocab, benchmark with
+               --eval questions-words.txt, persist with --shard-dir
 
 backends (--backend auto|native|xla):
   auto         use the PJRT/XLA artifacts when they load, else fall back
@@ -104,6 +126,42 @@ fn experiment_command(name: &str, about: &str) -> Command {
         .flag("mappers", None, "mapper threads")
         .flag("backend", None, "compute backend: auto | native | xla")
         .flag("artifact-dir", None, "AOT artifact directory")
+        .flag("text", None, "raw text file to ingest instead of the synthetic corpus")
+        .flag("min-count", Some("5"), "(--text) drop words seen fewer times")
+        .flag("max-vocab", Some("1000000"), "(--text) keep at most this many words")
+        .flag("eval", None, "(--text) questions-words.txt analogy benchmark file")
+        .flag("shard-dir", None, "(--text) persist ingested shards + vocab.tsv here")
+}
+
+/// Corpus source dispatch: `--text file` streams a raw text file through
+/// the two-pass ingestion pipeline (`text::ingest`); otherwise the
+/// synthetic generator builds the world from `cfg`.
+fn load_world(cfg: &ExperimentConfig, args: &dw2v::util::cli::Args) -> Result<World, String> {
+    let Some(path) = args.get("text") else {
+        // catch the classic slip of passing ingestion flags without the
+        // corpus they configure — a synthetic run would otherwise
+        // silently score the gold suite instead of the requested file
+        if args.get("eval").is_some() || args.get("shard-dir").is_some() {
+            return Err("--eval/--shard-dir configure raw-text ingestion; add --text FILE".into());
+        }
+        return Ok(build_world(cfg));
+    };
+    let mut opts = TextWorldOptions::default();
+    if let Some(mc) = args.get_u64("min-count").map_err(|e| e.to_string())? {
+        opts.ingest.min_count = mc;
+    }
+    if let Some(mv) = args.get_usize("max-vocab").map_err(|e| e.to_string())? {
+        opts.ingest.max_vocab = mv;
+    }
+    opts.ingest.workers = cfg.mappers.max(1);
+    opts.shard_dir = args.get("shard-dir").map(std::path::PathBuf::from);
+    opts.questions = args.get("eval").map(std::path::PathBuf::from);
+    let (world, stats) = World::from_text(std::path::Path::new(path), &opts)?;
+    println!("{}", stats.summary());
+    if world.suite.is_empty() {
+        eprintln!("note: no benchmark suite for --text (pass --eval questions-words.txt)");
+    }
+    Ok(world)
 }
 
 fn parse_experiment(args: &dw2v::util::cli::Args) -> Result<ExperimentConfig, String> {
@@ -145,7 +203,7 @@ fn cmd_pipeline(argv: &[String]) -> Result<(), String> {
     let cfg = parse_experiment(&args)?;
 
     let t_setup = Timer::start("setup");
-    let world = build_world(&cfg);
+    let world = load_world(&cfg, &args)?;
     let backend = load_backend(&cfg, world.vocab.len())?;
     println!(
         "setup: corpus {} sentences / {} tokens, vocab {}, backend {} ({:.1}s)",
@@ -191,12 +249,12 @@ fn cmd_hogwild(argv: &[String]) -> Result<(), String> {
         .get_usize("threads")
         .map_err(|e| e.to_string())?
         .unwrap_or(4);
-    let world = build_world(&cfg);
+    let world = load_world(&cfg, &args)?;
     let scfg = leader::sgns_config(&cfg);
     let (emb, stats) = hogwild::train(&world.corpus, &world.vocab, &scfg, threads, cfg.seed);
     println!(
-        "hogwild: {:.2}s, {} pairs, final-epoch loss {:.4}",
-        stats.seconds, stats.pairs, stats.final_epoch_loss
+        "hogwild: {:.2}s, {} pairs, final lr {:.5}, final-epoch loss {:.4}",
+        stats.seconds, stats.pairs, stats.final_lr, stats.final_epoch_loss
     );
     let scores = evaluate_suite(&emb, &world.suite, cfg.seed);
     println!("\n{}", report::format_header(&scores));
@@ -213,7 +271,7 @@ fn cmd_mllib(argv: &[String]) -> Result<(), String> {
         .get_usize("executors")
         .map_err(|e| e.to_string())?
         .unwrap_or(10);
-    let world = build_world(&cfg);
+    let world = load_world(&cfg, &args)?;
     let scfg = leader::sgns_config(&cfg);
     let backend = load_backend(&cfg, world.vocab.len())?;
     let (emb, stats) = dw2v::baselines::param_avg::train(
@@ -246,7 +304,7 @@ fn cmd_kl(argv: &[String]) -> Result<(), String> {
         .get_usize("samples")
         .map_err(|e| e.to_string())?
         .unwrap_or(10);
-    let world = build_world(&cfg);
+    let world = load_world(&cfg, &args)?;
     let corpus = &world.corpus;
     let full = DistStats::from_corpus(corpus);
     println!("strategy       unigram-KL   bigram-KL   union-cov  inter-cov");
@@ -281,18 +339,54 @@ fn cmd_kl(argv: &[String]) -> Result<(), String> {
 }
 
 fn cmd_gen_corpus(argv: &[String]) -> Result<(), String> {
-    let cmd = experiment_command("gen-corpus", "generate + persist a synthetic corpus")
-        .flag("out", Some("corpus_out"), "output directory")
-        .flag("shards", Some("4"), "number of shard files");
+    let cmd = experiment_command(
+        "gen-corpus",
+        "generate (synthetic) or ingest (--text) + persist a corpus",
+    )
+    .flag("out", Some("corpus_out"), "output directory")
+    .flag("shards", Some("4"), "number of shard files (synthetic source)");
     let args = cmd.parse(argv).map_err(|e| e.to_string())?;
     let cfg = parse_experiment(&args)?;
     let out = args.get_str("out", "corpus_out");
+    let dir = std::path::Path::new(&out);
+
+    // the inherited experiment flags that make no sense here are rejected
+    // rather than silently ignored, with or without --text
+    if args.get("shard-dir").is_some() {
+        return Err("gen-corpus writes shards to --out; use --out, not --shard-dir".into());
+    }
+    if args.get("eval").is_some() {
+        return Err(
+            "gen-corpus only ingests; evaluate with `dw2v pipeline --text ... --eval ...`".into(),
+        );
+    }
+
+    // raw-text source: pure ingestion run, shard count follows shard_tokens
+    if let Some(text) = args.get("text") {
+        let mut icfg = dw2v::text::ingest::IngestConfig {
+            workers: cfg.mappers.max(1),
+            ..Default::default()
+        };
+        if let Some(mc) = args.get_u64("min-count").map_err(|e| e.to_string())? {
+            icfg.min_count = mc;
+        }
+        if let Some(mv) = args.get_usize("max-vocab").map_err(|e| e.to_string())? {
+            icfg.max_vocab = mv;
+        }
+        let result = dw2v::text::ingest::ingest_file(std::path::Path::new(text), dir, &icfg)?;
+        println!("{}", result.stats.summary());
+        println!(
+            "wrote {} shards + vocab.tsv to {out}",
+            result.shard_paths.len()
+        );
+        return Ok(());
+    }
+
     let shards = args
         .get_usize("shards")
         .map_err(|e| e.to_string())?
         .unwrap_or(4);
     let world = build_world(&cfg);
-    let dir = std::path::Path::new(&out);
     world
         .corpus
         .write_sharded(dir, shards)

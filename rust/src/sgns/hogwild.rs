@@ -53,6 +53,12 @@ unsafe impl Sync for SharedParams {}
 #[derive(Debug, Clone, Default)]
 pub struct TrainStats {
     pub pairs: u64,
+    /// expected pairs the lr schedule annealed over (see
+    /// [`super::schedule::expected_pairs`])
+    pub expected_pairs: u64,
+    /// learning rate at the end of training — lands near `lr_min` iff the
+    /// pair expectation was calibrated
+    pub final_lr: f32,
     pub seconds: f64,
     /// mean SGNS loss over the final epoch (monitoring only)
     pub final_epoch_loss: f64,
@@ -82,11 +88,10 @@ pub fn train(
     let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
     let sigmoid = SigmoidTable::new();
 
-    // expected total pairs for the lr schedule: tokens × window (upper
-    // bound halved by the dynamic window) × epochs
-    let expected_pairs = (corpus.total_tokens() as f64
-        * cfg.window as f64
-        * cfg.epochs as f64) as u64;
+    // expected total pairs for the lr schedule: subsampling keep-mass ×
+    // mean dynamic window with boundary clipping (see `super::schedule`) —
+    // the naive tokens × window × epochs is off in both directions
+    let expected_pairs = super::schedule::expected_pairs(corpus, vocab, cfg);
     let pair_counter = AtomicU64::new(0);
     let loss_accum = AtomicU64::new(0); // micro-units of 1e-6
     let loss_pairs = AtomicU64::new(0);
@@ -210,6 +215,8 @@ pub fn train(
     let lp = loss_pairs.load(Ordering::Relaxed).max(1);
     let stats = TrainStats {
         pairs,
+        expected_pairs,
+        final_lr: cfg.lr_at(pairs, expected_pairs),
         seconds: start.elapsed().as_secs_f64(),
         final_epoch_loss: loss_accum.load(Ordering::Relaxed) as f64 * 1e-6 / lp as f64,
     };
@@ -316,6 +323,47 @@ mod tests {
         assert_eq!(e1.data, e2.data, "1-thread training must be deterministic");
         let (same, cross) = cluster_separation(&e1, &gcfg);
         assert!(same > cross + 0.05, "same={same:.3} cross={cross:.3}");
+    }
+
+    /// Regression test for the lr-anneal miscalibration: the schedule's
+    /// pair expectation must track the pairs the inner loop actually emits
+    /// (dynamic window on both sides × subsampling keep-mass), so the
+    /// final lr lands near `lr_min` instead of either slamming into the
+    /// floor early or never annealing.
+    #[test]
+    fn lr_anneals_to_the_floor_under_subsampling() {
+        let (corpus, vocab, _) = tiny_setup();
+        // light and heavy subsampling plus disabled — all three regimes
+        // must stay calibrated
+        for t in [0.0, 1e-2, 1e-3] {
+            let cfg = SgnsConfig {
+                dim: 8,
+                epochs: 3,
+                window: 5,
+                negatives: 2,
+                subsample_t: t,
+                ..Default::default()
+            };
+            let (_, stats) = train(&corpus, &vocab, &cfg, 1, 17);
+            let ratio = stats.pairs as f64 / stats.expected_pairs.max(1) as f64;
+            assert!(
+                (ratio - 1.0).abs() < 0.10,
+                "t={t}: emitted {} vs expected {} (ratio {ratio:.3})",
+                stats.pairs,
+                stats.expected_pairs
+            );
+            // linear decay over a ±10%-calibrated total ends within 10% of
+            // lr0 above the floor; the old tokens×window×epochs estimate
+            // left final_lr at ~0.4·lr0 under this subsampling
+            assert!(
+                stats.final_lr <= cfg.lr0 * 0.10 + cfg.lr_min,
+                "t={t}: final lr {} did not anneal (lr0 {}, lr_min {})",
+                stats.final_lr,
+                cfg.lr0,
+                cfg.lr_min
+            );
+            assert!(stats.final_lr >= cfg.lr_min);
+        }
     }
 
     #[test]

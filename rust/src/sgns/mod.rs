@@ -7,4 +7,5 @@ pub mod batch;
 pub mod config;
 pub mod hogwild;
 pub mod negative;
+pub mod schedule;
 pub mod trainer;

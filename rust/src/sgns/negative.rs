@@ -84,13 +84,22 @@ pub struct CdfTable {
 }
 
 impl CdfTable {
+    /// Build from unnormalized weights. Panics on an empty or non-positive
+    /// total — the same contract as [`AliasTable::new`], so the two
+    /// samplers are interchangeable (a zero total would otherwise divide
+    /// into an all-NaN cdf whose binary search returns garbage slots).
     pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "empty weight vector");
         let mut cdf: Vec<f64> = Vec::with_capacity(weights.len());
         let mut acc = 0.0;
         for w in weights {
             acc += w;
             cdf.push(acc);
         }
+        assert!(
+            acc > 0.0 && acc.is_finite(),
+            "weights must have positive mass"
+        );
         for c in &mut cdf {
             *c /= acc;
         }
@@ -195,5 +204,56 @@ mod tests {
     #[should_panic(expected = "positive mass")]
     fn rejects_all_zero_weights() {
         AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive mass")]
+    fn cdf_rejects_all_zero_weights() {
+        CdfTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty weight vector")]
+    fn cdf_rejects_empty_weights() {
+        CdfTable::new(&[]);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive mass")]
+    fn cdf_rejects_nan_total() {
+        CdfTable::new(&[1.0, f64::NAN]);
+    }
+
+    #[test]
+    fn cdf_handles_degenerate_single_element() {
+        let table = CdfTable::new(&[5.0]);
+        let mut rng = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(table.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn cdf_skips_zero_weight_slots() {
+        let table = CdfTable::new(&[0.0, 1.0, 0.0, 1.0]);
+        let mut rng = Pcg64::new(8);
+        for _ in 0..2000 {
+            let s = table.sample(&mut rng);
+            assert!(s == 1 || s == 3, "sampled zero-weight slot {s}");
+        }
+    }
+
+    /// A single-word vocabulary must work through both samplers — the
+    /// smallest corpus a text ingest can produce.
+    #[test]
+    fn single_word_unigram_noise_on_both_samplers() {
+        let counts = [12u64];
+        let alias = AliasTable::unigram_noise(&counts, 0.75);
+        let cdf = CdfTable::unigram_noise(&counts, 0.75);
+        let mut rng = Pcg64::new(9);
+        for _ in 0..50 {
+            assert_eq!(alias.sample(&mut rng), 0);
+            assert_eq!(cdf.sample(&mut rng), 0);
+        }
     }
 }

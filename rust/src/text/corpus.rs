@@ -146,8 +146,12 @@ impl Corpus {
     }
 
     /// Write the corpus as `num_shards` files `<dir>/shard_<i>.bin`.
+    /// Stale `shard_*.bin` leftovers from a previous run are removed
+    /// first — [`Self::read_sharded`] globs the whole directory, so a
+    /// shorter re-run would otherwise splice the old corpus into the new.
     pub fn write_sharded(&self, dir: &Path, num_shards: usize) -> std::io::Result<Vec<PathBuf>> {
         std::fs::create_dir_all(dir)?;
+        remove_stale_shards(dir)?;
         let mut paths = Vec::with_capacity(num_shards);
         for i in 0..num_shards {
             let range = self.shard_range(i, num_shards);
@@ -184,6 +188,23 @@ impl Corpus {
         }
         Ok(all)
     }
+}
+
+/// Delete every `shard_*.bin` in `dir` (leftovers from a previous
+/// sharded write — synthetic or ingested — into the same directory).
+pub(crate) fn remove_stale_shards(dir: &Path) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let is_shard = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
+            .unwrap_or(false);
+        if is_shard {
+            std::fs::remove_file(&path)?;
+        }
+    }
+    Ok(())
 }
 
 fn read_u32<R: Read>(r: &mut R) -> std::io::Result<u32> {
@@ -263,6 +284,20 @@ mod tests {
         assert_eq!(paths.len(), 5);
         let back = Corpus::read_sharded(&dir).unwrap();
         assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rewrite_with_fewer_shards_removes_stale_files() {
+        let dir = tmpdir("rewrite");
+        let big = Corpus::new((0..50).map(|i| vec![i]).collect());
+        big.write_sharded(&dir, 8).unwrap();
+        let small = Corpus::new((0..6).map(|i| vec![i + 100]).collect());
+        let paths = small.write_sharded(&dir, 2).unwrap();
+        assert_eq!(paths.len(), 2);
+        // no leftovers from the 8-shard run survive the glob
+        let back = Corpus::read_sharded(&dir).unwrap();
+        assert_eq!(back, small);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -1,0 +1,726 @@
+//! Streaming raw-text ingestion: the paper's preprocess → HDFS-shards
+//! step, scaled to one node.
+//!
+//! Two memory-bounded passes over the input file:
+//!
+//! 1. **count** — the file is read in whole-line chunks of roughly
+//!    [`IngestConfig::chunk_bytes`]; each chunk is fanned out over
+//!    [`crate::exec::pool`] workers that tokenize and accumulate
+//!    [`VocabBuilder`] partial counts (the mapper-side partials of
+//!    Ordentlich et al.'s distributed vocab count), merged via
+//!    [`VocabBuilder::merge`] and frozen with `min_count`/`max_vocab`;
+//! 2. **encode** — the file is re-streamed, chunks are tokenized and
+//!    id-encoded against the frozen [`Vocab`] in parallel (OOV tokens
+//!    dropped and counted), and finished sentences are spilled to the
+//!    binary [`Corpus`] shard format every [`IngestConfig::shard_tokens`]
+//!    tokens.
+//!
+//! Peak memory is one chunk of raw text + one shard of encoded ids — the
+//! corpus itself never lives in memory, so a multi-GB text file ingests in
+//! a bounded footprint. The resulting `shard_*.bin` + `vocab.tsv` layout
+//! is exactly what [`Corpus::read_sharded`] / the training pipeline
+//! consume (paper: HDFS splits → mappers).
+
+use super::corpus::Corpus;
+use super::tokenize::{split_sentences, tokenize};
+use super::vocab::{Vocab, VocabBuilder};
+use crate::exec::pool::parallel_map;
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+
+/// Knobs for one ingestion run.
+#[derive(Clone, Debug)]
+pub struct IngestConfig {
+    /// drop words seen fewer than this many times
+    pub min_count: u64,
+    /// keep at most this many of the most frequent words
+    pub max_vocab: usize,
+    /// tokenizer worker threads per chunk
+    pub workers: usize,
+    /// target raw-text bytes per streamed chunk (whole lines; a single
+    /// line longer than this is still read intact)
+    pub chunk_bytes: usize,
+    /// target encoded tokens per output shard file
+    pub shard_tokens: u64,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        Self {
+            min_count: 5,
+            max_vocab: 1_000_000,
+            workers: 4,
+            chunk_bytes: 4 << 20,
+            shard_tokens: 2_000_000,
+        }
+    }
+}
+
+/// What one ingestion run saw and produced.
+#[derive(Clone, Debug, Default)]
+pub struct IngestStats {
+    /// raw input size in bytes
+    pub bytes: u64,
+    pub lines: u64,
+    /// non-empty tokenized sentences seen
+    pub sentences: u64,
+    /// sentences with at least one in-vocab token (what the shards hold)
+    pub written_sentences: u64,
+    /// all tokens produced by the tokenizer
+    pub raw_tokens: u64,
+    /// tokens encoded into shards (in-vocab)
+    pub kept_tokens: u64,
+    /// tokens dropped as out-of-vocabulary (`min_count`/`max_vocab`)
+    pub oov_tokens: u64,
+    pub vocab_size: usize,
+    pub shards: usize,
+    pub pass1_secs: f64,
+    pub pass2_secs: f64,
+}
+
+impl IngestStats {
+    /// Fraction of tokenized tokens dropped as OOV.
+    pub fn oov_rate(&self) -> f64 {
+        self.oov_tokens as f64 / self.raw_tokens.max(1) as f64
+    }
+
+    /// End-to-end ingest throughput: file bytes over both passes' wall
+    /// clock.
+    pub fn bytes_per_sec(&self) -> f64 {
+        self.bytes as f64 / (self.pass1_secs + self.pass2_secs).max(1e-9)
+    }
+
+    /// One-line human report.
+    pub fn summary(&self) -> String {
+        format!(
+            "ingest: {} lines / {} sentences / {} tokens ({} kept, {:.2}% OOV) \
+             -> vocab {} / {} shards, {:.1} MB in {:.2}s+{:.2}s ({:.1} MB/s)",
+            self.lines,
+            self.sentences,
+            self.raw_tokens,
+            self.kept_tokens,
+            100.0 * self.oov_rate(),
+            self.vocab_size,
+            self.shards,
+            self.bytes as f64 / 1e6,
+            self.pass1_secs,
+            self.pass2_secs,
+            self.bytes_per_sec() / 1e6
+        )
+    }
+}
+
+/// Result of [`ingest_file`]: the frozen vocabulary, the shard files
+/// written (plus `vocab.tsv` beside them), and the run report.
+#[derive(Clone, Debug)]
+pub struct IngestOutput {
+    pub vocab: Vocab,
+    pub shard_paths: Vec<PathBuf>,
+    pub stats: IngestStats,
+}
+
+/// Reads whole lines until roughly `chunk_bytes` accumulate. Trailing
+/// `\n`/`\r\n` are stripped so downstream tokenization sees clean lines.
+struct ChunkReader {
+    reader: BufReader<File>,
+    chunk_bytes: usize,
+}
+
+impl ChunkReader {
+    fn open(path: &Path, chunk_bytes: usize) -> std::io::Result<Self> {
+        Ok(Self {
+            reader: BufReader::new(File::open(path)?),
+            chunk_bytes: chunk_bytes.max(1),
+        })
+    }
+
+    /// Next chunk of lines, or `None` at EOF.
+    fn next_chunk(&mut self) -> std::io::Result<Option<Vec<String>>> {
+        let mut lines = Vec::new();
+        let mut budget = 0usize;
+        let mut buf = String::new();
+        while budget < self.chunk_bytes {
+            buf.clear();
+            let n = self.reader.read_line(&mut buf)?;
+            if n == 0 {
+                break;
+            }
+            budget += n;
+            while buf.ends_with('\n') || buf.ends_with('\r') {
+                buf.pop();
+            }
+            lines.push(std::mem::take(&mut buf));
+        }
+        Ok(if lines.is_empty() { None } else { Some(lines) })
+    }
+}
+
+/// Split `lines` into up to `workers` contiguous slices for fork-join
+/// tokenization.
+fn line_slices(lines: &[String], workers: usize) -> Vec<&[String]> {
+    let per = lines.len().div_ceil(workers.max(1)).max(1);
+    lines.chunks(per).collect()
+}
+
+/// Pass 1: stream the file and build the frequency-ranked vocabulary from
+/// parallel partial counts. Returns the frozen vocab plus (bytes, lines)
+/// seen.
+pub fn count_vocab(path: &Path, cfg: &IngestConfig) -> Result<(Vocab, u64, u64), String> {
+    let ctx = |e: std::io::Error| format!("ingest pass 1 ({}): {e}", path.display());
+    let bytes = std::fs::metadata(path).map_err(ctx)?.len();
+    let mut reader = ChunkReader::open(path, cfg.chunk_bytes).map_err(ctx)?;
+    let mut builder = VocabBuilder::new();
+    let mut lines = 0u64;
+    while let Some(chunk) = reader.next_chunk().map_err(ctx)? {
+        lines += chunk.len() as u64;
+        let partials = parallel_map(&line_slices(&chunk, cfg.workers), cfg.workers, |slice| {
+            let mut b = VocabBuilder::new();
+            for line in slice.iter() {
+                for sentence in split_sentences(line) {
+                    for token in tokenize(sentence) {
+                        b.add_token(&token);
+                    }
+                }
+            }
+            b
+        });
+        for p in partials {
+            builder.merge(p);
+        }
+    }
+    Ok((builder.build(cfg.min_count, cfg.max_vocab), bytes, lines))
+}
+
+/// Per-slice pass-2 result: encoded sentences + token accounting.
+struct EncodedSlice {
+    sentences: Vec<Vec<u32>>,
+    tokenized_sentences: u64,
+    raw_tokens: u64,
+    oov_tokens: u64,
+}
+
+/// Pass 2 driver: re-stream `input`, tokenize + id-encode chunks in
+/// parallel, feed every surviving sentence (in input order) to `sink`,
+/// accumulating the token accounting into `stats`.
+fn encode_stream(
+    input: &Path,
+    cfg: &IngestConfig,
+    vocab: &Vocab,
+    stats: &mut IngestStats,
+    mut sink: impl FnMut(Vec<u32>) -> Result<(), String>,
+) -> Result<(), String> {
+    let ctx = |e: std::io::Error| format!("ingest pass 2 ({}): {e}", input.display());
+    let mut reader = ChunkReader::open(input, cfg.chunk_bytes).map_err(ctx)?;
+    while let Some(chunk) = reader.next_chunk().map_err(ctx)? {
+        let encoded = parallel_map(&line_slices(&chunk, cfg.workers), cfg.workers, |slice| {
+            let mut out = EncodedSlice {
+                sentences: Vec::new(),
+                tokenized_sentences: 0,
+                raw_tokens: 0,
+                oov_tokens: 0,
+            };
+            for line in slice.iter() {
+                for sentence in split_sentences(line) {
+                    let tokens = tokenize(sentence);
+                    if tokens.is_empty() {
+                        continue;
+                    }
+                    out.tokenized_sentences += 1;
+                    out.raw_tokens += tokens.len() as u64;
+                    let ids = vocab.encode(&tokens);
+                    out.oov_tokens += (tokens.len() - ids.len()) as u64;
+                    if !ids.is_empty() {
+                        out.sentences.push(ids);
+                    }
+                }
+            }
+            out
+        });
+        for enc in encoded {
+            stats.sentences += enc.tokenized_sentences;
+            stats.raw_tokens += enc.raw_tokens;
+            stats.oov_tokens += enc.oov_tokens;
+            for s in enc.sentences {
+                stats.kept_tokens += s.len() as u64;
+                stats.written_sentences += 1;
+                sink(s)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Full two-pass ingestion of a raw text file into `out_dir`: writes
+/// `shard_0.bin … shard_{n-1}.bin` (the [`Corpus`] binary format, readable
+/// with [`Corpus::read_sharded`]) and a `vocab.tsv` beside them. Stale
+/// `shard_*.bin` files from a previous run in the same directory are
+/// removed first — `read_sharded` globs the whole directory, so leftovers
+/// encoded against an older vocab would otherwise corrupt the corpus.
+///
+/// Sentences that lose every token to the vocabulary filter are dropped;
+/// everything else is preserved in order, so the concatenated decoded
+/// shard stream equals the tokenized input filtered to in-vocab words.
+pub fn ingest_file(
+    input: &Path,
+    out_dir: &Path,
+    cfg: &IngestConfig,
+) -> Result<IngestOutput, String> {
+    ingest_file_impl(input, out_dir, cfg, None)
+}
+
+/// [`ingest_file`] that additionally tees every encoded sentence into an
+/// in-memory [`Corpus`], for callers that persist the shard layout and
+/// train immediately — avoids reading back from disk what pass 2 just
+/// wrote.
+pub fn ingest_file_and_load(
+    input: &Path,
+    out_dir: &Path,
+    cfg: &IngestConfig,
+) -> Result<(IngestOutput, Corpus), String> {
+    let mut corpus = Corpus::default();
+    let out = ingest_file_impl(input, out_dir, cfg, Some(&mut corpus))?;
+    Ok((out, corpus))
+}
+
+fn ingest_file_impl(
+    input: &Path,
+    out_dir: &Path,
+    cfg: &IngestConfig,
+    mut tee: Option<&mut Corpus>,
+) -> Result<IngestOutput, String> {
+    let mut stats = IngestStats::default();
+
+    let t1 = std::time::Instant::now();
+    let (vocab, bytes, lines) = count_vocab(input, cfg)?;
+    stats.pass1_secs = t1.elapsed().as_secs_f64();
+    stats.bytes = bytes;
+    stats.lines = lines;
+    stats.vocab_size = vocab.len();
+
+    std::fs::create_dir_all(out_dir).map_err(|e| format!("create {}: {e}", out_dir.display()))?;
+    super::corpus::remove_stale_shards(out_dir)
+        .map_err(|e| format!("clear stale shards in {}: {e}", out_dir.display()))?;
+    // vocab.tsv is fully known after pass 1 — write it before any shard
+    // so a mid-pass-2 failure can never leave new shards paired with a
+    // previous run's vocabulary
+    std::fs::write(out_dir.join("vocab.tsv"), vocab.to_tsv())
+        .map_err(|e| format!("write vocab.tsv: {e}"))?;
+
+    let t2 = std::time::Instant::now();
+    let mut pending = Corpus::default();
+    let mut pending_tokens = 0u64;
+    let mut shard_paths: Vec<PathBuf> = Vec::new();
+
+    /// Write the pending buffer as the next shard; sentences then move
+    /// into the tee corpus (no per-sentence clone) or are dropped.
+    fn flush_shard(
+        out_dir: &Path,
+        pending: &mut Corpus,
+        pending_tokens: &mut u64,
+        shard_paths: &mut Vec<PathBuf>,
+        tee: &mut Option<&mut Corpus>,
+    ) -> Result<(), String> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let path = out_dir.join(format!("shard_{}.bin", shard_paths.len()));
+        pending
+            .write_shard(&path)
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        shard_paths.push(path);
+        match tee.as_deref_mut() {
+            Some(corpus) => corpus.sentences.append(&mut pending.sentences),
+            None => pending.sentences.clear(),
+        }
+        *pending_tokens = 0;
+        Ok(())
+    }
+
+    encode_stream(input, cfg, &vocab, &mut stats, |s| {
+        pending_tokens += s.len() as u64;
+        pending.sentences.push(s);
+        if pending_tokens >= cfg.shard_tokens {
+            flush_shard(
+                out_dir,
+                &mut pending,
+                &mut pending_tokens,
+                &mut shard_paths,
+                &mut tee,
+            )?;
+        }
+        Ok(())
+    })?;
+    flush_shard(
+        out_dir,
+        &mut pending,
+        &mut pending_tokens,
+        &mut shard_paths,
+        &mut tee,
+    )?;
+    stats.pass2_secs = t2.elapsed().as_secs_f64();
+    stats.shards = shard_paths.len();
+
+    Ok(IngestOutput {
+        vocab,
+        shard_paths,
+        stats,
+    })
+}
+
+/// In-memory variant of [`ingest_file`]: same two streaming passes, but
+/// pass 2 accumulates the id-encoded corpus directly (≈4 bytes/token —
+/// the same memory training needs resident anyway) instead of spilling
+/// shards and reading them back. Used by the default CLI `--text` path
+/// when no `--shard-dir` persistence was requested.
+pub fn ingest_to_corpus(
+    input: &Path,
+    cfg: &IngestConfig,
+) -> Result<(Vocab, Corpus, IngestStats), String> {
+    let mut stats = IngestStats::default();
+
+    let t1 = std::time::Instant::now();
+    let (vocab, bytes, lines) = count_vocab(input, cfg)?;
+    stats.pass1_secs = t1.elapsed().as_secs_f64();
+    stats.bytes = bytes;
+    stats.lines = lines;
+    stats.vocab_size = vocab.len();
+
+    let t2 = std::time::Instant::now();
+    let mut corpus = Corpus::default();
+    encode_stream(input, cfg, &vocab, &mut stats, |s| {
+        corpus.sentences.push(s);
+        Ok(())
+    })?;
+    stats.pass2_secs = t2.elapsed().as_secs_f64();
+    Ok((vocab, corpus, stats))
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_ingest_test_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn write_input(dir: &Path, text: &str) -> PathBuf {
+        let path = dir.join("input.txt");
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    fn small_cfg() -> IngestConfig {
+        IngestConfig {
+            min_count: 1,
+            max_vocab: usize::MAX,
+            workers: 2,
+            chunk_bytes: 64, // force many chunks even on tiny inputs
+            shard_tokens: 16,
+        }
+    }
+
+    /// Reference stream: tokenize the whole text in memory, filter to the
+    /// given vocab, decode ids back to words.
+    fn reference_stream(text: &str, vocab: &Vocab) -> Vec<String> {
+        crate::text::tokenize::sentences_of(text)
+            .into_iter()
+            .flatten()
+            .filter(|t| vocab.id(t).is_some())
+            .collect()
+    }
+
+    fn decoded_stream(dir: &Path, vocab: &Vocab) -> Vec<String> {
+        Corpus::read_sharded(dir)
+            .unwrap()
+            .sentences
+            .iter()
+            .flatten()
+            .map(|&id| vocab.word(id).to_string())
+            .collect()
+    }
+
+    #[test]
+    fn ingest_counts_and_encodes_a_simple_file() {
+        let dir = tmpdir("simple");
+        let input = write_input(
+            &dir,
+            "the cat sat on the mat. The dog sat too!\nthe end\n",
+        );
+        let out = ingest_file(&input, &dir.join("shards"), &small_cfg()).unwrap();
+        assert_eq!(out.stats.lines, 2);
+        assert_eq!(out.stats.sentences, 3);
+        assert_eq!(out.stats.raw_tokens, 12);
+        assert_eq!(out.stats.oov_tokens, 0);
+        assert_eq!(out.stats.kept_tokens, 12);
+        // "the" counted across sentences and cases
+        let v = &out.vocab;
+        assert_eq!(v.count(v.id("the").unwrap()), 4);
+        assert_eq!(v.id("The"), None, "vocabulary is lowercased");
+        // most frequent word gets id 0
+        assert_eq!(v.word(0), "the");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn min_count_drops_mass_into_oov() {
+        let dir = tmpdir("oov");
+        let input = write_input(&dir, "a a a a b b c\na b a\n");
+        let mut cfg = small_cfg();
+        cfg.min_count = 2; // drops the singleton c
+        let out = ingest_file(&input, &dir.join("shards"), &cfg).unwrap();
+        assert_eq!(out.vocab.len(), 2);
+        assert_eq!(out.stats.oov_tokens, 1);
+        assert_eq!(out.stats.kept_tokens, 9);
+        assert!((out.stats.oov_rate() - 1.0 / 10.0).abs() < 1e-12);
+        // the vocab's own accounting must agree with the stream's
+        assert_eq!(out.vocab.total_tokens(), out.stats.raw_tokens);
+        assert_eq!(out.vocab.retained_tokens(), out.stats.kept_tokens);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shards_split_at_token_budget_and_concatenate_in_order() {
+        let dir = tmpdir("shards");
+        let mut text = String::new();
+        for i in 0..40 {
+            text.push_str(&format!("w{} w{} w{}\n", i % 7, (i + 1) % 7, (i + 2) % 7));
+        }
+        let out = ingest_file(&input_of(&dir, &text), &dir.join("shards"), &small_cfg()).unwrap();
+        // 120 tokens at ≤16+sentence per shard → several shards
+        assert!(out.stats.shards >= 5, "got {} shards", out.stats.shards);
+        assert_eq!(out.shard_paths.len(), out.stats.shards);
+        assert_eq!(
+            decoded_stream(&dir.join("shards"), &out.vocab),
+            reference_stream(&text, &out.vocab)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn input_of(dir: &Path, text: &str) -> PathBuf {
+        write_input(dir, text)
+    }
+
+    #[test]
+    fn empty_file_yields_empty_everything() {
+        let dir = tmpdir("empty");
+        let input = write_input(&dir, "");
+        let out = ingest_file(&input, &dir.join("shards"), &small_cfg()).unwrap();
+        assert_eq!(out.vocab.len(), 0);
+        assert_eq!(out.stats.raw_tokens, 0);
+        assert_eq!(out.stats.shards, 0);
+        assert!(Corpus::read_sharded(&dir.join("shards")).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn punctuation_only_file_yields_no_tokens() {
+        let dir = tmpdir("punct");
+        let input = write_input(&dir, "... !!! ???\n\n---\n");
+        let out = ingest_file(&input, &dir.join("shards"), &small_cfg()).unwrap();
+        assert_eq!(out.vocab.len(), 0);
+        assert_eq!(out.stats.sentences, 0);
+        assert_eq!(out.stats.shards, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crlf_and_unicode_inputs_round_trip() {
+        let dir = tmpdir("crlf");
+        let text = "Don\u{2019}t stop.\r\nÜberraschung CAFÉ!\r\nİstanbul 2024\r\n";
+        let input = write_input(&dir, text);
+        let out = ingest_file(&input, &dir.join("shards"), &small_cfg()).unwrap();
+        assert_eq!(out.stats.lines, 3);
+        let v = &out.vocab;
+        for w in ["don't", "stop", "überraschung", "café", "i\u{307}stanbul", "2024"] {
+            assert!(v.id(w).is_some(), "missing token {w:?}");
+        }
+        assert_eq!(
+            decoded_stream(&dir.join("shards"), v),
+            reference_stream(text, v)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn line_longer_than_chunk_budget_is_read_intact() {
+        let dir = tmpdir("longline");
+        // one line several times the 64-byte chunk budget
+        let text = format!("{}\nshort tail\n", "alpha beta ".repeat(500));
+        let input = write_input(&dir, &text);
+        let out = ingest_file(&input, &dir.join("shards"), &small_cfg()).unwrap();
+        assert_eq!(out.stats.lines, 2);
+        assert_eq!(out.stats.raw_tokens, 1002);
+        let v = &out.vocab;
+        assert_eq!(v.count(v.id("alpha").unwrap()), 500);
+        assert_eq!(
+            decoded_stream(&dir.join("shards"), v),
+            reference_stream(&text, v)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_output() {
+        let dir = tmpdir("workers");
+        let mut rng = Pcg64::new(0xD0C);
+        let mut text = String::new();
+        for _ in 0..300 {
+            let len = 1 + rng.gen_range_usize(12);
+            for _ in 0..len {
+                text.push_str(&format!("w{} ", rng.gen_range(40)));
+            }
+            text.push('\n');
+        }
+        let input = write_input(&dir, &text);
+        let mut outputs = Vec::new();
+        for workers in [1usize, 4] {
+            let mut cfg = small_cfg();
+            cfg.workers = workers;
+            cfg.chunk_bytes = 256;
+            let shard_dir = dir.join(format!("shards_{workers}"));
+            let out = ingest_file(&input, &shard_dir, &cfg).unwrap();
+            outputs.push((
+                out.vocab.to_tsv(),
+                Corpus::read_sharded(&shard_dir).unwrap(),
+                out.stats.kept_tokens,
+            ));
+        }
+        assert_eq!(outputs[0].0, outputs[1].0, "vocab must be deterministic");
+        assert_eq!(outputs[0].1, outputs[1].1, "corpus must be deterministic");
+        assert_eq!(outputs[0].2, outputs[1].2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Property: for random text over a mixed alphabet (words, digits,
+    /// punctuation, unicode, CRLF, blank lines), ingest → shards →
+    /// read_shard → decode preserves the tokenized in-vocab stream
+    /// exactly, and the token accounting balances.
+    #[test]
+    fn ingest_round_trip_property() {
+        let mut rng = Pcg64::new(0x1261);
+        let words = [
+            "alpha", "beta", "Gamma", "DELTA", "don't", "café", "x9", "42", "σίγμα",
+        ];
+        let seps = [" ", "  ", ", ", ". ", "! ", "\n", "\r\n", " — ", "\n\n"];
+        for case in 0..10 {
+            let dir = tmpdir(&format!("prop{case}"));
+            let mut text = String::new();
+            let n = 50 + rng.gen_range_usize(400);
+            for _ in 0..n {
+                text.push_str(words[rng.gen_range_usize(words.len())]);
+                text.push_str(seps[rng.gen_range_usize(seps.len())]);
+            }
+            let input = write_input(&dir, &text);
+            let mut cfg = small_cfg();
+            cfg.min_count = 1 + rng.gen_range(2); // sometimes drop rare words
+            cfg.chunk_bytes = 32 + rng.gen_range_usize(200);
+            cfg.shard_tokens = 8 + rng.gen_range(64);
+            let out = ingest_file(&input, &dir.join("shards"), &cfg).unwrap();
+            assert_eq!(
+                decoded_stream(&dir.join("shards"), &out.vocab),
+                reference_stream(&text, &out.vocab),
+                "case {case} failed round trip"
+            );
+            assert_eq!(
+                out.stats.kept_tokens + out.stats.oov_tokens,
+                out.stats.raw_tokens,
+                "case {case} token accounting"
+            );
+            assert_eq!(out.vocab.total_tokens(), out.stats.raw_tokens);
+            assert_eq!(out.vocab.retained_tokens(), out.stats.kept_tokens);
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+    }
+
+    /// Re-ingesting into the same directory must not leave shards from a
+    /// previous (larger) run behind — `read_sharded` globs the directory,
+    /// so stale files would splice an old corpus (with old ids) into the
+    /// new one.
+    #[test]
+    fn reingest_removes_stale_shards() {
+        let dir = tmpdir("stale");
+        let shards = dir.join("shards");
+        let big: String = (0..30)
+            .map(|i| format!("x{} y{} z{}\n", i, i, i))
+            .collect();
+        let big_input = write_input(&dir, &big);
+        let first = ingest_file(&big_input, &shards, &small_cfg()).unwrap();
+        assert!(first.stats.shards >= 3);
+
+        let small = "only two\n";
+        let small_input = dir.join("small.txt");
+        std::fs::write(&small_input, small).unwrap();
+        let second = ingest_file(&small_input, &shards, &small_cfg()).unwrap();
+        assert_eq!(second.stats.shards, 1);
+        // the directory holds exactly the new run's single shard
+        assert_eq!(
+            decoded_stream(&shards, &second.vocab),
+            reference_stream(small, &second.vocab)
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The in-memory pass-2 sink must produce exactly what the shard
+    /// round trip produces.
+    #[test]
+    fn ingest_to_corpus_matches_sharded_ingest() {
+        let dir = tmpdir("inmem");
+        let mut text = String::new();
+        for i in 0..60 {
+            text.push_str(&format!("alpha w{} beta w{}.\n", i % 9, (i + 4) % 9));
+        }
+        let input = write_input(&dir, &text);
+        let mut cfg = small_cfg();
+        cfg.min_count = 2;
+        let sharded = ingest_file(&input, &dir.join("shards"), &cfg).unwrap();
+        let reloaded = Corpus::read_sharded(&dir.join("shards")).unwrap();
+        let (vocab, corpus, stats) = ingest_to_corpus(&input, &cfg).unwrap();
+        assert_eq!(vocab.to_tsv(), sharded.vocab.to_tsv());
+        assert_eq!(corpus, reloaded);
+        assert_eq!(stats.kept_tokens, sharded.stats.kept_tokens);
+        assert_eq!(stats.oov_tokens, sharded.stats.oov_tokens);
+        assert_eq!(stats.shards, 0, "in-memory path writes nothing");
+        // the teeing variant persists the same shards AND returns the
+        // same corpus without a read-back
+        let (teed_out, teed_corpus) =
+            ingest_file_and_load(&input, &dir.join("shards_tee"), &cfg).unwrap();
+        assert_eq!(teed_corpus, reloaded);
+        assert_eq!(teed_out.stats.shards, sharded.stats.shards);
+        assert_eq!(
+            Corpus::read_sharded(&dir.join("shards_tee")).unwrap(),
+            reloaded
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stats_summary_mentions_the_essentials() {
+        let stats = IngestStats {
+            bytes: 1_000_000,
+            lines: 10,
+            sentences: 20,
+            written_sentences: 20,
+            raw_tokens: 100,
+            kept_tokens: 90,
+            oov_tokens: 10,
+            vocab_size: 7,
+            shards: 2,
+            pass1_secs: 0.5,
+            pass2_secs: 0.5,
+        };
+        let s = stats.summary();
+        assert!(s.contains("10 lines"));
+        assert!(s.contains("10.00% OOV"));
+        assert!(s.contains("vocab 7"));
+        assert!((stats.bytes_per_sec() - 1e6).abs() < 1.0);
+    }
+}

@@ -1,4 +1,7 @@
-//! Text pipeline: tokenization, vocabulary, token-id corpus storage.
+//! Text pipeline: tokenization, vocabulary, token-id corpus storage, and
+//! streaming raw-text ingestion ([`ingest`]: raw file → vocab + binary
+//! corpus shards, the paper's preprocess step).
 pub mod corpus;
+pub mod ingest;
 pub mod tokenize;
 pub mod vocab;

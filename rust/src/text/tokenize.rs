@@ -15,11 +15,15 @@ pub fn split_sentences(text: &str) -> Vec<&str> {
 }
 
 /// Tokenize one sentence: lowercase alphanumeric runs; apostrophes are kept
-/// inside words ("don't"), every other character is a separator.
+/// inside words ("don't"), every other character is a separator. The
+/// unicode right single quotation mark (U+2019, what most real corpora use
+/// for contractions) is normalized to the ASCII apostrophe so "don’t" and
+/// "don't" map to the same vocabulary entry.
 pub fn tokenize(sentence: &str) -> Vec<String> {
     let mut tokens = Vec::new();
     let mut current = String::new();
     for ch in sentence.chars() {
+        let ch = if ch == '\u{2019}' { '\'' } else { ch };
         if ch.is_alphanumeric() || (ch == '\'' && !current.is_empty()) {
             for lc in ch.to_lowercase() {
                 current.push(lc);
@@ -91,5 +95,39 @@ mod tests {
     fn empty_input() {
         assert!(sentences_of("").is_empty());
         assert!(tokenize("!!!").is_empty());
+    }
+
+    #[test]
+    fn crlf_line_endings_are_separators() {
+        // \r must neither join tokens nor survive inside one
+        let out = sentences_of("first line\r\nsecond line\r\n");
+        assert_eq!(out, vec![vec!["first", "line"], vec!["second", "line"]]);
+        assert_eq!(tokenize("a\rb"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn unicode_apostrophe_normalizes_to_ascii() {
+        // U+2019 (‘don’t’ as typeset in real corpora) == ASCII don't
+        assert_eq!(tokenize("Don\u{2019}t stop"), vec!["don't", "stop"]);
+        assert_eq!(tokenize("Don\u{2019}t"), tokenize("Don't"));
+        // leading/trailing curly quotes are stripped like ASCII ones
+        assert_eq!(tokenize("\u{2019}quoted\u{2019}"), vec!["quoted"]);
+    }
+
+    #[test]
+    fn multi_char_lowercasing_is_kept_whole() {
+        // 'İ' (U+0130) lowercases to the two-scalar "i\u{307}" — the token
+        // must carry both, not truncate to a single char
+        assert_eq!(tokenize("İstanbul"), vec!["i\u{307}stanbul"]);
+        // 'ẞ' lowercases to 'ß' (1:1 but non-ASCII)
+        assert_eq!(tokenize("GROẞ"), vec!["groß"]);
+    }
+
+    #[test]
+    fn very_long_lines_tokenize_without_truncation() {
+        let line = "word ".repeat(100_000);
+        let toks = tokenize(&line);
+        assert_eq!(toks.len(), 100_000);
+        assert!(toks.iter().all(|t| t == "word"));
     }
 }

@@ -13,6 +13,7 @@ pub struct Vocab {
     counts: Vec<u64>,
     index: HashMap<String, u32>,
     total_tokens: u64,
+    retained_tokens: u64,
 }
 
 /// Incremental counter used before freezing into a `Vocab`.
@@ -60,16 +61,19 @@ impl VocabBuilder {
         let mut words = Vec::with_capacity(entries.len());
         let mut counts = Vec::with_capacity(entries.len());
         let mut index = HashMap::with_capacity(entries.len());
+        let mut retained = 0u64;
         for (i, (w, c)) in entries.into_iter().enumerate() {
             index.insert(w.clone(), i as u32);
             words.push(w);
             counts.push(c);
+            retained += c;
         }
         Vocab {
             words,
             counts,
             index,
             total_tokens: self.total,
+            retained_tokens: retained,
         }
     }
 }
@@ -94,6 +98,7 @@ impl Vocab {
             counts,
             index,
             total_tokens: total,
+            retained_tokens: total,
         }
     }
 
@@ -132,19 +137,29 @@ impl Vocab {
         &self.counts
     }
 
-    /// Total tokens seen at build time (including out-of-vocab tokens).
+    /// Total tokens seen at build time, **including** the mass of words
+    /// later dropped by `min_count`/`max_size`. This is corpus size, not
+    /// trainable mass — use [`Self::retained_tokens`] for the latter.
     pub fn total_tokens(&self) -> u64 {
         self.total_tokens
     }
 
-    /// In-vocabulary token mass.
+    /// Token mass retained in the vocabulary after `min_count`/`max_size`
+    /// filtering — word2vec's `train_words`, the denominator for anything
+    /// that reasons about *trainable* tokens (subsampling, lr schedules,
+    /// OOV rates).
+    pub fn retained_tokens(&self) -> u64 {
+        self.retained_tokens
+    }
+
+    /// In-vocabulary token mass (alias for [`Self::retained_tokens`]).
     pub fn in_vocab_tokens(&self) -> u64 {
-        self.counts.iter().sum()
+        self.retained_tokens
     }
 
     /// Unigram probability of an in-vocab word (relative to in-vocab mass).
     pub fn unigram_prob(&self, id: u32) -> f64 {
-        self.counts[id as usize] as f64 / self.in_vocab_tokens().max(1) as f64
+        self.counts[id as usize] as f64 / self.retained_tokens.max(1) as f64
     }
 
     /// word2vec keep-probability for frequent-word subsampling with
@@ -290,6 +305,45 @@ mod tests {
     fn tsv_rejects_malformed() {
         assert!(Vocab::from_tsv("word_without_tab").is_err());
         assert!(Vocab::from_tsv("w\tnotanumber").is_err());
+    }
+
+    #[test]
+    fn total_vs_retained_tokens() {
+        let mut b = VocabBuilder::new();
+        for (w, n) in [("a", 6), ("b", 4), ("c", 2), ("d", 1)] {
+            for _ in 0..n {
+                b.add_token(w);
+            }
+        }
+        // no filtering: both accessors agree
+        let full = b.clone().build(1, usize::MAX);
+        assert_eq!(full.total_tokens(), 13);
+        assert_eq!(full.retained_tokens(), 13);
+        // min_count drops d's mass from retained but not from total
+        let filtered = b.clone().build(2, usize::MAX);
+        assert_eq!(filtered.total_tokens(), 13);
+        assert_eq!(filtered.retained_tokens(), 12);
+        assert_eq!(filtered.in_vocab_tokens(), 12);
+        // max_size cap drops the tail's mass too
+        let capped = b.build(1, 2);
+        assert_eq!(capped.total_tokens(), 13);
+        assert_eq!(capped.retained_tokens(), 10);
+    }
+
+    #[test]
+    fn unigram_prob_uses_retained_mass() {
+        let mut b = VocabBuilder::new();
+        for (w, n) in [("a", 8), ("b", 2), ("rare", 1)] {
+            for _ in 0..n {
+                b.add_token(w);
+            }
+        }
+        let v = b.build(2, usize::MAX); // drops "rare"
+        // probabilities are relative to the 10 retained tokens, not 11
+        assert!((v.unigram_prob(0) - 0.8).abs() < 1e-12);
+        assert!((v.unigram_prob(1) - 0.2).abs() < 1e-12);
+        let total: f64 = (0..v.len() as u32).map(|i| v.unigram_prob(i)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
     }
 
     #[test]

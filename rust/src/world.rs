@@ -1,22 +1,43 @@
-//! Experiment "world" construction: the synthetic corpus, its vocabulary,
-//! the planted ground truth and the gold benchmark suite, all derived
-//! deterministically from one `ExperimentConfig`. Shared by the CLI, the
-//! examples and every bench harness so that rows of the same table are
-//! always measured against the same data.
+//! Experiment "world" construction: corpus + vocabulary + benchmark suite
+//! from either of the two corpus sources, all derived deterministically so
+//! that rows of the same table are always measured against the same data.
+//!
+//! * [`build_world`] — the synthetic generator: planted ground truth,
+//!   Zipf corpus, gold benchmark suite (every bench harness and the
+//!   default CLI path).
+//! * [`World::from_text`] — raw-text ingestion: a real text file is
+//!   streamed through [`crate::text::ingest`] (two-pass vocab + binary
+//!   shards), optionally scored against a `questions-words.txt` analogy
+//!   file. No planted ground truth exists, so `gt` is `None`.
 
 use crate::gen::benchmarks::{build_suite, Benchmark};
 use crate::gen::corpus::{
     build_ground_truth, generate_corpus, vocab_of, GeneratorConfig, GroundTruth,
 };
 use crate::text::corpus::Corpus;
+use crate::text::ingest::{ingest_file_and_load, ingest_to_corpus, IngestConfig, IngestStats};
 use crate::text::vocab::Vocab;
 use crate::util::config::ExperimentConfig;
+use std::path::{Path, PathBuf};
 
 pub struct World {
-    pub gt: GroundTruth,
+    /// planted ground truth — `Some` only for the synthetic generator
+    pub gt: Option<GroundTruth>,
     pub corpus: Corpus,
     pub vocab: Vocab,
     pub suite: Vec<Benchmark>,
+}
+
+/// Options for [`World::from_text`].
+#[derive(Clone, Debug, Default)]
+pub struct TextWorldOptions {
+    pub ingest: IngestConfig,
+    /// where to persist the binary shards + vocab.tsv; with `None`
+    /// nothing touches disk — pass 2 streams the id corpus straight into
+    /// memory
+    pub shard_dir: Option<PathBuf>,
+    /// optional `questions-words.txt` analogy file to evaluate against
+    pub questions: Option<PathBuf>,
 }
 
 /// Build the full synthetic world for a config.
@@ -34,10 +55,60 @@ pub fn build_world(cfg: &ExperimentConfig) -> World {
     let vocab = vocab_of(&corpus, cfg.vocab);
     let suite = build_suite(&gt, cfg.seed ^ 0xBE);
     World {
-        gt,
+        gt: Some(gt),
         corpus,
         vocab,
         suite,
+    }
+}
+
+impl World {
+    /// Build a world from a raw text file: two-pass streaming ingestion
+    /// (memory bounded by chunk size + the compact id corpus, never the
+    /// raw text). With `shard_dir` set the binary shard + `vocab.tsv`
+    /// layout is persisted there while the same sentences stream into
+    /// memory; otherwise pass 2 feeds the corpus directly into memory
+    /// with no disk I/O at all. Returns the world plus the ingestion
+    /// report.
+    pub fn from_text(
+        text: &Path,
+        opts: &TextWorldOptions,
+    ) -> Result<(World, IngestStats), String> {
+        let (vocab, corpus, stats) = match &opts.shard_dir {
+            Some(dir) => {
+                // tee: shards are persisted while the same sentences land
+                // in memory, so training doesn't re-read what pass 2
+                // just wrote
+                let (out, corpus) = ingest_file_and_load(text, dir, &opts.ingest)?;
+                (out.vocab, corpus, out.stats)
+            }
+            None => ingest_to_corpus(text, &opts.ingest)?,
+        };
+        if vocab.is_empty() {
+            return Err(format!(
+                "ingest of {} produced an empty vocabulary (min_count {} too high, \
+                 or no tokenizable text)",
+                text.display(),
+                opts.ingest.min_count
+            ));
+        }
+        let suite = match &opts.questions {
+            Some(q) => {
+                let qw = crate::eval::questions::load_questions_words(q, &vocab)?;
+                crate::info!("{}", qw.summary());
+                qw.suite
+            }
+            None => Vec::new(),
+        };
+        Ok((
+            World {
+                gt: None,
+                corpus,
+                vocab,
+                suite,
+            },
+            stats,
+        ))
     }
 }
 
@@ -56,6 +127,7 @@ mod tests {
         assert_eq!(w1.corpus, w2.corpus);
         assert_eq!(w1.vocab.len(), 150);
         assert_eq!(w1.suite.len(), 8);
+        assert!(w1.gt.is_some());
         // corpus tokens all within vocab
         for s in &w1.corpus.sentences {
             assert!(s.iter().all(|&t| (t as usize) < 150));
@@ -72,5 +144,81 @@ mod tests {
         cfg.seed = 999;
         let w2 = build_world(&cfg);
         assert_ne!(w1.corpus, w2.corpus);
+    }
+
+    #[test]
+    fn from_text_builds_a_trainable_world() {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_world_text_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("corpus.txt");
+        let mut text = String::new();
+        for i in 0..50 {
+            text.push_str(&format!(
+                "the quick fox number {} jumps over the lazy dog.\n",
+                i % 5
+            ));
+        }
+        std::fs::write(&input, &text).unwrap();
+        let questions = dir.join("questions.txt");
+        std::fs::write(&questions, ": pets\nfox dog quick lazy\n").unwrap();
+
+        let mut opts = TextWorldOptions::default();
+        opts.ingest.min_count = 1;
+        opts.ingest.workers = 2;
+        opts.questions = Some(questions);
+        let (world, stats) = World::from_text(&input, &opts).unwrap();
+        assert!(world.gt.is_none());
+        assert_eq!(world.corpus.len(), 50);
+        assert_eq!(stats.lines, 50);
+        assert!(world.vocab.id("fox").is_some());
+        assert_eq!(world.suite.len(), 1, "questions file becomes the suite");
+        assert_eq!(world.suite[0].name, "qw-pets");
+        // id-encoded corpus round-trips through the vocab
+        let first = &world.corpus.sentences[0];
+        assert_eq!(world.vocab.word(first[0]), "the");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn from_text_persists_shards_when_asked() {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_world_persist_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("corpus.txt");
+        std::fs::write(&input, "alpha beta gamma.\nbeta gamma delta.\n").unwrap();
+        let shards = dir.join("shards");
+        let mut opts = TextWorldOptions::default();
+        opts.ingest.min_count = 1;
+        opts.shard_dir = Some(shards.clone());
+        let (world, _) = World::from_text(&input, &opts).unwrap();
+        assert!(shards.join("shard_0.bin").exists());
+        assert!(shards.join("vocab.tsv").exists());
+        let reloaded = Corpus::read_sharded(&shards).unwrap();
+        assert_eq!(reloaded, world.corpus);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn from_text_rejects_empty_vocab() {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_world_empty_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let input = dir.join("corpus.txt");
+        std::fs::write(&input, "a b c\n").unwrap();
+        let mut opts = TextWorldOptions::default();
+        opts.ingest.min_count = 100; // everything dropped
+        let err = World::from_text(&input, &opts).unwrap_err();
+        assert!(err.contains("empty vocabulary"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

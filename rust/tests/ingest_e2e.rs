@@ -1,0 +1,256 @@
+//! Raw-text ingestion acceptance suite: a synthetic corpus rendered to a
+//! plain text file must survive ingest → shards → reload **exactly**
+//! (token stream + counts), and the full divide → train → merge → eval
+//! pipeline must run end-to-end from the text file on the native backend
+//! with quality matching the direct synthetic run.
+
+use dw2v::coordinator::leader;
+use dw2v::embedding::Embedding;
+use dw2v::eval::report::evaluate_suite;
+use dw2v::gen::benchmarks::Benchmark;
+use dw2v::runtime::backend::ModelShape;
+use dw2v::runtime::native::NativeBackend;
+use dw2v::text::corpus::Corpus;
+use dw2v::text::ingest::{ingest_file, IngestConfig};
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::rng::Pcg64;
+use dw2v::world::{build_world, TextWorldOptions, World};
+use std::path::{Path, PathBuf};
+
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 2000;
+    cfg.vocab = 300;
+    cfg.clusters = 10;
+    cfg.truth_dim = 8;
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 25.0; // 4 sub-models
+    cfg.mappers = 2;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 8.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "dw2v_ingest_e2e_{name}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Render an id corpus as raw text, one sentence per line (`w<id>` words,
+/// a few CRLF line endings and punctuation variants for realism).
+fn render_text(corpus: &Corpus, path: &Path) {
+    use std::io::Write;
+    let mut out = std::io::BufWriter::new(std::fs::File::create(path).unwrap());
+    for (i, sent) in corpus.sentences.iter().enumerate() {
+        let words: Vec<String> = sent.iter().map(|&t| format!("w{t}")).collect();
+        let terminator = match i % 4 {
+            0 => ".",
+            1 => "!",
+            2 => "?",
+            _ => "",
+        };
+        let ending = if i % 3 == 0 { "\r\n" } else { "\n" };
+        write!(out, "{}{terminator}{ending}", words.join(" ")).unwrap();
+    }
+}
+
+/// Token counts per word id, straight from an id corpus.
+fn corpus_counts(corpus: &Corpus, vocab_size: usize) -> Vec<u64> {
+    let mut counts = vec![0u64; vocab_size];
+    for s in &corpus.sentences {
+        for &t in s {
+            counts[t as usize] += 1;
+        }
+    }
+    counts
+}
+
+#[test]
+fn text_round_trip_preserves_stream_and_counts() {
+    let cfg = small_cfg();
+    let world = build_world(&cfg);
+    let dir = tmpdir("roundtrip");
+    let text_path = dir.join("corpus.txt");
+    render_text(&world.corpus, &text_path);
+
+    let icfg = IngestConfig {
+        min_count: 1,
+        max_vocab: usize::MAX,
+        workers: 4,
+        chunk_bytes: 8 << 10,
+        shard_tokens: 4_000, // ~36k tokens → ~9 shards
+    };
+    let out = ingest_file(&text_path, &dir.join("shards"), &icfg).unwrap();
+
+    // memory-bounded sharding really sharded
+    assert!(out.stats.shards >= 2, "expected several shards, got {}", out.stats.shards);
+    assert_eq!(out.stats.oov_tokens, 0, "min_count 1 must keep everything");
+    assert_eq!(out.stats.raw_tokens, world.corpus.total_tokens());
+
+    // per-word counts survive the text round trip
+    let original = corpus_counts(&world.corpus, cfg.vocab);
+    for (id, &count) in original.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let new_id = out
+            .vocab
+            .id(&format!("w{id}"))
+            .unwrap_or_else(|| panic!("w{id} missing from ingested vocab"));
+        assert_eq!(out.vocab.count(new_id), count, "count mismatch for w{id}");
+    }
+
+    // the concatenated decoded stream equals the original token stream
+    let reloaded = Corpus::read_sharded(&dir.join("shards")).unwrap();
+    let decoded: Vec<String> = reloaded
+        .sentences
+        .iter()
+        .flatten()
+        .map(|&id| out.vocab.word(id).to_string())
+        .collect();
+    let expected: Vec<String> = world
+        .corpus
+        .sentences
+        .iter()
+        .flatten()
+        .map(|&id| format!("w{id}"))
+        .collect();
+    assert_eq!(decoded, expected);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipeline_trains_end_to_end_from_text() {
+    let cfg = small_cfg();
+    let world = build_world(&cfg);
+    let dir = tmpdir("pipeline");
+    let text_path = dir.join("corpus.txt");
+    render_text(&world.corpus, &text_path);
+
+    let mut opts = TextWorldOptions::default();
+    opts.ingest.min_count = 1;
+    opts.ingest.workers = 2;
+    opts.ingest.shard_tokens = 8_000;
+    opts.shard_dir = Some(dir.join("shards"));
+    let (text_world, stats) = World::from_text(&text_path, &opts).unwrap();
+    assert!(stats.shards >= 2);
+    assert!(text_world.gt.is_none());
+
+    // translate the gold suite into the ingested id space
+    let remap = |w: u32| text_world.vocab.id(&format!("w{w}"));
+    let suite: Vec<Benchmark> = world.suite.iter().map(|b| b.remap_words(remap)).collect();
+    let kept: usize = suite.iter().map(|b| b.len()).sum();
+    let total: usize = world.suite.iter().map(|b| b.len()).sum();
+    assert!(
+        kept as f64 > 0.9 * total as f64,
+        "suite lost too many items in the remap: {kept}/{total}"
+    );
+
+    let backend = NativeBackend::new(ModelShape::for_experiment(&cfg, text_world.vocab.len()));
+    let rep = leader::run_pipeline(&cfg, &text_world.corpus, &text_world.vocab, &suite, &backend)
+        .expect("pipeline from text");
+    assert_eq!(rep.train.submodels.len(), 4);
+    assert!(rep.train.pairs > 20_000, "pairs={}", rep.train.pairs);
+    assert!(rep.scores.iter().all(|s| s.score.is_finite()));
+
+    // quality: clearly better than a random embedding on similarity
+    let sim_mean = |scores: &[dw2v::eval::report::BenchmarkScore]| {
+        let sims: Vec<f64> = scores
+            .iter()
+            .filter(|s| s.name.starts_with("sim"))
+            .map(|s| s.score)
+            .collect();
+        sims.iter().sum::<f64>() / sims.len().max(1) as f64
+    };
+    let mut rng = Pcg64::new(1);
+    let mut rand_emb = Embedding::zeros(text_world.vocab.len(), cfg.dim);
+    for v in rand_emb.data.iter_mut() {
+        *v = rng.gen_gauss() as f32;
+    }
+    let rand_scores = evaluate_suite(&rand_emb, &suite, 1);
+    let trained = sim_mean(&rep.scores);
+    let random = sim_mean(&rand_scores);
+    assert!(
+        trained > random + 0.08,
+        "trained {trained:.3} vs random {random:.3}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The checked-in CI fixture must ingest, parse its questions file, and
+/// train — the same artifacts the workflow's smoke run drives from the
+/// CLI.
+#[test]
+fn fixture_corpus_ingests_and_evaluates() {
+    let fixtures = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    let mut opts = TextWorldOptions::default();
+    opts.ingest.min_count = 1;
+    opts.ingest.workers = 2;
+    opts.questions = Some(fixtures.join("questions-words-tiny.txt"));
+    let (world, stats) =
+        World::from_text(&fixtures.join("tiny_corpus.txt"), &opts).unwrap();
+    assert!(stats.lines >= 30);
+    assert!(world.vocab.id("king").is_some());
+    assert!(world.vocab.id("don't").is_some(), "apostrophes survive");
+    assert_eq!(world.suite.len(), 2, "both question sections in-vocab");
+    let total: usize = world.suite.iter().map(|b| b.len()).sum();
+    assert_eq!(total, 10, "all fixture questions map into the vocab");
+
+    // a quick hogwild run produces finite scores over the real benchmark
+    let mut cfg = small_cfg();
+    cfg.dim = 12;
+    let mut scfg = leader::sgns_config(&cfg);
+    scfg.epochs = 3;
+    let (emb, _) = dw2v::sgns::hogwild::train(&world.corpus, &world.vocab, &scfg, 2, 3);
+    let scores = evaluate_suite(&emb, &world.suite, 3);
+    assert_eq!(scores.len(), 2);
+    assert!(scores.iter().all(|s| s.score.is_finite()));
+    assert!(scores.iter().all(|s| s.oov_words == 0));
+}
+
+/// The hogwild baseline also trains from an ingested world, and its lr
+/// schedule (regression-fixed in `sgns::schedule`) anneals to the floor
+/// on a real token-frequency distribution, not just the synthetic one.
+#[test]
+fn hogwild_from_text_anneals_and_learns() {
+    let mut cfg = small_cfg();
+    cfg.sentences = 1200;
+    let world = build_world(&cfg);
+    let dir = tmpdir("hogwild");
+    let text_path = dir.join("corpus.txt");
+    render_text(&world.corpus, &text_path);
+
+    let mut opts = TextWorldOptions::default();
+    opts.ingest.min_count = 1;
+    opts.ingest.workers = 2;
+    let (text_world, _) = World::from_text(&text_path, &opts).unwrap();
+
+    let scfg = leader::sgns_config(&cfg);
+    let (emb, stats) =
+        dw2v::sgns::hogwild::train(&text_world.corpus, &text_world.vocab, &scfg, 2, 7);
+    assert!(emb.data.iter().all(|x| x.is_finite()));
+    let ratio = stats.pairs as f64 / stats.expected_pairs.max(1) as f64;
+    assert!(
+        (ratio - 1.0).abs() < 0.12,
+        "emitted {} vs expected {} (ratio {ratio:.3})",
+        stats.pairs,
+        stats.expected_pairs
+    );
+    assert!(
+        stats.final_lr <= scfg.lr0 * 0.12 + scfg.lr_min,
+        "final lr {} did not anneal",
+        stats.final_lr
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
