@@ -1,0 +1,91 @@
+//! Multi-process pipeline demo: persist a synthetic corpus as shard
+//! files, spawn one `dw2v train-worker` OS process per sub-model, merge
+//! and evaluate whatever comes back.
+//!
+//!     cargo build --bin dw2v && cargo run --example procs_pipeline
+//!
+//! The workers share **nothing** at training time — no address space, no
+//! parameters, no sockets. Their only inputs are the shard directory and
+//! the `(seed, strategy, rate, epoch)` tuple that makes the stateless
+//! divider agree across processes; their only output is a versioned
+//! sub-model artifact. This is the paper's zero-synchronization claim
+//! made literal.
+
+use dw2v::coordinator::procs::{self, ProcsOptions};
+use dw2v::eval::report;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+
+fn main() {
+    let worker_exe = match procs::find_worker_exe() {
+        Ok(exe) => exe,
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            return;
+        }
+    };
+
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 4000;
+    cfg.vocab = 500;
+    cfg.clusters = 12;
+    cfg.dim = 24;
+    cfg.epochs = 2;
+    cfg.rate_percent = 25.0; // 4 worker processes
+    cfg.min_count_base = 12.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+
+    // 1. persist the corpus — the only medium the workers ever touch
+    let dir = std::env::temp_dir().join(format!("dw2v_procs_example_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("create dir");
+    let world = build_world(&cfg);
+    world.corpus.write_sharded(&dir, 6).expect("write shards");
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).expect("write vocab");
+    println!(
+        "persisted {} sentences / {} tokens as 6 shards in {}",
+        world.corpus.len(),
+        world.corpus.total_tokens(),
+        dir.display()
+    );
+
+    // 2. spawn + monitor + collect + merge + eval
+    let opts = ProcsOptions {
+        worker_exe,
+        shard_dir: dir.clone(),
+        out_dir: dir.join("submodels"),
+        extra_env: Vec::new(),
+    };
+    let rep = match procs::run_multiprocess(&cfg, &world.suite, &opts) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("multi-process run failed: {e}");
+            let _ = std::fs::remove_dir_all(&dir);
+            std::process::exit(1);
+        }
+    };
+
+    println!("\nworker outcomes:");
+    for o in &rep.outcomes {
+        println!("  worker {}: {} ({:.2}s)", o.submodel, o.fate, o.secs);
+    }
+    println!(
+        "train {:.2}s across {} processes | merge {:.2}s | eval {:.2}s",
+        rep.train_secs,
+        rep.outcomes.len(),
+        rep.tail.merged.seconds,
+        rep.tail.eval_secs
+    );
+    println!(
+        "merged vocab: {} / {}",
+        rep.tail.merged.embedding.present_count(),
+        world.vocab.len()
+    );
+    println!("\n{}", report::format_header(&rep.tail.scores));
+    println!(
+        "{}",
+        report::format_row("multi-process shuffle 25%", &rep.tail.scores)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -39,7 +39,8 @@ fn main() {
         DivideStrategy::RandomSampling,
         DivideStrategy::Shuffle,
     ] {
-        let divider = Divider::new(strategy.clone(), cfg.rate_percent, cfg.seed, corpus.len());
+        let divider = Divider::new(strategy.clone(), cfg.rate_percent, cfg.seed, corpus.len())
+            .expect("valid rate");
         let take = 10.min(divider.num_submodels);
         let mut subs = Vec::new();
         let mut buf = Vec::new();

@@ -103,6 +103,56 @@ fn main() {
             ]),
         );
     }
+    // multi-process system row: the same corpus persisted to shard files
+    // and trained by 100/r worker OS processes (streaming the shards from
+    // disk), coordinated + merged by coordinator::procs — the train number
+    // includes process spawn and artifact I/O, i.e. the real end-to-end
+    // cost of process isolation versus the in-process rows above
+    {
+        let dir = std::env::temp_dir().join(format!("dw2v_t4_procs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).expect("procs dir");
+        world.corpus.write_sharded(&dir, 8).expect("write shards");
+        std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).expect("write vocab");
+        cfg.rate_percent = 25.0;
+        cfg.merge = MergeMethod::AlirPca;
+        let opts = dw2v::coordinator::procs::ProcsOptions {
+            worker_exe: std::path::PathBuf::from(env!("CARGO_BIN_EXE_dw2v")),
+            shard_dir: dir.clone(),
+            out_dir: dir.join("submodels"),
+            extra_env: Vec::new(),
+        };
+        match dw2v::coordinator::procs::run_multiprocess(&cfg, &[], &opts) {
+            Ok(rep) => {
+                let per_worker: f64 = rep
+                    .outcomes
+                    .iter()
+                    .map(|o| o.secs)
+                    .fold(0.0, f64::max);
+                table.row(
+                    "multi-process 25% (4 procs)",
+                    vec![
+                        format!("{:.2}", rep.train_secs),
+                        format!("{:.3}", per_worker),
+                        "-".into(),
+                        format!("{:.3}", rep.tail.merged.seconds),
+                        format!("{}", rep.survivors()),
+                    ],
+                    obj(vec![
+                        ("system", s("procs")),
+                        ("rate", num(25.0)),
+                        ("train_secs", num(rep.train_secs)),
+                        ("slowest_worker_secs", num(per_worker)),
+                        ("alir_merge_secs", num(rep.tail.merged.seconds)),
+                        ("survivors", num(rep.survivors() as f64)),
+                    ]),
+                );
+            }
+            Err(e) => println!("multi-process row skipped: {e}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
     table.finish();
     println!("\nexpected shape: per-model train time ~linear in rate (this is the");
     println!("paper's 'Avg. Training Time' — one dedicated node per reducer); the");

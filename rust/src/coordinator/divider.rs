@@ -17,7 +17,7 @@
 //! state or coordination — precisely the statelessness the paper claims
 //! for its MapReduce mappers.
 
-use crate::util::config::DivideStrategy;
+use crate::util::config::{validate_rate_percent, DivideStrategy};
 use crate::util::rng::SplitMix64;
 
 #[derive(Clone, Debug)]
@@ -31,20 +31,26 @@ pub struct Divider {
 }
 
 impl Divider {
+    /// Build a divider for sampling rate `rate_percent`. The rate must lie
+    /// in `(0, 100]` — see [`validate_rate_percent`]; out-of-range values
+    /// (which used to saturate `num_submodels` to `usize::MAX` at `0` or
+    /// yield nonsense Bernoulli rates when negative / `> 100`) are
+    /// rejected with an error.
     pub fn new(
         strategy: DivideStrategy,
         rate_percent: f64,
         seed: u64,
         total_sentences: usize,
-    ) -> Self {
+    ) -> Result<Self, String> {
+        validate_rate_percent(rate_percent)?;
         let num = ((100.0 / rate_percent).round() as usize).max(1);
-        Self {
+        Ok(Self {
             strategy,
             num_submodels: num,
             rate: rate_percent / 100.0,
             seed,
             total_sentences,
-        }
+        })
     }
 
     /// Stateless uniform hash in [0,1) for one routing decision.
@@ -116,7 +122,7 @@ mod tests {
 
     #[test]
     fn equal_partitioning_is_contiguous_and_disjoint() {
-        let d = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000);
+        let d = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000).unwrap();
         assert_eq!(d.num_submodels, 10);
         let per = collect(&d, 0);
         let mut all: Vec<usize> = per.iter().flatten().copied().collect();
@@ -132,7 +138,7 @@ mod tests {
 
     #[test]
     fn random_sampling_rate_and_epoch_stability() {
-        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 2, 5000);
+        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 2, 5000).unwrap();
         let per0 = collect(&d, 0);
         let per5 = collect(&d, 5);
         assert_eq!(per0, per5, "RandomSampling must replay the same sample");
@@ -144,7 +150,7 @@ mod tests {
 
     #[test]
     fn shuffle_resamples_each_epoch() {
-        let d = Divider::new(DivideStrategy::Shuffle, 10.0, 3, 5000);
+        let d = Divider::new(DivideStrategy::Shuffle, 10.0, 3, 5000).unwrap();
         let per0 = collect(&d, 0);
         let per1 = collect(&d, 1);
         assert_ne!(per0, per1, "Shuffle must draw fresh samples per epoch");
@@ -158,7 +164,7 @@ mod tests {
 
     #[test]
     fn sentences_can_go_to_multiple_submodels() {
-        let d = Divider::new(DivideStrategy::Shuffle, 50.0, 4, 2000);
+        let d = Divider::new(DivideStrategy::Shuffle, 50.0, 4, 2000).unwrap();
         assert_eq!(d.num_submodels, 2);
         let mut buf = Vec::new();
         let mut multi = 0;
@@ -176,7 +182,7 @@ mod tests {
     fn routing_is_order_independent() {
         // the same (epoch, sentence) query must give the same answer no
         // matter when it is asked — the statelessness property
-        let d = Divider::new(DivideStrategy::Shuffle, 20.0, 5, 100);
+        let d = Divider::new(DivideStrategy::Shuffle, 20.0, 5, 100).unwrap();
         let mut a = Vec::new();
         let mut b = Vec::new();
         d.targets(2, 57, &mut a);
@@ -189,16 +195,16 @@ mod tests {
 
     #[test]
     fn seeds_decorrelate() {
-        let d1 = Divider::new(DivideStrategy::RandomSampling, 10.0, 100, 3000);
-        let d2 = Divider::new(DivideStrategy::RandomSampling, 10.0, 101, 3000);
+        let d1 = Divider::new(DivideStrategy::RandomSampling, 10.0, 100, 3000).unwrap();
+        let d2 = Divider::new(DivideStrategy::RandomSampling, 10.0, 101, 3000).unwrap();
         assert_ne!(collect(&d1, 0), collect(&d2, 0));
     }
 
     #[test]
     fn expected_per_submodel() {
-        let eq = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000);
+        let eq = Divider::new(DivideStrategy::EqualPartitioning, 10.0, 1, 1000).unwrap();
         assert_eq!(eq.expected_per_submodel(), 100.0);
-        let sh = Divider::new(DivideStrategy::Shuffle, 10.0, 1, 1000);
+        let sh = Divider::new(DivideStrategy::Shuffle, 10.0, 1, 1000).unwrap();
         assert_eq!(sh.expected_per_submodel(), 100.0);
     }
 
@@ -211,7 +217,7 @@ mod tests {
         // ℓ=20 threshold ≈ 0.0095 for per-token probability; per-sentence
         // here) and verify no sub-corpus misses it.
         let n_sentences = 20_000;
-        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 77, n_sentences);
+        let d = Divider::new(DivideStrategy::RandomSampling, 10.0, 77, n_sentences).unwrap();
         // the "word" occurs in every 50th sentence
         let occurs: Vec<usize> = (0..n_sentences).step_by(50).collect();
         let mut buf = Vec::new();
@@ -229,8 +235,29 @@ mod tests {
     }
 
     #[test]
+    fn out_of_range_rates_are_rejected() {
+        // r = 0 used to make `(100.0 / r).round() as usize` saturate to
+        // usize::MAX sub-models (an OOM on the reducer vec); negatives and
+        // > 100 silently produced nonsense Bernoulli rates
+        for bad in [0.0, -0.0, -5.0, 100.0001, 150.0, f64::NAN, f64::INFINITY] {
+            for strategy in STRATEGIES {
+                assert!(
+                    Divider::new(strategy, bad, 1, 100).is_err(),
+                    "rate {bad} must be rejected"
+                );
+            }
+        }
+        // boundaries: 0 is exclusive (checked above), 100 inclusive
+        let d = Divider::new(DivideStrategy::Shuffle, 100.0, 1, 100).unwrap();
+        assert_eq!(d.num_submodels, 1);
+        // tiny-but-positive rates are legal
+        let d = Divider::new(DivideStrategy::Shuffle, 0.01, 1, 100).unwrap();
+        assert_eq!(d.num_submodels, 10_000);
+    }
+
+    #[test]
     fn rate_100_single_model_gets_everything() {
-        let d = Divider::new(DivideStrategy::Shuffle, 100.0, 9, 500);
+        let d = Divider::new(DivideStrategy::Shuffle, 100.0, 9, 500).unwrap();
         assert_eq!(d.num_submodels, 1);
         let per = collect(&d, 0);
         // Bernoulli(1.0) -> all sentences
@@ -259,7 +286,7 @@ mod tests {
             let rate = [5.0, 10.0, 25.0, 50.0][rng.gen_range_usize(4)];
             let seed = rng.next_u64();
             for strategy in STRATEGIES {
-                let d = Divider::new(strategy, rate, seed, total);
+                let d = Divider::new(strategy, rate, seed, total).unwrap();
                 for epoch in 0..3 {
                     for i in 0..total {
                         d.targets(epoch, i, &mut buf);
@@ -291,7 +318,7 @@ mod tests {
             let rate = [10.0, 20.0, 25.0][rng.gen_range_usize(3)];
             let seed = rng.next_u64();
             for strategy in STRATEGIES {
-                let d = Divider::new(strategy, rate, seed, total);
+                let d = Divider::new(strategy, rate, seed, total).unwrap();
                 let mut routed = 0usize;
                 for i in 0..total {
                     d.targets(0, i, &mut buf);
@@ -326,9 +353,9 @@ mod tests {
         for _case in 0..5 {
             let total = 1000 + rng.gen_range_usize(2000);
             let seed = rng.next_u64();
-            let a = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total);
-            let b = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total);
-            let c = Divider::new(DivideStrategy::Shuffle, 20.0, seed ^ 0x5EED, total);
+            let a = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total).unwrap();
+            let b = Divider::new(DivideStrategy::Shuffle, 20.0, seed, total).unwrap();
+            let c = Divider::new(DivideStrategy::Shuffle, 20.0, seed ^ 0x5EED, total).unwrap();
             for epoch in 0..3 {
                 assert_eq!(
                     collect(&a, epoch),

@@ -59,6 +59,43 @@ pub fn sgns_config(cfg: &ExperimentConfig) -> SgnsConfig {
     }
 }
 
+/// The divider every path of a run must construct: seed decorrelated
+/// from model init, sized to the corpus. In-process reducers and
+/// multi-process workers calling this with the same `(cfg, corpus_len)`
+/// agree on every routing decision — the stateless-coordination property
+/// the whole design rests on.
+pub fn run_divider(cfg: &ExperimentConfig, corpus_len: usize) -> Result<Divider, String> {
+    Divider::new(
+        cfg.strategy.clone(),
+        cfg.rate_percent,
+        cfg.seed ^ 0xD1, // decorrelate from model init
+        corpus_len,
+    )
+}
+
+/// The model-init seed of sub-model `submodel`, derived from the
+/// experiment's root seed. Shared by the in-process leader and the
+/// multi-process workers so the two paths initialize (and therefore
+/// train) identical sub-models.
+pub fn submodel_seed(root_seed: u64, submodel: usize) -> u64 {
+    Pcg64::new(root_seed).derive(submodel as u64).next_u64()
+}
+
+/// The lr-schedule denominator for one sub-model: the calibrated
+/// per-epoch pair expectation scaled by the sub-model's expected share of
+/// the corpus and the epoch count. Kept as a single expression so the
+/// in-process and multi-process paths compute **bitwise** the same value
+/// from the same inputs.
+pub fn submodel_expected_pairs(
+    cfg: &ExperimentConfig,
+    per_epoch_pairs: f64,
+    divider: &Divider,
+    corpus_len: usize,
+) -> u64 {
+    let submodel_share = divider.expected_per_submodel() / corpus_len.max(1) as f64;
+    (per_epoch_pairs * submodel_share * cfg.epochs as f64) as u64
+}
+
 /// Divide + train: run `cfg.epochs` MapReduce rounds with one
 /// backend-resident trainer per sub-model and return the trained
 /// sub-models.
@@ -69,19 +106,13 @@ pub fn train_submodels<B: Backend>(
     backend: &B,
 ) -> Result<TrainOutput, String> {
     let scfg = sgns_config(cfg);
-    let divider = Arc::new(Divider::new(
-        cfg.strategy.clone(),
-        cfg.rate_percent,
-        cfg.seed ^ 0xD1, // decorrelate from model init
-        corpus.len(),
-    ));
+    let divider = Arc::new(run_divider(cfg, corpus.len())?);
     let n = divider.num_submodels;
     // calibrated pair expectation (subsampling keep-mass × mean dynamic
     // window, see `sgns::schedule`), scaled to each sub-model's expected
     // share of the corpus sentences
     let per_epoch = crate::sgns::schedule::expected_pairs_per_epoch(corpus, vocab, &scfg);
-    let submodel_share = divider.expected_per_submodel() / corpus.len().max(1) as f64;
-    let expected_pairs = (per_epoch * submodel_share * cfg.epochs as f64) as u64;
+    let expected_pairs = submodel_expected_pairs(cfg, per_epoch, &divider, corpus.len());
 
     info!(
         "train: {} sub-models (strategy={}, r={}%), {} epochs, expected ~{} pairs each",
@@ -92,10 +123,9 @@ pub fn train_submodels<B: Backend>(
         expected_pairs
     );
 
-    let root = Pcg64::new(cfg.seed);
     let mut reducers = Vec::with_capacity(n);
     for s in 0..n {
-        let seed = root.derive(s as u64).next_u64();
+        let seed = submodel_seed(cfg.seed, s);
         let trainer = SubModelTrainer::new(backend, vocab, &scfg, expected_pairs, seed)?;
         reducers.push(TrainReducer::new(trainer));
     }
@@ -158,6 +188,34 @@ pub struct PipelineReport {
     pub alir_displacement: Vec<f64>,
 }
 
+/// The merge → eval tail shared by the in-process pipeline and the
+/// multi-process coordinator: whatever trained the sub-models — reducer
+/// threads or collected worker artifacts (possibly fewer than requested,
+/// when workers died) — the consensus is built and scored the same way.
+pub struct MergeEvalOutput {
+    pub merged: MergeResult,
+    pub scores: Vec<BenchmarkScore>,
+    pub eval_secs: f64,
+}
+
+/// Merge the trained sub-models and evaluate the consensus — the tail
+/// every training path funnels into. See [`MergeEvalOutput`].
+pub fn merge_and_eval(
+    cfg: &ExperimentConfig,
+    submodels: &[Embedding],
+    suite: &[Benchmark],
+) -> MergeEvalOutput {
+    let merged = merge_trained(cfg, submodels);
+    let timer = Timer::start("eval phase");
+    let scores = evaluate_suite(&merged.embedding, suite, cfg.seed);
+    let eval_secs = timer.stop_quiet();
+    MergeEvalOutput {
+        merged,
+        scores,
+        eval_secs,
+    }
+}
+
 /// divide → train → merge → eval with the experiment's configured
 /// strategy/rate/merge method.
 pub fn run_pipeline<B: Backend>(
@@ -168,17 +226,14 @@ pub fn run_pipeline<B: Backend>(
     backend: &B,
 ) -> Result<PipelineReport, String> {
     let train = train_submodels(cfg, corpus, vocab, backend)?;
-    let merged = merge_trained(cfg, &train.submodels);
-    let timer = Timer::start("eval phase");
-    let scores = evaluate_suite(&merged.embedding, suite, cfg.seed);
-    let eval_secs = timer.stop_quiet();
+    let tail = merge_and_eval(cfg, &train.submodels, suite);
     Ok(PipelineReport {
-        scores,
-        merged_vocab: merged.embedding.present_count(),
-        merge_secs: merged.seconds,
-        alir_rounds: merged.alir_rounds,
-        alir_displacement: merged.alir_displacement.clone(),
-        eval_secs,
+        scores: tail.scores,
+        merged_vocab: tail.merged.embedding.present_count(),
+        merge_secs: tail.merged.seconds,
+        alir_rounds: tail.merged.alir_rounds,
+        alir_displacement: tail.merged.alir_displacement,
+        eval_secs: tail.eval_secs,
         train,
     })
 }

@@ -6,11 +6,71 @@
 //! (seed, epoch, sentence index, sub-model). Sentences are routed by
 //! reference: the corpus outlives the MapReduce scope, so the channels
 //! carry `&[u32]` with zero copies.
+//!
+//! Two [`RoundSource`]s feed the mappers:
+//!
+//! * [`CorpusSource`] — the in-process path: shard = contiguous sentence
+//!   range of an in-memory [`Corpus`], items borrowed with zero copies;
+//! * [`ShardFileSource`] — the multi-process path: shard = contiguous
+//!   range of on-disk `shard_*.bin` files streamed one sentence at a
+//!   time, so a training worker's peak corpus memory is a single
+//!   sentence regardless of corpus size. Global sentence indices are
+//!   assigned by concatenating the files in numeric order, making every
+//!   routing/RNG decision identical to the in-process path over the same
+//!   data.
 
 use super::divider::Divider;
 use crate::exec::mapreduce::{Mapper, RoundSource};
 use crate::text::corpus::Corpus;
-use std::sync::Arc;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// Routed sentence ids pack `(epoch, global sentence index)` into one
+/// `u64`: the low [`SID_INDEX_BITS`] bits carry the index, the high bits
+/// the epoch. Reducers derive **all** per-sentence randomness (window
+/// draws, subsampling, negatives) from this id, so an overflow of either
+/// field would silently collide RNG streams across sentences or epochs
+/// and corrupt training. The packing is therefore guarded: corpora are
+/// limited to [`MAX_ROUTED_SENTENCES`] sentences (2^40 ≈ 1.1 × 10^12) and
+/// runs to [`MAX_ROUTED_EPOCHS`] epochs (2^24 ≈ 1.7 × 10^7) — router
+/// constructors reject anything beyond, and `pack_sid` debug-asserts per
+/// call.
+pub const SID_INDEX_BITS: u32 = 40;
+/// Hard corpus-size limit implied by the sid packing (exclusive).
+pub const MAX_ROUTED_SENTENCES: u64 = 1 << SID_INDEX_BITS;
+/// Hard epoch-count limit implied by the sid packing (exclusive).
+pub const MAX_ROUTED_EPOCHS: u64 = 1 << (64 - SID_INDEX_BITS);
+
+/// Pack an (epoch, sentence index) pair into a routed sentence id. See
+/// the module constants for the documented field limits.
+#[inline]
+pub fn pack_sid(epoch: usize, idx: usize) -> u64 {
+    debug_assert!(
+        (epoch as u64) < MAX_ROUTED_EPOCHS,
+        "epoch {epoch} overflows the {}-bit sid epoch field",
+        64 - SID_INDEX_BITS
+    );
+    debug_assert!(
+        (idx as u64) < MAX_ROUTED_SENTENCES,
+        "sentence index {idx} overflows the {SID_INDEX_BITS}-bit sid index field"
+    );
+    ((epoch as u64) << SID_INDEX_BITS) | idx as u64
+}
+
+/// Cheap release-mode guard shared by the router constructors: one check
+/// per (epoch, mapper shard), not per sentence.
+fn assert_sid_capacity(total_sentences: usize, epoch: usize) {
+    assert!(
+        (total_sentences as u64) <= MAX_ROUTED_SENTENCES,
+        "corpus has {total_sentences} sentences but sid packing supports at most \
+         {MAX_ROUTED_SENTENCES} (2^{SID_INDEX_BITS}) — widen the sid layout before \
+         training corpora this large"
+    );
+    assert!(
+        (epoch as u64) < MAX_ROUTED_EPOCHS,
+        "epoch {epoch} exceeds the sid packing limit of {MAX_ROUTED_EPOCHS} epochs"
+    );
+}
 
 /// RoundSource over an in-memory corpus: shard = contiguous sentence range,
 /// items are (global sentence index, sentence).
@@ -46,7 +106,10 @@ pub struct SentenceRouter {
 }
 
 impl SentenceRouter {
+    /// Panics if the divider's corpus size or the epoch exceed the sid
+    /// packing limits ([`MAX_ROUTED_SENTENCES`] / [`MAX_ROUTED_EPOCHS`]).
     pub fn new(divider: Arc<Divider>, epoch: usize) -> Self {
+        assert_sid_capacity(divider.total_sentences, epoch);
         Self {
             divider,
             epoch,
@@ -66,10 +129,179 @@ impl<'c> Mapper<(usize, &'c [u32]), (u64, &'c [u32])> for SentenceRouter {
         // per-sentence randomness from it, so training is reproducible
         // regardless of mapper interleaving, and epochs differ (word2vec
         // re-draws windows/subsampling every pass)
-        let sid = (self.epoch as u64) << 40 | idx as u64;
+        let sid = pack_sid(self.epoch, idx);
         for &t in &self.targets {
             emit(t, (sid, sentence));
         }
+    }
+}
+
+/// The multi-process worker's mapper: routes with the same stateless
+/// [`Divider`] and sid packing as [`SentenceRouter`], but keeps only the
+/// sentences destined for **one** sub-model and emits them (owned — they
+/// were just streamed off disk) to the single local reducer. Routing
+/// decisions for every other sub-model are computed and discarded, which
+/// is exactly the paper's zero-coordination property: a worker needs
+/// nothing but `(seed, strategy, rate, epoch)` to agree with its peers on
+/// the partition.
+pub struct SubModelFilter {
+    divider: Arc<Divider>,
+    epoch: usize,
+    submodel: usize,
+    targets: Vec<usize>,
+}
+
+impl SubModelFilter {
+    /// Panics if the divider's corpus size or the epoch exceed the sid
+    /// packing limits, like [`SentenceRouter::new`].
+    pub fn new(divider: Arc<Divider>, epoch: usize, submodel: usize) -> Self {
+        assert_sid_capacity(divider.total_sentences, epoch);
+        assert!(
+            submodel < divider.num_submodels,
+            "sub-model {submodel} out of range (divider has {})",
+            divider.num_submodels
+        );
+        Self {
+            divider,
+            epoch,
+            submodel,
+            targets: Vec::new(),
+        }
+    }
+}
+
+impl Mapper<(usize, Vec<u32>), (u64, Vec<u32>)> for SubModelFilter {
+    fn map(
+        &mut self,
+        (idx, sentence): (usize, Vec<u32>),
+        emit: &mut dyn FnMut(usize, (u64, Vec<u32>)),
+    ) {
+        self.divider.targets(self.epoch, idx, &mut self.targets);
+        if self.targets.contains(&self.submodel) {
+            emit(0, (pack_sid(self.epoch, idx), sentence));
+        }
+    }
+}
+
+/// Disk-backed [`RoundSource`] over a directory of `shard_*.bin` files —
+/// the corpus feed of a multi-process training worker.
+///
+/// A mapper shard is a contiguous range of shard *files* (numeric order,
+/// see [`Corpus::shard_files`]); each file is streamed one sentence at a
+/// time through [`Corpus::stream_shard`], so peak memory per mapper is a
+/// single sentence. Items are `(global sentence index, sentence)` where
+/// the global index treats the files as one concatenated corpus —
+/// identical to the indices [`CorpusSource`] hands out over the same data
+/// loaded in memory, which is what keeps the stateless routing and
+/// per-sentence RNG of the two paths in exact agreement.
+///
+/// `RoundSource` iterators cannot carry errors, so mid-stream I/O
+/// failures latch into the source (first error wins) and end that
+/// mapper's iteration early; callers **must** check [`Self::take_error`]
+/// after the run — a worker that hit a latched error aborts instead of
+/// publishing a sub-model trained on a truncated corpus.
+pub struct ShardFileSource {
+    files: Vec<PathBuf>,
+    /// global sentence index at which each file starts
+    offsets: Vec<usize>,
+    total: usize,
+    error: Mutex<Option<String>>,
+}
+
+impl ShardFileSource {
+    /// List and validate the shard files of `dir`: headers are read (and
+    /// size-checked) up front to establish per-file sentence offsets; the
+    /// sentence bodies stay on disk.
+    pub fn open(dir: &Path) -> Result<Self, String> {
+        let files = Corpus::shard_files(dir)
+            .map_err(|e| format!("list shards in {}: {e}", dir.display()))?;
+        if files.is_empty() {
+            return Err(format!("no shard_*.bin files in {}", dir.display()));
+        }
+        let mut offsets = Vec::with_capacity(files.len());
+        let mut total = 0usize;
+        for f in &files {
+            offsets.push(total);
+            let reader = Corpus::stream_shard(f)
+                .map_err(|e| format!("open shard {}: {e}", f.display()))?;
+            total += reader.sentence_count();
+        }
+        Ok(Self {
+            files,
+            offsets,
+            total,
+            error: Mutex::new(None),
+        })
+    }
+
+    /// Total sentences across all shard files (from the validated headers).
+    pub fn total_sentences(&self) -> usize {
+        self.total
+    }
+
+    /// Number of shard files.
+    pub fn num_files(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Take the first streaming error latched during iteration, if any.
+    pub fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+
+    fn latch_error(&self, msg: String) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    /// Stream one file's sentences with global indices, latching errors.
+    fn stream_file(&self, file: usize) -> impl Iterator<Item = (usize, Vec<u32>)> + '_ {
+        let path = &self.files[file];
+        let base = self.offsets[file];
+        let mut reader = match Corpus::stream_shard(path) {
+            Ok(r) => Some(r),
+            Err(e) => {
+                self.latch_error(format!("reopen shard {}: {e}", path.display()));
+                None
+            }
+        };
+        let mut local = 0usize;
+        std::iter::from_fn(move || {
+            let r = reader.as_mut()?;
+            match r.next() {
+                Some(Ok(sentence)) => {
+                    let idx = base + local;
+                    local += 1;
+                    Some((idx, sentence))
+                }
+                Some(Err(e)) => {
+                    self.latch_error(format!("stream shard {}: {e}", path.display()));
+                    reader = None;
+                    None
+                }
+                None => None,
+            }
+        })
+    }
+}
+
+impl RoundSource for ShardFileSource {
+    type Item = (usize, Vec<u32>);
+
+    fn shard(
+        &self,
+        _round: usize,
+        shard: usize,
+        num_shards: usize,
+    ) -> Box<dyn Iterator<Item = (usize, Vec<u32>)> + '_> {
+        // contiguous partition of the *files* across mappers
+        let n = self.files.len();
+        let chunk = n.div_ceil(num_shards.max(1)).max(1);
+        let lo = (shard * chunk).min(n);
+        let hi = ((shard + 1) * chunk).min(n);
+        Box::new((lo..hi).flat_map(move |f| self.stream_file(f)))
     }
 }
 
@@ -101,12 +333,9 @@ mod tests {
     #[test]
     fn equal_partitioning_routes_contiguous_blocks() {
         let c = corpus(100);
-        let divider = Arc::new(Divider::new(
-            DivideStrategy::EqualPartitioning,
-            25.0,
-            7,
-            c.len(),
-        ));
+        let divider = Arc::new(
+            Divider::new(DivideStrategy::EqualPartitioning, 25.0, 7, c.len()).unwrap(),
+        );
         let mr = MapReduce {
             num_mappers: 3,
             queue_capacity: 16,
@@ -130,9 +359,124 @@ mod tests {
     }
 
     #[test]
+    fn sid_packing_is_unique_at_the_boundaries() {
+        assert_eq!(pack_sid(0, 0), 0);
+        // epoch and index fields must not bleed into each other: the
+        // largest index of epoch 0 stays below the smallest sid of epoch 1
+        let max_idx = (MAX_ROUTED_SENTENCES - 1) as usize;
+        assert!(pack_sid(0, max_idx) < pack_sid(1, 0));
+        assert_ne!(pack_sid(1, 0), pack_sid(0, max_idx) + 2);
+        // round-trip extraction at an arbitrary interior point
+        let sid = pack_sid(3, 17);
+        assert_eq!(sid >> SID_INDEX_BITS, 3);
+        assert_eq!(sid & (MAX_ROUTED_SENTENCES - 1), 17);
+        // the extreme corner uses every bit without wrapping
+        let hi = pack_sid((MAX_ROUTED_EPOCHS - 1) as usize, max_idx);
+        assert_eq!(hi, u64::MAX);
+    }
+
+    #[test]
+    #[should_panic(expected = "sid packing")]
+    fn router_rejects_corpora_beyond_the_sid_limit() {
+        let mut d = Divider::new(DivideStrategy::Shuffle, 50.0, 1, 10).unwrap();
+        // fake a corpus one past the 2^40-sentence limit (constructing a
+        // real one is obviously not possible in a test)
+        d.total_sentences = (MAX_ROUTED_SENTENCES + 1) as usize;
+        let _ = SentenceRouter::new(Arc::new(d), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sid packing")]
+    fn router_rejects_epochs_beyond_the_sid_limit() {
+        let d = Divider::new(DivideStrategy::Shuffle, 50.0, 1, 10).unwrap();
+        let _ = SentenceRouter::new(Arc::new(d), MAX_ROUTED_EPOCHS as usize);
+    }
+
+    fn shard_dir(name: &str, c: &Corpus, shards: usize) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_mapper_test_{name}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        c.write_sharded(&dir, shards).unwrap();
+        dir
+    }
+
+    #[test]
+    fn shard_file_source_matches_in_memory_indices() {
+        let c = corpus(57);
+        let dir = shard_dir("indices", &c, 5);
+        let src = ShardFileSource::open(&dir).unwrap();
+        assert_eq!(src.total_sentences(), 57);
+        assert_eq!(src.num_files(), 5);
+        // a single mapper shard streams the whole corpus in global order
+        let all: Vec<(usize, Vec<u32>)> = src.shard(0, 0, 1).collect();
+        assert_eq!(all.len(), 57);
+        for (i, (idx, s)) in all.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(s, &c.sentences[i]);
+        }
+        // multiple mapper shards partition the same items
+        let mut union: Vec<(usize, Vec<u32>)> = (0..3).flat_map(|m| src.shard(0, m, 3)).collect();
+        union.sort_by_key(|(i, _)| *i);
+        assert_eq!(union, all);
+        assert!(src.take_error().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_file_source_latches_streaming_errors() {
+        let c = corpus(30);
+        let dir = shard_dir("latch", &c, 3);
+        // corrupt the middle shard *after* open() validated headers: chop
+        // its tail so streaming hits a truncated sentence
+        let victim = dir.join("shard_1.bin");
+        let bytes = std::fs::read(&victim).unwrap();
+        std::fs::write(&victim, &bytes[..bytes.len() - 3]).unwrap();
+        let src = ShardFileSource::open(&dir).unwrap();
+        let got: Vec<(usize, Vec<u32>)> = src.shard(0, 0, 1).collect();
+        // iteration stopped early instead of fabricating data …
+        assert!(got.len() < 30, "got {} items", got.len());
+        // … and the error is latched for the caller
+        let err = src.take_error().expect("error must be latched");
+        assert!(err.contains("shard"), "{err}");
+        assert!(src.take_error().is_none(), "take_error drains the latch");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn submodel_filter_routes_exactly_its_share() {
+        let c = corpus(400);
+        let divider = Arc::new(
+            Divider::new(DivideStrategy::Shuffle, 25.0, 11, c.len()).unwrap(),
+        );
+        // reference: what the in-process router sends to reducer 2
+        let mut expect: Vec<(u64, Vec<u32>)> = Vec::new();
+        let mut buf = Vec::new();
+        for (i, s) in c.sentences.iter().enumerate() {
+            divider.targets(1, i, &mut buf);
+            if buf.contains(&2) {
+                expect.push((pack_sid(1, i), s.clone()));
+            }
+        }
+        let mut filter = SubModelFilter::new(Arc::clone(&divider), 1, 2);
+        let mut got: Vec<(u64, Vec<u32>)> = Vec::new();
+        for (i, s) in c.sentences.iter().enumerate() {
+            filter.map((i, s.clone()), &mut |target, item| {
+                assert_eq!(target, 0, "filter must emit to the single local reducer");
+                got.push(item);
+            });
+        }
+        assert_eq!(got, expect);
+        assert!(!got.is_empty());
+    }
+
+    #[test]
     fn shuffle_rounds_differ_but_rates_hold() {
         let c = corpus(2000);
-        let divider = Arc::new(Divider::new(DivideStrategy::Shuffle, 20.0, 9, c.len()));
+        let divider =
+            Arc::new(Divider::new(DivideStrategy::Shuffle, 20.0, 9, c.len()).unwrap());
         let mr = MapReduce {
             num_mappers: 2,
             queue_capacity: 64,

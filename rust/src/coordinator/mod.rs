@@ -2,10 +2,13 @@
 //!
 //! * [`divider`] — EqualPartitioning / RandomSampling / Shuffle (divide phase)
 //! * [`mapper`] / [`reducer`] — the MapReduce roles (train phase)
-//! * [`leader`] — end-to-end orchestration + phase timing
+//! * [`leader`] — end-to-end orchestration + phase timing (in-process)
+//! * [`procs`] — multi-process training: one OS process per sub-model
+//!   over on-disk shard files, with fault-tolerant artifact collection
 //! * [`stats`] — unigram/bigram KL divergence (Figure 1) + vocab coverage
 pub mod divider;
 pub mod leader;
 pub mod mapper;
+pub mod procs;
 pub mod reducer;
 pub mod stats;

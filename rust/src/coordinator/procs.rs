@@ -1,0 +1,588 @@
+//! Multi-process training: one OS process per sub-model, shard files as
+//! the only exchange medium.
+//!
+//! The paper's central claim is that sub-models train **fully
+//! asynchronously with zero parameter synchronization**. The in-process
+//! [`super::leader`] realizes that with reducer threads sharing an
+//! address space; this module promotes it to actual OS processes:
+//!
+//! * [`run_worker`] — the body of the `dw2v train-worker` subcommand.
+//!   Trains exactly one sub-model, streaming sentences from on-disk
+//!   `shard_*.bin` files through a [`ShardFileSource`] (peak corpus
+//!   memory: one sentence) and routing them with the same stateless
+//!   counter-based [`Divider`](super::divider::Divider) the leader uses.
+//!   Because routing is a pure function of `(seed, strategy, rate,
+//!   epoch, sentence index)`, workers need **no coordination at
+//!   training time at all** — no parameter server (Ordentlich et al.),
+//!   no sync barriers (Ji et al.), not even a socket. The finished
+//!   sub-model is published as a versioned [`SubModelArtifact`]
+//!   (write-to-temp + rename, so a killed worker can never leave a
+//!   half-written artifact behind).
+//! * [`spawn_workers`] / [`WorkerPool`] / [`run_multiprocess`] — the
+//!   coordinator: spawns `100/r` workers via `std::process::Command`,
+//!   monitors them as they exit, collects whatever artifacts came back
+//!   and runs the shared merge + eval tail
+//!   ([`super::leader::merge_and_eval`]) over the survivors.
+//!
+//! **Fault tolerance is the point, not an afterthought**: a crashed or
+//! killed worker's sub-model is simply absent, and the merge proceeds
+//! over the survivors — the paper's missing-*words* robustness
+//! (§reconstruction) promoted to missing-*sub-models* robustness. The
+//! failure is surfaced in the [`WorkerOutcome`]s, never hidden.
+//!
+//! ## Determinism
+//!
+//! A worker derives its trainer seed, divider and lr-schedule
+//! denominator through the same shared helpers as the in-process leader
+//! ([`super::leader::submodel_seed`], [`super::leader::run_divider`],
+//! [`super::leader::submodel_expected_pairs`]), and global sentence
+//! indices over the shard files match the in-memory corpus by
+//! construction. With `mappers = 1` (deterministic delivery order into
+//! the single reducer) a multi-process run therefore produces sub-models
+//! **bitwise identical** to the in-process leader path on the native
+//! backend; with more mappers the two paths are statistically equivalent
+//! (same data, same routing, different macro-batch boundaries).
+//!
+//! Test hook: a worker sleeps `DW2V_WORKER_STARTUP_SLEEP_MS`
+//! milliseconds before touching the shards when that variable is set —
+//! the kill-a-worker e2e uses it to open a deterministic window in which
+//! a victim can be SIGKILLed mid-run.
+
+use super::leader;
+use super::mapper::{ShardFileSource, SubModelFilter};
+use super::reducer::TrainReducer;
+use crate::embedding::{ArtifactMeta, Embedding, SubModelArtifact};
+use crate::exec::mapreduce::MapReduce;
+use crate::gen::benchmarks::Benchmark;
+use crate::info;
+use crate::runtime::{load_backend, Backend};
+use crate::sgns::schedule::PairEstimator;
+use crate::sgns::trainer::SubModelTrainer;
+use crate::text::vocab::Vocab;
+use crate::util::config::ExperimentConfig;
+use crate::util::logging::Timer;
+use std::path::PathBuf;
+use std::process::{Child, Command, ExitStatus};
+use std::sync::Arc;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------------
+
+/// What one `dw2v train-worker` invocation trains and where it puts it.
+pub struct WorkerSpec {
+    /// directory of `shard_*.bin` + `vocab.tsv`
+    pub shard_dir: PathBuf,
+    /// sub-model index in `0..100/r`
+    pub submodel: usize,
+    /// artifact output path
+    pub out: PathBuf,
+}
+
+/// Train one sub-model in this process — the whole worker protocol.
+/// Streams the corpus from `spec.shard_dir`, trains sub-model
+/// `spec.submodel` and atomically publishes a [`SubModelArtifact`] at
+/// `spec.out`. Any error (unreadable shards, bad index, backend failure)
+/// is returned, which the CLI turns into a non-zero exit the coordinator
+/// records as a failed worker.
+pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), String> {
+    if let Ok(ms) = std::env::var("DW2V_WORKER_STARTUP_SLEEP_MS") {
+        if let Ok(ms) = ms.parse::<u64>() {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+        }
+    }
+    let vocab_path = spec.shard_dir.join("vocab.tsv");
+    let vocab_text = std::fs::read_to_string(&vocab_path)
+        .map_err(|e| format!("read {}: {e}", vocab_path.display()))?;
+    let vocab = Vocab::from_tsv(&vocab_text)?;
+    if vocab.is_empty() {
+        return Err(format!("{} holds an empty vocabulary", vocab_path.display()));
+    }
+    let source = ShardFileSource::open(&spec.shard_dir)?;
+    let total = source.total_sentences();
+    if total == 0 {
+        return Err(format!(
+            "shards in {} hold no sentences",
+            spec.shard_dir.display()
+        ));
+    }
+
+    let divider = Arc::new(leader::run_divider(cfg, total)?);
+    if spec.submodel >= divider.num_submodels {
+        return Err(format!(
+            "sub-model index {} out of range: rate {}% implies {} sub-models",
+            spec.submodel, cfg.rate_percent, divider.num_submodels
+        ));
+    }
+
+    // estimation pass: stream the corpus once to compute the lr-schedule
+    // denominator exactly as the in-process leader does over the
+    // in-memory corpus (same sentence order ⇒ bitwise-identical sum)
+    let scfg = leader::sgns_config(cfg);
+    let mut est = PairEstimator::new(&vocab, &scfg);
+    {
+        use crate::exec::mapreduce::RoundSource;
+        for (_, sentence) in source.shard(0, 0, 1) {
+            est.add_sentence(&sentence);
+        }
+    }
+    if let Some(e) = source.take_error() {
+        return Err(format!("estimation pass failed: {e}"));
+    }
+    let expected_pairs = leader::submodel_expected_pairs(cfg, est.per_epoch(), &divider, total);
+    let trainer_seed = leader::submodel_seed(cfg.seed, spec.submodel);
+
+    let backend = load_backend(cfg, vocab.len())?;
+    info!(
+        "worker {}: {} sentences in {} shard files, {} epochs, expected ~{} pairs, backend {}",
+        spec.submodel,
+        total,
+        source.num_files(),
+        cfg.epochs,
+        expected_pairs,
+        backend.name()
+    );
+
+    let trainer = SubModelTrainer::new(&backend, &vocab, &scfg, expected_pairs, trainer_seed)?;
+    let mut reducers = vec![TrainReducer::new(trainer)];
+    let timer = Timer::start("worker train");
+    let mr = MapReduce {
+        num_mappers: cfg.mappers.max(1),
+        queue_capacity: cfg.queue_capacity,
+    };
+    let submodel = spec.submodel;
+    mr.run(
+        cfg.epochs,
+        &source,
+        |epoch, _shard| SubModelFilter::new(Arc::clone(&divider), epoch, submodel),
+        &mut reducers,
+    );
+    let train_secs = timer.stop_quiet();
+    if let Some(e) = source.take_error() {
+        return Err(format!("shard streaming failed mid-train: {e}"));
+    }
+    let red = reducers.pop().expect("one reducer");
+    if let Some(e) = red.error {
+        return Err(format!("trainer failed: {e}"));
+    }
+
+    let pairs = red.trainer.pairs_emitted();
+    let epoch_loss = red.epoch_mean_loss.clone();
+    let sentences = red.trainer.sentences_received;
+    let embedding = red.trainer.into_embedding(cfg.submodel_min_count())?;
+    let artifact = SubModelArtifact {
+        meta: ArtifactMeta {
+            submodel: spec.submodel,
+            num_submodels: divider.num_submodels,
+            root_seed: cfg.seed,
+            trainer_seed,
+            strategy: cfg.strategy.name().to_string(),
+            rate_percent: cfg.rate_percent,
+            epochs: cfg.epochs,
+            pairs,
+            epoch_loss,
+        },
+        embedding,
+    };
+    // write-then-rename: the coordinator must never observe a partial
+    // artifact, even if this process dies mid-save
+    let tmp = spec.out.with_extension("tmp");
+    artifact
+        .save(&tmp)
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &spec.out)
+        .map_err(|e| format!("publish {}: {e}", spec.out.display()))?;
+    info!(
+        "worker {}: done in {train_secs:.2}s — {sentences} sentences, {pairs} pairs, artifact {}",
+        spec.submodel,
+        spec.out.display()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// coordinator side
+// ---------------------------------------------------------------------------
+
+/// How the coordinator spawns its workers.
+pub struct ProcsOptions {
+    /// the `dw2v` binary to execute (see [`find_worker_exe`])
+    pub worker_exe: PathBuf,
+    /// directory of `shard_*.bin` + `vocab.tsv` the workers stream
+    pub shard_dir: PathBuf,
+    /// where worker artifacts (and the run's `config.json`) land
+    pub out_dir: PathBuf,
+    /// extra environment for the workers (test hooks; empty in production)
+    pub extra_env: Vec<(String, String)>,
+}
+
+/// Why a worker produced no usable sub-model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerFate {
+    /// exited 0 and its artifact loaded and matched the run config
+    Completed,
+    /// crashed, was killed, exited non-zero, or published a bad artifact
+    Failed(String),
+}
+
+impl std::fmt::Display for WorkerFate {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkerFate::Completed => write!(f, "ok"),
+            WorkerFate::Failed(why) => write!(f, "FAILED — {why}"),
+        }
+    }
+}
+
+/// One worker's result as the coordinator saw it.
+pub struct WorkerOutcome {
+    pub submodel: usize,
+    /// wall-clock from spawn to exit
+    pub secs: f64,
+    pub fate: WorkerFate,
+    /// present iff `fate` is `Completed`
+    pub artifact: Option<SubModelArtifact>,
+}
+
+impl WorkerOutcome {
+    pub fn survived(&self) -> bool {
+        self.artifact.is_some()
+    }
+}
+
+struct WorkerChild {
+    submodel: usize,
+    child: Child,
+    out: PathBuf,
+    /// `Ok(status)` once the child was reaped, `Err(why)` if it became
+    /// unwaitable; plus seconds since pool start
+    finished: Option<(Result<ExitStatus, String>, f64)>,
+}
+
+/// Live handle on a set of spawned workers. Obtained from
+/// [`spawn_workers`]; [`Self::wait`] monitors them to completion. The
+/// split (rather than one blocking call) exists so callers — the
+/// kill-a-worker e2e above all — can reach the children (e.g.
+/// [`Self::pid`]) while they run.
+pub struct WorkerPool {
+    children: Vec<WorkerChild>,
+    started: Instant,
+    root_seed: u64,
+    num_submodels: usize,
+}
+
+fn describe_status(status: &ExitStatus) -> String {
+    if status.success() {
+        return "ok".to_string();
+    }
+    if let Some(code) = status.code() {
+        return format!("exit code {code}");
+    }
+    #[cfg(unix)]
+    {
+        use std::os::unix::process::ExitStatusExt;
+        if let Some(sig) = status.signal() {
+            return format!("killed by signal {sig}");
+        }
+    }
+    "terminated abnormally".to_string()
+}
+
+/// Spawn one `train-worker` process per sub-model. The experiment config
+/// is passed as a `config.json` in `out_dir` plus an explicit `--seed`
+/// override (u64 seeds don't survive a JSON f64 round trip above 2^53).
+pub fn spawn_workers(
+    cfg: &ExperimentConfig,
+    opts: &ProcsOptions,
+) -> Result<WorkerPool, String> {
+    // validate before num_submodels(): a rate of 0 would saturate the
+    // count to usize::MAX and the spawn loop below would fork-bomb the
+    // host long before any worker's Divider::new could reject it
+    crate::util::config::validate_rate_percent(cfg.rate_percent)?;
+    let n = cfg.num_submodels();
+    if !opts.shard_dir.join("vocab.tsv").is_file() {
+        return Err(format!(
+            "{} has no vocab.tsv — persist a corpus first (gen-corpus, or --text with --shard-dir)",
+            opts.shard_dir.display()
+        ));
+    }
+    // fail fast on an unreadable corpus before paying n process spawns
+    let probe = ShardFileSource::open(&opts.shard_dir)?;
+    std::fs::create_dir_all(&opts.out_dir)
+        .map_err(|e| format!("create {}: {e}", opts.out_dir.display()))?;
+    let config_path = opts.out_dir.join("config.json");
+    // the seed is re-encoded as a decimal string: u64s above 2^53 don't
+    // survive a JSON f64 round trip, and `apply` parses strings exactly
+    let mut config_json = cfg.to_json();
+    if let crate::util::json::Json::Obj(o) = &mut config_json {
+        o.insert(
+            "seed".to_string(),
+            crate::util::json::Json::Str(cfg.seed.to_string()),
+        );
+    }
+    std::fs::write(&config_path, config_json.to_string_pretty())
+        .map_err(|e| format!("write {}: {e}", config_path.display()))?;
+
+    info!(
+        "coordinator: spawning {n} workers over {} shard files ({} sentences), exe {}",
+        probe.num_files(),
+        probe.total_sentences(),
+        opts.worker_exe.display()
+    );
+    let mut children = Vec::with_capacity(n);
+    let started = Instant::now();
+    for s in 0..n {
+        let out = opts.out_dir.join(format!("submodel_{s}.dwsm"));
+        // stale artifacts from a previous run in the same out_dir must not
+        // masquerade as this run's output if the worker dies before
+        // publishing
+        let _ = std::fs::remove_file(&out);
+        let mut cmd = Command::new(&opts.worker_exe);
+        cmd.arg("train-worker")
+            .arg("--config")
+            .arg(&config_path)
+            .arg("--seed")
+            .arg(cfg.seed.to_string())
+            .arg("--shard-dir")
+            .arg(&opts.shard_dir)
+            .arg("--submodel")
+            .arg(s.to_string())
+            .arg("--out")
+            .arg(&out);
+        for (k, v) in &opts.extra_env {
+            cmd.env(k, v);
+        }
+        let child = match cmd.spawn() {
+            Ok(c) => c,
+            Err(e) => {
+                // don't leak the workers already launched: left alone they
+                // would train the whole run and drop artifacts into
+                // out_dir that a later identically-configured run could
+                // mistake for its own
+                for mut wc in children {
+                    let _ = wc.child.kill();
+                    let _ = wc.child.wait();
+                }
+                return Err(format!(
+                    "spawn worker {s} ({}): {e}",
+                    opts.worker_exe.display()
+                ));
+            }
+        };
+        children.push(WorkerChild {
+            submodel: s,
+            child,
+            out,
+            finished: None,
+        });
+    }
+    Ok(WorkerPool {
+        children,
+        started,
+        root_seed: cfg.seed,
+        num_submodels: n,
+    })
+}
+
+impl WorkerPool {
+    /// OS pid of a still-tracked worker.
+    pub fn pid(&self, submodel: usize) -> Option<u32> {
+        self.children
+            .iter()
+            .find(|c| c.submodel == submodel)
+            .map(|c| c.child.id())
+    }
+
+    /// Monitor the workers to completion: poll every few milliseconds,
+    /// log each exit as it happens, then validate and collect the
+    /// artifacts of the workers that exited cleanly. Returns the
+    /// per-worker outcomes plus the wall-clock of the whole train phase.
+    pub fn wait(mut self) -> (Vec<WorkerOutcome>, f64) {
+        let mut pending = self.children.len();
+        while pending > 0 {
+            pending = 0;
+            for wc in self.children.iter_mut() {
+                if wc.finished.is_some() {
+                    continue;
+                }
+                match wc.child.try_wait() {
+                    Ok(Some(status)) => {
+                        let secs = self.started.elapsed().as_secs_f64();
+                        info!(
+                            "coordinator: worker {} exited after {secs:.2}s ({})",
+                            wc.submodel,
+                            describe_status(&status)
+                        );
+                        wc.finished = Some((Ok(status), secs));
+                    }
+                    Ok(None) => pending += 1,
+                    Err(e) => {
+                        // an unwaitable child counts as a failed worker
+                        let secs = self.started.elapsed().as_secs_f64();
+                        wc.finished = Some((Err(format!("wait failed: {e}")), secs));
+                    }
+                }
+            }
+            if pending > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+        let train_secs = self.started.elapsed().as_secs_f64();
+        let (root_seed, n) = (self.root_seed, self.num_submodels);
+        let outcomes = self
+            .children
+            .into_iter()
+            .map(|wc| {
+                let (status, secs) = wc.finished.expect("all children waited");
+                let clean = matches!(&status, Ok(st) if st.success());
+                let (fate, artifact) = if !clean {
+                    let why = match &status {
+                        Ok(st) => describe_status(st),
+                        Err(e) => e.clone(),
+                    };
+                    (WorkerFate::Failed(why), None)
+                } else {
+                    match SubModelArtifact::load(&wc.out) {
+                        Ok(a) => {
+                            if a.meta.submodel != wc.submodel
+                                || a.meta.root_seed != root_seed
+                                || a.meta.num_submodels != n
+                            {
+                                (
+                                    WorkerFate::Failed(format!(
+                                        "artifact {} belongs to a different run \
+                                         (submodel {} of {}, root seed {})",
+                                        wc.out.display(),
+                                        a.meta.submodel,
+                                        a.meta.num_submodels,
+                                        a.meta.root_seed
+                                    )),
+                                    None,
+                                )
+                            } else {
+                                (WorkerFate::Completed, Some(a))
+                            }
+                        }
+                        Err(e) => (
+                            WorkerFate::Failed(format!(
+                                "exited ok but artifact unreadable: {e}"
+                            )),
+                            None,
+                        ),
+                    }
+                };
+                WorkerOutcome {
+                    submodel: wc.submodel,
+                    secs,
+                    fate,
+                    artifact,
+                }
+            })
+            .collect();
+        (outcomes, train_secs)
+    }
+}
+
+/// Result of a full multi-process run.
+pub struct ProcsReport {
+    /// per-worker fates, in sub-model order — failures included
+    pub outcomes: Vec<WorkerOutcome>,
+    /// wall-clock from first spawn to last worker exit
+    pub train_secs: f64,
+    /// the shared merge + eval tail over the surviving sub-models
+    pub tail: leader::MergeEvalOutput,
+}
+
+impl ProcsReport {
+    pub fn survivors(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.survived()).count()
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &WorkerOutcome> {
+        self.outcomes.iter().filter(|o| !o.survived())
+    }
+}
+
+/// The full multi-process pipeline: spawn `100/r` workers, wait for
+/// them, merge + eval whatever came back. Errors only when **no** worker
+/// survived — any smaller set of failures degrades gracefully into a
+/// merge over the survivors (the paper's robustness claim, promoted to
+/// sub-model granularity).
+pub fn run_multiprocess(
+    cfg: &ExperimentConfig,
+    suite: &[Benchmark],
+    opts: &ProcsOptions,
+) -> Result<ProcsReport, String> {
+    let pool = spawn_workers(cfg, opts)?;
+    let (mut outcomes, train_secs) = pool.wait();
+    // move the embeddings out of the artifacts for the merge — cloning
+    // them would double coordinator peak memory (sub-models can be GBs) —
+    // and put them back afterwards so the report's artifacts stay whole
+    let submodels: Vec<Embedding> = outcomes
+        .iter_mut()
+        .filter_map(|o| o.artifact.as_mut())
+        .map(|a| std::mem::replace(&mut a.embedding, Embedding::zeros(0, 1)))
+        .collect();
+    if submodels.is_empty() {
+        let detail: Vec<String> = outcomes
+            .iter()
+            .map(|o| format!("worker {}: {}", o.submodel, o.fate))
+            .collect();
+        return Err(format!(
+            "all {} workers failed — nothing to merge:\n  {}",
+            outcomes.len(),
+            detail.join("\n  ")
+        ));
+    }
+    let survivors = submodels.len();
+    if survivors < outcomes.len() {
+        info!(
+            "coordinator: merging {survivors}/{} sub-models (the rest failed)",
+            outcomes.len()
+        );
+    }
+    let tail = leader::merge_and_eval(cfg, &submodels, suite);
+    let mut returned = submodels.into_iter();
+    for a in outcomes.iter_mut().filter_map(|o| o.artifact.as_mut()) {
+        a.embedding = returned.next().expect("one embedding per survivor");
+    }
+    Ok(ProcsReport {
+        outcomes,
+        train_secs,
+        tail,
+    })
+}
+
+/// Locate the `dw2v` binary to use as the worker executable:
+/// `DW2V_WORKER_EXE` if set, the current executable when it *is* `dw2v`
+/// (the CLI case), else a `dw2v` sibling of the current executable or of
+/// its parent directory (the `target/<profile>/examples/…` case).
+pub fn find_worker_exe() -> Result<PathBuf, String> {
+    if let Ok(p) = std::env::var("DW2V_WORKER_EXE") {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Ok(p);
+        }
+        return Err(format!("DW2V_WORKER_EXE={} does not exist", p.display()));
+    }
+    let me = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let name = format!("dw2v{}", std::env::consts::EXE_SUFFIX);
+    if me.file_name().and_then(|n| n.to_str()) == Some(name.as_str()) {
+        return Ok(me);
+    }
+    for dir in [me.parent(), me.parent().and_then(|d| d.parent())]
+        .into_iter()
+        .flatten()
+    {
+        let candidate = dir.join(&name);
+        if candidate.is_file() {
+            return Ok(candidate);
+        }
+    }
+    Err(format!(
+        "cannot locate the dw2v binary next to {} — build it (`cargo build --bin dw2v`) \
+         or set DW2V_WORKER_EXE",
+        me.display()
+    ))
+}

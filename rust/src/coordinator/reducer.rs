@@ -32,10 +32,8 @@ impl<'b, B: Backend> TrainReducer<'b, B> {
             error: None,
         }
     }
-}
 
-impl<'b, 'c, B: Backend> Reducer<(u64, &'c [u32])> for TrainReducer<'b, B> {
-    fn reduce(&mut self, (sentence_id, sentence): (u64, &'c [u32])) {
+    fn consume(&mut self, sentence_id: u64, sentence: &[u32]) {
         if self.error.is_some() {
             return;
         }
@@ -44,7 +42,7 @@ impl<'b, 'c, B: Backend> Reducer<(u64, &'c [u32])> for TrainReducer<'b, B> {
         }
     }
 
-    fn end_round(&mut self, _round: usize) {
+    fn finish_round(&mut self) {
         if self.error.is_some() {
             return;
         }
@@ -62,5 +60,29 @@ impl<'b, 'c, B: Backend> Reducer<(u64, &'c [u32])> for TrainReducer<'b, B> {
             }
             Err(e) => self.error = Some(e),
         }
+    }
+}
+
+/// Borrowed-sentence feed — the in-process path, where the corpus
+/// outlives the MapReduce scope and channels carry zero-copy slices.
+impl<'b, 'c, B: Backend> Reducer<(u64, &'c [u32])> for TrainReducer<'b, B> {
+    fn reduce(&mut self, (sentence_id, sentence): (u64, &'c [u32])) {
+        self.consume(sentence_id, sentence);
+    }
+
+    fn end_round(&mut self, _round: usize) {
+        self.finish_round();
+    }
+}
+
+/// Owned-sentence feed — the multi-process path, where sentences are
+/// streamed off disk and owned by the message itself.
+impl<'b, B: Backend> Reducer<(u64, Vec<u32>)> for TrainReducer<'b, B> {
+    fn reduce(&mut self, (sentence_id, sentence): (u64, Vec<u32>)) {
+        self.consume(sentence_id, &sentence);
+    }
+
+    fn end_round(&mut self, _round: usize) {
+        self.finish_round();
     }
 }

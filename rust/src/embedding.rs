@@ -163,13 +163,13 @@ impl Embedding {
     const MAGIC: u32 = 0x6457_4532; // "dWE2"
     /// magic + vocab + dim header bytes preceding the presence bitmap.
     const HEADER_BYTES: u64 = 4 + 8 + 8;
+    /// vocab + dim size fields at the front of the body.
+    const BODY_HEADER_BYTES: u64 = 8 + 8;
 
-    /// Persist as a simple binary: magic | vocab | dim | present bitmapish
-    /// bytes | f32 rows.
-    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
-        use std::io::Write;
-        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
-        w.write_all(&Self::MAGIC.to_le_bytes())?;
+    /// Serialize the shape-prefixed body shared by [`Self::save`] and the
+    /// [`SubModelArtifact`] container: vocab u64 | dim u64 | present
+    /// bytes | f32 rows (all little-endian).
+    fn write_body<W: std::io::Write>(&self, w: &mut W) -> std::io::Result<()> {
         w.write_all(&(self.vocab as u64).to_le_bytes())?;
         w.write_all(&(self.dim as u64).to_le_bytes())?;
         for &p in &self.present {
@@ -178,40 +178,38 @@ impl Embedding {
         for &v in &self.data {
             w.write_all(&v.to_le_bytes())?;
         }
-        w.flush()
+        Ok(())
     }
 
-    pub fn load(path: &std::path::Path) -> std::io::Result<Embedding> {
-        use std::io::Read;
+    /// Deserialize a [`Self::write_body`] payload known (from the real
+    /// file length) to span exactly `body_len` bytes. Every size claim is
+    /// validated *before* any sized allocation: a corrupt header comes
+    /// back as `InvalidData`, never an allocation abort.
+    fn read_body<R: std::io::Read>(r: &mut R, body_len: u64) -> std::io::Result<Embedding> {
         let invalid =
             |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
-        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
-        let mut b4 = [0u8; 4];
-        let mut b8 = [0u8; 8];
-        r.read_exact(&mut b4)?;
-        if u32::from_le_bytes(b4) != Self::MAGIC {
-            return Err(invalid("not a dw2v embedding file".to_string()));
+        if body_len < Self::BODY_HEADER_BYTES {
+            return Err(invalid(format!(
+                "embedding body is {body_len} bytes — shorter than its header"
+            )));
         }
+        let mut b8 = [0u8; 8];
         r.read_exact(&mut b8)?;
         let vocab = u64::from_le_bytes(b8);
         r.read_exact(&mut b8)?;
         let dim = u64::from_le_bytes(b8);
-        // validate the header against the actual file length *before*
-        // allocating vocab × dim × 4 bytes: a corrupt/truncated header must
-        // come back as InvalidData, not abort the process on a huge alloc
-        let actual_len = std::fs::metadata(path)?.len();
-        let expected_len = vocab
+        let expected = vocab
             .checked_mul(dim)
             .and_then(|vd| vd.checked_mul(4))
             .and_then(|data| data.checked_add(vocab))
-            .and_then(|body| body.checked_add(Self::HEADER_BYTES))
+            .and_then(|body| body.checked_add(Self::BODY_HEADER_BYTES))
             .ok_or_else(|| {
                 invalid(format!("embedding header overflows: vocab={vocab} dim={dim}"))
             })?;
-        if expected_len != actual_len {
+        if expected != body_len {
             return Err(invalid(format!(
-                "embedding header (vocab={vocab}, dim={dim}) implies {expected_len} \
-                 bytes but file is {actual_len}"
+                "embedding header (vocab={vocab}, dim={dim}) implies {expected} \
+                 bytes but {body_len} are present"
             )));
         }
         let vocab = vocab as usize;
@@ -229,6 +227,211 @@ impl Embedding {
                 .collect(),
             present: present_bytes.into_iter().map(|b| b != 0).collect(),
         })
+    }
+
+    /// Persist as a simple binary: magic | vocab | dim | present bitmapish
+    /// bytes | f32 rows.
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        self.write_body(&mut w)?;
+        w.flush()
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<Embedding> {
+        use std::io::Read;
+        let invalid =
+            |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len < Self::HEADER_BYTES {
+            return Err(invalid("not a dw2v embedding file".to_string()));
+        }
+        let mut r = std::io::BufReader::new(file);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != Self::MAGIC {
+            return Err(invalid("not a dw2v embedding file".to_string()));
+        }
+        Self::read_body(&mut r, file_len - 4)
+    }
+}
+
+/// Metadata carried by a [`SubModelArtifact`]: everything a coordinator
+/// needs to decide whether a sub-model file belongs to the run it is
+/// collecting (config identity) and to report on it (loss curve, pairs).
+///
+/// Serialized as a JSON object inside the artifact container. The `u64`
+/// fields (seeds, pair counts) are encoded as **decimal strings**, not
+/// JSON numbers — JSON numbers are f64 and silently lose precision above
+/// 2^53, and derived trainer seeds use the full 64 bits.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// which sub-model (0-based) of the run this is
+    pub submodel: usize,
+    /// total sub-models the run's divider produces (100/r)
+    pub num_submodels: usize,
+    /// the experiment's root seed (config identity)
+    pub root_seed: u64,
+    /// the per-sub-model seed derived from it (what the trainer used)
+    pub trainer_seed: u64,
+    /// divide strategy name (`equal` | `random` | `shuffle`)
+    pub strategy: String,
+    /// sampling rate r%
+    pub rate_percent: f64,
+    /// epochs trained
+    pub epochs: usize,
+    /// (center, context) pairs actually dispatched
+    pub pairs: u64,
+    /// mean loss per finished epoch
+    pub epoch_loss: Vec<f64>,
+}
+
+impl ArtifactMeta {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s};
+        obj(vec![
+            ("submodel", num(self.submodel as f64)),
+            ("num_submodels", num(self.num_submodels as f64)),
+            ("root_seed", s(&self.root_seed.to_string())),
+            ("trainer_seed", s(&self.trainer_seed.to_string())),
+            ("strategy", s(&self.strategy)),
+            ("rate_percent", num(self.rate_percent)),
+            ("epochs", num(self.epochs as f64)),
+            ("pairs", s(&self.pairs.to_string())),
+            (
+                "epoch_loss",
+                arr(self.epoch_loss.iter().map(|&l| num(l)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        let usize_field = |k: &str| {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("artifact meta: missing/invalid '{k}'"))
+        };
+        let u64_field = |k: &str| {
+            j.get(k)
+                .as_str()
+                .and_then(|v| v.parse::<u64>().ok())
+                .ok_or_else(|| format!("artifact meta: missing/invalid '{k}'"))
+        };
+        let epoch_loss = j
+            .get("epoch_loss")
+            .as_arr()
+            .ok_or("artifact meta: missing 'epoch_loss'")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("artifact meta: non-numeric epoch loss"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        Ok(Self {
+            submodel: usize_field("submodel")?,
+            num_submodels: usize_field("num_submodels")?,
+            root_seed: u64_field("root_seed")?,
+            trainer_seed: u64_field("trainer_seed")?,
+            strategy: j
+                .get("strategy")
+                .as_str()
+                .ok_or("artifact meta: missing 'strategy'")?
+                .to_string(),
+            rate_percent: j
+                .get("rate_percent")
+                .as_f64()
+                .ok_or("artifact meta: missing 'rate_percent'")?,
+            epochs: usize_field("epochs")?,
+            pairs: u64_field("pairs")?,
+            epoch_loss,
+        })
+    }
+}
+
+/// A trained sub-model as exchanged between a multi-process training
+/// worker and its coordinator: the [`Embedding`] payload plus
+/// [`ArtifactMeta`] in one versioned container.
+///
+/// ```text
+/// artifact := MAGIC u32 | VERSION u32 | meta_len u32 | meta JSON bytes
+///             | embedding body (vocab u64 | dim u64 | present | f32 rows)
+/// ```
+///
+/// Like [`Embedding::load`], every header claim is validated against the
+/// real file length before any sized allocation, so a truncated or
+/// corrupt artifact (e.g. from a worker killed mid-write, although
+/// workers additionally write-then-rename) is an `InvalidData` error the
+/// coordinator treats as a failed worker — never a crash.
+#[derive(Clone, Debug)]
+pub struct SubModelArtifact {
+    pub meta: ArtifactMeta,
+    pub embedding: Embedding,
+}
+
+impl SubModelArtifact {
+    const MAGIC: u32 = 0x6457_534D; // "dWSM"
+    const VERSION: u32 = 1;
+    /// magic + version + meta_len bytes preceding the metadata.
+    const HEADER_BYTES: u64 = 4 + 4 + 4;
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        let meta = self.meta.to_json().to_string();
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        w.write_all(&Self::VERSION.to_le_bytes())?;
+        w.write_all(&(meta.len() as u32).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        self.embedding.write_body(&mut w)?;
+        w.flush()
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<SubModelArtifact> {
+        use std::io::Read;
+        let invalid =
+            |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len < Self::HEADER_BYTES {
+            return Err(invalid(format!(
+                "sub-model artifact {} is {file_len} bytes — shorter than the header",
+                path.display()
+            )));
+        }
+        let mut r = std::io::BufReader::new(file);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != Self::MAGIC {
+            return Err(invalid(format!(
+                "{} is not a dw2v sub-model artifact",
+                path.display()
+            )));
+        }
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != Self::VERSION {
+            return Err(invalid(format!(
+                "unsupported sub-model artifact version {version} (this build reads {})",
+                Self::VERSION
+            )));
+        }
+        r.read_exact(&mut b4)?;
+        let meta_len = u32::from_le_bytes(b4) as u64;
+        if meta_len > file_len - Self::HEADER_BYTES {
+            return Err(invalid(format!(
+                "artifact metadata claims {meta_len} bytes but only {} follow",
+                file_len - Self::HEADER_BYTES
+            )));
+        }
+        let mut meta_bytes = vec![0u8; meta_len as usize];
+        r.read_exact(&mut meta_bytes)?;
+        let meta_text = std::str::from_utf8(&meta_bytes)
+            .map_err(|_| invalid("artifact metadata is not UTF-8".to_string()))?;
+        let meta_json = crate::util::json::Json::parse(meta_text)
+            .map_err(|e| invalid(format!("artifact metadata: {e}")))?;
+        let meta = ArtifactMeta::from_json(&meta_json).map_err(invalid)?;
+        let body_len = file_len - Self::HEADER_BYTES - meta_len;
+        let embedding = Embedding::read_body(&mut r, body_len)?;
+        Ok(SubModelArtifact { meta, embedding })
     }
 }
 
@@ -320,6 +523,82 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(e.nearest(&query, 4, &[]), e.nearest(&query, 4, &[]));
         }
+    }
+
+    fn sample_meta() -> ArtifactMeta {
+        ArtifactMeta {
+            submodel: 2,
+            num_submodels: 4,
+            // full-width u64s: JSON numbers would round these
+            root_seed: u64::MAX - 12345,
+            trainer_seed: 0xDEAD_BEEF_CAFE_F00D,
+            strategy: "shuffle".to_string(),
+            rate_percent: 25.0,
+            epochs: 3,
+            pairs: (1 << 60) + 7,
+            epoch_loss: vec![0.693, 0.41, 0.385],
+        }
+    }
+
+    #[test]
+    fn artifact_roundtrip_is_exact() {
+        let mut e = sample();
+        e.present[1] = false;
+        let art = SubModelArtifact {
+            meta: sample_meta(),
+            embedding: e,
+        };
+        let path = std::env::temp_dir().join(format!("dw2v_art_{}.dwsm", std::process::id()));
+        art.save(&path).unwrap();
+        let back = SubModelArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(back.meta, art.meta, "meta incl. full-width u64 seeds");
+        assert_eq!(back.embedding.vocab, art.embedding.vocab);
+        assert_eq!(back.embedding.present, art.embedding.present);
+        for (a, b) in art.embedding.data.iter().zip(&back.embedding.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in art.meta.epoch_loss.iter().zip(&back.meta.epoch_loss) {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss curve must survive JSON");
+        }
+    }
+
+    #[test]
+    fn artifact_rejects_corruption() {
+        let art = SubModelArtifact {
+            meta: sample_meta(),
+            embedding: sample(),
+        };
+        let path =
+            std::env::temp_dir().join(format!("dw2v_artbad_{}.dwsm", std::process::id()));
+        art.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        let expect_invalid = |bytes: &[u8]| {
+            std::fs::write(&path, bytes).unwrap();
+            let err = SubModelArtifact::load(&path).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        };
+        // truncations: inside the header, inside the metadata, inside the body
+        expect_invalid(&full[..6]);
+        expect_invalid(&full[..20]);
+        expect_invalid(&full[..full.len() - 3]);
+        // trailing junk
+        let mut padded = full.clone();
+        padded.extend_from_slice(&[0xEE; 5]);
+        expect_invalid(&padded);
+        // wrong version
+        let mut vbad = full.clone();
+        vbad[4] = 99;
+        expect_invalid(&vbad);
+        // a plain embedding file is not an artifact
+        let epath =
+            std::env::temp_dir().join(format!("dw2v_artemb_{}.bin", std::process::id()));
+        art.embedding.save(&epath).unwrap();
+        let err = SubModelArtifact::load(&epath).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&epath).unwrap();
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

@@ -54,6 +54,28 @@
 //!   two-pass MB/s, and `cargo run --example text_ingest` shows the text
 //!   round trip matching the direct synthetic run.
 //!
+//! ## Multi-process training
+//!
+//! [`coordinator::procs`] promotes the paper's zero-synchronization
+//! claim from threads to OS processes: `dw2v pipeline-procs` spawns one
+//! `dw2v train-worker` process per sub-model over a persisted shard
+//! directory (`shard_*.bin` + `vocab.tsv`, the `gen-corpus` /
+//! `--shard-dir` layout). Each worker streams sentences one at a time
+//! from the shard files (peak corpus memory: a single sentence), routes
+//! them with the same stateless counter-based
+//! [`coordinator::divider::Divider`] as the in-process leader — agreeing
+//! on the partition from nothing but `(seed, strategy, rate, epoch)` —
+//! and publishes a versioned [`embedding::SubModelArtifact`]
+//! (write-then-rename). The coordinator monitors the workers, collects
+//! whatever artifacts came back and funnels the survivors into the same
+//! merge + eval tail as the in-process pipeline
+//! ([`coordinator::leader::merge_and_eval`]). A crashed or killed worker
+//! costs exactly its sub-model: the failure is reported and the merge
+//! proceeds over the rest — the paper's missing-words robustness at
+//! sub-model granularity. With `mappers = 1` the multi-process run is
+//! bitwise identical to the in-process one on the native backend
+//! (`cargo test --test procs_e2e`).
+//!
 //! ## Serving layer
 //!
 //! Trained models are *used* through [`serve`]: an HNSW-style ANN index +

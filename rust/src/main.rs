@@ -1,17 +1,46 @@
 //! dw2v — the leader binary.
 //!
 //! Subcommands:
-//!   pipeline    full divide → train → merge → eval run (the paper system)
-//!   hogwild     single-node lock-free baseline (paper's comparator)
-//!   mllib       parameter-averaging distributed baseline
-//!   kl          Figure-1 distribution statistics for the dividers
-//!   gen-corpus  generate (synthetic) or ingest (`--text`) + persist a corpus
-//!   serve       ANN-indexed query engine over a saved embedding
-//!               (`--model model.bin [--vocab vocab.tsv] [--queries f]`)
-//!   artifacts   show the AOT artifact manifest
+//!   pipeline        full divide → train → merge → eval run (the paper system)
+//!   pipeline-procs  the same pipeline with one OS process per sub-model,
+//!                   trained over a persisted shard directory
+//!   train-worker    train ONE sub-model in this process (what
+//!                   pipeline-procs spawns; rarely typed by hand)
+//!   hogwild         single-node lock-free baseline (paper's comparator)
+//!   mllib           parameter-averaging distributed baseline
+//!   kl              Figure-1 distribution statistics for the dividers
+//!   gen-corpus      generate (synthetic) or ingest (`--text`) + persist a corpus
+//!   serve           ANN-indexed query engine over a saved embedding
+//!                   (`--model model.bin [--vocab vocab.tsv] [--queries f]`)
+//!   artifacts       show the AOT artifact manifest
 //!
 //! Every flag maps to a key of `ExperimentConfig`; `--config file.json`
 //! loads a base config that individual flags then override.
+//!
+//! ## Multi-process training (`pipeline-procs` / `train-worker`)
+//!
+//! The in-process `pipeline` realizes the paper's asynchrony with reducer
+//! threads; `pipeline-procs` promotes it to OS processes with the
+//! persisted shard files as the *only* exchange medium:
+//!
+//! 1. persist a corpus: `dw2v gen-corpus --out DIR` (synthetic) or
+//!    `--text file --out DIR` (ingestion) — both leave `shard_*.bin` +
+//!    `vocab.tsv` in `DIR`;
+//! 2. `dw2v pipeline-procs --shard-dir DIR --rate r ...` spawns `100/r`
+//!    `train-worker` processes. Each worker streams sentences one at a
+//!    time from the shard files (peak corpus memory: one sentence),
+//!    routes them with the stateless counter-based divider — workers
+//!    need **zero** training-time communication, only the shared
+//!    `(seed, strategy, rate, epoch)` — and publishes its sub-model as a
+//!    versioned artifact (`submodel_<s>.dwsm`, write-then-rename);
+//! 3. the coordinator monitors the workers, collects whatever artifacts
+//!    came back, and runs the same merge + eval tail as `pipeline`.
+//!
+//! **Failure semantics:** a crashed or killed worker's sub-model is
+//! simply absent; the merge proceeds over the survivors and the failure
+//! is reported in the worker table. The run only errors when *no* worker
+//! survives. With `--mappers 1` a multi-process run reproduces the
+//! in-process `pipeline` sub-models bitwise (native backend).
 //!
 //! ## Corpus sources (`--text`)
 //!
@@ -64,6 +93,8 @@ fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("pipeline") => cmd_pipeline(&argv[1..]),
+        Some("pipeline-procs") => cmd_pipeline_procs(&argv[1..]),
+        Some("train-worker") => cmd_train_worker(&argv[1..]),
         Some("hogwild") => cmd_hogwild(&argv[1..]),
         Some("mllib") => cmd_mllib(&argv[1..]),
         Some("kl") => cmd_kl(&argv[1..]),
@@ -87,13 +118,18 @@ fn main() {
 const USAGE: &str = "dw2v — asynchronous word-embedding training (WSDM'19 reproduction)
 
 subcommands:
-  pipeline     divide -> train -> merge -> eval (the paper's system)
-  hogwild      single-node lock-free baseline
-  mllib        parameter-averaging distributed baseline
-  kl           figure-1 KL-divergence statistics for the dividers
-  gen-corpus   generate (synthetic) or ingest (--text) + persist a corpus
-  serve        ANN-indexed query engine over a saved embedding
-  artifacts    show the AOT artifact manifest
+  pipeline        divide -> train -> merge -> eval (the paper's system)
+  pipeline-procs  the same pipeline with one OS process per sub-model over
+                  a persisted shard dir (gen-corpus / --text --shard-dir);
+                  killed workers are reported and merged around
+  train-worker    train ONE sub-model from shard files in this process
+                  (spawned by pipeline-procs)
+  hogwild         single-node lock-free baseline
+  mllib           parameter-averaging distributed baseline
+  kl              figure-1 KL-divergence statistics for the dividers
+  gen-corpus      generate (synthetic) or ingest (--text) + persist a corpus
+  serve           ANN-indexed query engine over a saved embedding
+  artifacts       show the AOT artifact manifest
 
 corpus sources (pipeline / hogwild / mllib / kl / gen-corpus):
   default      synthetic planted-ground-truth generator (--sentences ...)
@@ -240,6 +276,148 @@ fn cmd_pipeline(argv: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// The flags shared by the two multi-process subcommands: the experiment
+/// knobs that shape training (no corpus-generation or ingestion flags —
+/// the corpus is whatever the shard directory holds).
+fn procs_experiment_command(name: &str, about: &str) -> Command {
+    Command::new(name, about)
+        .flag("config", None, "JSON config file to start from")
+        .flag("set", None, "comma-separated key=value config overrides")
+        .flag("seed", None, "root RNG seed")
+        .flag("dim", None, "embedding dimensionality")
+        .flag("epochs", None, "training epochs")
+        .flag("strategy", None, "divider: equal | random | shuffle")
+        .flag("rate", None, "sampling rate r% (submodels = 100/r)")
+        .flag("merge", None, "merge: concat | pca | alir_rand | alir_pca | single")
+        .flag("mappers", None, "mapper threads per worker")
+        .flag("backend", None, "compute backend: auto | native | xla")
+        .flag("artifact-dir", None, "AOT artifact directory")
+        .flag("shard-dir", None, "directory of shard_*.bin + vocab.tsv [required]")
+}
+
+fn required_flag<'a>(
+    args: &'a dw2v::util::cli::Args,
+    name: &str,
+    cmd: &Command,
+) -> Result<&'a str, String> {
+    args.get(name)
+        .ok_or_else(|| format!("--{name} is required\n\n{}", cmd.usage()))
+}
+
+fn cmd_train_worker(argv: &[String]) -> Result<(), String> {
+    let cmd = procs_experiment_command(
+        "train-worker",
+        "train ONE sub-model in this process from on-disk shards",
+    )
+    .flag("submodel", None, "sub-model index to train (0-based) [required]")
+    .flag("out", None, "artifact output path (.dwsm) [required]");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let shard_dir = required_flag(&args, "shard-dir", &cmd)?;
+    let out = required_flag(&args, "out", &cmd)?;
+    let submodel = args
+        .get_usize("submodel")
+        .map_err(|e| e.to_string())?
+        .ok_or_else(|| format!("--submodel is required\n\n{}", cmd.usage()))?;
+    let spec = dw2v::coordinator::procs::WorkerSpec {
+        shard_dir: std::path::PathBuf::from(shard_dir),
+        submodel,
+        out: std::path::PathBuf::from(out),
+    };
+    dw2v::coordinator::procs::run_worker(&cfg, &spec)
+}
+
+fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
+    use dw2v::coordinator::procs::{self, ProcsOptions};
+
+    let cmd = procs_experiment_command(
+        "pipeline-procs",
+        "multi-process divide → train → merge → eval over a persisted shard dir",
+    )
+    .flag("eval", None, "questions-words.txt analogy benchmark file")
+    .flag("out-dir", None, "worker artifact directory (default: <shard-dir>/submodels)")
+    .flag("worker-exe", None, "dw2v binary to spawn (default: this executable)")
+    .flag("save-model", None, "save the merged consensus embedding here");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let cfg = parse_experiment(&args)?;
+    let shard_dir = std::path::PathBuf::from(required_flag(&args, "shard-dir", &cmd)?);
+
+    let (vocab, suite) = World::vocab_and_suite_from_shards(
+        &shard_dir,
+        args.get("eval").map(std::path::Path::new),
+    )?;
+    let worker_exe = match args.get("worker-exe") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => procs::find_worker_exe()?,
+    };
+    let out_dir = args
+        .get("out-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| shard_dir.join("submodels"));
+    let opts = ProcsOptions {
+        worker_exe,
+        shard_dir,
+        out_dir,
+        extra_env: Vec::new(),
+    };
+
+    let rep = procs::run_multiprocess(&cfg, &suite, &opts)?;
+
+    println!(
+        "\nworkers ({} spawned, {} survived):",
+        rep.outcomes.len(),
+        rep.survivors()
+    );
+    for o in &rep.outcomes {
+        match &o.artifact {
+            Some(a) => println!(
+                "  worker {:>3}: {} ({:.2}s, {} pairs, final-epoch loss {:.4})",
+                o.submodel,
+                o.fate,
+                o.secs,
+                a.meta.pairs,
+                a.meta.epoch_loss.last().copied().unwrap_or(f64::NAN)
+            ),
+            None => println!("  worker {:>3}: {} ({:.2}s)", o.submodel, o.fate, o.secs),
+        }
+    }
+    println!(
+        "train (multi-process) {:.2}s | merge {:.2}s | eval {:.2}s",
+        rep.train_secs, rep.tail.merged.seconds, rep.tail.eval_secs
+    );
+    println!(
+        "merged vocab: {} / {}",
+        rep.tail.merged.embedding.present_count(),
+        vocab.len()
+    );
+    if let Some(path) = args.get("save-model") {
+        rep.tail
+            .merged
+            .embedding
+            .save(std::path::Path::new(path))
+            .map_err(|e| format!("save {path}: {e}"))?;
+        println!("merged model saved to {path}");
+    }
+    if suite.is_empty() {
+        eprintln!("note: no benchmark suite (pass --eval questions-words.txt)");
+    } else {
+        println!("\n{}", report::format_header(&rep.tail.scores));
+        println!(
+            "{}",
+            report::format_row(
+                &format!(
+                    "procs {} {}% + {}",
+                    cfg.strategy.name(),
+                    cfg.rate_percent,
+                    cfg.merge.name()
+                ),
+                &rep.tail.scores
+            )
+        );
+    }
+    Ok(())
+}
+
 fn cmd_hogwild(argv: &[String]) -> Result<(), String> {
     let cmd = experiment_command("hogwild", "single-node lock-free baseline")
         .flag("threads", Some("4"), "hogwild threads");
@@ -313,7 +491,7 @@ fn cmd_kl(argv: &[String]) -> Result<(), String> {
         dw2v::util::config::DivideStrategy::RandomSampling,
         dw2v::util::config::DivideStrategy::Shuffle,
     ] {
-        let divider = Divider::new(strategy.clone(), cfg.rate_percent, cfg.seed, corpus.len());
+        let divider = Divider::new(strategy.clone(), cfg.rate_percent, cfg.seed, corpus.len())?;
         let take = samples.min(divider.num_submodels);
         let mut subs = Vec::new();
         let mut buf = Vec::new();

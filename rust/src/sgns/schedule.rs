@@ -39,27 +39,60 @@ use crate::text::vocab::Vocab;
 /// near the cutoff; longer ones fall back to a variance correction.
 const EXACT_DP_MAX_LEN: usize = 64;
 
+/// Streaming accumulator behind [`expected_pairs_per_epoch`]: feed
+/// sentences one at a time and read off the per-epoch expectation. The
+/// multi-process training workers use this directly — they estimate the
+/// lr-schedule denominator while streaming shard files from disk, never
+/// holding the corpus in memory — and because the accumulation is a plain
+/// sequential f64 sum in sentence order, a streamed pass over the shards
+/// produces **bitwise** the same value as the leader's in-memory pass.
+pub struct PairEstimator {
+    keep: Vec<f32>,
+    window: usize,
+    probs: Vec<f64>,
+    total: f64,
+}
+
+impl PairEstimator {
+    pub fn new(vocab: &Vocab, cfg: &SgnsConfig) -> Self {
+        Self {
+            keep: BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t),
+            window: cfg.window.max(1),
+            probs: Vec::new(),
+            total: 0.0,
+        }
+    }
+
+    /// Accumulate one sentence's expected pair count.
+    pub fn add_sentence(&mut self, s: &[u32]) {
+        let w = self.window;
+        let v = if self.keep.is_empty() {
+            expected_sentence_pairs(s.len() as f64, w)
+        } else {
+            self.probs.clear();
+            self.probs.extend(
+                s.iter()
+                    .map(|&t| self.keep.get(t as usize).copied().unwrap_or(1.0) as f64),
+            );
+            expected_sentence_pairs_subsampled(&self.probs, w)
+        };
+        self.total += v;
+    }
+
+    /// Expected pairs for one epoch over everything fed so far.
+    pub fn per_epoch(&self) -> f64 {
+        self.total
+    }
+}
+
 /// Expected pairs emitted by one pass (epoch) over `corpus`, under
 /// `cfg`'s subsampling threshold and dynamic window.
 pub fn expected_pairs_per_epoch(corpus: &Corpus, vocab: &Vocab, cfg: &SgnsConfig) -> f64 {
-    let keep = BatchBuilder::keep_table(vocab.counts(), cfg.subsample_t);
-    let w = cfg.window.max(1);
-    let mut probs: Vec<f64> = Vec::new();
-    corpus
-        .sentences
-        .iter()
-        .map(|s| {
-            if keep.is_empty() {
-                return expected_sentence_pairs(s.len() as f64, w);
-            }
-            probs.clear();
-            probs.extend(
-                s.iter()
-                    .map(|&t| keep.get(t as usize).copied().unwrap_or(1.0) as f64),
-            );
-            expected_sentence_pairs_subsampled(&probs, w)
-        })
-        .sum()
+    let mut est = PairEstimator::new(vocab, cfg);
+    for s in &corpus.sentences {
+        est.add_sentence(s);
+    }
+    est.per_epoch()
 }
 
 /// Expected pairs for one sentence whose tokens survive independently
@@ -280,6 +313,38 @@ mod tests {
             heavy_sub < 0.5 * no_sub,
             "heavy subsampling must shrink the expectation: {heavy_sub} vs {no_sub}"
         );
+    }
+
+    #[test]
+    fn streamed_estimation_is_bitwise_identical_to_batch() {
+        // the worker path streams sentences from shard files through a
+        // PairEstimator; the leader path walks the in-memory corpus — the
+        // two must agree exactly or the lr schedules (and therefore the
+        // sub-models) of the two paths diverge
+        let mut rng = Pcg64::new(0xE5);
+        let mut b = crate::text::vocab::VocabBuilder::new();
+        let sentences: Vec<Vec<u32>> = (0..150)
+            .map(|_| {
+                let len = rng.gen_range_usize(20);
+                (0..len).map(|_| rng.gen_range(25) as u32).collect()
+            })
+            .collect();
+        for s in &sentences {
+            for &t in s {
+                b.add_token(&format!("w{t}"));
+            }
+        }
+        let vocab = b.build(1, usize::MAX);
+        let corpus = Corpus::new(sentences);
+        let mut cfg = SgnsConfig::default();
+        cfg.subsample_t = 1e-3;
+        let batch = expected_pairs_per_epoch(&corpus, &vocab, &cfg);
+        let mut est = PairEstimator::new(&vocab, &cfg);
+        for s in &corpus.sentences {
+            est.add_sentence(s);
+        }
+        assert_eq!(batch.to_bits(), est.per_epoch().to_bits());
+        assert!(batch > 0.0);
     }
 
     #[test]

@@ -76,12 +76,25 @@ impl Corpus {
     const SHARD_HEADER_BYTES: u64 = 4 + 4 + 8;
 
     pub fn read_shard(path: &Path) -> std::io::Result<Corpus> {
+        let reader = Self::stream_shard(path)?;
+        // the header check already bounded n against the file length, so
+        // the capacity reservation is safe
+        let mut sentences = Vec::with_capacity(reader.sentence_count());
+        for s in reader {
+            sentences.push(s?);
+        }
+        Ok(Corpus { sentences })
+    }
+
+    /// Open a shard file for **streaming**: the header is validated up
+    /// front (every size claim checked against the real file length before
+    /// any allocation, exactly like [`Self::read_shard`]), then sentences
+    /// are yielded one at a time — peak memory is a single sentence, which
+    /// is what lets a multi-process training worker iterate a corpus far
+    /// larger than its address space.
+    pub fn stream_shard(path: &Path) -> std::io::Result<ShardReader> {
         let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
         let file = File::open(path)?;
-        // every claim in the header is validated against the actual file
-        // length *before* any sized allocation (mirroring
-        // `Embedding::load`): a corrupt/truncated header must come back as
-        // InvalidData, not abort the process on a huge Vec
         let file_len = file.metadata()?.len();
         if file_len < Self::SHARD_HEADER_BYTES {
             return Err(invalid(format!(
@@ -102,47 +115,21 @@ impl Corpus {
             return Err(invalid(format!("unsupported corpus version {version}")));
         }
         let n = read_u64(&mut r)?;
-        let mut remaining = file_len - Self::SHARD_HEADER_BYTES;
+        let remaining = file_len - Self::SHARD_HEADER_BYTES;
         // each sentence needs at least its 4-byte length prefix
         if n > remaining / 4 {
             return Err(invalid(format!(
                 "shard header claims {n} sentences but only {remaining} bytes follow"
             )));
         }
-        let n = n as usize;
-        let mut sentences = Vec::with_capacity(n);
-        for i in 0..n {
-            if remaining < 4 {
-                return Err(invalid(format!(
-                    "shard truncated before the length prefix of sentence {i}"
-                )));
-            }
-            let len = read_u32(&mut r)? as u64;
-            remaining -= 4;
-            let body = len
-                .checked_mul(4)
-                .filter(|&b| b <= remaining)
-                .ok_or_else(|| {
-                    invalid(format!(
-                        "sentence {i} claims {len} tokens but only {remaining} bytes remain"
-                    ))
-                })?;
-            remaining -= body;
-            let mut buf = vec![0u8; body as usize];
-            r.read_exact(&mut buf)?;
-            let sent = buf
-                .chunks_exact(4)
-                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                .collect();
-            sentences.push(sent);
-        }
-        if remaining != 0 {
-            return Err(invalid(format!(
-                "{remaining} trailing bytes after the last sentence of {}",
-                path.display()
-            )));
-        }
-        Ok(Corpus { sentences })
+        Ok(ShardReader {
+            reader: r,
+            remaining,
+            total: n as usize,
+            yielded: 0,
+            done: false,
+            path: path.to_path_buf(),
+        })
     }
 
     /// Write the corpus as `num_shards` files `<dir>/shard_<i>.bin`.
@@ -163,8 +150,14 @@ impl Corpus {
         Ok(paths)
     }
 
-    /// Load every `shard_*.bin` in a directory, in shard order.
-    pub fn read_sharded(dir: &Path) -> std::io::Result<Corpus> {
+    /// Every `shard_*.bin` in a directory, sorted by the **numeric** shard
+    /// index parsed from the file stem — `shard_10.bin` sorts after
+    /// `shard_2.bin`, which a lexicographic sort would get wrong. The
+    /// multi-process training path depends on this order: global sentence
+    /// indices (and through them every routing and RNG decision) are
+    /// assigned by concatenating shards in exactly this sequence. Files
+    /// whose stem doesn't parse sort last.
+    pub fn shard_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
         let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
             .filter_map(|e| e.ok())
             .map(|e| e.path())
@@ -182,11 +175,100 @@ impl Corpus {
                 .and_then(|s| s.parse::<usize>().ok())
                 .unwrap_or(usize::MAX)
         });
+        Ok(entries)
+    }
+
+    /// Load every `shard_*.bin` in a directory, in shard order.
+    pub fn read_sharded(dir: &Path) -> std::io::Result<Corpus> {
         let mut all = Corpus::default();
-        for path in entries {
+        for path in Self::shard_files(dir)? {
             all.sentences.extend(Self::read_shard(&path)?.sentences);
         }
         Ok(all)
+    }
+}
+
+/// Streaming iterator over one shard file's sentences — see
+/// [`Corpus::stream_shard`]. Yields `io::Result<Vec<u32>>`; the first
+/// error (truncation, oversized sentence claim, trailing bytes) ends the
+/// stream.
+pub struct ShardReader {
+    reader: BufReader<File>,
+    /// payload bytes left after the header, per the real file length
+    remaining: u64,
+    /// sentence count the header claims
+    total: usize,
+    yielded: usize,
+    done: bool,
+    path: PathBuf,
+}
+
+impl ShardReader {
+    /// Number of sentences the (validated) header claims.
+    pub fn sentence_count(&self) -> usize {
+        self.total
+    }
+
+    fn fail(&mut self, msg: String) -> Option<std::io::Result<Vec<u32>>> {
+        self.done = true;
+        Some(Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            msg,
+        )))
+    }
+}
+
+impl Iterator for ShardReader {
+    type Item = std::io::Result<Vec<u32>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        if self.yielded == self.total {
+            self.done = true;
+            if self.remaining != 0 {
+                let (rem, path) = (self.remaining, self.path.display().to_string());
+                return self.fail(format!(
+                    "{rem} trailing bytes after the last sentence of {path}"
+                ));
+            }
+            return None;
+        }
+        let i = self.yielded;
+        if self.remaining < 4 {
+            return self.fail(format!(
+                "shard truncated before the length prefix of sentence {i}"
+            ));
+        }
+        let len = match read_u32(&mut self.reader) {
+            Ok(l) => l as u64,
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e));
+            }
+        };
+        self.remaining -= 4;
+        let body = match len.checked_mul(4).filter(|&b| b <= self.remaining) {
+            Some(b) => b,
+            None => {
+                let rem = self.remaining;
+                return self.fail(format!(
+                    "sentence {i} claims {len} tokens but only {rem} bytes remain"
+                ));
+            }
+        };
+        self.remaining -= body;
+        let mut buf = vec![0u8; body as usize];
+        if let Err(e) = self.reader.read_exact(&mut buf) {
+            self.done = true;
+            return Some(Err(e));
+        }
+        self.yielded += 1;
+        Some(Ok(buf
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()))
     }
 }
 
@@ -284,6 +366,47 @@ mod tests {
         assert_eq!(paths.len(), 5);
         let back = Corpus::read_sharded(&dir).unwrap();
         assert_eq!(back, c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn read_sharded_orders_numerically_beyond_ten_shards() {
+        // regression: with ≥ 10 shards a lexicographic sort would splice
+        // shard_10/shard_11 between shard_1 and shard_2, silently
+        // permuting global sentence indices — every downstream routing
+        // and per-sentence RNG decision in the multi-process path keys
+        // off those indices
+        let dir = tmpdir("twelve");
+        let c = Corpus::new((0..120).map(|i| vec![i, i + 1000]).collect());
+        let paths = c.write_sharded(&dir, 12).unwrap();
+        assert_eq!(paths.len(), 12);
+        let files = Corpus::shard_files(&dir).unwrap();
+        assert_eq!(files, paths, "shard_files must sort by numeric index");
+        let back = Corpus::read_sharded(&dir).unwrap();
+        assert_eq!(back, c, "12-shard round trip must preserve order");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn stream_shard_matches_batch_read() {
+        let dir = tmpdir("stream");
+        let path = dir.join("s.bin");
+        let c = Corpus::new((0..33).map(|i| vec![i; (i as usize % 5) + 1]).collect());
+        c.write_shard(&path).unwrap();
+        let reader = Corpus::stream_shard(&path).unwrap();
+        assert_eq!(reader.sentence_count(), 33);
+        let streamed: Vec<Vec<u32>> = reader.map(|s| s.unwrap()).collect();
+        assert_eq!(streamed, c.sentences);
+        // streaming surfaces trailing garbage as an error mid-iteration
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0xCD; 3]);
+        std::fs::write(&path, &bytes).unwrap();
+        let mut reader = Corpus::stream_shard(&path).unwrap();
+        let mut last = None;
+        for item in &mut reader {
+            last = Some(item);
+        }
+        assert!(last.unwrap().is_err(), "trailing bytes must surface");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

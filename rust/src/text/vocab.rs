@@ -195,6 +195,14 @@ impl Vocab {
         out
     }
 
+    /// Parse [`Self::to_tsv`] output. **Line order is id order**: `to_tsv`
+    /// writes words by ascending id, and any corpus/embedding persisted
+    /// next to a `vocab.tsv` is encoded against those ids — re-ranking by
+    /// frequency here (as this used to do) silently remapped every token
+    /// of a reloaded corpus whenever the original vocab wasn't already
+    /// frequency-sorted (the synthetic generator's, for one, is ordered by
+    /// generator id). The multi-process training workers and `dw2v serve
+    /// --vocab` both rely on this round trip being id-exact.
     pub fn from_tsv(text: &str) -> Result<Self, String> {
         let mut pairs = Vec::new();
         for (lineno, line) in text.lines().enumerate() {
@@ -209,7 +217,7 @@ impl Vocab {
                 .map_err(|_| format!("line {}: bad count '{c}'", lineno + 1))?;
             pairs.push((w.to_string(), count));
         }
-        Ok(Self::from_counts(pairs))
+        Ok(Self::from_ordered(pairs))
     }
 }
 
@@ -299,6 +307,27 @@ mod tests {
             assert_eq!(v2.word(i), v.word(i));
             assert_eq!(v2.count(i), v.count(i));
         }
+    }
+
+    #[test]
+    fn tsv_roundtrip_preserves_non_frequency_id_order() {
+        // the synthetic generator's vocab is ordered by generator id, not
+        // frequency, and counts can tie with lexicographic order
+        // disagreeing with id order ("w12" < "w7" as strings) — a
+        // frequency re-rank on load would swap ids and silently corrupt
+        // every corpus/embedding encoded against them
+        let v = Vocab::from_ordered(vec![
+            ("w7".to_string(), 5),
+            ("w12".to_string(), 5),
+            ("rare".to_string(), 9),
+        ]);
+        let back = Vocab::from_tsv(&v.to_tsv()).unwrap();
+        for i in 0..v.len() as u32 {
+            assert_eq!(back.word(i), v.word(i), "id {i} must survive the tsv round trip");
+            assert_eq!(back.count(i), v.count(i));
+        }
+        assert_eq!(back.id("w7"), Some(0));
+        assert_eq!(back.retained_tokens(), v.retained_tokens());
     }
 
     #[test]

@@ -97,6 +97,22 @@ impl BackendKind {
     }
 }
 
+/// Validate a sampling rate `r%`. The number of sub-models is
+/// `round(100/r)`, so anything outside `(0, 100]` is nonsense: `0`
+/// (or any non-finite value) makes the division blow up — before this
+/// guard, `(100.0 / 0.0).round() as usize` saturated to `usize::MAX`
+/// and the reducer vec allocation aborted the process — and negative or
+/// `> 100` rates silently produce Bernoulli probabilities outside
+/// `[0, 1]`.
+pub fn validate_rate_percent(rate_percent: f64) -> Result<(), String> {
+    if !rate_percent.is_finite() || rate_percent <= 0.0 || rate_percent > 100.0 {
+        return Err(format!(
+            "rate_percent must be in (0, 100], got {rate_percent}"
+        ));
+    }
+    Ok(())
+}
+
 /// Full experiment configuration. Defaults reproduce the quickstart run.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
@@ -249,7 +265,11 @@ impl ExperimentConfig {
                 self.strategy = DivideStrategy::parse(value)
                     .ok_or_else(|| format!("unknown strategy '{value}'"))?
             }
-            "rate_percent" => self.rate_percent = p(key, value)?,
+            "rate_percent" => {
+                let r: f64 = p(key, value)?;
+                validate_rate_percent(r)?;
+                self.rate_percent = r;
+            }
             "merge" => {
                 self.merge = MergeMethod::parse(value)
                     .ok_or_else(|| format!("unknown merge method '{value}'"))?
@@ -337,6 +357,29 @@ mod tests {
         assert_eq!(cfg.submodel_min_count(), 10);
         cfg.rate_percent = 50.0;
         assert_eq!(cfg.submodel_min_count(), 50);
+    }
+
+    #[test]
+    fn rate_percent_is_validated_at_parse() {
+        let mut cfg = ExperimentConfig::default();
+        // lower boundary is exclusive …
+        assert!(cfg.apply("rate_percent", "0").is_err());
+        assert!(cfg.apply("rate_percent", "0.0").is_err());
+        // … the upper one inclusive
+        cfg.apply("rate_percent", "100").unwrap();
+        assert_eq!(cfg.rate_percent, 100.0);
+        assert!(cfg.apply("rate_percent", "100.0001").is_err());
+        assert!(cfg.apply("rate_percent", "-3").is_err());
+        assert!(cfg.apply("rate_percent", "NaN").is_err());
+        assert!(cfg.apply("rate_percent", "inf").is_err());
+        cfg.apply("rate_percent", "12.5").unwrap();
+        assert_eq!(cfg.rate_percent, 12.5);
+        // a rejected value must not clobber the previous one
+        assert!(cfg.apply("rate_percent", "0").is_err());
+        assert_eq!(cfg.rate_percent, 12.5);
+        // the JSON path funnels through the same validation
+        let j = Json::parse(r#"{"rate_percent": 0}"#).unwrap();
+        assert!(ExperimentConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -110,6 +110,34 @@ impl World {
             stats,
         ))
     }
+
+    /// Coordinator-side view of a persisted shard directory: the
+    /// `vocab.tsv` (id order preserved — shard token ids are encoded
+    /// against it) plus an optional `questions-words.txt` benchmark
+    /// suite. The corpus itself deliberately stays on disk — in the
+    /// multi-process pipeline only the workers stream it, so the
+    /// coordinator's memory is independent of corpus size.
+    pub fn vocab_and_suite_from_shards(
+        dir: &Path,
+        questions: Option<&Path>,
+    ) -> Result<(Vocab, Vec<Benchmark>), String> {
+        let vocab_path = dir.join("vocab.tsv");
+        let text = std::fs::read_to_string(&vocab_path)
+            .map_err(|e| format!("read {}: {e}", vocab_path.display()))?;
+        let vocab = Vocab::from_tsv(&text)?;
+        if vocab.is_empty() {
+            return Err(format!("{} holds an empty vocabulary", vocab_path.display()));
+        }
+        let suite = match questions {
+            Some(q) => {
+                let qw = crate::eval::questions::load_questions_words(q, &vocab)?;
+                crate::info!("{}", qw.summary());
+                qw.suite
+            }
+            None => Vec::new(),
+        };
+        Ok((vocab, suite))
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +230,35 @@ mod tests {
         assert!(shards.join("vocab.tsv").exists());
         let reloaded = Corpus::read_sharded(&shards).unwrap();
         assert_eq!(reloaded, world.corpus);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn vocab_and_suite_from_shards_loads_coordinator_inputs() {
+        let dir = std::env::temp_dir().join(format!(
+            "dw2v_world_shards_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.sentences = 120;
+        cfg.vocab = 80;
+        cfg.clusters = 4;
+        let world = build_world(&cfg);
+        world.corpus.write_sharded(&dir, 2).unwrap();
+        std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+        let (vocab, suite) = World::vocab_and_suite_from_shards(&dir, None).unwrap();
+        assert_eq!(vocab.len(), world.vocab.len());
+        // id mapping must be exactly the one the shards were encoded with
+        for id in [0u32, 7, 79] {
+            assert_eq!(vocab.word(id), world.vocab.word(id));
+        }
+        assert!(suite.is_empty());
+        // a directory without vocab.tsv is an error, not a panic
+        let empty = dir.join("nothing_here");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(World::vocab_and_suite_from_shards(&empty, None).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,268 @@
+//! End-to-end tests for the multi-process training path: real
+//! `dw2v train-worker` OS processes (via `CARGO_BIN_EXE_dw2v`) trained
+//! over real shard files, coordinated by `coordinator::procs`.
+//!
+//! The two headline properties:
+//!
+//! * **equivalence** — with `mappers = 1`, a multi-process run produces
+//!   sub-models bitwise identical to the in-process leader path on the
+//!   native backend (same seeds, same stateless routing, same shard-file
+//!   sentence order, same lr schedule);
+//! * **fault tolerance** — SIGKILLing a worker mid-run loses exactly that
+//!   sub-model: the coordinator reports the failure, merges the
+//!   survivors, and eval accuracy stays within tolerance of the full
+//!   run (the paper's missing-sub-model robustness).
+
+use dw2v::coordinator::leader;
+use dw2v::coordinator::procs::{self, ProcsOptions};
+use dw2v::eval::report::mean_score;
+use dw2v::runtime::backend::ModelShape;
+use dw2v::runtime::native::NativeBackend;
+use dw2v::text::corpus::Corpus;
+use dw2v::text::vocab::Vocab;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+use std::path::PathBuf;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dw2v"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dw2v_procs_e2e_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small-but-real experiment; `mappers = 1` for deterministic delivery
+/// order (the same knob the in-process bitwise test uses).
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 1200;
+    cfg.vocab = 250;
+    cfg.clusters = 8;
+    cfg.truth_dim = 8;
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 50.0; // 2 sub-models
+    cfg.mappers = 1;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 8.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+/// Persist a synthetic world as the shard + vocab.tsv layout the workers
+/// consume, and sanity-check the round trip is id-exact.
+fn persist_world(dir: &std::path::Path, cfg: &ExperimentConfig, shards: usize) -> dw2v::world::World {
+    let world = build_world(cfg);
+    world.corpus.write_sharded(dir, shards).unwrap();
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+    let reloaded = Corpus::read_sharded(dir).unwrap();
+    assert_eq!(reloaded, world.corpus, "shard round trip must be exact");
+    let v = Vocab::from_tsv(&std::fs::read_to_string(dir.join("vocab.tsv")).unwrap()).unwrap();
+    assert_eq!(v.len(), world.vocab.len());
+    for id in 0..v.len() as u32 {
+        assert_eq!(v.word(id), world.vocab.word(id), "vocab ids must survive tsv");
+    }
+    world
+}
+
+#[test]
+fn multiprocess_matches_inprocess_bitwise() {
+    let cfg = small_cfg();
+    let dir = tdir("bitwise");
+    let world = persist_world(&dir, &cfg, 3);
+
+    // in-process reference over the exact bytes the workers will stream
+    let corpus = Corpus::read_sharded(&dir).unwrap();
+    let vocab =
+        Vocab::from_tsv(&std::fs::read_to_string(dir.join("vocab.tsv")).unwrap()).unwrap();
+    let backend = NativeBackend::new(ModelShape::for_experiment(&cfg, vocab.len()));
+    let inproc = leader::train_submodels(&cfg, &corpus, &vocab, &backend).unwrap();
+    assert_eq!(inproc.submodels.len(), 2);
+
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: dir.join("submodels"),
+        extra_env: Vec::new(),
+    };
+    let report = procs::run_multiprocess(&cfg, &world.suite, &opts).unwrap();
+    assert_eq!(report.outcomes.len(), 2);
+    assert_eq!(report.survivors(), 2, "both workers must survive");
+
+    for outcome in &report.outcomes {
+        let artifact = outcome.artifact.as_ref().expect("survivor has artifact");
+        let s = outcome.submodel;
+        let reference = &inproc.submodels[s];
+        assert_eq!(artifact.embedding.vocab, reference.vocab);
+        assert_eq!(artifact.embedding.dim, reference.dim);
+        assert_eq!(
+            artifact.embedding.present, reference.present,
+            "sub-model {s}: presence masks must match"
+        );
+        assert_eq!(artifact.embedding.data.len(), reference.data.len());
+        for (i, (a, b)) in artifact.embedding.data.iter().zip(&reference.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "sub-model {s}: weight {i} differs between the process and thread paths"
+            );
+        }
+        // loss curves replay exactly too (they ride through JSON meta)
+        let loss: Vec<u64> = artifact.meta.epoch_loss.iter().map(|l| l.to_bits()).collect();
+        let want: Vec<u64> = inproc.epoch_loss[s].iter().map(|l| l.to_bits()).collect();
+        assert_eq!(loss, want, "sub-model {s}: epoch loss curve must match");
+        assert_eq!(artifact.meta.trainer_seed, leader::submodel_seed(cfg.seed, s));
+        assert_eq!(artifact.meta.strategy, "shuffle");
+    }
+
+    // the shared tail produced finite scores over the gold suite
+    assert_eq!(report.tail.scores.len(), world.suite.len());
+    assert!(report.tail.scores.iter().all(|s| s.score.is_finite()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn coordinator_survives_a_sigkilled_worker() {
+    let mut cfg = small_cfg();
+    cfg.sentences = 1600;
+    cfg.rate_percent = 25.0; // 4 sub-models
+    let dir = tdir("kill");
+    let world = persist_world(&dir, &cfg, 4);
+
+    // reference: the full 4-model run, in-process (bitwise-equal to what
+    // the 4 workers would produce, per the test above)
+    let corpus = Corpus::read_sharded(&dir).unwrap();
+    let vocab =
+        Vocab::from_tsv(&std::fs::read_to_string(dir.join("vocab.tsv")).unwrap()).unwrap();
+    let backend = NativeBackend::new(ModelShape::for_experiment(&cfg, vocab.len()));
+    let full = leader::train_submodels(&cfg, &corpus, &vocab, &backend).unwrap();
+    let full_tail = leader::merge_and_eval(&cfg, &full.submodels, &world.suite);
+    let full_mean = mean_score(&full_tail.scores);
+
+    // spawn 4 workers that hold still long enough to be killed mid-run
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: dir.join("submodels"),
+        extra_env: vec![("DW2V_WORKER_STARTUP_SLEEP_MS".to_string(), "1500".to_string())],
+    };
+    let pool = procs::spawn_workers(&cfg, &opts).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let victim = 1usize;
+    let pid = pool.pid(victim).expect("victim pid");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("run kill");
+    assert!(status.success(), "kill -9 must succeed");
+
+    let (outcomes, _train_secs) = pool.wait();
+    assert_eq!(outcomes.len(), 4);
+
+    // the coordinator reports the failure precisely …
+    let dead = &outcomes[victim];
+    assert!(!dead.survived());
+    match &dead.fate {
+        procs::WorkerFate::Failed(why) => {
+            assert!(why.contains("signal 9"), "fate should name the signal: {why}")
+        }
+        other => panic!("victim should have failed, got {other:?}"),
+    }
+    assert!(
+        !dir.join("submodels").join("submodel_1.dwsm").exists(),
+        "a killed worker must not leave an artifact"
+    );
+
+    // … the other three survived …
+    let survivors: Vec<_> = outcomes.iter().filter(|o| o.survived()).collect();
+    assert_eq!(survivors.len(), 3);
+
+    // … and the merge + eval over the survivors stays within tolerance
+    // of the full 4-model run (missing-sub-model robustness)
+    let submodels: Vec<_> = survivors
+        .iter()
+        .map(|o| o.artifact.as_ref().unwrap().embedding.clone())
+        .collect();
+    let tail = leader::merge_and_eval(&cfg, &submodels, &world.suite);
+    assert!(
+        tail.merged.embedding.present_count() > 0,
+        "survivor merge must produce a usable consensus"
+    );
+    assert!(tail.scores.iter().all(|s| s.score.is_finite()));
+    let mean3 = mean_score(&tail.scores);
+    assert!(
+        (mean3 - full_mean).abs() < 0.2,
+        "3-survivor eval {mean3:.3} strayed too far from the 4-model run {full_mean:.3}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn worker_rejects_bad_inputs_with_nonzero_exit() {
+    let cfg = small_cfg();
+    let dir = tdir("badworker");
+    persist_world(&dir, &cfg, 2);
+
+    // sub-model index out of range for rate 50% (2 sub-models)
+    let out = dir.join("nope.dwsm");
+    let status = std::process::Command::new(worker_exe())
+        .args([
+            "train-worker",
+            "--shard-dir",
+            dir.to_str().unwrap(),
+            "--rate",
+            "50",
+            "--submodel",
+            "7",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawn worker");
+    assert!(!status.success(), "out-of-range sub-model must fail");
+    assert!(!out.exists());
+
+    // a directory with no shards at all
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    std::fs::write(empty.join("vocab.tsv"), "w\t3\n").unwrap();
+    let status = std::process::Command::new(worker_exe())
+        .args([
+            "train-worker",
+            "--shard-dir",
+            empty.to_str().unwrap(),
+            "--submodel",
+            "0",
+            "--out",
+            out.to_str().unwrap(),
+        ])
+        .status()
+        .expect("spawn worker");
+    assert!(!status.success(), "shardless dir must fail");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spawn_workers_validates_the_shard_dir_up_front() {
+    let cfg = small_cfg();
+    let dir = tdir("noshards");
+    // no vocab.tsv, no shards: must error before spawning anything
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: dir.join("submodels"),
+        extra_env: Vec::new(),
+    };
+    let err = procs::spawn_workers(&cfg, &opts).unwrap_err();
+    assert!(err.contains("vocab.tsv"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
