@@ -150,6 +150,40 @@ fn main() {
             }
             Err(e) => println!("multi-process row skipped: {e}"),
         }
+        // supervised variant of the same run: beacons every 250 ms,
+        // per-epoch checkpoints, supervisor poll loop — the row above is
+        // the control, so the delta is the full cost of supervision on a
+        // fault-free run (expected: small, dominated by checkpoint I/O)
+        let sup = dw2v::coordinator::supervisor::SupervisorOptions::default();
+        match dw2v::coordinator::supervisor::run_supervised(&cfg, &[], &opts, &sup) {
+            Ok(rep) => {
+                let per_worker: f64 = rep
+                    .outcomes
+                    .iter()
+                    .map(|o| o.secs)
+                    .fold(0.0, f64::max);
+                table.row(
+                    "supervised 25% (4 procs)",
+                    vec![
+                        format!("{:.2}", rep.train_secs),
+                        format!("{:.3}", per_worker),
+                        "-".into(),
+                        format!("{:.3}", rep.tail.merged.seconds),
+                        format!("{}", rep.survivors()),
+                    ],
+                    obj(vec![
+                        ("system", s("procs-supervised")),
+                        ("rate", num(25.0)),
+                        ("train_secs", num(rep.train_secs)),
+                        ("slowest_worker_secs", num(per_worker)),
+                        ("alir_merge_secs", num(rep.tail.merged.seconds)),
+                        ("survivors", num(rep.survivors() as f64)),
+                        ("respawns", num(rep.stats.respawns as f64)),
+                    ]),
+                );
+            }
+            Err(e) => println!("supervised row skipped: {e}"),
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -38,6 +38,10 @@ pub struct TrainOutput {
     pub train_secs: f64,
     pub mr_stats: RunStats,
     pub pairs: u64,
+    /// pairs emitted by each sub-model's trainer, in sub-model order —
+    /// what a multi-process worker for the same sub-model reports in its
+    /// artifact meta (the chaos e2e derives crash thresholds from this)
+    pub pairs_per_submodel: Vec<u64>,
     pub dispatches: u64,
     /// mean per-reducer device busy time — what a dedicated node per
     /// reducer would see as its train phase (the paper's Table 4 metric)
@@ -147,6 +151,7 @@ pub fn train_submodels<B: Backend>(
     let mut submodels = Vec::with_capacity(n);
     let mut epoch_loss = Vec::with_capacity(n);
     let mut pairs = 0;
+    let mut pairs_per_submodel = Vec::with_capacity(n);
     let mut dispatches = 0;
     let mut busy = Vec::with_capacity(n);
     for red in reducers {
@@ -155,6 +160,7 @@ pub fn train_submodels<B: Backend>(
         }
         epoch_loss.push(red.epoch_mean_loss.clone());
         pairs += red.trainer.pairs_emitted();
+        pairs_per_submodel.push(red.trainer.pairs_emitted());
         dispatches += red.trainer.dispatches();
         busy.push(red.trainer.device_secs);
         submodels.push(red.trainer.into_embedding(min_count)?);
@@ -171,6 +177,7 @@ pub fn train_submodels<B: Backend>(
         train_secs,
         mr_stats,
         pairs,
+        pairs_per_submodel,
         dispatches,
         avg_reducer_busy_secs: avg_busy,
         max_reducer_busy_secs: max_busy,

@@ -5,6 +5,8 @@
 //! * [`leader`] — end-to-end orchestration + phase timing (in-process)
 //! * [`procs`] — multi-process training: one OS process per sub-model
 //!   over on-disk shard files, with fault-tolerant artifact collection
+//! * [`supervisor`] — worker supervision: heartbeat beacons, stall/crash
+//!   detection, checkpoint-backed respawn, deterministic fault injection
 //! * [`stats`] — unigram/bigram KL divergence (Figure 1) + vocab coverage
 pub mod divider;
 pub mod leader;
@@ -12,3 +14,4 @@ pub mod mapper;
 pub mod procs;
 pub mod reducer;
 pub mod stats;
+pub mod supervisor;

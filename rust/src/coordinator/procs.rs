@@ -19,16 +19,41 @@
 //!   (write-to-temp + rename, so a killed worker can never leave a
 //!   half-written artifact behind).
 //! * [`spawn_workers`] / [`WorkerPool`] / [`run_multiprocess`] — the
-//!   coordinator: spawns `100/r` workers via `std::process::Command`,
-//!   monitors them as they exit, collects whatever artifacts came back
-//!   and runs the shared merge + eval tail
+//!   plain coordinator: spawns `100/r` workers via
+//!   `std::process::Command`, monitors them as they exit, collects
+//!   whatever artifacts came back and runs the shared merge + eval tail
 //!   ([`super::leader::merge_and_eval`]) over the survivors.
+//! * [`super::supervisor::run_supervised`] — the supervised coordinator
+//!   built from the pieces this module exports ([`prepare_run`],
+//!   [`spawn_one_worker`], [`collect_artifact`]): beacon-based liveness,
+//!   stall detection, and policy-driven respawn from checkpoints.
 //!
 //! **Fault tolerance is the point, not an afterthought**: a crashed or
 //! killed worker's sub-model is simply absent, and the merge proceeds
 //! over the survivors — the paper's missing-*words* robustness
 //! (§reconstruction) promoted to missing-*sub-models* robustness. The
 //! failure is surfaced in the [`WorkerOutcome`]s, never hidden.
+//!
+//! ## Worker protocol (one artifact dir, four file kinds)
+//!
+//! Everything a worker says to the coordinator is a file in `out_dir`,
+//! always published write-to-temp + rename:
+//!
+//! * `config.json` — the run config, written once by the coordinator.
+//! * `beacon_<s>.json` — the worker's heartbeat/progress beacon
+//!   ([`super::supervisor::BeaconWriter`]): rewritten every
+//!   `DW2V_BEACON_INTERVAL_MS` (default 250 ms) during the estimation
+//!   and train phases. The supervisor treats any byte change as liveness.
+//! * `submodel_<s>.ckpt` — an epoch-boundary [`CheckpointArtifact`]:
+//!   packed trainer state + exact counters. Written after every epoch
+//!   except the last (the artifact itself supersedes it) and deleted on
+//!   successful publication. A respawned worker finds it, validates it
+//!   against the run identity, and resumes at the recorded epoch.
+//! * `submodel_<s>.dwsm` — the final [`SubModelArtifact`].
+//!
+//! [`prepare_run`] deletes stale files of all four kinds (plus
+//! fault-injection markers) before a new run spawns anything, so output
+//! from an older run in the same dir can never masquerade as this run's.
 //!
 //! ## Determinism
 //!
@@ -43,25 +68,42 @@
 //! backend; with more mappers the two paths are statistically equivalent
 //! (same data, same routing, different macro-batch boundaries).
 //!
-//! Test hook: a worker sleeps `DW2V_WORKER_STARTUP_SLEEP_MS`
-//! milliseconds before touching the shards when that variable is set —
-//! the kill-a-worker e2e uses it to open a deterministic window in which
-//! a victim can be SIGKILLed mid-run.
+//! Checkpoint/resume preserves that determinism: the Divider is a
+//! stateless counter (routing needs only the epoch in the packed sid),
+//! the batch builder's base RNG never advances, and the checkpoint
+//! carries the exact f64 loss counters — so a worker crashed at an epoch
+//! boundary and respawned resumes into the *same* pair stream and
+//! finishes bitwise identical to an uninterrupted run (the chaos e2e
+//! pins this).
+//!
+//! ## Test hooks
+//!
+//! * `DW2V_WORKER_STARTUP_SLEEP_MS` — sleep before touching the shards
+//!   (opens a deterministic window for the kill-a-worker e2e).
+//! * `DW2V_FAULT` — deterministic fault injection, parsed by
+//!   [`super::supervisor::FaultSpec`] (`crash@pairs=N`, `stall@epoch=K`,
+//!   `corrupt-artifact`, `slow@factor=F`, each optionally scoped with
+//!   `@submodel=S`; clauses joined with `;`).
+//! * `DW2V_BEACON_INTERVAL_MS` — beacon publish interval override.
 
 use super::leader;
-use super::mapper::{ShardFileSource, SubModelFilter};
+use super::mapper::{ShardFileSource, SubModelFilter, SID_INDEX_BITS};
 use super::reducer::TrainReducer;
-use crate::embedding::{ArtifactMeta, Embedding, SubModelArtifact};
-use crate::exec::mapreduce::MapReduce;
+use super::supervisor::{beacon_path, ArmedFaults, BeaconWriter, FaultSpec};
+use crate::embedding::{
+    ArtifactMeta, CheckpointArtifact, CheckpointMeta, Embedding, SubModelArtifact,
+};
+use crate::exec::mapreduce::{MapReduce, Reducer};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
+use crate::runtime::params::Metrics;
 use crate::runtime::{load_backend, Backend};
 use crate::sgns::schedule::PairEstimator;
-use crate::sgns::trainer::SubModelTrainer;
+use crate::sgns::trainer::{SubModelTrainer, TrainerSnapshot};
 use crate::text::vocab::Vocab;
 use crate::util::config::ExperimentConfig;
 use crate::util::logging::Timer;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, ExitStatus};
 use std::sync::Arc;
 use std::time::Instant;
@@ -80,18 +122,187 @@ pub struct WorkerSpec {
     pub out: PathBuf,
 }
 
+/// Where a worker keeps its epoch-boundary checkpoint, derived from the
+/// artifact path: `submodel_3.dwsm` → `submodel_3.ckpt`.
+pub fn checkpoint_path(out: &Path) -> PathBuf {
+    out.with_extension("ckpt")
+}
+
+/// The reducer a worker actually runs: the plain [`TrainReducer`] wrapped
+/// with the supervision duties — beacon publication on progress and the
+/// fault-injection trigger points. Kept out of `TrainReducer` itself so
+/// the in-process leader path pays nothing for supervision.
+struct WorkerReducer<'b, B: Backend> {
+    inner: TrainReducer<'b, B>,
+    beacon: BeaconWriter,
+    faults: ArmedFaults,
+}
+
+impl<'b, B: Backend> Reducer<(u64, Vec<u32>)> for WorkerReducer<'b, B> {
+    fn reduce(&mut self, (sid, sentence): (u64, Vec<u32>)) {
+        let epoch = (sid >> SID_INDEX_BITS) as usize;
+        self.inner.reduce((sid, sentence));
+        self.faults.on_progress(self.inner.trainer.pairs_emitted());
+        self.beacon.maybe_write(
+            "train",
+            epoch,
+            self.inner.trainer.sentences_received,
+            self.inner.trainer.pairs_emitted(),
+        );
+    }
+
+    fn end_round(&mut self, round: usize) {
+        self.inner.end_round(round);
+        // force a beacon at the barrier: a worker between epochs must not
+        // look stalled just because no sentence arrived within the interval
+        self.beacon.write_now(
+            "train",
+            round + 1,
+            self.inner.trainer.sentences_received,
+            self.inner.trainer.pairs_emitted(),
+        );
+    }
+}
+
+/// Validate a checkpoint found on disk against this run's identity.
+/// Anything that doesn't match — other run, other sub-model, stale
+/// corpus, already-finished — is an error; the caller discards the file
+/// and trains from scratch rather than resuming into the wrong stream.
+fn validate_checkpoint(
+    ck: &CheckpointArtifact,
+    cfg: &ExperimentConfig,
+    spec: &WorkerSpec,
+    num_submodels: usize,
+    trainer_seed: u64,
+    total_sentences: usize,
+    vocab_len: usize,
+) -> Result<(), String> {
+    let m = &ck.meta;
+    if m.submodel != spec.submodel
+        || m.num_submodels != num_submodels
+        || m.root_seed != cfg.seed
+        || m.trainer_seed != trainer_seed
+        || m.strategy != cfg.strategy.name()
+        || m.rate_percent != cfg.rate_percent
+        || m.epochs != cfg.epochs
+    {
+        return Err(format!(
+            "belongs to a different run (submodel {} of {}, root seed {}, \
+             strategy {}, rate {}%, {} epochs)",
+            m.submodel, m.num_submodels, m.root_seed, m.strategy, m.rate_percent, m.epochs
+        ));
+    }
+    if m.total_sentences != total_sentences || m.vocab != vocab_len {
+        return Err(format!(
+            "corpus changed since checkpoint ({} sentences / vocab {} then, \
+             {} / {} now)",
+            m.total_sentences, m.vocab, total_sentences, vocab_len
+        ));
+    }
+    if m.epochs_done == 0 || m.epochs_done >= cfg.epochs {
+        return Err(format!(
+            "claims {} of {} epochs done — nothing to resume",
+            m.epochs_done, cfg.epochs
+        ));
+    }
+    Ok(())
+}
+
+/// Snapshot the trainer at the epoch boundary just crossed and publish it
+/// atomically as `submodel_<s>.ckpt` (derived from `spec.out`), replacing
+/// any older checkpoint.
+fn write_checkpoint<B: Backend>(
+    cfg: &ExperimentConfig,
+    spec: &WorkerSpec,
+    num_submodels: usize,
+    trainer_seed: u64,
+    total_sentences: usize,
+    epochs_done: usize,
+    red: &WorkerReducer<'_, B>,
+) -> Result<(), String> {
+    let path = checkpoint_path(&spec.out);
+    let snap = red
+        .inner
+        .trainer
+        .snapshot()
+        .map_err(|e| format!("checkpoint snapshot: {e}"))?;
+    let meta = CheckpointMeta {
+        submodel: spec.submodel,
+        num_submodels,
+        root_seed: cfg.seed,
+        trainer_seed,
+        strategy: cfg.strategy.name().to_string(),
+        rate_percent: cfg.rate_percent,
+        epochs: cfg.epochs,
+        epochs_done,
+        total_sentences,
+        vocab: snap.seen_counts.len(),
+        dispatched_pairs: snap.dispatched_pairs,
+        pairs_emitted: snap.pairs_emitted,
+        sentences_received: snap.sentences_received,
+        dispatches: snap.dispatches,
+        loss_sum: snap.metrics.loss_sum,
+        examples: snap.metrics.examples,
+        micro_steps: snap.metrics.micro_steps,
+        epoch_loss: red.inner.epoch_mean_loss.clone(),
+    };
+    // the packed payload rides the embedding body format; rows = 2V+2
+    let rows = snap.packed.len() / cfg.dim.max(1);
+    let ck = CheckpointArtifact {
+        meta,
+        seen_counts: snap.seen_counts,
+        packed: Embedding {
+            vocab: rows,
+            dim: cfg.dim,
+            data: snap.packed,
+            present: vec![true; rows],
+        },
+    };
+    let tmp = path.with_extension("ckpt.tmp");
+    ck.save(&tmp)
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("publish {}: {e}", path.display()))?;
+    Ok(())
+}
+
 /// Train one sub-model in this process — the whole worker protocol.
 /// Streams the corpus from `spec.shard_dir`, trains sub-model
-/// `spec.submodel` and atomically publishes a [`SubModelArtifact`] at
-/// `spec.out`. Any error (unreadable shards, bad index, backend failure)
-/// is returned, which the CLI turns into a non-zero exit the coordinator
-/// records as a failed worker.
+/// `spec.submodel` (resuming from a valid `submodel_<s>.ckpt` when one
+/// exists), publishes a beacon throughout, and atomically publishes a
+/// [`SubModelArtifact`] at `spec.out`. Any error (unreadable shards, bad
+/// index, backend failure) is returned, which the CLI turns into a
+/// non-zero exit the coordinator records as a failed worker.
 pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), String> {
     if let Ok(ms) = std::env::var("DW2V_WORKER_STARTUP_SLEEP_MS") {
         if let Ok(ms) = ms.parse::<u64>() {
             std::thread::sleep(std::time::Duration::from_millis(ms));
         }
     }
+    // a malformed fault spec is a startup error, never a silent no-op —
+    // a chaos test with a typo'd spec must fail loudly, not pass vacuously
+    let fault_spec = match std::env::var("DW2V_FAULT") {
+        Ok(text) => {
+            FaultSpec::parse(&text, spec.submodel).map_err(|e| format!("DW2V_FAULT: {e}"))?
+        }
+        Err(_) => FaultSpec::default(),
+    };
+    let out_dir = spec
+        .out
+        .parent()
+        .map(Path::to_path_buf)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let beacon_interval = std::env::var("DW2V_BEACON_INTERVAL_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(250);
+    let mut beacon = BeaconWriter::new(
+        beacon_path(&out_dir, spec.submodel),
+        spec.submodel,
+        beacon_interval,
+    );
+    beacon.write_now("start", 0, 0, 0);
+    let faults = ArmedFaults::new(fault_spec, out_dir, spec.submodel);
+
     let vocab_path = spec.shard_dir.join("vocab.tsv");
     let vocab_text = std::fs::read_to_string(&vocab_path)
         .map_err(|e| format!("read {}: {e}", vocab_path.display()))?;
@@ -123,8 +334,13 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     let mut est = PairEstimator::new(&vocab, &scfg);
     {
         use crate::exec::mapreduce::RoundSource;
+        let mut seen = 0u64;
         for (_, sentence) in source.shard(0, 0, 1) {
             est.add_sentence(&sentence);
+            seen += 1;
+            if seen % 4096 == 0 {
+                beacon.maybe_write("estimate", 0, seen, 0);
+            }
         }
     }
     if let Some(e) = source.take_error() {
@@ -144,25 +360,118 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         backend.name()
     );
 
-    let trainer = SubModelTrainer::new(&backend, &vocab, &scfg, expected_pairs, trainer_seed)?;
-    let mut reducers = vec![TrainReducer::new(trainer)];
+    let mut trainer = SubModelTrainer::new(&backend, &vocab, &scfg, expected_pairs, trainer_seed)?;
+
+    // resume: a valid checkpoint left by a previous incarnation of this
+    // worker restores the trainer and skips the epochs already done
+    let ckpt = checkpoint_path(&spec.out);
+    let mut start_epoch = 0usize;
+    let mut resumed_loss: Vec<f64> = Vec::new();
+    let mut resume_prev = Metrics::default();
+    if ckpt.is_file() {
+        let loaded = CheckpointArtifact::load(&ckpt)
+            .map_err(|e| e.to_string())
+            .and_then(|ck| {
+                validate_checkpoint(
+                    &ck,
+                    cfg,
+                    spec,
+                    divider.num_submodels,
+                    trainer_seed,
+                    total,
+                    vocab.len(),
+                )
+                .map(|()| ck)
+            });
+        match loaded {
+            Ok(ck) => {
+                let snap = TrainerSnapshot {
+                    packed: ck.packed.data,
+                    seen_counts: ck.seen_counts,
+                    dispatched_pairs: ck.meta.dispatched_pairs,
+                    pairs_emitted: ck.meta.pairs_emitted,
+                    sentences_received: ck.meta.sentences_received,
+                    dispatches: ck.meta.dispatches,
+                    metrics: Metrics {
+                        loss_sum: ck.meta.loss_sum,
+                        examples: ck.meta.examples,
+                        micro_steps: ck.meta.micro_steps,
+                    },
+                };
+                trainer
+                    .restore(&snap)
+                    .map_err(|e| format!("restore checkpoint {}: {e}", ckpt.display()))?;
+                start_epoch = ck.meta.epochs_done;
+                resumed_loss = ck.meta.epoch_loss;
+                resume_prev = snap.metrics;
+                info!(
+                    "worker {}: resuming from {} at epoch {start_epoch}/{} \
+                     ({} pairs dispatched)",
+                    spec.submodel,
+                    ckpt.display(),
+                    cfg.epochs,
+                    snap.dispatched_pairs
+                );
+            }
+            Err(why) => {
+                // invalid ≠ fatal: discard and train from scratch
+                info!(
+                    "worker {}: ignoring checkpoint {} — {why}",
+                    spec.submodel,
+                    ckpt.display()
+                );
+                let _ = std::fs::remove_file(&ckpt);
+            }
+        }
+    }
+
+    let mut inner = TrainReducer::new(trainer);
+    inner.resume_loss_baseline(resumed_loss, resume_prev);
+    let mut reducers = vec![WorkerReducer {
+        inner,
+        beacon,
+        faults,
+    }];
     let timer = Timer::start("worker train");
     let mr = MapReduce {
         num_mappers: cfg.mappers.max(1),
         queue_capacity: cfg.queue_capacity,
     };
     let submodel = spec.submodel;
-    mr.run(
-        cfg.epochs,
-        &source,
-        |epoch, _shard| SubModelFilter::new(Arc::clone(&divider), epoch, submodel),
-        &mut reducers,
-    );
-    let train_secs = timer.stop_quiet();
-    if let Some(e) = source.take_error() {
-        return Err(format!("shard streaming failed mid-train: {e}"));
+    // one run_range call per epoch (≡ one run(n) call: MapReduce builds
+    // fresh channels and threads per round either way) so the trainer can
+    // be checkpointed at every epoch barrier
+    for epoch in start_epoch..cfg.epochs {
+        reducers[0].faults.maybe_stall(epoch);
+        mr.run_range(
+            epoch..epoch + 1,
+            &source,
+            |ep, _shard| SubModelFilter::new(Arc::clone(&divider), ep, submodel),
+            &mut reducers,
+        );
+        if let Some(e) = source.take_error() {
+            return Err(format!("shard streaming failed mid-train: {e}"));
+        }
+        if let Some(e) = reducers[0].inner.error.take() {
+            return Err(format!("trainer failed: {e}"));
+        }
+        if epoch + 1 < cfg.epochs {
+            write_checkpoint(
+                cfg,
+                spec,
+                divider.num_submodels,
+                trainer_seed,
+                total,
+                epoch + 1,
+                &reducers[0],
+            )?;
+        }
     }
-    let red = reducers.pop().expect("one reducer");
+    let train_secs = timer.stop_quiet();
+    let worker_red = reducers.pop().expect("one reducer");
+    let corrupt = worker_red.faults.corrupt_artifact();
+    let mut beacon = worker_red.beacon;
+    let red = worker_red.inner;
     if let Some(e) = red.error {
         return Err(format!("trainer failed: {e}"));
     }
@@ -191,8 +500,31 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     artifact
         .save(&tmp)
         .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    if corrupt {
+        // fault injection: tear the temp file *before* the publishing
+        // rename and still exit 0 — only the coordinator's artifact
+        // validation can catch this failure mode
+        let len = std::fs::metadata(&tmp)
+            .map_err(|e| format!("stat {}: {e}", tmp.display()))?
+            .len();
+        let f = std::fs::OpenOptions::new()
+            .write(true)
+            .open(&tmp)
+            .map_err(|e| format!("reopen {}: {e}", tmp.display()))?;
+        f.set_len(len / 2)
+            .map_err(|e| format!("truncate {}: {e}", tmp.display()))?;
+        info!(
+            "fault injection: worker {} truncating its artifact to {} bytes",
+            spec.submodel,
+            len / 2
+        );
+    }
     std::fs::rename(&tmp, &spec.out)
         .map_err(|e| format!("publish {}: {e}", spec.out.display()))?;
+    // the artifact supersedes the checkpoint; leaving it behind would only
+    // confuse the stale-file cleanup of the next run
+    let _ = std::fs::remove_file(&ckpt);
+    beacon.write_now("done", cfg.epochs, sentences, pairs);
     info!(
         "worker {}: done in {train_secs:.2}s — {sentences} sentences, {pairs} pairs, artifact {}",
         spec.submodel,
@@ -222,7 +554,8 @@ pub struct ProcsOptions {
 pub enum WorkerFate {
     /// exited 0 and its artifact loaded and matched the run config
     Completed,
-    /// crashed, was killed, exited non-zero, or published a bad artifact
+    /// crashed, was killed, stalled, exited non-zero, or published a bad
+    /// artifact
     Failed(String),
 }
 
@@ -272,7 +605,7 @@ pub struct WorkerPool {
     num_submodels: usize,
 }
 
-fn describe_status(status: &ExitStatus) -> String {
+pub(crate) fn describe_status(status: &ExitStatus) -> String {
     if status.success() {
         return "ok".to_string();
     }
@@ -289,16 +622,52 @@ fn describe_status(status: &ExitStatus) -> String {
     "terminated abnormally".to_string()
 }
 
-/// Spawn one `train-worker` process per sub-model. The experiment config
-/// is passed as a `config.json` in `out_dir` plus an explicit `--seed`
-/// override (u64 seeds don't survive a JSON f64 round trip above 2^53).
-pub fn spawn_workers(
+/// Is `name` output of a previous run in the same artifact dir — a
+/// sub-model artifact/checkpoint/temp file, a worker beacon, or a
+/// fault-injection marker?
+fn is_stale_run_file(name: &str) -> bool {
+    let sub = name.starts_with("submodel_")
+        && (name.ends_with(".dwsm") || name.ends_with(".ckpt") || name.ends_with(".tmp"));
+    let beacon = name.starts_with("beacon_")
+        && (name.ends_with(".json") || name.ends_with(".tmp"));
+    sub || beacon || name.starts_with("fault_")
+}
+
+/// Delete leftovers of a previous run from `out_dir` (artifacts,
+/// checkpoints, temp files, beacons, fault markers) so a worker that dies
+/// before publishing can never let an older run's file masquerade as this
+/// run's output — and a fresh run never "resumes" an unrelated
+/// checkpoint. Returns how many files were removed.
+pub fn clean_artifact_dir(out_dir: &Path) -> Result<usize, String> {
+    let entries = match std::fs::read_dir(out_dir) {
+        Ok(e) => e,
+        // nothing to clean if the dir doesn't exist yet
+        Err(_) => return Ok(0),
+    };
+    let mut removed = 0usize;
+    for entry in entries.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            if is_stale_run_file(name) {
+                std::fs::remove_file(entry.path())
+                    .map_err(|e| format!("remove stale {}: {e}", entry.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+/// Everything a coordinator does before the first spawn: validate the
+/// rate and the shard dir, create `out_dir`, sweep stale run files, and
+/// write the run's `config.json`. Returns the sub-model count and the
+/// config path to hand to [`spawn_one_worker`].
+pub fn prepare_run(
     cfg: &ExperimentConfig,
     opts: &ProcsOptions,
-) -> Result<WorkerPool, String> {
+) -> Result<(usize, PathBuf), String> {
     // validate before num_submodels(): a rate of 0 would saturate the
-    // count to usize::MAX and the spawn loop below would fork-bomb the
-    // host long before any worker's Divider::new could reject it
+    // count to usize::MAX and the spawn loop would fork-bomb the host
+    // long before any worker's Divider::new could reject it
     crate::util::config::validate_rate_percent(cfg.rate_percent)?;
     let n = cfg.num_submodels();
     if !opts.shard_dir.join("vocab.tsv").is_file() {
@@ -311,6 +680,13 @@ pub fn spawn_workers(
     let probe = ShardFileSource::open(&opts.shard_dir)?;
     std::fs::create_dir_all(&opts.out_dir)
         .map_err(|e| format!("create {}: {e}", opts.out_dir.display()))?;
+    let removed = clean_artifact_dir(&opts.out_dir)?;
+    if removed > 0 {
+        info!(
+            "coordinator: removed {removed} stale run files from {}",
+            opts.out_dir.display()
+        );
+    }
     let config_path = opts.out_dir.join("config.json");
     // the seed is re-encoded as a decimal string: u64s above 2^53 don't
     // survive a JSON f64 round trip, and `apply` parses strings exactly
@@ -323,37 +699,89 @@ pub fn spawn_workers(
     }
     std::fs::write(&config_path, config_json.to_string_pretty())
         .map_err(|e| format!("write {}: {e}", config_path.display()))?;
-
     info!(
         "coordinator: spawning {n} workers over {} shard files ({} sentences), exe {}",
         probe.num_files(),
         probe.total_sentences(),
         opts.worker_exe.display()
     );
+    Ok((n, config_path))
+}
+
+/// Spawn one `train-worker` process. `extra_env` is appended after
+/// `opts.extra_env` (the supervisor uses it for the beacon interval).
+pub fn spawn_one_worker(
+    cfg: &ExperimentConfig,
+    opts: &ProcsOptions,
+    config_path: &Path,
+    submodel: usize,
+    extra_env: &[(String, String)],
+) -> Result<Child, String> {
+    let out = opts.out_dir.join(format!("submodel_{submodel}.dwsm"));
+    let mut cmd = Command::new(&opts.worker_exe);
+    cmd.arg("train-worker")
+        .arg("--config")
+        .arg(config_path)
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--shard-dir")
+        .arg(&opts.shard_dir)
+        .arg("--submodel")
+        .arg(submodel.to_string())
+        .arg("--out")
+        .arg(&out);
+    for (k, v) in opts.extra_env.iter().chain(extra_env) {
+        cmd.env(k, v);
+    }
+    cmd.spawn().map_err(|e| {
+        format!(
+            "spawn worker {submodel} ({}): {e}",
+            opts.worker_exe.display()
+        )
+    })
+}
+
+/// Load and validate the artifact a cleanly-exited worker should have
+/// published. Every error is attributed to the sub-model it belongs to —
+/// a truncated or corrupt file names its worker instead of surfacing as
+/// a bare parse error.
+pub fn collect_artifact(
+    out: &Path,
+    submodel: usize,
+    root_seed: u64,
+    num_submodels: usize,
+) -> Result<SubModelArtifact, String> {
+    let a = SubModelArtifact::load(out).map_err(|e| {
+        format!(
+            "sub-model {submodel}: artifact {} rejected: {e}",
+            out.display()
+        )
+    })?;
+    if a.meta.submodel != submodel
+        || a.meta.root_seed != root_seed
+        || a.meta.num_submodels != num_submodels
+    {
+        return Err(format!(
+            "sub-model {submodel}: artifact {} belongs to a different run \
+             (submodel {} of {}, root seed {})",
+            out.display(),
+            a.meta.submodel,
+            a.meta.num_submodels,
+            a.meta.root_seed
+        ));
+    }
+    Ok(a)
+}
+
+/// Spawn one `train-worker` process per sub-model. The experiment config
+/// is passed as a `config.json` in `out_dir` plus an explicit `--seed`
+/// override (u64 seeds don't survive a JSON f64 round trip above 2^53).
+pub fn spawn_workers(cfg: &ExperimentConfig, opts: &ProcsOptions) -> Result<WorkerPool, String> {
+    let (n, config_path) = prepare_run(cfg, opts)?;
     let mut children = Vec::with_capacity(n);
     let started = Instant::now();
     for s in 0..n {
-        let out = opts.out_dir.join(format!("submodel_{s}.dwsm"));
-        // stale artifacts from a previous run in the same out_dir must not
-        // masquerade as this run's output if the worker dies before
-        // publishing
-        let _ = std::fs::remove_file(&out);
-        let mut cmd = Command::new(&opts.worker_exe);
-        cmd.arg("train-worker")
-            .arg("--config")
-            .arg(&config_path)
-            .arg("--seed")
-            .arg(cfg.seed.to_string())
-            .arg("--shard-dir")
-            .arg(&opts.shard_dir)
-            .arg("--submodel")
-            .arg(s.to_string())
-            .arg("--out")
-            .arg(&out);
-        for (k, v) in &opts.extra_env {
-            cmd.env(k, v);
-        }
-        let child = match cmd.spawn() {
+        let child = match spawn_one_worker(cfg, opts, &config_path, s, &[]) {
             Ok(c) => c,
             Err(e) => {
                 // don't leak the workers already launched: left alone they
@@ -364,16 +792,13 @@ pub fn spawn_workers(
                     let _ = wc.child.kill();
                     let _ = wc.child.wait();
                 }
-                return Err(format!(
-                    "spawn worker {s} ({}): {e}",
-                    opts.worker_exe.display()
-                ));
+                return Err(e);
             }
         };
         children.push(WorkerChild {
             submodel: s,
             child,
-            out,
+            out: opts.out_dir.join(format!("submodel_{s}.dwsm")),
             finished: None,
         });
     }
@@ -443,33 +868,9 @@ impl WorkerPool {
                     };
                     (WorkerFate::Failed(why), None)
                 } else {
-                    match SubModelArtifact::load(&wc.out) {
-                        Ok(a) => {
-                            if a.meta.submodel != wc.submodel
-                                || a.meta.root_seed != root_seed
-                                || a.meta.num_submodels != n
-                            {
-                                (
-                                    WorkerFate::Failed(format!(
-                                        "artifact {} belongs to a different run \
-                                         (submodel {} of {}, root seed {})",
-                                        wc.out.display(),
-                                        a.meta.submodel,
-                                        a.meta.num_submodels,
-                                        a.meta.root_seed
-                                    )),
-                                    None,
-                                )
-                            } else {
-                                (WorkerFate::Completed, Some(a))
-                            }
-                        }
-                        Err(e) => (
-                            WorkerFate::Failed(format!(
-                                "exited ok but artifact unreadable: {e}"
-                            )),
-                            None,
-                        ),
+                    match collect_artifact(&wc.out, wc.submodel, root_seed, n) {
+                        Ok(a) => (WorkerFate::Completed, Some(a)),
+                        Err(why) => (WorkerFate::Failed(why), None),
                     }
                 };
                 WorkerOutcome {
@@ -504,21 +905,18 @@ impl ProcsReport {
     }
 }
 
-/// The full multi-process pipeline: spawn `100/r` workers, wait for
-/// them, merge + eval whatever came back. Errors only when **no** worker
-/// survived — any smaller set of failures degrades gracefully into a
-/// merge over the survivors (the paper's robustness claim, promoted to
-/// sub-model granularity).
-pub fn run_multiprocess(
+/// The shared merge + eval tail over whatever workers survived. Errors
+/// only when **no** worker survived — any smaller set of failures
+/// degrades gracefully into a merge over the survivors (the paper's
+/// robustness claim, promoted to sub-model granularity). The surviving
+/// artifacts' embeddings are moved out for the merge — cloning them
+/// would double coordinator peak memory (sub-models can be GBs) — and
+/// put back afterwards so the outcomes stay whole.
+pub(crate) fn merge_survivor_tail(
     cfg: &ExperimentConfig,
     suite: &[Benchmark],
-    opts: &ProcsOptions,
-) -> Result<ProcsReport, String> {
-    let pool = spawn_workers(cfg, opts)?;
-    let (mut outcomes, train_secs) = pool.wait();
-    // move the embeddings out of the artifacts for the merge — cloning
-    // them would double coordinator peak memory (sub-models can be GBs) —
-    // and put them back afterwards so the report's artifacts stay whole
+    outcomes: &mut [WorkerOutcome],
+) -> Result<leader::MergeEvalOutput, String> {
     let submodels: Vec<Embedding> = outcomes
         .iter_mut()
         .filter_map(|o| o.artifact.as_mut())
@@ -547,6 +945,20 @@ pub fn run_multiprocess(
     for a in outcomes.iter_mut().filter_map(|o| o.artifact.as_mut()) {
         a.embedding = returned.next().expect("one embedding per survivor");
     }
+    Ok(tail)
+}
+
+/// The full multi-process pipeline without supervision: spawn `100/r`
+/// workers, wait for them, merge + eval whatever came back. The
+/// supervised variant is [`super::supervisor::run_supervised`].
+pub fn run_multiprocess(
+    cfg: &ExperimentConfig,
+    suite: &[Benchmark],
+    opts: &ProcsOptions,
+) -> Result<ProcsReport, String> {
+    let pool = spawn_workers(cfg, opts)?;
+    let (mut outcomes, train_secs) = pool.wait();
+    let tail = merge_survivor_tail(cfg, suite, &mut outcomes)?;
     Ok(ProcsReport {
         outcomes,
         train_secs,
@@ -585,4 +997,69 @@ pub fn find_worker_exe() -> Result<PathBuf, String> {
          or set DW2V_WORKER_EXE",
         me.display()
     ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stale_run_files_are_recognized() {
+        for stale in [
+            "submodel_0.dwsm",
+            "submodel_12.ckpt",
+            "submodel_3.tmp",
+            "submodel_3.ckpt.tmp",
+            "beacon_0.json",
+            "beacon_7.json.tmp",
+            "fault_1_crash.fired",
+        ] {
+            assert!(is_stale_run_file(stale), "should be stale: {stale}");
+        }
+        for keep in [
+            "config.json",
+            "vocab.tsv",
+            "shard_0.bin",
+            "merged.bin",
+            "submodel_notes.txt",
+            "beacon_0.log",
+        ] {
+            assert!(!is_stale_run_file(keep), "should be kept: {keep}");
+        }
+    }
+
+    #[test]
+    fn clean_artifact_dir_sweeps_only_run_files() {
+        let dir = std::env::temp_dir().join(format!("dw2v_clean_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in [
+            "submodel_0.dwsm",
+            "submodel_1.ckpt",
+            "beacon_0.json",
+            "fault_0_crash.fired",
+            "config.json",
+            "keepme.txt",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        let removed = clean_artifact_dir(&dir).unwrap();
+        assert_eq!(removed, 4);
+        assert!(dir.join("config.json").exists());
+        assert!(dir.join("keepme.txt").exists());
+        assert!(!dir.join("submodel_0.dwsm").exists());
+        assert!(!dir.join("submodel_1.ckpt").exists());
+        assert!(!dir.join("beacon_0.json").exists());
+        // a missing dir is not an error — there is nothing to clean
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(clean_artifact_dir(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn checkpoint_path_swaps_the_extension() {
+        assert_eq!(
+            checkpoint_path(Path::new("/x/submodel_3.dwsm")),
+            PathBuf::from("/x/submodel_3.ckpt")
+        );
+    }
 }

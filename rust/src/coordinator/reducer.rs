@@ -33,6 +33,17 @@ impl<'b, B: Backend> TrainReducer<'b, B> {
         }
     }
 
+    /// Reinstate the per-epoch loss bookkeeping after the wrapped trainer
+    /// was restored from a checkpoint: the epochs already recorded plus
+    /// the exact counter baseline the next epoch's delta subtracts.
+    /// Without the baseline the first post-resume epoch would recount the
+    /// pre-crash loss and the curve would diverge from an uninterrupted
+    /// run.
+    pub fn resume_loss_baseline(&mut self, epoch_mean_loss: Vec<f64>, prev: Metrics) {
+        self.epoch_mean_loss = epoch_mean_loss;
+        self.prev = prev;
+    }
+
     fn consume(&mut self, sentence_id: u64, sentence: &[u32]) {
         if self.error.is_some() {
             return;

@@ -1,0 +1,776 @@
+//! Worker supervision for multi-process training: heartbeat beacons,
+//! stall/crash detection, policy-driven recovery with capped exponential
+//! backoff, and the deterministic fault-injection harness the chaos e2e
+//! tests drive.
+//!
+//! The paper's zero-synchronization design makes recovery purely
+//! artifact-level: a worker owns one sub-model, its progress beacon and
+//! checkpoint live next to its artifact, and the coordinator never has
+//! parameter state to reconcile. [`run_supervised`] wraps the PR-5
+//! spawn/collect machinery (`super::procs`) in a poll loop that
+//! classifies each worker as **healthy** (beacon bytes changed
+//! recently), **stalled** (no beacon progress within the configured
+//! timeout) or **dead** (process exited without a valid artifact), and
+//! applies the configured [`FailurePolicy`]:
+//!
+//! * `retry` — kill/reap if needed, then respawn after
+//!   `backoff_base · 2^k` (capped) up to `max_retries` times; the
+//!   respawned worker finds its epoch-boundary checkpoint in the
+//!   artifact dir and resumes, bitwise identical on the native backend;
+//! * `degrade` — abandon the worker and merge the survivors (PR 5's
+//!   SIGKILL semantics, now explicit);
+//! * `fail-fast` — kill the remaining pool and error out.
+//!
+//! Fault injection ([`FaultSpec`]) is parsed from `DW2V_FAULT` inside
+//! the worker, so the chaos tests exercise the *real* worker binary
+//! through the *real* supervisor with zero test-only control channels.
+
+use super::leader;
+use super::procs::{self, collect_artifact, ProcsOptions, WorkerFate, WorkerOutcome};
+use crate::gen::benchmarks::Benchmark;
+use crate::info;
+use crate::util::config::ExperimentConfig;
+use crate::util::json::{num, obj, s};
+use std::path::{Path, PathBuf};
+use std::process::Child;
+use std::time::{Duration, Instant};
+
+/// Exit code a `crash@pairs=N` fault terminates the worker with —
+/// distinct from error exits (1) so the chaos tests can tell an injected
+/// crash from a genuine worker failure.
+pub const CRASH_EXIT_CODE: i32 = 102;
+
+/// Beacon file a worker publishes for `submodel` inside the artifact
+/// dir.
+pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
+    out_dir.join(format!("beacon_{submodel}.json"))
+}
+
+/// Atomic heartbeat/progress publisher — the worker half of the
+/// supervision protocol.
+///
+/// Each write lands as a whole file via write-to-temp + rename (the same
+/// idiom as the sub-model artifact), so the coordinator never reads a
+/// torn beacon. The payload is a small JSON object:
+///
+/// ```text
+/// { "submodel": 1, "phase": "start|estimate|train",
+///   "epoch": 0, "sentences": "412", "pairs": "99321",
+///   "seq": "17", "unix_ms": "1754500000000" }
+/// ```
+///
+/// `u64` counters ride as decimal strings (the artifact-meta convention);
+/// `seq` increments per write so consecutive beacons always differ —
+/// the supervisor treats **any byte change** as progress and needs no
+/// clock agreement with the worker.
+pub struct BeaconWriter {
+    path: PathBuf,
+    submodel: usize,
+    interval: Duration,
+    last: Option<Instant>,
+    seq: u64,
+}
+
+impl BeaconWriter {
+    pub fn new(path: PathBuf, submodel: usize, interval_ms: u64) -> Self {
+        Self {
+            path,
+            submodel,
+            interval: Duration::from_millis(interval_ms.max(1)),
+            last: None,
+            seq: 0,
+        }
+    }
+
+    /// Publish if the configured interval elapsed since the last write.
+    /// The common case is one `Instant` comparison — cheap enough for the
+    /// per-sentence hot path.
+    pub fn maybe_write(&mut self, phase: &str, epoch: usize, sentences: u64, pairs: u64) {
+        if self.last.is_some_and(|t| t.elapsed() < self.interval) {
+            return;
+        }
+        self.write_now(phase, epoch, sentences, pairs);
+    }
+
+    /// Unconditional publish (startup, epoch barriers).
+    pub fn write_now(&mut self, phase: &str, epoch: usize, sentences: u64, pairs: u64) {
+        self.seq += 1;
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let body = obj(vec![
+            ("submodel", num(self.submodel as f64)),
+            ("phase", s(phase)),
+            ("epoch", num(epoch as f64)),
+            ("sentences", s(&sentences.to_string())),
+            ("pairs", s(&pairs.to_string())),
+            ("seq", s(&self.seq.to_string())),
+            ("unix_ms", s(&unix_ms.to_string())),
+        ])
+        .to_string();
+        // best-effort: a failed beacon write must never fail training —
+        // the worst case is the supervisor calling a stall and respawning
+        let tmp = self.path.with_extension("json.tmp");
+        if std::fs::write(&tmp, body).is_ok() {
+            let _ = std::fs::rename(&tmp, &self.path);
+        }
+        self.last = Some(Instant::now());
+    }
+}
+
+/// Deterministic fault-injection spec, parsed from `DW2V_FAULT` inside
+/// the worker (children inherit the coordinator's environment, so one
+/// variable reaches the whole fleet; `@submodel=` aims a clause).
+///
+/// Grammar:
+///
+/// ```text
+/// spec    := clause (';' clause)*
+/// clause  := action ('@' key '=' value)*
+/// action  := 'crash' | 'stall' | 'corrupt-artifact' | 'slow'
+/// ```
+///
+/// * `crash@pairs=N[@submodel=S]` — exit with [`CRASH_EXIT_CODE`] once
+///   the trainer has emitted ≥ N pairs. One-shot per artifact dir (a
+///   `fault_<s>_crash.fired` marker records the firing), so a respawned
+///   worker runs clean — the crash→retry→bitwise-equal e2e depends on
+///   that.
+/// * `stall@epoch=K[@submodel=S]` — hang forever just before epoch K
+///   starts (also one-shot, marker `fault_<s>_stall.fired`).
+/// * `corrupt-artifact[@submodel=S]` — truncate the artifact temp file
+///   before the publishing rename; the worker still exits 0, so only
+///   coordinator-side validation can catch it.
+/// * `slow@factor=F[@submodel=S]` — sleep F µs per routed sentence (a
+///   deterministic straggler).
+///
+/// A malformed spec is a worker startup error (non-zero exit), never a
+/// silently ignored fault.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    pub crash_at_pairs: Option<u64>,
+    pub stall_at_epoch: Option<usize>,
+    pub corrupt_artifact: bool,
+    pub slow_factor_us: Option<u64>,
+}
+
+impl FaultSpec {
+    pub fn is_empty(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    /// Parse a spec, keeping only the clauses addressed to `submodel`
+    /// (clauses without `@submodel=` address everyone). Syntax errors are
+    /// reported even for clauses aimed elsewhere — a typo'd spec must
+    /// never pass silently.
+    pub fn parse(spec: &str, submodel: usize) -> Result<FaultSpec, String> {
+        let mut out = FaultSpec::default();
+        for clause in spec.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+            let mut parts = clause.split('@').map(str::trim);
+            let action = parts.next().unwrap_or_default();
+            let mut kv = std::collections::BTreeMap::new();
+            for p in parts {
+                let (k, v) = p.split_once('=').ok_or_else(|| {
+                    format!("fault clause '{clause}': expected key=value, got '{p}'")
+                })?;
+                kv.insert(k.trim().to_string(), v.trim().to_string());
+            }
+            let target: Option<usize> = match kv.remove("submodel") {
+                Some(v) => Some(
+                    v.parse()
+                        .map_err(|_| format!("fault clause '{clause}': bad submodel '{v}'"))?,
+                ),
+                None => None,
+            };
+            let mut take_u64 = |key: &str| -> Result<u64, String> {
+                let v = kv
+                    .remove(key)
+                    .ok_or_else(|| format!("fault clause '{clause}': missing '{key}='"))?;
+                v.parse()
+                    .map_err(|_| format!("fault clause '{clause}': bad {key} '{v}'"))
+            };
+            let applies = match target {
+                Some(t) => t == submodel,
+                None => true,
+            };
+            match action {
+                "crash" => {
+                    let n = take_u64("pairs")?;
+                    if applies {
+                        out.crash_at_pairs = Some(n);
+                    }
+                }
+                "stall" => {
+                    let k = take_u64("epoch")?;
+                    if applies {
+                        out.stall_at_epoch = Some(k as usize);
+                    }
+                }
+                "corrupt-artifact" => {
+                    if applies {
+                        out.corrupt_artifact = true;
+                    }
+                }
+                "slow" => {
+                    let f = take_u64("factor")?;
+                    if applies {
+                        out.slow_factor_us = Some(f);
+                    }
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault action '{other}' in clause '{clause}' \
+                         (expected crash | stall | corrupt-artifact | slow)"
+                    ))
+                }
+            }
+            if !kv.is_empty() {
+                let extra: Vec<String> = kv.into_keys().collect();
+                return Err(format!(
+                    "fault clause '{clause}': unknown keys {extra:?}"
+                ));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Worker-side runtime for a [`FaultSpec`]: fires each fault at its
+/// trigger point. Crash and stall are one-shot per artifact dir via
+/// marker files written *before* firing, so a respawned worker sees the
+/// marker and proceeds normally.
+pub struct ArmedFaults {
+    spec: FaultSpec,
+    dir: PathBuf,
+    submodel: usize,
+    crash_armed: bool,
+}
+
+impl ArmedFaults {
+    pub fn new(spec: FaultSpec, dir: PathBuf, submodel: usize) -> Self {
+        Self {
+            spec,
+            dir,
+            submodel,
+            crash_armed: true,
+        }
+    }
+
+    fn marker(&self, action: &str) -> PathBuf {
+        self.dir.join(format!("fault_{}_{action}.fired", self.submodel))
+    }
+
+    /// Per-routed-sentence hook: apply `slow`, then fire `crash` once the
+    /// cumulative pair counter crosses its threshold. The marker check
+    /// only happens at the first crossing; afterwards the fault disarms
+    /// in-memory, so the hot path stays two integer comparisons.
+    pub fn on_progress(&mut self, pairs: u64) {
+        if let Some(us) = self.spec.slow_factor_us {
+            std::thread::sleep(Duration::from_micros(us));
+        }
+        if let Some(n) = self.spec.crash_at_pairs {
+            if self.crash_armed && pairs >= n {
+                let marker = self.marker("crash");
+                if marker.exists() {
+                    self.crash_armed = false; // fired in a previous incarnation
+                    return;
+                }
+                let _ = std::fs::write(&marker, b"fired\n");
+                info!(
+                    "fault injection: worker {} crashing at {pairs} pairs (>= {n})",
+                    self.submodel
+                );
+                std::process::exit(CRASH_EXIT_CODE);
+            }
+        }
+    }
+
+    /// Pre-epoch hook: `stall@epoch=K` hangs forever before epoch K.
+    pub fn maybe_stall(&mut self, epoch: usize) {
+        if self.spec.stall_at_epoch == Some(epoch) {
+            let marker = self.marker("stall");
+            if marker.exists() {
+                return;
+            }
+            let _ = std::fs::write(&marker, b"fired\n");
+            info!(
+                "fault injection: worker {} stalling before epoch {epoch}",
+                self.submodel
+            );
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+    }
+
+    /// Publish-time hook: should the artifact temp file be truncated?
+    pub fn corrupt_artifact(&self) -> bool {
+        self.spec.corrupt_artifact
+    }
+}
+
+/// What the coordinator does with a worker that died, stalled, or
+/// published a bad artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailurePolicy {
+    /// respawn from the last checkpoint, capped-exponential backoff
+    Retry,
+    /// abandon the worker, merge the survivors (PR 5's SIGKILL semantics)
+    Degrade,
+    /// kill the remaining pool and error out
+    FailFast,
+}
+
+impl FailurePolicy {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        match text {
+            "retry" => Ok(Self::Retry),
+            "degrade" => Ok(Self::Degrade),
+            "fail-fast" => Ok(Self::FailFast),
+            other => Err(format!(
+                "unknown failure policy '{other}' (expected retry | degrade | fail-fast)"
+            )),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Retry => "retry",
+            Self::Degrade => "degrade",
+            Self::FailFast => "fail-fast",
+        }
+    }
+}
+
+/// Supervision knobs, deliberately separate from [`ProcsOptions`] (which
+/// existing callers build as a struct literal).
+pub struct SupervisorOptions {
+    pub policy: FailurePolicy,
+    /// respawns allowed per worker under `retry`
+    pub max_retries: usize,
+    /// a worker whose beacon bytes don't change for this long is stalled
+    pub stall_timeout: Duration,
+    /// supervisor poll cadence
+    pub poll_interval: Duration,
+    /// respawn backoff: `backoff_base · 2^(attempt-1)`, capped below
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// beacon publish interval handed to the workers (milliseconds)
+    pub beacon_interval_ms: u64,
+}
+
+impl Default for SupervisorOptions {
+    fn default() -> Self {
+        Self {
+            policy: FailurePolicy::Retry,
+            max_retries: 2,
+            stall_timeout: Duration::from_secs(300),
+            poll_interval: Duration::from_millis(20),
+            backoff_base: Duration::from_millis(200),
+            backoff_cap: Duration::from_secs(5),
+            beacon_interval_ms: 250,
+        }
+    }
+}
+
+/// Counters the supervisor accumulated over a run.
+#[derive(Clone, Debug, Default)]
+pub struct SupervisorStats {
+    /// workers respawned (each implies a failure that was retried)
+    pub respawns: usize,
+    /// stalls detected via beacon timeout (subset of failures)
+    pub stalls_detected: usize,
+    /// total failures observed (exits, stalls, bad artifacts)
+    pub failures_seen: usize,
+}
+
+/// Result of a supervised multi-process run — [`procs::ProcsReport`]
+/// plus the supervision counters.
+pub struct SupervisedReport {
+    /// per-worker fates, in sub-model order — failures included
+    pub outcomes: Vec<WorkerOutcome>,
+    /// wall-clock from first spawn to last worker resolution
+    pub train_secs: f64,
+    pub stats: SupervisorStats,
+    /// the shared merge + eval tail over the surviving sub-models
+    pub tail: leader::MergeEvalOutput,
+}
+
+impl SupervisedReport {
+    pub fn survivors(&self) -> usize {
+        self.outcomes.iter().filter(|o| o.survived()).count()
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &WorkerOutcome> {
+        self.outcomes.iter().filter(|o| !o.survived())
+    }
+}
+
+enum SlotState {
+    Running(Child),
+    Backoff { until: Instant },
+    Done,
+}
+
+/// One supervised worker seat: the current incarnation (if any), its
+/// liveness bookkeeping, and the final outcome once resolved.
+struct Slot {
+    submodel: usize,
+    out: PathBuf,
+    beacon: PathBuf,
+    state: SlotState,
+    last_beacon: Vec<u8>,
+    last_progress: Instant,
+    retries_used: usize,
+    outcome: Option<WorkerOutcome>,
+}
+
+/// Resolve one failure according to the policy. Returns a fail-fast
+/// reason when the whole run must abort; otherwise the slot is either
+/// parked in backoff (retry) or finalized as failed (degrade /
+/// exhausted retries).
+fn register_failure(
+    slot: &mut Slot,
+    why: String,
+    sup: &SupervisorOptions,
+    stats: &mut SupervisorStats,
+    started: Instant,
+) -> Option<String> {
+    stats.failures_seen += 1;
+    match sup.policy {
+        FailurePolicy::FailFast => Some(format!("worker {}: {why}", slot.submodel)),
+        FailurePolicy::Retry if slot.retries_used < sup.max_retries => {
+            slot.retries_used += 1;
+            let exp = (slot.retries_used - 1).min(16) as u32;
+            let backoff = (sup.backoff_base * 2u32.pow(exp)).min(sup.backoff_cap);
+            info!(
+                "supervisor: worker {} failed ({why}); retry {}/{} in {:.1}s",
+                slot.submodel,
+                slot.retries_used,
+                sup.max_retries,
+                backoff.as_secs_f64()
+            );
+            slot.state = SlotState::Backoff {
+                until: Instant::now() + backoff,
+            };
+            None
+        }
+        _ => {
+            let why = if sup.policy == FailurePolicy::Retry {
+                format!("{why} (after {} retries)", slot.retries_used)
+            } else {
+                why
+            };
+            info!("supervisor: worker {} abandoned — {why}", slot.submodel);
+            slot.outcome = Some(WorkerOutcome {
+                submodel: slot.submodel,
+                secs: started.elapsed().as_secs_f64(),
+                fate: WorkerFate::Failed(why),
+                artifact: None,
+            });
+            slot.state = SlotState::Done;
+            None
+        }
+    }
+}
+
+fn kill_remaining(slots: &mut [Slot]) {
+    for slot in slots.iter_mut() {
+        if let SlotState::Running(child) = &mut slot.state {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// The supervised multi-process pipeline: spawn `100/r` workers, poll
+/// their beacons and exit statuses, recover per the [`FailurePolicy`],
+/// then merge + eval whatever survived. Replaces
+/// [`procs::run_multiprocess`] as the `dw2v pipeline-procs` engine; the
+/// unsupervised path remains for tests and benches.
+pub fn run_supervised(
+    cfg: &ExperimentConfig,
+    suite: &[Benchmark],
+    opts: &ProcsOptions,
+    sup: &SupervisorOptions,
+) -> Result<SupervisedReport, String> {
+    let (n, config_path) = procs::prepare_run(cfg, opts)?;
+    let beacon_env = vec![(
+        "DW2V_BEACON_INTERVAL_MS".to_string(),
+        sup.beacon_interval_ms.to_string(),
+    )];
+    info!(
+        "supervisor: policy {}, stall timeout {:.1}s, max {} retries, beacon every {}ms",
+        sup.policy.name(),
+        sup.stall_timeout.as_secs_f64(),
+        sup.max_retries,
+        sup.beacon_interval_ms
+    );
+    let started = Instant::now();
+    let mut stats = SupervisorStats::default();
+    let mut slots: Vec<Slot> = Vec::with_capacity(n);
+    for submodel in 0..n {
+        let child = match procs::spawn_one_worker(cfg, opts, &config_path, submodel, &beacon_env)
+        {
+            Ok(c) => c,
+            Err(e) => {
+                // don't leak the workers already launched
+                kill_remaining(&mut slots);
+                return Err(e);
+            }
+        };
+        slots.push(Slot {
+            submodel,
+            out: opts.out_dir.join(format!("submodel_{submodel}.dwsm")),
+            beacon: beacon_path(&opts.out_dir, submodel),
+            state: SlotState::Running(child),
+            last_beacon: Vec::new(),
+            last_progress: Instant::now(),
+            retries_used: 0,
+            outcome: None,
+        });
+    }
+
+    loop {
+        let mut fail_fast: Option<String> = None;
+        for slot in slots.iter_mut() {
+            match &mut slot.state {
+                SlotState::Done => {}
+                SlotState::Backoff { until } => {
+                    if Instant::now() >= *until {
+                        match procs::spawn_one_worker(
+                            cfg,
+                            opts,
+                            &config_path,
+                            slot.submodel,
+                            &beacon_env,
+                        ) {
+                            Ok(child) => {
+                                stats.respawns += 1;
+                                info!(
+                                    "supervisor: respawned worker {} (retry {}/{})",
+                                    slot.submodel, slot.retries_used, sup.max_retries
+                                );
+                                slot.last_beacon.clear();
+                                slot.last_progress = Instant::now();
+                                slot.state = SlotState::Running(child);
+                            }
+                            Err(e) => {
+                                fail_fast =
+                                    register_failure(slot, e, sup, &mut stats, started);
+                            }
+                        }
+                    }
+                }
+                SlotState::Running(child) => match child.try_wait() {
+                    Ok(Some(status)) => {
+                        let secs = started.elapsed().as_secs_f64();
+                        info!(
+                            "supervisor: worker {} exited after {secs:.2}s ({})",
+                            slot.submodel,
+                            procs::describe_status(&status)
+                        );
+                        if status.success() {
+                            match collect_artifact(&slot.out, slot.submodel, cfg.seed, n) {
+                                Ok(artifact) => {
+                                    slot.outcome = Some(WorkerOutcome {
+                                        submodel: slot.submodel,
+                                        secs,
+                                        fate: WorkerFate::Completed,
+                                        artifact: Some(artifact),
+                                    });
+                                    slot.state = SlotState::Done;
+                                }
+                                Err(why) => {
+                                    // a rejected artifact must not linger: a
+                                    // retried worker republishes, a degraded
+                                    // one must leave nothing collectible
+                                    let _ = std::fs::remove_file(&slot.out);
+                                    fail_fast =
+                                        register_failure(slot, why, sup, &mut stats, started);
+                                }
+                            }
+                        } else {
+                            let why = procs::describe_status(&status);
+                            fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                        }
+                    }
+                    Ok(None) => {
+                        // liveness: any beacon byte change counts as progress
+                        if let Ok(bytes) = std::fs::read(&slot.beacon) {
+                            if bytes != slot.last_beacon {
+                                slot.last_beacon = bytes;
+                                slot.last_progress = Instant::now();
+                            }
+                        }
+                        if slot.last_progress.elapsed() > sup.stall_timeout {
+                            stats.stalls_detected += 1;
+                            let why = format!(
+                                "stalled: no beacon progress within {:.1}s",
+                                sup.stall_timeout.as_secs_f64()
+                            );
+                            info!(
+                                "supervisor: worker {} {why} — killing it",
+                                slot.submodel
+                            );
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                        }
+                    }
+                    Err(e) => {
+                        let why = format!("wait failed: {e}");
+                        fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                    }
+                },
+            }
+            if fail_fast.is_some() {
+                break;
+            }
+        }
+        if let Some(reason) = fail_fast {
+            kill_remaining(&mut slots);
+            return Err(format!("fail-fast: {reason}"));
+        }
+        if slots.iter().all(|s| s.outcome.is_some()) {
+            break;
+        }
+        std::thread::sleep(sup.poll_interval);
+    }
+
+    let train_secs = started.elapsed().as_secs_f64();
+    let mut outcomes: Vec<WorkerOutcome> = slots
+        .into_iter()
+        .map(|s| s.outcome.expect("every slot resolved"))
+        .collect();
+    if stats.failures_seen > 0 {
+        info!(
+            "supervisor: {} failures, {} stalls, {} respawns over {train_secs:.2}s",
+            stats.failures_seen, stats.stalls_detected, stats.respawns
+        );
+    }
+    let tail = procs::merge_survivor_tail(cfg, suite, &mut outcomes)?;
+    Ok(SupervisedReport {
+        outcomes,
+        train_secs,
+        stats,
+        tail,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fault_spec_parses_every_action() {
+        let f = FaultSpec::parse("crash@pairs=500", 0).unwrap();
+        assert_eq!(f.crash_at_pairs, Some(500));
+        let f = FaultSpec::parse("stall@epoch=2", 3).unwrap();
+        assert_eq!(f.stall_at_epoch, Some(2));
+        let f = FaultSpec::parse("corrupt-artifact", 1).unwrap();
+        assert!(f.corrupt_artifact);
+        let f = FaultSpec::parse("slow@factor=250", 1).unwrap();
+        assert_eq!(f.slow_factor_us, Some(250));
+        assert!(FaultSpec::parse("", 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_spec_targets_one_submodel() {
+        let spec = "crash@pairs=100@submodel=1;slow@factor=50@submodel=2";
+        let w0 = FaultSpec::parse(spec, 0).unwrap();
+        assert!(w0.is_empty());
+        let w1 = FaultSpec::parse(spec, 1).unwrap();
+        assert_eq!(w1.crash_at_pairs, Some(100));
+        assert_eq!(w1.slow_factor_us, None);
+        let w2 = FaultSpec::parse(spec, 2).unwrap();
+        assert_eq!(w2.slow_factor_us, Some(50));
+        assert_eq!(w2.crash_at_pairs, None);
+    }
+
+    #[test]
+    fn fault_spec_rejects_malformed_input() {
+        // errors fire even when the clause targets another sub-model
+        for bad in [
+            "explode@pairs=1",
+            "crash",
+            "crash@pairs=abc",
+            "crash@pairs",
+            "stall@epoch=1@bogus=2",
+            "crash@pairs=1@submodel=x",
+            "slow@factor=1@submodel=9;stall",
+        ] {
+            assert!(FaultSpec::parse(bad, 0).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn failure_policy_round_trips() {
+        for (text, want) in [
+            ("retry", FailurePolicy::Retry),
+            ("degrade", FailurePolicy::Degrade),
+            ("fail-fast", FailurePolicy::FailFast),
+        ] {
+            let p = FailurePolicy::parse(text).unwrap();
+            assert_eq!(p, want);
+            assert_eq!(p.name(), text);
+        }
+        assert!(FailurePolicy::parse("panic").is_err());
+    }
+
+    #[test]
+    fn beacon_writer_publishes_atomically_and_throttles() {
+        let dir = std::env::temp_dir().join(format!("dw2v_beacon_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = beacon_path(&dir, 3);
+        // a long interval: the first write lands, the second is throttled
+        let mut w = BeaconWriter::new(path.clone(), 3, 60_000);
+        w.maybe_write("train", 1, 10, 100);
+        let first = std::fs::read(&path).unwrap();
+        let j = crate::util::json::Json::parse(std::str::from_utf8(&first).unwrap()).unwrap();
+        assert_eq!(j.get("submodel").as_usize(), Some(3));
+        assert_eq!(j.get("phase").as_str(), Some("train"));
+        assert_eq!(j.get("epoch").as_usize(), Some(1));
+        assert_eq!(j.get("pairs").as_str(), Some("100"));
+        assert_eq!(j.get("seq").as_str(), Some("1"));
+        w.maybe_write("train", 1, 20, 200);
+        assert_eq!(std::fs::read(&path).unwrap(), first, "interval must throttle");
+        // force-write always lands and bumps seq, so the bytes change
+        w.write_now("train", 2, 30, 300);
+        let second = std::fs::read(&path).unwrap();
+        assert_ne!(second, first);
+        let j = crate::util::json::Json::parse(std::str::from_utf8(&second).unwrap()).unwrap();
+        assert_eq!(j.get("seq").as_str(), Some("2"));
+        assert!(!path.with_extension("json.tmp").exists(), "tmp must be renamed away");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn armed_faults_one_shot_via_marker() {
+        let dir = std::env::temp_dir().join(format!("dw2v_fault_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // a pre-existing marker disarms the stall (the crash path exits the
+        // process, so only stall is testable in-process)
+        let spec = FaultSpec {
+            stall_at_epoch: Some(1),
+            ..Default::default()
+        };
+        let mut armed = ArmedFaults::new(spec, dir.clone(), 4);
+        std::fs::write(armed.marker("stall"), b"fired\n").unwrap();
+        armed.maybe_stall(1); // would hang forever if the marker were ignored
+        // epochs other than the target never stall regardless of markers
+        let mut fresh = ArmedFaults::new(
+            FaultSpec {
+                stall_at_epoch: Some(7),
+                ..Default::default()
+            },
+            dir.clone(),
+            4,
+        );
+        fresh.maybe_stall(0);
+        fresh.maybe_stall(6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -435,6 +435,259 @@ impl SubModelArtifact {
     }
 }
 
+/// Metadata carried by a [`CheckpointArtifact`]: run identity (so a
+/// respawned worker refuses a checkpoint from a different run), progress
+/// (which epoch boundary this snapshot sits on), and the exact trainer
+/// counters a resume must reinstate.
+///
+/// `u64` counters are decimal strings for the same 2^53 reason as
+/// [`ArtifactMeta`]; the `f64` loss counters are plain JSON numbers —
+/// the writer prints f64s shortest-round-trip, so they come back
+/// bit-exact (the artifact roundtrip test pins this).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointMeta {
+    /// which sub-model (0-based) of the run this is
+    pub submodel: usize,
+    /// total sub-models the run's divider produces (100/r)
+    pub num_submodels: usize,
+    /// the experiment's root seed (config identity)
+    pub root_seed: u64,
+    /// the per-sub-model seed derived from it
+    pub trainer_seed: u64,
+    /// divide strategy name (`equal` | `random` | `shuffle`)
+    pub strategy: String,
+    /// sampling rate r%
+    pub rate_percent: f64,
+    /// total epochs the run will train
+    pub epochs: usize,
+    /// epochs completed at checkpoint time (resume starts at this epoch)
+    pub epochs_done: usize,
+    /// corpus fingerprint: total sentences in the shard dir
+    pub total_sentences: usize,
+    /// actual vocabulary size (= `seen_counts` length)
+    pub vocab: usize,
+    /// pairs handed to the device (drives the lr schedule position)
+    pub dispatched_pairs: u64,
+    /// pairs emitted by the batch builder (dispatched + pending; equal at
+    /// an epoch boundary, where pending is 0)
+    pub pairs_emitted: u64,
+    /// sentences routed to this trainer so far
+    pub sentences_received: u64,
+    /// device dispatches so far
+    pub dispatches: u64,
+    /// exact f64 loss accumulator (the f32 metrics row rounds it)
+    pub loss_sum: f64,
+    /// exact f64 weighted-example accumulator
+    pub examples: f64,
+    /// exact f64 micro-step counter
+    pub micro_steps: f64,
+    /// mean loss per finished epoch
+    pub epoch_loss: Vec<f64>,
+}
+
+impl CheckpointMeta {
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s};
+        obj(vec![
+            ("submodel", num(self.submodel as f64)),
+            ("num_submodels", num(self.num_submodels as f64)),
+            ("root_seed", s(&self.root_seed.to_string())),
+            ("trainer_seed", s(&self.trainer_seed.to_string())),
+            ("strategy", s(&self.strategy)),
+            ("rate_percent", num(self.rate_percent)),
+            ("epochs", num(self.epochs as f64)),
+            ("epochs_done", num(self.epochs_done as f64)),
+            ("total_sentences", num(self.total_sentences as f64)),
+            ("vocab", num(self.vocab as f64)),
+            ("dispatched_pairs", s(&self.dispatched_pairs.to_string())),
+            ("pairs_emitted", s(&self.pairs_emitted.to_string())),
+            ("sentences_received", s(&self.sentences_received.to_string())),
+            ("dispatches", s(&self.dispatches.to_string())),
+            ("loss_sum", num(self.loss_sum)),
+            ("examples", num(self.examples)),
+            ("micro_steps", num(self.micro_steps)),
+            (
+                "epoch_loss",
+                arr(self.epoch_loss.iter().map(|&l| num(l)).collect()),
+            ),
+        ])
+    }
+
+    fn from_json(j: &crate::util::json::Json) -> Result<Self, String> {
+        let usize_field = |k: &str| {
+            j.get(k)
+                .as_usize()
+                .ok_or_else(|| format!("checkpoint meta: missing/invalid '{k}'"))
+        };
+        let u64_field = |k: &str| {
+            j.get(k)
+                .as_str()
+                .and_then(|v| v.parse::<u64>().ok())
+                .ok_or_else(|| format!("checkpoint meta: missing/invalid '{k}'"))
+        };
+        let f64_field = |k: &str| {
+            j.get(k)
+                .as_f64()
+                .ok_or_else(|| format!("checkpoint meta: missing/invalid '{k}'"))
+        };
+        let epoch_loss = j
+            .get("epoch_loss")
+            .as_arr()
+            .ok_or("checkpoint meta: missing 'epoch_loss'")?
+            .iter()
+            .map(|v| v.as_f64().ok_or("checkpoint meta: non-numeric epoch loss"))
+            .collect::<Result<Vec<f64>, _>>()?;
+        Ok(Self {
+            submodel: usize_field("submodel")?,
+            num_submodels: usize_field("num_submodels")?,
+            root_seed: u64_field("root_seed")?,
+            trainer_seed: u64_field("trainer_seed")?,
+            strategy: j
+                .get("strategy")
+                .as_str()
+                .ok_or("checkpoint meta: missing 'strategy'")?
+                .to_string(),
+            rate_percent: f64_field("rate_percent")?,
+            epochs: usize_field("epochs")?,
+            epochs_done: usize_field("epochs_done")?,
+            total_sentences: usize_field("total_sentences")?,
+            vocab: usize_field("vocab")?,
+            dispatched_pairs: u64_field("dispatched_pairs")?,
+            pairs_emitted: u64_field("pairs_emitted")?,
+            sentences_received: u64_field("sentences_received")?,
+            dispatches: u64_field("dispatches")?,
+            loss_sum: f64_field("loss_sum")?,
+            examples: f64_field("examples")?,
+            micro_steps: f64_field("micro_steps")?,
+            epoch_loss,
+        })
+    }
+}
+
+/// An epoch-boundary training checkpoint: everything a respawned worker
+/// needs to resume its sub-model mid-run and (on the native backend)
+/// finish bitwise identical to an uninterrupted run.
+///
+/// ```text
+/// checkpoint := MAGIC u32 | VERSION u32 | meta_len u32 | meta JSON bytes
+///               | seen_counts u64 × meta.vocab
+///               | packed trainer state as an embedding body
+///                 (rows u64 | dim u64 | present | f32 rows)
+/// ```
+///
+/// The packed payload is the trainer's full `[rows, dim]` device state
+/// (W, C, pad and metrics rows), not a merged embedding — `present` is
+/// all-true and carries no meaning here. Like the other containers,
+/// every header claim is validated against the real file length before
+/// any sized allocation; workers write-then-rename, so a torn file only
+/// exists if the filesystem itself tore it — and still only costs a
+/// from-scratch retrain, never a crash.
+#[derive(Clone, Debug)]
+pub struct CheckpointArtifact {
+    pub meta: CheckpointMeta,
+    /// per-word occurrence counters (`meta.vocab` long) feeding the
+    /// min-count presence mask
+    pub seen_counts: Vec<u64>,
+    /// packed trainer state (`rows × dim`, present all-true)
+    pub packed: Embedding,
+}
+
+impl CheckpointArtifact {
+    const MAGIC: u32 = 0x6457_434B; // "dWCK"
+    const VERSION: u32 = 1;
+    /// magic + version + meta_len bytes preceding the metadata.
+    const HEADER_BYTES: u64 = 4 + 4 + 4;
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        use std::io::Write;
+        assert_eq!(
+            self.seen_counts.len(),
+            self.meta.vocab,
+            "seen_counts length must equal meta.vocab"
+        );
+        let meta = self.meta.to_json().to_string();
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(&Self::MAGIC.to_le_bytes())?;
+        w.write_all(&Self::VERSION.to_le_bytes())?;
+        w.write_all(&(meta.len() as u32).to_le_bytes())?;
+        w.write_all(meta.as_bytes())?;
+        for &c in &self.seen_counts {
+            w.write_all(&c.to_le_bytes())?;
+        }
+        self.packed.write_body(&mut w)?;
+        w.flush()
+    }
+
+    pub fn load(path: &std::path::Path) -> std::io::Result<CheckpointArtifact> {
+        use std::io::Read;
+        let invalid =
+            |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let file = std::fs::File::open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len < Self::HEADER_BYTES {
+            return Err(invalid(format!(
+                "checkpoint {} is {file_len} bytes — shorter than the header",
+                path.display()
+            )));
+        }
+        let mut r = std::io::BufReader::new(file);
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        if u32::from_le_bytes(b4) != Self::MAGIC {
+            return Err(invalid(format!(
+                "{} is not a dw2v training checkpoint",
+                path.display()
+            )));
+        }
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        if version != Self::VERSION {
+            return Err(invalid(format!(
+                "unsupported checkpoint version {version} (this build reads {})",
+                Self::VERSION
+            )));
+        }
+        r.read_exact(&mut b4)?;
+        let meta_len = u32::from_le_bytes(b4) as u64;
+        if meta_len > file_len - Self::HEADER_BYTES {
+            return Err(invalid(format!(
+                "checkpoint metadata claims {meta_len} bytes but only {} follow",
+                file_len - Self::HEADER_BYTES
+            )));
+        }
+        let mut meta_bytes = vec![0u8; meta_len as usize];
+        r.read_exact(&mut meta_bytes)?;
+        let meta_text = std::str::from_utf8(&meta_bytes)
+            .map_err(|_| invalid("checkpoint metadata is not UTF-8".to_string()))?;
+        let meta_json = crate::util::json::Json::parse(meta_text)
+            .map_err(|e| invalid(format!("checkpoint metadata: {e}")))?;
+        let meta = CheckpointMeta::from_json(&meta_json).map_err(invalid)?;
+        let after_meta = file_len - Self::HEADER_BYTES - meta_len;
+        let seen_len = (meta.vocab as u64).checked_mul(8).ok_or_else(|| {
+            invalid(format!("checkpoint vocab {} overflows", meta.vocab))
+        })?;
+        if seen_len > after_meta {
+            return Err(invalid(format!(
+                "checkpoint claims {} seen-count words ({seen_len} bytes) but \
+                 only {after_meta} bytes follow the metadata",
+                meta.vocab
+            )));
+        }
+        let mut seen_bytes = vec![0u8; seen_len as usize];
+        r.read_exact(&mut seen_bytes)?;
+        let seen_counts: Vec<u64> = seen_bytes
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        let packed = Embedding::read_body(&mut r, after_meta - seen_len)?;
+        Ok(CheckpointArtifact {
+            meta,
+            seen_counts,
+            packed,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,6 +851,100 @@ mod tests {
         let err = SubModelArtifact::load(&epath).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         std::fs::remove_file(&epath).unwrap();
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    fn sample_ckpt() -> CheckpointArtifact {
+        CheckpointArtifact {
+            meta: CheckpointMeta {
+                submodel: 1,
+                num_submodels: 4,
+                root_seed: u64::MAX - 99,
+                trainer_seed: 0xFEED_FACE_0123_4567,
+                strategy: "shuffle".to_string(),
+                rate_percent: 25.0,
+                epochs: 5,
+                epochs_done: 2,
+                total_sentences: 1600,
+                vocab: 4,
+                dispatched_pairs: (1 << 61) + 3,
+                pairs_emitted: (1 << 61) + 3,
+                sentences_received: 12_345,
+                dispatches: 678,
+                // exactness matters: pick values f32 would round
+                loss_sum: 1234.000000001,
+                examples: 16_777_217.0,
+                micro_steps: 1356.0,
+                epoch_loss: vec![0.693, 0.41],
+            },
+            seen_counts: vec![7, 0, (1 << 55) + 1, 3],
+            packed: sample(),
+        }
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_exact() {
+        let ck = sample_ckpt();
+        let path =
+            std::env::temp_dir().join(format!("dw2v_ckpt_{}.ckpt", std::process::id()));
+        ck.save(&path).unwrap();
+        let back = CheckpointArtifact::load(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(back.meta, ck.meta, "meta incl. full-width u64 counters");
+        assert_eq!(
+            back.meta.loss_sum.to_bits(),
+            ck.meta.loss_sum.to_bits(),
+            "f64 loss accumulator must survive JSON bit-exactly"
+        );
+        assert_eq!(back.meta.examples.to_bits(), ck.meta.examples.to_bits());
+        assert_eq!(back.seen_counts, ck.seen_counts);
+        assert_eq!(back.packed.vocab, ck.packed.vocab);
+        assert_eq!(back.packed.present, ck.packed.present);
+        for (a, b) in ck.packed.data.iter().zip(&back.packed.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.meta.epoch_loss.iter().zip(&back.meta.epoch_loss) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption() {
+        let ck = sample_ckpt();
+        let path =
+            std::env::temp_dir().join(format!("dw2v_ckbad_{}.ckpt", std::process::id()));
+        ck.save(&path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+
+        let expect_invalid = |bytes: &[u8]| {
+            std::fs::write(&path, bytes).unwrap();
+            let err = CheckpointArtifact::load(&path).unwrap_err();
+            assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "{err}");
+        };
+        // truncations: header, metadata, seen counts, packed body
+        expect_invalid(&full[..6]);
+        expect_invalid(&full[..20]);
+        expect_invalid(&full[..full.len() - 9]);
+        expect_invalid(&full[..full.len() - 1]);
+        // trailing junk
+        let mut padded = full.clone();
+        padded.extend_from_slice(&[0xEE; 5]);
+        expect_invalid(&padded);
+        // wrong version
+        let mut vbad = full.clone();
+        vbad[4] = 42;
+        expect_invalid(&vbad);
+        // a sub-model artifact is not a checkpoint (different magic)
+        let art = SubModelArtifact {
+            meta: sample_meta(),
+            embedding: sample(),
+        };
+        let apath = std::env::temp_dir()
+            .join(format!("dw2v_ckcross_{}.dwsm", std::process::id()));
+        art.save(&apath).unwrap();
+        let err = CheckpointArtifact::load(&apath).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_file(&apath).unwrap();
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -86,13 +86,34 @@ impl MapReduce {
         Out: Send,
         R: Reducer<Out>,
     {
+        self.run_range(0..rounds, source, make_mapper, reducers)
+    }
+
+    /// Run an explicit half-open round range. Channels and worker threads
+    /// are constructed fresh per round, so `run_range(k..k+1)` called once
+    /// per epoch is behaviorally identical to one `run(n)` call — the hook
+    /// a checkpoint-resuming worker needs to restart at round `k` while
+    /// `make_mapper`/`end_round` still see the true round number.
+    pub fn run_range<S, M, Out, R>(
+        &self,
+        rounds: std::ops::Range<usize>,
+        source: &S,
+        make_mapper: impl Fn(usize, usize) -> M + Sync,
+        reducers: &mut [R],
+    ) -> RunStats
+    where
+        S: RoundSource,
+        M: Mapper<S::Item, Out>,
+        Out: Send,
+        R: Reducer<Out>,
+    {
         let num_reducers = reducers.len();
         assert!(num_reducers > 0, "need at least one reducer");
         let mut stats = RunStats {
-            rounds,
+            rounds: rounds.len(),
             ..Default::default()
         };
-        for round in 0..rounds {
+        for round in rounds {
             let timer = std::time::Instant::now();
             let mut txs = Vec::with_capacity(num_reducers);
             let mut rxs = Vec::with_capacity(num_reducers);
@@ -271,6 +292,27 @@ mod tests {
             RoundTag
         }, &mut reducers);
         assert_eq!(reducers[0].violations, 0);
+    }
+
+    #[test]
+    fn run_range_split_per_round_matches_one_run() {
+        // one run(3) vs three run_range(k..k+1) calls over the same
+        // reducer: identical item counts, identical round numbers seen
+        let mr = MapReduce::default();
+        let mut whole = vec![Summer::default()];
+        mr.run(3, &Numbers(10), |_, _| ModRouter(1), &mut whole);
+
+        let mut split = vec![Summer::default()];
+        let mut rounds_total = 0;
+        for k in 0..3 {
+            let stats = mr.run_range(k..k + 1, &Numbers(10), |_, _| ModRouter(1), &mut split);
+            assert_eq!(stats.rounds, 1);
+            rounds_total += stats.rounds;
+        }
+        assert_eq!(rounds_total, 3);
+        assert_eq!(split[0].sum, whole[0].sum);
+        assert_eq!(split[0].count, whole[0].count);
+        assert_eq!(split[0].rounds_seen, whole[0].rounds_seen);
     }
 
     #[test]

@@ -76,6 +76,35 @@
 //! bitwise identical to the in-process one on the native backend
 //! (`cargo test --test procs_e2e`).
 //!
+//! ## Supervision, checkpoint/resume & fault injection
+//!
+//! [`coordinator::supervisor`] wraps the multi-process coordinator in a
+//! recovery loop. Every worker atomically publishes a heartbeat beacon
+//! (`beacon_<s>.json`: phase, epoch, sentence/pair counters, a `seq`
+//! that makes consecutive writes differ — write-to-temp + rename like
+//! every artifact) and checkpoints its trainer at each epoch boundary
+//! (`submodel_<s>.ckpt`, an [`embedding::CheckpointArtifact`]: packed
+//! parameter state in the embedding body format + the exact f64 loss
+//! counters the f32 metrics row would round). The supervisor's poll loop
+//! classifies each worker **healthy** (beacon bytes changed recently),
+//! **stalled** (no change within the stall timeout ⇒ killed) or **dead**
+//! (exited without a valid artifact), then applies the configured
+//! [`coordinator::supervisor::FailurePolicy`]: `retry` respawns after a
+//! capped exponential backoff (base 200 ms doubling to a 5 s cap) up to
+//! the retry budget — the respawned worker resumes from its checkpoint
+//! and, because divider routing is stateless and the batch RNG never
+//! advances, finishes **bitwise identical** to an uninterrupted run on
+//! the native backend; `degrade` abandons the worker and merges the
+//! survivors; `fail-fast` kills the pool. Chaos testing is first-class:
+//! `DW2V_FAULT` (parsed by [`coordinator::supervisor::FaultSpec`];
+//! grammar `clause (';' clause)*` with `crash@pairs=N`, `stall@epoch=K`,
+//! `corrupt-artifact`, `slow@factor=F`, each optionally scoped
+//! `@submodel=S`) injects deterministic crashes, hangs, torn artifacts
+//! and stragglers into real worker processes —
+//! `cargo test --test supervisor_e2e` drives crash→resume→bitwise-equal,
+//! stall→timeout→respawn, corrupt-artifact→degrade and fail-fast
+//! end-to-end.
+//!
 //! ## Serving layer
 //!
 //! Trained models are *used* through [`serve`]: an HNSW-style ANN index +

@@ -36,11 +36,41 @@
 //! 3. the coordinator monitors the workers, collects whatever artifacts
 //!    came back, and runs the same merge + eval tail as `pipeline`.
 //!
-//! **Failure semantics:** a crashed or killed worker's sub-model is
-//! simply absent; the merge proceeds over the survivors and the failure
-//! is reported in the worker table. The run only errors when *no* worker
-//! survives. With `--mappers 1` a multi-process run reproduces the
-//! in-process `pipeline` sub-models bitwise (native backend).
+//! **Failure semantics:** the coordinator supervises its workers through
+//! per-worker heartbeat *beacons* (`beacon_<s>.json`, rewritten
+//! atomically every `--beacon-interval-ms`, default 250 ms; any byte
+//! change counts as liveness). A worker is **healthy** while its beacon
+//! keeps changing, **stalled** once it hasn't within
+//! `--worker-stall-timeout` seconds (stalled workers are killed), and
+//! **dead** when its process exits without a valid artifact. What happens
+//! next is `--on-worker-failure`:
+//!
+//! * `retry` (default) — respawn the worker after a capped exponential
+//!   backoff (200 ms · 2^attempt, capped at 5 s), up to
+//!   `--max-worker-retries` times. Workers checkpoint at every epoch
+//!   boundary (`submodel_<s>.ckpt`: packed trainer state + exact f64
+//!   counters, write-then-rename), so a respawn resumes at the last
+//!   finished epoch — and, because routing is stateless and the batch
+//!   RNG never advances, finishes **bitwise identical** to an
+//!   uninterrupted run on the native backend. Retries exhausted ⇒ the
+//!   worker degrades (below).
+//! * `degrade` — abandon the worker; the merge proceeds over the
+//!   survivors and the failure is reported in the worker table. The run
+//!   only errors when *no* worker survives.
+//! * `fail-fast` — kill the remaining pool and exit non-zero.
+//!
+//! With `--mappers 1` a multi-process run reproduces the in-process
+//! `pipeline` sub-models bitwise (native backend).
+//!
+//! **Fault injection (tests / chaos drills):** set `DW2V_FAULT` in the
+//! coordinator's environment; each worker parses it at startup. Grammar:
+//! `spec := clause (';' clause)*`, `clause := action ('@' key '=' value)*`
+//! with actions `crash@pairs=N` (exit once N pairs trained; one-shot per
+//! artifact dir), `stall@epoch=K` (hang before epoch K; one-shot),
+//! `corrupt-artifact` (truncate the artifact, exit 0), and
+//! `slow@factor=F` (sleep F µs per sentence). Add `@submodel=S` to aim a
+//! clause at one worker. Example:
+//! `DW2V_FAULT='crash@pairs=5000@submodel=1;slow@factor=100'`.
 //!
 //! ## Corpus sources (`--text`)
 //!
@@ -121,7 +151,9 @@ subcommands:
   pipeline        divide -> train -> merge -> eval (the paper's system)
   pipeline-procs  the same pipeline with one OS process per sub-model over
                   a persisted shard dir (gen-corpus / --text --shard-dir);
-                  killed workers are reported and merged around
+                  workers are supervised via heartbeat beacons and recovered
+                  per --on-worker-failure retry|degrade|fail-fast (retry
+                  respawns from epoch-boundary checkpoints)
   train-worker    train ONE sub-model from shard files in this process
                   (spawned by pipeline-procs)
   hogwild         single-node lock-free baseline
@@ -329,6 +361,7 @@ fn cmd_train_worker(argv: &[String]) -> Result<(), String> {
 
 fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
     use dw2v::coordinator::procs::{self, ProcsOptions};
+    use dw2v::coordinator::supervisor::{self, FailurePolicy, SupervisorOptions};
 
     let cmd = procs_experiment_command(
         "pipeline-procs",
@@ -337,7 +370,27 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
     .flag("eval", None, "questions-words.txt analogy benchmark file")
     .flag("out-dir", None, "worker artifact directory (default: <shard-dir>/submodels)")
     .flag("worker-exe", None, "dw2v binary to spawn (default: this executable)")
-    .flag("save-model", None, "save the merged consensus embedding here");
+    .flag("save-model", None, "save the merged consensus embedding here")
+    .flag(
+        "on-worker-failure",
+        Some("retry"),
+        "failed/stalled worker policy: retry | degrade | fail-fast",
+    )
+    .flag(
+        "max-worker-retries",
+        Some("2"),
+        "respawns per worker before it degrades (retry policy)",
+    )
+    .flag(
+        "worker-stall-timeout",
+        Some("300"),
+        "seconds without beacon progress before a worker counts as stalled",
+    )
+    .flag(
+        "beacon-interval-ms",
+        Some("250"),
+        "worker heartbeat publish interval (milliseconds)",
+    );
     let args = cmd.parse(argv).map_err(|e| e.to_string())?;
     let cfg = parse_experiment(&args)?;
     let shard_dir = std::path::PathBuf::from(required_flag(&args, "shard-dir", &cmd)?);
@@ -360,13 +413,32 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
         out_dir,
         extra_env: Vec::new(),
     };
+    let mut sup = SupervisorOptions {
+        policy: FailurePolicy::parse(&args.get_str("on-worker-failure", "retry"))?,
+        ..Default::default()
+    };
+    if let Some(r) = args.get_usize("max-worker-retries").map_err(|e| e.to_string())? {
+        sup.max_retries = r;
+    }
+    if let Some(secs) = args.get_f64("worker-stall-timeout").map_err(|e| e.to_string())? {
+        if !secs.is_finite() || secs <= 0.0 {
+            return Err(format!("--worker-stall-timeout must be positive, got {secs}"));
+        }
+        sup.stall_timeout = std::time::Duration::from_secs_f64(secs);
+    }
+    if let Some(ms) = args.get_u64("beacon-interval-ms").map_err(|e| e.to_string())? {
+        sup.beacon_interval_ms = ms;
+    }
 
-    let rep = procs::run_multiprocess(&cfg, &suite, &opts)?;
+    let rep = supervisor::run_supervised(&cfg, &suite, &opts, &sup)?;
 
     println!(
-        "\nworkers ({} spawned, {} survived):",
+        "\nworkers ({} spawned, {} survived; {} failures, {} stalls, {} respawns):",
         rep.outcomes.len(),
-        rep.survivors()
+        rep.survivors(),
+        rep.stats.failures_seen,
+        rep.stats.stalls_detected,
+        rep.stats.respawns
     );
     for o in &rep.outcomes {
         match &o.artifact {

@@ -147,6 +147,16 @@ pub trait Backend: Sync {
     /// Read the running loss counters (cheap; no full download).
     fn metrics(&self, state: &Self::State) -> Result<Metrics, String>;
 
+    /// Overwrite the running loss counters with exact values, e.g. when
+    /// resuming from a checkpoint. The packed f32 state only carries the
+    /// counters rounded to f32 (the metrics row), so backends that keep
+    /// higher-precision accumulators override this to restore them
+    /// losslessly; the default keeps the f32 approximation already loaded
+    /// by [`Backend::state_from_host`].
+    fn restore_metrics(&self, _state: &mut Self::State, _m: Metrics) -> Result<(), String> {
+        Ok(())
+    }
+
     /// Cosine similarity between `W` rows for each (query, candidate) pair.
     fn similarity(&self, state: &Self::State, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String>;
 
@@ -218,6 +228,14 @@ impl Backend for AnyBackend {
         match (self, state) {
             (AnyBackend::Native(b), AnyState::Native(s)) => b.metrics(s),
             (AnyBackend::Xla(b), AnyState::Xla(s)) => b.metrics(s),
+            _ => Err(STATE_MISMATCH.to_string()),
+        }
+    }
+
+    fn restore_metrics(&self, state: &mut AnyState, m: Metrics) -> Result<(), String> {
+        match (self, state) {
+            (AnyBackend::Native(b), AnyState::Native(s)) => b.restore_metrics(s, m),
+            (AnyBackend::Xla(b), AnyState::Xla(s)) => b.restore_metrics(s, m),
             _ => Err(STATE_MISMATCH.to_string()),
         }
     }

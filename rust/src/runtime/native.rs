@@ -163,6 +163,14 @@ impl Backend for NativeBackend {
         })
     }
 
+    fn restore_metrics(&self, state: &mut NativeState, m: Metrics) -> Result<(), String> {
+        // the f32 metrics row only carries a rounded copy; restoring the
+        // f64 shadows exactly is what keeps a checkpoint-resumed run's
+        // loss curve bitwise equal to an uninterrupted one
+        state.counters = [m.loss_sum, m.examples, m.micro_steps];
+        Ok(())
+    }
+
     fn similarity(&self, state: &NativeState, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
         let (v, d) = (self.shape.vocab, self.shape.dim);
         pairs
@@ -342,6 +350,26 @@ mod tests {
             model.download_packed(&be).unwrap()
         };
         assert_eq!(run(), run(), "native training must be bitwise deterministic");
+    }
+
+    #[test]
+    fn restore_metrics_is_exact_beyond_f32() {
+        let be = backend();
+        let mut state = be.state_from_host(&vec![0.0; be.shape().state_len()]).unwrap();
+        let m = Metrics {
+            loss_sum: 1.0 + 1e-12,
+            examples: 16_777_217.0, // 2^24 + 1: not representable in f32
+            micro_steps: 3.0,
+        };
+        be.restore_metrics(&mut state, m).unwrap();
+        let got = be.metrics(&state).unwrap();
+        assert_eq!(got.loss_sum.to_bits(), (1.0f64 + 1e-12).to_bits());
+        assert_eq!(got.examples, 16_777_217.0);
+        // the packed-row round trip is lossy by design — restore_metrics
+        // exists precisely because this path rounds
+        let packed = be.download(&state).unwrap();
+        let rt = be.state_from_host(&packed).unwrap();
+        assert_ne!(be.metrics(&rt).unwrap().examples, 16_777_217.0);
     }
 
     #[test]

@@ -91,6 +91,13 @@ impl<B: Backend> SubModel<B> {
         backend.metrics(&self.state)
     }
 
+    /// Reinstate exact loss counters after [`SubModel::from_host`] — the
+    /// packed metrics row only carries f32-rounded copies of the
+    /// backend's (possibly higher-precision) accumulators.
+    pub fn restore_metrics(&mut self, backend: &B, m: Metrics) -> Result<(), String> {
+        backend.restore_metrics(&mut self.state, m)
+    }
+
     /// Cosine similarity between word pairs, computed by the backend.
     pub fn similarity(&self, backend: &B, pairs: &[(u32, u32)]) -> Result<Vec<f32>, String> {
         backend.similarity(&self.state, pairs)

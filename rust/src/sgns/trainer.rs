@@ -17,6 +17,29 @@ use crate::runtime::params::{Metrics, SubModel};
 use crate::text::vocab::Vocab;
 use crate::util::rng::Pcg64;
 
+/// A resumable snapshot of a [`SubModelTrainer`] taken at an epoch
+/// boundary (partial batch drained). The batch builder's base RNG never
+/// advances — every sentence derives a child stream from the immutable
+/// base — so the snapshot carries **no RNG state**: packed parameters
+/// plus the counters below reconstruct the trainer losslessly, and on
+/// the native backend a restored trainer replays the remaining epochs
+/// bitwise identical to an uninterrupted one.
+#[derive(Clone, Debug)]
+pub struct TrainerSnapshot {
+    /// full packed `[rows, dim]` device state
+    pub packed: Vec<f32>,
+    /// per-word receive counts (presence mask input)
+    pub seen_counts: Vec<u64>,
+    /// lr-schedule position
+    pub dispatched_pairs: u64,
+    /// builder's cumulative pair counter (== dispatched at a boundary)
+    pub pairs_emitted: u64,
+    pub sentences_received: u64,
+    pub dispatches: u64,
+    /// exact f64 loss counters (the packed row rounds them to f32)
+    pub metrics: Metrics,
+}
+
 pub struct SubModelTrainer<'b, B: Backend> {
     backend: &'b B,
     model: SubModel<B>,
@@ -135,6 +158,61 @@ impl<'b, B: Backend> SubModelTrainer<'b, B> {
         self.model.metrics(self.backend)
     }
 
+    /// Capture a [`TrainerSnapshot`]. Only legal at an epoch boundary —
+    /// a partially filled macro-batch cannot be serialized (its pair
+    /// stream is mid-sentence), so callers flush first; the builder is
+    /// always empty right after an epoch's `flush()`.
+    pub fn snapshot(&self) -> Result<TrainerSnapshot, String> {
+        if self.builder.pending() != 0 {
+            return Err(format!(
+                "cannot snapshot mid-batch: {} pairs pending (snapshot only at epoch \
+                 boundaries, after flush)",
+                self.builder.pending()
+            ));
+        }
+        Ok(TrainerSnapshot {
+            packed: self.model.download_packed(self.backend)?,
+            seen_counts: self.seen_counts.clone(),
+            dispatched_pairs: self.dispatched_pairs,
+            pairs_emitted: self.builder.pairs_emitted,
+            sentences_received: self.sentences_received,
+            dispatches: self.model.dispatches,
+            metrics: self.metrics()?,
+        })
+    }
+
+    /// Overwrite this (freshly constructed) trainer with a snapshot's
+    /// state: packed parameters, exact loss counters, and every progress
+    /// counter. The trainer must have been built with the same backend
+    /// shape, vocab, and seed as the one that was snapshotted — the seed
+    /// lives in the builder's derive-only RNG, which restore does not
+    /// (and need not) touch.
+    pub fn restore(&mut self, snap: &TrainerSnapshot) -> Result<(), String> {
+        if snap.packed.len() != self.backend.shape().state_len() {
+            return Err(format!(
+                "snapshot state length {} != backend rows*dim = {}",
+                snap.packed.len(),
+                self.backend.shape().state_len()
+            ));
+        }
+        if snap.seen_counts.len() != self.actual_vocab {
+            return Err(format!(
+                "snapshot seen-count vocab {} != trainer vocab {}",
+                snap.seen_counts.len(),
+                self.actual_vocab
+            ));
+        }
+        let mut model = SubModel::from_host(self.backend, &snap.packed)?;
+        model.restore_metrics(self.backend, snap.metrics)?;
+        model.dispatches = snap.dispatches;
+        self.model = model;
+        self.seen_counts = snap.seen_counts.clone();
+        self.dispatched_pairs = snap.dispatched_pairs;
+        self.builder.pairs_emitted = snap.pairs_emitted;
+        self.sentences_received = snap.sentences_received;
+        Ok(())
+    }
+
     /// Words this trainer would mark present at threshold `min_count`.
     pub fn present_mask(&self, min_count: u64) -> Vec<bool> {
         self.seen_counts
@@ -184,6 +262,84 @@ mod tests {
         let emb = trainer.into_embedding(3).unwrap();
         assert_eq!(emb.present_count(), 6);
         assert_eq!(emb.vocab, 60);
+    }
+
+    #[test]
+    fn snapshot_restore_resumes_bitwise() {
+        let be = NativeBackend::new(ModelShape::native(64, 8, 4, 2, 2));
+        let vocab = vocab(64);
+        let cfg = SgnsConfig {
+            dim: 8,
+            negatives: 2,
+            window: 3,
+            subsample_t: 0.0,
+            ..Default::default()
+        };
+        let sentences: Vec<Vec<u32>> = (0..60u64)
+            .map(|sid| (0..9u32).map(|i| (sid as u32 * 13 + i * 5) % 64).collect())
+            .collect();
+        let sid = |epoch: u64, idx: usize| (epoch << 40) | idx as u64;
+
+        // uninterrupted reference: two epochs straight through
+        let mut whole = SubModelTrainer::new(&be, &vocab, &cfg, 10_000, 21).unwrap();
+        for epoch in 0..2u64 {
+            for (idx, s) in sentences.iter().enumerate() {
+                whole.push_sentence(sid(epoch, idx), s).unwrap();
+            }
+            whole.flush().unwrap();
+        }
+
+        // interrupted: epoch 0, snapshot, fresh trainer, restore, epoch 1
+        let mut first = SubModelTrainer::new(&be, &vocab, &cfg, 10_000, 21).unwrap();
+        for (idx, s) in sentences.iter().enumerate() {
+            first.push_sentence(sid(0, idx), s).unwrap();
+        }
+        first.flush().unwrap();
+        let snap = first.snapshot().unwrap();
+        drop(first);
+        let mut resumed = SubModelTrainer::new(&be, &vocab, &cfg, 10_000, 21).unwrap();
+        resumed.restore(&snap).unwrap();
+        for (idx, s) in sentences.iter().enumerate() {
+            resumed.push_sentence(sid(1, idx), s).unwrap();
+        }
+        resumed.flush().unwrap();
+
+        let a = whole.snapshot().unwrap();
+        let b = resumed.snapshot().unwrap();
+        assert_eq!(a.dispatched_pairs, b.dispatched_pairs);
+        assert_eq!(a.pairs_emitted, b.pairs_emitted);
+        assert_eq!(a.dispatches, b.dispatches);
+        assert_eq!(a.sentences_received, b.sentences_received);
+        assert_eq!(a.seen_counts, b.seen_counts);
+        assert_eq!(a.metrics.loss_sum.to_bits(), b.metrics.loss_sum.to_bits());
+        assert_eq!(a.metrics.examples.to_bits(), b.metrics.examples.to_bits());
+        for (i, (x, y)) in a.packed.iter().zip(&b.packed).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "packed state diverges at {i}");
+        }
+    }
+
+    #[test]
+    fn snapshot_mid_batch_is_refused() {
+        let be = NativeBackend::new(ModelShape::native(64, 8, 8, 2, 2));
+        let vocab = vocab(64);
+        let cfg = SgnsConfig {
+            dim: 8,
+            negatives: 2,
+            window: 3,
+            subsample_t: 0.0,
+            ..Default::default()
+        };
+        let mut t = SubModelTrainer::new(&be, &vocab, &cfg, 10_000, 9).unwrap();
+        let mut idx = 0u64;
+        while t.builder.pending() == 0 {
+            t.push_sentence(idx, &[1, 2, 3, 4, 5, 6, 7]).unwrap();
+            idx += 1;
+            assert!(idx < 1000, "builder never accumulated a partial batch");
+        }
+        let err = t.snapshot().unwrap_err();
+        assert!(err.contains("pending"), "{err}");
+        t.flush().unwrap();
+        assert!(t.snapshot().is_ok(), "boundary snapshot must succeed");
     }
 
     #[test]

@@ -1,0 +1,482 @@
+//! Chaos end-to-end tests for the supervised multi-process path: real
+//! `dw2v train-worker` OS processes (via `CARGO_BIN_EXE_dw2v`) with
+//! deterministic faults injected through `DW2V_FAULT`, recovered by
+//! `coordinator::supervisor::run_supervised`.
+//!
+//! The headline properties:
+//!
+//! * **crash → retry → bitwise equal** — a worker crashed mid-epoch-1 is
+//!   respawned, resumes from its epoch-boundary checkpoint, and the
+//!   finished run (weights *and* loss curves) is bitwise identical to an
+//!   uninterrupted in-process run on the native backend;
+//! * **stall → timeout → respawn** — a hung worker is detected via its
+//!   frozen beacon within the configured timeout, killed and respawned;
+//! * **corrupt artifact → rejected → degrade** — a worker that exits 0
+//!   with a torn artifact is caught by coordinator-side validation, the
+//!   error names the sub-model, and the merge proceeds over the
+//!   survivors within tolerance of the full run (PR 5's SIGKILL
+//!   semantics);
+//! * **fail-fast** — the first failure kills the remaining pool.
+//!
+//! Plus the pure properties underneath: stateless Divider routing makes
+//! a resumed worker consume exactly the sentences an uninterrupted one
+//! would, stale artifacts are swept before a run spawns anything, and
+//! artifact corruption is always attributed to its worker.
+
+use dw2v::coordinator::leader;
+use dw2v::coordinator::mapper::pack_sid;
+use dw2v::coordinator::procs::{self, checkpoint_path, ProcsOptions, WorkerFate};
+use dw2v::coordinator::supervisor::{run_supervised, FailurePolicy, SupervisorOptions};
+use dw2v::embedding::{ArtifactMeta, Embedding, SubModelArtifact};
+use dw2v::eval::report::mean_score;
+use dw2v::runtime::backend::ModelShape;
+use dw2v::runtime::native::NativeBackend;
+use dw2v::text::corpus::Corpus;
+use dw2v::text::vocab::Vocab;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::rng::Pcg64;
+use dw2v::world::build_world;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dw2v"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dw2v_sup_e2e_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Same small-but-real experiment as `procs_e2e`; `mappers = 1` for the
+/// deterministic delivery order the bitwise assertions need.
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 1200;
+    cfg.vocab = 250;
+    cfg.clusters = 8;
+    cfg.truth_dim = 8;
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 50.0; // 2 sub-models
+    cfg.mappers = 1;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 8.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+fn persist_world(
+    dir: &std::path::Path,
+    cfg: &ExperimentConfig,
+    shards: usize,
+) -> dw2v::world::World {
+    let world = build_world(cfg);
+    world.corpus.write_sharded(dir, shards).unwrap();
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+    world
+}
+
+/// Supervisor tuned for tests: tight polling, fast backoff, fast beacons.
+fn test_sup(policy: FailurePolicy, stall_timeout: Duration) -> SupervisorOptions {
+    SupervisorOptions {
+        policy,
+        max_retries: 2,
+        stall_timeout,
+        poll_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(50),
+        backoff_cap: Duration::from_millis(200),
+        beacon_interval_ms: 50,
+    }
+}
+
+fn inprocess_reference(
+    cfg: &ExperimentConfig,
+    dir: &std::path::Path,
+) -> (leader::TrainOutput, Vocab) {
+    let corpus = Corpus::read_sharded(dir).unwrap();
+    let vocab = Vocab::from_tsv(&std::fs::read_to_string(dir.join("vocab.tsv")).unwrap()).unwrap();
+    let backend = NativeBackend::new(ModelShape::for_experiment(cfg, vocab.len()));
+    let out = leader::train_submodels(cfg, &corpus, &vocab, &backend).unwrap();
+    (out, vocab)
+}
+
+#[test]
+fn crashed_worker_resumes_from_checkpoint_bitwise() {
+    let cfg = small_cfg();
+    let dir = tdir("crash");
+    let world = persist_world(&dir, &cfg, 3);
+
+    // in-process reference over the exact bytes the workers will stream;
+    // its per-sub-model pair counts place the crash threshold inside
+    // epoch 1 — after the epoch-0 checkpoint exists, before the artifact
+    let (inproc, _vocab) = inprocess_reference(&cfg, &dir);
+    assert_eq!(inproc.pairs_per_submodel.len(), 2);
+    let victim = 1usize;
+    let threshold = (inproc.pairs_per_submodel[victim] * 3 / 4).max(1);
+
+    let out_dir = dir.join("submodels");
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            format!("crash@pairs={threshold}@submodel={victim}"),
+        )],
+    };
+    let sup = test_sup(FailurePolicy::Retry, Duration::from_secs(60));
+    let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
+
+    assert_eq!(rep.outcomes.len(), 2);
+    assert_eq!(rep.survivors(), 2, "retry must recover the crashed worker");
+    assert!(rep.stats.failures_seen >= 1, "the crash must be observed");
+    assert!(rep.stats.respawns >= 1, "the crashed worker must be respawned");
+    assert!(
+        out_dir.join(format!("fault_{victim}_crash.fired")).exists(),
+        "the injected crash must actually have fired"
+    );
+    for o in &rep.outcomes {
+        assert_eq!(o.fate, WorkerFate::Completed, "worker {}", o.submodel);
+    }
+    // the published artifact supersedes the checkpoint
+    assert!(
+        !checkpoint_path(&out_dir.join(format!("submodel_{victim}.dwsm"))).exists(),
+        "checkpoint must be removed after publication"
+    );
+
+    // crash → respawn → resume must be invisible in the result: weights
+    // AND loss curves bitwise identical to the uninterrupted reference
+    for o in &rep.outcomes {
+        let artifact = o.artifact.as_ref().expect("survivor has artifact");
+        let s = o.submodel;
+        let reference = &inproc.submodels[s];
+        assert_eq!(artifact.embedding.present, reference.present);
+        assert_eq!(artifact.embedding.data.len(), reference.data.len());
+        for (i, (a, b)) in artifact.embedding.data.iter().zip(&reference.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "sub-model {s}: weight {i} diverges after crash+resume"
+            );
+        }
+        assert_eq!(artifact.meta.pairs, inproc.pairs_per_submodel[s]);
+        let loss: Vec<u64> = artifact.meta.epoch_loss.iter().map(|l| l.to_bits()).collect();
+        let want: Vec<u64> = inproc.epoch_loss[s].iter().map(|l| l.to_bits()).collect();
+        assert_eq!(
+            loss, want,
+            "sub-model {s}: loss curve diverges after crash+resume \
+             (exact-counter restore broken?)"
+        );
+    }
+    assert!(rep.tail.scores.iter().all(|s| s.score.is_finite()));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stalled_worker_is_killed_and_respawned() {
+    let cfg = small_cfg();
+    let dir = tdir("stall");
+    let world = persist_world(&dir, &cfg, 3);
+    let victim = 1usize;
+
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: dir.join("submodels"),
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            format!("stall@epoch=1@submodel={victim}"),
+        )],
+    };
+    // the victim hangs forever before epoch 1; a 1.5 s beacon timeout
+    // must catch it — an undetected stall would hang this test, not fail it
+    let sup = test_sup(FailurePolicy::Retry, Duration::from_millis(1500));
+    let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
+
+    assert_eq!(rep.survivors(), 2, "respawn must recover the stalled worker");
+    assert!(
+        rep.stats.stalls_detected >= 1,
+        "the frozen beacon must be classified as a stall"
+    );
+    assert!(rep.stats.respawns >= 1);
+    for o in &rep.outcomes {
+        assert_eq!(o.fate, WorkerFate::Completed, "worker {}", o.submodel);
+    }
+    // detection cost is bounded by the timeout, not by the hang: the whole
+    // run (train both workers + detect + respawn + resume) stays far under
+    // the forever-hang it replaced
+    assert!(
+        rep.train_secs < 60.0,
+        "stall detection took implausibly long: {:.1}s",
+        rep.train_secs
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_artifact_is_attributed_and_degraded_around() {
+    let mut cfg = small_cfg();
+    cfg.sentences = 1600;
+    cfg.rate_percent = 25.0; // 4 sub-models
+    let dir = tdir("corrupt");
+    let world = persist_world(&dir, &cfg, 4);
+    let victim = 1usize;
+
+    // reference: the full 4-model run (same comparison as PR 5's SIGKILL
+    // test — degrade must merge the survivors the same way)
+    let (full, _vocab) = inprocess_reference(&cfg, &dir);
+    let full_tail = leader::merge_and_eval(&cfg, &full.submodels, &world.suite);
+    let full_mean = mean_score(&full_tail.scores);
+
+    let out_dir = dir.join("submodels");
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            format!("corrupt-artifact@submodel={victim}"),
+        )],
+    };
+    let sup = test_sup(FailurePolicy::Degrade, Duration::from_secs(60));
+    let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
+
+    assert_eq!(rep.outcomes.len(), 4);
+    assert_eq!(rep.survivors(), 3, "exactly the corrupted worker is lost");
+    assert_eq!(rep.stats.respawns, 0, "degrade never respawns");
+    let dead = &rep.outcomes[victim];
+    match &dead.fate {
+        WorkerFate::Failed(why) => {
+            assert!(
+                why.contains(&format!("sub-model {victim}")),
+                "failure must name its worker: {why}"
+            );
+            assert!(why.contains("rejected"), "{why}");
+        }
+        other => panic!("victim should have failed, got {other:?}"),
+    }
+    assert!(
+        !out_dir.join(format!("submodel_{victim}.dwsm")).exists(),
+        "a rejected artifact must not linger on disk"
+    );
+
+    // the survivor merge stays within tolerance of the full 4-model run
+    assert!(rep.tail.merged.embedding.present_count() > 0);
+    assert!(rep.tail.scores.iter().all(|s| s.score.is_finite()));
+    let mean3 = mean_score(&rep.tail.scores);
+    assert!(
+        (mean3 - full_mean).abs() < 0.2,
+        "3-survivor eval {mean3:.3} strayed too far from the 4-model run {full_mean:.3}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fail_fast_kills_the_remaining_pool() {
+    let cfg = small_cfg();
+    let dir = tdir("failfast");
+    let world = persist_world(&dir, &cfg, 3);
+
+    // worker 0 crashes almost immediately; worker 1 is slowed hard enough
+    // (2 ms per sentence) to still be mid-run when the crash lands
+    let out_dir = dir.join("submodels");
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            "crash@pairs=1@submodel=0;slow@factor=2000@submodel=1".to_string(),
+        )],
+    };
+    let sup = test_sup(FailurePolicy::FailFast, Duration::from_secs(60));
+    let err = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap_err();
+    assert!(err.contains("fail-fast"), "{err}");
+    assert!(err.contains("worker 0"), "{err}");
+    assert!(err.contains("exit code 102"), "injected crash exit code: {err}");
+    assert!(
+        !out_dir.join("submodel_0.dwsm").exists(),
+        "the crashed worker published nothing"
+    );
+    assert!(
+        !out_dir.join("submodel_1.dwsm").exists(),
+        "fail-fast must kill the surviving worker before it publishes"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: stateless-routing property. A worker resumed at any
+/// `(epoch, sentence-index)` boundary consumes exactly the routed-sid
+/// suffix an uninterrupted worker would — the property checkpoint/resume
+/// rests on (the Divider carries no mutable state, so replaying from a
+/// boundary re-derives identical routing decisions).
+#[test]
+fn resumed_routing_is_a_suffix_of_uninterrupted_routing() {
+    let mut rng = Pcg64::new(0xC0FFEE);
+    let route = |divider: &dw2v::coordinator::divider::Divider,
+                 submodel: usize,
+                 corpus_len: usize,
+                 from_epoch: usize,
+                 from_idx: usize,
+                 epochs: usize|
+     -> Vec<u64> {
+        let mut out = Vec::new();
+        let mut buf = Vec::new();
+        for epoch in from_epoch..epochs {
+            let start = if epoch == from_epoch { from_idx } else { 0 };
+            for idx in start..corpus_len {
+                divider.targets(epoch, idx, &mut buf);
+                if buf.contains(&submodel) {
+                    out.push(pack_sid(epoch, idx));
+                }
+            }
+        }
+        out
+    };
+    for trial in 0..25u64 {
+        let corpus_len = 40 + (rng.next_u64() % 300) as usize;
+        let epochs = 2 + (rng.next_u64() % 4) as usize;
+        let resume_epoch = 1 + (rng.next_u64() % (epochs as u64 - 1)) as usize;
+        let resume_idx = (rng.next_u64() % corpus_len as u64) as usize;
+        let mut cfg = ExperimentConfig::default();
+        cfg.seed = rng.next_u64();
+        cfg.rate_percent = if rng.next_u64() % 2 == 0 { 25.0 } else { 50.0 };
+        cfg.strategy = match rng.next_u64() % 3 {
+            0 => DivideStrategy::EqualPartitioning,
+            1 => DivideStrategy::RandomSampling,
+            _ => DivideStrategy::Shuffle,
+        };
+        let divider = leader::run_divider(&cfg, corpus_len).unwrap();
+        let boundary = pack_sid(resume_epoch, resume_idx);
+        for submodel in 0..divider.num_submodels.min(3) {
+            let whole = route(&divider, submodel, corpus_len, 0, 0, epochs);
+            let resumed = route(&divider, submodel, corpus_len, resume_epoch, resume_idx, epochs);
+            let suffix: Vec<u64> = whole.iter().copied().filter(|&sid| sid >= boundary).collect();
+            assert_eq!(
+                resumed, suffix,
+                "trial {trial}: resume at (epoch {resume_epoch}, idx {resume_idx}) diverges \
+                 for sub-model {submodel} ({} len {corpus_len}, rate {}%)",
+                cfg.strategy.name(),
+                cfg.rate_percent
+            );
+        }
+    }
+}
+
+/// Satellite: stale artifacts/checkpoints from a previous run are swept
+/// before anything spawns, so a worker dying pre-publication can never
+/// let an old file masquerade as this run's output.
+#[test]
+fn prepare_run_sweeps_stale_artifacts_and_checkpoints() {
+    let cfg = small_cfg();
+    let dir = tdir("stale");
+    persist_world(&dir, &cfg, 2);
+    let out_dir = dir.join("submodels");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    // plant leftovers of an "earlier run" — including an index this run
+    // would never spawn, which unswept would silently ride into a merge
+    for stale in [
+        "submodel_0.dwsm",
+        "submodel_9.dwsm",
+        "submodel_1.ckpt",
+        "submodel_0.tmp",
+        "beacon_0.json",
+        "fault_1_crash.fired",
+    ] {
+        std::fs::write(out_dir.join(stale), b"stale junk").unwrap();
+    }
+    std::fs::write(out_dir.join("notes.txt"), b"keep").unwrap();
+
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: Vec::new(),
+    };
+    let (n, config_path) = procs::prepare_run(&cfg, &opts).unwrap();
+    assert_eq!(n, 2);
+    assert!(config_path.is_file());
+    for swept in [
+        "submodel_0.dwsm",
+        "submodel_9.dwsm",
+        "submodel_1.ckpt",
+        "submodel_0.tmp",
+        "beacon_0.json",
+        "fault_1_crash.fired",
+    ] {
+        assert!(!out_dir.join(swept).exists(), "{swept} must be swept");
+    }
+    assert!(out_dir.join("notes.txt").exists(), "unrelated files survive");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: artifact collection attributes every rejection to its
+/// sub-model — truncated body, truncated/corrupt meta, or a run-identity
+/// mismatch — instead of surfacing a bare parse error (or panicking).
+#[test]
+fn artifact_rejection_names_the_failing_submodel() {
+    let dir = tdir("attr");
+    let emb = Embedding::from_rows(6, 4, vec![0.25f32; 24]);
+    let artifact = SubModelArtifact {
+        meta: ArtifactMeta {
+            submodel: 3,
+            num_submodels: 4,
+            root_seed: 77,
+            trainer_seed: 1234,
+            strategy: "shuffle".to_string(),
+            rate_percent: 25.0,
+            epochs: 2,
+            pairs: 999,
+            epoch_loss: vec![0.5, 0.25],
+        },
+        embedding: emb,
+    };
+    let good = dir.join("submodel_3.dwsm");
+    artifact.save(&good).unwrap();
+    let bytes = std::fs::read(&good).unwrap();
+
+    // the pristine artifact collects fine
+    let ok = procs::collect_artifact(&good, 3, 77, 4).unwrap();
+    assert_eq!(ok.meta.pairs, 999);
+
+    // truncated body: the f32 payload is cut short
+    let t_body = dir.join("t_body.dwsm");
+    std::fs::write(&t_body, &bytes[..bytes.len() - 9]).unwrap();
+    let err = procs::collect_artifact(&t_body, 3, 77, 4).unwrap_err();
+    assert!(err.contains("sub-model 3"), "{err}");
+    assert!(err.contains("rejected"), "{err}");
+
+    // truncated meta: the file ends inside the JSON header
+    let t_meta = dir.join("t_meta.dwsm");
+    std::fs::write(&t_meta, &bytes[..15]).unwrap();
+    let err = procs::collect_artifact(&t_meta, 3, 77, 4).unwrap_err();
+    assert!(err.contains("sub-model 3"), "{err}");
+
+    // syntactically corrupt meta: stomp a byte inside the JSON region —
+    // must come back as an attributed error, never a parse panic
+    let c_meta = dir.join("c_meta.dwsm");
+    let mut stomped = bytes.clone();
+    stomped[14] = 0xFF;
+    std::fs::write(&c_meta, &stomped).unwrap();
+    let err = procs::collect_artifact(&c_meta, 3, 77, 4).unwrap_err();
+    assert!(err.contains("sub-model 3"), "{err}");
+
+    // meta/config mismatch: a healthy artifact from a *different* run
+    let err = procs::collect_artifact(&good, 3, 78, 4).unwrap_err();
+    assert!(err.contains("sub-model 3"), "{err}");
+    assert!(err.contains("different run"), "{err}");
+    let err = procs::collect_artifact(&good, 2, 77, 4).unwrap_err();
+    assert!(err.contains("sub-model 2"), "{err}");
+
+    // a missing file is attributed too
+    let err = procs::collect_artifact(&dir.join("absent.dwsm"), 1, 77, 4).unwrap_err();
+    assert!(err.contains("sub-model 1"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
