@@ -9,8 +9,8 @@
 //!
 //! Run with: cargo bench --bench ingest_throughput
 
-use dw2v::bench_util::{bench_scale, Table};
-use dw2v::text::ingest::{ingest_file, IngestConfig};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
+use dw2v::text::ingest::{ingest_file, ingest_file_overlapped, IngestConfig, OverlapOptions};
 use dw2v::util::json::{num, obj, s};
 use dw2v::util::rng::Pcg64;
 use std::io::Write;
@@ -59,6 +59,7 @@ fn main() {
         &["pass1 MB/s", "pass2 MB/s", "tokens/s", "oov %", "vocab", "shards"],
     );
 
+    let mut seq4 = None; // 4-worker sequential stats, kept for the overlap comparison
     for workers in [1usize, 2, 4] {
         let cfg = IngestConfig {
             min_count: 2,
@@ -70,6 +71,9 @@ fn main() {
         let out_dir = dir.join(format!("shards_w{workers}"));
         let result = ingest_file(&input, &out_dir, &cfg).expect("ingest");
         let st = &result.stats;
+        if workers == 4 {
+            seq4 = Some(st.clone());
+        }
         let p1 = st.bytes as f64 / st.pass1_secs.max(1e-9) / 1e6;
         let p2 = st.bytes as f64 / st.pass2_secs.max(1e-9) / 1e6;
         let tok_s = st.raw_tokens as f64 / (st.pass1_secs + st.pass2_secs).max(1e-9);
@@ -97,6 +101,46 @@ fn main() {
         );
     }
 
+    // Overlap-mode ingest on the same corpus (4 workers): the extra
+    // schedule pass + incremental manifest publication is the price of
+    // letting the fleet train while the shards are still being written.
+    let cfg = IngestConfig {
+        min_count: 2,
+        max_vocab: 1_000_000,
+        workers: 4,
+        chunk_bytes: 4 << 20,
+        shard_tokens: 500_000,
+    };
+    let ocfg = OverlapOptions::new(5, 1e-3);
+    let out_dir = dir.join("shards_overlap");
+    let overlapped = ingest_file_overlapped(&input, &out_dir, &cfg, &ocfg).expect("overlap ingest");
+    let ost = &overlapped.stats;
+    let seq = seq4.expect("4-worker sequential run");
+    let seq_secs = seq.pass1_secs + seq.pass2_secs;
+    let ov_secs = ost.pass1_secs + ost.schedule_secs + ost.pass2_secs;
+    let seq_mbps = seq.bytes as f64 / seq_secs.max(1e-9) / 1e6;
+    let ov_mbps = ost.bytes as f64 / ov_secs.max(1e-9) / 1e6;
+    println!(
+        "\noverlap mode (4 workers): {ov_mbps:.1} MB/s end-to-end vs {seq_mbps:.1} sequential \
+         ({:.1}% overhead, schedule pass {:.2}s)",
+        100.0 * (ov_secs / seq_secs.max(1e-9) - 1.0),
+        ost.schedule_secs
+    );
+
     table.finish();
+    append_bench_trajectory(
+        "ingest_throughput",
+        obj(vec![
+            ("bytes", num(seq.bytes as f64)),
+            ("workers", num(4.0)),
+            ("sequential_mb_per_s", num(seq_mbps)),
+            ("overlap_mb_per_s", num(ov_mbps)),
+            ("schedule_secs", num(ost.schedule_secs)),
+            (
+                "overlap_overhead_pct",
+                num(100.0 * (ov_secs / seq_secs.max(1e-9) - 1.0)),
+            ),
+        ]),
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

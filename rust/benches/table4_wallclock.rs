@@ -8,7 +8,7 @@
 //! Hogwild slowest of the single-pass systems.
 
 use dw2v::baselines::param_avg;
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::leader;
 use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
@@ -33,6 +33,13 @@ fn main() {
         "Table 4 — wall-clock per sampling rate (seconds)",
         &["phase", "train/model", "pca-merge", "alir-merge", "submodels"],
     );
+
+    // headline numbers for the cross-PR trajectory file (rate 25% is in
+    // every scale's rate set, so the series stays comparable)
+    let mut traj: Vec<(&str, dw2v::util::json::Json)> = vec![
+        ("sentences", num(cfg.sentences as f64)),
+        ("backend", s(backend.name())),
+    ];
 
     let rates: &[f64] = if bench_scale() >= 1.0 {
         &[5.0, 6.67, 10.0, 20.0, 25.0, 33.0, 50.0]
@@ -67,6 +74,13 @@ fn main() {
                 ("pairs", num(out.pairs as f64)),
             ]),
         );
+        if rate == 25.0 {
+            traj.push(("inproc_train_secs", num(out.train_secs)));
+            traj.push((
+                "inproc_pairs_per_s",
+                num(out.pairs as f64 / out.train_secs.max(1e-9)),
+            ));
+        }
     }
 
     // baselines on the same corpus
@@ -147,6 +161,7 @@ fn main() {
                         ("survivors", num(rep.survivors() as f64)),
                     ]),
                 );
+                traj.push(("procs_train_secs", num(rep.train_secs)));
             }
             Err(e) => println!("multi-process row skipped: {e}"),
         }
@@ -181,6 +196,7 @@ fn main() {
                         ("respawns", num(rep.stats.respawns as f64)),
                     ]),
                 );
+                traj.push(("supervised_train_secs", num(rep.train_secs)));
             }
             Err(e) => println!("supervised row skipped: {e}"),
         }
@@ -188,6 +204,7 @@ fn main() {
     }
 
     table.finish();
+    append_bench_trajectory("table4_wallclock", obj(traj));
     println!("\nexpected shape: per-model train time ~linear in rate (this is the");
     println!("paper's 'Avg. Training Time' — one dedicated node per reducer); the");
     println!("phase column is work-conserving on this single-core testbed. merge ≪");

@@ -1,11 +1,16 @@
 //! Hand-rolled bench harness (criterion is unavailable offline).
 //!
-//! Two modes cover the repo's needs:
+//! Three modes cover the repo's needs:
 //! * [`time_it`] — statistical micro/meso timing (warmup + N iterations,
 //!   min/mean/p50/p95) for the perf benches;
 //! * [`Table`] — paper-style result tables (one row per configuration)
 //!   that print to stdout AND persist as JSON under `bench_results/` so
-//!   EXPERIMENTS.md can quote them.
+//!   EXPERIMENTS.md can quote them;
+//! * [`append_bench_trajectory`] — longitudinal tracking: one JSON array
+//!   per bench at the **repo root** (`BENCH_<name>.json`) that every run
+//!   appends a row to, so regressions across PRs show up as a time
+//!   series instead of a silently replaced snapshot. CI smoke-checks
+//!   that the files exist and parse.
 
 use crate::util::json::{arr, num, obj, s, Json};
 use std::time::Instant;
@@ -123,6 +128,71 @@ impl Table {
     }
 }
 
+/// Append one run's headline numbers to the bench's trajectory file.
+///
+/// Trajectory files live at the **repo root** (one directory above the
+/// crate, next to EXPERIMENTS.md) as `BENCH_<name>.json`, each holding a
+/// JSON array with one object per recorded run, oldest first. Unlike the
+/// `bench_results/` snapshots — which each run overwrites — the
+/// trajectory only grows, so a perf regression between PRs is visible as
+/// a bend in the series rather than a silently replaced number. Each
+/// appended row is stamped with a `unix_secs` timestamp.
+///
+/// Robustness over strictness: a missing, empty or unparseable existing
+/// file starts a fresh array (with a warning) instead of failing the
+/// bench, and the write is atomic (temp + rename) so a crashed bench
+/// never leaves a torn file. `DW2V_BENCH_DIR` overrides the target
+/// directory — CI and the unit test point it at a scratch dir.
+pub fn append_bench_trajectory(name: &str, row: Json) {
+    let dir = match std::env::var("DW2V_BENCH_DIR") {
+        Ok(d) if !d.trim().is_empty() => std::path::PathBuf::from(d),
+        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
+    };
+    let path = dir.join(format!("BENCH_{name}.json"));
+
+    let mut rows: Vec<Json> = match std::fs::read_to_string(&path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Arr(items)) => items,
+            Ok(_) => {
+                eprintln!(
+                    "warn: {} is not a JSON array — starting a fresh trajectory",
+                    path.display()
+                );
+                Vec::new()
+            }
+            Err(e) => {
+                eprintln!(
+                    "warn: {} did not parse ({e:?}) — starting a fresh trajectory",
+                    path.display()
+                );
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    };
+
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs() as f64)
+        .unwrap_or(0.0);
+    let stamped = match row {
+        Json::Obj(mut map) => {
+            map.insert("unix_secs".to_string(), num(unix_secs));
+            Json::Obj(map)
+        }
+        other => obj(vec![("unix_secs", num(unix_secs)), ("row", other)]),
+    };
+    rows.push(stamped);
+
+    let tmp = path.with_extension("json.tmp");
+    let body = arr(rows).to_string_pretty();
+    let write = std::fs::write(&tmp, body).and_then(|_| std::fs::rename(&tmp, &path));
+    match write {
+        Ok(()) => println!("[trajectory {}]", path.display()),
+        Err(e) => eprintln!("warn: could not persist {}: {e}", path.display()),
+    }
+}
+
 /// Quick scale knob for benches: DW2V_BENCH_SCALE=small|full (default small
 /// keeps every bench under a couple of minutes on CPU).
 pub fn bench_scale() -> f64 {
@@ -143,6 +213,35 @@ mod tests {
         assert!(stats.mean_secs >= stats.min_secs);
         assert!(stats.p95_secs >= stats.p50_secs);
         assert_eq!(stats.iters, 5);
+    }
+
+    #[test]
+    fn trajectory_appends_and_survives_garbage() {
+        let dir = std::env::temp_dir().join(format!("dw2v_traj_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("DW2V_BENCH_DIR", &dir);
+        let path = dir.join("BENCH_unit_traj.json");
+
+        append_bench_trajectory("unit_traj", obj(vec![("mbps", num(12.5))]));
+        append_bench_trajectory("unit_traj", obj(vec![("mbps", num(13.0))]));
+        let rows = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = rows.as_arr().expect("trajectory is an array").to_vec();
+        assert_eq!(rows.len(), 2, "two runs -> two rows");
+        assert_eq!(rows[0].get("mbps").as_f64(), Some(12.5));
+        assert_eq!(rows[1].get("mbps").as_f64(), Some(13.0));
+        assert!(
+            rows[1].get("unix_secs").as_f64().is_some(),
+            "rows are timestamped"
+        );
+
+        // a torn/garbage file starts a fresh series instead of failing
+        std::fs::write(&path, "{not json").unwrap();
+        append_bench_trajectory("unit_traj", obj(vec![("mbps", num(14.0))]));
+        let rows = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(rows.as_arr().unwrap().len(), 1);
+
+        std::env::remove_var("DW2V_BENCH_DIR");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 use super::divider::Divider;
 use crate::exec::mapreduce::{Mapper, RoundSource};
 use crate::text::corpus::Corpus;
+use crate::text::feed::ShardManifest;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -211,13 +212,25 @@ pub struct ShardFileSource {
 impl ShardFileSource {
     /// List and validate the shard files of `dir`: headers are read (and
     /// size-checked) up front to establish per-file sentence offsets; the
-    /// sentence bodies stay on disk.
+    /// sentence bodies stay on disk. An index gap is a hard error — this
+    /// source treats the directory as the full concatenated corpus, and
+    /// splicing around a hole would silently shift the global index (and
+    /// with it every routing and RNG decision) of every sentence after it.
     pub fn open(dir: &Path) -> Result<Self, String> {
-        let files = Corpus::shard_files(dir)
+        let entries = Corpus::shard_entries(dir)
             .map_err(|e| format!("list shards in {}: {e}", dir.display()))?;
-        if files.is_empty() {
+        if entries.is_empty() {
             return Err(format!("no shard_*.bin files in {}", dir.display()));
         }
+        if let Some(gap) = Corpus::first_shard_gap(&entries) {
+            return Err(format!(
+                "shard dir {} is missing shard index {gap} ({} shard files present) — \
+                 refusing to train on a spliced corpus",
+                dir.display(),
+                entries.len()
+            ));
+        }
+        let files: Vec<PathBuf> = entries.into_iter().map(|(_, p)| p).collect();
         let mut offsets = Vec::with_capacity(files.len());
         let mut total = 0usize;
         for f in &files {
@@ -225,6 +238,30 @@ impl ShardFileSource {
             let reader = Corpus::stream_shard(f)
                 .map_err(|e| format!("open shard {}: {e}", f.display()))?;
             total += reader.sentence_count();
+        }
+        // A manifest (atomic-ingest dirs) is ground truth when present: the
+        // file listing alone cannot tell a finished corpus from the gap-free
+        // shard prefix an ingest that died mid-run leaves behind.
+        if let Some(man) = ShardManifest::load(dir)? {
+            if !man.complete {
+                return Err(format!(
+                    "{} holds an unfinished ingest ({} shards published, manifest not \
+                     complete) — re-run ingest, or train in feed mode while it runs",
+                    dir.display(),
+                    man.num_shards()
+                ));
+            }
+            if man.num_shards() != files.len() || man.total_sentences() as usize != total {
+                return Err(format!(
+                    "{} disagrees with its manifest: {} shard files / {} sentences on \
+                     disk vs {} / {} recorded",
+                    dir.display(),
+                    files.len(),
+                    total,
+                    man.num_shards(),
+                    man.total_sentences()
+                ));
+            }
         }
         Ok(Self {
             files,
@@ -422,6 +459,48 @@ mod tests {
         union.sort_by_key(|(i, _)| *i);
         assert_eq!(union, all);
         assert!(src.take_error().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_file_source_rejects_index_gaps() {
+        let c = corpus(40);
+        let dir = shard_dir("gap", &c, 4);
+        std::fs::remove_file(dir.join("shard_1.bin")).unwrap();
+        let err = ShardFileSource::open(&dir).unwrap_err();
+        assert!(
+            err.contains("missing shard index 1"),
+            "gap must be a named hard error: {err}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_file_source_trusts_the_manifest_over_the_listing() {
+        use crate::text::feed::ShardManifest;
+        let c = corpus(40);
+        let dir = shard_dir("manifest", &c, 4);
+        // an incomplete manifest marks an ingest that died mid-run: the
+        // shard prefix on disk is gap-free yet still a truncated corpus
+        let mut man = ShardManifest {
+            complete: false,
+            shard_sentences: vec![10, 10, 10, 10],
+            tokens: c.total_tokens(),
+            schedule: None,
+        };
+        man.publish(&dir).unwrap();
+        let err = ShardFileSource::open(&dir).unwrap_err();
+        assert!(err.contains("unfinished ingest"), "{err}");
+        // a complete manifest that disagrees with the files is also fatal
+        man.complete = true;
+        man.shard_sentences = vec![10, 10, 10];
+        man.publish(&dir).unwrap();
+        let err = ShardFileSource::open(&dir).unwrap_err();
+        assert!(err.contains("disagrees with its manifest"), "{err}");
+        // and a matching one validates cleanly
+        man.shard_sentences = vec![10, 10, 10, 10];
+        man.publish(&dir).unwrap();
+        assert_eq!(ShardFileSource::open(&dir).unwrap().total_sentences(), 40);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

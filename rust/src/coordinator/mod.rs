@@ -7,10 +7,14 @@
 //!   over on-disk shard files, with fault-tolerant artifact collection
 //! * [`supervisor`] — worker supervision: heartbeat beacons, stall/crash
 //!   detection, checkpoint-backed respawn, deterministic fault injection
+//! * [`overlap`] — ingest-while-training: run the raw-text ingest and
+//!   the supervised fleet concurrently over one growing shard dir,
+//!   bitwise identical to a back-to-back run
 //! * [`stats`] — unigram/bigram KL divergence (Figure 1) + vocab coverage
 pub mod divider;
 pub mod leader;
 pub mod mapper;
+pub mod overlap;
 pub mod procs;
 pub mod reducer;
 pub mod stats;

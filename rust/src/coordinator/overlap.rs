@@ -1,0 +1,131 @@
+//! Ingest-while-training overlap: run the raw-text ingest and the
+//! multi-process training fleet **concurrently** against one shard
+//! directory, and still merge bitwise identical to a back-to-back run.
+//!
+//! The paper trains on corpora large enough that preprocessing is itself
+//! a long-running job; serializing "ingest, then train" leaves the
+//! machine half idle twice. The overlap contract that makes concurrency
+//! safe *and* deterministic is split across three modules:
+//!
+//! * the ingest side ([`ingest_file_overlapped`]) publishes every shard
+//!   atomically and, **before the first shard**, a schedule block with
+//!   the exact `total_sentences` and bits-exact per-epoch pair sum the
+//!   workers would otherwise compute themselves;
+//! * the reader side ([`crate::text::feed::ShardFeed`]) follows the
+//!   manifest — never the directory listing — yielding shard `i` the
+//!   moment it is published and blocking (not failing) on shard `i+1`;
+//! * the process layer (`super::procs`, feed mode) takes the divider
+//!   total and lr denominator from the schedule block, so a worker's
+//!   very first gradient is computed from the same numbers as in a
+//!   sequential run even though most shards don't exist yet.
+//!
+//! [`run_overlapped`] is the driver tying those together: spawn the
+//! ingest on a thread, wait for the schedule block, then run the
+//! supervised fleet in feed mode. Workers blocked on an unpublished
+//! shard beacon a `waiting` phase, which the supervisor's byte-change
+//! stall detector already treats as healthy — a slow ingest never gets a
+//! worker killed, while a dead one surfaces as a feed timeout error.
+
+use super::procs::{self, ProcsOptions};
+use super::supervisor::{run_supervised, SupervisedReport, SupervisorOptions};
+use crate::info;
+use crate::text::feed::{self, FeedOptions};
+use crate::text::ingest::{ingest_file_overlapped, IngestConfig, IngestOutput, OverlapOptions};
+use crate::text::vocab::Vocab;
+use crate::util::config::ExperimentConfig;
+use crate::world::World;
+use std::path::PathBuf;
+
+/// What an overlapped run needs beyond the plain multi-process options:
+/// where the raw text lives and how to ingest it.
+pub struct OverlapRunOptions {
+    /// raw text input file
+    pub input: PathBuf,
+    /// ingest knobs (vocab pruning, chunking, shard sizing)
+    pub ingest: IngestConfig,
+    /// schedule-pass parameters + the shard-delay test hook
+    pub overlap: OverlapOptions,
+    /// `questions-words.txt` benchmark file for the eval tail, if any —
+    /// loaded only once the ingest freezes the vocabulary
+    pub eval: Option<PathBuf>,
+    /// poll cadence / progress deadline for the schedule wait (workers
+    /// use their own default [`FeedOptions`])
+    pub feed: FeedOptions,
+}
+
+/// Result of [`run_overlapped`]: the ingest report, the vocabulary it
+/// froze, and the supervised training report it overlapped with.
+pub struct OverlapReport {
+    pub ingest: IngestOutput,
+    pub vocab: Vocab,
+    pub sup: SupervisedReport,
+}
+
+/// Ingest `ov.input` into `opts.shard_dir` while training the fleet out
+/// of the same directory. Blocks until both finish. If both sides fail,
+/// the ingest error wins the report — a dead ingest is the usual root
+/// cause of the workers' feed timeouts.
+pub fn run_overlapped(
+    cfg: &ExperimentConfig,
+    opts: &ProcsOptions,
+    sup: &SupervisorOptions,
+    ov: &OverlapRunOptions,
+) -> Result<OverlapReport, String> {
+    // The ingest clears stale shards only after its vocabulary pass, so a
+    // manifest left by a previous run would still be on disk when we poll
+    // for the schedule below — and we would happily spawn the fleet
+    // against last run's corpus. Clear it here, before ingest starts.
+    std::fs::create_dir_all(&opts.shard_dir)
+        .map_err(|e| format!("create {}: {e}", opts.shard_dir.display()))?;
+    crate::text::corpus::remove_stale_shards(&opts.shard_dir)
+        .map_err(|e| format!("clear stale shards in {}: {e}", opts.shard_dir.display()))?;
+
+    let input = ov.input.clone();
+    let shard_dir = opts.shard_dir.clone();
+    let icfg = ov.ingest.clone();
+    let ocfg = ov.overlap.clone();
+    info!(
+        "overlap: ingesting {} into {} while the fleet trains",
+        input.display(),
+        shard_dir.display()
+    );
+    let ingest_thread =
+        std::thread::spawn(move || ingest_file_overlapped(&input, &shard_dir, &icfg, &ocfg));
+
+    // Everything below must not early-return before the join, or a failed
+    // spawn would leave the ingest thread detached mid-write.
+    let train = || -> Result<(Vocab, SupervisedReport), String> {
+        let (man, sched) = feed::wait_for_schedule(&opts.shard_dir, &ov.feed, || {})?;
+        info!(
+            "overlap: schedule ready ({} sentences, {} shards published) — spawning workers",
+            sched.total_sentences,
+            man.num_shards()
+        );
+        // vocab.tsv is on disk before the schedule block, so the eval
+        // suite can load here — while the shards are still being written
+        let (vocab, suite) =
+            World::vocab_and_suite_from_shards(&opts.shard_dir, ov.eval.as_deref())?;
+        let wopts = ProcsOptions {
+            worker_exe: opts.worker_exe.clone(),
+            shard_dir: opts.shard_dir.clone(),
+            out_dir: opts.out_dir.clone(),
+            extra_env: {
+                let mut env = opts.extra_env.clone();
+                env.push(procs::feed_env_pair());
+                env
+            },
+        };
+        run_supervised(cfg, &suite, &wopts, sup).map(|rep| (vocab, rep))
+    };
+    let trained = train();
+
+    let ingested = ingest_thread
+        .join()
+        .unwrap_or_else(|_| Err("ingest thread panicked".to_string()));
+
+    match (ingested, trained) {
+        (Ok(ingest), Ok((vocab, sup))) => Ok(OverlapReport { ingest, vocab, sup }),
+        (Err(e), _) => Err(format!("overlapped ingest failed: {e}")),
+        (Ok(_), Err(e)) => Err(e),
+    }
+}

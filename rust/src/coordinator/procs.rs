@@ -34,7 +34,7 @@
 //! (§reconstruction) promoted to missing-*sub-models* robustness. The
 //! failure is surfaced in the [`WorkerOutcome`]s, never hidden.
 //!
-//! ## Worker protocol (one artifact dir, four file kinds)
+//! ## Worker protocol (one artifact dir, five file kinds)
 //!
 //! Everything a worker says to the coordinator is a file in `out_dir`,
 //! always published write-to-temp + rename:
@@ -42,8 +42,18 @@
 //! * `config.json` — the run config, written once by the coordinator.
 //! * `beacon_<s>.json` — the worker's heartbeat/progress beacon
 //!   ([`super::supervisor::BeaconWriter`]): rewritten every
-//!   `DW2V_BEACON_INTERVAL_MS` (default 250 ms) during the estimation
-//!   and train phases. The supervisor treats any byte change as liveness.
+//!   `DW2V_BEACON_INTERVAL_MS` (default 250 ms; a malformed override is
+//!   a startup error, mirroring `DW2V_FAULT`). Phases run
+//!   `start → estimate → train → done`, plus `waiting` in feed mode
+//!   whenever the worker is blocked on an unpublished shard. Each write
+//!   bumps a sequence number, so the supervisor can treat **any byte
+//!   change** as liveness — a worker parked in `waiting` while ingest
+//!   catches up is healthy, not stalled.
+//! * `feedstat_<s>.json` — feed mode only: how many shards the manifest
+//!   listed when this worker opened its [`ShardFeed`]
+//!   (`shards_at_train_start`), the final shard count, and how many
+//!   polls blocked. The overlap e2e reads it to prove training really
+//!   did start before ingest finished.
 //! * `submodel_<s>.ckpt` — an epoch-boundary [`CheckpointArtifact`]:
 //!   packed trainer state + exact counters. Written after every epoch
 //!   except the last (the artifact itself supersedes it) and deleted on
@@ -51,7 +61,7 @@
 //!   against the run identity, and resumes at the recorded epoch.
 //! * `submodel_<s>.dwsm` — the final [`SubModelArtifact`].
 //!
-//! [`prepare_run`] deletes stale files of all four kinds (plus
+//! [`prepare_run`] deletes stale worker-output files of every kind (plus
 //! fault-injection markers) before a new run spawns anything, so output
 //! from an older run in the same dir can never masquerade as this run's.
 //!
@@ -76,6 +86,21 @@
 //! finishes bitwise identical to an uninterrupted run (the chaos e2e
 //! pins this).
 //!
+//! ## Feed mode (ingest/training overlap)
+//!
+//! With `DW2V_FEED=1` in the environment ([`FEED_ENV`], set on the whole
+//! fleet via [`ProcsOptions::extra_env`] by the overlap driver), a worker
+//! trains from a [`ShardFeed`] instead of the up-front
+//! [`ShardFileSource`] snapshot: it waits for the overlapped ingest's
+//! schedule block (`waiting` beacons), takes `total_sentences` and the
+//! lr-schedule denominator from the manifest instead of running its own
+//! estimation pass — the ingest computed them over the identically
+//! encoded stream, so the values are bitwise the ones a post-hoc pass
+//! would produce — and then streams shards as they are published.
+//! Global sentence indices are identical to the snapshot path by
+//! construction, so an overlapped run merges bitwise identical to a
+//! back-to-back ingest-then-train on the native backend.
+//!
 //! ## Test hooks
 //!
 //! * `DW2V_WORKER_STARTUP_SLEEP_MS` — sleep before touching the shards
@@ -84,7 +109,9 @@
 //!   [`super::supervisor::FaultSpec`] (`crash@pairs=N`, `stall@epoch=K`,
 //!   `corrupt-artifact`, `slow@factor=F`, each optionally scoped with
 //!   `@submodel=S`; clauses joined with `;`).
-//! * `DW2V_BEACON_INTERVAL_MS` — beacon publish interval override.
+//! * `DW2V_BEACON_INTERVAL_MS` — beacon publish interval override; a
+//!   value that doesn't parse as whole milliseconds is a loud startup
+//!   error, never a silent fallback to the default.
 
 use super::leader;
 use super::mapper::{ShardFileSource, SubModelFilter, SID_INDEX_BITS};
@@ -93,19 +120,21 @@ use super::supervisor::{beacon_path, ArmedFaults, BeaconWriter, FaultSpec};
 use crate::embedding::{
     ArtifactMeta, CheckpointArtifact, CheckpointMeta, Embedding, SubModelArtifact,
 };
-use crate::exec::mapreduce::{MapReduce, Reducer};
+use crate::exec::mapreduce::{MapReduce, Reducer, RoundSource};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
 use crate::runtime::params::Metrics;
 use crate::runtime::{load_backend, Backend};
 use crate::sgns::schedule::PairEstimator;
 use crate::sgns::trainer::{SubModelTrainer, TrainerSnapshot};
+use crate::text::feed::{self, FeedOptions, ShardFeed};
 use crate::text::vocab::Vocab;
 use crate::util::config::ExperimentConfig;
+use crate::util::json;
 use crate::util::logging::Timer;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, ExitStatus};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 // ---------------------------------------------------------------------------
@@ -128,13 +157,94 @@ pub fn checkpoint_path(out: &Path) -> PathBuf {
     out.with_extension("ckpt")
 }
 
+/// Environment variable that switches workers from the up-front
+/// [`ShardFileSource`] snapshot to the manifest-driven [`ShardFeed`]
+/// (ingest/training overlap). The overlap driver sets it on the whole
+/// fleet through [`ProcsOptions::extra_env`]; see the module docs.
+pub const FEED_ENV: &str = "DW2V_FEED";
+
+/// The `extra_env` entry that enables feed mode.
+pub fn feed_env_pair() -> (String, String) {
+    (FEED_ENV.to_string(), "1".to_string())
+}
+
+/// Parse the [`FEED_ENV`] value. Like `DW2V_FAULT`, anything other than
+/// the two documented values is a loud startup error — a typo must not
+/// silently leave the fleet in snapshot mode deadlocked against an
+/// ingest that expects feed-mode readers.
+fn parse_feed_mode(raw: Option<&str>) -> Result<bool, String> {
+    match raw.map(str::trim) {
+        None | Some("") | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(v) => Err(format!("{FEED_ENV}: expected 0 or 1, got '{v}'")),
+    }
+}
+
+/// Parse the `DW2V_BEACON_INTERVAL_MS` override. A malformed value is a
+/// startup error, never a silent fall-back to the 250 ms default: a
+/// supervisor tuned for a 10 ms beacon cadence must not unknowingly run
+/// its stall detector against a fleet beaconing 25× slower.
+fn parse_beacon_interval(raw: Option<&str>) -> Result<u64, String> {
+    match raw.map(str::trim) {
+        None => Ok(250),
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            format!("DW2V_BEACON_INTERVAL_MS: '{v}' is not a whole number of milliseconds")
+        }),
+    }
+}
+
+/// The sentence stream a worker trains from: the complete-directory
+/// snapshot, or the manifest-driven feed that follows a still-growing
+/// directory (feed mode). One enum so the epoch loop has a single code
+/// path — both yield the same `(global index, sentence)` stream over a
+/// finished directory.
+enum WorkerSource {
+    Snapshot(ShardFileSource),
+    Feed(ShardFeed),
+}
+
+impl WorkerSource {
+    fn take_error(&self) -> Option<String> {
+        match self {
+            WorkerSource::Snapshot(s) => s.take_error(),
+            WorkerSource::Feed(f) => f.take_error(),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            WorkerSource::Snapshot(s) => format!("{} shard files", s.num_files()),
+            WorkerSource::Feed(_) => "a growing shard dir (feed mode)".to_string(),
+        }
+    }
+}
+
+impl RoundSource for WorkerSource {
+    type Item = (usize, Vec<u32>);
+
+    fn shard(
+        &self,
+        round: usize,
+        shard: usize,
+        num_shards: usize,
+    ) -> Box<dyn Iterator<Item = (usize, Vec<u32>)> + '_> {
+        match self {
+            WorkerSource::Snapshot(s) => s.shard(round, shard, num_shards),
+            WorkerSource::Feed(f) => f.shard(round, shard, num_shards),
+        }
+    }
+}
+
 /// The reducer a worker actually runs: the plain [`TrainReducer`] wrapped
 /// with the supervision duties — beacon publication on progress and the
 /// fault-injection trigger points. Kept out of `TrainReducer` itself so
 /// the in-process leader path pays nothing for supervision.
 struct WorkerReducer<'b, B: Backend> {
     inner: TrainReducer<'b, B>,
-    beacon: BeaconWriter,
+    /// shared with the feed's wait hook in feed mode (the mapper thread
+    /// beacons `waiting` while blocked on an unpublished shard, the
+    /// reducer thread beacons `train` progress), hence the mutex
+    beacon: Arc<Mutex<BeaconWriter>>,
     faults: ArmedFaults,
 }
 
@@ -143,7 +253,7 @@ impl<'b, B: Backend> Reducer<(u64, Vec<u32>)> for WorkerReducer<'b, B> {
         let epoch = (sid >> SID_INDEX_BITS) as usize;
         self.inner.reduce((sid, sentence));
         self.faults.on_progress(self.inner.trainer.pairs_emitted());
-        self.beacon.maybe_write(
+        self.beacon.lock().unwrap().maybe_write(
             "train",
             epoch,
             self.inner.trainer.sentences_received,
@@ -155,7 +265,7 @@ impl<'b, B: Backend> Reducer<(u64, Vec<u32>)> for WorkerReducer<'b, B> {
         self.inner.end_round(round);
         // force a beacon at the barrier: a worker between epochs must not
         // look stalled just because no sentence arrived within the interval
-        self.beacon.write_now(
+        self.beacon.lock().unwrap().write_now(
             "train",
             round + 1,
             self.inner.trainer.sentences_received,
@@ -291,17 +401,29 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         .parent()
         .map(Path::to_path_buf)
         .unwrap_or_else(|| PathBuf::from("."));
-    let beacon_interval = std::env::var("DW2V_BEACON_INTERVAL_MS")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(250);
-    let mut beacon = BeaconWriter::new(
+    let feed_mode = parse_feed_mode(std::env::var(FEED_ENV).ok().as_deref())?;
+    let beacon_interval =
+        parse_beacon_interval(std::env::var("DW2V_BEACON_INTERVAL_MS").ok().as_deref())?;
+    let beacon = Arc::new(Mutex::new(BeaconWriter::new(
         beacon_path(&out_dir, spec.submodel),
         spec.submodel,
         beacon_interval,
-    );
-    beacon.write_now("start", 0, 0, 0);
-    let faults = ArmedFaults::new(fault_spec, out_dir, spec.submodel);
+    )));
+    beacon.lock().unwrap().write_now("start", 0, 0, 0);
+    let faults = ArmedFaults::new(fault_spec, out_dir.clone(), spec.submodel);
+
+    // feed mode: ingest may still be running — its schedule block (and
+    // vocab.tsv, written just before it) is the readiness signal
+    let feed_opts = FeedOptions::default();
+    let schedule = if feed_mode {
+        let hb = Arc::clone(&beacon);
+        let (_, sched) = feed::wait_for_schedule(&spec.shard_dir, &feed_opts, move || {
+            hb.lock().unwrap().maybe_write("waiting", 0, 0, 0);
+        })?;
+        Some(sched)
+    } else {
+        None
+    };
 
     let vocab_path = spec.shard_dir.join("vocab.tsv");
     let vocab_text = std::fs::read_to_string(&vocab_path)
@@ -310,8 +432,39 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     if vocab.is_empty() {
         return Err(format!("{} holds an empty vocabulary", vocab_path.display()));
     }
-    let source = ShardFileSource::open(&spec.shard_dir)?;
-    let total = source.total_sentences();
+    let scfg = leader::sgns_config(cfg);
+    let (source, total) = match &schedule {
+        Some(sched) => {
+            // the schedule was computed under one (window, subsample_t);
+            // training under any other would silently desynchronize the
+            // lr denominator from the actual pair stream
+            if sched.window != scfg.window
+                || sched.subsample_t.to_bits() != scfg.subsample_t.to_bits()
+            {
+                return Err(format!(
+                    "manifest schedule was computed for window {} / subsample_t {:e} but \
+                     this run uses window {} / subsample_t {:e} — re-ingest with the \
+                     matching config",
+                    sched.window, sched.subsample_t, scfg.window, scfg.subsample_t
+                ));
+            }
+            let mut f = ShardFeed::open(&spec.shard_dir, feed_opts)?;
+            let hb = Arc::clone(&beacon);
+            f.set_wait_hook(Box::new(move |awaiting, published| {
+                // seq bumps per write, so even a long wait on one shard
+                // keeps changing bytes — liveness for the stall detector
+                hb.lock()
+                    .unwrap()
+                    .maybe_write("waiting", 0, awaiting as u64, published as u64);
+            }));
+            (WorkerSource::Feed(f), sched.total_sentences as usize)
+        }
+        None => {
+            let s = ShardFileSource::open(&spec.shard_dir)?;
+            let total = s.total_sentences();
+            (WorkerSource::Snapshot(s), total)
+        }
+    };
     if total == 0 {
         return Err(format!(
             "shards in {} hold no sentences",
@@ -327,34 +480,39 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         ));
     }
 
-    // estimation pass: stream the corpus once to compute the lr-schedule
-    // denominator exactly as the in-process leader does over the
-    // in-memory corpus (same sentence order ⇒ bitwise-identical sum)
-    let scfg = leader::sgns_config(cfg);
-    let mut est = PairEstimator::new(&vocab, &scfg);
-    {
-        use crate::exec::mapreduce::RoundSource;
-        let mut seen = 0u64;
-        for (_, sentence) in source.shard(0, 0, 1) {
-            est.add_sentence(&sentence);
-            seen += 1;
-            if seen % 4096 == 0 {
-                beacon.maybe_write("estimate", 0, seen, 0);
+    // lr-schedule denominator. Snapshot mode streams the finished shards
+    // once, exactly as the in-process leader does over the in-memory
+    // corpus (same sentence order ⇒ bitwise-identical sum). Feed mode
+    // takes the value the overlapped ingest computed over the identically
+    // encoded stream and published bits-exact in the manifest — running
+    // our own pass here would block on every shard, defeating the overlap.
+    let per_epoch_pairs = match &schedule {
+        Some(sched) => sched.per_epoch_pairs,
+        None => {
+            let mut est = PairEstimator::new(&vocab, &scfg);
+            let mut seen = 0u64;
+            for (_, sentence) in source.shard(0, 0, 1) {
+                est.add_sentence(&sentence);
+                seen += 1;
+                if seen % 4096 == 0 {
+                    beacon.lock().unwrap().maybe_write("estimate", 0, seen, 0);
+                }
             }
+            if let Some(e) = source.take_error() {
+                return Err(format!("estimation pass failed: {e}"));
+            }
+            est.per_epoch()
         }
-    }
-    if let Some(e) = source.take_error() {
-        return Err(format!("estimation pass failed: {e}"));
-    }
-    let expected_pairs = leader::submodel_expected_pairs(cfg, est.per_epoch(), &divider, total);
+    };
+    let expected_pairs = leader::submodel_expected_pairs(cfg, per_epoch_pairs, &divider, total);
     let trainer_seed = leader::submodel_seed(cfg.seed, spec.submodel);
 
     let backend = load_backend(cfg, vocab.len())?;
     info!(
-        "worker {}: {} sentences in {} shard files, {} epochs, expected ~{} pairs, backend {}",
+        "worker {}: {} sentences from {}, {} epochs, expected ~{} pairs, backend {}",
         spec.submodel,
         total,
-        source.num_files(),
+        source.describe(),
         cfg.epochs,
         expected_pairs,
         backend.name()
@@ -468,9 +626,44 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         }
     }
     let train_secs = timer.stop_quiet();
+
+    // feed mode: the feed drained to the manifest's completion mark every
+    // epoch — cross-check the final manifest against the schedule it was
+    // trained under, then publish the feed statistics the overlap e2e and
+    // benches read (`shards_at_train_start < shards_final` is the proof
+    // that training really did start before ingest finished)
+    if let WorkerSource::Feed(f) = &source {
+        let sched = schedule.as_ref().expect("feed mode implies a schedule");
+        let man = feed::ShardManifest::load(&spec.shard_dir)?
+            .ok_or_else(|| format!("{} lost its manifest mid-run", spec.shard_dir.display()))?;
+        if !man.complete || man.total_sentences() != sched.total_sentences {
+            return Err(format!(
+                "{}: manifest ended {} with {} sentences but the schedule promised {} — \
+                 ingest died or the dir changed mid-run",
+                spec.shard_dir.display(),
+                if man.complete { "complete" } else { "incomplete" },
+                man.total_sentences(),
+                sched.total_sentences
+            ));
+        }
+        let st = f.stats();
+        let body = json::obj(vec![
+            ("submodel", json::num(spec.submodel as f64)),
+            ("shards_at_train_start", json::num(st.shards_at_open as f64)),
+            ("shards_final", json::num(man.num_shards() as f64)),
+            ("waits", json::s(&st.waits.to_string())),
+        ])
+        .to_string_pretty();
+        let path = out_dir.join(format!("feedstat_{}.json", spec.submodel));
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+    }
+
     let worker_red = reducers.pop().expect("one reducer");
     let corrupt = worker_red.faults.corrupt_artifact();
-    let mut beacon = worker_red.beacon;
+    let beacon = worker_red.beacon;
     let red = worker_red.inner;
     if let Some(e) = red.error {
         return Err(format!("trainer failed: {e}"));
@@ -524,7 +717,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     // the artifact supersedes the checkpoint; leaving it behind would only
     // confuse the stale-file cleanup of the next run
     let _ = std::fs::remove_file(&ckpt);
-    beacon.write_now("done", cfg.epochs, sentences, pairs);
+    beacon.lock().unwrap().write_now("done", cfg.epochs, sentences, pairs);
     info!(
         "worker {}: done in {train_secs:.2}s — {sentences} sentences, {pairs} pairs, artifact {}",
         spec.submodel,
@@ -623,14 +816,16 @@ pub(crate) fn describe_status(status: &ExitStatus) -> String {
 }
 
 /// Is `name` output of a previous run in the same artifact dir — a
-/// sub-model artifact/checkpoint/temp file, a worker beacon, or a
-/// fault-injection marker?
+/// sub-model artifact/checkpoint/temp file, a worker beacon, a feed-mode
+/// statistics file, or a fault-injection marker?
 fn is_stale_run_file(name: &str) -> bool {
     let sub = name.starts_with("submodel_")
         && (name.ends_with(".dwsm") || name.ends_with(".ckpt") || name.ends_with(".tmp"));
     let beacon = name.starts_with("beacon_")
         && (name.ends_with(".json") || name.ends_with(".tmp"));
-    sub || beacon || name.starts_with("fault_")
+    let feedstat = name.starts_with("feedstat_")
+        && (name.ends_with(".json") || name.ends_with(".tmp"));
+    sub || beacon || feedstat || name.starts_with("fault_")
 }
 
 /// Delete leftovers of a previous run from `out_dir` (artifacts,
@@ -657,10 +852,41 @@ pub fn clean_artifact_dir(out_dir: &Path) -> Result<usize, String> {
     Ok(removed)
 }
 
+/// Remove torn shard spills (`shard_*.bin.tmp`) and a torn manifest temp
+/// left behind by an ingest that died mid-publish. Readers already skip
+/// `.tmp` files, so these are harmless to correctness — but left alone a
+/// dead run's debris would sit next to real data forever. Never called
+/// in feed mode: there the `.tmp` files belong to the live ingest.
+fn sweep_torn_shard_files(shard_dir: &Path) -> Result<usize, String> {
+    let entries = match std::fs::read_dir(shard_dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(0),
+    };
+    let mut removed = 0usize;
+    for entry in entries.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            let torn_shard = name.starts_with("shard_") && name.ends_with(".bin.tmp");
+            if torn_shard || name == feed::MANIFEST_TMP_FILE {
+                std::fs::remove_file(entry.path())
+                    .map_err(|e| format!("remove torn {}: {e}", entry.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
 /// Everything a coordinator does before the first spawn: validate the
 /// rate and the shard dir, create `out_dir`, sweep stale run files, and
 /// write the run's `config.json`. Returns the sub-model count and the
 /// config path to hand to [`spawn_one_worker`].
+///
+/// When `opts.extra_env` carries [`feed_env_pair`] (overlap), the shard
+/// dir is validated through its manifest instead of a
+/// [`ShardFileSource`] probe — the shards are still being written, so
+/// listing them would both race the ingest and reject the run for
+/// having "too few" files. The manifest's schedule block is required:
+/// the overlap driver only spawns after [`feed::wait_for_schedule`].
 pub fn prepare_run(
     cfg: &ExperimentConfig,
     opts: &ProcsOptions,
@@ -676,8 +902,40 @@ pub fn prepare_run(
             opts.shard_dir.display()
         ));
     }
-    // fail fast on an unreadable corpus before paying n process spawns
-    let probe = ShardFileSource::open(&opts.shard_dir)?;
+    let feed_mode = opts
+        .extra_env
+        .iter()
+        .any(|(k, v)| k == FEED_ENV && v.trim() == "1");
+    let corpus_desc = if feed_mode {
+        match feed::ShardManifest::load(&opts.shard_dir)? {
+            Some(m) if m.schedule.is_some() => format!(
+                "a growing shard dir ({} shards published so far)",
+                m.num_shards()
+            ),
+            _ => {
+                return Err(format!(
+                    "{}: feed mode ({FEED_ENV}=1) requires a manifest with a schedule \
+                     block — wait for the overlapped ingest's schedule before spawning",
+                    opts.shard_dir.display()
+                ))
+            }
+        }
+    } else {
+        let swept = sweep_torn_shard_files(&opts.shard_dir)?;
+        if swept > 0 {
+            info!(
+                "coordinator: removed {swept} torn .tmp files from {}",
+                opts.shard_dir.display()
+            );
+        }
+        // fail fast on an unreadable corpus before paying n process spawns
+        let probe = ShardFileSource::open(&opts.shard_dir)?;
+        format!(
+            "{} shard files ({} sentences)",
+            probe.num_files(),
+            probe.total_sentences()
+        )
+    };
     std::fs::create_dir_all(&opts.out_dir)
         .map_err(|e| format!("create {}: {e}", opts.out_dir.display()))?;
     let removed = clean_artifact_dir(&opts.out_dir)?;
@@ -700,9 +958,7 @@ pub fn prepare_run(
     std::fs::write(&config_path, config_json.to_string_pretty())
         .map_err(|e| format!("write {}: {e}", config_path.display()))?;
     info!(
-        "coordinator: spawning {n} workers over {} shard files ({} sentences), exe {}",
-        probe.num_files(),
-        probe.total_sentences(),
+        "coordinator: spawning {n} workers over {corpus_desc}, exe {}",
         opts.worker_exe.display()
     );
     Ok((n, config_path))
@@ -1004,6 +1260,58 @@ mod tests {
     use super::*;
 
     #[test]
+    fn beacon_interval_parse_is_loud_on_garbage() {
+        // unset → documented default; well-formed values parse
+        assert_eq!(parse_beacon_interval(None), Ok(250));
+        assert_eq!(parse_beacon_interval(Some("10")), Ok(10));
+        assert_eq!(parse_beacon_interval(Some(" 500 ")), Ok(500));
+        // malformed values must be startup errors naming the variable,
+        // never a silent fall-back to 250ms
+        for bad in ["fast", "250ms", "", "-5", "2.5"] {
+            let err = parse_beacon_interval(Some(bad)).unwrap_err();
+            assert!(
+                err.contains("DW2V_BEACON_INTERVAL_MS"),
+                "'{bad}' must fail loudly, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn feed_flag_parse_is_loud_on_garbage() {
+        assert_eq!(parse_feed_mode(None), Ok(false));
+        assert_eq!(parse_feed_mode(Some("0")), Ok(false));
+        assert_eq!(parse_feed_mode(Some("")), Ok(false));
+        assert_eq!(parse_feed_mode(Some("1")), Ok(true));
+        for bad in ["yes", "true", "2"] {
+            assert!(parse_feed_mode(Some(bad)).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn torn_shard_tmp_files_are_swept() {
+        let dir = std::env::temp_dir().join(format!("dw2v_torn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in [
+            "shard_0.bin",
+            "shard_1.bin.tmp",
+            "shards.json.tmp",
+            "shards.json",
+            "vocab.tsv",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 2);
+        assert!(dir.join("shard_0.bin").exists(), "real shards must survive");
+        assert!(dir.join("shards.json").exists(), "the manifest must survive");
+        assert!(dir.join("vocab.tsv").exists());
+        assert!(!dir.join("shard_1.bin.tmp").exists());
+        assert!(!dir.join("shards.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 0);
+    }
+
+    #[test]
     fn stale_run_files_are_recognized() {
         for stale in [
             "submodel_0.dwsm",
@@ -1012,6 +1320,8 @@ mod tests {
             "submodel_3.ckpt.tmp",
             "beacon_0.json",
             "beacon_7.json.tmp",
+            "feedstat_2.json",
+            "feedstat_2.json.tmp",
             "fault_1_crash.fired",
         ] {
             assert!(is_stale_run_file(stale), "should be stale: {stale}");

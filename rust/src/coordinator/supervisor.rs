@@ -54,7 +54,7 @@ pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
 /// torn beacon. The payload is a small JSON object:
 ///
 /// ```text
-/// { "submodel": 1, "phase": "start|estimate|train",
+/// { "submodel": 1, "phase": "start|estimate|waiting|train|done",
 ///   "epoch": 0, "sentences": "412", "pairs": "99321",
 ///   "seq": "17", "unix_ms": "1754500000000" }
 /// ```
@@ -62,7 +62,14 @@ pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
 /// `u64` counters ride as decimal strings (the artifact-meta convention);
 /// `seq` increments per write so consecutive beacons always differ —
 /// the supervisor treats **any byte change** as progress and needs no
-/// clock agreement with the worker.
+/// clock agreement with the worker. That is also what makes feed-mode
+/// `waiting` beacons (worker blocked on a shard ingest hasn't published
+/// yet; `sentences` carries the awaited shard index, `pairs` the count
+/// published so far) read as *healthy*: the seq bump changes the bytes
+/// on every write even when nothing else moved, so a worker parked
+/// behind a slow ingest is never mistaken for a stalled one. A dead
+/// ingest is caught by the feed's own progress timeout (a loud worker
+/// error), not by the stall detector.
 pub struct BeaconWriter {
     path: PathBuf,
     submodel: usize,

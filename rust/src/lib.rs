@@ -105,6 +105,27 @@
 //! stall→timeout→respawn, corrupt-artifact→degrade and fail-fast
 //! end-to-end.
 //!
+//! ## Ingest-while-training overlap
+//!
+//! For corpora large enough that preprocessing is itself a long job, the
+//! ingest and the training fleet can share one shard directory
+//! concurrently ([`coordinator::overlap::run_overlapped`], CLI
+//! `pipeline-procs --overlap --text FILE`). The contract: the ingest
+//! publishes every shard atomically (temp + rename) and maintains a
+//! manifest (`shards.json`, [`text::feed::ShardManifest`]) whose rows
+//! appear only *after* the shard they describe is readable; before the
+//! first shard it publishes a schedule block carrying the exact sentence
+//! total and the bits-exact per-epoch pair sum. Workers read the
+//! directory through [`text::feed::ShardFeed`] — manifest-driven, never
+//! a directory listing, so torn `.tmp` files are invisible — training
+//! shard `i` the moment it lands and beaconing a `waiting` phase while
+//! blocked on `i+1` (healthy under the stall detector; a *dead* ingest
+//! surfaces as a feed progress-timeout error instead). Because divider
+//! routing, per-sentence RNG and the lr schedule depend only on the
+//! schedule-block numbers and global sentence order, the overlapped run
+//! merges **bitwise identical** to ingest-then-train on the native
+//! backend (`cargo test --test overlap_e2e`).
+//!
 //! ## Serving layer
 //!
 //! Trained models are *used* through [`serve`]: an HNSW-style ANN index +

@@ -62,6 +62,18 @@
 //! With `--mappers 1` a multi-process run reproduces the in-process
 //! `pipeline` sub-models bitwise (native backend).
 //!
+//! **Ingest-while-training overlap (`--overlap`):**
+//! `dw2v pipeline-procs --overlap --text FILE --shard-dir DIR ...` runs
+//! the raw-text ingest *concurrently* with the worker fleet: the ingest
+//! publishes each shard atomically plus a manifest (`shards.json`), and
+//! workers follow the growing directory, beaconing a `waiting` phase
+//! while blocked on the next shard (the stall detector reads that as
+//! healthy). Because the ingest publishes the exact sentence total and
+//! lr-schedule denominator in the manifest *before* the first shard,
+//! the overlapped run merges **bitwise identical** to running ingest
+//! and `pipeline-procs` back to back (native backend, `--mappers 1`).
+//! `--min-count` / `--max-vocab` / `--shard-tokens` shape the ingest.
+//!
 //! **Fault injection (tests / chaos drills):** set `DW2V_FAULT` in the
 //! coordinator's environment; each worker parses it at startup. Grammar:
 //! `spec := clause (';' clause)*`, `clause := action ('@' key '=' value)*`
@@ -371,6 +383,15 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
     .flag("out-dir", None, "worker artifact directory (default: <shard-dir>/submodels)")
     .flag("worker-exe", None, "dw2v binary to spawn (default: this executable)")
     .flag("save-model", None, "save the merged consensus embedding here")
+    .bool_flag(
+        "overlap",
+        "ingest --text into --shard-dir concurrently: workers start training as soon \
+         as the first shard is published (bitwise identical to ingest-then-train)",
+    )
+    .flag("text", None, "(--overlap) raw text file to ingest while training")
+    .flag("min-count", Some("5"), "(--overlap) drop words seen fewer times")
+    .flag("max-vocab", Some("1000000"), "(--overlap) keep at most this many words")
+    .flag("shard-tokens", None, "(--overlap) target encoded tokens per shard file")
     .flag(
         "on-worker-failure",
         Some("retry"),
@@ -394,11 +415,11 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
     let args = cmd.parse(argv).map_err(|e| e.to_string())?;
     let cfg = parse_experiment(&args)?;
     let shard_dir = std::path::PathBuf::from(required_flag(&args, "shard-dir", &cmd)?);
+    let overlap = args.get_bool("overlap");
+    if args.get("text").is_some() && !overlap {
+        return Err("--text is the overlap ingest input; add --overlap".into());
+    }
 
-    let (vocab, suite) = World::vocab_and_suite_from_shards(
-        &shard_dir,
-        args.get("eval").map(std::path::Path::new),
-    )?;
     let worker_exe = match args.get("worker-exe") {
         Some(p) => std::path::PathBuf::from(p),
         None => procs::find_worker_exe()?,
@@ -430,7 +451,52 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
         sup.beacon_interval_ms = ms;
     }
 
-    let rep = supervisor::run_supervised(&cfg, &suite, &opts, &sup)?;
+    let (vocab, rep) = if overlap {
+        use dw2v::coordinator::overlap::{run_overlapped, OverlapRunOptions};
+        let text = required_flag(&args, "text", &cmd)?;
+        let mut icfg = dw2v::text::ingest::IngestConfig {
+            workers: cfg.mappers.max(1),
+            ..Default::default()
+        };
+        if let Some(mc) = args.get_u64("min-count").map_err(|e| e.to_string())? {
+            icfg.min_count = mc;
+        }
+        if let Some(mv) = args.get_usize("max-vocab").map_err(|e| e.to_string())? {
+            icfg.max_vocab = mv;
+        }
+        if let Some(st) = args.get_u64("shard-tokens").map_err(|e| e.to_string())? {
+            icfg.shard_tokens = st;
+        }
+        let scfg = dw2v::coordinator::leader::sgns_config(&cfg);
+        let mut ocfg = dw2v::text::ingest::OverlapOptions::new(scfg.window, scfg.subsample_t);
+        // test hook: throttle shard publication so e2e tests can prove the
+        // workers trained while shards were still being written
+        if let Ok(ms) = std::env::var("DW2V_INGEST_SHARD_DELAY_MS") {
+            let parsed: u64 = ms.trim().parse().map_err(|_| {
+                format!(
+                    "DW2V_INGEST_SHARD_DELAY_MS: '{ms}' is not a whole number of milliseconds"
+                )
+            })?;
+            ocfg.shard_delay = std::time::Duration::from_millis(parsed);
+        }
+        let ov = OverlapRunOptions {
+            input: std::path::PathBuf::from(text),
+            ingest: icfg,
+            overlap: ocfg,
+            eval: args.get("eval").map(std::path::PathBuf::from),
+            feed: dw2v::text::feed::FeedOptions::default(),
+        };
+        let rep = run_overlapped(&cfg, &opts, &sup, &ov)?;
+        println!("{}", rep.ingest.stats.summary());
+        (rep.vocab, rep.sup)
+    } else {
+        let (vocab, suite) = World::vocab_and_suite_from_shards(
+            &opts.shard_dir,
+            args.get("eval").map(std::path::Path::new),
+        )?;
+        let rep = supervisor::run_supervised(&cfg, &suite, &opts, &sup)?;
+        (vocab, rep)
+    };
 
     println!(
         "\nworkers ({} spawned, {} survived; {} failures, {} stalls, {} respawns):",
@@ -470,7 +536,7 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
             .map_err(|e| format!("save {path}: {e}"))?;
         println!("merged model saved to {path}");
     }
-    if suite.is_empty() {
+    if rep.tail.scores.is_empty() {
         eprintln!("note: no benchmark suite (pass --eval questions-words.txt)");
     } else {
         println!("\n{}", report::format_header(&rep.tail.scores));

@@ -150,38 +150,99 @@ impl Corpus {
         Ok(paths)
     }
 
-    /// Every `shard_*.bin` in a directory, sorted by the **numeric** shard
-    /// index parsed from the file stem — `shard_10.bin` sorts after
-    /// `shard_2.bin`, which a lexicographic sort would get wrong. The
-    /// multi-process training path depends on this order: global sentence
-    /// indices (and through them every routing and RNG decision) are
-    /// assigned by concatenating shards in exactly this sequence. Files
-    /// whose stem doesn't parse sort last.
-    pub fn shard_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
-        let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| {
-                p.file_name()
-                    .and_then(|n| n.to_str())
-                    .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
-                    .unwrap_or(false)
-            })
-            .collect();
-        entries.sort_by_key(|p| {
-            p.file_stem()
-                .and_then(|s| s.to_str())
-                .and_then(|s| s.strip_prefix("shard_"))
-                .and_then(|s| s.parse::<usize>().ok())
-                .unwrap_or(usize::MAX)
-        });
+    /// Every `shard_*.bin` in a directory as `(numeric index, path)`
+    /// pairs, sorted by the **numeric** shard index parsed from the file
+    /// stem — `shard_10.bin` sorts after `shard_2.bin`, which a
+    /// lexicographic sort would get wrong. The multi-process training
+    /// path depends on this order: global sentence indices (and through
+    /// them every routing and RNG decision) are assigned by concatenating
+    /// shards in exactly this sequence.
+    ///
+    /// Integrity is enforced, not assumed:
+    ///
+    /// * a `shard_*.bin` whose stem doesn't parse as an index is a hard
+    ///   error (it used to sort last and get spliced into the corpus,
+    ///   silently shifting every global sentence index after it);
+    /// * two files claiming the same index (`shard_7.bin` +
+    ///   `shard_07.bin`) are a hard error (both used to load);
+    /// * index **gaps** are surfaced through the returned indices — use
+    ///   [`Self::first_shard_gap`] — so callers that require the full
+    ///   concatenation ([`Self::read_sharded`], `ShardFileSource`) can
+    ///   refuse, while a reader following a still-growing directory can
+    ///   distinguish "contiguous prefix" from "hole".
+    ///
+    /// In-flight `shard_*.bin.tmp` files (the atomic-publication staging
+    /// names) are never listed: a half-written shard is invisible until
+    /// its rename.
+    pub fn shard_entries(dir: &Path) -> std::io::Result<Vec<(usize, PathBuf)>> {
+        let invalid = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+        let mut entries: Vec<(usize, PathBuf)> = Vec::new();
+        for e in std::fs::read_dir(dir)? {
+            let path = e?.path();
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                continue;
+            };
+            if !(name.starts_with("shard_") && name.ends_with(".bin")) {
+                continue; // other files, incl. in-flight `shard_*.bin.tmp`
+            }
+            let stem = &name["shard_".len()..name.len() - ".bin".len()];
+            let idx = stem.parse::<usize>().map_err(|_| {
+                invalid(format!(
+                    "{}: shard stem {stem:?} is not a numeric shard index — \
+                     refusing to guess its position in the corpus",
+                    path.display()
+                ))
+            })?;
+            entries.push((idx, path));
+        }
+        entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+        for w in entries.windows(2) {
+            if w[0].0 == w[1].0 {
+                return Err(invalid(format!(
+                    "{} and {} both claim shard index {} — the corpus \
+                     concatenation order would be ambiguous",
+                    w[0].1.display(),
+                    w[1].1.display(),
+                    w[0].0
+                )));
+            }
+        }
         Ok(entries)
     }
 
-    /// Load every `shard_*.bin` in a directory, in shard order.
+    /// First missing index in a sorted, duplicate-free shard listing
+    /// (shard indices must be exactly `0..n`), or `None` if contiguous.
+    pub fn first_shard_gap(entries: &[(usize, PathBuf)]) -> Option<usize> {
+        entries
+            .iter()
+            .enumerate()
+            .find(|(i, (idx, _))| *i != *idx)
+            .map(|(i, _)| i)
+    }
+
+    /// Every `shard_*.bin` in a directory, in shard order — the paths of
+    /// [`Self::shard_entries`] with the same integrity errors.
+    pub fn shard_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+        Ok(Self::shard_entries(dir)?.into_iter().map(|(_, p)| p).collect())
+    }
+
+    /// Load every `shard_*.bin` in a directory, in shard order. An index
+    /// gap is a hard error: concatenating around a hole would silently
+    /// shift the global index of every sentence after it.
     pub fn read_sharded(dir: &Path) -> std::io::Result<Corpus> {
+        let entries = Self::shard_entries(dir)?;
+        if let Some(gap) = Self::first_shard_gap(&entries) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "shard dir {} is missing shard index {gap} ({} shard files present)",
+                    dir.display(),
+                    entries.len()
+                ),
+            ));
+        }
         let mut all = Corpus::default();
-        for path in Self::shard_files(dir)? {
+        for (_, path) in entries {
             all.sentences.extend(Self::read_shard(&path)?.sentences);
         }
         Ok(all)
@@ -236,16 +297,25 @@ impl Iterator for ShardReader {
             return None;
         }
         let i = self.yielded;
+        // every streaming error names the shard file: a multi-shard
+        // worker streams dozens of files through one iterator, and an
+        // unattributed "unexpected end of file" is undebuggable
         if self.remaining < 4 {
+            let path = self.path.display().to_string();
             return self.fail(format!(
-                "shard truncated before the length prefix of sentence {i}"
+                "shard {path} truncated before the length prefix of sentence {i}"
             ));
         }
         let len = match read_u32(&mut self.reader) {
             Ok(l) => l as u64,
             Err(e) => {
+                let path = self.path.display().to_string();
+                let kind = e.kind();
                 self.done = true;
-                return Some(Err(e));
+                return Some(Err(std::io::Error::new(
+                    kind,
+                    format!("shard {path}: reading the length prefix of sentence {i}: {e}"),
+                )));
             }
         };
         self.remaining -= 4;
@@ -253,16 +323,22 @@ impl Iterator for ShardReader {
             Some(b) => b,
             None => {
                 let rem = self.remaining;
+                let path = self.path.display().to_string();
                 return self.fail(format!(
-                    "sentence {i} claims {len} tokens but only {rem} bytes remain"
+                    "sentence {i} of shard {path} claims {len} tokens but only {rem} bytes remain"
                 ));
             }
         };
         self.remaining -= body;
         let mut buf = vec![0u8; body as usize];
         if let Err(e) = self.reader.read_exact(&mut buf) {
+            let path = self.path.display().to_string();
+            let kind = e.kind();
             self.done = true;
-            return Some(Err(e));
+            return Some(Err(std::io::Error::new(
+                kind,
+                format!("shard {path}: reading the {len}-token body of sentence {i}: {e}"),
+            )));
         }
         self.yielded += 1;
         Some(Ok(buf
@@ -273,16 +349,23 @@ impl Iterator for ShardReader {
 }
 
 /// Delete every `shard_*.bin` in `dir` (leftovers from a previous
-/// sharded write — synthetic or ingested — into the same directory).
+/// sharded write — synthetic or ingested — into the same directory),
+/// plus the torn remains of an interrupted atomic publication
+/// (`shard_*.bin.tmp`) and any stale `shards.json` manifest: a new
+/// corpus must never be read against the previous run's manifest.
 pub(crate) fn remove_stale_shards(dir: &Path) -> std::io::Result<()> {
     for entry in std::fs::read_dir(dir)? {
         let path = entry?.path();
-        let is_shard = path
+        let stale = path
             .file_name()
             .and_then(|n| n.to_str())
-            .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
+            .map(|n| {
+                (n.starts_with("shard_") && (n.ends_with(".bin") || n.ends_with(".bin.tmp")))
+                    || n == super::feed::MANIFEST_FILE
+                    || n == super::feed::MANIFEST_TMP_FILE
+            })
             .unwrap_or(false);
-        if is_shard {
+        if stale {
             std::fs::remove_file(&path)?;
         }
     }
@@ -407,6 +490,115 @@ mod tests {
             last = Some(item);
         }
         assert!(last.unwrap().is_err(), "trailing bytes must surface");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unparseable_shard_stem_is_a_hard_error() {
+        // regression: `shard_backup.bin` used to sort last (usize::MAX
+        // key) and get spliced into the corpus, shifting every global
+        // sentence index after the real shards
+        let dir = tmpdir("badstem");
+        let c = Corpus::new((0..20).map(|i| vec![i]).collect());
+        c.write_sharded(&dir, 2).unwrap();
+        sample().write_shard(&dir.join("shard_backup.bin")).unwrap();
+        let err = Corpus::shard_files(&dir).unwrap_err();
+        assert!(
+            err.to_string().contains("shard_backup.bin"),
+            "error must name the offending file: {err}"
+        );
+        let err = Corpus::read_sharded(&dir).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_shard_index_is_a_hard_error() {
+        // regression: `shard_7.bin` and `shard_07.bin` both parse to
+        // index 7 and both used to load, in unspecified relative order
+        let dir = tmpdir("dupidx");
+        let c = Corpus::new((0..40).map(|i| vec![i]).collect());
+        c.write_sharded(&dir, 8).unwrap();
+        std::fs::copy(dir.join("shard_7.bin"), dir.join("shard_07.bin")).unwrap();
+        let err = Corpus::shard_files(&dir).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("shard_07.bin") && msg.contains("shard_7.bin") && msg.contains('7'),
+            "error must name both claimants: {msg}"
+        );
+        assert!(Corpus::read_sharded(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_index_gap_is_surfaced_and_fails_full_reads() {
+        let dir = tmpdir("gap");
+        let c = Corpus::new((0..30).map(|i| vec![i]).collect());
+        c.write_sharded(&dir, 5).unwrap();
+        std::fs::remove_file(dir.join("shard_2.bin")).unwrap();
+        // the listing itself succeeds — a growing-dir reader needs it —
+        // but the gap is visible through the indices
+        let entries = Corpus::shard_entries(&dir).unwrap();
+        assert_eq!(Corpus::first_shard_gap(&entries), Some(2));
+        // a full concatenated read must refuse: splicing around the hole
+        // would shift the global index of every sentence after it
+        let err = Corpus::read_sharded(&dir).unwrap_err();
+        assert!(
+            err.to_string().contains("missing shard index 2"),
+            "gap must be named: {err}"
+        );
+        // a contiguous prefix (a dir mid-growth) has no gap
+        let prefix: Vec<_> = entries.iter().take(2).cloned().collect();
+        assert_eq!(Corpus::first_shard_gap(&prefix), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn inflight_tmp_shards_are_invisible_and_swept() {
+        // torn-shard visibility: a `.tmp` staging file (atomic publication
+        // in progress, or the debris of a killed writer) must never be
+        // listed as corpus content, and a fresh sharded write sweeps it
+        let dir = tmpdir("tmpvis");
+        let c = Corpus::new((0..12).map(|i| vec![i]).collect());
+        c.write_sharded(&dir, 3).unwrap();
+        std::fs::write(dir.join("shard_3.bin.tmp"), b"half-written").unwrap();
+        let files = Corpus::shard_files(&dir).unwrap();
+        assert_eq!(files.len(), 3, "tmp file must be invisible: {files:?}");
+        assert_eq!(Corpus::read_sharded(&dir).unwrap(), c);
+        // a rewrite removes the debris along with the stale shards
+        let small = Corpus::new(vec![vec![9]]);
+        small.write_sharded(&dir, 1).unwrap();
+        assert!(!dir.join("shard_3.bin.tmp").exists(), "tmp debris must be swept");
+        assert_eq!(Corpus::read_sharded(&dir).unwrap(), small);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_middle_shard_errors_name_the_file() {
+        // a multi-shard stream must attribute a mid-stream error to the
+        // shard it came from, not just say "unexpected end of file"
+        let dir = tmpdir("midcorrupt");
+        let c = Corpus::new((0..60).map(|i| vec![i, i + 1, i + 2]).collect());
+        c.write_sharded(&dir, 4).unwrap();
+        let victim = dir.join("shard_2.bin");
+        let full = std::fs::read(&victim).unwrap();
+        // truncate mid-sentence-body
+        std::fs::write(&victim, &full[..full.len() - 6]).unwrap();
+        let err = Corpus::read_sharded(&dir).unwrap_err();
+        assert!(
+            err.to_string().contains("shard_2.bin"),
+            "error must name the corrupt shard: {err}"
+        );
+        // oversized length claim, same attribution requirement
+        let mut bytes = full.clone();
+        let header = Corpus::SHARD_HEADER_BYTES as usize;
+        bytes[header..header + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&victim, &bytes).unwrap();
+        let err = Corpus::read_sharded(&dir).unwrap_err();
+        assert!(
+            err.to_string().contains("shard_2.bin"),
+            "oversized-claim error must name the shard: {err}"
+        );
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

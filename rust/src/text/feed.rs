@@ -1,0 +1,747 @@
+//! Growing-shard-dir corpus feed: the reader side of ingest/training
+//! overlap.
+//!
+//! ## The publication protocol
+//!
+//! Ingest pass 2 ([`super::ingest`]) publishes every spilled shard with
+//! the artifact idiom — write `shard_<i>.bin.tmp`, fsync-free rename to
+//! `shard_<i>.bin` — and then atomically rewrites a `shards.json`
+//! manifest describing everything published so far. The ordering is the
+//! contract: **the shard file is renamed into place before its manifest
+//! row appears**, so a manifest that lists shard `i` guarantees
+//! `shard_<i>.bin` is complete and readable. A reader therefore never
+//! globs the directory (where it could race a rename or meet `.tmp`
+//! debris); it follows the manifest.
+//!
+//! ## Manifest format (`shards.json`)
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "complete": false,
+//!   "shards": 3,
+//!   "shard_sentences": [4000, 4200, 4145],
+//!   "sentences": 12345,
+//!   "tokens": 456789,
+//!   "schedule": {
+//!     "total_sentences": 52000,
+//!     "per_epoch_pairs": 812345.25,
+//!     "per_epoch_pairs_bits": "4741671816371830784",
+//!     "window": 5,
+//!     "subsample_t": 0.0001,
+//!     "subsample_t_bits": "4547007122018943789"
+//!   }
+//! }
+//! ```
+//!
+//! * `complete: false` distinguishes "shard 7 not written **yet**" from
+//!   "shard 7 missing" — the integrity gap [`Corpus::shard_entries`]
+//!   surfaces is only an error once the manifest is complete.
+//! * `shard_sentences` carries per-shard sentence counts so any reader
+//!   can compute the global-index base of shard `i` (the prefix sum)
+//!   without opening the earlier files — global sentence indices are
+//!   assigned by shard-index concatenation exactly as
+//!   [`crate::coordinator::mapper::ShardFileSource`] assigns them over a
+//!   finished directory.
+//! * The optional `schedule` block is written by an overlapped ingest
+//!   **before pass 2 starts** (after a dedicated schedule pass over the
+//!   encoded stream): the total sentence count and the exact
+//!   [`crate::sgns::schedule::PairEstimator`] per-epoch sum, f64 bits
+//!   preserved via the `_bits` fields. Because that estimator is a plain
+//!   sequential sum in sentence order, the value is **bitwise identical**
+//!   to what a worker would compute by streaming the finished shards —
+//!   which is what lets a worker start gradient updates on `shard_0.bin`
+//!   while ingest is still writing `shard_40.bin`, and still finish
+//!   bitwise identical to a back-to-back run.
+//!
+//! ## The feed
+//!
+//! [`ShardFeed`] is a [`RoundSource`] over a (possibly still growing)
+//! shard directory: it yields shard `i`'s sentences as soon as the
+//! manifest lists shard `i`, polls while the next index is unpublished
+//! (invoking an optional wait hook each poll — the training worker
+//! beacons a `waiting` phase from it so the supervisor sees liveness),
+//! and terminates when the manifest is complete and every listed shard
+//! has been streamed. Mid-stream errors latch like `ShardFileSource`'s
+//! (`RoundSource` iterators cannot carry errors); callers must check
+//! [`ShardFeed::take_error`] after the run.
+
+use crate::exec::mapreduce::RoundSource;
+use crate::text::corpus::Corpus;
+use crate::util::json::{arr, num, obj, s, Json};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "shards.json";
+/// Staging name for the atomic manifest rewrite.
+pub const MANIFEST_TMP_FILE: &str = "shards.json.tmp";
+const MANIFEST_VERSION: usize = 1;
+
+/// The lr-schedule inputs an overlapped ingest publishes ahead of the
+/// shards: everything a training worker needs *before its first gradient*
+/// that normally requires a pass over the finished corpus.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleBlock {
+    /// total sentences pass 2 will write (the divider's corpus length)
+    pub total_sentences: u64,
+    /// exact `PairEstimator::per_epoch()` over the encoded stream
+    pub per_epoch_pairs: f64,
+    /// the SGNS window the estimate was computed under
+    pub window: usize,
+    /// the subsampling threshold the estimate was computed under
+    pub subsample_t: f64,
+}
+
+impl ScheduleBlock {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("total_sentences", num(self.total_sentences as f64)),
+            ("per_epoch_pairs", num(self.per_epoch_pairs)),
+            (
+                "per_epoch_pairs_bits",
+                s(&self.per_epoch_pairs.to_bits().to_string()),
+            ),
+            ("window", num(self.window as f64)),
+            ("subsample_t", num(self.subsample_t)),
+            ("subsample_t_bits", s(&self.subsample_t.to_bits().to_string())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let bits_f64 = |key: &str| -> Result<f64, String> {
+            let text = v
+                .get(key)
+                .as_str()
+                .ok_or_else(|| format!("schedule block lacks {key}"))?;
+            text.parse::<u64>()
+                .map(f64::from_bits)
+                .map_err(|_| format!("schedule {key} {text:?} is not a u64 bit pattern"))
+        };
+        Ok(Self {
+            total_sentences: v
+                .get("total_sentences")
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .ok_or("schedule block lacks total_sentences")? as u64,
+            per_epoch_pairs: bits_f64("per_epoch_pairs_bits")?,
+            window: v
+                .get("window")
+                .as_usize()
+                .ok_or("schedule block lacks window")?,
+            subsample_t: bits_f64("subsample_t_bits")?,
+        })
+    }
+}
+
+/// The `shards.json` manifest: what ingest has published so far.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardManifest {
+    /// set (last) once pass 2 has published every shard
+    pub complete: bool,
+    /// sentences in each published shard, in shard-index order
+    pub shard_sentences: Vec<u64>,
+    /// kept tokens across all published shards
+    pub tokens: u64,
+    /// lr-schedule inputs, present only for an overlapped ingest
+    pub schedule: Option<ScheduleBlock>,
+}
+
+impl ShardManifest {
+    /// Shards published so far.
+    pub fn num_shards(&self) -> usize {
+        self.shard_sentences.len()
+    }
+
+    /// Sentences across all published shards.
+    pub fn total_sentences(&self) -> u64 {
+        self.shard_sentences.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("version", num(MANIFEST_VERSION as f64)),
+            ("complete", Json::Bool(self.complete)),
+            ("shards", num(self.num_shards() as f64)),
+            (
+                "shard_sentences",
+                arr(self.shard_sentences.iter().map(|&n| num(n as f64)).collect()),
+            ),
+            ("sentences", num(self.total_sentences() as f64)),
+            ("tokens", num(self.tokens as f64)),
+        ];
+        if let Some(sched) = &self.schedule {
+            fields.push(("schedule", sched.to_json()));
+        }
+        obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let version = v.get("version").as_usize().ok_or("manifest lacks version")?;
+        if version != MANIFEST_VERSION {
+            return Err(format!("unsupported manifest version {version}"));
+        }
+        let shard_sentences: Vec<u64> = v
+            .get("shard_sentences")
+            .as_arr()
+            .ok_or("manifest lacks shard_sentences")?
+            .iter()
+            .map(|j| {
+                j.as_f64()
+                    .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                    .map(|n| n as u64)
+                    .ok_or_else(|| format!("bad shard_sentences entry {j}"))
+            })
+            .collect::<Result<_, _>>()?;
+        let claimed = v.get("shards").as_usize().ok_or("manifest lacks shards")?;
+        if claimed != shard_sentences.len() {
+            return Err(format!(
+                "manifest claims {claimed} shards but lists {} sentence counts",
+                shard_sentences.len()
+            ));
+        }
+        let schedule = match v.get("schedule") {
+            Json::Null => None,
+            sched => Some(ScheduleBlock::from_json(sched)?),
+        };
+        Ok(Self {
+            complete: v.get("complete").as_bool().ok_or("manifest lacks complete")?,
+            shard_sentences,
+            tokens: v
+                .get("tokens")
+                .as_f64()
+                .filter(|n| *n >= 0.0 && n.fract() == 0.0)
+                .ok_or("manifest lacks tokens")? as u64,
+            schedule,
+        })
+    }
+
+    /// Read `dir/shards.json`. `Ok(None)` means the manifest does not
+    /// exist (yet) — a reader distinguishing "not written" from
+    /// "missing". A manifest that exists but does not parse is a hard
+    /// error: publication is atomic, so a torn manifest is impossible and
+    /// garbage means real corruption.
+    pub fn load(dir: &Path) -> Result<Option<Self>, String> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let v = Json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))?;
+        Self::from_json(&v).map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Atomically (re)write `dir/shards.json`: write the staging file,
+    /// rename into place. A reader observes either the previous manifest
+    /// or this one, never a prefix.
+    pub fn publish(&self, dir: &Path) -> Result<(), String> {
+        let tmp = dir.join(MANIFEST_TMP_FILE);
+        let path = dir.join(MANIFEST_FILE);
+        std::fs::write(&tmp, self.to_json().to_string_pretty())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path).map_err(|e| format!("publish {}: {e}", path.display()))
+    }
+}
+
+/// Poll cadence and progress deadline for a [`ShardFeed`] (and for
+/// [`wait_for_schedule`]).
+#[derive(Clone, Debug)]
+pub struct FeedOptions {
+    /// sleep between manifest polls while the next shard is unpublished
+    pub poll: Duration,
+    /// give up if the manifest makes **no progress** for this long — the
+    /// clock resets every time a new shard (or the complete flag)
+    /// appears, so a slow ingest is fine but a dead one is an error, not
+    /// a hang
+    pub timeout: Duration,
+}
+
+impl Default for FeedOptions {
+    fn default() -> Self {
+        Self {
+            poll: Duration::from_millis(25),
+            timeout: Duration::from_secs(300),
+        }
+    }
+}
+
+/// Counters a feed keeps about its own history, for tests and logs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FeedStats {
+    /// shards the manifest listed when the feed was opened — under
+    /// overlap this is how many shards existed "at training start"
+    pub shards_at_open: usize,
+    /// manifest polls that found the next shard still unpublished
+    pub waits: u64,
+}
+
+/// Called on every poll while the feed is blocked on an unpublished
+/// shard: `(shard index awaited, shards published so far)`. The training
+/// worker installs a hook that publishes a `waiting` beacon, keeping the
+/// supervisor's stall detector happy while ingest catches up.
+pub type WaitHook = Box<dyn Fn(usize, usize) + Send + Sync>;
+
+/// A [`RoundSource`] over a growing shard directory — see the module
+/// docs. Yields `(global sentence index, sentence)` exactly like
+/// `ShardFileSource` does over a finished directory, so Divider routing
+/// and per-sentence RNG are identical between the overlapped and
+/// sequential paths.
+pub struct ShardFeed {
+    dir: PathBuf,
+    opts: FeedOptions,
+    error: Mutex<Option<String>>,
+    wait_hook: Option<WaitHook>,
+    stats: Mutex<FeedStats>,
+}
+
+impl ShardFeed {
+    /// Open a feed over `dir`. The manifest must already exist (an
+    /// overlapped coordinator waits for the schedule block before
+    /// spawning workers, which implies the manifest); shards may not.
+    pub fn open(dir: &Path, opts: FeedOptions) -> Result<Self, String> {
+        let man = ShardManifest::load(dir)?.ok_or_else(|| {
+            format!(
+                "no {MANIFEST_FILE} in {} — not a published shard dir",
+                dir.display()
+            )
+        })?;
+        let feed = Self {
+            dir: dir.to_path_buf(),
+            opts,
+            error: Mutex::new(None),
+            wait_hook: None,
+            stats: Mutex::new(FeedStats {
+                shards_at_open: man.num_shards(),
+                waits: 0,
+            }),
+        };
+        Ok(feed)
+    }
+
+    /// Install the poll-time hook (see [`WaitHook`]).
+    pub fn set_wait_hook(&mut self, hook: WaitHook) {
+        self.wait_hook = Some(hook);
+    }
+
+    pub fn stats(&self) -> FeedStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Take the first streaming error latched during iteration, if any.
+    pub fn take_error(&self) -> Option<String> {
+        self.error.lock().unwrap().take()
+    }
+
+    fn latch_error(&self, msg: String) {
+        let mut slot = self.error.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    /// Block until the manifest lists shard `f` (or is complete with
+    /// fewer shards). Returns the refreshed manifest, or `None` after a
+    /// latched error / progress timeout.
+    fn wait_for_shard(&self, f: usize, mut man: ShardManifest) -> Option<ShardManifest> {
+        let mut last_progress = Instant::now();
+        let mut last_shards = man.num_shards();
+        loop {
+            if man.num_shards() > f || man.complete {
+                return Some(man);
+            }
+            if last_progress.elapsed() > self.opts.timeout {
+                self.latch_error(format!(
+                    "timed out after {:.0}s waiting for shard_{f}.bin in {} \
+                     ({} shards published, manifest not complete) — ingest dead?",
+                    self.opts.timeout.as_secs_f64(),
+                    self.dir.display(),
+                    man.num_shards()
+                ));
+                return None;
+            }
+            if let Some(hook) = &self.wait_hook {
+                hook(f, man.num_shards());
+            }
+            self.stats.lock().unwrap().waits += 1;
+            std::thread::sleep(self.opts.poll);
+            man = match ShardManifest::load(&self.dir) {
+                Ok(Some(m)) => m,
+                Ok(None) => {
+                    self.latch_error(format!(
+                        "{MANIFEST_FILE} vanished from {} mid-feed",
+                        self.dir.display()
+                    ));
+                    return None;
+                }
+                Err(e) => {
+                    self.latch_error(e);
+                    return None;
+                }
+            };
+            if man.num_shards() != last_shards || man.complete {
+                last_shards = man.num_shards();
+                last_progress = Instant::now();
+            }
+        }
+    }
+
+    /// Stream the published shard `f` (base = global index of its first
+    /// sentence), latching errors; cross-checks the header against the
+    /// manifest's sentence count.
+    fn stream_file(
+        &self,
+        f: usize,
+        base: usize,
+        expect_sentences: u64,
+    ) -> impl Iterator<Item = (usize, Vec<u32>)> + '_ {
+        let path = self.dir.join(format!("shard_{f}.bin"));
+        let mut reader = match Corpus::stream_shard(&path) {
+            Ok(r) => {
+                if reader_count_matches(&r, expect_sentences) {
+                    Some(r)
+                } else {
+                    self.latch_error(format!(
+                        "shard {} holds {} sentences but the manifest recorded {} — \
+                         shard dir inconsistent",
+                        path.display(),
+                        r.sentence_count(),
+                        expect_sentences
+                    ));
+                    None
+                }
+            }
+            Err(e) => {
+                self.latch_error(format!("open shard {}: {e}", path.display()));
+                None
+            }
+        };
+        let mut local = 0usize;
+        std::iter::from_fn(move || {
+            let r = reader.as_mut()?;
+            match r.next() {
+                Some(Ok(sentence)) => {
+                    let idx = base + local;
+                    local += 1;
+                    Some((idx, sentence))
+                }
+                Some(Err(e)) => {
+                    self.latch_error(format!("stream shard: {e}"));
+                    reader = None;
+                    None
+                }
+                None => None,
+            }
+        })
+    }
+}
+
+fn reader_count_matches(r: &crate::text::corpus::ShardReader, expect: u64) -> bool {
+    r.sentence_count() as u64 == expect
+}
+
+impl RoundSource for ShardFeed {
+    type Item = (usize, Vec<u32>);
+
+    /// Mapper `shard` of `num_shards` streams the shard files whose index
+    /// `≡ shard (mod num_shards)` — round-robin, because the total file
+    /// count is unknown while the directory is still growing. Global
+    /// sentence indices come from the manifest's per-shard counts, so
+    /// every mapper agrees on them without opening the files it skips.
+    fn shard(
+        &self,
+        _round: usize,
+        shard: usize,
+        num_shards: usize,
+    ) -> Box<dyn Iterator<Item = (usize, Vec<u32>)> + '_> {
+        let stride = num_shards.max(1);
+        let mine = shard;
+        let mut man = match ShardManifest::load(&self.dir) {
+            Ok(Some(m)) => Some(m),
+            Ok(None) => {
+                self.latch_error(format!(
+                    "{MANIFEST_FILE} vanished from {} mid-feed",
+                    self.dir.display()
+                ));
+                None
+            }
+            Err(e) => {
+                self.latch_error(e);
+                None
+            }
+        };
+        let mut f = 0usize; // next file index to visit
+        let mut base = 0usize; // global index of file f's first sentence
+        let mut current: Option<Box<dyn Iterator<Item = (usize, Vec<u32>)> + '_>> = None;
+        Box::new(std::iter::from_fn(move || loop {
+            if let Some(it) = current.as_mut() {
+                match it.next() {
+                    Some(item) => return Some(item),
+                    None => current = None,
+                }
+                continue;
+            }
+            let m = man.as_ref()?;
+            if f >= m.num_shards() {
+                if m.complete {
+                    return None; // every published shard streamed
+                }
+                man = self.wait_for_shard(f, man.take().unwrap());
+                continue;
+            }
+            let n = man.as_ref().unwrap().shard_sentences[f];
+            let this_base = base;
+            base += n as usize;
+            let this_f = f;
+            f += 1;
+            if this_f % stride == mine {
+                current = Some(Box::new(self.stream_file(this_f, this_base, n)));
+            }
+        }))
+    }
+}
+
+/// Poll `dir` until its manifest carries a schedule block (an overlapped
+/// ingest writes it after the vocabulary freeze, before pass 2), calling
+/// `on_poll` each round. The progress deadline follows
+/// [`FeedOptions::timeout`] semantics.
+pub fn wait_for_schedule(
+    dir: &Path,
+    opts: &FeedOptions,
+    mut on_poll: impl FnMut(),
+) -> Result<(ShardManifest, ScheduleBlock), String> {
+    let start = Instant::now();
+    loop {
+        if let Some(man) = ShardManifest::load(dir)? {
+            if let Some(sched) = man.schedule.clone() {
+                return Ok((man, sched));
+            }
+        }
+        if start.elapsed() > opts.timeout {
+            return Err(format!(
+                "timed out after {:.0}s waiting for a schedule block in {}/{MANIFEST_FILE} \
+                 — is an overlapped ingest actually running?",
+                opts.timeout.as_secs_f64(),
+                dir.display()
+            ));
+        }
+        on_poll();
+        std::thread::sleep(opts.poll);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dw2v_feed_test_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Publish `c` into `dir` the way an overlapped ingest does: per-shard
+    /// tmp→rename, manifest row after each shard, `complete` last.
+    fn publish_incrementally(c: &Corpus, dir: &Path, num_shards: usize) {
+        let mut man = ShardManifest::default();
+        for i in 0..num_shards {
+            let range = c.shard_range(i, num_shards);
+            let sub = Corpus::new(c.sentences[range].to_vec());
+            let tmp = dir.join(format!("shard_{i}.bin.tmp"));
+            sub.write_shard(&tmp).unwrap();
+            std::fs::rename(&tmp, dir.join(format!("shard_{i}.bin"))).unwrap();
+            man.tokens += sub.total_tokens();
+            man.shard_sentences.push(sub.len() as u64);
+            man.publish(dir).unwrap();
+        }
+        man.complete = true;
+        man.publish(dir).unwrap();
+    }
+
+    fn sample(n: usize) -> Corpus {
+        Corpus::new((0..n as u32).map(|i| vec![i, i + 1, i + 2]).collect())
+    }
+
+    #[test]
+    fn manifest_roundtrip_preserves_f64_bits() {
+        let dir = tmpdir("roundtrip");
+        let man = ShardManifest {
+            complete: false,
+            shard_sentences: vec![10, 0, 7],
+            tokens: 12345,
+            schedule: Some(ScheduleBlock {
+                total_sentences: 999,
+                // a value with a non-terminating decimal expansion: the
+                // display field would round, the bits field must not
+                per_epoch_pairs: 0.1f64 + 0.2f64,
+                window: 5,
+                subsample_t: 1e-4,
+            }),
+        };
+        man.publish(&dir).unwrap();
+        let back = ShardManifest::load(&dir).unwrap().expect("manifest exists");
+        assert_eq!(back, man);
+        let (a, b) = (
+            back.schedule.as_ref().unwrap().per_epoch_pairs,
+            man.schedule.as_ref().unwrap().per_epoch_pairs,
+        );
+        assert_eq!(a.to_bits(), b.to_bits(), "f64 bits must round-trip exactly");
+        assert!(!dir.join(MANIFEST_TMP_FILE).exists(), "publication is atomic");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_none_but_garbage_is_an_error() {
+        let dir = tmpdir("absent");
+        assert!(ShardManifest::load(&dir).unwrap().is_none());
+        std::fs::write(dir.join(MANIFEST_FILE), "{ torn").unwrap();
+        assert!(ShardManifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feed_over_complete_dir_matches_concatenated_indices() {
+        let dir = tmpdir("complete");
+        let c = sample(57);
+        publish_incrementally(&c, &dir, 5);
+        let feed = ShardFeed::open(&dir, FeedOptions::default()).unwrap();
+        let all: Vec<(usize, Vec<u32>)> = feed.shard(0, 0, 1).collect();
+        assert!(feed.take_error().is_none());
+        assert_eq!(all.len(), 57);
+        for (i, (idx, sent)) in all.iter().enumerate() {
+            assert_eq!(*idx, i, "global indices must be the shard concatenation");
+            assert_eq!(sent, &c.sentences[i]);
+        }
+        // round-robin partitioning over 3 mappers covers the same items
+        let mut union: Vec<(usize, Vec<u32>)> =
+            (0..3).flat_map(|m| feed.shard(0, m, 3)).collect();
+        union.sort_by_key(|(i, _)| *i);
+        assert_eq!(union, all);
+        assert!(feed.take_error().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feed_follows_a_growing_dir_and_never_sees_tmp_files() {
+        let dir = tmpdir("growing");
+        let c = sample(60);
+        let num_shards = 6;
+        // first two shards exist up front; a writer thread publishes the
+        // rest with delays, leaving a torn `.tmp` visible the whole time
+        let head = Corpus::new(c.sentences[..20].to_vec());
+        publish_incrementally(&head, &dir, 2);
+        let mut man = ShardManifest::load(&dir).unwrap().unwrap();
+        man.complete = false;
+        man.publish(&dir).unwrap();
+        std::fs::write(dir.join("shard_9.bin.tmp"), b"torn forever").unwrap();
+
+        let mut feed = ShardFeed::open(
+            &dir,
+            FeedOptions {
+                poll: Duration::from_millis(5),
+                timeout: Duration::from_secs(30),
+            },
+        )
+        .unwrap();
+        let waited = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let waited2 = std::sync::Arc::clone(&waited);
+        feed.set_wait_hook(Box::new(move |_f, _published| {
+            waited2.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        }));
+
+        let dir2 = dir.clone();
+        let tail: Vec<Vec<u32>> = c.sentences[20..].to_vec();
+        let writer = std::thread::spawn(move || {
+            let mut man = ShardManifest::load(&dir2).unwrap().unwrap();
+            for (k, chunk) in tail.chunks(10).enumerate() {
+                std::thread::sleep(Duration::from_millis(30));
+                let i = 2 + k;
+                let sub = Corpus::new(chunk.to_vec());
+                let tmp = dir2.join(format!("shard_{i}.bin.tmp"));
+                sub.write_shard(&tmp).unwrap();
+                std::fs::rename(&tmp, dir2.join(format!("shard_{i}.bin"))).unwrap();
+                man.tokens += sub.total_tokens();
+                man.shard_sentences.push(sub.len() as u64);
+                man.publish(&dir2).unwrap();
+            }
+            man.complete = true;
+            man.publish(&dir2).unwrap();
+        });
+
+        let all: Vec<(usize, Vec<u32>)> = feed.shard(0, 0, 1).collect();
+        writer.join().unwrap();
+        assert!(feed.take_error().is_none());
+        assert_eq!(all.len(), 60);
+        for (i, (idx, sent)) in all.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(sent, &c.sentences[i]);
+        }
+        let stats = feed.stats();
+        assert_eq!(stats.shards_at_open, 2, "feed opened before the dir finished");
+        assert!(stats.waits > 0, "feed must actually have waited");
+        assert!(
+            waited.load(std::sync::atomic::Ordering::Relaxed) > 0,
+            "wait hook must fire while blocked"
+        );
+        assert_eq!(ShardManifest::load(&dir).unwrap().unwrap().num_shards(), num_shards);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feed_times_out_when_ingest_dies() {
+        let dir = tmpdir("timeout");
+        let c = sample(20);
+        publish_incrementally(&c, &dir, 2);
+        // manifest stuck incomplete: the producer "died"
+        let mut man = ShardManifest::load(&dir).unwrap().unwrap();
+        man.complete = false;
+        man.publish(&dir).unwrap();
+        let feed = ShardFeed::open(
+            &dir,
+            FeedOptions {
+                poll: Duration::from_millis(5),
+                timeout: Duration::from_millis(60),
+            },
+        )
+        .unwrap();
+        let got: Vec<(usize, Vec<u32>)> = feed.shard(0, 0, 1).collect();
+        assert_eq!(got.len(), 20, "published shards still stream");
+        let err = feed.take_error().expect("timeout must latch an error");
+        assert!(err.contains("timed out"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn feed_detects_manifest_shard_disagreement() {
+        let dir = tmpdir("mismatch");
+        let c = sample(30);
+        publish_incrementally(&c, &dir, 3);
+        let mut man = ShardManifest::load(&dir).unwrap().unwrap();
+        man.shard_sentences[1] += 1; // lie about shard 1
+        man.publish(&dir).unwrap();
+        let feed = ShardFeed::open(&dir, FeedOptions::default()).unwrap();
+        let _: Vec<(usize, Vec<u32>)> = feed.shard(0, 0, 1).collect();
+        let err = feed.take_error().expect("mismatch must latch");
+        assert!(err.contains("manifest"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn wait_for_schedule_times_out_without_overlap_ingest() {
+        let dir = tmpdir("nosched");
+        let c = sample(10);
+        publish_incrementally(&c, &dir, 1); // manifest without a schedule
+        let opts = FeedOptions {
+            poll: Duration::from_millis(5),
+            timeout: Duration::from_millis(50),
+        };
+        let mut polls = 0u32;
+        let err = wait_for_schedule(&dir, &opts, || polls += 1).unwrap_err();
+        assert!(err.contains("schedule block"), "{err}");
+        assert!(polls > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

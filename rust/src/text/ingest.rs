@@ -20,14 +20,40 @@
 //! a bounded footprint. The resulting `shard_*.bin` + `vocab.tsv` layout
 //! is exactly what [`Corpus::read_sharded`] / the training pipeline
 //! consume (paper: HDFS splits → mappers).
+//!
+//! ## Shard publication and the overlap protocol
+//!
+//! Pass 2 publishes every spilled shard **atomically** — write
+//! `shard_<i>.bin.tmp`, rename to `shard_<i>.bin` — and after each rename
+//! atomically rewrites the [`super::feed::ShardManifest`] (`shards.json`:
+//! shards so far, per-shard sentence counts, token total, `complete`
+//! written last). A concurrent reader therefore never observes a
+//! half-written shard, and can distinguish "shard 7 not written yet" from
+//! "shard 7 missing". The manifest file format lives in [`super::feed`].
+//!
+//! [`ingest_file_overlapped`] additionally runs a **schedule pass**
+//! between the vocabulary freeze and pass 2: it re-streams the encoded
+//! sentence stream through a [`PairEstimator`] (no shard writes) and
+//! publishes `{total_sentences, per_epoch_pairs}` in the manifest's
+//! `schedule` block *before the first shard exists*. Because that
+//! estimator is a plain sequential f64 sum in sentence order, the
+//! published value is bitwise identical to what a training worker would
+//! compute by streaming the finished shards — which is what lets workers
+//! start their first gradient on `shard_0.bin` while ingest is still
+//! writing later shards, yet finish bitwise identical to a back-to-back
+//! run.
 
 use super::corpus::Corpus;
+use super::feed::{ScheduleBlock, ShardManifest};
 use super::tokenize::{split_sentences, tokenize};
 use super::vocab::{Vocab, VocabBuilder};
 use crate::exec::pool::parallel_map;
+use crate::sgns::config::SgnsConfig;
+use crate::sgns::schedule::PairEstimator;
 use std::fs::File;
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 /// Knobs for one ingestion run.
 #[derive(Clone, Debug)]
@@ -76,6 +102,8 @@ pub struct IngestStats {
     pub vocab_size: usize,
     pub shards: usize,
     pub pass1_secs: f64,
+    /// overlap mode only: wall clock of the schedule pass (else 0)
+    pub schedule_secs: f64,
     pub pass2_secs: f64,
 }
 
@@ -85,10 +113,11 @@ impl IngestStats {
         self.oov_tokens as f64 / self.raw_tokens.max(1) as f64
     }
 
-    /// End-to-end ingest throughput: file bytes over both passes' wall
-    /// clock.
+    /// End-to-end ingest throughput: file bytes over every pass's wall
+    /// clock (including the overlap-mode schedule pass, when run).
     pub fn bytes_per_sec(&self) -> f64 {
-        self.bytes as f64 / (self.pass1_secs + self.pass2_secs).max(1e-9)
+        self.bytes as f64
+            / (self.pass1_secs + self.schedule_secs + self.pass2_secs).max(1e-9)
     }
 
     /// One-line human report.
@@ -251,12 +280,38 @@ fn encode_stream(
     Ok(())
 }
 
+/// Knobs for [`ingest_file_overlapped`]: the SGNS parameters the schedule
+/// pass must match (they change the expected-pair sum) plus a test hook.
+#[derive(Clone, Debug)]
+pub struct OverlapOptions {
+    /// SGNS max window the training run will use
+    pub window: usize,
+    /// SGNS frequent-word subsampling threshold the training run will use
+    pub subsample_t: f64,
+    /// test hook: sleep this long before publishing each shard, so e2e
+    /// tests can prove workers really trained while shards were still
+    /// being written (zero in production)
+    pub shard_delay: Duration,
+}
+
+impl OverlapOptions {
+    pub fn new(window: usize, subsample_t: f64) -> Self {
+        Self {
+            window,
+            subsample_t,
+            shard_delay: Duration::ZERO,
+        }
+    }
+}
+
 /// Full two-pass ingestion of a raw text file into `out_dir`: writes
 /// `shard_0.bin … shard_{n-1}.bin` (the [`Corpus`] binary format, readable
-/// with [`Corpus::read_sharded`]) and a `vocab.tsv` beside them. Stale
-/// `shard_*.bin` files from a previous run in the same directory are
-/// removed first — `read_sharded` globs the whole directory, so leftovers
-/// encoded against an older vocab would otherwise corrupt the corpus.
+/// with [`Corpus::read_sharded`]) and a `vocab.tsv` beside them, each
+/// shard published atomically with the manifest updated after every
+/// rename (see the module docs). Stale `shard_*.bin` files — plus `.tmp`
+/// debris and any previous manifest — are removed first — `read_sharded`
+/// globs the whole directory, so leftovers encoded against an older vocab
+/// would otherwise corrupt the corpus.
 ///
 /// Sentences that lose every token to the vocabulary filter are dropped;
 /// everything else is preserved in order, so the concatenated decoded
@@ -266,7 +321,7 @@ pub fn ingest_file(
     out_dir: &Path,
     cfg: &IngestConfig,
 ) -> Result<IngestOutput, String> {
-    ingest_file_impl(input, out_dir, cfg, None)
+    ingest_file_impl(input, out_dir, cfg, None, None)
 }
 
 /// [`ingest_file`] that additionally tees every encoded sentence into an
@@ -279,8 +334,22 @@ pub fn ingest_file_and_load(
     cfg: &IngestConfig,
 ) -> Result<(IngestOutput, Corpus), String> {
     let mut corpus = Corpus::default();
-    let out = ingest_file_impl(input, out_dir, cfg, Some(&mut corpus))?;
+    let out = ingest_file_impl(input, out_dir, cfg, Some(&mut corpus), None)?;
     Ok((out, corpus))
+}
+
+/// [`ingest_file`] for ingest/training overlap: runs the extra schedule
+/// pass after the vocabulary freeze and publishes its result in the
+/// manifest's `schedule` block **before** pass 2 writes any shard, so
+/// training workers following the directory via
+/// [`super::feed::ShardFeed`] can start the moment `shard_0.bin` lands.
+pub fn ingest_file_overlapped(
+    input: &Path,
+    out_dir: &Path,
+    cfg: &IngestConfig,
+    overlap: &OverlapOptions,
+) -> Result<IngestOutput, String> {
+    ingest_file_impl(input, out_dir, cfg, None, Some(overlap))
 }
 
 fn ingest_file_impl(
@@ -288,6 +357,7 @@ fn ingest_file_impl(
     out_dir: &Path,
     cfg: &IngestConfig,
     mut tee: Option<&mut Corpus>,
+    overlap: Option<&OverlapOptions>,
 ) -> Result<IngestOutput, String> {
     let mut stats = IngestStats::default();
 
@@ -307,27 +377,70 @@ fn ingest_file_impl(
     std::fs::write(out_dir.join("vocab.tsv"), vocab.to_tsv())
         .map_err(|e| format!("write vocab.tsv: {e}"))?;
 
+    let mut manifest = ShardManifest::default();
+    if let Some(ov) = overlap {
+        // schedule pass: same encode path as pass 2 (identical sentence
+        // stream), but the sink is a PairEstimator instead of a shard
+        // writer — published before the first shard so workers can start
+        let ts = std::time::Instant::now();
+        let mut scfg = SgnsConfig::default();
+        scfg.window = ov.window;
+        scfg.subsample_t = ov.subsample_t;
+        let mut est = PairEstimator::new(&vocab, &scfg);
+        let mut total_sentences = 0u64;
+        let mut sched_stats = IngestStats::default();
+        encode_stream(input, cfg, &vocab, &mut sched_stats, |s| {
+            est.add_sentence(&s);
+            total_sentences += 1;
+            Ok(())
+        })?;
+        manifest.schedule = Some(ScheduleBlock {
+            total_sentences,
+            per_epoch_pairs: est.per_epoch(),
+            window: ov.window,
+            subsample_t: ov.subsample_t,
+        });
+        manifest.publish(out_dir)?;
+        stats.schedule_secs = ts.elapsed().as_secs_f64();
+    }
+
     let t2 = std::time::Instant::now();
+    let delay = overlap.map(|ov| ov.shard_delay).unwrap_or(Duration::ZERO);
     let mut pending = Corpus::default();
     let mut pending_tokens = 0u64;
     let mut shard_paths: Vec<PathBuf> = Vec::new();
 
-    /// Write the pending buffer as the next shard; sentences then move
-    /// into the tee corpus (no per-sentence clone) or are dropped.
+    /// Publish the pending buffer as the next shard (tmp → rename, then
+    /// manifest row); sentences then move into the tee corpus (no
+    /// per-sentence clone) or are dropped.
     fn flush_shard(
         out_dir: &Path,
         pending: &mut Corpus,
         pending_tokens: &mut u64,
         shard_paths: &mut Vec<PathBuf>,
         tee: &mut Option<&mut Corpus>,
+        manifest: &mut ShardManifest,
+        delay: Duration,
     ) -> Result<(), String> {
         if pending.is_empty() {
             return Ok(());
         }
-        let path = out_dir.join(format!("shard_{}.bin", shard_paths.len()));
+        if !delay.is_zero() {
+            std::thread::sleep(delay);
+        }
+        let idx = shard_paths.len();
+        let path = out_dir.join(format!("shard_{idx}.bin"));
+        let tmp = out_dir.join(format!("shard_{idx}.bin.tmp"));
         pending
-            .write_shard(&path)
-            .map_err(|e| format!("write {}: {e}", path.display()))?;
+            .write_shard(&tmp)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+        // manifest row strictly after the rename: a listed shard is a
+        // readable shard (the ordering ShardFeed relies on)
+        manifest.shard_sentences.push(pending.len() as u64);
+        manifest.tokens += pending.total_tokens();
+        manifest.publish(out_dir)?;
         shard_paths.push(path);
         match tee.as_deref_mut() {
             Some(corpus) => corpus.sentences.append(&mut pending.sentences),
@@ -347,6 +460,8 @@ fn ingest_file_impl(
                 &mut pending_tokens,
                 &mut shard_paths,
                 &mut tee,
+                &mut manifest,
+                delay,
             )?;
         }
         Ok(())
@@ -357,7 +472,24 @@ fn ingest_file_impl(
         &mut pending_tokens,
         &mut shard_paths,
         &mut tee,
+        &mut manifest,
+        delay,
     )?;
+    if let Some(sched) = &manifest.schedule {
+        // the schedule pass and pass 2 walked the identical deterministic
+        // stream; a disagreement means the input changed mid-ingest
+        if sched.total_sentences != stats.written_sentences {
+            return Err(format!(
+                "ingest ({}): schedule pass saw {} sentences but pass 2 wrote {} — \
+                 input file changed during ingest?",
+                input.display(),
+                sched.total_sentences,
+                stats.written_sentences
+            ));
+        }
+    }
+    manifest.complete = true;
+    manifest.publish(out_dir)?;
     stats.pass2_secs = t2.elapsed().as_secs_f64();
     stats.shards = shard_paths.len();
 
@@ -703,6 +835,91 @@ mod tests {
     }
 
     #[test]
+    fn ingest_publishes_an_atomic_manifest() {
+        let dir = tmpdir("manifest");
+        let mut text = String::new();
+        for i in 0..40 {
+            text.push_str(&format!("m{} m{} m{}\n", i % 7, (i + 1) % 7, (i + 2) % 7));
+        }
+        let input = write_input(&dir, &text);
+        let shards = dir.join("shards");
+        let out = ingest_file(&input, &shards, &small_cfg()).unwrap();
+        let man = ShardManifest::load(&shards).unwrap().expect("manifest written");
+        assert!(man.complete, "complete flag written last, set at the end");
+        assert_eq!(man.num_shards(), out.stats.shards);
+        assert_eq!(man.total_sentences(), out.stats.written_sentences);
+        assert_eq!(man.tokens, out.stats.kept_tokens);
+        assert!(man.schedule.is_none(), "plain ingest has no schedule block");
+        // per-shard counts agree with the files themselves
+        for (i, &n) in man.shard_sentences.iter().enumerate() {
+            let c = Corpus::read_shard(&shards.join(format!("shard_{i}.bin"))).unwrap();
+            assert_eq!(c.len() as u64, n, "manifest count for shard {i}");
+        }
+        // atomic publication leaves no staging debris behind
+        for e in std::fs::read_dir(&shards).unwrap() {
+            let name = e.unwrap().file_name().to_string_lossy().to_string();
+            assert!(!name.ends_with(".tmp"), "staging debris left behind: {name}");
+        }
+        // re-ingesting a smaller input replaces the manifest wholesale
+        let small_input = dir.join("small.txt");
+        std::fs::write(&small_input, "m1 m2 m3\n").unwrap();
+        let second = ingest_file(&small_input, &shards, &small_cfg()).unwrap();
+        let man2 = ShardManifest::load(&shards).unwrap().unwrap();
+        assert_eq!(man2.num_shards(), second.stats.shards);
+        assert_eq!(man2.total_sentences(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The overlap contract: the schedule block published before pass 2
+    /// must be **bitwise** what a worker computes by streaming the
+    /// finished shards through its own PairEstimator — that equality is
+    /// what makes overlapped training identical to sequential training.
+    #[test]
+    fn overlapped_schedule_block_matches_a_post_hoc_shard_pass_bitwise() {
+        let dir = tmpdir("overlap_sched");
+        let mut rng = Pcg64::new(0x0E7A);
+        let mut text = String::new();
+        for _ in 0..200 {
+            let len = 1 + rng.gen_range_usize(10);
+            for _ in 0..len {
+                text.push_str(&format!("w{} ", rng.gen_range(30)));
+            }
+            text.push('\n');
+        }
+        let input = write_input(&dir, &text);
+        let shards = dir.join("shards");
+        let mut cfg = small_cfg();
+        cfg.min_count = 2;
+        let overlap = OverlapOptions::new(5, 1e-3);
+        let out = ingest_file_overlapped(&input, &shards, &cfg, &overlap).unwrap();
+        assert!(out.stats.schedule_secs > 0.0);
+        let man = ShardManifest::load(&shards).unwrap().unwrap();
+        let sched = man.schedule.as_ref().expect("overlap publishes a schedule");
+        assert_eq!(sched.total_sentences, out.stats.written_sentences);
+        assert_eq!(man.total_sentences(), sched.total_sentences);
+        // a worker's view: vocab from vocab.tsv, sentences from shards
+        let vocab = Vocab::from_tsv(
+            &std::fs::read_to_string(shards.join("vocab.tsv")).unwrap(),
+        )
+        .unwrap();
+        let corpus = Corpus::read_sharded(&shards).unwrap();
+        let mut scfg = SgnsConfig::default();
+        scfg.window = overlap.window;
+        scfg.subsample_t = overlap.subsample_t;
+        let mut est = PairEstimator::new(&vocab, &scfg);
+        for s in &corpus.sentences {
+            est.add_sentence(s);
+        }
+        assert_eq!(
+            est.per_epoch().to_bits(),
+            sched.per_epoch_pairs.to_bits(),
+            "published schedule must equal the streamed recomputation bitwise"
+        );
+        assert!(sched.per_epoch_pairs > 0.0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
     fn stats_summary_mentions_the_essentials() {
         let stats = IngestStats {
             bytes: 1_000_000,
@@ -715,6 +932,7 @@ mod tests {
             vocab_size: 7,
             shards: 2,
             pass1_secs: 0.5,
+            schedule_secs: 0.0,
             pass2_secs: 0.5,
         };
         let s = stats.summary();

@@ -1,7 +1,10 @@
 //! Text pipeline: tokenization, vocabulary, token-id corpus storage, and
 //! streaming raw-text ingestion ([`ingest`]: raw file → vocab + binary
-//! corpus shards, the paper's preprocess step).
+//! corpus shards, the paper's preprocess step). [`feed`] is the reader
+//! side of ingest/training overlap: an atomically-published shard
+//! manifest plus a `RoundSource` that follows a still-growing shard dir.
 pub mod corpus;
+pub mod feed;
 pub mod ingest;
 pub mod tokenize;
 pub mod vocab;

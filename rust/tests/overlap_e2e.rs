@@ -1,0 +1,224 @@
+//! End-to-end tests for ingest-while-training overlap: a raw text file
+//! is ingested into a shard directory **while** real `dw2v train-worker`
+//! OS processes train out of it in feed mode.
+//!
+//! The two headline properties:
+//!
+//! * **determinism** — the overlapped run merges bitwise identical to
+//!   ingest-then-train over the same text on the native backend (the
+//!   schedule block carries the exact totals a sequential worker would
+//!   compute itself, and the feed preserves global sentence order);
+//! * **overlap is real** — with the ingest throttled via
+//!   `OverlapOptions::shard_delay`, the workers' published
+//!   `feedstat_<s>.json` proves training started before the last shard
+//!   existed (`shards_at_train_start < shards_final`).
+
+use dw2v::coordinator::leader;
+use dw2v::coordinator::overlap::{run_overlapped, OverlapRunOptions};
+use dw2v::coordinator::procs::ProcsOptions;
+use dw2v::coordinator::supervisor::{run_supervised, SupervisorOptions};
+use dw2v::text::feed::{FeedOptions, ShardManifest};
+use dw2v::text::ingest::{ingest_file, IngestConfig, OverlapOptions};
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::json::Json;
+use dw2v::util::rng::Pcg64;
+use dw2v::world::World;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dw2v"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dw2v_overlap_e2e_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Write a Zipf-ish synthetic raw-text corpus: `sentences` lines of
+/// 5–14 words drawn from `vocab` ranks with a quadratic head skew.
+fn write_text_corpus(dir: &Path, sentences: usize, vocab: usize, seed: u64) -> PathBuf {
+    let path = dir.join("corpus.txt");
+    let mut out = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    let mut rng = Pcg64::new(seed);
+    for _ in 0..sentences {
+        let len = 5 + rng.gen_range_usize(10);
+        let mut line = String::new();
+        for i in 0..len {
+            if i > 0 {
+                line.push(' ');
+            }
+            let u = rng.gen_f64();
+            let id = ((u * u) * vocab as f64) as usize;
+            line.push_str(&format!("word{id}"));
+        }
+        line.push('\n');
+        out.write_all(line.as_bytes()).unwrap();
+    }
+    out.flush().unwrap();
+    path
+}
+
+/// Small-but-real experiment over raw text; `mappers = 1` for
+/// deterministic delivery order (same knob as the procs bitwise test).
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 50.0; // 2 sub-models
+    cfg.mappers = 1;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 2.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+/// Ingest knobs sized so the corpus splits into several shards — the
+/// overlap is meaningless with everything in shard 0.
+fn small_ingest(workers: usize) -> IngestConfig {
+    IngestConfig {
+        min_count: 2,
+        max_vocab: 100_000,
+        workers,
+        chunk_bytes: 64 << 10,
+        shard_tokens: 2_000,
+    }
+}
+
+fn overlap_run_opts(
+    cfg: &ExperimentConfig,
+    input: PathBuf,
+    ingest: IngestConfig,
+    shard_delay: Duration,
+) -> OverlapRunOptions {
+    let scfg = leader::sgns_config(cfg);
+    let mut overlap = OverlapOptions::new(scfg.window, scfg.subsample_t);
+    overlap.shard_delay = shard_delay;
+    OverlapRunOptions {
+        input,
+        ingest,
+        overlap,
+        eval: None,
+        feed: FeedOptions::default(),
+    }
+}
+
+#[test]
+fn overlapped_run_is_bitwise_identical_to_back_to_back() {
+    let cfg = small_cfg();
+    let dir = tdir("bitwise");
+    let input = write_text_corpus(&dir, 1400, 220, 0x0517);
+    let icfg = small_ingest(2);
+
+    // reference: ingest to completion, then train the fleet over the
+    // finished directory (snapshot mode — workers estimate their own
+    // pair totals from the full shard set)
+    let seq_dir = dir.join("seq_shards");
+    let seq_ingest = ingest_file(&input, &seq_dir, &icfg).expect("sequential ingest");
+    assert!(
+        seq_ingest.stats.shards >= 3,
+        "need several shards for the overlap to mean anything, got {}",
+        seq_ingest.stats.shards
+    );
+    let (seq_vocab, suite) =
+        World::vocab_and_suite_from_shards(&seq_dir, None).expect("coordinator inputs");
+    let sup = SupervisorOptions::default();
+    let seq_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: seq_dir.clone(),
+        out_dir: dir.join("seq_models"),
+        extra_env: Vec::new(),
+    };
+    let seq_rep = run_supervised(&cfg, &suite, &seq_opts, &sup).expect("sequential run");
+    assert_eq!(seq_rep.survivors(), 2);
+
+    // overlapped: same text, same config, shards throttled so they are
+    // still being published while the workers train
+    let ov_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.join("ov_shards"),
+        out_dir: dir.join("ov_models"),
+        extra_env: Vec::new(),
+    };
+    let ov = overlap_run_opts(&cfg, input, icfg, Duration::from_millis(60));
+    let ov_rep = run_overlapped(&cfg, &ov_opts, &sup, &ov).expect("overlapped run");
+    assert_eq!(ov_rep.sup.survivors(), 2);
+
+    // the ingest side saw the identical corpus …
+    assert_eq!(ov_rep.ingest.stats.shards, seq_ingest.stats.shards);
+    assert_eq!(ov_rep.ingest.stats.kept_tokens, seq_ingest.stats.kept_tokens);
+    assert_eq!(ov_rep.vocab.len(), seq_vocab.len());
+
+    // … and the merged consensus is bitwise identical to back-to-back
+    let a = &seq_rep.tail.merged.embedding;
+    let b = &ov_rep.sup.tail.merged.embedding;
+    assert_eq!(a.vocab, b.vocab);
+    assert_eq!(a.dim, b.dim);
+    assert_eq!(a.present, b.present, "presence masks must match");
+    assert_eq!(a.data.len(), b.data.len());
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "weight {i} differs between overlapped and back-to-back runs"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn throttled_ingest_proves_training_started_before_shards_finished() {
+    let cfg = small_cfg();
+    let dir = tdir("throttle");
+    let input = write_text_corpus(&dir, 1000, 180, 0x0907);
+    let icfg = small_ingest(2);
+
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.join("shards"),
+        out_dir: dir.join("models"),
+        extra_env: Vec::new(),
+    };
+    let sup = SupervisorOptions::default();
+    // 200 ms per shard: several shards' worth of publication still ahead
+    // by the time the workers' feeds open
+    let ov = overlap_run_opts(&cfg, input, icfg, Duration::from_millis(200));
+    let rep = run_overlapped(&cfg, &opts, &sup, &ov).expect("overlapped run");
+    assert_eq!(rep.sup.survivors(), 2);
+
+    let man = ShardManifest::load(&opts.shard_dir)
+        .expect("manifest readable")
+        .expect("manifest exists");
+    assert!(man.complete, "ingest must have finished");
+    let final_shards = man.num_shards();
+    assert!(final_shards >= 3, "got only {final_shards} shards");
+
+    // every worker published its feed stats; at least one demonstrably
+    // opened its feed before the ingest was done
+    let mut overlapped = false;
+    for s in 0..2usize {
+        let path = opts.out_dir.join(format!("feedstat_{s}.json"));
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+        let stat = Json::parse(&text).expect("feedstat parses");
+        let at_start = stat.get("shards_at_train_start").as_usize().unwrap();
+        let at_end = stat.get("shards_final").as_usize().unwrap();
+        assert_eq!(at_end, final_shards, "feedstat_{s} final count");
+        if at_start < at_end {
+            overlapped = true;
+        }
+    }
+    assert!(
+        overlapped,
+        "no worker saw a growing shard dir — the throttle failed to overlap \
+         ingest with training"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
