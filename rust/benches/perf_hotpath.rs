@@ -14,7 +14,7 @@
 //! a build with `--features xla`; without either they are skipped so the
 //! CPU rows still land in `bench_results/perf_hotpath.json`.
 
-use dw2v::bench_util::{time_it, Table};
+use dw2v::bench_util::{append_bench_trajectory, time_it, Table};
 use dw2v::gen::corpus::{build_ground_truth, generate_corpus, vocab_of, GeneratorConfig};
 use dw2v::kernels;
 use dw2v::linalg::mat::Mat;
@@ -41,10 +41,13 @@ fn main() {
         &["metric", "value"],
     );
 
+    // headline number captured along the way for the trajectory row
+    let mut traj_hogwild_4t_mpairs = 0.0f64;
+
     // ---- L3: kernel dot product, scalar reference vs vectorized -------------
     // d=300 is the realistic upper row length; black_box the inputs per call
     // so the loop-invariant dot cannot be hoisted.
-    {
+    let traj_dot_speedup = {
         let d = 300usize;
         let mut rk = Pcg64::new(11);
         let a: Vec<f32> = (0..d).map(|_| rk.gen_f32() - 0.5).collect();
@@ -81,7 +84,8 @@ fn main() {
                 ("speedup", num(speedup)),
             ]),
         );
-    }
+        speedup
+    };
 
     // ---- L3: pair counter, contended fetch_add vs batched flush @ 4 threads --
     // the exact access patterns of the old and new Hogwild lr bookkeeping
@@ -172,6 +176,9 @@ fn main() {
                 }
                 black_box(emb.data.len());
             });
+            if threads == 4 {
+                traj_hogwild_4t_mpairs = best_pairs_per_s / 1e6;
+            }
             table.row(
                 &format!("hogwild pairs/s ({threads}t, d=64)"),
                 vec![
@@ -209,6 +216,7 @@ fn main() {
         }
         black_box(acc);
     });
+    let traj_alias_mdraws = n_draws as f64 / t_alias.min_secs / 1e6;
     table.row(
         "alias sampling (10k vocab)",
         vec![
@@ -262,6 +270,7 @@ fn main() {
         pairs_out = sink as u64;
         black_box(sink);
     });
+    let traj_batch_mpairs = pairs_out as f64 / t_batch.min_secs / 1e6;
     table.row(
         "batch assembly",
         vec![
@@ -299,7 +308,7 @@ fn main() {
     // ---- native backend: macro-batch dispatch throughput ---------------------
     // the CPU twin of the PJRT dispatch rows below — always runs, so every
     // machine gets a backend-dispatch baseline in the JSON
-    {
+    let traj_native_kpairs = {
         let be = NativeBackend::new(ModelShape::native(2000, 32, 64, 5, 4));
         let sh = be.shape().clone();
         let cap = sh.batch_capacity();
@@ -329,7 +338,8 @@ fn main() {
                 ("kpairs_per_s", num(pairs_per_s / 1e3)),
             ]),
         );
-    }
+        pairs_per_s / 1e3
+    };
 
     // ---- bridge + end-to-end PJRT sections (need artifacts + xla feature) ----
     match Manifest::load(std::path::Path::new("artifacts")) {
@@ -338,6 +348,19 @@ fn main() {
     }
 
     table.finish();
+
+    // longitudinal row in BENCH_perf_hotpath.json — the CPU headline
+    // numbers every machine produces (peak_rss_mb stamped automatically)
+    append_bench_trajectory(
+        "perf_hotpath",
+        obj(vec![
+            ("dot_speedup_d300", num(traj_dot_speedup)),
+            ("hogwild_4t_mpairs_per_s", num(traj_hogwild_4t_mpairs)),
+            ("batch_mpairs_per_s", num(traj_batch_mpairs)),
+            ("alias_mdraws_per_s", num(traj_alias_mdraws)),
+            ("native_dispatch_kpairs_per_s", num(traj_native_kpairs)),
+        ]),
+    );
 }
 
 /// Resolve + compile one artifact, or announce the skip once and bail.

@@ -7,7 +7,7 @@
 //! `DW2V_BENCH_SCALE=full` runs the larger vocabulary; the default small
 //! scale keeps the bench CI-smoke friendly (a few seconds).
 
-use dw2v::bench_util::{bench_scale, time_it, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, time_it, Table};
 use dw2v::embedding::Embedding;
 use dw2v::serve::{AnnIndex, AnnParams};
 use dw2v::util::json::{num, obj, s};
@@ -178,4 +178,19 @@ fn main() {
     );
 
     table.finish();
+
+    // longitudinal row: the headline qps/recall numbers, tracked across
+    // PRs in BENCH_serve_qps.json (peak_rss_mb is stamped automatically)
+    append_bench_trajectory(
+        "serve_qps",
+        obj(vec![
+            ("vocab", num(vocab as f64)),
+            ("dim", num(dim as f64)),
+            ("exact_qps", num(exact_qps)),
+            ("ann_qps", num(ann_qps)),
+            ("ann_recall_at_10", num(ann_recall)),
+            ("ann_int8_qps", num(annq_qps)),
+            ("ann_int8_recall_at_10", num(annq_recall)),
+        ]),
+    );
 }

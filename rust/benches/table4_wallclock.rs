@@ -97,6 +97,48 @@ fn main() {
         ],
         obj(vec![("system", s("hogwild")), ("train_secs", num(hog_stats.seconds))]),
     );
+    // telemetry overhead: the same Hogwild run with the metrics registry
+    // disabled (control) vs enabled (instrumented). The hot loop's only
+    // instrument cost is one relaxed bool load plus one extra fetch_add
+    // per COUNTER_FLUSH pairs per thread, so this delta prices the whole
+    // obs layer on the tightest loop in the repo — it should be < 2%.
+    {
+        let reg = dw2v::obs::metrics::global();
+        let was_on = reg.enabled();
+        let best = |on: bool| -> f64 {
+            reg.set_enabled(on);
+            let mut min_secs = f64::INFINITY;
+            for _ in 0..3 {
+                let (_, st) = hogwild::train(&world.corpus, &world.vocab, &scfg, 4, cfg.seed);
+                min_secs = min_secs.min(st.seconds);
+            }
+            min_secs
+        };
+        let off_secs = best(false);
+        let on_secs = best(true);
+        reg.set_enabled(was_on);
+        let overhead_pct = (on_secs / off_secs.max(1e-9) - 1.0) * 100.0;
+        table.row(
+            "telemetry overhead (hogwild 4t)",
+            vec![
+                format!("{on_secs:.2} vs {off_secs:.2}"),
+                format!("{overhead_pct:+.2}%"),
+                "-".into(),
+                "-".into(),
+                "1".into(),
+            ],
+            obj(vec![
+                ("system", s("telemetry_overhead")),
+                ("instrumented_secs", num(on_secs)),
+                ("uninstrumented_secs", num(off_secs)),
+                ("overhead_pct", num(overhead_pct)),
+            ]),
+        );
+        traj.push(("telemetry_overhead_pct", num(overhead_pct)));
+        if overhead_pct >= 2.0 {
+            println!("WARNING: telemetry overhead {overhead_pct:.2}% >= 2% budget");
+        }
+    }
     for executors in [8, 32] {
         let (_, st) =
             param_avg::train(&world.corpus, &world.vocab, &scfg, &backend, executors, cfg.seed)

@@ -175,9 +175,13 @@ pub fn append_bench_trajectory(name: &str, row: Json) {
         .duration_since(std::time::UNIX_EPOCH)
         .map(|d| d.as_secs() as f64)
         .unwrap_or(0.0);
+    let rss = peak_rss_mb();
     let stamped = match row {
         Json::Obj(mut map) => {
             map.insert("unix_secs".to_string(), num(unix_secs));
+            if let Some(mb) = rss {
+                map.insert("peak_rss_mb".to_string(), num(mb));
+            }
             Json::Obj(map)
         }
         other => obj(vec![("unix_secs", num(unix_secs)), ("row", other)]),
@@ -190,6 +194,29 @@ pub fn append_bench_trajectory(name: &str, row: Json) {
     match write {
         Ok(()) => println!("[trajectory {}]", path.display()),
         Err(e) => eprintln!("warn: could not persist {}: {e}", path.display()),
+    }
+}
+
+/// Peak resident-set size of this process in MB, from `/proc` (`VmHWM`,
+/// the high-water mark — monotone over the process lifetime, so a bench
+/// that runs after a bigger one in the same process reads the bigger
+/// one's peak). `None` off Linux or when `/proc` is unreadable; callers
+/// (and the trajectory stamp) just omit the column then.
+pub fn peak_rss_mb() -> Option<f64> {
+    #[cfg(target_os = "linux")]
+    {
+        let status = std::fs::read_to_string("/proc/self/status").ok()?;
+        let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+        let kb: f64 = line
+            .split_whitespace()
+            .nth(1)?
+            .parse()
+            .ok()?;
+        Some(kb / 1024.0)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
     }
 }
 
@@ -232,6 +259,11 @@ mod tests {
         assert!(
             rows[1].get("unix_secs").as_f64().is_some(),
             "rows are timestamped"
+        );
+        #[cfg(target_os = "linux")]
+        assert!(
+            rows[1].get("peak_rss_mb").as_f64().unwrap_or(0.0) > 0.0,
+            "linux rows carry the peak-RSS column"
         );
 
         // a torn/garbage file starts a fresh series instead of failing

@@ -216,6 +216,12 @@ pub fn merge_and_eval(
     let timer = Timer::start("eval phase");
     let scores = evaluate_suite(&merged.embedding, suite, cfg.seed);
     let eval_secs = timer.stop_quiet();
+    let reg = crate::obs::metrics::global();
+    if reg.enabled() {
+        reg.gauge("merge_secs").set(merged.seconds);
+        reg.gauge("eval_secs").set(eval_secs);
+        reg.counter("merged_submodels").add(submodels.len() as u64);
+    }
     MergeEvalOutput {
         merged,
         scores,

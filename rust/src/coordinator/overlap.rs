@@ -29,6 +29,7 @@
 use super::procs::{self, ProcsOptions};
 use super::supervisor::{run_supervised, SupervisedReport, SupervisorOptions};
 use crate::info;
+use crate::obs::journal::{self, u64s, Journal};
 use crate::text::feed::{self, FeedOptions};
 use crate::text::ingest::{ingest_file_overlapped, IngestConfig, IngestOutput, OverlapOptions};
 use crate::text::vocab::Vocab;
@@ -95,7 +96,23 @@ pub fn run_overlapped(
     // Everything below must not early-return before the join, or a failed
     // spawn would leave the ingest thread detached mid-write.
     let train = || -> Result<(Vocab, SupervisedReport), String> {
+        // the overlap journal lives in the shard dir (out_dir doesn't
+        // exist yet, and prepare_run sweeps stale events files from it);
+        // a fresh run replaces last run's file like the ingest journal does
+        let _ = std::fs::remove_file(
+            opts.shard_dir.join(journal::journal_file_name("overlap")),
+        );
+        let jrn = Journal::open(&opts.shard_dir, "overlap");
+        let wait_started = std::time::Instant::now();
         let (man, sched) = feed::wait_for_schedule(&opts.shard_dir, &ov.feed, || {})?;
+        jrn.event(
+            "schedule_ready",
+            vec![
+                ("wait_secs", crate::util::json::num(wait_started.elapsed().as_secs_f64())),
+                ("sentences", u64s(sched.total_sentences)),
+                ("shards_published", crate::util::json::num(man.num_shards() as f64)),
+            ],
+        );
         info!(
             "overlap: schedule ready ({} sentences, {} shards published) — spawning workers",
             sched.total_sentences,

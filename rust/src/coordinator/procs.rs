@@ -123,6 +123,7 @@ use crate::embedding::{
 use crate::exec::mapreduce::{MapReduce, Reducer, RoundSource};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
+use crate::obs::journal::{u64s, Journal};
 use crate::runtime::params::Metrics;
 use crate::runtime::{load_backend, Backend};
 use crate::sgns::schedule::PairEstimator;
@@ -383,6 +384,9 @@ fn write_checkpoint<B: Backend>(
 /// index, backend failure) is returned, which the CLI turns into a
 /// non-zero exit the coordinator records as a failed worker.
 pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), String> {
+    // stamp every log line of this process with its sub-model identity —
+    // a supervised fleet interleaves worker stderr on one terminal
+    crate::util::logging::set_role(&format!("worker s={}", spec.submodel));
     if let Ok(ms) = std::env::var("DW2V_WORKER_STARTUP_SLEEP_MS") {
         if let Ok(ms) = ms.parse::<u64>() {
             std::thread::sleep(std::time::Duration::from_millis(ms));
@@ -410,6 +414,14 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         beacon_interval,
     )));
     beacon.lock().unwrap().write_now("start", 0, 0, 0);
+    // per-worker event journal next to the artifacts; a respawned
+    // incarnation appends to the same file, so the run's full timeline
+    // (including the pre-crash epochs) survives in one place
+    let journal = Journal::open(&out_dir, &format!("worker_{}", spec.submodel));
+    journal.event(
+        "worker_start",
+        vec![("submodel", json::num(spec.submodel as f64))],
+    );
     let faults = ArmedFaults::new(fault_spec, out_dir.clone(), spec.submodel);
 
     // feed mode: ingest may still be running — its schedule block (and
@@ -489,6 +501,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     let per_epoch_pairs = match &schedule {
         Some(sched) => sched.per_epoch_pairs,
         None => {
+            let est_started = Instant::now();
             let mut est = PairEstimator::new(&vocab, &scfg);
             let mut seen = 0u64;
             for (_, sentence) in source.shard(0, 0, 1) {
@@ -501,6 +514,14 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             if let Some(e) = source.take_error() {
                 return Err(format!("estimation pass failed: {e}"));
             }
+            journal.event(
+                "estimate_done",
+                vec![
+                    ("submodel", json::num(spec.submodel as f64)),
+                    ("secs", json::num(est_started.elapsed().as_secs_f64())),
+                    ("sentences", u64s(seen)),
+                ],
+            );
             est.per_epoch()
         }
     };
@@ -601,6 +622,8 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     // be checkpointed at every epoch barrier
     for epoch in start_epoch..cfg.epochs {
         reducers[0].faults.maybe_stall(epoch);
+        let epoch_started = Instant::now();
+        let pairs_before = reducers[0].inner.trainer.pairs_emitted();
         mr.run_range(
             epoch..epoch + 1,
             &source,
@@ -613,7 +636,27 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         if let Some(e) = reducers[0].inner.error.take() {
             return Err(format!("trainer failed: {e}"));
         }
+        let epoch_secs = epoch_started.elapsed().as_secs_f64();
+        let epoch_pairs = reducers[0].inner.trainer.pairs_emitted() - pairs_before;
+        journal.event(
+            "epoch_done",
+            vec![
+                ("submodel", json::num(spec.submodel as f64)),
+                ("epoch", json::num(epoch as f64)),
+                ("secs", json::num(epoch_secs)),
+                ("pairs", u64s(epoch_pairs)),
+                (
+                    "pairs_per_s",
+                    json::num(if epoch_secs > 0.0 {
+                        epoch_pairs as f64 / epoch_secs
+                    } else {
+                        0.0
+                    }),
+                ),
+            ],
+        );
         if epoch + 1 < cfg.epochs {
+            let ck_started = Instant::now();
             write_checkpoint(
                 cfg,
                 spec,
@@ -623,6 +666,14 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
                 epoch + 1,
                 &reducers[0],
             )?;
+            journal.event(
+                "checkpoint_written",
+                vec![
+                    ("submodel", json::num(spec.submodel as f64)),
+                    ("epoch", json::num((epoch + 1) as f64)),
+                    ("secs", json::num(ck_started.elapsed().as_secs_f64())),
+                ],
+            );
         }
     }
     let train_secs = timer.stop_quiet();
@@ -647,11 +698,21 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             ));
         }
         let st = f.stats();
+        journal.event(
+            "feed_wait",
+            vec![
+                ("submodel", json::num(spec.submodel as f64)),
+                ("waits", u64s(st.waits)),
+                ("wait_secs", json::num(st.wait_secs)),
+                ("shards_at_open", json::num(st.shards_at_open as f64)),
+            ],
+        );
         let body = json::obj(vec![
             ("submodel", json::num(spec.submodel as f64)),
             ("shards_at_train_start", json::num(st.shards_at_open as f64)),
             ("shards_final", json::num(man.num_shards() as f64)),
             ("waits", json::s(&st.waits.to_string())),
+            ("wait_secs", json::num(st.wait_secs)),
         ])
         .to_string_pretty();
         let path = out_dir.join(format!("feedstat_{}.json", spec.submodel));
@@ -717,6 +778,20 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     // the artifact supersedes the checkpoint; leaving it behind would only
     // confuse the stale-file cleanup of the next run
     let _ = std::fs::remove_file(&ckpt);
+    journal.event(
+        "artifact_published",
+        vec![
+            ("submodel", json::num(spec.submodel as f64)),
+            ("pairs", u64s(pairs)),
+        ],
+    );
+    journal.event(
+        "worker_done",
+        vec![
+            ("submodel", json::num(spec.submodel as f64)),
+            ("secs", json::num(train_secs)),
+        ],
+    );
     beacon.lock().unwrap().write_now("done", cfg.epochs, sentences, pairs);
     info!(
         "worker {}: done in {train_secs:.2}s — {sentences} sentences, {pairs} pairs, artifact {}",
@@ -817,7 +892,8 @@ pub(crate) fn describe_status(status: &ExitStatus) -> String {
 
 /// Is `name` output of a previous run in the same artifact dir — a
 /// sub-model artifact/checkpoint/temp file, a worker beacon, a feed-mode
-/// statistics file, or a fault-injection marker?
+/// statistics file, an event journal, a rendered run report, or a
+/// fault-injection marker?
 fn is_stale_run_file(name: &str) -> bool {
     let sub = name.starts_with("submodel_")
         && (name.ends_with(".dwsm") || name.ends_with(".ckpt") || name.ends_with(".tmp"));
@@ -825,7 +901,10 @@ fn is_stale_run_file(name: &str) -> bool {
         && (name.ends_with(".json") || name.ends_with(".tmp"));
     let feedstat = name.starts_with("feedstat_")
         && (name.ends_with(".json") || name.ends_with(".tmp"));
-    sub || beacon || feedstat || name.starts_with("fault_")
+    let journal = name.starts_with("events_") && name.ends_with(".jsonl");
+    let report = name == crate::obs::report::REPORT_FILE
+        || name == crate::obs::report::REPORT_HTML_FILE;
+    sub || beacon || feedstat || journal || report || name.starts_with("fault_")
 }
 
 /// Delete leftovers of a previous run from `out_dir` (artifacts,
@@ -1323,6 +1402,10 @@ mod tests {
             "feedstat_2.json",
             "feedstat_2.json.tmp",
             "fault_1_crash.fired",
+            "events_coordinator.jsonl",
+            "events_worker_3.jsonl",
+            "run_report.json",
+            "run_report.html",
         ] {
             assert!(is_stale_run_file(stale), "should be stale: {stale}");
         }
@@ -1333,6 +1416,7 @@ mod tests {
             "merged.bin",
             "submodel_notes.txt",
             "beacon_0.log",
+            "events_notes.txt",
         ] {
             assert!(!is_stale_run_file(keep), "should be kept: {keep}");
         }

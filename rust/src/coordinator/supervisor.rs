@@ -29,6 +29,7 @@ use super::leader;
 use super::procs::{self, collect_artifact, ProcsOptions, WorkerFate, WorkerOutcome};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
+use crate::obs::journal::Journal;
 use crate::util::config::ExperimentConfig;
 use crate::util::json::{num, obj, s};
 use std::path::{Path, PathBuf};
@@ -442,6 +443,7 @@ fn register_failure(
     sup: &SupervisorOptions,
     stats: &mut SupervisorStats,
     started: Instant,
+    journal: &Journal,
 ) -> Option<String> {
     stats.failures_seen += 1;
     match sup.policy {
@@ -457,6 +459,15 @@ fn register_failure(
                 sup.max_retries,
                 backoff.as_secs_f64()
             );
+            journal.event(
+                "worker_backoff",
+                vec![
+                    ("submodel", num(slot.submodel as f64)),
+                    ("attempt", num(slot.retries_used as f64)),
+                    ("backoff_ms", num(backoff.as_millis() as f64)),
+                    ("why", s(&why)),
+                ],
+            );
             slot.state = SlotState::Backoff {
                 until: Instant::now() + backoff,
             };
@@ -469,6 +480,10 @@ fn register_failure(
                 why
             };
             info!("supervisor: worker {} abandoned — {why}", slot.submodel);
+            journal.event(
+                "worker_failed",
+                vec![("submodel", num(slot.submodel as f64)), ("why", s(&why))],
+            );
             slot.outcome = Some(WorkerOutcome {
                 submodel: slot.submodel,
                 secs: started.elapsed().as_secs_f64(),
@@ -502,6 +517,14 @@ pub fn run_supervised(
     sup: &SupervisorOptions,
 ) -> Result<SupervisedReport, String> {
     let (n, config_path) = procs::prepare_run(cfg, opts)?;
+    let journal = Journal::open(&opts.out_dir, "coordinator");
+    journal.event(
+        "run_start",
+        vec![
+            ("submodels", num(n as f64)),
+            ("policy", s(sup.policy.name())),
+        ],
+    );
     let beacon_env = vec![(
         "DW2V_BEACON_INTERVAL_MS".to_string(),
         sup.beacon_interval_ms.to_string(),
@@ -526,6 +549,7 @@ pub fn run_supervised(
                 return Err(e);
             }
         };
+        journal.event("worker_spawn", vec![("submodel", num(submodel as f64))]);
         slots.push(Slot {
             submodel,
             out: opts.out_dir.join(format!("submodel_{submodel}.dwsm")),
@@ -558,13 +582,21 @@ pub fn run_supervised(
                                     "supervisor: respawned worker {} (retry {}/{})",
                                     slot.submodel, slot.retries_used, sup.max_retries
                                 );
+                                journal.event(
+                                    "worker_respawn",
+                                    vec![
+                                        ("submodel", num(slot.submodel as f64)),
+                                        ("attempt", num(slot.retries_used as f64)),
+                                    ],
+                                );
                                 slot.last_beacon.clear();
                                 slot.last_progress = Instant::now();
                                 slot.state = SlotState::Running(child);
                             }
                             Err(e) => {
-                                fail_fast =
-                                    register_failure(slot, e, sup, &mut stats, started);
+                                fail_fast = register_failure(
+                                    slot, e, sup, &mut stats, started, &journal,
+                                );
                             }
                         }
                     }
@@ -580,6 +612,13 @@ pub fn run_supervised(
                         if status.success() {
                             match collect_artifact(&slot.out, slot.submodel, cfg.seed, n) {
                                 Ok(artifact) => {
+                                    journal.event(
+                                        "worker_exit",
+                                        vec![
+                                            ("submodel", num(slot.submodel as f64)),
+                                            ("secs", num(secs)),
+                                        ],
+                                    );
                                     slot.outcome = Some(WorkerOutcome {
                                         submodel: slot.submodel,
                                         secs,
@@ -593,13 +632,30 @@ pub fn run_supervised(
                                     // retried worker republishes, a degraded
                                     // one must leave nothing collectible
                                     let _ = std::fs::remove_file(&slot.out);
-                                    fail_fast =
-                                        register_failure(slot, why, sup, &mut stats, started);
+                                    journal.event(
+                                        "worker_crash",
+                                        vec![
+                                            ("submodel", num(slot.submodel as f64)),
+                                            ("why", s(&why)),
+                                        ],
+                                    );
+                                    fail_fast = register_failure(
+                                        slot, why, sup, &mut stats, started, &journal,
+                                    );
                                 }
                             }
                         } else {
                             let why = procs::describe_status(&status);
-                            fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                            journal.event(
+                                "worker_crash",
+                                vec![
+                                    ("submodel", num(slot.submodel as f64)),
+                                    ("why", s(&why)),
+                                ],
+                            );
+                            fail_fast = register_failure(
+                                slot, why, sup, &mut stats, started, &journal,
+                            );
                         }
                     }
                     Ok(None) => {
@@ -620,14 +676,28 @@ pub fn run_supervised(
                                 "supervisor: worker {} {why} — killing it",
                                 slot.submodel
                             );
+                            journal.event(
+                                "stall_detected",
+                                vec![
+                                    ("submodel", num(slot.submodel as f64)),
+                                    (
+                                        "silent_secs",
+                                        num(slot.last_progress.elapsed().as_secs_f64()),
+                                    ),
+                                ],
+                            );
                             let _ = child.kill();
                             let _ = child.wait();
-                            fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                            fail_fast = register_failure(
+                                slot, why, sup, &mut stats, started, &journal,
+                            );
                         }
                     }
                     Err(e) => {
                         let why = format!("wait failed: {e}");
-                        fail_fast = register_failure(slot, why, sup, &mut stats, started);
+                        fail_fast = register_failure(
+                            slot, why, sup, &mut stats, started, &journal,
+                        );
                     }
                 },
             }
@@ -637,6 +707,7 @@ pub fn run_supervised(
         }
         if let Some(reason) = fail_fast {
             kill_remaining(&mut slots);
+            journal.event("run_aborted", vec![("why", s(&reason))]);
             return Err(format!("fail-fast: {reason}"));
         }
         if slots.iter().all(|s| s.outcome.is_some()) {
@@ -656,7 +727,25 @@ pub fn run_supervised(
             stats.failures_seen, stats.stalls_detected, stats.respawns
         );
     }
+    journal.event(
+        "fleet_done",
+        vec![
+            ("secs", num(train_secs)),
+            ("respawns", num(stats.respawns as f64)),
+            ("stalls", num(stats.stalls_detected as f64)),
+            ("failures", num(stats.failures_seen as f64)),
+        ],
+    );
     let tail = procs::merge_survivor_tail(cfg, suite, &mut outcomes)?;
+    journal.event(
+        "merge_done",
+        vec![("secs", num(tail.merged.seconds))],
+    );
+    journal.event("eval_done", vec![("secs", num(tail.eval_secs))]);
+    journal.event(
+        "metrics",
+        vec![("snapshot", crate::obs::metrics::global().snapshot())],
+    );
     Ok(SupervisedReport {
         outcomes,
         train_secs,

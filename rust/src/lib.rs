@@ -138,6 +138,26 @@
 //! [`eval::analogy::evaluate_indexed`] runs the analogy benchmark through
 //! the index so approximate accuracy can be compared with the exact scan.
 //!
+//! ## Observability
+//!
+//! Every phase of the pipeline reports into [`obs`]: processes append
+//! typed events to per-role JSONL journals (`events_<role>.jsonl`,
+//! single-write `O_APPEND` lines, torn-final-line tolerated on read —
+//! [`obs::journal`]), hot paths feed the lock-free metrics registry
+//! ([`obs::metrics`], counters/gauges/p50-p99 latency histograms with
+//! the same thread-local-flush batching as the SGNS pair counter, and a
+//! runtime kill switch so the bench harness can price instrumentation),
+//! and two CLI verbs consume the files: `dw2v status <run-dir>` tails
+//! the beacons into a live per-worker progress table, `dw2v report
+//! <run-dir>` replays journals + beacons + feedstats into
+//! `run_report.json` plus a self-contained HTML render
+//! ([`obs::report`]) — per-phase wallclock, per-worker
+//! crash/stall/respawn timeline, pairs/s curves, ingest throughput.
+//! Telemetry is strictly best-effort: an unopenable journal degrades to
+//! a no-op writer, and instrumentation never perturbs training
+//! (routing and RNG are untouched; the measured overhead rides in
+//! `table4_wallclock`'s instrumented-vs-clean row).
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions of every table and figure.
 
@@ -157,6 +177,7 @@ pub mod gen;
 pub mod kernels;
 pub mod linalg;
 pub mod merge;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod sgns;

@@ -131,7 +131,13 @@ use dw2v::util::logging::{self, Timer};
 use dw2v::world::{build_world, TextWorldOptions, World};
 
 fn main() {
-    logging::level_from_env();
+    if let Err(e) = logging::level_from_env() {
+        // a garbage DW2V_LOG means the user's filtering intent can't be
+        // honored — fail loudly up front instead of silently logging at
+        // the default level for the whole run
+        eprintln!("{e}");
+        std::process::exit(2);
+    }
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let code = match argv.first().map(|s| s.as_str()) {
         Some("pipeline") => cmd_pipeline(&argv[1..]),
@@ -142,6 +148,8 @@ fn main() {
         Some("kl") => cmd_kl(&argv[1..]),
         Some("gen-corpus") => cmd_gen_corpus(&argv[1..]),
         Some("serve") => cmd_serve(&argv[1..]),
+        Some("status") => cmd_status(&argv[1..]),
+        Some("report") => cmd_report(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
             eprintln!("{USAGE}");
@@ -173,6 +181,10 @@ subcommands:
   kl              figure-1 KL-divergence statistics for the dividers
   gen-corpus      generate (synthetic) or ingest (--text) + persist a corpus
   serve           ANN-indexed query engine over a saved embedding
+  status RUN_DIR  live per-worker progress table for a pipeline-procs run
+                  (tails the heartbeat beacons; --once for one snapshot)
+  report RUN_DIR  aggregate a run's event journals + beacons into
+                  run_report.json + a self-contained run_report.html
   artifacts       show the AOT artifact manifest
 
 corpus sources (pipeline / hogwild / mllib / kl / gen-corpus):
@@ -862,6 +874,65 @@ fn cmd_serve(argv: &[String]) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// `dw2v status RUN_DIR` — live per-worker progress table for a
+/// pipeline-procs run. Tails the heartbeat beacons (and the shard
+/// manifest, when the run dir sits inside a shard dir) and refreshes
+/// until every worker beacons `done`, or once with `--once`.
+fn cmd_status(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new("status", "live per-worker progress for a pipeline-procs run dir")
+        .flag("interval-ms", Some("1000"), "refresh cadence in milliseconds")
+        .bool_flag("once", "print one snapshot and exit instead of watching");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let dir = run_dir_arg(&args, &cmd)?;
+    let interval = std::time::Duration::from_millis(
+        args.get_u64("interval-ms").map_err(|e| e.to_string())?.unwrap_or(1000).max(50),
+    );
+    let once = args.get_bool("once");
+
+    // pairs/s needs two sightings of each beacon; remember the last one
+    let mut prev = std::collections::BTreeMap::new();
+    loop {
+        let (table, all_done) = dw2v::obs::report::render_status(&dir, &mut prev)?;
+        println!("{table}");
+        if all_done {
+            eprintln!("all workers done");
+            return Ok(());
+        }
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
+}
+
+/// `dw2v report RUN_DIR` — aggregate the run's event journals, beacons,
+/// feed stats and config into `run_report.json` + `run_report.html`.
+fn cmd_report(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "report",
+        "aggregate a run dir's journals + beacons into run_report.json/.html",
+    );
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let dir = run_dir_arg(&args, &cmd)?;
+    let path = dw2v::obs::report::write_report(&dir)?;
+    println!("{}", path.display());
+    println!("{}", dir.join(dw2v::obs::report::REPORT_HTML_FILE).display());
+    Ok(())
+}
+
+/// The one positional argument `status`/`report` take: the run directory
+/// (a pipeline-procs `--out-dir`, or a shard dir's `submodels/`).
+fn run_dir_arg(
+    args: &dw2v::util::cli::Args,
+    cmd: &Command,
+) -> Result<std::path::PathBuf, String> {
+    match args.positional() {
+        [dir] => Ok(std::path::PathBuf::from(dir)),
+        [] => Err(format!("missing RUN_DIR argument\n\n{}", cmd.usage())),
+        more => Err(format!("expected one RUN_DIR argument, got {}", more.len())),
+    }
 }
 
 fn cmd_artifacts(argv: &[String]) -> Result<(), String> {

@@ -1,0 +1,241 @@
+//! Per-process append-only event journal (`events_<role>.jsonl`).
+//!
+//! One journal file per process, one JSON object per line. Appends go
+//! through a single `write(2)` on an `O_APPEND` descriptor, which is
+//! atomic for sane line lengths on every filesystem we care about: lines
+//! from concurrent writers (there are none today — the file is
+//! per-process — but the contract is cheap) never interleave, and a
+//! crash mid-append can tear at most the **final** line. The reader
+//! ([`read_journal`]) therefore drops a malformed final line silently
+//! and treats a malformed line anywhere else as corruption.
+//!
+//! Journals are telemetry, not ledgers: every write is best-effort, and
+//! a journal that cannot be opened degrades to a no-op writer with one
+//! warning rather than failing the run it was supposed to observe.
+
+use crate::util::json::{obj, s, Json};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// File name of the journal for `role` inside a run directory.
+pub fn journal_file_name(role: &str) -> String {
+    format!("events_{role}.jsonl")
+}
+
+/// Milliseconds since the unix epoch — the timestamp every event carries.
+pub fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// A u64 as a decimal-string JSON value — the repo convention for
+/// counters that would lose precision as f64 above 2^53.
+pub fn u64s(n: u64) -> Json {
+    s(&n.to_string())
+}
+
+/// Read a u64 back from either encoding (decimal string or number).
+pub fn json_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(text) => text.parse::<u64>().ok(),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+        _ => None,
+    }
+}
+
+/// An append-only JSONL event writer for one process. Cheap to clone
+/// into worker closures is a non-goal — open once, share by reference.
+pub struct Journal {
+    role: String,
+    // None = disabled (open failed, or `Journal::disabled()`)
+    file: Option<Mutex<std::fs::File>>,
+}
+
+impl Journal {
+    /// Open (create + append) `dir/events_<role>.jsonl`. Never fails:
+    /// an unopenable journal becomes a no-op writer with one warning —
+    /// telemetry must not take down the run it observes.
+    pub fn open(dir: &Path, role: &str) -> Journal {
+        let path = dir.join(journal_file_name(role));
+        let file = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path);
+        match file {
+            Ok(f) => Journal {
+                role: role.to_string(),
+                file: Some(Mutex::new(f)),
+            },
+            Err(e) => {
+                eprintln!(
+                    "warn: journal {} did not open ({e}) — events will be dropped",
+                    path.display()
+                );
+                Journal::disabled_as(role)
+            }
+        }
+    }
+
+    /// A journal that drops every event (for paths with no run dir).
+    pub fn disabled() -> Journal {
+        Journal::disabled_as("disabled")
+    }
+
+    fn disabled_as(role: &str) -> Journal {
+        Journal {
+            role: role.to_string(),
+            file: None,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.file.is_some()
+    }
+
+    /// Append one event: `{"unix_ms": "...", "role": ..., "kind": ...,
+    /// ...fields}` as a single line, single write. Best-effort.
+    pub fn event(&self, kind: &str, fields: Vec<(&str, Json)>) {
+        let Some(file) = &self.file else { return };
+        let mut all = vec![
+            ("unix_ms", u64s(unix_ms())),
+            ("role", s(&self.role)),
+            ("kind", s(kind)),
+        ];
+        all.extend(fields);
+        let mut line = obj(all).to_string();
+        line.push('\n');
+        if let Ok(mut f) = file.lock() {
+            let _ = f.write_all(line.as_bytes());
+        }
+    }
+}
+
+/// Parse a journal file. A line that fails to parse is tolerated **only
+/// as the final line** (the torn-write crash case); anywhere else it is
+/// an error naming the line, because `O_APPEND` single-write lines
+/// cannot tear mid-file and garbage there means real corruption.
+pub fn read_journal(path: &Path) -> Result<Vec<Json>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("read {}: {e}", path.display()))?;
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    let mut events = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        match Json::parse(line) {
+            Ok(v) => events.push(v),
+            Err(e) if i + 1 == lines.len() => {
+                eprintln!(
+                    "warn: {} line {}: dropping torn final line ({e})",
+                    path.display(),
+                    i + 1
+                );
+            }
+            Err(e) => {
+                return Err(format!(
+                    "{} line {}: malformed mid-file event ({e}) — journal corrupt",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        }
+    }
+    Ok(events)
+}
+
+/// Enumerate the journals in a run directory: `(role, path)` for every
+/// `events_<role>.jsonl`, sorted by role for deterministic reports.
+pub fn list_journals(dir: &Path) -> Vec<(String, PathBuf)> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if let Some(role) = name
+            .strip_prefix("events_")
+            .and_then(|r| r.strip_suffix(".jsonl"))
+        {
+            out.push((role.to_string(), entry.path()));
+        }
+    }
+    out.sort();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dw2v_journal_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn events_round_trip_with_timestamps_and_role() {
+        let dir = tmpdir("roundtrip");
+        let j = Journal::open(&dir, "worker_3");
+        assert!(j.is_enabled());
+        j.event("epoch_done", vec![("epoch", num(1.0)), ("pairs", u64s(1 << 60))]);
+        j.event("worker_done", vec![]);
+        let events = read_journal(&dir.join(journal_file_name("worker_3"))).unwrap();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].get("kind").as_str(), Some("epoch_done"));
+        assert_eq!(events[0].get("role").as_str(), Some("worker_3"));
+        // u64 counters survive above 2^53 via the string encoding
+        assert_eq!(json_u64(events[0].get("pairs")), Some(1 << 60));
+        assert!(json_u64(events[0].get("unix_ms")).unwrap() > 0);
+        assert_eq!(events[1].get("kind").as_str(), Some("worker_done"));
+        let listed = list_journals(&dir);
+        assert_eq!(listed.len(), 1);
+        assert_eq!(listed[0].0, "worker_3");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_but_midfile_garbage_is_an_error() {
+        let dir = tmpdir("torn");
+        let path = dir.join(journal_file_name("coordinator"));
+        let j = Journal::open(&dir, "coordinator");
+        j.event("a", vec![]);
+        j.event("b", vec![]);
+        // crash mid-append: the final line is a torn prefix
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"unix_ms\": \"12");
+        std::fs::write(&path, &text).unwrap();
+        let events = read_journal(&path).unwrap();
+        assert_eq!(events.len(), 2, "torn final line must be dropped");
+        assert_eq!(events[1].get("kind").as_str(), Some("b"));
+
+        // the same garbage mid-file is corruption, not a crash artifact
+        let bad = "{\"k\": tor\n".to_string() + &text;
+        std::fs::write(&path, bad).unwrap();
+        let err = read_journal(&path).unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_journal_drops_events_silently() {
+        let j = Journal::disabled();
+        assert!(!j.is_enabled());
+        j.event("ignored", vec![("x", num(1.0))]); // must not panic
+    }
+
+    #[test]
+    fn empty_and_absent_journals() {
+        let dir = tmpdir("empty");
+        let path = dir.join(journal_file_name("x"));
+        assert!(read_journal(&path).is_err(), "absent file is an error");
+        std::fs::write(&path, "").unwrap();
+        assert_eq!(read_journal(&path).unwrap().len(), 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

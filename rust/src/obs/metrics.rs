@@ -1,0 +1,370 @@
+//! Lock-free metrics registry: named counters, gauges, and fixed-bucket
+//! latency histograms.
+//!
+//! Registration (name → handle) is the only locked path; the handles
+//! are `Arc`s whose updates are plain relaxed atomics, so hot loops
+//! resolve their instruments once and then pay one atomic op per
+//! update. The SGNS inner loop goes one cheaper still: it batches
+//! through [`LocalCounter`] (the PR-1 thread-local-flush pattern, same
+//! cadence as [`crate::sgns::hogwild::COUNTER_FLUSH`]) so the global
+//! counter sees one `fetch_add` per ten thousand pairs.
+//!
+//! The whole registry can be switched off at runtime
+//! ([`Registry::set_enabled`]); hot paths check [`Registry::enabled`]
+//! (one relaxed load) before touching their instruments, which is what
+//! lets the bench harness price instrumentation against a clean run.
+
+use crate::util::json::{num, s, Json};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing u64.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins f64 (stored as bits in an AtomicU64).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Histogram bucket upper bounds in seconds: a 1–2–5 ladder from 1 µs
+/// to 10 s. Fixed buckets keep `observe` allocation-free and make
+/// percentiles a cumulative scan; the price is bucket-granularity
+/// answers (a percentile is reported as its bucket's upper bound).
+pub const BUCKET_BOUNDS: [f64; 24] = [
+    1e-6, 2e-6, 5e-6, 1e-5, 2e-5, 5e-5, 1e-4, 2e-4, 5e-4, 1e-3, 2e-3, 5e-3, 1e-2, 2e-2, 5e-2,
+    1e-1, 2e-1, 5e-1, 1.0, 2.0, 5.0, 1e1, 2e1, 5e1,
+];
+
+/// A fixed-bucket latency histogram. One `fetch_add` per observation
+/// (plus one for the running sum).
+pub struct Histogram {
+    counts: Vec<AtomicU64>, // one per bound, plus a final overflow bucket
+    total: AtomicU64,
+    sum_micros: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            counts: (0..=BUCKET_BOUNDS.len()).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, secs: f64) {
+        let idx = BUCKET_BOUNDS
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(BUCKET_BOUNDS.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.total.fetch_add(1, Ordering::Relaxed);
+        let micros = (secs.max(0.0) * 1e6) as u64;
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            return None;
+        }
+        Some(self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6 / n as f64)
+    }
+
+    /// The upper bound of the bucket holding the `p`-th percentile
+    /// observation (`p` in `[0, 1]`). `None` when empty; a single
+    /// sample answers every percentile with its own bucket's bound.
+    /// Overflow observations report the last finite bound.
+    pub fn percentile(&self, p: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((p.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Some(*BUCKET_BOUNDS.get(i).unwrap_or(BUCKET_BOUNDS.last().unwrap()));
+            }
+        }
+        Some(*BUCKET_BOUNDS.last().unwrap())
+    }
+}
+
+/// The registry: named instruments, lock-free after registration.
+pub struct Registry {
+    enabled: AtomicBool,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self {
+            enabled: AtomicBool::new(true),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            histograms: Mutex::new(BTreeMap::new()),
+        }
+    }
+}
+
+impl Registry {
+    /// Runtime kill switch. Hot paths check [`Registry::enabled`]
+    /// before updating their (pre-resolved) instruments.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Resolve (or create) the named counter. Locked — call once
+    /// outside the hot loop and keep the `Arc`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_default(),
+        )
+    }
+
+    /// A JSON snapshot of every instrument: counters as decimal
+    /// strings (u64-precision convention), gauges as numbers,
+    /// histograms as `{count, mean_secs, p50_secs, p99_secs}`. This is
+    /// what gets embedded in journal rows and beacons.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), s(&c.get().to_string())))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| (k.clone(), num(g.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                let mut fields = BTreeMap::new();
+                fields.insert("count".to_string(), s(&h.count().to_string()));
+                if let Some(m) = h.mean_secs() {
+                    fields.insert("mean_secs".to_string(), num(m));
+                }
+                if let Some(p) = h.percentile(0.50) {
+                    fields.insert("p50_secs".to_string(), num(p));
+                }
+                if let Some(p) = h.percentile(0.99) {
+                    fields.insert("p99_secs".to_string(), num(p));
+                }
+                (k.clone(), Json::Obj(fields))
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("histograms".to_string(), Json::Obj(histograms));
+        Json::Obj(top)
+    }
+}
+
+/// The process-wide registry every subsystem reports into.
+pub fn global() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::default)
+}
+
+/// A thread-local batching wrapper over a shared [`Counter`] — the
+/// PR-1 flush pattern: accumulate locally, `fetch_add` once per
+/// `flush_every` increments (and on drop), so N threads hammering one
+/// counter contend once per batch instead of once per event.
+pub struct LocalCounter {
+    target: Arc<Counter>,
+    pending: u64,
+    flush_every: u64,
+}
+
+impl LocalCounter {
+    pub fn new(target: Arc<Counter>, flush_every: u64) -> Self {
+        Self {
+            target,
+            pending: 0,
+            flush_every: flush_every.max(1),
+        }
+    }
+
+    pub fn add(&mut self, n: u64) {
+        self.pending += n;
+        if self.pending >= self.flush_every {
+            self.flush();
+        }
+    }
+
+    pub fn flush(&mut self) {
+        if self.pending > 0 {
+            self.target.add(self.pending);
+            self.pending = 0;
+        }
+    }
+}
+
+impl Drop for LocalCounter {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_totals_are_exact_under_a_thread_pool() {
+        let reg = Registry::default();
+        let per_thread = 10_000u64;
+        let threads = 8;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let c = reg.counter("pool_total");
+                std::thread::spawn(move || {
+                    let mut local = LocalCounter::new(c, 64);
+                    for _ in 0..per_thread {
+                        local.add(1);
+                    }
+                    // drop flushes the remainder
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(reg.counter("pool_total").get(), per_thread * threads);
+    }
+
+    #[test]
+    fn histogram_percentile_edge_cases() {
+        let h = Histogram::default();
+        // empty: no percentile, no mean
+        assert_eq!(h.percentile(0.5), None);
+        assert_eq!(h.mean_secs(), None);
+        assert_eq!(h.count(), 0);
+
+        // single sample: every percentile is that sample's bucket bound
+        h.observe(3e-3);
+        assert_eq!(h.count(), 1);
+        let p50 = h.percentile(0.50).unwrap();
+        let p99 = h.percentile(0.99).unwrap();
+        assert_eq!(p50, p99, "one sample answers every percentile alike");
+        assert!(p50 >= 3e-3 && p50 <= 1e-2, "bucket bound brackets the sample: {p50}");
+
+        // overflow lands in the last bucket and reports the last bound
+        let h2 = Histogram::default();
+        h2.observe(1e9);
+        assert_eq!(h2.percentile(0.5), Some(*BUCKET_BOUNDS.last().unwrap()));
+    }
+
+    #[test]
+    fn percentiles_split_a_bimodal_distribution() {
+        let h = Histogram::default();
+        for _ in 0..98 {
+            h.observe(1.5e-6); // → 2 µs bucket
+        }
+        for _ in 0..2 {
+            h.observe(0.3); // → 0.5 s bucket
+        }
+        assert_eq!(h.percentile(0.50), Some(2e-6));
+        assert_eq!(h.percentile(0.99), Some(5e-1));
+        let mean = h.mean_secs().unwrap();
+        assert!(mean > 1e-3 && mean < 1e-2, "mean pulled up by the tail: {mean}");
+    }
+
+    #[test]
+    fn snapshot_serializes_all_instrument_kinds() {
+        let reg = Registry::default();
+        reg.counter("big").add((1u64 << 60) + 1);
+        reg.gauge("ratio").set(0.75);
+        reg.histogram("lat").observe(2e-4);
+        let snap = reg.snapshot();
+        assert_eq!(
+            snap.get("counters").get("big").as_str(),
+            Some(((1u64 << 60) + 1).to_string().as_str()),
+            "u64 counters must not round-trip through f64"
+        );
+        assert_eq!(snap.get("gauges").get("ratio").as_f64(), Some(0.75));
+        assert_eq!(snap.get("histograms").get("lat").get("count").as_str(), Some("1"));
+        assert!(snap.get("histograms").get("lat").get("p99_secs").as_f64().is_some());
+        // and the snapshot survives the repo's own JSON round trip
+        let back = Json::parse(&snap.to_string_pretty()).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn disable_is_a_runtime_toggle() {
+        let reg = Registry::default();
+        assert!(reg.enabled());
+        reg.set_enabled(false);
+        assert!(!reg.enabled());
+        reg.set_enabled(true);
+        assert!(reg.enabled());
+    }
+}

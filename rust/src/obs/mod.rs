@@ -1,0 +1,55 @@
+//! Run-wide observability: event journals, a metrics registry, and the
+//! cross-run report/status tooling built on top of them.
+//!
+//! The paper's zero-synchronization design means the only window into a
+//! running fleet is what the processes write to disk. This module makes
+//! that window load-bearing: every phase of the pipeline appends typed
+//! events to a per-process journal, hot paths feed a lock-free metrics
+//! registry, and two CLI verbs (`dw2v status`, `dw2v report`) turn the
+//! files into a live progress table and a post-hoc `run_report.json`.
+//!
+//! ## The on-disk contract
+//!
+//! A *run directory* (the `--out-dir` of a multi-process run, or the
+//! shard directory of an ingest) accumulates three kinds of telemetry
+//! files, all safe to read while the run is still writing them:
+//!
+//! * **`events_<role>.jsonl`** — one append-only journal per process
+//!   ([`journal::Journal`]). `<role>` identifies the writer:
+//!   `coordinator`, `worker_<s>`, `ingest`, `overlap`. Each line is one
+//!   self-contained JSON object `{"unix_ms": "...", "role": "...",
+//!   "kind": "...", ...}` written with a **single `write(2)` on an
+//!   `O_APPEND` descriptor**, so concurrent appends never interleave
+//!   within a line and a crash can tear at most the final line. Readers
+//!   therefore tolerate a torn *final* line (the crash case) but treat
+//!   a malformed line anywhere else as real corruption. u64 counters
+//!   ride as decimal strings, the repo-wide convention for values that
+//!   would lose precision as f64 above 2^53.
+//! * **`beacon_<s>.json`** — the liveness/progress heartbeat each
+//!   training worker rewrites atomically (tmp + rename) every beacon
+//!   interval; see [`crate::coordinator::supervisor`] for the field
+//!   contract. Journals are the *history*, beacons are the *now* —
+//!   `dw2v status` tails beacons, `dw2v report` replays journals.
+//! * **`run_report.json`** / **`run_report.html`** — the aggregate
+//!   [`report::write_report`] produces: per-phase wallclock, a
+//!   per-worker timeline (spawns, crashes, stalls, respawns,
+//!   completion), pairs/s curves, ingest throughput.
+//!
+//! Telemetry must never take down the run it observes: a journal that
+//! fails to open degrades to a no-op writer (with one warning), and all
+//! appends are best-effort.
+//!
+//! ## Metrics
+//!
+//! [`metrics::Registry`] holds named counters, gauges, and fixed-bucket
+//! latency histograms behind plain atomics. Registration (name lookup)
+//! is the only locked path; handles are `Arc`s the hot path updates
+//! lock-free. The SGNS inner loop pays one atomic add per
+//! [`crate::sgns::hogwild::COUNTER_FLUSH`] pairs — the PR-1
+//! thread-local-flush pattern — and the whole registry can be switched
+//! off at runtime ([`metrics::Registry::set_enabled`]) so the bench
+//! harness can price instrumentation against a clean run.
+
+pub mod journal;
+pub mod metrics;
+pub mod report;

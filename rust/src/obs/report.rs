@@ -1,0 +1,572 @@
+//! Cross-run aggregation: turn a run directory's telemetry files
+//! (journals + beacons + feedstats + config) into `run_report.json`, a
+//! self-contained HTML render, and the live `dw2v status` table.
+//!
+//! Everything here is read-side: it never writes into the files the run
+//! itself owns, and it tolerates a run that is still in flight (partial
+//! journals, missing beacons, torn final lines).
+
+use super::journal::{self, json_u64};
+use crate::util::json::{arr, num, obj, s, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// File name of the JSON report inside a run directory.
+pub const REPORT_FILE: &str = "run_report.json";
+/// File name of the HTML render next to it.
+pub const REPORT_HTML_FILE: &str = "run_report.html";
+
+/// Read every `beacon_<s>.json` in `dir`, sorted by sub-model. A beacon
+/// that fails to parse is skipped (it is being rewritten right now —
+/// the writer's tmp+rename makes that window tiny but real on NFS-ish
+/// filesystems; the next refresh will see it).
+pub fn read_beacons(dir: &Path) -> Vec<Json> {
+    let mut out: Vec<(u64, Json)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let is_beacon = name.starts_with("beacon_") && name.ends_with(".json");
+        if !is_beacon {
+            continue;
+        }
+        if let Ok(text) = std::fs::read_to_string(entry.path()) {
+            if let Ok(v) = Json::parse(&text) {
+                let sub = v.get("submodel").as_f64().unwrap_or(-1.0) as u64;
+                out.push((sub, v));
+            }
+        }
+    }
+    out.sort_by_key(|(sub, _)| *sub);
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
+fn read_feedstats(dir: &Path) -> Vec<Json> {
+    let mut out: Vec<(u64, Json)> = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return Vec::new();
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !(name.starts_with("feedstat_") && name.ends_with(".json")) {
+            continue;
+        }
+        if let Ok(text) = std::fs::read_to_string(entry.path()) {
+            if let Ok(v) = Json::parse(&text) {
+                let sub = v.get("submodel").as_f64().unwrap_or(-1.0) as u64;
+                out.push((sub, v));
+            }
+        }
+    }
+    out.sort_by_key(|(sub, _)| *sub);
+    out.into_iter().map(|(_, v)| v).collect()
+}
+
+/// Per-worker rollup accumulated from the journals + beacons.
+#[derive(Default)]
+struct WorkerRollup {
+    spawns: u64,
+    respawns: u64,
+    crashes: u64,
+    stalls: u64,
+    completed: bool,
+    failed: Option<String>,
+    epochs: Vec<Json>,
+    checkpoint_secs: f64,
+    last_phase: String,
+}
+
+fn event_submodel(ev: &Json) -> Option<usize> {
+    ev.get("submodel").as_usize()
+}
+
+/// Aggregate `run_dir` into the report JSON. Works on finished and
+/// in-flight runs alike; a directory with no telemetry at all is an
+/// error (wrong directory beats an empty report).
+pub fn build_report(run_dir: &Path) -> Result<Json, String> {
+    let mut journals = journal::list_journals(run_dir);
+    let beacons = read_beacons(run_dir);
+    if journals.is_empty() && beacons.is_empty() {
+        return Err(format!(
+            "{} holds no events_*.jsonl and no beacon_*.json — not a run directory?",
+            run_dir.display()
+        ));
+    }
+    // the ingest + overlap journals live in the shard dir; with the
+    // default `--out-dir <shard-dir>/submodels` layout that is the
+    // parent, so an overlapped run's report covers those phases too
+    for role in ["ingest", "overlap"] {
+        if journals.iter().any(|(r, _)| r == role) {
+            continue;
+        }
+        if let Some(parent) = run_dir.parent() {
+            let p = parent.join(journal::journal_file_name(role));
+            if p.is_file() {
+                journals.push((role.to_string(), p));
+            }
+        }
+    }
+
+    // replay every journal into one time-ordered event stream
+    let mut all_events: Vec<Json> = Vec::new();
+    for (_role, path) in &journals {
+        all_events.extend(read_journal_lenient(path)?);
+    }
+    all_events.sort_by_key(|ev| json_u64(ev.get("unix_ms")).unwrap_or(0));
+
+    let mut workers: BTreeMap<usize, WorkerRollup> = BTreeMap::new();
+    let mut phases: BTreeMap<String, f64> = BTreeMap::new();
+    let mut pairs_curve: Vec<Json> = Vec::new();
+    let mut ingest_summary = Json::Null;
+    let mut shard_publications = 0u64;
+    for ev in &all_events {
+        let kind = ev.get("kind").as_str().unwrap_or("");
+        let secs = ev.get("secs").as_f64().unwrap_or(0.0);
+        match kind {
+            "worker_spawn" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().spawns += 1;
+                }
+            }
+            "worker_respawn" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().respawns += 1;
+                }
+            }
+            "worker_crash" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().crashes += 1;
+                }
+            }
+            "stall_detected" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().stalls += 1;
+                }
+            }
+            "worker_failed" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().failed =
+                        Some(ev.get("why").as_str().unwrap_or("?").to_string());
+                }
+            }
+            "worker_exit" | "worker_done" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().completed = true;
+                }
+            }
+            "epoch_done" => {
+                if let Some(sub) = event_submodel(ev) {
+                    let w = workers.entry(sub).or_default();
+                    w.epochs.push(ev.clone());
+                    pairs_curve.push(obj(vec![
+                        ("submodel", num(sub as f64)),
+                        ("epoch", ev.get("epoch").clone()),
+                        ("pairs_per_s", ev.get("pairs_per_s").clone()),
+                        ("unix_ms", ev.get("unix_ms").clone()),
+                    ]));
+                }
+            }
+            "checkpoint_written" => {
+                if let Some(sub) = event_submodel(ev) {
+                    workers.entry(sub).or_default().checkpoint_secs += secs;
+                }
+            }
+            "fleet_done" => {
+                phases.insert("train_secs".to_string(), secs);
+            }
+            "merge_done" => {
+                phases.insert("merge_secs".to_string(), secs);
+            }
+            "eval_done" => {
+                phases.insert("eval_secs".to_string(), secs);
+            }
+            "pass1_done" => {
+                phases.insert("ingest_pass1_secs".to_string(), secs);
+            }
+            "schedule_done" => {
+                phases.insert("ingest_schedule_secs".to_string(), secs);
+            }
+            "pass2_done" => {
+                phases.insert("ingest_pass2_secs".to_string(), secs);
+            }
+            "shard_published" => shard_publications += 1,
+            "ingest_done" => ingest_summary = ev.clone(),
+            _ => {}
+        }
+    }
+
+    // beacons carry the freshest phase per worker (the "now" view)
+    for b in &beacons {
+        if let Some(sub) = b.get("submodel").as_usize() {
+            let w = workers.entry(sub).or_default();
+            w.last_phase = b.get("phase").as_str().unwrap_or("?").to_string();
+            if w.last_phase == "done" {
+                w.completed = true;
+            }
+        }
+    }
+
+    let worker_rows: Vec<Json> = workers
+        .iter()
+        .map(|(sub, w)| {
+            let mut fields = vec![
+                ("submodel", num(*sub as f64)),
+                ("spawns", num(w.spawns as f64)),
+                ("respawns", num(w.respawns as f64)),
+                ("crashes", num(w.crashes as f64)),
+                ("stalls", num(w.stalls as f64)),
+                ("completed", Json::Bool(w.completed)),
+                ("checkpoint_secs", num(w.checkpoint_secs)),
+                ("last_phase", s(&w.last_phase)),
+                ("epochs", arr(w.epochs.clone())),
+            ];
+            if let Some(why) = &w.failed {
+                fields.push(("failed", s(why)));
+            }
+            obj(fields)
+        })
+        .collect();
+
+    let config = std::fs::read_to_string(run_dir.join("config.json"))
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or(Json::Null);
+
+    let phase_rows = Json::Obj(
+        phases
+            .iter()
+            .map(|(k, v)| (k.clone(), num(*v)))
+            .collect::<BTreeMap<_, _>>(),
+    );
+
+    let mut ingest_fields = BTreeMap::new();
+    ingest_fields.insert("shard_publications".to_string(), num(shard_publications as f64));
+    ingest_fields.insert("summary".to_string(), ingest_summary);
+    Ok(obj(vec![
+        ("run_dir", s(&run_dir.display().to_string())),
+        ("generated_unix_ms", journal::u64s(journal::unix_ms())),
+        ("config", config),
+        ("phases", phase_rows),
+        ("workers", arr(worker_rows)),
+        ("pairs_per_s", arr(pairs_curve)),
+        ("ingest", Json::Obj(ingest_fields)),
+        ("feedstats", arr(read_feedstats(run_dir))),
+        ("beacons", arr(beacons)),
+        ("timeline", arr(all_events)),
+    ]))
+}
+
+/// Read a journal for reporting: a mid-file parse error in one journal
+/// degrades to an error naming the file (the caller surfaces it), but a
+/// *missing* journal is fine — in-flight runs grow them over time.
+fn read_journal_lenient(path: &Path) -> Result<Vec<Json>, String> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    journal::read_journal(path)
+}
+
+/// Build the report and write `run_report.json` + `run_report.html`
+/// into `run_dir` (atomically, tmp + rename). Returns the JSON path.
+pub fn write_report(run_dir: &Path) -> Result<PathBuf, String> {
+    let report = build_report(run_dir)?;
+    let path = run_dir.join(REPORT_FILE);
+    let tmp = run_dir.join(format!("{REPORT_FILE}.tmp"));
+    std::fs::write(&tmp, report.to_string_pretty())
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("publish {}: {e}", path.display()))?;
+    let html_path = run_dir.join(REPORT_HTML_FILE);
+    let html_tmp = run_dir.join(format!("{REPORT_HTML_FILE}.tmp"));
+    std::fs::write(&html_tmp, render_html(&report))
+        .map_err(|e| format!("write {}: {e}", html_tmp.display()))?;
+    std::fs::rename(&html_tmp, &html_path)
+        .map_err(|e| format!("publish {}: {e}", html_path.display()))?;
+    Ok(path)
+}
+
+fn esc(text: &str) -> String {
+    text.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// A self-contained HTML render of the report: inline CSS, no scripts,
+/// no external assets — openable from any file browser.
+pub fn render_html(report: &Json) -> String {
+    let mut h = String::new();
+    h.push_str(
+        "<!doctype html><html><head><meta charset=\"utf-8\">\
+         <title>dw2v run report</title><style>\
+         body{font-family:monospace;margin:2em;background:#fafafa;color:#222}\
+         table{border-collapse:collapse;margin:1em 0}\
+         th,td{border:1px solid #bbb;padding:4px 10px;text-align:left}\
+         th{background:#eee}h2{margin-top:1.5em}\
+         .bad{color:#a00;font-weight:bold}.ok{color:#070}\
+         </style></head><body>",
+    );
+    h.push_str(&format!(
+        "<h1>dw2v run report</h1><p>run dir: <code>{}</code></p>",
+        esc(report.get("run_dir").as_str().unwrap_or("?"))
+    ));
+
+    h.push_str("<h2>Phase wallclock</h2><table><tr><th>phase</th><th>seconds</th></tr>");
+    if let Some(phases) = report.get("phases").as_obj() {
+        for (k, v) in phases {
+            h.push_str(&format!(
+                "<tr><td>{}</td><td>{:.3}</td></tr>",
+                esc(k),
+                v.as_f64().unwrap_or(0.0)
+            ));
+        }
+    }
+    h.push_str("</table>");
+
+    h.push_str(
+        "<h2>Workers</h2><table><tr><th>sub-model</th><th>spawns</th><th>respawns</th>\
+         <th>crashes</th><th>stalls</th><th>checkpoint s</th><th>state</th></tr>",
+    );
+    for w in report.get("workers").as_arr().unwrap_or(&[]) {
+        let completed = w.get("completed").as_bool().unwrap_or(false);
+        let state = if let Some(why) = w.get("failed").as_str() {
+            format!("<span class=\"bad\">failed: {}</span>", esc(why))
+        } else if completed {
+            "<span class=\"ok\">completed</span>".to_string()
+        } else {
+            esc(w.get("last_phase").as_str().unwrap_or("running"))
+        };
+        h.push_str(&format!(
+            "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{:.3}</td><td>{}</td></tr>",
+            w.get("submodel").as_f64().unwrap_or(-1.0) as i64,
+            w.get("spawns").as_f64().unwrap_or(0.0) as u64,
+            w.get("respawns").as_f64().unwrap_or(0.0) as u64,
+            w.get("crashes").as_f64().unwrap_or(0.0) as u64,
+            w.get("stalls").as_f64().unwrap_or(0.0) as u64,
+            w.get("checkpoint_secs").as_f64().unwrap_or(0.0),
+            state
+        ));
+    }
+    h.push_str("</table>");
+
+    h.push_str(
+        "<h2>Throughput (pairs/s per epoch)</h2><table>\
+         <tr><th>sub-model</th><th>epoch</th><th>pairs/s</th></tr>",
+    );
+    for p in report.get("pairs_per_s").as_arr().unwrap_or(&[]) {
+        h.push_str(&format!(
+            "<tr><td>{}</td><td>{}</td><td>{:.0}</td></tr>",
+            p.get("submodel").as_f64().unwrap_or(-1.0) as i64,
+            p.get("epoch").as_f64().unwrap_or(-1.0) as i64,
+            p.get("pairs_per_s").as_f64().unwrap_or(0.0)
+        ));
+    }
+    h.push_str("</table>");
+
+    h.push_str(
+        "<h2>Timeline</h2><table><tr><th>unix ms</th><th>role</th><th>kind</th>\
+         <th>sub-model</th><th>secs</th></tr>",
+    );
+    for ev in report.get("timeline").as_arr().unwrap_or(&[]) {
+        let sub = ev
+            .get("submodel")
+            .as_usize()
+            .map(|v| v.to_string())
+            .unwrap_or_default();
+        let secs = ev
+            .get("secs")
+            .as_f64()
+            .map(|v| format!("{v:.3}"))
+            .unwrap_or_default();
+        h.push_str(&format!(
+            "<tr><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td></tr>",
+            json_u64(ev.get("unix_ms")).unwrap_or(0),
+            esc(ev.get("role").as_str().unwrap_or("?")),
+            esc(ev.get("kind").as_str().unwrap_or("?")),
+            sub,
+            secs
+        ));
+    }
+    h.push_str("</table></body></html>");
+    h
+}
+
+/// One refresh of the live `dw2v status` view: a per-worker progress
+/// table from the beacons in `run_dir`, plus the shard manifest (looked
+/// up in `run_dir`, then its parent — `--out-dir` defaults to
+/// `<shard-dir>/submodels`). `prev` carries `(pairs, unix_ms)` per
+/// sub-model from the previous refresh so a rate can be derived.
+/// Returns `(rendered table, all workers done)`.
+pub fn render_status(
+    run_dir: &Path,
+    prev: &mut BTreeMap<usize, (u64, u64)>,
+) -> Result<(String, bool), String> {
+    let beacons = read_beacons(run_dir);
+    if beacons.is_empty() {
+        return Err(format!(
+            "no beacon_*.json in {} — nothing to watch (yet?)",
+            run_dir.display()
+        ));
+    }
+    let manifest = crate::text::feed::ShardManifest::load(run_dir)
+        .ok()
+        .flatten()
+        .or_else(|| {
+            run_dir
+                .parent()
+                .and_then(|p| crate::text::feed::ShardManifest::load(p).ok().flatten())
+        });
+
+    let now = journal::unix_ms();
+    let mut out = String::new();
+    out.push_str(&format!("run: {}", run_dir.display()));
+    if let Some(man) = &manifest {
+        out.push_str(&format!(
+            "   shards: {}{}",
+            man.num_shards(),
+            if man.complete { " (complete)" } else { " (growing)" }
+        ));
+    }
+    out.push('\n');
+    out.push_str(&format!(
+        "{:>3}  {:<10} {:>6} {:>12} {:>14} {:>12} {:>8}\n",
+        "s", "phase", "epoch", "sentences", "pairs", "pairs/s", "age"
+    ));
+    let mut all_done = true;
+    for b in &beacons {
+        let sub = b.get("submodel").as_usize().unwrap_or(usize::MAX);
+        let phase = b.get("phase").as_str().unwrap_or("?");
+        if phase != "done" {
+            all_done = false;
+        }
+        let pairs = json_u64(b.get("pairs")).unwrap_or(0);
+        let ms = json_u64(b.get("unix_ms")).unwrap_or(0);
+        let rate = match prev.get(&sub) {
+            Some(&(p0, t0)) if ms > t0 && pairs >= p0 => {
+                format!("{:.0}", (pairs - p0) as f64 / ((ms - t0) as f64 / 1e3))
+            }
+            _ => "-".to_string(),
+        };
+        prev.insert(sub, (pairs, ms));
+        let age_s = now.saturating_sub(ms) as f64 / 1e3;
+        out.push_str(&format!(
+            "{:>3}  {:<10} {:>6} {:>12} {:>14} {:>12} {:>7.1}s\n",
+            sub,
+            phase,
+            b.get("epoch").as_f64().unwrap_or(0.0) as u64,
+            json_u64(b.get("sentences")).unwrap_or(0),
+            pairs,
+            rate,
+            age_s
+        ));
+    }
+    Ok((out, all_done))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::{u64s, Journal};
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("dw2v_report_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn fake_beacon(dir: &Path, sub: usize, phase: &str, pairs: u64) {
+        let b = obj(vec![
+            ("submodel", num(sub as f64)),
+            ("phase", s(phase)),
+            ("epoch", num(1.0)),
+            ("sentences", u64s(10)),
+            ("pairs", u64s(pairs)),
+            ("seq", u64s(3)),
+            ("unix_ms", u64s(journal::unix_ms())),
+        ]);
+        std::fs::write(dir.join(format!("beacon_{sub}.json")), b.to_string_pretty()).unwrap();
+    }
+
+    /// Synthesize the journals a crash→respawn run leaves behind and
+    /// check the report's worker timeline shows the failure + recovery.
+    #[test]
+    fn report_rolls_up_a_crash_and_respawn() {
+        let dir = tmpdir("crash");
+        let coord = Journal::open(&dir, "coordinator");
+        coord.event("run_start", vec![("submodels", num(2.0))]);
+        coord.event("worker_spawn", vec![("submodel", num(0.0))]);
+        coord.event("worker_spawn", vec![("submodel", num(1.0))]);
+        coord.event(
+            "worker_crash",
+            vec![("submodel", num(1.0)), ("why", s("exit code 102"))],
+        );
+        coord.event(
+            "worker_respawn",
+            vec![("submodel", num(1.0)), ("attempt", num(1.0)), ("backoff_ms", num(50.0))],
+        );
+        coord.event("worker_exit", vec![("submodel", num(0.0)), ("secs", num(1.5))]);
+        coord.event("worker_exit", vec![("submodel", num(1.0)), ("secs", num(2.5))]);
+        coord.event("fleet_done", vec![("secs", num(3.0))]);
+        coord.event("merge_done", vec![("secs", num(0.2))]);
+        coord.event("eval_done", vec![("secs", num(0.1))]);
+        let w1 = Journal::open(&dir, "worker_1");
+        w1.event(
+            "epoch_done",
+            vec![
+                ("submodel", num(1.0)),
+                ("epoch", num(0.0)),
+                ("secs", num(1.0)),
+                ("pairs", u64s(5000)),
+                ("pairs_per_s", num(5000.0)),
+            ],
+        );
+        fake_beacon(&dir, 0, "done", 9999);
+        fake_beacon(&dir, 1, "done", 9999);
+
+        let path = write_report(&dir).unwrap();
+        let report = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let workers = report.get("workers").as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        let victim = &workers[1];
+        assert_eq!(victim.get("crashes").as_f64(), Some(1.0));
+        assert_eq!(victim.get("respawns").as_f64(), Some(1.0));
+        assert_eq!(victim.get("completed").as_bool(), Some(true));
+        assert_eq!(workers[0].get("crashes").as_f64(), Some(0.0));
+        assert_eq!(report.get("phases").get("train_secs").as_f64(), Some(3.0));
+        assert_eq!(report.get("phases").get("merge_secs").as_f64(), Some(0.2));
+        let curve = report.get("pairs_per_s").as_arr().unwrap();
+        assert_eq!(curve.len(), 1);
+        assert_eq!(curve[0].get("pairs_per_s").as_f64(), Some(5000.0));
+
+        // the HTML render is self-contained and mentions the crash
+        let html = std::fs::read_to_string(dir.join(REPORT_HTML_FILE)).unwrap();
+        assert!(html.contains("worker_crash"));
+        assert!(html.contains("completed"));
+        assert!(!dir.join(format!("{REPORT_FILE}.tmp")).exists(), "publication is atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_dir_is_an_error_not_an_empty_report() {
+        let dir = tmpdir("empty");
+        let err = build_report(&dir).unwrap_err();
+        assert!(err.contains("not a run directory"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn status_renders_rates_from_consecutive_refreshes() {
+        let dir = tmpdir("status");
+        fake_beacon(&dir, 0, "train", 1000);
+        let mut prev = BTreeMap::new();
+        let (first, done) = render_status(&dir, &mut prev).unwrap();
+        assert!(first.contains("train"));
+        assert!(!done);
+        // second refresh with more pairs and a later stamp → a rate
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        fake_beacon(&dir, 0, "done", 3000);
+        let (second, done) = render_status(&dir, &mut prev).unwrap();
+        assert!(done, "all beacons at phase done");
+        assert!(second.contains("done"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

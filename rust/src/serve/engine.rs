@@ -25,6 +25,7 @@ use super::quant::QuantizedStore;
 use crate::embedding::Embedding;
 use crate::exec::pool::ThreadPool;
 use crate::kernels;
+use crate::obs::metrics::{self, Counter, Histogram};
 use crate::linalg::mat::Mat;
 use crate::linalg::procrustes::orthogonal_procrustes;
 use crate::merge::align::extract_rows;
@@ -92,6 +93,11 @@ struct Inner {
     /// query is an O(1) lookup.
     reconstructed: std::collections::HashMap<u32, Vec<f32>>,
     cfg: ServeConfig,
+    /// registry instruments, resolved once at build so the per-query cost
+    /// is one atomic add + one histogram observe (or nothing when the
+    /// registry is disabled)
+    queries: Arc<Counter>,
+    query_secs: Arc<Histogram>,
 }
 
 pub struct ServeEngine {
@@ -174,6 +180,7 @@ impl ServeEngine {
         }
         drop(submodels);
         let workers = cfg.workers.max(1);
+        let reg = metrics::global();
         let inner = Inner {
             emb,
             norms,
@@ -182,6 +189,8 @@ impl ServeEngine {
             vocab,
             reconstructed,
             cfg,
+            queries: reg.counter("serve_queries_total"),
+            query_secs: reg.histogram("serve_query_secs"),
         };
         Self {
             inner: Arc::new(inner),
@@ -393,7 +402,14 @@ impl Inner {
     }
 
     fn answer(&self, q: &Query) -> QueryResult {
-        self.answer_impl(q, false)
+        if !metrics::global().enabled() {
+            return self.answer_impl(q, false);
+        }
+        let started = std::time::Instant::now();
+        let out = self.answer_impl(q, false);
+        self.queries.add(1);
+        self.query_secs.observe(started.elapsed().as_secs_f64());
+        out
     }
 
     fn answer_impl(&self, q: &Query, exact: bool) -> QueryResult {

@@ -93,6 +93,11 @@ pub fn train(
     // the naive tokens × window × epochs is off in both directions
     let expected_pairs = super::schedule::expected_pairs(corpus, vocab, cfg);
     let pair_counter = AtomicU64::new(0);
+    // global metrics ride the existing COUNTER_FLUSH cadence: resolve the
+    // instrument once here, pay one extra fetch_add per 10k pairs per
+    // thread at the flush points below (nothing per pair)
+    let metrics_on = crate::obs::metrics::global().enabled();
+    let pairs_metric = crate::obs::metrics::global().counter("sgns_pairs_total");
     let loss_accum = AtomicU64::new(0); // micro-units of 1e-6
     let loss_pairs = AtomicU64::new(0);
 
@@ -120,6 +125,7 @@ pub fn train(
                 let pair_counter = &pair_counter;
                 let loss_accum = &loss_accum;
                 let loss_pairs = &loss_pairs;
+                let pairs_metric = &pairs_metric;
                 let mut trng =
                     Pcg64::new_stream(seed ^ 0x7468_7264, (epoch * threads + t) as u64);
                 scope.spawn(move || {
@@ -159,6 +165,9 @@ pub fn train(
                                     done_snapshot = pair_counter
                                         .fetch_add(pending, Ordering::Relaxed)
                                         + pending;
+                                    if metrics_on {
+                                        pairs_metric.add(pending);
+                                    }
                                     pending = 0;
                                 }
                                 let target = kept[other] as usize;
@@ -198,6 +207,9 @@ pub fn train(
                     }
                     if pending > 0 {
                         pair_counter.fetch_add(pending, Ordering::Relaxed);
+                        if metrics_on {
+                            pairs_metric.add(pending);
+                        }
                     }
                     if last_epoch && local_pairs > 0 {
                         loss_accum.fetch_add(

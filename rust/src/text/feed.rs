@@ -275,6 +275,9 @@ pub struct FeedStats {
     pub shards_at_open: usize,
     /// manifest polls that found the next shard still unpublished
     pub waits: u64,
+    /// total wall-clock spent parked in those polls — how long training
+    /// was actually blocked on ingest, for the run report
+    pub wait_secs: f64,
 }
 
 /// Called on every poll while the feed is blocked on an unpublished
@@ -315,6 +318,7 @@ impl ShardFeed {
             stats: Mutex::new(FeedStats {
                 shards_at_open: man.num_shards(),
                 waits: 0,
+                wait_secs: 0.0,
             }),
         };
         Ok(feed)
@@ -364,7 +368,11 @@ impl ShardFeed {
             if let Some(hook) = &self.wait_hook {
                 hook(f, man.num_shards());
             }
-            self.stats.lock().unwrap().waits += 1;
+            {
+                let mut st = self.stats.lock().unwrap();
+                st.waits += 1;
+                st.wait_secs += self.opts.poll.as_secs_f64();
+            }
             std::thread::sleep(self.opts.poll);
             man = match ShardManifest::load(&self.dir) {
                 Ok(Some(m)) => m,

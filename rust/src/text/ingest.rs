@@ -48,8 +48,10 @@ use super::feed::{ScheduleBlock, ShardManifest};
 use super::tokenize::{split_sentences, tokenize};
 use super::vocab::{Vocab, VocabBuilder};
 use crate::exec::pool::parallel_map;
+use crate::obs::journal::{self, u64s, Journal};
 use crate::sgns::config::SgnsConfig;
 use crate::sgns::schedule::PairEstimator;
+use crate::util::json;
 use std::fs::File;
 use std::io::{BufRead, BufReader};
 use std::path::{Path, PathBuf};
@@ -371,6 +373,22 @@ fn ingest_file_impl(
     std::fs::create_dir_all(out_dir).map_err(|e| format!("create {}: {e}", out_dir.display()))?;
     super::corpus::remove_stale_shards(out_dir)
         .map_err(|e| format!("clear stale shards in {}: {e}", out_dir.display()))?;
+    // fresh journal per ingest: a shard dir is wholly replaced by a
+    // re-ingest, so a previous run's events must not splice into this one
+    let _ = std::fs::remove_file(out_dir.join(journal::journal_file_name("ingest")));
+    let jrn = Journal::open(out_dir, "ingest");
+    jrn.event(
+        "pass1_done",
+        vec![
+            ("secs", json::num(stats.pass1_secs)),
+            (
+                "mb_per_s",
+                json::num(stats.bytes as f64 / 1e6 / stats.pass1_secs.max(1e-9)),
+            ),
+            ("lines", u64s(stats.lines)),
+            ("vocab", json::num(stats.vocab_size as f64)),
+        ],
+    );
     // vocab.tsv is fully known after pass 1 — write it before any shard
     // so a mid-pass-2 failure can never leave new shards paired with a
     // previous run's vocabulary
@@ -402,6 +420,13 @@ fn ingest_file_impl(
         });
         manifest.publish(out_dir)?;
         stats.schedule_secs = ts.elapsed().as_secs_f64();
+        jrn.event(
+            "schedule_done",
+            vec![
+                ("secs", json::num(stats.schedule_secs)),
+                ("sentences", u64s(total_sentences)),
+            ],
+        );
     }
 
     let t2 = std::time::Instant::now();
@@ -421,6 +446,7 @@ fn ingest_file_impl(
         tee: &mut Option<&mut Corpus>,
         manifest: &mut ShardManifest,
         delay: Duration,
+        jrn: &Journal,
     ) -> Result<(), String> {
         if pending.is_empty() {
             return Ok(());
@@ -441,6 +467,13 @@ fn ingest_file_impl(
         manifest.shard_sentences.push(pending.len() as u64);
         manifest.tokens += pending.total_tokens();
         manifest.publish(out_dir)?;
+        jrn.event(
+            "shard_published",
+            vec![
+                ("shard", json::num(idx as f64)),
+                ("sentences", u64s(pending.len() as u64)),
+            ],
+        );
         shard_paths.push(path);
         match tee.as_deref_mut() {
             Some(corpus) => corpus.sentences.append(&mut pending.sentences),
@@ -462,6 +495,7 @@ fn ingest_file_impl(
                 &mut tee,
                 &mut manifest,
                 delay,
+                &jrn,
             )?;
         }
         Ok(())
@@ -474,6 +508,7 @@ fn ingest_file_impl(
         &mut tee,
         &mut manifest,
         delay,
+        &jrn,
     )?;
     if let Some(sched) = &manifest.schedule {
         // the schedule pass and pass 2 walked the identical deterministic
@@ -492,6 +527,26 @@ fn ingest_file_impl(
     manifest.publish(out_dir)?;
     stats.pass2_secs = t2.elapsed().as_secs_f64();
     stats.shards = shard_paths.len();
+    jrn.event(
+        "pass2_done",
+        vec![
+            ("secs", json::num(stats.pass2_secs)),
+            ("shards", json::num(stats.shards as f64)),
+            ("sentences", u64s(stats.written_sentences)),
+        ],
+    );
+    jrn.event(
+        "ingest_done",
+        vec![
+            (
+                "secs",
+                json::num(stats.pass1_secs + stats.schedule_secs + stats.pass2_secs),
+            ),
+            ("mb_per_s", json::num(stats.bytes_per_sec() / 1e6)),
+            ("kept_tokens", u64s(stats.kept_tokens)),
+            ("oov_tokens", u64s(stats.oov_tokens)),
+        ],
+    );
 
     Ok(IngestOutput {
         vocab,

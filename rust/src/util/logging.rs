@@ -5,6 +5,7 @@
 //! Table 4 reports.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
@@ -22,16 +23,40 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-pub fn level_from_env() {
-    if let Ok(v) = std::env::var("DW2V_LOG") {
-        let lvl = match v.to_lowercase().as_str() {
-            "error" => Level::Error,
-            "warn" => Level::Warn,
-            "debug" => Level::Debug,
-            _ => Level::Info,
-        };
-        set_level(lvl);
+/// Parse one `DW2V_LOG` value. Garbage is a loud error naming the
+/// variable (same contract as `DW2V_BEACON_INTERVAL_MS` /
+/// `DW2V_FEED`) — a typo'd `DW2V_LOG=dbug` must not silently run at
+/// info and bury the debug output someone asked for.
+pub fn parse_level(v: &str) -> Result<Level, String> {
+    match v.to_lowercase().as_str() {
+        "error" => Ok(Level::Error),
+        "warn" => Ok(Level::Warn),
+        "info" => Ok(Level::Info),
+        "debug" => Ok(Level::Debug),
+        other => Err(format!(
+            "DW2V_LOG={other:?} is not a log level (use error|warn|info|debug)"
+        )),
     }
+}
+
+/// Apply `DW2V_LOG` from the environment. Unset leaves the default
+/// (info); an unknown value is an error the caller must surface at
+/// startup.
+pub fn level_from_env() -> Result<(), String> {
+    if let Ok(v) = std::env::var("DW2V_LOG") {
+        set_level(parse_level(&v)?);
+    }
+    Ok(())
+}
+
+// The process role, stamped into every log line so the interleaved
+// stderr of a supervised fleet stays attributable. Set once at startup
+// (coordinator leaves it unset; a worker sets `worker s=N`).
+static ROLE: OnceLock<String> = OnceLock::new();
+
+/// Tag every subsequent log line with `role` (first caller wins).
+pub fn set_role(role: &str) {
+    let _ = ROLE.set(role.to_string());
 }
 
 pub fn enabled(level: Level) -> bool {
@@ -46,7 +71,10 @@ pub fn log(level: Level, module: &str, msg: &str) {
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
         };
-        eprintln!("[{tag}] {module}: {msg}");
+        match ROLE.get() {
+            Some(role) => eprintln!("[{tag}][{role}] {module}: {msg}"),
+            None => eprintln!("[{tag}] {module}: {msg}"),
+        }
     }
 }
 
@@ -117,6 +145,19 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(15));
         let secs = t.stop_quiet();
         assert!(secs >= 0.014, "elapsed={secs}");
+    }
+
+    #[test]
+    fn level_parse_is_loud_on_garbage() {
+        assert_eq!(parse_level("error").unwrap(), Level::Error);
+        assert_eq!(parse_level("WARN").unwrap(), Level::Warn);
+        assert_eq!(parse_level("Info").unwrap(), Level::Info);
+        assert_eq!(parse_level("debug").unwrap(), Level::Debug);
+        for garbage in ["dbug", "verbose", "2", ""] {
+            let err = parse_level(garbage).unwrap_err();
+            assert!(err.contains("DW2V_LOG"), "{err}");
+            assert!(err.contains("error|warn|info|debug"), "{err}");
+        }
     }
 
     #[test]

@@ -1,0 +1,191 @@
+//! End-to-end telemetry test: a supervised chaos run (injected crash →
+//! respawn → full coverage) must leave behind event journals that
+//! `obs::report` can aggregate into a run report whose worker timeline
+//! shows the failure and the recovery — the acceptance bar for the
+//! observability layer. The live `status` renderer must work over the
+//! same directory.
+
+use dw2v::coordinator::procs::ProcsOptions;
+use dw2v::coordinator::supervisor::{run_supervised, FailurePolicy, SupervisorOptions};
+use dw2v::obs::report;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dw2v"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dw2v_obs_e2e_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Same small-but-real experiment the supervisor e2e uses: 2 sub-models,
+/// 2 epochs, single mapper.
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 1200;
+    cfg.vocab = 250;
+    cfg.clusters = 8;
+    cfg.truth_dim = 8;
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 50.0; // 2 sub-models
+    cfg.mappers = 1;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 8.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+#[test]
+fn chaos_run_report_shows_crash_and_respawn() {
+    let cfg = small_cfg();
+    let dir = tdir("report");
+    let world = build_world(&cfg);
+    world.corpus.write_sharded(&dir, 3).unwrap();
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+
+    let victim = 1usize;
+    let out_dir = dir.join("submodels");
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        // crash early in epoch 0 — the respawn replays from scratch, and
+        // both attempts append to the same journal file
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            format!("crash@pairs=50@submodel={victim}"),
+        )],
+    };
+    let sup = SupervisorOptions {
+        policy: FailurePolicy::Retry,
+        max_retries: 2,
+        stall_timeout: Duration::from_secs(60),
+        poll_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(50),
+        backoff_cap: Duration::from_millis(200),
+        beacon_interval_ms: 50,
+    };
+    let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
+    assert_eq!(rep.survivors(), 2, "retry must recover the crashed worker");
+    assert!(rep.stats.respawns >= 1);
+
+    // the journals the run must leave behind
+    for role in ["coordinator", "worker_0", "worker_1"] {
+        let p = out_dir.join(format!("events_{role}.jsonl"));
+        assert!(p.is_file(), "missing journal {}", p.display());
+    }
+
+    // aggregate them — the report is the cross-run acceptance artifact
+    let json_path = report::write_report(&out_dir).unwrap();
+    assert!(json_path.is_file());
+    assert!(out_dir.join(report::REPORT_HTML_FILE).is_file());
+    let parsed = dw2v::util::json::Json::parse(
+        &std::fs::read_to_string(&json_path).unwrap(),
+    )
+    .unwrap();
+
+    let workers = parsed.get("workers").as_arr().expect("workers array").to_vec();
+    assert_eq!(workers.len(), 2, "one rollup row per sub-model");
+    let mut saw_victim = false;
+    for w in &workers {
+        let sub = w.get("submodel").as_usize().unwrap();
+        assert_eq!(
+            w.get("completed"),
+            &dw2v::util::json::Json::Bool(true),
+            "worker {sub} must end completed"
+        );
+        assert!(
+            w.get("epochs").as_arr().map_or(0, |e| e.len()) >= cfg.epochs,
+            "worker {sub} must journal every epoch_done"
+        );
+        if sub == victim {
+            saw_victim = true;
+            assert!(
+                w.get("crashes").as_f64().unwrap_or(0.0) >= 1.0,
+                "the injected crash must appear in the timeline: {w:?}"
+            );
+            assert!(
+                w.get("respawns").as_f64().unwrap_or(0.0) >= 1.0,
+                "the respawn must appear in the timeline: {w:?}"
+            );
+        }
+    }
+    assert!(saw_victim, "victim sub-model missing from the report");
+    assert!(
+        parsed.get("phases").get("train_secs").as_f64().unwrap_or(0.0) > 0.0,
+        "fleet_done must land in the phase table"
+    );
+    assert!(
+        parsed.get("phases").get("merge_secs").as_f64().is_some(),
+        "merge_done must land in the phase table"
+    );
+
+    // the live-status renderer works over the finished run and reports done
+    let mut prev = std::collections::BTreeMap::new();
+    let (table, all_done) = report::render_status(&out_dir, &mut prev).unwrap();
+    assert!(all_done, "every beacon says done:\n{table}");
+    assert!(table.contains("done"), "{table}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A second supervised run in the same directory must not inherit the
+/// first run's journals: the stale-file sweep replaces them, so a report
+/// over the new run describes only the new run.
+#[test]
+fn rerun_starts_fresh_journals() {
+    let cfg = small_cfg();
+    let dir = tdir("fresh");
+    let world = build_world(&cfg);
+    world.corpus.write_sharded(&dir, 2).unwrap();
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+
+    let out_dir = dir.join("submodels");
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: vec![(
+            "DW2V_FAULT".to_string(),
+            "crash@pairs=50@submodel=0".to_string(),
+        )],
+    };
+    let sup = SupervisorOptions {
+        policy: FailurePolicy::Retry,
+        max_retries: 2,
+        stall_timeout: Duration::from_secs(60),
+        poll_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(50),
+        backoff_cap: Duration::from_millis(200),
+        beacon_interval_ms: 50,
+    };
+    run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
+
+    // fault-free second run over the same directories
+    let opts2 = ProcsOptions { extra_env: Vec::new(), ..opts };
+    run_supervised(&cfg, &world.suite, &opts2, &sup).unwrap();
+
+    let parsed = dw2v::util::json::Json::parse(
+        &std::fs::read_to_string(report::write_report(&out_dir).unwrap()).unwrap(),
+    )
+    .unwrap();
+    for w in parsed.get("workers").as_arr().expect("workers").iter() {
+        assert_eq!(
+            w.get("crashes").as_f64().unwrap_or(-1.0),
+            0.0,
+            "run 1's crash leaked into run 2's report: {w:?}"
+        );
+        assert_eq!(w.get("completed"), &dw2v::util::json::Json::Bool(true));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
