@@ -7,7 +7,7 @@
 //! unigram and bigram KL; random-sampling coverage of the vocabulary is
 //! near-total.
 
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::divider::Divider;
 use dw2v::coordinator::stats::{bigram_kl, unigram_kl, vocab_coverage, DistStats};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig};
@@ -34,6 +34,9 @@ fn main() {
         "Figure 1 — divergence of sub-corpus distributions (avg over 10 sub-corpora)",
         &["unigram-KL", "bigram-KL", "union-cov", "intersect-cov"],
     );
+    // headline numbers for the cross-PR trajectory file: the paper's
+    // central contrast is random-sampling vs equal-partitioning unigram KL
+    let mut traj = vec![("sentences", num(corpus.len() as f64))];
     for strategy in [
         DivideStrategy::EqualPartitioning,
         DivideStrategy::RandomSampling,
@@ -73,8 +76,23 @@ fn main() {
                 ("intersection_coverage", num(inter)),
             ]),
         );
+        match strategy {
+            DivideStrategy::EqualPartitioning => {
+                traj.push(("equal_unigram_kl", num(ukl)));
+                traj.push(("equal_bigram_kl", num(bkl)));
+            }
+            DivideStrategy::RandomSampling => {
+                traj.push(("random_unigram_kl", num(ukl)));
+                traj.push(("random_bigram_kl", num(bkl)));
+                traj.push(("random_union_coverage", num(union)));
+            }
+            DivideStrategy::Shuffle => {
+                traj.push(("shuffle_unigram_kl", num(ukl)));
+            }
+        }
     }
     table.finish();
+    append_bench_trajectory("fig1_kl", obj(traj));
     println!("\nexpected shape: random/shuffle KL well below equal-partitioning,");
     println!("coverage near 1.0 for sampled strategies (paper Fig. 1 + §3.1).");
 }

@@ -9,7 +9,7 @@
 //! per epoch; the colpart model is latency-floored far above both.
 
 use dw2v::baselines::{colpart, param_avg};
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::leader;
 use dw2v::runtime::{load_backend, Backend};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig};
@@ -93,5 +93,17 @@ fn main() {
 
     // linearity check for the headline system
     let r = shuffle_secs[3] / shuffle_secs[0].max(1e-9);
+    // cross-PR trajectory: the full-corpus wallclock of each system plus
+    // the scaling ratio — a regression in either shows up as a kink
+    append_bench_trajectory(
+        "fig2_scaling",
+        obj(vec![
+            ("sentences", num(cfg.sentences as f64)),
+            ("backend", s(backend.name())),
+            ("shuffle_full_secs", num(shuffle_secs[3])),
+            ("mllib_full_secs", num(mllib_secs[3])),
+            ("shuffle_scaling_ratio", num(r)),
+        ]),
+    );
     println!("\nShuffle 100%/25% time ratio: {r:.2} (linear scaling → ~4; paper Fig. 2)");
 }

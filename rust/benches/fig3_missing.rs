@@ -7,13 +7,14 @@
 //! while Concat and PCA fall off sharply at 50% removal because every
 //! removed word drops out of their intersection vocabulary entirely.
 
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::leader;
 use dw2v::embedding::Embedding;
 use dw2v::eval::report::{evaluate_suite, format_cell, mean_score, scores_to_json, BenchmarkScore};
 use dw2v::gen::benchmarks::Benchmark;
 use dw2v::runtime::{load_backend, Backend};
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::json::{num, obj};
 use dw2v::util::rng::Pcg64;
 use dw2v::world::build_world;
 
@@ -59,6 +60,9 @@ fn main() {
         &headers,
     );
 
+    // cross-PR trajectory: the coverage-penalized mean of each merge
+    // method at 50% removal — the figure's headline robustness contrast
+    let mut traj = vec![("sentences", num(cfg.sentences as f64))];
     for removal in [0.0, 0.1, 0.5] {
         let mut rng = Pcg64::new(cfg.seed ^ 0xF3);
         let k = (bench_words.len() as f64 * removal) as usize;
@@ -76,11 +80,23 @@ fn main() {
             let label = format!("{:.0}% removed, {}", removal * 100.0, method.name());
             let mut cells: Vec<String> = scores.iter().map(format_cell).collect();
             cells.push(format!("{:.3}", mean_score(&scores)));
-            cells.push(format!("{:.3}", coverage_penalized_mean(&scores, &world.suite)));
+            let penalized = coverage_penalized_mean(&scores, &world.suite);
+            cells.push(format!("{penalized:.3}"));
             table.row(&label, cells, scores_to_json(&label, &scores));
+            if removal == 0.5 {
+                let key = match method {
+                    MergeMethod::AlirPca => "alir_mean_cov_50pct",
+                    MergeMethod::Concat => "concat_mean_cov_50pct",
+                    _ => "pca_mean_cov_50pct",
+                };
+                traj.push((key, num(penalized)));
+            } else if removal == 0.0 && matches!(method, MergeMethod::AlirPca) {
+                traj.push(("alir_mean_cov_0pct", num(penalized)));
+            }
         }
     }
     table.finish();
+    append_bench_trajectory("fig3_missing", obj(traj));
     println!("\nexpected shape (mean*cov — score × fraction of benchmark items the");
     println!("model can even answer): ALiR nearly flat across removal levels, Concat/");
     println!("PCA drop sharply at 50% because removed words leave their intersection");

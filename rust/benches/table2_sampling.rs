@@ -8,9 +8,9 @@
 //! executors grow.
 
 use dw2v::baselines::param_avg;
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::leader;
-use dw2v::eval::report::{evaluate_suite, format_cell};
+use dw2v::eval::report::{evaluate_suite, format_cell, mean_score};
 use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
@@ -45,6 +45,12 @@ fn main() {
     if bench_scale() >= 1.0 {
         rates.push(5.0);
     }
+    // cross-PR trajectory: mean suite score of each strategy at the
+    // smallest common rate (10%) plus the Hogwild reference
+    let mut traj: Vec<(&str, dw2v::util::json::Json)> = vec![
+        ("sentences", num(cfg.sentences as f64)),
+        ("backend", s(backend.name())),
+    ];
     for &rate in &rates {
         for strategy in [
             DivideStrategy::EqualPartitioning,
@@ -62,6 +68,14 @@ fn main() {
                 rep.scores.iter().map(format_cell).collect(),
                 dw2v::eval::report::scores_to_json(&label, &rep.scores),
             );
+            if rate == 10.0 {
+                let key = match strategy {
+                    DivideStrategy::EqualPartitioning => "equal_mean_10pct",
+                    DivideStrategy::RandomSampling => "random_mean_10pct",
+                    DivideStrategy::Shuffle => "shuffle_mean_10pct",
+                };
+                traj.push((key, num(mean_score(&rep.scores))));
+            }
         }
     }
 
@@ -87,7 +101,9 @@ fn main() {
         );
     }
     table.finish();
-    let _ = obj(vec![("hogwild_secs", num(hog_stats.seconds)), ("note", s(""))]);
+    traj.push(("hogwild_mean", num(mean_score(&hog_scores))));
+    traj.push(("hogwild_secs", num(hog_stats.seconds)));
+    append_bench_trajectory("table2_sampling", obj(traj));
     println!("\nexpected shape: shuffle ≥ random ≥ equal per rate; shuffle at the");
     println!("larger rate ≈/> hogwild; mllib quality drops with executors (paper Table 2).");
 }

@@ -7,13 +7,14 @@
 //! dimensionality, SingleModel notably worse, Average (the §3.3.1
 //! counter-example) catastrophically worse.
 
-use dw2v::bench_util::{bench_scale, Table};
+use dw2v::bench_util::{append_bench_trajectory, bench_scale, Table};
 use dw2v::coordinator::leader;
-use dw2v::eval::report::{evaluate_suite, format_cell, scores_to_json};
+use dw2v::eval::report::{evaluate_suite, format_cell, mean_score, scores_to_json};
 use dw2v::merge::average;
 use dw2v::runtime::{load_backend, Backend};
 use dw2v::sgns::hogwild;
 use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::util::json::{num, obj};
 use dw2v::world::build_world;
 
 fn main() {
@@ -40,6 +41,9 @@ fn main() {
     if bench_scale() >= 1.0 {
         rates.push(5.0);
     }
+    // cross-PR trajectory: mean suite score per merge method at 10% —
+    // the table's headline ALiR-vs-Concat-vs-average contrast
+    let mut traj = vec![("sentences", num(cfg.sentences as f64))];
     for &rate in &rates {
         cfg.rate_percent = rate;
         let out = leader::train_submodels(&cfg, &world.corpus, &world.vocab, &backend)
@@ -60,6 +64,16 @@ fn main() {
                 scores.iter().map(format_cell).collect(),
                 scores_to_json(&label, &scores),
             );
+            if rate == 10.0 {
+                let key = match method {
+                    MergeMethod::Concat => "concat_mean_10pct",
+                    MergeMethod::Pca => "pca_mean_10pct",
+                    MergeMethod::AlirRand => "alir_rand_mean_10pct",
+                    MergeMethod::AlirPca => "alir_pca_mean_10pct",
+                    _ => "single_mean_10pct",
+                };
+                traj.push((key, num(mean_score(&scores))));
+            }
         }
         // ablation: the naive averaging counter-example from §3.3.1
         let avg = average::merge(&out.submodels);
@@ -70,6 +84,9 @@ fn main() {
             scores.iter().map(format_cell).collect(),
             scores_to_json(&label, &scores),
         );
+        if rate == 10.0 {
+            traj.push(("average_mean_10pct", num(mean_score(&scores))));
+        }
     }
 
     let scfg = leader::sgns_config(&cfg);
@@ -81,6 +98,8 @@ fn main() {
         scores_to_json("hogwild", &hog_scores),
     );
     table.finish();
+    traj.push(("hogwild_mean", num(mean_score(&hog_scores))));
+    append_bench_trajectory("table3_merging", obj(traj));
     println!("\nexpected shape: ALiR best-or-competitive; higher rates beat lower;");
     println!("single model clearly below merged; naive average collapses (paper Table 3).");
 }

@@ -177,6 +177,7 @@ fn main() {
             shard_dir: dir.clone(),
             out_dir: dir.join("submodels"),
             extra_env: Vec::new(),
+            connect: None,
         };
         match dw2v::coordinator::procs::run_multiprocess(&cfg, &[], &opts) {
             Ok(rep) => {

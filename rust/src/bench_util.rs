@@ -144,9 +144,9 @@ impl Table {
 /// never leaves a torn file. `DW2V_BENCH_DIR` overrides the target
 /// directory — CI and the unit test point it at a scratch dir.
 pub fn append_bench_trajectory(name: &str, row: Json) {
-    let dir = match std::env::var("DW2V_BENCH_DIR") {
-        Ok(d) if !d.trim().is_empty() => std::path::PathBuf::from(d),
-        _ => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
+    let dir = match crate::util::env::bench_dir() {
+        Some(d) => std::path::PathBuf::from(d),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(".."),
     };
     let path = dir.join(format!("BENCH_{name}.json"));
 
@@ -223,9 +223,10 @@ pub fn peak_rss_mb() -> Option<f64> {
 /// Quick scale knob for benches: DW2V_BENCH_SCALE=small|full (default small
 /// keeps every bench under a couple of minutes on CPU).
 pub fn bench_scale() -> f64 {
-    match std::env::var("DW2V_BENCH_SCALE").as_deref() {
-        Ok("full") => 1.0,
-        _ => 0.25,
+    if crate::util::env::bench_full_scale() {
+        1.0
+    } else {
+        0.25
     }
 }
 

@@ -29,10 +29,11 @@
 use super::procs::{self, ProcsOptions};
 use super::supervisor::{run_supervised, SupervisedReport, SupervisorOptions};
 use crate::info;
-use crate::obs::journal::{self, u64s, Journal};
+use crate::obs::journal::{self, u64s};
 use crate::text::feed::{self, FeedOptions};
 use crate::text::ingest::{ingest_file_overlapped, IngestConfig, IngestOutput, OverlapOptions};
 use crate::text::vocab::Vocab;
+use crate::transport::Transport;
 use crate::util::config::ExperimentConfig;
 use crate::world::World;
 use std::path::PathBuf;
@@ -76,10 +77,8 @@ pub fn run_overlapped(
     // manifest left by a previous run would still be on disk when we poll
     // for the schedule below — and we would happily spawn the fleet
     // against last run's corpus. Clear it here, before ingest starts.
-    std::fs::create_dir_all(&opts.shard_dir)
-        .map_err(|e| format!("create {}: {e}", opts.shard_dir.display()))?;
-    crate::text::corpus::remove_stale_shards(&opts.shard_dir)
-        .map_err(|e| format!("clear stale shards in {}: {e}", opts.shard_dir.display()))?;
+    let transport = Transport::fs(&opts.shard_dir, &opts.out_dir);
+    transport.shards.prepare_ingest_dir()?;
 
     let input = ov.input.clone();
     let shard_dir = opts.shard_dir.clone();
@@ -99,10 +98,7 @@ pub fn run_overlapped(
         // the overlap journal lives in the shard dir (out_dir doesn't
         // exist yet, and prepare_run sweeps stale events files from it);
         // a fresh run replaces last run's file like the ingest journal does
-        let _ = std::fs::remove_file(
-            opts.shard_dir.join(journal::journal_file_name("overlap")),
-        );
-        let jrn = Journal::open(&opts.shard_dir, "overlap");
+        let jrn = journal::fresh_journal(&opts.shard_dir, "overlap");
         let wait_started = std::time::Instant::now();
         let (man, sched) = feed::wait_for_schedule(&opts.shard_dir, &ov.feed, || {})?;
         jrn.event(
@@ -131,6 +127,7 @@ pub fn run_overlapped(
                 env.push(procs::feed_env_pair());
                 env
             },
+            connect: opts.connect.clone(),
         };
         run_supervised(cfg, &suite, &wopts, sup).map(|rep| (vocab, rep))
     };

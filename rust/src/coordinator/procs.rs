@@ -116,21 +116,23 @@
 use super::leader;
 use super::mapper::{ShardFileSource, SubModelFilter, SID_INDEX_BITS};
 use super::reducer::TrainReducer;
-use super::supervisor::{beacon_path, ArmedFaults, BeaconWriter, FaultSpec};
+use super::supervisor::{ArmedFaults, BeaconWriter, FaultSpec};
 use crate::embedding::{
     ArtifactMeta, CheckpointArtifact, CheckpointMeta, Embedding, SubModelArtifact,
 };
 use crate::exec::mapreduce::{MapReduce, Reducer, RoundSource};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
-use crate::obs::journal::{u64s, Journal};
+use crate::obs::journal::u64s;
 use crate::runtime::params::Metrics;
 use crate::runtime::{load_backend, Backend};
 use crate::sgns::schedule::PairEstimator;
 use crate::sgns::trainer::{SubModelTrainer, TrainerSnapshot};
 use crate::text::feed::{self, FeedOptions, ShardFeed};
 use crate::text::vocab::Vocab;
+use crate::transport::{ArtifactStore, Transport};
 use crate::util::config::ExperimentConfig;
+use crate::util::env;
 use crate::util::json;
 use crate::util::logging::Timer;
 use std::path::{Path, PathBuf};
@@ -150,48 +152,25 @@ pub struct WorkerSpec {
     pub submodel: usize,
     /// artifact output path
     pub out: PathBuf,
+    /// when set, talk to a `dw2v shard-server` at `HOST:PORT` instead of
+    /// the local filesystem (shards are mirrored into a temp cache,
+    /// artifacts/beacons/journals are uploaded)
+    pub connect: Option<String>,
 }
 
-/// Where a worker keeps its epoch-boundary checkpoint, derived from the
-/// artifact path: `submodel_3.dwsm` → `submodel_3.ckpt`.
-pub fn checkpoint_path(out: &Path) -> PathBuf {
-    out.with_extension("ckpt")
-}
+// Re-exported from the transport layer, where run-dir naming now lives;
+// kept here so existing `procs::checkpoint_path` etc. callers hold.
+pub use crate::transport::fs::{checkpoint_path, clean_artifact_dir, collect_artifact};
 
 /// Environment variable that switches workers from the up-front
 /// [`ShardFileSource`] snapshot to the manifest-driven [`ShardFeed`]
 /// (ingest/training overlap). The overlap driver sets it on the whole
 /// fleet through [`ProcsOptions::extra_env`]; see the module docs.
-pub const FEED_ENV: &str = "DW2V_FEED";
+pub const FEED_ENV: &str = env::FEED;
 
 /// The `extra_env` entry that enables feed mode.
 pub fn feed_env_pair() -> (String, String) {
     (FEED_ENV.to_string(), "1".to_string())
-}
-
-/// Parse the [`FEED_ENV`] value. Like `DW2V_FAULT`, anything other than
-/// the two documented values is a loud startup error — a typo must not
-/// silently leave the fleet in snapshot mode deadlocked against an
-/// ingest that expects feed-mode readers.
-fn parse_feed_mode(raw: Option<&str>) -> Result<bool, String> {
-    match raw.map(str::trim) {
-        None | Some("") | Some("0") => Ok(false),
-        Some("1") => Ok(true),
-        Some(v) => Err(format!("{FEED_ENV}: expected 0 or 1, got '{v}'")),
-    }
-}
-
-/// Parse the `DW2V_BEACON_INTERVAL_MS` override. A malformed value is a
-/// startup error, never a silent fall-back to the 250 ms default: a
-/// supervisor tuned for a 10 ms beacon cadence must not unknowingly run
-/// its stall detector against a fleet beaconing 25× slower.
-fn parse_beacon_interval(raw: Option<&str>) -> Result<u64, String> {
-    match raw.map(str::trim) {
-        None => Ok(250),
-        Some(v) => v.parse::<u64>().map_err(|_| {
-            format!("DW2V_BEACON_INTERVAL_MS: '{v}' is not a whole number of milliseconds")
-        }),
-    }
 }
 
 /// The sentence stream a worker trains from: the complete-directory
@@ -319,19 +298,19 @@ fn validate_checkpoint(
     Ok(())
 }
 
-/// Snapshot the trainer at the epoch boundary just crossed and publish it
-/// atomically as `submodel_<s>.ckpt` (derived from `spec.out`), replacing
-/// any older checkpoint.
+/// Snapshot the trainer at the epoch boundary just crossed and publish
+/// it atomically as `submodel_<s>.ckpt` through the transport's
+/// [`ArtifactStore`], replacing any older checkpoint.
 fn write_checkpoint<B: Backend>(
     cfg: &ExperimentConfig,
     spec: &WorkerSpec,
+    artifacts: &dyn ArtifactStore,
     num_submodels: usize,
     trainer_seed: u64,
     total_sentences: usize,
     epochs_done: usize,
     red: &WorkerReducer<'_, B>,
 ) -> Result<(), String> {
-    let path = checkpoint_path(&spec.out);
     let snap = red
         .inner
         .trainer
@@ -369,11 +348,7 @@ fn write_checkpoint<B: Backend>(
             present: vec![true; rows],
         },
     };
-    let tmp = path.with_extension("ckpt.tmp");
-    ck.save(&tmp)
-        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-    std::fs::rename(&tmp, &path).map_err(|e| format!("publish {}: {e}", path.display()))?;
-    Ok(())
+    artifacts.save_checkpoint(spec.submodel, &ck)
 }
 
 /// Train one sub-model in this process — the whole worker protocol.
@@ -387,49 +362,53 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     // stamp every log line of this process with its sub-model identity —
     // a supervised fleet interleaves worker stderr on one terminal
     crate::util::logging::set_role(&format!("worker s={}", spec.submodel));
-    if let Ok(ms) = std::env::var("DW2V_WORKER_STARTUP_SLEEP_MS") {
-        if let Ok(ms) = ms.parse::<u64>() {
-            std::thread::sleep(std::time::Duration::from_millis(ms));
-        }
+    if let Some(ms) = env::worker_startup_sleep_ms()? {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
     }
     // a malformed fault spec is a startup error, never a silent no-op —
     // a chaos test with a typo'd spec must fail loudly, not pass vacuously
-    let fault_spec = match std::env::var("DW2V_FAULT") {
-        Ok(text) => {
-            FaultSpec::parse(&text, spec.submodel).map_err(|e| format!("DW2V_FAULT: {e}"))?
+    let fault_spec = match env::fault_spec() {
+        Some(text) => {
+            FaultSpec::parse(&text, spec.submodel).map_err(|e| format!("{}: {e}", env::FAULT))?
         }
-        Err(_) => FaultSpec::default(),
+        None => FaultSpec::default(),
     };
-    let out_dir = spec
-        .out
-        .parent()
-        .map(Path::to_path_buf)
-        .unwrap_or_else(|| PathBuf::from("."));
-    let feed_mode = parse_feed_mode(std::env::var(FEED_ENV).ok().as_deref())?;
-    let beacon_interval =
-        parse_beacon_interval(std::env::var("DW2V_BEACON_INTERVAL_MS").ok().as_deref())?;
+    let feed_mode = env::feed_mode()?;
+    let beacon_interval = env::beacon_interval_ms()?;
+    // everything this worker exchanges with its coordinator — shards in,
+    // beacons/checkpoints/artifacts/journal events out — goes through one
+    // transport: the run dir next to `--out`, or a shard server when
+    // `--connect` is set
+    let transport = match &spec.connect {
+        Some(addr) => Transport::connect(addr, spec.submodel, feed_mode)?,
+        None => Transport::fs_worker(&spec.shard_dir, &spec.out),
+    };
+    let shard_dir = transport.shards.local_dir().to_path_buf();
     let beacon = Arc::new(Mutex::new(BeaconWriter::new(
-        beacon_path(&out_dir, spec.submodel),
+        Arc::clone(&transport.control),
         spec.submodel,
         beacon_interval,
     )));
     beacon.lock().unwrap().write_now("start", 0, 0, 0);
     // per-worker event journal next to the artifacts; a respawned
-    // incarnation appends to the same file, so the run's full timeline
-    // (including the pre-crash epochs) survives in one place
-    let journal = Journal::open(&out_dir, &format!("worker_{}", spec.submodel));
+    // incarnation appends to the same file (for remote workers the server
+    // appends on their behalf), so the run's full timeline — including
+    // the pre-crash epochs — survives in one place
+    let journal = transport
+        .control
+        .journal(&format!("worker_{}", spec.submodel));
     journal.event(
         "worker_start",
         vec![("submodel", json::num(spec.submodel as f64))],
     );
-    let faults = ArmedFaults::new(fault_spec, out_dir.clone(), spec.submodel);
+    let faults = ArmedFaults::new(fault_spec, Arc::clone(&transport.control), spec.submodel);
 
     // feed mode: ingest may still be running — its schedule block (and
     // vocab.tsv, written just before it) is the readiness signal
     let feed_opts = FeedOptions::default();
     let schedule = if feed_mode {
         let hb = Arc::clone(&beacon);
-        let (_, sched) = feed::wait_for_schedule(&spec.shard_dir, &feed_opts, move || {
+        let (_, sched) = feed::wait_for_schedule(&shard_dir, &feed_opts, move || {
             hb.lock().unwrap().maybe_write("waiting", 0, 0, 0);
         })?;
         Some(sched)
@@ -437,12 +416,13 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         None
     };
 
-    let vocab_path = spec.shard_dir.join("vocab.tsv");
-    let vocab_text = std::fs::read_to_string(&vocab_path)
-        .map_err(|e| format!("read {}: {e}", vocab_path.display()))?;
+    let vocab_text = transport.shards.vocab_text()?;
     let vocab = Vocab::from_tsv(&vocab_text)?;
     if vocab.is_empty() {
-        return Err(format!("{} holds an empty vocabulary", vocab_path.display()));
+        return Err(format!(
+            "{} holds an empty vocabulary",
+            shard_dir.join("vocab.tsv").display()
+        ));
     }
     let scfg = leader::sgns_config(cfg);
     let (source, total) = match &schedule {
@@ -460,7 +440,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
                     sched.window, sched.subsample_t, scfg.window, scfg.subsample_t
                 ));
             }
-            let mut f = ShardFeed::open(&spec.shard_dir, feed_opts)?;
+            let mut f = ShardFeed::open(&shard_dir, feed_opts)?;
             let hb = Arc::clone(&beacon);
             f.set_wait_hook(Box::new(move |awaiting, published| {
                 // seq bumps per write, so even a long wait on one shard
@@ -472,7 +452,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             (WorkerSource::Feed(f), sched.total_sentences as usize)
         }
         None => {
-            let s = ShardFileSource::open(&spec.shard_dir)?;
+            let s = ShardFileSource::open(&shard_dir)?;
             let total = s.total_sentences();
             (WorkerSource::Snapshot(s), total)
         }
@@ -480,7 +460,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     if total == 0 {
         return Err(format!(
             "shards in {} hold no sentences",
-            spec.shard_dir.display()
+            shard_dir.display()
         ));
     }
 
@@ -543,25 +523,23 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
 
     // resume: a valid checkpoint left by a previous incarnation of this
     // worker restores the trainer and skips the epochs already done
-    let ckpt = checkpoint_path(&spec.out);
+    let ckpt_desc = transport.artifacts.checkpoint_desc(spec.submodel);
     let mut start_epoch = 0usize;
     let mut resumed_loss: Vec<f64> = Vec::new();
     let mut resume_prev = Metrics::default();
-    if ckpt.is_file() {
-        let loaded = CheckpointArtifact::load(&ckpt)
-            .map_err(|e| e.to_string())
-            .and_then(|ck| {
-                validate_checkpoint(
-                    &ck,
-                    cfg,
-                    spec,
-                    divider.num_submodels,
-                    trainer_seed,
-                    total,
-                    vocab.len(),
-                )
-                .map(|()| ck)
-            });
+    if let Some(found) = transport.artifacts.load_checkpoint(spec.submodel) {
+        let loaded = found.and_then(|ck| {
+            validate_checkpoint(
+                &ck,
+                cfg,
+                spec,
+                divider.num_submodels,
+                trainer_seed,
+                total,
+                vocab.len(),
+            )
+            .map(|()| ck)
+        });
         match loaded {
             Ok(ck) => {
                 let snap = TrainerSnapshot {
@@ -579,15 +557,14 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
                 };
                 trainer
                     .restore(&snap)
-                    .map_err(|e| format!("restore checkpoint {}: {e}", ckpt.display()))?;
+                    .map_err(|e| format!("restore checkpoint {ckpt_desc}: {e}"))?;
                 start_epoch = ck.meta.epochs_done;
                 resumed_loss = ck.meta.epoch_loss;
                 resume_prev = snap.metrics;
                 info!(
-                    "worker {}: resuming from {} at epoch {start_epoch}/{} \
+                    "worker {}: resuming from {ckpt_desc} at epoch {start_epoch}/{} \
                      ({} pairs dispatched)",
                     spec.submodel,
-                    ckpt.display(),
                     cfg.epochs,
                     snap.dispatched_pairs
                 );
@@ -595,11 +572,10 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             Err(why) => {
                 // invalid ≠ fatal: discard and train from scratch
                 info!(
-                    "worker {}: ignoring checkpoint {} — {why}",
-                    spec.submodel,
-                    ckpt.display()
+                    "worker {}: ignoring checkpoint {ckpt_desc} — {why}",
+                    spec.submodel
                 );
-                let _ = std::fs::remove_file(&ckpt);
+                transport.artifacts.remove_checkpoint(spec.submodel);
             }
         }
     }
@@ -660,6 +636,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             write_checkpoint(
                 cfg,
                 spec,
+                transport.artifacts.as_ref(),
                 divider.num_submodels,
                 trainer_seed,
                 total,
@@ -685,13 +662,15 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     // that training really did start before ingest finished)
     if let WorkerSource::Feed(f) = &source {
         let sched = schedule.as_ref().expect("feed mode implies a schedule");
-        let man = feed::ShardManifest::load(&spec.shard_dir)?
-            .ok_or_else(|| format!("{} lost its manifest mid-run", spec.shard_dir.display()))?;
+        let man = transport
+            .shards
+            .manifest()?
+            .ok_or_else(|| format!("{} lost its manifest mid-run", shard_dir.display()))?;
         if !man.complete || man.total_sentences() != sched.total_sentences {
             return Err(format!(
                 "{}: manifest ended {} with {} sentences but the schedule promised {} — \
                  ingest died or the dir changed mid-run",
-                spec.shard_dir.display(),
+                shard_dir.display(),
                 if man.complete { "complete" } else { "incomplete" },
                 man.total_sentences(),
                 sched.total_sentences
@@ -715,11 +694,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             ("wait_secs", json::num(st.wait_secs)),
         ])
         .to_string_pretty();
-        let path = out_dir.join(format!("feedstat_{}.json", spec.submodel));
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
-            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+        transport.control.publish_feedstat(spec.submodel, &body)?;
     }
 
     let worker_red = reducers.pop().expect("one reducer");
@@ -748,36 +723,15 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         },
         embedding,
     };
-    // write-then-rename: the coordinator must never observe a partial
-    // artifact, even if this process dies mid-save
-    let tmp = spec.out.with_extension("tmp");
-    artifact
-        .save(&tmp)
-        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-    if corrupt {
-        // fault injection: tear the temp file *before* the publishing
-        // rename and still exit 0 — only the coordinator's artifact
-        // validation can catch this failure mode
-        let len = std::fs::metadata(&tmp)
-            .map_err(|e| format!("stat {}: {e}", tmp.display()))?
-            .len();
-        let f = std::fs::OpenOptions::new()
-            .write(true)
-            .open(&tmp)
-            .map_err(|e| format!("reopen {}: {e}", tmp.display()))?;
-        f.set_len(len / 2)
-            .map_err(|e| format!("truncate {}: {e}", tmp.display()))?;
-        info!(
-            "fault injection: worker {} truncating its artifact to {} bytes",
-            spec.submodel,
-            len / 2
-        );
-    }
-    std::fs::rename(&tmp, &spec.out)
-        .map_err(|e| format!("publish {}: {e}", spec.out.display()))?;
+    // the store publishes write-to-temp + rename (with the fault
+    // injection's truncation applied to the temp file when `corrupt`),
+    // so the coordinator can never observe a partial artifact
+    transport
+        .artifacts
+        .publish_artifact(spec.submodel, &artifact, corrupt)?;
     // the artifact supersedes the checkpoint; leaving it behind would only
     // confuse the stale-file cleanup of the next run
-    let _ = std::fs::remove_file(&ckpt);
+    transport.artifacts.remove_checkpoint(spec.submodel);
     journal.event(
         "artifact_published",
         vec![
@@ -798,6 +752,9 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         spec.submodel,
         spec.out.display()
     );
+    // remote workers drop their local shard cache; the fs transport's
+    // cleanup is a no-op
+    transport.shards.cleanup();
     Ok(())
 }
 
@@ -815,6 +772,12 @@ pub struct ProcsOptions {
     pub out_dir: PathBuf,
     /// extra environment for the workers (test hooks; empty in production)
     pub extra_env: Vec<(String, String)>,
+    /// when set, spawned workers get `--connect HOST:PORT` and fetch
+    /// shards from (and upload artifacts to) a `dw2v shard-server`
+    /// instead of touching `shard_dir`/`out_dir` themselves. The server
+    /// mirrors every upload into its own run dir, so the supervisor's
+    /// beacon polling and artifact collection work unchanged.
+    pub connect: Option<String>,
 }
 
 /// Why a worker produced no usable sub-model.
@@ -890,71 +853,6 @@ pub(crate) fn describe_status(status: &ExitStatus) -> String {
     "terminated abnormally".to_string()
 }
 
-/// Is `name` output of a previous run in the same artifact dir — a
-/// sub-model artifact/checkpoint/temp file, a worker beacon, a feed-mode
-/// statistics file, an event journal, a rendered run report, or a
-/// fault-injection marker?
-fn is_stale_run_file(name: &str) -> bool {
-    let sub = name.starts_with("submodel_")
-        && (name.ends_with(".dwsm") || name.ends_with(".ckpt") || name.ends_with(".tmp"));
-    let beacon = name.starts_with("beacon_")
-        && (name.ends_with(".json") || name.ends_with(".tmp"));
-    let feedstat = name.starts_with("feedstat_")
-        && (name.ends_with(".json") || name.ends_with(".tmp"));
-    let journal = name.starts_with("events_") && name.ends_with(".jsonl");
-    let report = name == crate::obs::report::REPORT_FILE
-        || name == crate::obs::report::REPORT_HTML_FILE;
-    sub || beacon || feedstat || journal || report || name.starts_with("fault_")
-}
-
-/// Delete leftovers of a previous run from `out_dir` (artifacts,
-/// checkpoints, temp files, beacons, fault markers) so a worker that dies
-/// before publishing can never let an older run's file masquerade as this
-/// run's output — and a fresh run never "resumes" an unrelated
-/// checkpoint. Returns how many files were removed.
-pub fn clean_artifact_dir(out_dir: &Path) -> Result<usize, String> {
-    let entries = match std::fs::read_dir(out_dir) {
-        Ok(e) => e,
-        // nothing to clean if the dir doesn't exist yet
-        Err(_) => return Ok(0),
-    };
-    let mut removed = 0usize;
-    for entry in entries.flatten() {
-        if let Some(name) = entry.file_name().to_str() {
-            if is_stale_run_file(name) {
-                std::fs::remove_file(entry.path())
-                    .map_err(|e| format!("remove stale {}: {e}", entry.path().display()))?;
-                removed += 1;
-            }
-        }
-    }
-    Ok(removed)
-}
-
-/// Remove torn shard spills (`shard_*.bin.tmp`) and a torn manifest temp
-/// left behind by an ingest that died mid-publish. Readers already skip
-/// `.tmp` files, so these are harmless to correctness — but left alone a
-/// dead run's debris would sit next to real data forever. Never called
-/// in feed mode: there the `.tmp` files belong to the live ingest.
-fn sweep_torn_shard_files(shard_dir: &Path) -> Result<usize, String> {
-    let entries = match std::fs::read_dir(shard_dir) {
-        Ok(e) => e,
-        Err(_) => return Ok(0),
-    };
-    let mut removed = 0usize;
-    for entry in entries.flatten() {
-        if let Some(name) = entry.file_name().to_str() {
-            let torn_shard = name.starts_with("shard_") && name.ends_with(".bin.tmp");
-            if torn_shard || name == feed::MANIFEST_TMP_FILE {
-                std::fs::remove_file(entry.path())
-                    .map_err(|e| format!("remove torn {}: {e}", entry.path().display()))?;
-                removed += 1;
-            }
-        }
-    }
-    Ok(removed)
-}
-
 /// Everything a coordinator does before the first spawn: validate the
 /// rate and the shard dir, create `out_dir`, sweep stale run files, and
 /// write the run's `config.json`. Returns the sub-model count and the
@@ -975,7 +873,11 @@ pub fn prepare_run(
     // long before any worker's Divider::new could reject it
     crate::util::config::validate_rate_percent(cfg.rate_percent)?;
     let n = cfg.num_submodels();
-    if !opts.shard_dir.join("vocab.tsv").is_file() {
+    // the coordinator's own view of the run dir is always the local
+    // filesystem — with `--connect`, only the *workers* go over TCP, and
+    // the server mirrors their uploads back into this same dir
+    let transport = Transport::fs(&opts.shard_dir, &opts.out_dir);
+    if !transport.shards.has_vocab() {
         return Err(format!(
             "{} has no vocab.tsv — persist a corpus first (gen-corpus, or --text with --shard-dir)",
             opts.shard_dir.display()
@@ -986,7 +888,7 @@ pub fn prepare_run(
         .iter()
         .any(|(k, v)| k == FEED_ENV && v.trim() == "1");
     let corpus_desc = if feed_mode {
-        match feed::ShardManifest::load(&opts.shard_dir)? {
+        match transport.shards.manifest()? {
             Some(m) if m.schedule.is_some() => format!(
                 "a growing shard dir ({} shards published so far)",
                 m.num_shards()
@@ -1000,7 +902,7 @@ pub fn prepare_run(
             }
         }
     } else {
-        let swept = sweep_torn_shard_files(&opts.shard_dir)?;
+        let swept = transport.shards.sweep_torn()?;
         if swept > 0 {
             info!(
                 "coordinator: removed {swept} torn .tmp files from {}",
@@ -1015,16 +917,13 @@ pub fn prepare_run(
             probe.total_sentences()
         )
     };
-    std::fs::create_dir_all(&opts.out_dir)
-        .map_err(|e| format!("create {}: {e}", opts.out_dir.display()))?;
-    let removed = clean_artifact_dir(&opts.out_dir)?;
+    let removed = transport.artifacts.prepare_out_dir()?;
     if removed > 0 {
         info!(
             "coordinator: removed {removed} stale run files from {}",
             opts.out_dir.display()
         );
     }
-    let config_path = opts.out_dir.join("config.json");
     // the seed is re-encoded as a decimal string: u64s above 2^53 don't
     // survive a JSON f64 round trip, and `apply` parses strings exactly
     let mut config_json = cfg.to_json();
@@ -1034,8 +933,9 @@ pub fn prepare_run(
             crate::util::json::Json::Str(cfg.seed.to_string()),
         );
     }
-    std::fs::write(&config_path, config_json.to_string_pretty())
-        .map_err(|e| format!("write {}: {e}", config_path.display()))?;
+    let config_path = transport
+        .artifacts
+        .write_config(&config_json.to_string_pretty())?;
     info!(
         "coordinator: spawning {n} workers over {corpus_desc}, exe {}",
         opts.worker_exe.display()
@@ -1065,6 +965,9 @@ pub fn spawn_one_worker(
         .arg(submodel.to_string())
         .arg("--out")
         .arg(&out);
+    if let Some(addr) = &opts.connect {
+        cmd.arg("--connect").arg(addr);
+    }
     for (k, v) in opts.extra_env.iter().chain(extra_env) {
         cmd.env(k, v);
     }
@@ -1074,38 +977,6 @@ pub fn spawn_one_worker(
             opts.worker_exe.display()
         )
     })
-}
-
-/// Load and validate the artifact a cleanly-exited worker should have
-/// published. Every error is attributed to the sub-model it belongs to —
-/// a truncated or corrupt file names its worker instead of surfacing as
-/// a bare parse error.
-pub fn collect_artifact(
-    out: &Path,
-    submodel: usize,
-    root_seed: u64,
-    num_submodels: usize,
-) -> Result<SubModelArtifact, String> {
-    let a = SubModelArtifact::load(out).map_err(|e| {
-        format!(
-            "sub-model {submodel}: artifact {} rejected: {e}",
-            out.display()
-        )
-    })?;
-    if a.meta.submodel != submodel
-        || a.meta.root_seed != root_seed
-        || a.meta.num_submodels != num_submodels
-    {
-        return Err(format!(
-            "sub-model {submodel}: artifact {} belongs to a different run \
-             (submodel {} of {}, root seed {})",
-            out.display(),
-            a.meta.submodel,
-            a.meta.num_submodels,
-            a.meta.root_seed
-        ));
-    }
-    Ok(a)
 }
 
 /// Spawn one `train-worker` process per sub-model. The experiment config
@@ -1306,7 +1177,7 @@ pub fn run_multiprocess(
 /// (the CLI case), else a `dw2v` sibling of the current executable or of
 /// its parent directory (the `target/<profile>/examples/…` case).
 pub fn find_worker_exe() -> Result<PathBuf, String> {
-    if let Ok(p) = std::env::var("DW2V_WORKER_EXE") {
+    if let Some(p) = env::worker_exe() {
         let p = PathBuf::from(p);
         if p.is_file() {
             return Ok(p);
@@ -1334,126 +1205,3 @@ pub fn find_worker_exe() -> Result<PathBuf, String> {
     ))
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn beacon_interval_parse_is_loud_on_garbage() {
-        // unset → documented default; well-formed values parse
-        assert_eq!(parse_beacon_interval(None), Ok(250));
-        assert_eq!(parse_beacon_interval(Some("10")), Ok(10));
-        assert_eq!(parse_beacon_interval(Some(" 500 ")), Ok(500));
-        // malformed values must be startup errors naming the variable,
-        // never a silent fall-back to 250ms
-        for bad in ["fast", "250ms", "", "-5", "2.5"] {
-            let err = parse_beacon_interval(Some(bad)).unwrap_err();
-            assert!(
-                err.contains("DW2V_BEACON_INTERVAL_MS"),
-                "'{bad}' must fail loudly, got: {err}"
-            );
-        }
-    }
-
-    #[test]
-    fn feed_flag_parse_is_loud_on_garbage() {
-        assert_eq!(parse_feed_mode(None), Ok(false));
-        assert_eq!(parse_feed_mode(Some("0")), Ok(false));
-        assert_eq!(parse_feed_mode(Some("")), Ok(false));
-        assert_eq!(parse_feed_mode(Some("1")), Ok(true));
-        for bad in ["yes", "true", "2"] {
-            assert!(parse_feed_mode(Some(bad)).is_err(), "should reject: {bad}");
-        }
-    }
-
-    #[test]
-    fn torn_shard_tmp_files_are_swept() {
-        let dir = std::env::temp_dir().join(format!("dw2v_torn_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        for name in [
-            "shard_0.bin",
-            "shard_1.bin.tmp",
-            "shards.json.tmp",
-            "shards.json",
-            "vocab.tsv",
-        ] {
-            std::fs::write(dir.join(name), b"x").unwrap();
-        }
-        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 2);
-        assert!(dir.join("shard_0.bin").exists(), "real shards must survive");
-        assert!(dir.join("shards.json").exists(), "the manifest must survive");
-        assert!(dir.join("vocab.tsv").exists());
-        assert!(!dir.join("shard_1.bin.tmp").exists());
-        assert!(!dir.join("shards.json.tmp").exists());
-        let _ = std::fs::remove_dir_all(&dir);
-        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 0);
-    }
-
-    #[test]
-    fn stale_run_files_are_recognized() {
-        for stale in [
-            "submodel_0.dwsm",
-            "submodel_12.ckpt",
-            "submodel_3.tmp",
-            "submodel_3.ckpt.tmp",
-            "beacon_0.json",
-            "beacon_7.json.tmp",
-            "feedstat_2.json",
-            "feedstat_2.json.tmp",
-            "fault_1_crash.fired",
-            "events_coordinator.jsonl",
-            "events_worker_3.jsonl",
-            "run_report.json",
-            "run_report.html",
-        ] {
-            assert!(is_stale_run_file(stale), "should be stale: {stale}");
-        }
-        for keep in [
-            "config.json",
-            "vocab.tsv",
-            "shard_0.bin",
-            "merged.bin",
-            "submodel_notes.txt",
-            "beacon_0.log",
-            "events_notes.txt",
-        ] {
-            assert!(!is_stale_run_file(keep), "should be kept: {keep}");
-        }
-    }
-
-    #[test]
-    fn clean_artifact_dir_sweeps_only_run_files() {
-        let dir = std::env::temp_dir().join(format!("dw2v_clean_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        std::fs::create_dir_all(&dir).unwrap();
-        for name in [
-            "submodel_0.dwsm",
-            "submodel_1.ckpt",
-            "beacon_0.json",
-            "fault_0_crash.fired",
-            "config.json",
-            "keepme.txt",
-        ] {
-            std::fs::write(dir.join(name), b"x").unwrap();
-        }
-        let removed = clean_artifact_dir(&dir).unwrap();
-        assert_eq!(removed, 4);
-        assert!(dir.join("config.json").exists());
-        assert!(dir.join("keepme.txt").exists());
-        assert!(!dir.join("submodel_0.dwsm").exists());
-        assert!(!dir.join("submodel_1.ckpt").exists());
-        assert!(!dir.join("beacon_0.json").exists());
-        // a missing dir is not an error — there is nothing to clean
-        let _ = std::fs::remove_dir_all(&dir);
-        assert_eq!(clean_artifact_dir(&dir).unwrap(), 0);
-    }
-
-    #[test]
-    fn checkpoint_path_swaps_the_extension() {
-        assert_eq!(
-            checkpoint_path(Path::new("/x/submodel_3.dwsm")),
-            PathBuf::from("/x/submodel_3.ckpt")
-        );
-    }
-}

@@ -26,14 +26,15 @@
 //! through the *real* supervisor with zero test-only control channels.
 
 use super::leader;
-use super::procs::{self, collect_artifact, ProcsOptions, WorkerFate, WorkerOutcome};
+use super::procs::{self, ProcsOptions, WorkerFate, WorkerOutcome};
 use crate::gen::benchmarks::Benchmark;
 use crate::info;
 use crate::obs::journal::Journal;
+use crate::transport::{ControlPlane, Transport};
 use crate::util::config::ExperimentConfig;
 use crate::util::json::{num, obj, s};
-use std::path::{Path, PathBuf};
 use std::process::Child;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Exit code a `crash@pairs=N` fault terminates the worker with —
@@ -41,18 +42,18 @@ use std::time::{Duration, Instant};
 /// crash from a genuine worker failure.
 pub const CRASH_EXIT_CODE: i32 = 102;
 
-/// Beacon file a worker publishes for `submodel` inside the artifact
-/// dir.
-pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
-    out_dir.join(format!("beacon_{submodel}.json"))
-}
+// Re-exported from the transport layer, where the run-dir naming now
+// lives; kept here so existing `supervisor::beacon_path` callers hold.
+pub use crate::transport::fs::beacon_path;
 
-/// Atomic heartbeat/progress publisher — the worker half of the
-/// supervision protocol.
+/// Heartbeat/progress publisher — the worker half of the supervision
+/// protocol, writing through the transport's [`ControlPlane`].
 ///
-/// Each write lands as a whole file via write-to-temp + rename (the same
-/// idiom as the sub-model artifact), so the coordinator never reads a
-/// torn beacon. The payload is a small JSON object:
+/// Over the filesystem transport each write lands as a whole file via
+/// write-to-temp + rename (the same idiom as the sub-model artifact),
+/// so the coordinator never reads a torn beacon; over TCP the same
+/// bytes are shipped to the shard server, which mirrors them into the
+/// run dir. The payload is a small JSON object:
 ///
 /// ```text
 /// { "submodel": 1, "phase": "start|estimate|waiting|train|done",
@@ -72,7 +73,7 @@ pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
 /// ingest is caught by the feed's own progress timeout (a loud worker
 /// error), not by the stall detector.
 pub struct BeaconWriter {
-    path: PathBuf,
+    control: Arc<dyn ControlPlane>,
     submodel: usize,
     interval: Duration,
     last: Option<Instant>,
@@ -80,9 +81,9 @@ pub struct BeaconWriter {
 }
 
 impl BeaconWriter {
-    pub fn new(path: PathBuf, submodel: usize, interval_ms: u64) -> Self {
+    pub fn new(control: Arc<dyn ControlPlane>, submodel: usize, interval_ms: u64) -> Self {
         Self {
-            path,
+            control,
             submodel,
             interval: Duration::from_millis(interval_ms.max(1)),
             last: None,
@@ -117,12 +118,7 @@ impl BeaconWriter {
             ("unix_ms", s(&unix_ms.to_string())),
         ])
         .to_string();
-        // best-effort: a failed beacon write must never fail training —
-        // the worst case is the supervisor calling a stall and respawning
-        let tmp = self.path.with_extension("json.tmp");
-        if std::fs::write(&tmp, body).is_ok() {
-            let _ = std::fs::rename(&tmp, &self.path);
-        }
+        self.control.publish_beacon(self.submodel, &body);
         self.last = Some(Instant::now());
     }
 }
@@ -244,28 +240,24 @@ impl FaultSpec {
 }
 
 /// Worker-side runtime for a [`FaultSpec`]: fires each fault at its
-/// trigger point. Crash and stall are one-shot per artifact dir via
-/// marker files written *before* firing, so a respawned worker sees the
-/// marker and proceeds normally.
+/// trigger point. Crash and stall are one-shot per run dir via marker
+/// records published through the [`ControlPlane`] *before* firing, so a
+/// respawned worker sees the marker and proceeds normally.
 pub struct ArmedFaults {
     spec: FaultSpec,
-    dir: PathBuf,
+    control: Arc<dyn ControlPlane>,
     submodel: usize,
     crash_armed: bool,
 }
 
 impl ArmedFaults {
-    pub fn new(spec: FaultSpec, dir: PathBuf, submodel: usize) -> Self {
+    pub fn new(spec: FaultSpec, control: Arc<dyn ControlPlane>, submodel: usize) -> Self {
         Self {
             spec,
-            dir,
+            control,
             submodel,
             crash_armed: true,
         }
-    }
-
-    fn marker(&self, action: &str) -> PathBuf {
-        self.dir.join(format!("fault_{}_{action}.fired", self.submodel))
     }
 
     /// Per-routed-sentence hook: apply `slow`, then fire `crash` once the
@@ -278,12 +270,11 @@ impl ArmedFaults {
         }
         if let Some(n) = self.spec.crash_at_pairs {
             if self.crash_armed && pairs >= n {
-                let marker = self.marker("crash");
-                if marker.exists() {
+                if self.control.fault_marker_fired(self.submodel, "crash") {
                     self.crash_armed = false; // fired in a previous incarnation
                     return;
                 }
-                let _ = std::fs::write(&marker, b"fired\n");
+                self.control.record_fault_marker(self.submodel, "crash");
                 info!(
                     "fault injection: worker {} crashing at {pairs} pairs (>= {n})",
                     self.submodel
@@ -296,11 +287,10 @@ impl ArmedFaults {
     /// Pre-epoch hook: `stall@epoch=K` hangs forever before epoch K.
     pub fn maybe_stall(&mut self, epoch: usize) {
         if self.spec.stall_at_epoch == Some(epoch) {
-            let marker = self.marker("stall");
-            if marker.exists() {
+            if self.control.fault_marker_fired(self.submodel, "stall") {
                 return;
             }
-            let _ = std::fs::write(&marker, b"fired\n");
+            self.control.record_fault_marker(self.submodel, "stall");
             info!(
                 "fault injection: worker {} stalling before epoch {epoch}",
                 self.submodel
@@ -424,8 +414,6 @@ enum SlotState {
 /// liveness bookkeeping, and the final outcome once resolved.
 struct Slot {
     submodel: usize,
-    out: PathBuf,
-    beacon: PathBuf,
     state: SlotState,
     last_beacon: Vec<u8>,
     last_progress: Instant,
@@ -517,7 +505,13 @@ pub fn run_supervised(
     sup: &SupervisorOptions,
 ) -> Result<SupervisedReport, String> {
     let (n, config_path) = procs::prepare_run(cfg, opts)?;
-    let journal = Journal::open(&opts.out_dir, "coordinator");
+    // everything the supervisor reads or writes below goes through the
+    // transport: beacons, artifacts, journals. The loop itself never
+    // touches the run dir directly, which is what lets a TCP fleet
+    // (whose server mirrors uploads into the same run dir) reuse it
+    // without modification.
+    let transport = Transport::fs(&opts.shard_dir, &opts.out_dir);
+    let journal = transport.control.journal("coordinator");
     journal.event(
         "run_start",
         vec![
@@ -526,7 +520,7 @@ pub fn run_supervised(
         ],
     );
     let beacon_env = vec![(
-        "DW2V_BEACON_INTERVAL_MS".to_string(),
+        crate::util::env::BEACON_INTERVAL_MS.to_string(),
         sup.beacon_interval_ms.to_string(),
     )];
     info!(
@@ -552,8 +546,6 @@ pub fn run_supervised(
         journal.event("worker_spawn", vec![("submodel", num(submodel as f64))]);
         slots.push(Slot {
             submodel,
-            out: opts.out_dir.join(format!("submodel_{submodel}.dwsm")),
-            beacon: beacon_path(&opts.out_dir, submodel),
             state: SlotState::Running(child),
             last_beacon: Vec::new(),
             last_progress: Instant::now(),
@@ -610,7 +602,11 @@ pub fn run_supervised(
                             procs::describe_status(&status)
                         );
                         if status.success() {
-                            match collect_artifact(&slot.out, slot.submodel, cfg.seed, n) {
+                            match transport.artifacts.collect_artifact(
+                                slot.submodel,
+                                cfg.seed,
+                                n,
+                            ) {
                                 Ok(artifact) => {
                                     journal.event(
                                         "worker_exit",
@@ -631,7 +627,7 @@ pub fn run_supervised(
                                     // a rejected artifact must not linger: a
                                     // retried worker republishes, a degraded
                                     // one must leave nothing collectible
-                                    let _ = std::fs::remove_file(&slot.out);
+                                    transport.artifacts.discard_artifact(slot.submodel);
                                     journal.event(
                                         "worker_crash",
                                         vec![
@@ -660,7 +656,7 @@ pub fn run_supervised(
                     }
                     Ok(None) => {
                         // liveness: any beacon byte change counts as progress
-                        if let Ok(bytes) = std::fs::read(&slot.beacon) {
+                        if let Some(bytes) = transport.control.poll_beacon(slot.submodel) {
                             if bytes != slot.last_beacon {
                                 slot.last_beacon = bytes;
                                 slot.last_progress = Instant::now();
@@ -819,9 +815,10 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("dw2v_beacon_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
+        let control = Transport::fs(&dir, &dir).control;
         let path = beacon_path(&dir, 3);
         // a long interval: the first write lands, the second is throttled
-        let mut w = BeaconWriter::new(path.clone(), 3, 60_000);
+        let mut w = BeaconWriter::new(control, 3, 60_000);
         w.maybe_write("train", 1, 10, 100);
         let first = std::fs::read(&path).unwrap();
         let j = crate::util::json::Json::parse(std::str::from_utf8(&first).unwrap()).unwrap();
@@ -847,14 +844,16 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("dw2v_fault_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         std::fs::create_dir_all(&dir).unwrap();
-        // a pre-existing marker disarms the stall (the crash path exits the
+        let control = Transport::fs(&dir, &dir).control;
+        // a pre-recorded marker disarms the stall (the crash path exits the
         // process, so only stall is testable in-process)
         let spec = FaultSpec {
             stall_at_epoch: Some(1),
             ..Default::default()
         };
-        let mut armed = ArmedFaults::new(spec, dir.clone(), 4);
-        std::fs::write(armed.marker("stall"), b"fired\n").unwrap();
+        control.record_fault_marker(4, "stall");
+        assert!(control.fault_marker_fired(4, "stall"));
+        let mut armed = ArmedFaults::new(spec, Arc::clone(&control), 4);
         armed.maybe_stall(1); // would hang forever if the marker were ignored
         // epochs other than the target never stall regardless of markers
         let mut fresh = ArmedFaults::new(
@@ -862,7 +861,7 @@ mod tests {
                 stall_at_epoch: Some(7),
                 ..Default::default()
             },
-            dir.clone(),
+            control,
             4,
         );
         fresh.maybe_stall(0);

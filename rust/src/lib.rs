@@ -126,6 +126,20 @@
 //! merges **bitwise identical** to ingest-then-train on the native
 //! backend (`cargo test --test overlap_e2e`).
 //!
+//! ## Transport layer
+//!
+//! Every coordinator↔worker exchange — shards in, artifacts, beacons,
+//! checkpoints, feed statistics and journal events out — goes through
+//! the pluggable [`transport`] layer ([`transport::ShardStore`] /
+//! [`transport::ArtifactStore`] / [`transport::ControlPlane`]).
+//! [`transport::fs::FsTransport`] is the local run-dir implementation
+//! (byte-for-byte the pre-transport behavior); `dw2v shard-server` +
+//! `train-worker --connect HOST:PORT` put the same contract on a
+//! length-prefixed TCP protocol ([`transport::frame`]), with the server
+//! mirroring every upload into an ordinary run dir so supervision and
+//! reporting work unchanged over either transport
+//! (`cargo test --test transport_e2e`).
+//!
 //! ## Serving layer
 //!
 //! Trained models are *used* through [`serve`]: an HNSW-style ANN index +
@@ -182,5 +196,6 @@ pub mod runtime;
 pub mod serve;
 pub mod sgns;
 pub mod text;
+pub mod transport;
 pub mod util;
 pub mod world;

@@ -6,6 +6,8 @@
 //!                   trained over a persisted shard directory
 //!   train-worker    train ONE sub-model in this process (what
 //!                   pipeline-procs spawns; rarely typed by hand)
+//!   shard-server    serve a shard dir to (and collect uploads from)
+//!                   remote train-workers over TCP (`--connect`)
 //!   hogwild         single-node lock-free baseline (paper's comparator)
 //!   mllib           parameter-averaging distributed baseline
 //!   kl              Figure-1 distribution statistics for the dividers
@@ -143,6 +145,7 @@ fn main() {
         Some("pipeline") => cmd_pipeline(&argv[1..]),
         Some("pipeline-procs") => cmd_pipeline_procs(&argv[1..]),
         Some("train-worker") => cmd_train_worker(&argv[1..]),
+        Some("shard-server") => cmd_shard_server(&argv[1..]),
         Some("hogwild") => cmd_hogwild(&argv[1..]),
         Some("mllib") => cmd_mllib(&argv[1..]),
         Some("kl") => cmd_kl(&argv[1..]),
@@ -152,7 +155,7 @@ fn main() {
         Some("report") => cmd_report(&argv[1..]),
         Some("artifacts") => cmd_artifacts(&argv[1..]),
         Some("--help") | Some("-h") | None => {
-            eprintln!("{USAGE}");
+            eprintln!("{USAGE}\n\nenvironment knobs:\n{}", dw2v::util::env::knob_table());
             Ok(())
         }
         Some(other) => Err(format!("unknown subcommand '{other}'\n\n{USAGE}")),
@@ -175,7 +178,11 @@ subcommands:
                   per --on-worker-failure retry|degrade|fail-fast (retry
                   respawns from epoch-boundary checkpoints)
   train-worker    train ONE sub-model from shard files in this process
-                  (spawned by pipeline-procs)
+                  (spawned by pipeline-procs); --connect HOST:PORT trains
+                  against a shard-server instead of the local filesystem
+  shard-server    serve a shard dir to remote train-workers over TCP and
+                  mirror their uploads (artifacts, beacons, journals) into
+                  a local run dir that status/report read unchanged
   hogwild         single-node lock-free baseline
   mllib           parameter-averaging distributed baseline
   kl              figure-1 KL-divergence statistics for the dividers
@@ -200,7 +207,8 @@ backends (--backend auto|native|xla):
   native       pure-rust CPU kernels — no artifacts, runs everywhere
   xla          PJRT AOT bridge — needs --features xla and `make artifacts`
 
-run `dw2v <subcommand> --help` for flags.";
+run `dw2v <subcommand> --help` for flags; `dw2v --help` lists the
+DW2V_* environment knobs.";
 
 /// Flags shared by every experiment-driving subcommand.
 fn experiment_command(name: &str, about: &str) -> Command {
@@ -366,7 +374,13 @@ fn cmd_train_worker(argv: &[String]) -> Result<(), String> {
         "train ONE sub-model in this process from on-disk shards",
     )
     .flag("submodel", None, "sub-model index to train (0-based) [required]")
-    .flag("out", None, "artifact output path (.dwsm) [required]");
+    .flag("out", None, "artifact output path (.dwsm) [required]")
+    .flag(
+        "connect",
+        None,
+        "HOST:PORT of a dw2v shard-server — stream shards from and publish \
+         artifacts/beacons to it instead of the local filesystem",
+    );
     let args = cmd.parse(argv).map_err(|e| e.to_string())?;
     let cfg = parse_experiment(&args)?;
     let shard_dir = required_flag(&args, "shard-dir", &cmd)?;
@@ -379,8 +393,44 @@ fn cmd_train_worker(argv: &[String]) -> Result<(), String> {
         shard_dir: std::path::PathBuf::from(shard_dir),
         submodel,
         out: std::path::PathBuf::from(out),
+        connect: args.get("connect").map(String::from),
     };
     dw2v::coordinator::procs::run_worker(&cfg, &spec)
+}
+
+/// `dw2v shard-server` — the server half of the TCP transport
+/// (`dw2v::transport`): serve a shard directory read-only and mirror
+/// worker uploads into a run dir as ordinary run-dir files, so
+/// `status`/`report` and the supervisor read a remote fleet unchanged.
+fn cmd_shard_server(argv: &[String]) -> Result<(), String> {
+    let cmd = Command::new(
+        "shard-server",
+        "serve shards to (and collect uploads from) remote train-workers",
+    )
+    .flag("shard-dir", None, "directory of shard_*.bin + vocab.tsv to serve [required]")
+    .flag(
+        "out-dir",
+        None,
+        "run dir uploads are mirrored into (default: <shard-dir>/submodels); point the \
+         coordinator's --out-dir at the same directory for a loopback deployment",
+    )
+    .flag("host", Some("127.0.0.1"), "address to bind")
+    .flag("port", Some("0"), "port to bind (0 = ephemeral; the bound address is printed)");
+    let args = cmd.parse(argv).map_err(|e| e.to_string())?;
+    let shard_dir = std::path::PathBuf::from(required_flag(&args, "shard-dir", &cmd)?);
+    let out_dir = args
+        .get("out-dir")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| shard_dir.join("submodels"));
+    let host = args.get_str("host", "127.0.0.1");
+    let port = args.get_u64("port").map_err(|e| e.to_string())?.unwrap_or(0);
+    let server =
+        dw2v::transport::server::ShardServer::bind(&format!("{host}:{port}"), &shard_dir, &out_dir)?;
+    println!("shard-server listening on {}", server.local_addr()?);
+    println!("  serving shards from {}", shard_dir.display());
+    println!("  mirroring uploads into {}", out_dir.display());
+    server.run();
+    Ok(())
 }
 
 fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
@@ -423,6 +473,12 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
         "beacon-interval-ms",
         Some("250"),
         "worker heartbeat publish interval (milliseconds)",
+    )
+    .flag(
+        "connect",
+        None,
+        "HOST:PORT of a dw2v shard-server — workers fetch shards from and upload \
+         artifacts to it; the server must mirror into this run's --out-dir",
     );
     let args = cmd.parse(argv).map_err(|e| e.to_string())?;
     let cfg = parse_experiment(&args)?;
@@ -445,6 +501,7 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
         shard_dir,
         out_dir,
         extra_env: Vec::new(),
+        connect: args.get("connect").map(String::from),
     };
     let mut sup = SupervisorOptions {
         policy: FailurePolicy::parse(&args.get_str("on-worker-failure", "retry"))?,
@@ -483,13 +540,8 @@ fn cmd_pipeline_procs(argv: &[String]) -> Result<(), String> {
         let mut ocfg = dw2v::text::ingest::OverlapOptions::new(scfg.window, scfg.subsample_t);
         // test hook: throttle shard publication so e2e tests can prove the
         // workers trained while shards were still being written
-        if let Ok(ms) = std::env::var("DW2V_INGEST_SHARD_DELAY_MS") {
-            let parsed: u64 = ms.trim().parse().map_err(|_| {
-                format!(
-                    "DW2V_INGEST_SHARD_DELAY_MS: '{ms}' is not a whole number of milliseconds"
-                )
-            })?;
-            ocfg.shard_delay = std::time::Duration::from_millis(parsed);
+        if let Some(ms) = dw2v::util::env::ingest_shard_delay_ms()? {
+            ocfg.shard_delay = std::time::Duration::from_millis(ms);
         }
         let ov = OverlapRunOptions {
             input: std::path::PathBuf::from(text),

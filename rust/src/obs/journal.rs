@@ -46,12 +46,24 @@ pub fn json_u64(v: &Json) -> Option<u64> {
     }
 }
 
+/// Where a journal's lines go. Local processes append to a file; a
+/// remote worker hands each finished line to a sender closure (the TCP
+/// transport ships it to the server, which appends it to the run dir so
+/// reports see one fleet regardless of where workers ran).
+enum Sink {
+    /// drops every event (open failed, or `Journal::disabled()`)
+    Disabled,
+    /// append to an `O_APPEND` file — the local case
+    File(Mutex<std::fs::File>),
+    /// hand the finished line (no trailing newline) to a transport
+    Sender(Box<dyn Fn(&str) + Send + Sync>),
+}
+
 /// An append-only JSONL event writer for one process. Cheap to clone
 /// into worker closures is a non-goal — open once, share by reference.
 pub struct Journal {
     role: String,
-    // None = disabled (open failed, or `Journal::disabled()`)
-    file: Option<Mutex<std::fs::File>>,
+    sink: Sink,
 }
 
 impl Journal {
@@ -67,7 +79,7 @@ impl Journal {
         match file {
             Ok(f) => Journal {
                 role: role.to_string(),
-                file: Some(Mutex::new(f)),
+                sink: Sink::File(Mutex::new(f)),
             },
             Err(e) => {
                 eprintln!(
@@ -79,6 +91,16 @@ impl Journal {
         }
     }
 
+    /// A journal that forwards each event line to `send` instead of a
+    /// local file. The closure owns delivery (and its failure policy —
+    /// journals are best-effort, so swallowing errors there is fine).
+    pub fn with_sender(role: &str, send: impl Fn(&str) + Send + Sync + 'static) -> Journal {
+        Journal {
+            role: role.to_string(),
+            sink: Sink::Sender(Box::new(send)),
+        }
+    }
+
     /// A journal that drops every event (for paths with no run dir).
     pub fn disabled() -> Journal {
         Journal::disabled_as("disabled")
@@ -87,30 +109,46 @@ impl Journal {
     fn disabled_as(role: &str) -> Journal {
         Journal {
             role: role.to_string(),
-            file: None,
+            sink: Sink::Disabled,
         }
     }
 
     pub fn is_enabled(&self) -> bool {
-        self.file.is_some()
+        !matches!(self.sink, Sink::Disabled)
     }
 
     /// Append one event: `{"unix_ms": "...", "role": ..., "kind": ...,
     /// ...fields}` as a single line, single write. Best-effort.
     pub fn event(&self, kind: &str, fields: Vec<(&str, Json)>) {
-        let Some(file) = &self.file else { return };
+        if let Sink::Disabled = self.sink {
+            return;
+        }
         let mut all = vec![
             ("unix_ms", u64s(unix_ms())),
             ("role", s(&self.role)),
             ("kind", s(kind)),
         ];
         all.extend(fields);
-        let mut line = obj(all).to_string();
-        line.push('\n');
-        if let Ok(mut f) = file.lock() {
-            let _ = f.write_all(line.as_bytes());
+        let line = obj(all).to_string();
+        match &self.sink {
+            Sink::Disabled => {}
+            Sink::File(file) => {
+                if let Ok(mut f) = file.lock() {
+                    let _ = f.write_all(format!("{line}\n").as_bytes());
+                }
+            }
+            Sink::Sender(send) => send(&line),
         }
     }
+}
+
+/// Open `dir/events_<role>.jsonl` fresh: delete last run's file first,
+/// then open. For journals that live outside the run dir (e.g. the
+/// overlap driver's, which `prepare_run`'s stale sweep never touches) —
+/// a new run must replace the old trace, not append to it.
+pub fn fresh_journal(dir: &Path, role: &str) -> Journal {
+    let _ = std::fs::remove_file(dir.join(journal_file_name(role)));
+    Journal::open(dir, role)
 }
 
 /// Parse a journal file. A line that fails to parse is tolerated **only
@@ -219,6 +257,38 @@ mod tests {
         let err = read_journal(&path).unwrap_err();
         assert!(err.contains("line 1"), "{err}");
         assert!(err.contains("corrupt"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sender_journal_forwards_complete_lines() {
+        let seen = std::sync::Arc::new(Mutex::new(Vec::<String>::new()));
+        let sink = std::sync::Arc::clone(&seen);
+        let j = Journal::with_sender("worker_1", move |line| {
+            sink.lock().unwrap().push(line.to_string());
+        });
+        assert!(j.is_enabled());
+        j.event("epoch_done", vec![("pairs", u64s(1 << 60))]);
+        let lines = seen.lock().unwrap();
+        assert_eq!(lines.len(), 1);
+        let parsed = Json::parse(&lines[0]).unwrap();
+        assert_eq!(parsed.get("kind").as_str(), Some("epoch_done"));
+        assert_eq!(parsed.get("role").as_str(), Some("worker_1"));
+        assert_eq!(json_u64(parsed.get("pairs")), Some(1 << 60));
+        assert!(!lines[0].ends_with('\n'), "sender lines carry no newline");
+    }
+
+    #[test]
+    fn fresh_journal_replaces_the_previous_file() {
+        let dir = tmpdir("fresh");
+        let old = Journal::open(&dir, "overlap");
+        old.event("stale", vec![]);
+        drop(old);
+        let j = fresh_journal(&dir, "overlap");
+        j.event("new_run", vec![]);
+        let events = read_journal(&dir.join(journal_file_name("overlap"))).unwrap();
+        assert_eq!(events.len(), 1, "the stale event must be gone");
+        assert_eq!(events[0].get("kind").as_str(), Some("new_run"));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

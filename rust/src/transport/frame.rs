@@ -1,0 +1,325 @@
+//! Wire framing for the DW2V transport protocol, version 1.
+//!
+//! The byte-level contract lives in the [`super`] module doc; this file
+//! is the only place that reads or writes it. Everything here is generic
+//! over `Read`/`Write` so the unit tests can exercise the exact
+//! serialization against in-memory buffers without opening a socket.
+//!
+//! Framing errors are all `String`s naming the field that went wrong —
+//! on the server they travel back to the client inside an `ERR` reply,
+//! on the client they surface as worker-fatal transport errors.
+
+use crate::util::json::Json;
+use std::io::{Read, Write};
+
+/// First four bytes of every connection, both directions.
+pub const MAGIC: [u8; 4] = *b"DW2V";
+/// Protocol version byte sent right after [`MAGIC`].
+pub const VERSION: u8 = 0x01;
+/// Upper bound on any payload or reply body. A frame claiming more is a
+/// protocol violation (or a corrupted length prefix) — reject it before
+/// allocating.
+pub const MAX_FRAME: usize = 1 << 30;
+
+pub const MSG_REGISTER: u8 = 0x01;
+pub const MSG_GET_VOCAB: u8 = 0x02;
+pub const MSG_GET_MANIFEST: u8 = 0x03;
+pub const MSG_GET_DIR_INFO: u8 = 0x04;
+pub const MSG_GET_SHARD: u8 = 0x05;
+pub const MSG_PUT_BEACON: u8 = 0x06;
+pub const MSG_PUT_ARTIFACT: u8 = 0x07;
+pub const MSG_PUT_CHECKPOINT: u8 = 0x08;
+pub const MSG_GET_CHECKPOINT: u8 = 0x09;
+pub const MSG_DEL_CHECKPOINT: u8 = 0x0A;
+pub const MSG_PUT_FEEDSTAT: u8 = 0x0B;
+pub const MSG_PUT_EVENT: u8 = 0x0C;
+pub const MSG_GET_MARKER: u8 = 0x0D;
+pub const MSG_PUT_MARKER: u8 = 0x0E;
+
+pub const REPLY_OK: u8 = 0x00;
+pub const REPLY_ERR: u8 = 0x01;
+pub const REPLY_ABSENT: u8 = 0x02;
+
+/// One decoded request: message type, JSON header, raw body bytes.
+pub struct Frame {
+    pub msg: u8,
+    pub header: Json,
+    pub body: Vec<u8>,
+}
+
+/// Client side of the handshake: send magic + version, require the
+/// server to echo the same five bytes back.
+pub fn client_handshake<S: Read + Write>(s: &mut S) -> Result<(), String> {
+    let mut hello = [0u8; 5];
+    hello[..4].copy_from_slice(&MAGIC);
+    hello[4] = VERSION;
+    s.write_all(&hello)
+        .map_err(|e| format!("handshake send: {e}"))?;
+    s.flush().map_err(|e| format!("handshake flush: {e}"))?;
+    let mut echo = [0u8; 5];
+    s.read_exact(&mut echo)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if echo != hello {
+        return Err(format!(
+            "handshake mismatch: peer answered {:02x?}, not DW2V v{VERSION} — \
+             is that really a dw2v shard-server?",
+            echo
+        ));
+    }
+    Ok(())
+}
+
+/// Server side of the handshake: require magic + version, echo them.
+pub fn server_handshake<S: Read + Write>(s: &mut S) -> Result<(), String> {
+    let mut hello = [0u8; 5];
+    s.read_exact(&mut hello)
+        .map_err(|e| format!("handshake read: {e}"))?;
+    if hello[..4] != MAGIC {
+        return Err(format!("bad magic {:02x?}: not a DW2V client", &hello[..4]));
+    }
+    if hello[4] != VERSION {
+        return Err(format!(
+            "protocol version {} not supported (this server speaks v{VERSION})",
+            hello[4]
+        ));
+    }
+    s.write_all(&hello)
+        .map_err(|e| format!("handshake echo: {e}"))?;
+    s.flush().map_err(|e| format!("handshake flush: {e}"))?;
+    Ok(())
+}
+
+/// Serialize one request frame: `msg` + payload length + payload, where
+/// the payload is the length-prefixed compact-JSON header followed by
+/// the raw body.
+pub fn write_frame<W: Write>(w: &mut W, msg: u8, header: &Json, body: &[u8]) -> Result<(), String> {
+    let header_bytes = header.to_string().into_bytes();
+    let payload_len = 4 + header_bytes.len() + body.len();
+    if payload_len > MAX_FRAME {
+        return Err(format!("frame of {payload_len} bytes exceeds MAX_FRAME ({MAX_FRAME})"));
+    }
+    w.write_all(&[msg]).map_err(|e| format!("send frame type: {e}"))?;
+    w.write_all(&(payload_len as u32).to_be_bytes())
+        .map_err(|e| format!("send frame length: {e}"))?;
+    w.write_all(&(header_bytes.len() as u32).to_be_bytes())
+        .map_err(|e| format!("send header length: {e}"))?;
+    w.write_all(&header_bytes).map_err(|e| format!("send header: {e}"))?;
+    w.write_all(body).map_err(|e| format!("send body: {e}"))?;
+    w.flush().map_err(|e| format!("flush frame: {e}"))?;
+    Ok(())
+}
+
+/// Read one request frame. `Ok(None)` means the peer closed the
+/// connection cleanly *between* frames — for the server that is the
+/// normal end of a worker session (including one that was SIGKILLed),
+/// not an error. EOF anywhere inside a frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, String> {
+    let mut msg = [0u8; 1];
+    loop {
+        match r.read(&mut msg) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(format!("read frame type: {e}")),
+        }
+    }
+    let payload_len = read_u32(r, "payload length")? as usize;
+    if payload_len > MAX_FRAME {
+        return Err(format!("frame of {payload_len} bytes exceeds MAX_FRAME ({MAX_FRAME})"));
+    }
+    if payload_len < 4 {
+        return Err(format!("payload of {payload_len} bytes cannot hold a header length"));
+    }
+    let payload = read_exact_vec(r, payload_len, "payload")?;
+    let header_len = u32::from_be_bytes([payload[0], payload[1], payload[2], payload[3]]) as usize;
+    if 4 + header_len > payload.len() {
+        return Err(format!(
+            "header of {header_len} bytes overruns the {payload_len}-byte payload"
+        ));
+    }
+    let header_text = std::str::from_utf8(&payload[4..4 + header_len])
+        .map_err(|e| format!("header is not UTF-8: {e}"))?;
+    let header = Json::parse(header_text).map_err(|e| format!("parse header: {e}"))?;
+    let body = payload[4 + header_len..].to_vec();
+    Ok(Some(Frame { msg: msg[0], header, body }))
+}
+
+/// Serialize one reply: status byte + body length + body.
+pub fn write_reply<W: Write>(w: &mut W, status: u8, body: &[u8]) -> Result<(), String> {
+    if body.len() > MAX_FRAME {
+        return Err(format!("reply of {} bytes exceeds MAX_FRAME ({MAX_FRAME})", body.len()));
+    }
+    w.write_all(&[status]).map_err(|e| format!("send reply status: {e}"))?;
+    w.write_all(&(body.len() as u32).to_be_bytes())
+        .map_err(|e| format!("send reply length: {e}"))?;
+    w.write_all(body).map_err(|e| format!("send reply body: {e}"))?;
+    w.flush().map_err(|e| format!("flush reply: {e}"))?;
+    Ok(())
+}
+
+/// Read one reply. Unlike [`read_frame`], EOF here is always an error —
+/// a client only reads a reply after sending a request, so the server
+/// hanging up mid-exchange is a failure to report.
+pub fn read_reply<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), String> {
+    let mut status = [0u8; 1];
+    r.read_exact(&mut status)
+        .map_err(|e| format!("read reply status: {e}"))?;
+    let body_len = read_u32(r, "reply length")? as usize;
+    if body_len > MAX_FRAME {
+        return Err(format!("reply of {body_len} bytes exceeds MAX_FRAME ({MAX_FRAME})"));
+    }
+    let body = read_exact_vec(r, body_len, "reply body")?;
+    Ok((status[0], body))
+}
+
+/// Require a string-valued header field (the protocol carries every
+/// integer as a decimal string — see the module doc's u64 rule).
+pub fn header_str<'a>(header: &'a Json, key: &str) -> Result<&'a str, String> {
+    header
+        .get(key)
+        .as_str()
+        .ok_or_else(|| format!("header field '{key}' missing or not a string"))
+}
+
+/// Require a header field holding a decimal integer as a string.
+pub fn header_usize(header: &Json, key: &str) -> Result<usize, String> {
+    let raw = header_str(header, key)?;
+    raw.parse::<usize>()
+        .map_err(|_| format!("header field '{key}' is '{raw}', not a whole number"))
+}
+
+fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32, String> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(|e| format!("read {what}: {e}"))?;
+    Ok(u32::from_be_bytes(b))
+}
+
+fn read_exact_vec<R: Read>(r: &mut R, len: usize, what: &str) -> Result<Vec<u8>, String> {
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).map_err(|e| format!("read {what}: {e}"))?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{obj, s};
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip_preserves_type_header_and_body() {
+        let mut wire = Vec::new();
+        let header = obj(vec![("submodel", s("3")), ("shard", s("12"))]);
+        let body = vec![0u8, 1, 2, 254, 255];
+        write_frame(&mut wire, MSG_GET_SHARD, &header, &body).unwrap();
+        let frame = read_frame(&mut Cursor::new(&wire)).unwrap().expect("one frame");
+        assert_eq!(frame.msg, MSG_GET_SHARD);
+        assert_eq!(header_usize(&frame.header, "submodel").unwrap(), 3);
+        assert_eq!(header_usize(&frame.header, "shard").unwrap(), 12);
+        assert_eq!(frame.body, body);
+    }
+
+    #[test]
+    fn clean_eof_before_a_frame_is_none_not_an_error() {
+        assert!(read_frame(&mut Cursor::new(Vec::<u8>::new())).unwrap().is_none());
+    }
+
+    #[test]
+    fn eof_inside_a_frame_is_an_error() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, MSG_REGISTER, &obj(vec![("submodel", s("0"))]), b"").unwrap();
+        wire.truncate(wire.len() - 1);
+        let err = read_frame(&mut Cursor::new(&wire)).unwrap_err();
+        assert!(err.contains("payload"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn oversize_length_prefix_is_rejected_before_allocation() {
+        // type byte + a 4-byte length claiming 2 GiB
+        let mut wire = vec![MSG_GET_VOCAB];
+        wire.extend_from_slice(&(2u32 << 30).to_be_bytes());
+        let err = read_frame(&mut Cursor::new(&wire)).unwrap_err();
+        assert!(err.contains("MAX_FRAME"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn header_overrunning_payload_is_rejected() {
+        // payload_len = 4, header_len claims 100
+        let mut wire = vec![MSG_GET_VOCAB];
+        wire.extend_from_slice(&4u32.to_be_bytes());
+        wire.extend_from_slice(&100u32.to_be_bytes());
+        let err = read_frame(&mut Cursor::new(&wire)).unwrap_err();
+        assert!(err.contains("overruns"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn reply_roundtrip_and_status_codes() {
+        for (status, body) in [
+            (REPLY_OK, b"payload".to_vec()),
+            (REPLY_ERR, b"no such shard".to_vec()),
+            (REPLY_ABSENT, Vec::new()),
+        ] {
+            let mut wire = Vec::new();
+            write_reply(&mut wire, status, &body).unwrap();
+            let (got_status, got_body) = read_reply(&mut Cursor::new(&wire)).unwrap();
+            assert_eq!(got_status, status);
+            assert_eq!(got_body, body);
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_rejections() {
+        struct Duplex {
+            incoming: Cursor<Vec<u8>>,
+            outgoing: Vec<u8>,
+        }
+        impl std::io::Read for Duplex {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                self.incoming.read(buf)
+            }
+        }
+        impl std::io::Write for Duplex {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.outgoing.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        // server accepts a well-formed hello and echoes it
+        let mut srv = Duplex {
+            incoming: Cursor::new(vec![b'D', b'W', b'2', b'V', VERSION]),
+            outgoing: Vec::new(),
+        };
+        server_handshake(&mut srv).unwrap();
+        assert_eq!(srv.outgoing, vec![b'D', b'W', b'2', b'V', VERSION]);
+
+        // client accepts the echo
+        let mut cli = Duplex {
+            incoming: Cursor::new(vec![b'D', b'W', b'2', b'V', VERSION]),
+            outgoing: Vec::new(),
+        };
+        client_handshake(&mut cli).unwrap();
+
+        // wrong magic and wrong version are both rejected by the server
+        let mut bad_magic = Duplex {
+            incoming: Cursor::new(vec![b'H', b'T', b'T', b'P', VERSION]),
+            outgoing: Vec::new(),
+        };
+        assert!(server_handshake(&mut bad_magic).unwrap_err().contains("magic"));
+        let mut bad_version = Duplex {
+            incoming: Cursor::new(vec![b'D', b'W', b'2', b'V', 9]),
+            outgoing: Vec::new(),
+        };
+        assert!(server_handshake(&mut bad_version).unwrap_err().contains("version"));
+
+        // a client talking to something that answers garbage bails out
+        let mut cli_bad = Duplex {
+            incoming: Cursor::new(vec![0, 1, 2, 3, 4]),
+            outgoing: Vec::new(),
+        };
+        assert!(client_handshake(&mut cli_bad).unwrap_err().contains("mismatch"));
+    }
+}

@@ -1,0 +1,455 @@
+//! [`FsTransport`] — the filesystem transport, extracted mechanically
+//! from the PR-5/PR-6 coordinator so its behavior (paths, temp-file
+//! names, error messages, publication order) is byte-for-byte what the
+//! pre-transport code did. Both sides of a local run share it: the
+//! coordinator polls beacons and collects artifacts from `out_dir`, a
+//! worker publishes into the same directory. It is also the server side
+//! of a TCP deployment — [`super::server::ShardServer`] mirrors remote
+//! uploads into the run dir these same helpers manage.
+
+use super::{ArtifactStore, ControlPlane, ShardStore, Transport};
+use crate::embedding::{CheckpointArtifact, SubModelArtifact};
+use crate::info;
+use crate::obs::journal::Journal;
+use crate::text::feed::{self, ShardManifest};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Beacon file a worker publishes for `submodel` inside the artifact
+/// dir.
+pub fn beacon_path(out_dir: &Path, submodel: usize) -> PathBuf {
+    out_dir.join(format!("beacon_{submodel}.json"))
+}
+
+/// Coordinator-side artifact naming: `submodel_<s>.dwsm` in the run dir.
+pub fn artifact_path(out_dir: &Path, submodel: usize) -> PathBuf {
+    out_dir.join(format!("submodel_{submodel}.dwsm"))
+}
+
+/// Where a worker keeps its epoch-boundary checkpoint, derived from the
+/// artifact path: `submodel_3.dwsm` → `submodel_3.ckpt`.
+pub fn checkpoint_path(out: &Path) -> PathBuf {
+    out.with_extension("ckpt")
+}
+
+/// One-shot fault-injection marker for `(submodel, action)` — e.g.
+/// `fault_1_crash.fired`.
+pub fn fault_marker_path(out_dir: &Path, submodel: usize, action: &str) -> PathBuf {
+    out_dir.join(format!("fault_{submodel}_{action}.fired"))
+}
+
+/// Is `name` output of a previous run in the same artifact dir — a
+/// sub-model artifact/checkpoint/temp file, a worker beacon, a feed-mode
+/// statistics file, an event journal, a rendered run report, or a
+/// fault-injection marker?
+fn is_stale_run_file(name: &str) -> bool {
+    let sub = name.starts_with("submodel_")
+        && (name.ends_with(".dwsm") || name.ends_with(".ckpt") || name.ends_with(".tmp"));
+    let beacon = name.starts_with("beacon_")
+        && (name.ends_with(".json") || name.ends_with(".tmp"));
+    let feedstat = name.starts_with("feedstat_")
+        && (name.ends_with(".json") || name.ends_with(".tmp"));
+    let journal = name.starts_with("events_") && name.ends_with(".jsonl");
+    let report = name == crate::obs::report::REPORT_FILE
+        || name == crate::obs::report::REPORT_HTML_FILE;
+    sub || beacon || feedstat || journal || report || name.starts_with("fault_")
+}
+
+/// Delete leftovers of a previous run from `out_dir` (artifacts,
+/// checkpoints, temp files, beacons, fault markers) so a worker that dies
+/// before publishing can never let an older run's file masquerade as this
+/// run's output — and a fresh run never "resumes" an unrelated
+/// checkpoint. Returns how many files were removed.
+pub fn clean_artifact_dir(out_dir: &Path) -> Result<usize, String> {
+    let entries = match std::fs::read_dir(out_dir) {
+        Ok(e) => e,
+        // nothing to clean if the dir doesn't exist yet
+        Err(_) => return Ok(0),
+    };
+    let mut removed = 0usize;
+    for entry in entries.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            if is_stale_run_file(name) {
+                std::fs::remove_file(entry.path())
+                    .map_err(|e| format!("remove stale {}: {e}", entry.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+/// Remove torn shard spills (`shard_*.bin.tmp`) and a torn manifest temp
+/// left behind by an ingest that died mid-publish. Readers already skip
+/// `.tmp` files, so these are harmless to correctness — but left alone a
+/// dead run's debris would sit next to real data forever. Never called
+/// in feed mode: there the `.tmp` files belong to the live ingest.
+fn sweep_torn_shard_files(shard_dir: &Path) -> Result<usize, String> {
+    let entries = match std::fs::read_dir(shard_dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(0),
+    };
+    let mut removed = 0usize;
+    for entry in entries.flatten() {
+        if let Some(name) = entry.file_name().to_str() {
+            let torn_shard = name.starts_with("shard_") && name.ends_with(".bin.tmp");
+            if torn_shard || name == feed::MANIFEST_TMP_FILE {
+                std::fs::remove_file(entry.path())
+                    .map_err(|e| format!("remove torn {}: {e}", entry.path().display()))?;
+                removed += 1;
+            }
+        }
+    }
+    Ok(removed)
+}
+
+/// Load and validate the artifact a cleanly-exited worker should have
+/// published. Every error is attributed to the sub-model it belongs to —
+/// a truncated or corrupt file names its worker instead of surfacing as
+/// a bare parse error.
+pub fn collect_artifact(
+    out: &Path,
+    submodel: usize,
+    root_seed: u64,
+    num_submodels: usize,
+) -> Result<SubModelArtifact, String> {
+    let a = SubModelArtifact::load(out).map_err(|e| {
+        format!(
+            "sub-model {submodel}: artifact {} rejected: {e}",
+            out.display()
+        )
+    })?;
+    if a.meta.submodel != submodel
+        || a.meta.root_seed != root_seed
+        || a.meta.num_submodels != num_submodels
+    {
+        return Err(format!(
+            "sub-model {submodel}: artifact {} belongs to a different run \
+             (submodel {} of {}, root seed {})",
+            out.display(),
+            a.meta.submodel,
+            a.meta.num_submodels,
+            a.meta.root_seed
+        ));
+    }
+    Ok(a)
+}
+
+/// The filesystem transport: a shard dir to read from and a run dir to
+/// publish into. `artifact_override` pins the worker's own artifact to
+/// an explicit path (`train-worker --out` accepts any path); without it
+/// artifacts follow the coordinator naming [`artifact_path`].
+pub struct FsTransport {
+    shard_dir: PathBuf,
+    out_dir: PathBuf,
+    artifact_override: Option<PathBuf>,
+}
+
+impl FsTransport {
+    pub fn new(shard_dir: &Path, out_dir: &Path, artifact_override: Option<PathBuf>) -> Self {
+        Self {
+            shard_dir: shard_dir.to_path_buf(),
+            out_dir: out_dir.to_path_buf(),
+            artifact_override,
+        }
+    }
+
+    /// Wrap one shared instance as all three trait objects.
+    pub fn into_transport(self) -> Transport {
+        let me = Arc::new(self);
+        Transport {
+            shards: Arc::clone(&me) as Arc<dyn ShardStore>,
+            artifacts: Arc::clone(&me) as Arc<dyn ArtifactStore>,
+            control: me as Arc<dyn ControlPlane>,
+        }
+    }
+
+    fn artifact(&self, submodel: usize) -> PathBuf {
+        match &self.artifact_override {
+            Some(p) => p.clone(),
+            None => artifact_path(&self.out_dir, submodel),
+        }
+    }
+
+    fn checkpoint(&self, submodel: usize) -> PathBuf {
+        checkpoint_path(&self.artifact(submodel))
+    }
+}
+
+impl ShardStore for FsTransport {
+    fn local_dir(&self) -> &Path {
+        &self.shard_dir
+    }
+
+    fn vocab_text(&self) -> Result<String, String> {
+        let vocab_path = self.shard_dir.join("vocab.tsv");
+        std::fs::read_to_string(&vocab_path)
+            .map_err(|e| format!("read {}: {e}", vocab_path.display()))
+    }
+
+    fn has_vocab(&self) -> bool {
+        self.shard_dir.join("vocab.tsv").is_file()
+    }
+
+    fn manifest(&self) -> Result<Option<ShardManifest>, String> {
+        ShardManifest::load(&self.shard_dir)
+    }
+
+    fn sweep_torn(&self) -> Result<usize, String> {
+        sweep_torn_shard_files(&self.shard_dir)
+    }
+
+    fn prepare_ingest_dir(&self) -> Result<(), String> {
+        std::fs::create_dir_all(&self.shard_dir)
+            .map_err(|e| format!("create {}: {e}", self.shard_dir.display()))?;
+        crate::text::corpus::remove_stale_shards(&self.shard_dir)
+            .map_err(|e| format!("clear stale shards in {}: {e}", self.shard_dir.display()))
+    }
+}
+
+impl ArtifactStore for FsTransport {
+    fn prepare_out_dir(&self) -> Result<usize, String> {
+        std::fs::create_dir_all(&self.out_dir)
+            .map_err(|e| format!("create {}: {e}", self.out_dir.display()))?;
+        clean_artifact_dir(&self.out_dir)
+    }
+
+    fn write_config(&self, body: &str) -> Result<PathBuf, String> {
+        let config_path = self.out_dir.join("config.json");
+        std::fs::write(&config_path, body)
+            .map_err(|e| format!("write {}: {e}", config_path.display()))?;
+        Ok(config_path)
+    }
+
+    fn publish_artifact(
+        &self,
+        submodel: usize,
+        artifact: &SubModelArtifact,
+        corrupt: bool,
+    ) -> Result<(), String> {
+        // write-then-rename: the coordinator must never observe a partial
+        // artifact, even if this process dies mid-save
+        let out = self.artifact(submodel);
+        let tmp = out.with_extension("tmp");
+        artifact
+            .save(&tmp)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        if corrupt {
+            // fault injection: tear the temp file *before* the publishing
+            // rename and still exit 0 — only the coordinator's artifact
+            // validation can catch this failure mode
+            let len = std::fs::metadata(&tmp)
+                .map_err(|e| format!("stat {}: {e}", tmp.display()))?
+                .len();
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&tmp)
+                .map_err(|e| format!("reopen {}: {e}", tmp.display()))?;
+            f.set_len(len / 2)
+                .map_err(|e| format!("truncate {}: {e}", tmp.display()))?;
+            info!(
+                "fault injection: worker {} truncating its artifact to {} bytes",
+                submodel,
+                len / 2
+            );
+        }
+        std::fs::rename(&tmp, &out)
+            .map_err(|e| format!("publish {}: {e}", out.display()))?;
+        Ok(())
+    }
+
+    fn collect_artifact(
+        &self,
+        submodel: usize,
+        root_seed: u64,
+        num_submodels: usize,
+    ) -> Result<SubModelArtifact, String> {
+        collect_artifact(&self.artifact(submodel), submodel, root_seed, num_submodels)
+    }
+
+    fn discard_artifact(&self, submodel: usize) {
+        // a rejected artifact must not linger: a retried worker
+        // republishes, a degraded one must leave nothing collectible
+        let _ = std::fs::remove_file(self.artifact(submodel));
+    }
+
+    fn save_checkpoint(&self, submodel: usize, ck: &CheckpointArtifact) -> Result<(), String> {
+        let path = self.checkpoint(submodel);
+        let tmp = path.with_extension("ckpt.tmp");
+        ck.save(&tmp)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    fn load_checkpoint(&self, submodel: usize) -> Option<Result<CheckpointArtifact, String>> {
+        let path = self.checkpoint(submodel);
+        if !path.is_file() {
+            return None;
+        }
+        Some(CheckpointArtifact::load(&path).map_err(|e| e.to_string()))
+    }
+
+    fn remove_checkpoint(&self, submodel: usize) {
+        let _ = std::fs::remove_file(self.checkpoint(submodel));
+    }
+
+    fn checkpoint_desc(&self, submodel: usize) -> String {
+        self.checkpoint(submodel).display().to_string()
+    }
+}
+
+impl ControlPlane for FsTransport {
+    fn register(&self, _submodel: usize) -> Result<(), String> {
+        Ok(())
+    }
+
+    fn publish_beacon(&self, submodel: usize, body: &str) {
+        // best-effort: a failed beacon write must never fail training —
+        // the worst case is the supervisor calling a stall and respawning
+        let path = beacon_path(&self.out_dir, submodel);
+        let tmp = path.with_extension("json.tmp");
+        if std::fs::write(&tmp, body).is_ok() {
+            let _ = std::fs::rename(&tmp, &path);
+        }
+    }
+
+    fn poll_beacon(&self, submodel: usize) -> Option<Vec<u8>> {
+        std::fs::read(beacon_path(&self.out_dir, submodel)).ok()
+    }
+
+    fn publish_feedstat(&self, submodel: usize, body: &str) -> Result<(), String> {
+        let path = self.out_dir.join(format!("feedstat_{submodel}.json"));
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    fn fault_marker_fired(&self, submodel: usize, action: &str) -> bool {
+        fault_marker_path(&self.out_dir, submodel, action).exists()
+    }
+
+    fn record_fault_marker(&self, submodel: usize, action: &str) {
+        let _ = std::fs::write(
+            fault_marker_path(&self.out_dir, submodel, action),
+            b"fired\n",
+        );
+    }
+
+    fn journal(&self, role: &str) -> Journal {
+        Journal::open(&self.out_dir, role)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torn_shard_tmp_files_are_swept() {
+        let dir = std::env::temp_dir().join(format!("dw2v_torn_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in [
+            "shard_0.bin",
+            "shard_1.bin.tmp",
+            "shards.json.tmp",
+            "shards.json",
+            "vocab.tsv",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 2);
+        assert!(dir.join("shard_0.bin").exists(), "real shards must survive");
+        assert!(dir.join("shards.json").exists(), "the manifest must survive");
+        assert!(dir.join("vocab.tsv").exists());
+        assert!(!dir.join("shard_1.bin.tmp").exists());
+        assert!(!dir.join("shards.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(sweep_torn_shard_files(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn stale_run_files_are_recognized() {
+        for stale in [
+            "submodel_0.dwsm",
+            "submodel_12.ckpt",
+            "submodel_3.tmp",
+            "submodel_3.ckpt.tmp",
+            "beacon_0.json",
+            "beacon_7.json.tmp",
+            "feedstat_2.json",
+            "feedstat_2.json.tmp",
+            "fault_1_crash.fired",
+            "events_coordinator.jsonl",
+            "events_worker_3.jsonl",
+            "run_report.json",
+            "run_report.html",
+        ] {
+            assert!(is_stale_run_file(stale), "should be stale: {stale}");
+        }
+        for keep in [
+            "config.json",
+            "vocab.tsv",
+            "shard_0.bin",
+            "merged.bin",
+            "submodel_notes.txt",
+            "beacon_0.log",
+            "events_notes.txt",
+        ] {
+            assert!(!is_stale_run_file(keep), "should be kept: {keep}");
+        }
+    }
+
+    #[test]
+    fn clean_artifact_dir_sweeps_only_run_files() {
+        let dir = std::env::temp_dir().join(format!("dw2v_clean_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in [
+            "submodel_0.dwsm",
+            "submodel_1.ckpt",
+            "beacon_0.json",
+            "fault_0_crash.fired",
+            "config.json",
+            "keepme.txt",
+        ] {
+            std::fs::write(dir.join(name), b"x").unwrap();
+        }
+        let removed = clean_artifact_dir(&dir).unwrap();
+        assert_eq!(removed, 4);
+        assert!(dir.join("config.json").exists());
+        assert!(dir.join("keepme.txt").exists());
+        assert!(!dir.join("submodel_0.dwsm").exists());
+        assert!(!dir.join("submodel_1.ckpt").exists());
+        assert!(!dir.join("beacon_0.json").exists());
+        // a missing dir is not an error — there is nothing to clean
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(clean_artifact_dir(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn checkpoint_path_swaps_the_extension() {
+        assert_eq!(
+            checkpoint_path(Path::new("/x/submodel_3.dwsm")),
+            PathBuf::from("/x/submodel_3.ckpt")
+        );
+    }
+
+    #[test]
+    fn fs_worker_transport_respects_the_artifact_override() {
+        let t = FsTransport::new(
+            Path::new("/shards"),
+            Path::new("/run"),
+            Some(PathBuf::from("/elsewhere/nope.dwsm")),
+        );
+        assert_eq!(t.artifact(3), PathBuf::from("/elsewhere/nope.dwsm"));
+        assert_eq!(t.checkpoint(3), PathBuf::from("/elsewhere/nope.ckpt"));
+        let c = FsTransport::new(Path::new("/shards"), Path::new("/run"), None);
+        assert_eq!(c.artifact(3), PathBuf::from("/run/submodel_3.dwsm"));
+        assert_eq!(c.checkpoint(3), PathBuf::from("/run/submodel_3.ckpt"));
+    }
+}

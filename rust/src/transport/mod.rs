@@ -1,0 +1,244 @@
+//! The coordinator↔worker transport layer.
+//!
+//! PR 5 made the persisted shard directory + the run directory the *only*
+//! exchange medium between the coordinator and its train workers. This
+//! module names that interface: three traits cover every exchange, a
+//! filesystem implementation ([`fs::FsTransport`]) reproduces the
+//! pre-refactor behavior byte for byte, and a TCP implementation
+//! ([`tcp`] + [`server::ShardServer`]) puts the same interface on the
+//! network so a worker can live on another host. The supervisor loop
+//! (stall detection via beacon-byte change, retry/degrade/fail-fast,
+//! survivor merge) is transport-indifferent — it talks only to these
+//! traits.
+//!
+//! * [`ShardStore`] — the corpus side: the shard directory holding
+//!   `shard_*.bin` + `vocab.tsv` and, for an overlapped ingest, the
+//!   `shards.json` manifest ([`crate::text::feed::ShardManifest`]).
+//!   Implementations materialize a **local** directory
+//!   ([`ShardStore::local_dir`]) so the sentence-streaming readers
+//!   (`ShardFileSource` / `ShardFeed`) run unchanged over either
+//!   transport; the TCP store mirrors remote shards into a per-process
+//!   cache, republishing the manifest only as shards land (preserving
+//!   the feed invariant: a manifest row appears only after its shard is
+//!   readable).
+//! * [`ArtifactStore`] — the result side: atomic publish/collect of
+//!   sub-model artifacts (`submodel_<s>.dwsm`) and epoch-boundary
+//!   checkpoints (`submodel_<s>.ckpt`), plus run-dir preparation
+//!   (stale-file sweep, `config.json`).
+//! * [`ControlPlane`] — the liveness side: heartbeat beacons
+//!   (`beacon_<s>.json`), worker registration, feed statistics
+//!   (`feedstat_<s>.json`), one-shot fault markers
+//!   (`fault_<s>_<action>.fired`) and per-role event journals
+//!   (`events_<role>.jsonl`).
+//!
+//! # Run-dir layout (the contract every transport preserves)
+//!
+//! Shard directory (read-only to workers):
+//!
+//! | file | writer | meaning |
+//! |---|---|---|
+//! | `shard_<i>.bin` | ingest / gen-corpus | binary sentence shard `i` (dense `0..n`) |
+//! | `vocab.tsv` | ingest / gen-corpus | `word<TAB>count` vocabulary |
+//! | `shards.json` | overlapped ingest | manifest: published-shard rows + lr-schedule block |
+//!
+//! Run directory (`--out-dir`):
+//!
+//! | file | writer | meaning |
+//! |---|---|---|
+//! | `config.json` | coordinator | resolved experiment config for the run |
+//! | `submodel_<s>.dwsm` | worker `s` | published sub-model artifact |
+//! | `submodel_<s>.ckpt` | worker `s` | epoch-boundary checkpoint (deleted on success) |
+//! | `beacon_<s>.json` | worker `s` | heartbeat; rewritten atomically, any byte change = liveness |
+//! | `feedstat_<s>.json` | worker `s` | overlap feed wait statistics |
+//! | `events_<role>.jsonl` | each process | append-only event journal |
+//! | `fault_<s>_<action>.fired` | worker `s` | one-shot fault-injection marker |
+//!
+//! Every file is published atomically: write `<name>.tmp` (for beacons
+//! `<name>.json.tmp`, checkpoints `<name>.ckpt.tmp`), then rename over
+//! the final name. Readers therefore never observe a torn file; the
+//! stale-file sweep removes both finals and temps from earlier runs.
+//!
+//! # TCP frame format (version 1)
+//!
+//! `dw2v shard-server` serves a shard dir + run dir over a small framed
+//! protocol; `train-worker --connect HOST:PORT` is the client. All
+//! integers on the wire are **big-endian**. A connection starts with a
+//! handshake: the client sends the 4-byte magic `DW2V` followed by the
+//! protocol version byte (`0x01`); the server echoes the same 5 bytes
+//! back (or closes the connection on a magic/version mismatch). After
+//! the handshake the client sends request frames and reads one reply per
+//! request, strictly in order:
+//!
+//! ```text
+//! request  := msg_type:u8  payload_len:u32  payload
+//! payload  := header_len:u32  header:JSON  body:bytes
+//! reply    := status:u8  body_len:u32  body:bytes
+//! ```
+//!
+//! `payload_len` covers `header_len + header + body` and is capped at
+//! [`frame::MAX_FRAME`] (1 GiB). The header is a JSON object; per the
+//! crate-wide rule, **u64 values ride JSON as decimal strings** (f64
+//! loses integer precision above 2^53), so e.g. a sub-model index is
+//! `{"submodel":"3"}` and a shard index `{"shard":"12"}`. Reply status
+//! is `0x00` OK (body = requested bytes), `0x01` error (body = UTF-8
+//! message), `0x02` absent (the requested file does not exist — not an
+//! error; e.g. no manifest yet, no checkpoint).
+//!
+//! Message types:
+//!
+//! | type | name | header | body → reply |
+//! |---|---|---|---|
+//! | `0x01` | `REGISTER` | `{"submodel"}` | — → OK |
+//! | `0x02` | `GET_VOCAB` | `{}` | — → `vocab.tsv` bytes / absent |
+//! | `0x03` | `GET_MANIFEST` | `{}` | — → `shards.json` bytes / absent |
+//! | `0x04` | `GET_DIR_INFO` | `{}` | — → JSON `{"shards":["0","1",...]}` |
+//! | `0x05` | `GET_SHARD` | `{"shard"}` | — → `shard_<i>.bin` bytes / absent |
+//! | `0x06` | `PUT_BEACON` | `{"submodel"}` | beacon JSON → OK (mirrored to run dir) |
+//! | `0x07` | `PUT_ARTIFACT` | `{"submodel"}` | `.dwsm` bytes → OK (atomic rename) |
+//! | `0x08` | `PUT_CHECKPOINT` | `{"submodel"}` | `.ckpt` bytes → OK (atomic rename) |
+//! | `0x09` | `GET_CHECKPOINT` | `{"submodel"}` | — → `.ckpt` bytes / absent |
+//! | `0x0A` | `DEL_CHECKPOINT` | `{"submodel"}` | — → OK |
+//! | `0x0B` | `PUT_FEEDSTAT` | `{"submodel"}` | feedstat JSON → OK |
+//! | `0x0C` | `PUT_EVENT` | `{"role"}` | one journal line → OK (appended) |
+//! | `0x0D` | `GET_MARKER` | `{"submodel","action"}` | — → OK if fired / absent |
+//! | `0x0E` | `PUT_MARKER` | `{"submodel","action"}` | — → OK |
+//!
+//! The server **mirrors** everything a remote worker uploads (beacons,
+//! artifacts, checkpoints, feedstats, journal events, fault markers)
+//! into its `--out-dir` as ordinary run-dir files. That is what keeps
+//! the rest of the system transport-indifferent: the supervisor polls
+//! mirrored beacons and collects mirrored artifacts through the same
+//! [`fs::FsTransport`] it uses for local fleets, and `dw2v status` /
+//! `dw2v report` read a remote run exactly like a local one. A loopback
+//! deployment therefore points the server and the coordinator at the
+//! *same* `--out-dir`.
+
+pub mod fs;
+pub mod frame;
+pub mod server;
+pub mod tcp;
+
+use crate::embedding::{CheckpointArtifact, SubModelArtifact};
+use crate::obs::journal::Journal;
+use crate::text::feed::ShardManifest;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// The corpus side of the interface: where a worker's sentences come
+/// from. `local_dir` is always a real directory on this machine — the
+/// shard readers (`ShardFileSource`, `ShardFeed`) stream from it
+/// directly, so a remote store's job is to keep that directory fed.
+pub trait ShardStore: Send + Sync {
+    /// The materialized shard directory sentence streaming reads from.
+    fn local_dir(&self) -> &Path;
+    /// Contents of `vocab.tsv`.
+    fn vocab_text(&self) -> Result<String, String>;
+    /// Whether `vocab.tsv` exists (cheap pre-flight check).
+    fn has_vocab(&self) -> bool;
+    /// The `shards.json` manifest, if one has been published.
+    fn manifest(&self) -> Result<Option<ShardManifest>, String>;
+    /// Remove torn `*.tmp` shard/manifest files left by a dead ingest;
+    /// returns how many were removed.
+    fn sweep_torn(&self) -> Result<usize, String>;
+    /// Create the shard dir and clear stale shards ahead of an
+    /// overlapped ingest (coordinator-side; remote stores refuse).
+    fn prepare_ingest_dir(&self) -> Result<(), String>;
+    /// Drop any local mirror state (no-op for the filesystem store).
+    fn cleanup(&self) {}
+}
+
+/// The result side: sub-model artifacts and checkpoints, plus run-dir
+/// preparation. All publishes are atomic (write temp, rename).
+pub trait ArtifactStore: Send + Sync {
+    /// Create the run dir and sweep stale files from earlier runs;
+    /// returns how many stale files were removed (coordinator-side).
+    fn prepare_out_dir(&self) -> Result<usize, String>;
+    /// Publish the resolved run config as `config.json`; returns the
+    /// path it landed at (coordinator-side).
+    fn write_config(&self, body: &str) -> Result<PathBuf, String>;
+    /// Atomically publish sub-model `submodel`'s artifact. With
+    /// `corrupt` the staged bytes are truncated to half first — the
+    /// deterministic `corrupt-artifact` fault.
+    fn publish_artifact(
+        &self,
+        submodel: usize,
+        artifact: &SubModelArtifact,
+        corrupt: bool,
+    ) -> Result<(), String>;
+    /// Load + identity-check sub-model `submodel`'s published artifact.
+    fn collect_artifact(
+        &self,
+        submodel: usize,
+        root_seed: u64,
+        num_submodels: usize,
+    ) -> Result<SubModelArtifact, String>;
+    /// Best-effort removal of a rejected artifact so a respawn can't
+    /// re-collect it.
+    fn discard_artifact(&self, submodel: usize);
+    /// Atomically publish an epoch-boundary checkpoint.
+    fn save_checkpoint(&self, submodel: usize, ck: &CheckpointArtifact) -> Result<(), String>;
+    /// Load the checkpoint if one exists: `None` = no checkpoint,
+    /// `Some(Err)` = a checkpoint exists but cannot be read.
+    fn load_checkpoint(&self, submodel: usize) -> Option<Result<CheckpointArtifact, String>>;
+    /// Best-effort checkpoint removal (after success or rejection).
+    fn remove_checkpoint(&self, submodel: usize);
+    /// Human-readable location of the checkpoint, for log lines.
+    fn checkpoint_desc(&self, submodel: usize) -> String;
+}
+
+/// The liveness side: heartbeats, registration, feed statistics, fault
+/// markers and event journals.
+pub trait ControlPlane: Send + Sync {
+    /// Announce this worker to the coordinator side (no-op on fs).
+    fn register(&self, submodel: usize) -> Result<(), String>;
+    /// Publish a heartbeat beacon. Best-effort by design: a worker must
+    /// never die because telemetry failed.
+    fn publish_beacon(&self, submodel: usize, body: &str);
+    /// Read the current beacon bytes, if any (coordinator-side; the
+    /// supervisor treats ANY byte change as liveness).
+    fn poll_beacon(&self, submodel: usize) -> Option<Vec<u8>>;
+    /// Publish the overlap feed statistics file.
+    fn publish_feedstat(&self, submodel: usize, body: &str) -> Result<(), String>;
+    /// Whether the one-shot fault marker for `action` has fired.
+    fn fault_marker_fired(&self, submodel: usize, action: &str) -> bool;
+    /// Record the one-shot fault marker for `action` (best-effort).
+    fn record_fault_marker(&self, submodel: usize, action: &str);
+    /// Open this role's event journal.
+    fn journal(&self, role: &str) -> Journal;
+}
+
+/// One transport: the three trait objects a run hands around. Cloning
+/// shares the underlying implementation.
+#[derive(Clone)]
+pub struct Transport {
+    pub shards: Arc<dyn ShardStore>,
+    pub artifacts: Arc<dyn ArtifactStore>,
+    pub control: Arc<dyn ControlPlane>,
+}
+
+impl Transport {
+    /// Filesystem transport with coordinator-side artifact naming
+    /// (`<out_dir>/submodel_<s>.dwsm`).
+    pub fn fs(shard_dir: &Path, out_dir: &Path) -> Transport {
+        fs::FsTransport::new(shard_dir, out_dir, None).into_transport()
+    }
+
+    /// Filesystem transport for one worker with an explicit artifact
+    /// output path (`train-worker --out` accepts any path; the
+    /// checkpoint sits next to it with extension `.ckpt`).
+    pub fn fs_worker(shard_dir: &Path, artifact_out: &Path) -> Transport {
+        let out_dir = artifact_out
+            .parent()
+            .map(Path::to_path_buf)
+            .filter(|p| !p.as_os_str().is_empty())
+            .unwrap_or_else(|| PathBuf::from("."));
+        fs::FsTransport::new(shard_dir, &out_dir, Some(artifact_out.to_path_buf()))
+            .into_transport()
+    }
+
+    /// TCP transport: connect to a `dw2v shard-server`, register, and
+    /// start mirroring shards into a local cache directory.
+    pub fn connect(addr: &str, submodel: usize, feed_mode: bool) -> Result<Transport, String> {
+        tcp::connect(addr, submodel, feed_mode)
+    }
+}

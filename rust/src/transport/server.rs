@@ -1,0 +1,423 @@
+//! `dw2v shard-server`: the server half of the TCP transport.
+//!
+//! Serves one shard directory read-only (vocab, manifest, shard bytes)
+//! and accepts worker uploads into one run directory. Every upload is
+//! **mirrored as an ordinary run-dir file** with the same atomic
+//! tmp+rename publication the local workers use — that mirroring is the
+//! whole design: the supervisor, `dw2v status`, and `dw2v report` read a
+//! remote fleet through the unchanged filesystem paths. A loopback
+//! deployment points the server and the coordinator at the same
+//! `--out-dir`.
+//!
+//! Concurrency model: thread per connection, strict request/reply per
+//! thread. The server holds **no open file handles** between requests —
+//! journal appends are open-append-close and beacons are per-request
+//! tmp+rename. This matters because `prepare_run` sweeps stale
+//! `events_*.jsonl`/beacon files from the run dir *after* the server has
+//! started (loopback case): a held descriptor would keep writing into an
+//! unlinked inode and the events would silently vanish from reports.
+
+use super::frame::{self, Frame};
+use crate::obs::journal::{journal_file_name, u64s, unix_ms};
+use crate::text::corpus::Corpus;
+use crate::transport::fs::{artifact_path, beacon_path, checkpoint_path, fault_marker_path};
+use crate::util::json::{arr, obj, s, Json};
+use crate::warnln;
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+
+/// A bound-but-not-yet-serving shard server. [`ShardServer::bind`] picks
+/// the port (pass `:0` for an ephemeral one and read it back via
+/// [`ShardServer::local_addr`]), then either [`ShardServer::run`] on the
+/// current thread or [`ShardServer::spawn`] on a background one.
+pub struct ShardServer {
+    listener: TcpListener,
+    shard_dir: PathBuf,
+    out_dir: PathBuf,
+}
+
+impl ShardServer {
+    /// Bind `addr` (e.g. `127.0.0.1:7311`, port 0 = ephemeral) and
+    /// create the run dir uploads will be mirrored into.
+    pub fn bind(addr: &str, shard_dir: &Path, out_dir: &Path) -> Result<ShardServer, String> {
+        std::fs::create_dir_all(out_dir)
+            .map_err(|e| format!("create {}: {e}", out_dir.display()))?;
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+        Ok(ShardServer {
+            listener,
+            shard_dir: shard_dir.to_path_buf(),
+            out_dir: out_dir.to_path_buf(),
+        })
+    }
+
+    /// The address actually bound (resolves an ephemeral port).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener
+            .local_addr()
+            .map_err(|e| format!("local_addr: {e}"))
+    }
+
+    /// Serve on a background thread; the handle lives until process
+    /// exit (there is no drain/shutdown — kill the process).
+    pub fn spawn(self) -> std::thread::JoinHandle<()> {
+        std::thread::spawn(move || self.run())
+    }
+
+    /// Serve on the current thread, forever: accept, handshake, answer
+    /// frames until the peer hangs up. A worker that is SIGKILLed simply
+    /// appears as a clean-or-torn EOF on its connection — the server
+    /// logs and moves on, exactly as fault-tolerant training requires.
+    pub fn run(self) {
+        for stream in self.listener.incoming() {
+            match stream {
+                Ok(stream) => {
+                    let shard_dir = self.shard_dir.clone();
+                    let out_dir = self.out_dir.clone();
+                    std::thread::spawn(move || {
+                        let peer = stream
+                            .peer_addr()
+                            .map(|a| a.to_string())
+                            .unwrap_or_else(|_| "?".to_string());
+                        let _ = stream.set_nodelay(true);
+                        if let Err(e) = handle_conn(stream, &shard_dir, &out_dir) {
+                            warnln!("shard-server: connection from {peer}: {e}");
+                        }
+                    });
+                }
+                Err(e) => warnln!("shard-server: accept: {e}"),
+            }
+        }
+    }
+}
+
+/// One connection: handshake, then answer frames until clean EOF.
+fn handle_conn(mut stream: TcpStream, shard_dir: &Path, out_dir: &Path) -> Result<(), String> {
+    frame::server_handshake(&mut stream)?;
+    loop {
+        let frame = match frame::read_frame(&mut stream)? {
+            Some(f) => f,
+            // clean EOF between frames: the worker is done (or dead —
+            // the supervisor's beacon watch owns that distinction)
+            None => return Ok(()),
+        };
+        let (status, body) = match handle_frame(&frame, shard_dir, out_dir) {
+            Ok(reply) => reply,
+            Err(e) => (frame::REPLY_ERR, e.into_bytes()),
+        };
+        frame::write_reply(&mut stream, status, &body)?;
+    }
+}
+
+type Reply = (u8, Vec<u8>);
+
+const OK: Reply = (frame::REPLY_OK, Vec::new());
+
+/// Dispatch one request. `Err` becomes an `ERR` reply with the message
+/// as body — the client surfaces it verbatim.
+fn handle_frame(frame: &Frame, shard_dir: &Path, out_dir: &Path) -> Result<Reply, String> {
+    match frame.msg {
+        frame::MSG_REGISTER => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            server_event(
+                out_dir,
+                "worker_registered",
+                vec![("submodel", s(&submodel.to_string()))],
+            );
+            Ok(OK)
+        }
+        frame::MSG_GET_VOCAB => serve_file(&shard_dir.join("vocab.tsv")),
+        frame::MSG_GET_MANIFEST => {
+            serve_file(&shard_dir.join(crate::text::feed::MANIFEST_FILE))
+        }
+        frame::MSG_GET_DIR_INFO => {
+            let entries = Corpus::shard_entries(shard_dir)
+                .map_err(|e| format!("list {}: {e}", shard_dir.display()))?;
+            let shards = arr(entries.iter().map(|(i, _)| s(&i.to_string())).collect());
+            Ok((
+                frame::REPLY_OK,
+                obj(vec![("shards", shards)]).to_string().into_bytes(),
+            ))
+        }
+        frame::MSG_GET_SHARD => {
+            let idx = frame::header_usize(&frame.header, "shard")?;
+            serve_file(&shard_dir.join(format!("shard_{idx}.bin")))
+        }
+        frame::MSG_PUT_BEACON => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let path = beacon_path(out_dir, submodel);
+            atomic_publish(&path.with_extension("json.tmp"), &path, &frame.body)?;
+            Ok(OK)
+        }
+        frame::MSG_PUT_ARTIFACT => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let path = artifact_path(out_dir, submodel);
+            atomic_publish(&path.with_extension("tmp"), &path, &frame.body)?;
+            server_event(
+                out_dir,
+                "artifact_received",
+                vec![
+                    ("submodel", s(&submodel.to_string())),
+                    ("bytes", u64s(frame.body.len() as u64)),
+                ],
+            );
+            Ok(OK)
+        }
+        frame::MSG_PUT_CHECKPOINT => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let path = checkpoint_path(&artifact_path(out_dir, submodel));
+            atomic_publish(&path.with_extension("ckpt.tmp"), &path, &frame.body)?;
+            Ok(OK)
+        }
+        frame::MSG_GET_CHECKPOINT => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            serve_file(&checkpoint_path(&artifact_path(out_dir, submodel)))
+        }
+        frame::MSG_DEL_CHECKPOINT => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let _ = std::fs::remove_file(checkpoint_path(&artifact_path(out_dir, submodel)));
+            Ok(OK)
+        }
+        frame::MSG_PUT_FEEDSTAT => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let path = out_dir.join(format!("feedstat_{submodel}.json"));
+            atomic_publish(&path.with_extension("json.tmp"), &path, &frame.body)?;
+            Ok(OK)
+        }
+        frame::MSG_PUT_EVENT => {
+            let role = sanitized(&frame.header, "role")?;
+            let line = std::str::from_utf8(&frame.body)
+                .map_err(|e| format!("event line is not UTF-8: {e}"))?;
+            if line.contains('\n') {
+                return Err("event body must be a single journal line".to_string());
+            }
+            append_event_line(out_dir, &role, line)?;
+            Ok(OK)
+        }
+        frame::MSG_GET_MARKER => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let action = sanitized(&frame.header, "action")?;
+            if fault_marker_path(out_dir, submodel, &action).exists() {
+                Ok(OK)
+            } else {
+                Ok((frame::REPLY_ABSENT, Vec::new()))
+            }
+        }
+        frame::MSG_PUT_MARKER => {
+            let submodel = frame::header_usize(&frame.header, "submodel")?;
+            let action = sanitized(&frame.header, "action")?;
+            let path = fault_marker_path(out_dir, submodel, &action);
+            std::fs::write(&path, b"fired\n")
+                .map_err(|e| format!("write {}: {e}", path.display()))?;
+            Ok(OK)
+        }
+        other => Err(format!("unknown message type {other:#04x}")),
+    }
+}
+
+/// Serve a file's bytes, mapping "does not exist" to `ABSENT`.
+fn serve_file(path: &Path) -> Result<Reply, String> {
+    match std::fs::read(path) {
+        Ok(bytes) => Ok((frame::REPLY_OK, bytes)),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            Ok((frame::REPLY_ABSENT, Vec::new()))
+        }
+        Err(e) => Err(format!("read {}: {e}", path.display())),
+    }
+}
+
+/// Mirror uploaded bytes with the run-dir publication idiom: write the
+/// temp name, rename over the final one.
+fn atomic_publish(tmp: &Path, path: &Path, bytes: &[u8]) -> Result<(), String> {
+    std::fs::write(tmp, bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(tmp, path).map_err(|e| format!("publish {}: {e}", path.display()))
+}
+
+/// A header field that becomes part of a file name (journal role, fault
+/// action). Anything beyond `[A-Za-z0-9_]` is rejected — a remote peer
+/// must not be able to point an append or a marker write outside the
+/// run dir.
+fn sanitized(header: &Json, key: &str) -> Result<String, String> {
+    let raw = frame::header_str(header, key)?;
+    if raw.is_empty()
+        || raw.len() > 64
+        || !raw.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    {
+        return Err(format!(
+            "header field '{key}' must be 1-64 chars of [A-Za-z0-9_], got {raw:?}"
+        ));
+    }
+    Ok(raw.to_string())
+}
+
+/// Append one pre-built journal line for `role`: open-append-close, no
+/// held descriptor (see the module doc for why).
+fn append_event_line(out_dir: &Path, role: &str, line: &str) -> Result<(), String> {
+    let path = out_dir.join(journal_file_name(role));
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .map_err(|e| format!("open {}: {e}", path.display()))?;
+    f.write_all(format!("{line}\n").as_bytes())
+        .map_err(|e| format!("append {}: {e}", path.display()))
+}
+
+/// The server's own telemetry (registrations, artifact receipts) rides
+/// role `server` in the same journal format — reporting tools ignore
+/// kinds they don't know, so this is pure additional signal.
+fn server_event(out_dir: &Path, kind: &str, fields: Vec<(&str, Json)>) {
+    let mut all = vec![
+        ("unix_ms", u64s(unix_ms())),
+        ("role", s("server")),
+        ("kind", s(kind)),
+    ];
+    all.extend(fields);
+    let _ = append_event_line(out_dir, "server", &obj(all).to_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::journal::read_journal;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dw2v_srv_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn req(
+        stream: &mut TcpStream,
+        msg: u8,
+        header: Json,
+        body: &[u8],
+    ) -> (u8, Vec<u8>) {
+        frame::write_frame(stream, msg, &header, body).unwrap();
+        frame::read_reply(stream).unwrap()
+    }
+
+    #[test]
+    fn loopback_roundtrip_serves_and_mirrors() {
+        let shard_dir = tmpdir("shards");
+        let out_dir = tmpdir("run");
+        std::fs::write(shard_dir.join("vocab.tsv"), b"the\t10\n").unwrap();
+        std::fs::write(shard_dir.join("shard_0.bin"), b"shardbytes").unwrap();
+
+        let server = ShardServer::bind("127.0.0.1:0", &shard_dir, &out_dir).unwrap();
+        let addr = server.local_addr().unwrap();
+        let _handle = server.spawn();
+
+        let mut c = TcpStream::connect(addr).unwrap();
+        frame::client_handshake(&mut c).unwrap();
+
+        let sub = obj(vec![("submodel", s("1"))]);
+        assert_eq!(req(&mut c, frame::MSG_REGISTER, sub.clone(), b"").0, frame::REPLY_OK);
+
+        let (status, vocab) = req(&mut c, frame::MSG_GET_VOCAB, obj(vec![]), b"");
+        assert_eq!(status, frame::REPLY_OK);
+        assert_eq!(vocab, b"the\t10\n");
+
+        // no manifest was published — absent, not an error
+        assert_eq!(
+            req(&mut c, frame::MSG_GET_MANIFEST, obj(vec![]), b"").0,
+            frame::REPLY_ABSENT
+        );
+
+        let (status, info) = req(&mut c, frame::MSG_GET_DIR_INFO, obj(vec![]), b"");
+        assert_eq!(status, frame::REPLY_OK);
+        let info = Json::parse(std::str::from_utf8(&info).unwrap()).unwrap();
+        assert_eq!(info.get("shards").as_arr().unwrap().len(), 1);
+
+        let (status, bytes) = req(
+            &mut c,
+            frame::MSG_GET_SHARD,
+            obj(vec![("shard", s("0"))]),
+            b"",
+        );
+        assert_eq!(status, frame::REPLY_OK);
+        assert_eq!(bytes, b"shardbytes");
+        assert_eq!(
+            req(&mut c, frame::MSG_GET_SHARD, obj(vec![("shard", s("7"))]), b"").0,
+            frame::REPLY_ABSENT
+        );
+
+        // uploads land as ordinary run-dir files
+        assert_eq!(
+            req(&mut c, frame::MSG_PUT_BEACON, sub.clone(), b"{\"seq\":\"1\"}").0,
+            frame::REPLY_OK
+        );
+        assert_eq!(
+            std::fs::read(out_dir.join("beacon_1.json")).unwrap(),
+            b"{\"seq\":\"1\"}"
+        );
+        assert_eq!(
+            req(&mut c, frame::MSG_PUT_ARTIFACT, sub.clone(), b"notarealartifact").0,
+            frame::REPLY_OK
+        );
+        assert_eq!(
+            std::fs::read(out_dir.join("submodel_1.dwsm")).unwrap(),
+            b"notarealartifact"
+        );
+
+        // checkpoint lifecycle: put, get back, delete, absent
+        assert_eq!(
+            req(&mut c, frame::MSG_PUT_CHECKPOINT, sub.clone(), b"ckptbytes").0,
+            frame::REPLY_OK
+        );
+        let (status, ck) = req(&mut c, frame::MSG_GET_CHECKPOINT, sub.clone(), b"");
+        assert_eq!((status, ck.as_slice()), (frame::REPLY_OK, b"ckptbytes".as_slice()));
+        assert_eq!(req(&mut c, frame::MSG_DEL_CHECKPOINT, sub.clone(), b"").0, frame::REPLY_OK);
+        assert_eq!(
+            req(&mut c, frame::MSG_GET_CHECKPOINT, sub.clone(), b"").0,
+            frame::REPLY_ABSENT
+        );
+
+        // one-shot fault markers
+        let marker = obj(vec![("submodel", s("1")), ("action", s("crash"))]);
+        assert_eq!(req(&mut c, frame::MSG_GET_MARKER, marker.clone(), b"").0, frame::REPLY_ABSENT);
+        assert_eq!(req(&mut c, frame::MSG_PUT_MARKER, marker.clone(), b"").0, frame::REPLY_OK);
+        assert_eq!(req(&mut c, frame::MSG_GET_MARKER, marker, b"").0, frame::REPLY_OK);
+        assert!(out_dir.join("fault_1_crash.fired").exists());
+
+        // relayed journal events append to the role's jsonl file
+        let line = r#"{"unix_ms":"1","role":"worker_1","kind":"worker_start"}"#;
+        assert_eq!(
+            req(
+                &mut c,
+                frame::MSG_PUT_EVENT,
+                obj(vec![("role", s("worker_1"))]),
+                line.as_bytes()
+            )
+            .0,
+            frame::REPLY_OK
+        );
+        let events = read_journal(&out_dir.join(journal_file_name("worker_1"))).unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").as_str(), Some("worker_start"));
+
+        // a path-traversal role is refused
+        let (status, err) = req(
+            &mut c,
+            frame::MSG_PUT_EVENT,
+            obj(vec![("role", s("../evil"))]),
+            b"{}",
+        );
+        assert_eq!(status, frame::REPLY_ERR);
+        assert!(String::from_utf8_lossy(&err).contains("A-Za-z0-9_"));
+
+        // server telemetry recorded the registration and the artifact
+        let server_events = read_journal(&out_dir.join(journal_file_name("server"))).unwrap();
+        let kinds: Vec<_> = server_events
+            .iter()
+            .filter_map(|e| e.get("kind").as_str().map(str::to_string))
+            .collect();
+        assert!(kinds.contains(&"worker_registered".to_string()));
+        assert!(kinds.contains(&"artifact_received".to_string()));
+
+        let _ = std::fs::remove_dir_all(&shard_dir);
+        let _ = std::fs::remove_dir_all(&out_dir);
+    }
+}

@@ -1,0 +1,529 @@
+//! The worker side of the TCP transport: [`connect`] dials a
+//! `dw2v shard-server`, registers, and returns a [`super::Transport`]
+//! whose three stores speak the frame protocol from [`super::frame`].
+//!
+//! The central trick is a **double mirror** keeping both ends of the
+//! system transport-indifferent:
+//!
+//! * the client materializes remote shards into a private local cache
+//!   directory, so the sentence-streaming readers (`ShardFileSource`,
+//!   `ShardFeed`) run over TCP completely unchanged — in snapshot mode
+//!   the cache is filled synchronously before training starts, in feed
+//!   mode a background thread follows the server's manifest and
+//!   republishes a truncated local copy as shards land (a local manifest
+//!   row appears only once its shard bytes are readable, preserving the
+//!   feed invariant);
+//! * the server mirrors every upload (beacons, artifacts, checkpoints,
+//!   feedstats, journal events, fault markers) into its run dir, so the
+//!   supervisor and `dw2v status`/`report` read a remote fleet exactly
+//!   like a local one.
+//!
+//! Requests are strictly serialized per connection (one `Mutex` around
+//! the stream); the mirror thread uses its own connection so shard
+//! downloads never block heartbeats.
+
+use super::frame;
+use super::{ArtifactStore, ControlPlane, ShardStore, Transport};
+use crate::embedding::{CheckpointArtifact, SubModelArtifact};
+use crate::info;
+use crate::obs::journal::Journal;
+use crate::text::feed::ShardManifest;
+use crate::util::json::{obj, s, Json};
+use crate::warnln;
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// How often the feed-mode mirror polls the server's manifest. Cheap (an
+/// empty-body request against a loopback/LAN server) and well under the
+/// feed's own poll cadence, so the mirror is never the bottleneck.
+const MIRROR_POLL_MS: u64 = 25;
+/// How long the mirror waits for `vocab.tsv` to appear server-side in
+/// feed mode before giving up — matches the feed's own no-progress
+/// deadline.
+const VOCAB_WAIT_SECS: u64 = 300;
+
+/// One framed-protocol connection. All requests are serialized: the
+/// protocol is strict request/reply, so the stream lock *is* the
+/// ordering.
+struct TcpClient {
+    stream: Mutex<TcpStream>,
+}
+
+impl TcpClient {
+    fn connect(addr: &str) -> Result<TcpClient, String> {
+        let mut stream =
+            TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        // every request is a full frame; latency matters more than batching
+        let _ = stream.set_nodelay(true);
+        frame::client_handshake(&mut stream).map_err(|e| format!("{addr}: {e}"))?;
+        Ok(TcpClient {
+            stream: Mutex::new(stream),
+        })
+    }
+
+    fn request(&self, msg: u8, header: &Json, body: &[u8]) -> Result<(u8, Vec<u8>), String> {
+        let mut stream = self
+            .stream
+            .lock()
+            .map_err(|_| "transport connection poisoned".to_string())?;
+        frame::write_frame(&mut *stream, msg, header, body)?;
+        frame::read_reply(&mut *stream)
+    }
+
+    /// A request that must succeed: ERR and ABSENT both become errors.
+    fn ok(&self, msg: u8, header: &Json, body: &[u8]) -> Result<Vec<u8>, String> {
+        match self.ok_or_absent(msg, header, body)? {
+            Some(bytes) => Ok(bytes),
+            None => Err("server answered ABSENT for a required file".to_string()),
+        }
+    }
+
+    /// A request where ABSENT is a legitimate answer (`None`).
+    fn ok_or_absent(
+        &self,
+        msg: u8,
+        header: &Json,
+        body: &[u8],
+    ) -> Result<Option<Vec<u8>>, String> {
+        match self.request(msg, header, body)? {
+            (frame::REPLY_OK, bytes) => Ok(Some(bytes)),
+            (frame::REPLY_ABSENT, _) => Ok(None),
+            (frame::REPLY_ERR, bytes) => Err(String::from_utf8_lossy(&bytes).into_owned()),
+            (status, _) => Err(format!("unknown reply status {status:#04x}")),
+        }
+    }
+}
+
+fn submodel_header(submodel: usize) -> Json {
+    obj(vec![("submodel", s(&submodel.to_string()))])
+}
+
+/// Dial `addr`, register as `submodel`, and build the transport. In
+/// snapshot mode (`feed_mode == false`) the whole corpus is fetched
+/// before this returns; in feed mode a mirror thread keeps the cache
+/// growing and this returns as soon as registration succeeds.
+pub fn connect(addr: &str, submodel: usize, feed_mode: bool) -> Result<Transport, String> {
+    let client = Arc::new(TcpClient::connect(addr)?);
+    client
+        .ok(frame::MSG_REGISTER, &submodel_header(submodel), b"")
+        .map_err(|e| format!("register with {addr}: {e}"))?;
+
+    // one cache per (process, submodel): workers are separate processes,
+    // and a respawned worker gets a fresh pid — no cross-run reuse
+    let cache = std::env::temp_dir().join(format!(
+        "dw2v_tcp_cache_{}_{submodel}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&cache);
+    std::fs::create_dir_all(&cache).map_err(|e| format!("create {}: {e}", cache.display()))?;
+
+    if feed_mode {
+        // the mirror owns vocab + shards + manifest; it must cache the
+        // vocab before the first manifest publish, because a worker
+        // treats "manifest present" as "corpus readable"
+        let mirror_addr = addr.to_string();
+        let mirror_cache = cache.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = run_mirror(&mirror_addr, &mirror_cache) {
+                // the worker surfaces this as a feed no-progress timeout;
+                // the real cause goes to stderr
+                warnln!("shard mirror for {} died: {e}", mirror_cache.display());
+            }
+        });
+    } else {
+        snapshot_sync(&client, addr, &cache)?;
+    }
+
+    Ok(Transport {
+        shards: Arc::new(TcpShards {
+            cache: cache.clone(),
+        }),
+        artifacts: Arc::new(TcpArtifacts {
+            client: Arc::clone(&client),
+            addr: addr.to_string(),
+            cache: cache.clone(),
+        }),
+        control: Arc::new(TcpControl {
+            client,
+            addr: addr.to_string(),
+        }),
+    })
+}
+
+/// Snapshot mode: fetch the finished corpus in one pass — vocab, every
+/// shard the server lists, and the manifest verbatim if one exists.
+fn snapshot_sync(client: &TcpClient, addr: &str, cache: &Path) -> Result<(), String> {
+    let vocab = client
+        .ok_or_absent(frame::MSG_GET_VOCAB, &obj(vec![]), b"")?
+        .ok_or_else(|| {
+            format!("{addr} has no vocab.tsv — persist a corpus next to the shard-server first")
+        })?;
+    let vocab_path = cache.join("vocab.tsv");
+    std::fs::write(&vocab_path, vocab)
+        .map_err(|e| format!("write {}: {e}", vocab_path.display()))?;
+
+    let info_bytes = client.ok(frame::MSG_GET_DIR_INFO, &obj(vec![]), b"")?;
+    let info_text = String::from_utf8(info_bytes)
+        .map_err(|e| format!("{addr}: dir info is not UTF-8: {e}"))?;
+    let info = Json::parse(&info_text).map_err(|e| format!("{addr}: parse dir info: {e}"))?;
+    let shards = info
+        .get("shards")
+        .as_arr()
+        .ok_or_else(|| format!("{addr}: dir info lacks a shards list"))?;
+    info!(
+        "transport: mirroring {} shards from {addr} into {}",
+        shards.len(),
+        cache.display()
+    );
+    for entry in shards {
+        let idx = entry
+            .as_str()
+            .and_then(|t| t.parse::<usize>().ok())
+            .ok_or_else(|| format!("{addr}: bad shard index {entry} in dir info"))?;
+        fetch_shard(client, cache, idx)?;
+    }
+
+    // mirror the manifest bytes verbatim: a snapshot worker must see
+    // exactly the schedule block the ingest published
+    if let Some(manifest) =
+        client.ok_or_absent(frame::MSG_GET_MANIFEST, &obj(vec![]), b"")?
+    {
+        let tmp = cache.join(crate::text::feed::MANIFEST_TMP_FILE);
+        let path = cache.join(crate::text::feed::MANIFEST_FILE);
+        std::fs::write(&tmp, manifest).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| format!("publish {}: {e}", path.display()))?;
+    }
+    Ok(())
+}
+
+/// Download shard `idx` into the cache, atomically (tmp + rename) so a
+/// concurrent reader never sees a torn shard.
+fn fetch_shard(client: &TcpClient, cache: &Path, idx: usize) -> Result<(), String> {
+    let bytes = client.ok(
+        frame::MSG_GET_SHARD,
+        &obj(vec![("shard", s(&idx.to_string()))]),
+        b"",
+    )?;
+    let tmp = cache.join(format!("shard_{idx}.bin.tmp"));
+    let path = cache.join(format!("shard_{idx}.bin"));
+    std::fs::write(&tmp, bytes).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).map_err(|e| format!("publish {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// The truncated local view of the server's manifest after `fetched`
+/// shards have landed in the cache: same tokens and schedule block
+/// (workers need the schedule before the first shard), but only the rows
+/// whose shards are locally readable, and `complete` only once every
+/// remote row is mirrored.
+fn local_manifest(remote: &ShardManifest, fetched: usize) -> ShardManifest {
+    ShardManifest {
+        complete: remote.complete && fetched == remote.num_shards(),
+        shard_sentences: remote.shard_sentences[..fetched].to_vec(),
+        tokens: remote.tokens,
+        schedule: remote.schedule.clone(),
+    }
+}
+
+/// Feed-mode mirror loop: wait for the server-side vocab, then follow
+/// the remote manifest, fetching each new shard and republishing the
+/// truncated local manifest after it lands. Runs on its own connection
+/// and thread; returns once the mirrored corpus is complete.
+fn run_mirror(addr: &str, cache: &Path) -> Result<(), String> {
+    let client = TcpClient::connect(addr)?;
+    let poll = std::time::Duration::from_millis(MIRROR_POLL_MS);
+
+    // the ingest publishes vocab.tsv before the schedule block, so this
+    // wait ends as soon as the remote ingest has frozen its vocabulary
+    let vocab_wait = std::time::Instant::now();
+    let vocab = loop {
+        if let Some(bytes) = client.ok_or_absent(frame::MSG_GET_VOCAB, &obj(vec![]), b"")? {
+            break bytes;
+        }
+        if vocab_wait.elapsed().as_secs() >= VOCAB_WAIT_SECS {
+            return Err(format!(
+                "{addr} published no vocab.tsv within {VOCAB_WAIT_SECS}s — is the ingest dead?"
+            ));
+        }
+        std::thread::sleep(poll);
+    };
+    let vocab_path = cache.join("vocab.tsv");
+    std::fs::write(&vocab_path, vocab)
+        .map_err(|e| format!("write {}: {e}", vocab_path.display()))?;
+
+    let mut fetched = 0usize;
+    let mut published_rows: Option<(usize, bool)> = None;
+    loop {
+        let remote = match client.ok_or_absent(frame::MSG_GET_MANIFEST, &obj(vec![]), b"")? {
+            Some(bytes) => {
+                let text = String::from_utf8(bytes)
+                    .map_err(|e| format!("{addr}: manifest is not UTF-8: {e}"))?;
+                let v = Json::parse(&text).map_err(|e| format!("{addr}: parse manifest: {e}"))?;
+                ShardManifest::from_json(&v).map_err(|e| format!("{addr}: {e}"))?
+            }
+            None => {
+                std::thread::sleep(poll);
+                continue;
+            }
+        };
+        while fetched < remote.num_shards() {
+            fetch_shard(&client, cache, fetched)?;
+            fetched += 1;
+            // republish after every shard so the feed wakes promptly
+            local_manifest(&remote, fetched).publish(cache)?;
+            published_rows = Some((fetched, remote.complete));
+        }
+        // republish when only the complete flag moved (no new shards)
+        let now = (fetched, remote.complete && fetched == remote.num_shards());
+        if published_rows != Some(now) {
+            local_manifest(&remote, fetched).publish(cache)?;
+            published_rows = Some(now);
+        }
+        if remote.complete && fetched == remote.num_shards() {
+            info!(
+                "transport: mirror complete — {fetched} shards in {}",
+                cache.display()
+            );
+            return Ok(());
+        }
+        std::thread::sleep(poll);
+    }
+}
+
+/// [`ShardStore`] over the local mirror cache. Reads never touch the
+/// network — the snapshot sync or the mirror thread already did.
+struct TcpShards {
+    cache: PathBuf,
+}
+
+impl ShardStore for TcpShards {
+    fn local_dir(&self) -> &Path {
+        &self.cache
+    }
+
+    fn vocab_text(&self) -> Result<String, String> {
+        let vocab_path = self.cache.join("vocab.tsv");
+        std::fs::read_to_string(&vocab_path)
+            .map_err(|e| format!("read {}: {e}", vocab_path.display()))
+    }
+
+    fn has_vocab(&self) -> bool {
+        self.cache.join("vocab.tsv").is_file()
+    }
+
+    fn manifest(&self) -> Result<Option<ShardManifest>, String> {
+        ShardManifest::load(&self.cache)
+    }
+
+    fn sweep_torn(&self) -> Result<usize, String> {
+        // the cache is created fresh per process — nothing stale to sweep
+        Ok(0)
+    }
+
+    fn prepare_ingest_dir(&self) -> Result<(), String> {
+        Err("a TCP transport cannot host an ingest — run the ingest next to the shard-server"
+            .to_string())
+    }
+
+    fn cleanup(&self) {
+        let _ = std::fs::remove_dir_all(&self.cache);
+    }
+}
+
+/// [`ArtifactStore`] that uploads instead of renaming: artifacts and
+/// checkpoints are staged in the cache (so the `corrupt-artifact` fault
+/// can tear real bytes), then shipped whole; the server does the atomic
+/// rename into its run dir.
+struct TcpArtifacts {
+    client: Arc<TcpClient>,
+    addr: String,
+    cache: PathBuf,
+}
+
+impl ArtifactStore for TcpArtifacts {
+    fn prepare_out_dir(&self) -> Result<usize, String> {
+        Err("run-dir preparation is coordinator-side — not available over a worker connection"
+            .to_string())
+    }
+
+    fn write_config(&self, _body: &str) -> Result<PathBuf, String> {
+        Err("config publication is coordinator-side — not available over a worker connection"
+            .to_string())
+    }
+
+    fn publish_artifact(
+        &self,
+        submodel: usize,
+        artifact: &SubModelArtifact,
+        corrupt: bool,
+    ) -> Result<(), String> {
+        let staged = self.cache.join(format!("submodel_{submodel}.dwsm.up"));
+        artifact
+            .save(&staged)
+            .map_err(|e| format!("write {}: {e}", staged.display()))?;
+        if corrupt {
+            // same deterministic fault as the filesystem path: tear the
+            // staged bytes, upload the torn file, exit 0 — only the
+            // coordinator's artifact validation can catch it
+            let len = std::fs::metadata(&staged)
+                .map_err(|e| format!("stat {}: {e}", staged.display()))?
+                .len();
+            let f = std::fs::OpenOptions::new()
+                .write(true)
+                .open(&staged)
+                .map_err(|e| format!("reopen {}: {e}", staged.display()))?;
+            f.set_len(len / 2)
+                .map_err(|e| format!("truncate {}: {e}", staged.display()))?;
+            info!(
+                "fault injection: worker {} truncating its artifact to {} bytes",
+                submodel,
+                len / 2
+            );
+        }
+        let bytes = std::fs::read(&staged)
+            .map_err(|e| format!("read {}: {e}", staged.display()))?;
+        self.client
+            .ok(frame::MSG_PUT_ARTIFACT, &submodel_header(submodel), &bytes)
+            .map_err(|e| format!("upload artifact to {}: {e}", self.addr))?;
+        let _ = std::fs::remove_file(&staged);
+        Ok(())
+    }
+
+    fn collect_artifact(
+        &self,
+        _submodel: usize,
+        _root_seed: u64,
+        _num_submodels: usize,
+    ) -> Result<SubModelArtifact, String> {
+        Err("artifact collection is coordinator-side — not available over a worker connection"
+            .to_string())
+    }
+
+    fn discard_artifact(&self, _submodel: usize) {}
+
+    fn save_checkpoint(&self, submodel: usize, ck: &CheckpointArtifact) -> Result<(), String> {
+        let staged = self.cache.join(format!("submodel_{submodel}.ckpt.up"));
+        ck.save(&staged)
+            .map_err(|e| format!("write {}: {e}", staged.display()))?;
+        let bytes = std::fs::read(&staged)
+            .map_err(|e| format!("read {}: {e}", staged.display()))?;
+        self.client
+            .ok(frame::MSG_PUT_CHECKPOINT, &submodel_header(submodel), &bytes)
+            .map_err(|e| format!("upload checkpoint to {}: {e}", self.addr))?;
+        let _ = std::fs::remove_file(&staged);
+        Ok(())
+    }
+
+    fn load_checkpoint(&self, submodel: usize) -> Option<Result<CheckpointArtifact, String>> {
+        let fetched = self
+            .client
+            .ok_or_absent(frame::MSG_GET_CHECKPOINT, &submodel_header(submodel), b"");
+        let bytes = match fetched {
+            Ok(Some(bytes)) => bytes,
+            Ok(None) => return None,
+            Err(e) => return Some(Err(format!("fetch checkpoint from {}: {e}", self.addr))),
+        };
+        // CheckpointArtifact::load wants a file, so land the bytes first
+        let staged = self.cache.join(format!("submodel_{submodel}.ckpt"));
+        if let Err(e) = std::fs::write(&staged, &bytes) {
+            return Some(Err(format!("write {}: {e}", staged.display())));
+        }
+        Some(CheckpointArtifact::load(&staged).map_err(|e| e.to_string()))
+    }
+
+    fn remove_checkpoint(&self, submodel: usize) {
+        let _ = self
+            .client
+            .ok(frame::MSG_DEL_CHECKPOINT, &submodel_header(submodel), b"");
+        let _ = std::fs::remove_file(self.cache.join(format!("submodel_{submodel}.ckpt")));
+    }
+
+    fn checkpoint_desc(&self, submodel: usize) -> String {
+        format!("submodel_{submodel}.ckpt on {}", self.addr)
+    }
+}
+
+/// [`ControlPlane`] over the control connection. Everything a worker
+/// sends here is mirrored by the server into its run dir, which is how
+/// the supervisor and `dw2v status`/`report` observe remote workers.
+struct TcpControl {
+    client: Arc<TcpClient>,
+    addr: String,
+}
+
+impl TcpControl {
+    fn marker_header(submodel: usize, action: &str) -> Json {
+        obj(vec![
+            ("submodel", s(&submodel.to_string())),
+            ("action", s(action)),
+        ])
+    }
+}
+
+impl ControlPlane for TcpControl {
+    fn register(&self, submodel: usize) -> Result<(), String> {
+        self.client
+            .ok(frame::MSG_REGISTER, &submodel_header(submodel), b"")
+            .map(|_| ())
+            .map_err(|e| format!("register with {}: {e}", self.addr))
+    }
+
+    fn publish_beacon(&self, submodel: usize, body: &str) {
+        // best-effort, like the filesystem beacon: a dropped heartbeat
+        // must never kill training — worst case the supervisor respawns
+        let _ = self.client.ok(
+            frame::MSG_PUT_BEACON,
+            &submodel_header(submodel),
+            body.as_bytes(),
+        );
+    }
+
+    fn poll_beacon(&self, _submodel: usize) -> Option<Vec<u8>> {
+        // coordinator-side: the supervisor polls the server's mirrored
+        // beacon files through its own FsTransport
+        None
+    }
+
+    fn publish_feedstat(&self, submodel: usize, body: &str) -> Result<(), String> {
+        self.client
+            .ok(
+                frame::MSG_PUT_FEEDSTAT,
+                &submodel_header(submodel),
+                body.as_bytes(),
+            )
+            .map(|_| ())
+            .map_err(|e| format!("publish feedstat to {}: {e}", self.addr))
+    }
+
+    fn fault_marker_fired(&self, submodel: usize, action: &str) -> bool {
+        // on error, claim "not fired": a one-shot fault firing twice in a
+        // degraded-network corner beats it never firing in tests
+        matches!(
+            self.client.ok_or_absent(
+                frame::MSG_GET_MARKER,
+                &Self::marker_header(submodel, action),
+                b"",
+            ),
+            Ok(Some(_))
+        )
+    }
+
+    fn record_fault_marker(&self, submodel: usize, action: &str) {
+        let _ = self.client.ok(
+            frame::MSG_PUT_MARKER,
+            &Self::marker_header(submodel, action),
+            b"",
+        );
+    }
+
+    fn journal(&self, role: &str) -> Journal {
+        let client = Arc::clone(&self.client);
+        let header = obj(vec![("role", s(role))]);
+        Journal::with_sender(role, move |line| {
+            // journals are best-effort telemetry on every transport
+            let _ = client.ok(frame::MSG_PUT_EVENT, &header, line.as_bytes());
+        })
+    }
+}

@@ -1,0 +1,224 @@
+//! Every `DW2V_*` environment knob, in one place.
+//!
+//! The env surface is part of the coordinator↔worker contract — workers
+//! inherit these variables from the coordinator that spawned them — so
+//! the names, the parse rules, and the failure behavior live here
+//! instead of being scattered over the call sites. The rules:
+//!
+//! * **Unset means default.** Every knob has a behavior when absent.
+//! * **Garbage is loud.** A set-but-unparsable knob is an error that
+//!   names the variable and the offending value, never a silent
+//!   fallback — a typo'd knob must not quietly run with defaults.
+//! * Call sites read knobs through the helpers below, not through
+//!   `std::env::var` with a string literal.
+//!
+//! The full table (also printed by `dw2v --help`):
+//!
+//! | variable | meaning |
+//! |----------|---------|
+//! | `DW2V_LOG` | log level: `error` \| `warn` \| `info` \| `debug` |
+//! | `DW2V_FAULT` | fault-injection spec parsed by each worker (see `coordinator::supervisor::FaultSpec`) |
+//! | `DW2V_FEED` | `1` = workers follow a growing shard dir (overlap mode), `0`/unset = snapshot |
+//! | `DW2V_BEACON_INTERVAL_MS` | worker heartbeat publish interval, milliseconds (default 250) |
+//! | `DW2V_WORKER_STARTUP_SLEEP_MS` | test hook: worker sleeps this long before training |
+//! | `DW2V_INGEST_SHARD_DELAY_MS` | test hook: overlap ingest sleeps this long before each shard |
+//! | `DW2V_WORKER_EXE` | dw2v binary for spawned workers (tests point this at the build) |
+//! | `DW2V_BENCH_DIR` | bench harnesses append trajectory JSONL under this directory |
+//! | `DW2V_BENCH_SCALE` | `full` = run benches at paper scale, unset = smoke scale |
+
+use crate::util::logging::{parse_level, Level};
+
+/// `DW2V_LOG` — log level (`error`|`warn`|`info`|`debug`).
+pub const LOG: &str = "DW2V_LOG";
+/// `DW2V_FAULT` — fault-injection spec, parsed by each worker at startup.
+pub const FAULT: &str = "DW2V_FAULT";
+/// `DW2V_FEED` — `1` = follow a growing shard dir, `0`/unset = snapshot.
+pub const FEED: &str = "DW2V_FEED";
+/// `DW2V_BEACON_INTERVAL_MS` — worker heartbeat interval (default 250).
+pub const BEACON_INTERVAL_MS: &str = "DW2V_BEACON_INTERVAL_MS";
+/// `DW2V_WORKER_STARTUP_SLEEP_MS` — test hook: pre-training sleep.
+pub const WORKER_STARTUP_SLEEP_MS: &str = "DW2V_WORKER_STARTUP_SLEEP_MS";
+/// `DW2V_INGEST_SHARD_DELAY_MS` — test hook: per-shard ingest delay.
+pub const INGEST_SHARD_DELAY_MS: &str = "DW2V_INGEST_SHARD_DELAY_MS";
+/// `DW2V_WORKER_EXE` — dw2v binary to spawn for workers.
+pub const WORKER_EXE: &str = "DW2V_WORKER_EXE";
+/// `DW2V_BENCH_DIR` — where bench harnesses append trajectory rows.
+pub const BENCH_DIR: &str = "DW2V_BENCH_DIR";
+/// `DW2V_BENCH_SCALE` — `full` = paper scale, anything else = smoke.
+pub const BENCH_SCALE: &str = "DW2V_BENCH_SCALE";
+
+/// `(name, one-line meaning)` for every knob — the source of the table
+/// printed by `dw2v --help` (see [`knob_table`]).
+pub const KNOBS: &[(&str, &str)] = &[
+    (LOG, "log level: error | warn | info | debug"),
+    (FAULT, "fault-injection spec parsed by each worker at startup"),
+    (FEED, "1 = workers follow a growing shard dir (overlap), 0/unset = snapshot"),
+    (BEACON_INTERVAL_MS, "worker heartbeat publish interval in ms (default 250)"),
+    (WORKER_STARTUP_SLEEP_MS, "test hook: worker sleeps this long before training"),
+    (INGEST_SHARD_DELAY_MS, "test hook: overlap ingest sleeps this long per shard"),
+    (WORKER_EXE, "dw2v binary to spawn for train-worker processes"),
+    (BENCH_DIR, "bench harnesses append trajectory JSONL under this directory"),
+    (BENCH_SCALE, "'full' = paper-scale benches, unset = smoke scale"),
+];
+
+/// The knob table as aligned text, for `--help` output.
+pub fn knob_table() -> String {
+    let width = KNOBS.iter().map(|(n, _)| n.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (name, about) in KNOBS {
+        out.push_str(&format!("  {name:<width$}  {about}\n"));
+    }
+    // drop the trailing newline so callers embed it like any other block
+    out.pop();
+    out
+}
+
+fn var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// Parse the `DW2V_FEED` value: absent/`0` = snapshot, `1` = feed mode.
+/// Anything else is a loud error — a typo'd feed flag silently training
+/// on a partial snapshot would be miserable to debug.
+fn parse_feed_mode(raw: Option<&str>) -> Result<bool, String> {
+    match raw.map(str::trim) {
+        None | Some("") | Some("0") => Ok(false),
+        Some("1") => Ok(true),
+        Some(v) => Err(format!("{FEED}: expected 0 or 1, got '{v}'")),
+    }
+}
+
+/// Parse the `DW2V_BEACON_INTERVAL_MS` value (absent = 250 ms default).
+fn parse_beacon_interval(raw: Option<&str>) -> Result<u64, String> {
+    match raw.map(str::trim) {
+        None => Ok(250),
+        Some(v) => v.parse::<u64>().map_err(|_| {
+            format!("{BEACON_INTERVAL_MS}: '{v}' is not a whole number of milliseconds")
+        }),
+    }
+}
+
+/// Parse an optional whole-millisecond knob: unset/blank = `None`,
+/// garbage = a loud error naming the variable.
+fn parse_opt_ms(name: &str, raw: Option<&str>) -> Result<Option<u64>, String> {
+    match raw {
+        None => Ok(None),
+        Some(v) if v.trim().is_empty() => Ok(None),
+        Some(v) => v
+            .trim()
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| format!("{name}: '{v}' is not a whole number of milliseconds")),
+    }
+}
+
+/// `DW2V_FEED` from the environment.
+pub fn feed_mode() -> Result<bool, String> {
+    parse_feed_mode(var(FEED).as_deref())
+}
+
+/// `DW2V_BEACON_INTERVAL_MS` from the environment (default 250).
+pub fn beacon_interval_ms() -> Result<u64, String> {
+    parse_beacon_interval(var(BEACON_INTERVAL_MS).as_deref())
+}
+
+/// `DW2V_FAULT` raw spec text, if set (parsing is `FaultSpec::parse`'s
+/// job — the grammar lives with the fault machinery).
+pub fn fault_spec() -> Option<String> {
+    var(FAULT)
+}
+
+/// `DW2V_WORKER_STARTUP_SLEEP_MS` — `None` when unset/blank, loud on
+/// garbage (a chaos test that typos its delay must fail, not silently
+/// skip the window it meant to open).
+pub fn worker_startup_sleep_ms() -> Result<Option<u64>, String> {
+    parse_opt_ms(WORKER_STARTUP_SLEEP_MS, var(WORKER_STARTUP_SLEEP_MS).as_deref())
+}
+
+/// `DW2V_INGEST_SHARD_DELAY_MS` — `None` when unset/blank, loud on garbage.
+pub fn ingest_shard_delay_ms() -> Result<Option<u64>, String> {
+    parse_opt_ms(INGEST_SHARD_DELAY_MS, var(INGEST_SHARD_DELAY_MS).as_deref())
+}
+
+/// `DW2V_WORKER_EXE`, if set (existence is checked at the call site,
+/// where the error can say what the path was supposed to be).
+pub fn worker_exe() -> Option<String> {
+    var(WORKER_EXE)
+}
+
+/// `DW2V_BENCH_DIR`, if set to a non-blank path.
+pub fn bench_dir() -> Option<String> {
+    match var(BENCH_DIR) {
+        Some(d) if !d.trim().is_empty() => Some(d),
+        _ => None,
+    }
+}
+
+/// `DW2V_BENCH_SCALE` — true when the benches should run at paper scale.
+pub fn bench_full_scale() -> bool {
+    matches!(var(BENCH_SCALE).as_deref(), Some("full"))
+}
+
+/// `DW2V_LOG` — `None` when unset, the parsed [`Level`] when valid, a
+/// loud error otherwise.
+pub fn log_level() -> Result<Option<Level>, String> {
+    match var(LOG) {
+        None => Ok(None),
+        Some(text) => parse_level(&text).map(Some),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beacon_interval_parse_is_loud_on_garbage() {
+        // unset → documented default; well-formed values parse
+        assert_eq!(parse_beacon_interval(None), Ok(250));
+        assert_eq!(parse_beacon_interval(Some("10")), Ok(10));
+        assert_eq!(parse_beacon_interval(Some(" 500 ")), Ok(500));
+        // malformed values must be startup errors naming the variable,
+        // never a silent fall-back to 250ms
+        for bad in ["fast", "250ms", "", "-5", "2.5"] {
+            let err = parse_beacon_interval(Some(bad)).unwrap_err();
+            assert!(
+                err.contains("DW2V_BEACON_INTERVAL_MS"),
+                "'{bad}' must fail loudly, got: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn feed_flag_parse_is_loud_on_garbage() {
+        assert_eq!(parse_feed_mode(None), Ok(false));
+        assert_eq!(parse_feed_mode(Some("0")), Ok(false));
+        assert_eq!(parse_feed_mode(Some("")), Ok(false));
+        assert_eq!(parse_feed_mode(Some("1")), Ok(true));
+        for bad in ["yes", "true", "2"] {
+            assert!(parse_feed_mode(Some(bad)).is_err(), "should reject: {bad}");
+        }
+        let err = parse_feed_mode(Some("yes")).unwrap_err();
+        assert!(err.contains("DW2V_FEED"), "{err}");
+    }
+
+    #[test]
+    fn optional_ms_knobs_are_loud_on_garbage_and_none_on_blank() {
+        assert_eq!(parse_opt_ms(WORKER_STARTUP_SLEEP_MS, None).unwrap(), None);
+        assert_eq!(parse_opt_ms(WORKER_STARTUP_SLEEP_MS, Some("  ")).unwrap(), None);
+        assert_eq!(parse_opt_ms(WORKER_STARTUP_SLEEP_MS, Some("1500")).unwrap(), Some(1500));
+        let err = parse_opt_ms(INGEST_SHARD_DELAY_MS, Some("soon")).unwrap_err();
+        assert!(err.contains("DW2V_INGEST_SHARD_DELAY_MS"), "{err}");
+        assert!(err.contains("soon"), "{err}");
+        assert!(err.contains("whole number of milliseconds"), "{err}");
+    }
+
+    #[test]
+    fn knob_table_names_every_variable() {
+        let table = knob_table();
+        for (name, _) in KNOBS {
+            assert!(table.contains(name), "knob table is missing {name}");
+        }
+        assert!(!table.ends_with('\n'));
+    }
+}

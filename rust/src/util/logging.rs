@@ -39,12 +39,12 @@ pub fn parse_level(v: &str) -> Result<Level, String> {
     }
 }
 
-/// Apply `DW2V_LOG` from the environment. Unset leaves the default
-/// (info); an unknown value is an error the caller must surface at
-/// startup.
+/// Apply `DW2V_LOG` from the environment (via `util::env`, the one
+/// place that reads `DW2V_*` knobs). Unset leaves the default (info);
+/// an unknown value is an error the caller must surface at startup.
 pub fn level_from_env() -> Result<(), String> {
-    if let Ok(v) = std::env::var("DW2V_LOG") {
-        set_level(parse_level(&v)?);
+    if let Some(level) = crate::util::env::log_level()? {
+        set_level(level);
     }
     Ok(())
 }

@@ -1,6 +1,8 @@
-//! Cross-cutting substrates: RNG, JSON, CLI, logging, configuration.
+//! Cross-cutting substrates: RNG, JSON, CLI, logging, configuration,
+//! and the `DW2V_*` environment-knob registry.
 pub mod cli;
 pub mod config;
+pub mod env;
 pub mod json;
 pub mod logging;
 pub mod rng;

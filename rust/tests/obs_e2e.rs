@@ -66,6 +66,7 @@ fn chaos_run_report_shows_crash_and_respawn() {
             "DW2V_FAULT".to_string(),
             format!("crash@pairs=50@submodel={victim}"),
         )],
+        connect: None,
     };
     let sup = SupervisorOptions {
         policy: FailurePolicy::Retry,
@@ -159,6 +160,7 @@ fn rerun_starts_fresh_journals() {
             "DW2V_FAULT".to_string(),
             "crash@pairs=50@submodel=0".to_string(),
         )],
+        connect: None,
     };
     let sup = SupervisorOptions {
         policy: FailurePolicy::Retry,

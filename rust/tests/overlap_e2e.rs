@@ -135,6 +135,7 @@ fn overlapped_run_is_bitwise_identical_to_back_to_back() {
         shard_dir: seq_dir.clone(),
         out_dir: dir.join("seq_models"),
         extra_env: Vec::new(),
+        connect: None,
     };
     let seq_rep = run_supervised(&cfg, &suite, &seq_opts, &sup).expect("sequential run");
     assert_eq!(seq_rep.survivors(), 2);
@@ -146,6 +147,7 @@ fn overlapped_run_is_bitwise_identical_to_back_to_back() {
         shard_dir: dir.join("ov_shards"),
         out_dir: dir.join("ov_models"),
         extra_env: Vec::new(),
+        connect: None,
     };
     let ov = overlap_run_opts(&cfg, input, icfg, Duration::from_millis(60));
     let ov_rep = run_overlapped(&cfg, &ov_opts, &sup, &ov).expect("overlapped run");
@@ -185,6 +187,7 @@ fn throttled_ingest_proves_training_started_before_shards_finished() {
         shard_dir: dir.join("shards"),
         out_dir: dir.join("models"),
         extra_env: Vec::new(),
+        connect: None,
     };
     let sup = SupervisorOptions::default();
     // 200 ms per shard: several shards' worth of publication still ahead

@@ -92,6 +92,7 @@ fn multiprocess_matches_inprocess_bitwise() {
         shard_dir: dir.clone(),
         out_dir: dir.join("submodels"),
         extra_env: Vec::new(),
+        connect: None,
     };
     let report = procs::run_multiprocess(&cfg, &world.suite, &opts).unwrap();
     assert_eq!(report.outcomes.len(), 2);
@@ -154,6 +155,7 @@ fn coordinator_survives_a_sigkilled_worker() {
         shard_dir: dir.clone(),
         out_dir: dir.join("submodels"),
         extra_env: vec![("DW2V_WORKER_STARTUP_SLEEP_MS".to_string(), "1500".to_string())],
+        connect: None,
     };
     let pool = procs::spawn_workers(&cfg, &opts).unwrap();
     std::thread::sleep(std::time::Duration::from_millis(300));
@@ -261,6 +263,7 @@ fn spawn_workers_validates_the_shard_dir_up_front() {
         shard_dir: dir.clone(),
         out_dir: dir.join("submodels"),
         extra_env: Vec::new(),
+        connect: None,
     };
     let err = procs::spawn_workers(&cfg, &opts).unwrap_err();
     assert!(err.contains("vocab.tsv"), "{err}");

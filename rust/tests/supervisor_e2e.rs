@@ -130,6 +130,7 @@ fn crashed_worker_resumes_from_checkpoint_bitwise() {
             "DW2V_FAULT".to_string(),
             format!("crash@pairs={threshold}@submodel={victim}"),
         )],
+        connect: None,
     };
     let sup = test_sup(FailurePolicy::Retry, Duration::from_secs(60));
     let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
@@ -194,6 +195,7 @@ fn stalled_worker_is_killed_and_respawned() {
             "DW2V_FAULT".to_string(),
             format!("stall@epoch=1@submodel={victim}"),
         )],
+        connect: None,
     };
     // the victim hangs forever before epoch 1; a 1.5 s beacon timeout
     // must catch it — an undetected stall would hang this test, not fail it
@@ -244,6 +246,7 @@ fn corrupt_artifact_is_attributed_and_degraded_around() {
             "DW2V_FAULT".to_string(),
             format!("corrupt-artifact@submodel={victim}"),
         )],
+        connect: None,
     };
     let sup = test_sup(FailurePolicy::Degrade, Duration::from_secs(60));
     let rep = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap();
@@ -295,6 +298,7 @@ fn fail_fast_kills_the_remaining_pool() {
             "DW2V_FAULT".to_string(),
             "crash@pairs=1@submodel=0;slow@factor=2000@submodel=1".to_string(),
         )],
+        connect: None,
     };
     let sup = test_sup(FailurePolicy::FailFast, Duration::from_secs(60));
     let err = run_supervised(&cfg, &world.suite, &opts, &sup).unwrap_err();
@@ -399,6 +403,7 @@ fn prepare_run_sweeps_stale_artifacts_and_checkpoints() {
         shard_dir: dir.clone(),
         out_dir: out_dir.clone(),
         extra_env: Vec::new(),
+        connect: None,
     };
     let (n, config_path) = procs::prepare_run(&cfg, &opts).unwrap();
     assert_eq!(n, 2);

@@ -1,0 +1,339 @@
+//! End-to-end tests for the pluggable transport layer: the same seeded
+//! run driven over the filesystem transport and over a loopback
+//! `dw2v shard-server` must be indistinguishable.
+//!
+//! The headline properties:
+//!
+//! * **transport equivalence** — with `mappers = 1` on the native
+//!   backend, a supervised run whose workers stream shards from and
+//!   upload artifacts to a TCP shard-server merges bitwise identical
+//!   (weights, loss curves, pair counts) to the same run over the local
+//!   filesystem;
+//! * **failure parity** — a remote worker that dies (SIGKILL, or an
+//!   injected `DW2V_FAULT` crash under the degrade policy) costs exactly
+//!   its sub-model, same as a local one: same fate text, no artifact
+//!   left in the run dir, survivors merged within tolerance;
+//! * **mirroring** — every worker upload (beacons, journals, fault
+//!   markers) lands in the server's run dir as ordinary files, so the
+//!   supervisor and `dw2v status`/`report` never know the fleet was
+//!   remote.
+
+use dw2v::coordinator::leader;
+use dw2v::coordinator::procs::{self, ProcsOptions, WorkerFate};
+use dw2v::coordinator::supervisor::{run_supervised, FailurePolicy, SupervisorOptions};
+use dw2v::eval::report::mean_score;
+use dw2v::obs::journal::journal_file_name;
+use dw2v::runtime::backend::ModelShape;
+use dw2v::runtime::native::NativeBackend;
+use dw2v::text::corpus::Corpus;
+use dw2v::text::vocab::Vocab;
+use dw2v::transport::server::ShardServer;
+use dw2v::util::config::{DivideStrategy, ExperimentConfig, MergeMethod};
+use dw2v::world::build_world;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn worker_exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_dw2v"))
+}
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dw2v_tx_e2e_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Same small-but-real experiment as `procs_e2e`; `mappers = 1` for the
+/// deterministic delivery order the bitwise assertions need.
+fn small_cfg() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.sentences = 1200;
+    cfg.vocab = 250;
+    cfg.clusters = 8;
+    cfg.truth_dim = 8;
+    cfg.dim = 16;
+    cfg.window = 4;
+    cfg.negatives = 4;
+    cfg.epochs = 2;
+    cfg.rate_percent = 50.0; // 2 sub-models
+    cfg.mappers = 1;
+    cfg.trainer_batch = 32;
+    cfg.trainer_steps = 2;
+    cfg.min_count_base = 8.0;
+    cfg.strategy = DivideStrategy::Shuffle;
+    cfg.merge = MergeMethod::AlirPca;
+    cfg
+}
+
+fn persist_world(
+    dir: &std::path::Path,
+    cfg: &ExperimentConfig,
+    shards: usize,
+) -> dw2v::world::World {
+    let world = build_world(cfg);
+    world.corpus.write_sharded(dir, shards).unwrap();
+    std::fs::write(dir.join("vocab.tsv"), world.vocab.to_tsv()).unwrap();
+    world
+}
+
+fn test_sup(policy: FailurePolicy) -> SupervisorOptions {
+    SupervisorOptions {
+        policy,
+        max_retries: 2,
+        stall_timeout: Duration::from_secs(60),
+        poll_interval: Duration::from_millis(10),
+        backoff_base: Duration::from_millis(50),
+        backoff_cap: Duration::from_millis(200),
+        beacon_interval_ms: 50,
+    }
+}
+
+/// Start a loopback shard-server over `shard_dir` mirroring into
+/// `out_dir`, and return the `--connect` address.
+fn loopback_server(shard_dir: &std::path::Path, out_dir: &std::path::Path) -> String {
+    let server = ShardServer::bind("127.0.0.1:0", shard_dir, out_dir).unwrap();
+    let addr = server.local_addr().unwrap().to_string();
+    server.spawn();
+    addr
+}
+
+#[test]
+fn fs_and_tcp_loopback_runs_merge_bitwise_identical() {
+    let cfg = small_cfg();
+    let dir = tdir("bitwise");
+    let world = persist_world(&dir, &cfg, 3);
+    let sup = test_sup(FailurePolicy::Retry);
+
+    // the filesystem reference run
+    let fs_out = dir.join("fs_models");
+    let fs_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: fs_out.clone(),
+        extra_env: Vec::new(),
+        connect: None,
+    };
+    let fs_rep = run_supervised(&cfg, &world.suite, &fs_opts, &sup).unwrap();
+    assert_eq!(fs_rep.survivors(), 2);
+
+    // the same seeded run with every worker connected to a loopback
+    // shard-server; the server mirrors uploads into the run dir the
+    // supervisor is watching
+    let tcp_out = dir.join("tcp_models");
+    let addr = loopback_server(&dir, &tcp_out);
+    let tcp_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: tcp_out.clone(),
+        extra_env: Vec::new(),
+        connect: Some(addr),
+    };
+    let tcp_rep = run_supervised(&cfg, &world.suite, &tcp_opts, &sup).unwrap();
+    assert_eq!(tcp_rep.survivors(), 2);
+    assert_eq!(tcp_rep.stats.respawns, 0, "a healthy remote fleet never respawns");
+
+    // per-sub-model artifacts bitwise identical across transports
+    for (f, t) in fs_rep.outcomes.iter().zip(&tcp_rep.outcomes) {
+        assert_eq!(f.submodel, t.submodel);
+        let fa = f.artifact.as_ref().expect("fs survivor has artifact");
+        let ta = t.artifact.as_ref().expect("tcp survivor has artifact");
+        let s = f.submodel;
+        assert_eq!(fa.embedding.present, ta.embedding.present);
+        assert_eq!(fa.embedding.data.len(), ta.embedding.data.len());
+        for (i, (a, b)) in fa.embedding.data.iter().zip(&ta.embedding.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "sub-model {s}: weight {i} differs between fs and tcp transports"
+            );
+        }
+        assert_eq!(fa.meta.pairs, ta.meta.pairs, "sub-model {s}: pair counts differ");
+        let fl: Vec<u64> = fa.meta.epoch_loss.iter().map(|l| l.to_bits()).collect();
+        let tl: Vec<u64> = ta.meta.epoch_loss.iter().map(|l| l.to_bits()).collect();
+        assert_eq!(fl, tl, "sub-model {s}: loss curves differ between transports");
+    }
+
+    // ... so the merged consensus is bitwise identical too
+    let fs_merged = &fs_rep.tail.merged.embedding;
+    let tcp_merged = &tcp_rep.tail.merged.embedding;
+    assert_eq!(fs_merged.present, tcp_merged.present);
+    assert_eq!(fs_merged.data.len(), tcp_merged.data.len());
+    for (i, (a, b)) in fs_merged.data.iter().zip(&tcp_merged.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "merged weight {i} differs");
+    }
+
+    // mirroring: the remote run dir holds the same observability files a
+    // local run leaves — beacons and per-worker journals status/report read
+    for s in 0..2 {
+        assert!(
+            tcp_out.join(format!("beacon_{s}.json")).exists(),
+            "worker {s}: beacon must be mirrored into the run dir"
+        );
+        assert!(
+            tcp_out.join(journal_file_name(&format!("worker_{s}"))).exists(),
+            "worker {s}: journal must be mirrored into the run dir"
+        );
+    }
+    assert!(
+        tcp_out.join(journal_file_name("server")).exists(),
+        "the server keeps its own journal of registrations and uploads"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn remote_crash_degrades_exactly_like_a_local_one() {
+    let cfg = small_cfg();
+    let victim = 1usize;
+    let fault = format!("crash@pairs=40@submodel={victim}");
+    let sup = test_sup(FailurePolicy::Degrade);
+
+    // local reference: one worker crashes with exit 102, degrade abandons it
+    let local_dir = tdir("crash_local");
+    let world = persist_world(&local_dir, &cfg, 3);
+    let local_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: local_dir.clone(),
+        out_dir: local_dir.join("submodels"),
+        extra_env: vec![("DW2V_FAULT".to_string(), fault.clone())],
+        connect: None,
+    };
+    let local_rep = run_supervised(&cfg, &world.suite, &local_opts, &sup).unwrap();
+
+    // the same fault in a TCP-connected worker
+    let tcp_dir = tdir("crash_tcp");
+    persist_world(&tcp_dir, &cfg, 3);
+    let tcp_out = tcp_dir.join("submodels");
+    let addr = loopback_server(&tcp_dir, &tcp_out);
+    let tcp_opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: tcp_dir.clone(),
+        out_dir: tcp_out.clone(),
+        extra_env: vec![("DW2V_FAULT".to_string(), fault)],
+        connect: Some(addr),
+    };
+    let tcp_rep = run_supervised(&cfg, &world.suite, &tcp_opts, &sup).unwrap();
+
+    // identical degrade outcome: the victim is lost with the same exit
+    // code, the survivor's artifact is collected, nothing is respawned
+    for rep in [&local_rep, &tcp_rep] {
+        assert_eq!(rep.outcomes.len(), 2);
+        assert_eq!(rep.survivors(), 1, "exactly the crashed worker is lost");
+        assert_eq!(rep.stats.respawns, 0, "degrade never respawns");
+        match &rep.outcomes[victim].fate {
+            WorkerFate::Failed(why) => {
+                assert!(why.contains("exit code 102"), "injected crash exit code: {why}")
+            }
+            other => panic!("victim should have failed, got {other:?}"),
+        }
+        assert!(rep.tail.scores.iter().all(|s| s.score.is_finite()));
+    }
+    // the one-shot fault marker is mirrored through the control plane, so
+    // a respawned remote worker would not crash twice either
+    assert!(
+        tcp_out.join(format!("fault_{victim}_crash.fired")).exists(),
+        "the remote worker's fault marker must be mirrored into the run dir"
+    );
+    assert!(
+        !tcp_out.join(format!("submodel_{victim}.dwsm")).exists(),
+        "the crashed remote worker must not leave an artifact"
+    );
+    // and the surviving sub-model is bitwise the same over either transport
+    let la = local_rep.outcomes[0].artifact.as_ref().unwrap();
+    let ta = tcp_rep.outcomes[0].artifact.as_ref().unwrap();
+    assert_eq!(la.meta.pairs, ta.meta.pairs);
+    for (i, (a, b)) in la.embedding.data.iter().zip(&ta.embedding.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "survivor weight {i} differs");
+    }
+    let _ = std::fs::remove_dir_all(&local_dir);
+    let _ = std::fs::remove_dir_all(&tcp_dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn sigkilled_remote_worker_costs_exactly_its_submodel() {
+    let mut cfg = small_cfg();
+    cfg.sentences = 1600;
+    cfg.rate_percent = 25.0; // 4 sub-models
+    let dir = tdir("kill");
+    let world = persist_world(&dir, &cfg, 4);
+
+    // reference: the full 4-model run, in-process (bitwise-equal to what
+    // the 4 connected workers would produce, per the equivalence test)
+    let corpus = Corpus::read_sharded(&dir).unwrap();
+    let vocab =
+        Vocab::from_tsv(&std::fs::read_to_string(dir.join("vocab.tsv")).unwrap()).unwrap();
+    let backend = NativeBackend::new(ModelShape::for_experiment(&cfg, vocab.len()));
+    let full = leader::train_submodels(&cfg, &corpus, &vocab, &backend).unwrap();
+    let full_tail = leader::merge_and_eval(&cfg, &full.submodels, &world.suite);
+    let full_mean = mean_score(&full_tail.scores);
+
+    // 4 TCP-connected workers that hold still long enough to be killed
+    let out_dir = dir.join("submodels");
+    let addr = loopback_server(&dir, &out_dir);
+    let opts = ProcsOptions {
+        worker_exe: worker_exe(),
+        shard_dir: dir.clone(),
+        out_dir: out_dir.clone(),
+        extra_env: vec![("DW2V_WORKER_STARTUP_SLEEP_MS".to_string(), "1500".to_string())],
+        connect: Some(addr),
+    };
+    let pool = procs::spawn_workers(&cfg, &opts).unwrap();
+    std::thread::sleep(Duration::from_millis(300));
+    let victim = 1usize;
+    let pid = pool.pid(victim).expect("victim pid");
+    let status = std::process::Command::new("kill")
+        .args(["-9", &pid.to_string()])
+        .status()
+        .expect("run kill");
+    assert!(status.success(), "kill -9 must succeed");
+
+    let (outcomes, _train_secs) = pool.wait();
+    assert_eq!(outcomes.len(), 4);
+
+    // same failure report as the local SIGKILL test in procs_e2e
+    let dead = &outcomes[victim];
+    assert!(!dead.survived());
+    match &dead.fate {
+        WorkerFate::Failed(why) => {
+            assert!(why.contains("signal 9"), "fate should name the signal: {why}")
+        }
+        other => panic!("victim should have failed, got {other:?}"),
+    }
+    assert!(
+        !out_dir.join(format!("submodel_{victim}.dwsm")).exists(),
+        "a killed remote worker must not leave an artifact on the server"
+    );
+
+    let survivors: Vec<_> = outcomes.iter().filter(|o| o.survived()).collect();
+    assert_eq!(survivors.len(), 3);
+
+    // survivors uploaded the exact sub-models the in-process run computes
+    for o in &survivors {
+        let artifact = o.artifact.as_ref().unwrap();
+        let reference = &full.submodels[o.submodel];
+        for (i, (a, b)) in artifact.embedding.data.iter().zip(&reference.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "sub-model {}: weight {i} differs from the in-process run",
+                o.submodel
+            );
+        }
+    }
+
+    // and the survivor merge stays within tolerance of the full run
+    let submodels: Vec<_> = survivors
+        .iter()
+        .map(|o| o.artifact.as_ref().unwrap().embedding.clone())
+        .collect();
+    let tail = leader::merge_and_eval(&cfg, &submodels, &world.suite);
+    assert!(tail.merged.embedding.present_count() > 0);
+    let mean3 = mean_score(&tail.scores);
+    assert!(
+        (mean3 - full_mean).abs() < 0.2,
+        "3-survivor eval {mean3:.3} strayed too far from the 4-model run {full_mean:.3}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
