@@ -12,7 +12,7 @@
 //!   series instead of a silently replaced snapshot. CI smoke-checks
 //!   that the files exist and parse.
 
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, inum, num, obj, s, Json};
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
@@ -38,7 +38,7 @@ impl TimingStats {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
-            ("iters", num(self.iters as f64)),
+            ("iters", inum(self.iters)),
             ("min_secs", num(self.min_secs)),
             ("mean_secs", num(self.mean_secs)),
             ("p50_secs", num(self.p50_secs)),

@@ -106,7 +106,7 @@ pub fn run_overlapped(
             vec![
                 ("wait_secs", crate::util::json::num(wait_started.elapsed().as_secs_f64())),
                 ("sentences", u64s(sched.total_sentences)),
-                ("shards_published", crate::util::json::num(man.num_shards() as f64)),
+                ("shards_published", crate::util::json::inum(man.num_shards())),
             ],
         );
         info!(

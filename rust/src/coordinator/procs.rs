@@ -399,7 +399,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         .journal(&format!("worker_{}", spec.submodel));
     journal.event(
         "worker_start",
-        vec![("submodel", json::num(spec.submodel as f64))],
+        vec![("submodel", json::inum(spec.submodel))],
     );
     let faults = ArmedFaults::new(fault_spec, Arc::clone(&transport.control), spec.submodel);
 
@@ -497,7 +497,7 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             journal.event(
                 "estimate_done",
                 vec![
-                    ("submodel", json::num(spec.submodel as f64)),
+                    ("submodel", json::inum(spec.submodel)),
                     ("secs", json::num(est_started.elapsed().as_secs_f64())),
                     ("sentences", u64s(seen)),
                 ],
@@ -617,8 +617,8 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         journal.event(
             "epoch_done",
             vec![
-                ("submodel", json::num(spec.submodel as f64)),
-                ("epoch", json::num(epoch as f64)),
+                ("submodel", json::inum(spec.submodel)),
+                ("epoch", json::inum(epoch)),
                 ("secs", json::num(epoch_secs)),
                 ("pairs", u64s(epoch_pairs)),
                 (
@@ -646,8 +646,8 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
             journal.event(
                 "checkpoint_written",
                 vec![
-                    ("submodel", json::num(spec.submodel as f64)),
-                    ("epoch", json::num((epoch + 1) as f64)),
+                    ("submodel", json::inum(spec.submodel)),
+                    ("epoch", json::inum(epoch + 1)),
                     ("secs", json::num(ck_started.elapsed().as_secs_f64())),
                 ],
             );
@@ -680,16 +680,16 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
         journal.event(
             "feed_wait",
             vec![
-                ("submodel", json::num(spec.submodel as f64)),
+                ("submodel", json::inum(spec.submodel)),
                 ("waits", u64s(st.waits)),
                 ("wait_secs", json::num(st.wait_secs)),
-                ("shards_at_open", json::num(st.shards_at_open as f64)),
+                ("shards_at_open", json::inum(st.shards_at_open)),
             ],
         );
         let body = json::obj(vec![
-            ("submodel", json::num(spec.submodel as f64)),
-            ("shards_at_train_start", json::num(st.shards_at_open as f64)),
-            ("shards_final", json::num(man.num_shards() as f64)),
+            ("submodel", json::inum(spec.submodel)),
+            ("shards_at_train_start", json::inum(st.shards_at_open)),
+            ("shards_final", json::inum(man.num_shards())),
             ("waits", json::s(&st.waits.to_string())),
             ("wait_secs", json::num(st.wait_secs)),
         ])
@@ -735,14 +735,14 @@ pub fn run_worker(cfg: &ExperimentConfig, spec: &WorkerSpec) -> Result<(), Strin
     journal.event(
         "artifact_published",
         vec![
-            ("submodel", json::num(spec.submodel as f64)),
+            ("submodel", json::inum(spec.submodel)),
             ("pairs", u64s(pairs)),
         ],
     );
     journal.event(
         "worker_done",
         vec![
-            ("submodel", json::num(spec.submodel as f64)),
+            ("submodel", json::inum(spec.submodel)),
             ("secs", json::num(train_secs)),
         ],
     );

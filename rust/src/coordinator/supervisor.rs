@@ -32,7 +32,7 @@ use crate::info;
 use crate::obs::journal::Journal;
 use crate::transport::{ControlPlane, Transport};
 use crate::util::config::ExperimentConfig;
-use crate::util::json::{num, obj, s};
+use crate::util::json::{inum, num, obj, s};
 use std::process::Child;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -109,9 +109,9 @@ impl BeaconWriter {
             .map(|d| d.as_millis() as u64)
             .unwrap_or(0);
         let body = obj(vec![
-            ("submodel", num(self.submodel as f64)),
+            ("submodel", inum(self.submodel)),
             ("phase", s(phase)),
-            ("epoch", num(epoch as f64)),
+            ("epoch", inum(epoch)),
             ("sentences", s(&sentences.to_string())),
             ("pairs", s(&pairs.to_string())),
             ("seq", s(&self.seq.to_string())),
@@ -450,9 +450,9 @@ fn register_failure(
             journal.event(
                 "worker_backoff",
                 vec![
-                    ("submodel", num(slot.submodel as f64)),
-                    ("attempt", num(slot.retries_used as f64)),
-                    ("backoff_ms", num(backoff.as_millis() as f64)),
+                    ("submodel", inum(slot.submodel)),
+                    ("attempt", inum(slot.retries_used)),
+                    ("backoff_ms", inum(backoff.as_millis())),
                     ("why", s(&why)),
                 ],
             );
@@ -470,7 +470,7 @@ fn register_failure(
             info!("supervisor: worker {} abandoned — {why}", slot.submodel);
             journal.event(
                 "worker_failed",
-                vec![("submodel", num(slot.submodel as f64)), ("why", s(&why))],
+                vec![("submodel", inum(slot.submodel)), ("why", s(&why))],
             );
             slot.outcome = Some(WorkerOutcome {
                 submodel: slot.submodel,
@@ -515,7 +515,7 @@ pub fn run_supervised(
     journal.event(
         "run_start",
         vec![
-            ("submodels", num(n as f64)),
+            ("submodels", inum(n)),
             ("policy", s(sup.policy.name())),
         ],
     );
@@ -543,7 +543,7 @@ pub fn run_supervised(
                 return Err(e);
             }
         };
-        journal.event("worker_spawn", vec![("submodel", num(submodel as f64))]);
+        journal.event("worker_spawn", vec![("submodel", inum(submodel))]);
         slots.push(Slot {
             submodel,
             state: SlotState::Running(child),
@@ -577,8 +577,8 @@ pub fn run_supervised(
                                 journal.event(
                                     "worker_respawn",
                                     vec![
-                                        ("submodel", num(slot.submodel as f64)),
-                                        ("attempt", num(slot.retries_used as f64)),
+                                        ("submodel", inum(slot.submodel)),
+                                        ("attempt", inum(slot.retries_used)),
                                     ],
                                 );
                                 slot.last_beacon.clear();
@@ -611,7 +611,7 @@ pub fn run_supervised(
                                     journal.event(
                                         "worker_exit",
                                         vec![
-                                            ("submodel", num(slot.submodel as f64)),
+                                            ("submodel", inum(slot.submodel)),
                                             ("secs", num(secs)),
                                         ],
                                     );
@@ -631,7 +631,7 @@ pub fn run_supervised(
                                     journal.event(
                                         "worker_crash",
                                         vec![
-                                            ("submodel", num(slot.submodel as f64)),
+                                            ("submodel", inum(slot.submodel)),
                                             ("why", s(&why)),
                                         ],
                                     );
@@ -645,7 +645,7 @@ pub fn run_supervised(
                             journal.event(
                                 "worker_crash",
                                 vec![
-                                    ("submodel", num(slot.submodel as f64)),
+                                    ("submodel", inum(slot.submodel)),
                                     ("why", s(&why)),
                                 ],
                             );
@@ -675,7 +675,7 @@ pub fn run_supervised(
                             journal.event(
                                 "stall_detected",
                                 vec![
-                                    ("submodel", num(slot.submodel as f64)),
+                                    ("submodel", inum(slot.submodel)),
                                     (
                                         "silent_secs",
                                         num(slot.last_progress.elapsed().as_secs_f64()),
@@ -727,9 +727,9 @@ pub fn run_supervised(
         "fleet_done",
         vec![
             ("secs", num(train_secs)),
-            ("respawns", num(stats.respawns as f64)),
-            ("stalls", num(stats.stalls_detected as f64)),
-            ("failures", num(stats.failures_seen as f64)),
+            ("respawns", inum(stats.respawns)),
+            ("stalls", inum(stats.stalls_detected)),
+            ("failures", inum(stats.failures_seen)),
         ],
     );
     let tail = procs::merge_survivor_tail(cfg, suite, &mut outcomes)?;

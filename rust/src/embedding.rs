@@ -290,15 +290,15 @@ pub struct ArtifactMeta {
 
 impl ArtifactMeta {
     fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::{arr, num, obj, s};
+        use crate::util::json::{arr, inum, num, obj, s};
         obj(vec![
-            ("submodel", num(self.submodel as f64)),
-            ("num_submodels", num(self.num_submodels as f64)),
+            ("submodel", inum(self.submodel)),
+            ("num_submodels", inum(self.num_submodels)),
             ("root_seed", s(&self.root_seed.to_string())),
             ("trainer_seed", s(&self.trainer_seed.to_string())),
             ("strategy", s(&self.strategy)),
             ("rate_percent", num(self.rate_percent)),
-            ("epochs", num(self.epochs as f64)),
+            ("epochs", inum(self.epochs)),
             ("pairs", s(&self.pairs.to_string())),
             (
                 "epoch_loss",
@@ -487,18 +487,18 @@ pub struct CheckpointMeta {
 
 impl CheckpointMeta {
     fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::{arr, num, obj, s};
+        use crate::util::json::{arr, inum, num, obj, s};
         obj(vec![
-            ("submodel", num(self.submodel as f64)),
-            ("num_submodels", num(self.num_submodels as f64)),
+            ("submodel", inum(self.submodel)),
+            ("num_submodels", inum(self.num_submodels)),
             ("root_seed", s(&self.root_seed.to_string())),
             ("trainer_seed", s(&self.trainer_seed.to_string())),
             ("strategy", s(&self.strategy)),
             ("rate_percent", num(self.rate_percent)),
-            ("epochs", num(self.epochs as f64)),
-            ("epochs_done", num(self.epochs_done as f64)),
-            ("total_sentences", num(self.total_sentences as f64)),
-            ("vocab", num(self.vocab as f64)),
+            ("epochs", inum(self.epochs)),
+            ("epochs_done", inum(self.epochs_done)),
+            ("total_sentences", inum(self.total_sentences)),
+            ("vocab", inum(self.vocab)),
             ("dispatched_pairs", s(&self.dispatched_pairs.to_string())),
             ("pairs_emitted", s(&self.pairs_emitted.to_string())),
             ("sentences_received", s(&self.sentences_received.to_string())),

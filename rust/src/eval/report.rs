@@ -7,7 +7,7 @@
 use super::{analogy, categorization, similarity};
 use crate::embedding::Embedding;
 use crate::gen::benchmarks::{Benchmark, BenchmarkData};
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, inum, num, obj, s, Json};
 
 #[derive(Clone, Debug)]
 pub struct BenchmarkScore {
@@ -120,8 +120,8 @@ pub fn scores_to_json(label: &str, scores: &[BenchmarkScore]) -> Json {
                     obj(vec![
                         ("benchmark", s(&sc.name)),
                         ("score", num(sc.score)),
-                        ("oov", num(sc.oov_words as f64)),
-                        ("used", num(sc.items_used as f64)),
+                        ("oov", inum(sc.oov_words)),
+                        ("used", inum(sc.items_used)),
                     ])
                 })
                 .collect()),

@@ -162,6 +162,7 @@ impl MapReduce {
             }
             stats.round_secs.push(timer.elapsed().as_secs_f64());
             for cs in &chan_stats {
+                // lint-allow: relaxed-ordering post-join counter read; the scope already synchronized
                 stats.messages += cs.sent.load(std::sync::atomic::Ordering::Relaxed);
                 stats.send_blocked_secs += cs.send_blocked_secs();
             }

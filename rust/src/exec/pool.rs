@@ -7,7 +7,7 @@
 //!   `std::thread::scope`, used by the trainers and the merge phase.
 
 use crate::util::logging;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::sync::{yield_now, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -19,11 +19,71 @@ enum Message {
     Shutdown,
 }
 
+/// The submitted-but-unfinished counter `wait_idle` spins on — the one
+/// piece of lock-free protocol this module owns. Extracted from
+/// [`ThreadPool`] so the loom model can drive it with modeled threads
+/// (`std::mpsc` and real spawns are outside loom's reach): the invariant
+/// is that **every** submitted job — panicking included — decrements
+/// exactly once, or `wait_idle` wedges.
+pub struct PendingJobs(AtomicUsize);
+
+impl Default for PendingJobs {
+    fn default() -> Self {
+        PendingJobs(AtomicUsize::new(0))
+    }
+}
+
+impl PendingJobs {
+    /// Record a submission; pairs with exactly one [`PendingJobs::finish`].
+    pub fn submit(&self) {
+        self.0.fetch_add(1, Ordering::Acquire);
+    }
+
+    /// Record a completion — called from the worker even when the job
+    /// panicked, or the count leaks and `wait_idle` spins forever.
+    pub fn finish(&self) {
+        self.0.fetch_sub(1, Ordering::Release);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Busy-wait (with yields) until all submitted jobs completed.
+    pub fn wait_idle(&self) {
+        while self.pending() > 0 {
+            yield_now();
+        }
+    }
+}
+
+/// Run one job under the pool's panic containment: a panicking job must
+/// neither kill the worker thread (the pool would silently lose
+/// capacity) nor leak the queued count (`wait_idle` would spin forever)
+/// — contain the unwind, always decrement, keep the payload debuggable.
+/// Free function so the loom model exercises the exact code the workers
+/// run.
+fn run_job(job: Job, queued: &PendingJobs) {
+    if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        logging::log(
+            logging::Level::Warn,
+            "exec::pool",
+            &format!("worker job panicked: {msg}"),
+        );
+    }
+    queued.finish();
+}
+
 /// Fixed-size pool of long-lived worker threads.
 pub struct ThreadPool {
     tx: Sender<Message>,
     handles: Vec<JoinHandle<()>>,
-    queued: Arc<AtomicUsize>,
+    queued: Arc<PendingJobs>,
 }
 
 impl ThreadPool {
@@ -31,7 +91,7 @@ impl ThreadPool {
         assert!(workers > 0);
         let (tx, rx) = channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
-        let queued = Arc::new(AtomicUsize::new(0));
+        let queued = Arc::new(PendingJobs::default());
         let handles = (0..workers)
             .map(|_| {
                 let rx = Arc::clone(&rx);
@@ -39,32 +99,7 @@ impl ThreadPool {
                 std::thread::spawn(move || loop {
                     let msg = { rx.lock().unwrap().recv() };
                     match msg {
-                        Ok(Message::Run(job)) => {
-                            // a panicking job must neither kill this worker
-                            // (the pool would silently lose capacity) nor
-                            // leak the queued count (wait_idle would spin
-                            // forever) — contain the unwind, always
-                            // decrement, and keep the payload debuggable
-                            if let Err(payload) = std::panic::catch_unwind(
-                                std::panic::AssertUnwindSafe(job),
-                            ) {
-                                let msg = payload
-                                    .downcast_ref::<&str>()
-                                    .map(|s| s.to_string())
-                                    .or_else(|| {
-                                        payload.downcast_ref::<String>().cloned()
-                                    })
-                                    .unwrap_or_else(|| {
-                                        "non-string panic payload".to_string()
-                                    });
-                                logging::log(
-                                    logging::Level::Warn,
-                                    "exec::pool",
-                                    &format!("worker job panicked: {msg}"),
-                                );
-                            }
-                            queued.fetch_sub(1, Ordering::Release);
-                        }
+                        Ok(Message::Run(job)) => run_job(job, &queued),
                         Ok(Message::Shutdown) | Err(_) => break,
                     }
                 })
@@ -78,7 +113,7 @@ impl ThreadPool {
     }
 
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.queued.fetch_add(1, Ordering::Acquire);
+        self.queued.submit();
         self.tx
             .send(Message::Run(Box::new(f)))
             .expect("pool receiver alive");
@@ -86,14 +121,12 @@ impl ThreadPool {
 
     /// Jobs submitted but not yet finished.
     pub fn pending(&self) -> usize {
-        self.queued.load(Ordering::Acquire)
+        self.queued.pending()
     }
 
     /// Busy-wait (with yields) until all submitted jobs completed.
     pub fn wait_idle(&self) {
-        while self.pending() > 0 {
-            std::thread::yield_now();
-        }
+        self.queued.wait_idle();
     }
 }
 
@@ -263,5 +296,55 @@ mod tests {
         let items: Vec<u64> = (0..500).collect();
         let out = parallel_map(&items, 7, |x| x * 2);
         assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+}
+
+/// Loom models (CI loom job, `RUSTFLAGS="--cfg loom"`). The pool's
+/// worker loop sits behind `std::mpsc` and real thread spawns, which
+/// loom cannot model — so the models drive [`PendingJobs`] + [`run_job`]
+/// directly, the extracted protocol the workers execute verbatim.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    /// The panic-containment invariant: a job that unwinds must still
+    /// decrement, under every interleaving, or `wait_idle` wedges.
+    #[test]
+    fn panicking_job_cannot_wedge_wait_idle() {
+        loom::model(|| {
+            let queued = Arc::new(PendingJobs::default());
+            queued.submit();
+            queued.submit();
+            let q1 = Arc::clone(&queued);
+            let q2 = Arc::clone(&queued);
+            let bad = loom::thread::spawn(move || {
+                run_job(Box::new(|| panic!("job exploded")), &q1);
+            });
+            let good = loom::thread::spawn(move || {
+                run_job(Box::new(|| {}), &q2);
+            });
+            bad.join().unwrap();
+            good.join().unwrap();
+            assert_eq!(queued.pending(), 0, "a panicked job leaked the count");
+        });
+    }
+
+    /// Submit/finish pairing can never drive the count below zero or
+    /// lose a submission, whatever order the two sides interleave in.
+    #[test]
+    fn submit_finish_pairing_is_exact() {
+        loom::model(|| {
+            let queued = Arc::new(PendingJobs::default());
+            queued.submit();
+            let q = Arc::clone(&queued);
+            let worker = loom::thread::spawn(move || {
+                q.finish();
+            });
+            queued.submit();
+            let seen = queued.pending();
+            assert!((1..=2).contains(&seen), "pending out of range: {seen}");
+            worker.join().unwrap();
+            assert_eq!(queued.pending(), 1);
+        });
     }
 }

@@ -172,6 +172,45 @@
 //! (routing and RNG are untouched; the measured overhead rides in
 //! `table4_wallclock`'s instrumented-vs-clean row).
 //!
+//! ## Invariants (enforced by `cargo xtask lint`)
+//!
+//! The architectural contracts the sections above rely on are machine-
+//! checked: the `xtask` workspace crate lexes every file under
+//! `rust/src/` and fails CI (the required `lint` job) on any violation.
+//! Each rule encodes an invariant some PR's correctness argument leans
+//! on — see the `xtask` crate docs for the full catalog, the suppression
+//! grammar (`// lint-allow: <rule-id> <reason>`) and the scan's limits:
+//!
+//! * **fs-outside-seam** — coordinator code never touches the
+//!   filesystem directly; everything rides the [`transport`] seams, so
+//!   local and TCP runs stay behaviorally identical (transport layer).
+//! * **final-path-create** — final artifact names (`*.dwsm`, `*.ckpt`,
+//!   `shards.json`, beacons, bench trajectories) are only ever produced
+//!   by tmp→rename, the atomic-publication contract the overlap and
+//!   supervision designs assume (multi-process + overlap).
+//! * **json-int-precision** — integers enter JSON via
+//!   [`util::json::inum`] / [`util::json::u64s`] (f32 via
+//!   [`util::json::fnum`]), never a bare `as f64` cast, so counters
+//!   past 2^53 cannot silently round (journals/beacons/reports).
+//! * **env-var-outside-env** — every `DW2V_*` knob is read in
+//!   [`util::env`] alone, keeping the knob registry complete.
+//! * **nondeterministic-call** — no wall clock or ambient randomness in
+//!   the bitwise-deterministic paths (divider, trainer, native runtime)
+//!   that the resume/overlap equivalence proofs depend on.
+//! * **unhandled-message** — every frame type in [`transport::frame`]
+//!   is dispatched by the shard server; adding a message without
+//!   handling it is a compile-adjacent failure, not a runtime surprise.
+//! * **relaxed-ordering** — `Ordering::Relaxed` outside the two
+//!   sanctioned lock-free modules ([`obs::metrics`],
+//!   `sgns::hogwild`) carries a written justification.
+//!
+//! The lock-free paths themselves are dynamically checked in CI: loom
+//! models (`util::sync` shim, `RUSTFLAGS="--cfg loom"`) exhaustively
+//! interleave the metrics flush/kill-switch, pool pending-count and
+//! channel gauge protocols; ThreadSanitizer runs the `exec::`/`obs::`/
+//! `sgns::` unit tests (minus the intentionally-racy Hogwild trainers);
+//! Miri interprets `kernels::` and `obs::` for UB.
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for measured reproductions of every table and figure.
 

@@ -31,20 +31,10 @@ pub fn unix_ms() -> u64 {
         .unwrap_or(0)
 }
 
-/// A u64 as a decimal-string JSON value — the repo convention for
-/// counters that would lose precision as f64 above 2^53.
-pub fn u64s(n: u64) -> Json {
-    s(&n.to_string())
-}
-
-/// Read a u64 back from either encoding (decimal string or number).
-pub fn json_u64(v: &Json) -> Option<u64> {
-    match v {
-        Json::Str(text) => text.parse::<u64>().ok(),
-        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
-        _ => None,
-    }
-}
+// The decimal-string u64 encoding now lives with the rest of the JSON
+// helpers; re-exported here because journal events were its first home
+// and every caller imports it from this module.
+pub use crate::util::json::{json_u64, u64s};
 
 /// Where a journal's lines go. Local processes append to a file; a
 /// remote worker hands each finished line to a sender closure (the TCP

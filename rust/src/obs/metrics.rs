@@ -15,13 +15,19 @@
 //! lets the bench harness price instrumentation against a clean run.
 
 use crate::util::json::{num, s, Json};
+use crate::util::sync::{AtomicBool, AtomicU64, Ordering};
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 /// A monotonically increasing u64.
-#[derive(Default)]
 pub struct Counter(AtomicU64);
+
+// manual impl: loom's atomics provide no `Default`
+impl Default for Counter {
+    fn default() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+}
 
 impl Counter {
     pub fn add(&self, n: u64) {
@@ -34,8 +40,13 @@ impl Counter {
 }
 
 /// A last-write-wins f64 (stored as bits in an AtomicU64).
-#[derive(Default)]
 pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+}
 
 impl Gauge {
     pub fn set(&self, v: f64) {
@@ -281,8 +292,12 @@ mod tests {
     #[test]
     fn counter_totals_are_exact_under_a_thread_pool() {
         let reg = Registry::default();
-        let per_thread = 10_000u64;
-        let threads = 8;
+        // miri executes every interleaving step interpreted — keep the
+        // schedule space meaningful but the instruction count sane
+        #[cfg(miri)]
+        let (per_thread, threads) = (200u64, 4);
+        #[cfg(not(miri))]
+        let (per_thread, threads) = (10_000u64, 8);
         let handles: Vec<_> = (0..threads)
             .map(|_| {
                 let c = reg.counter("pool_total");
@@ -366,5 +381,58 @@ mod tests {
         assert!(!reg.enabled());
         reg.set_enabled(true);
         assert!(reg.enabled());
+    }
+}
+
+/// Loom models (run by the CI loom job with `RUSTFLAGS="--cfg loom"`).
+///
+/// Instruments are resolved **before** any modeled thread spawns so the
+/// registry's `std::sync::Mutex` (invisible to loom) never sits inside a
+/// modeled interleaving — the models exercise exactly the lock-free part
+/// of the protocol: relaxed counter updates and the enabled kill switch.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+
+    #[test]
+    fn local_counter_flush_is_exact_under_the_kill_switch() {
+        loom::model(|| {
+            let reg = Arc::new(Registry::default());
+            let target = reg.counter("pairs"); // resolved pre-spawn (Mutex)
+            let worker_target = Arc::clone(&target);
+            let worker = loom::thread::spawn(move || {
+                let mut local = LocalCounter::new(worker_target, 2);
+                local.add(1);
+                local.add(1); // hits flush_every → one fetch_add
+                local.add(1); // remainder flushes on drop
+            });
+            // the kill switch flips concurrently with the flushes; it
+            // gates *future* instrument updates, it must never corrupt
+            // or lose an in-flight flush
+            reg.set_enabled(false);
+            let _ = reg.enabled();
+            worker.join().unwrap();
+            assert_eq!(target.get(), 3, "no flush may be lost or doubled");
+            assert!(!reg.enabled());
+        });
+    }
+
+    #[test]
+    fn concurrent_counters_and_gauge_writes_are_race_free() {
+        loom::model(|| {
+            let reg = Arc::new(Registry::default());
+            let c = reg.counter("n");
+            let g = reg.gauge("ratio");
+            let (c2, g2) = (Arc::clone(&c), Arc::clone(&g));
+            let t = loom::thread::spawn(move || {
+                c2.add(2);
+                g2.set(0.5);
+            });
+            c.add(1);
+            let _ = g.get(); // torn-free by construction: bits in one atomic
+            t.join().unwrap();
+            assert_eq!(c.get(), 3);
+            assert_eq!(g.get(), 0.5);
+        });
     }
 }

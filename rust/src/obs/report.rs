@@ -7,7 +7,7 @@
 //! journals, missing beacons, torn final lines).
 
 use super::journal::{self, json_u64};
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, inum, num, obj, s, Json};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -160,7 +160,7 @@ pub fn build_report(run_dir: &Path) -> Result<Json, String> {
                     let w = workers.entry(sub).or_default();
                     w.epochs.push(ev.clone());
                     pairs_curve.push(obj(vec![
-                        ("submodel", num(sub as f64)),
+                        ("submodel", inum(sub)),
                         ("epoch", ev.get("epoch").clone()),
                         ("pairs_per_s", ev.get("pairs_per_s").clone()),
                         ("unix_ms", ev.get("unix_ms").clone()),
@@ -211,11 +211,11 @@ pub fn build_report(run_dir: &Path) -> Result<Json, String> {
         .iter()
         .map(|(sub, w)| {
             let mut fields = vec![
-                ("submodel", num(*sub as f64)),
-                ("spawns", num(w.spawns as f64)),
-                ("respawns", num(w.respawns as f64)),
-                ("crashes", num(w.crashes as f64)),
-                ("stalls", num(w.stalls as f64)),
+                ("submodel", inum(*sub)),
+                ("spawns", inum(w.spawns)),
+                ("respawns", inum(w.respawns)),
+                ("crashes", inum(w.crashes)),
+                ("stalls", inum(w.stalls)),
                 ("completed", Json::Bool(w.completed)),
                 ("checkpoint_secs", num(w.checkpoint_secs)),
                 ("last_phase", s(&w.last_phase)),
@@ -241,7 +241,7 @@ pub fn build_report(run_dir: &Path) -> Result<Json, String> {
     );
 
     let mut ingest_fields = BTreeMap::new();
-    ingest_fields.insert("shard_publications".to_string(), num(shard_publications as f64));
+    ingest_fields.insert("shard_publications".to_string(), inum(shard_publications));
     ingest_fields.insert("summary".to_string(), ingest_summary);
     Ok(obj(vec![
         ("run_dir", s(&run_dir.display().to_string())),

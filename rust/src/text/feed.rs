@@ -68,7 +68,7 @@
 
 use crate::exec::mapreduce::RoundSource;
 use crate::text::corpus::Corpus;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::json::{arr, inum, num, obj, s, Json};
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -97,13 +97,13 @@ pub struct ScheduleBlock {
 impl ScheduleBlock {
     fn to_json(&self) -> Json {
         obj(vec![
-            ("total_sentences", num(self.total_sentences as f64)),
+            ("total_sentences", inum(self.total_sentences)),
             ("per_epoch_pairs", num(self.per_epoch_pairs)),
             (
                 "per_epoch_pairs_bits",
                 s(&self.per_epoch_pairs.to_bits().to_string()),
             ),
-            ("window", num(self.window as f64)),
+            ("window", inum(self.window)),
             ("subsample_t", num(self.subsample_t)),
             ("subsample_t_bits", s(&self.subsample_t.to_bits().to_string())),
         ])
@@ -161,15 +161,15 @@ impl ShardManifest {
 
     pub fn to_json(&self) -> Json {
         let mut fields = vec![
-            ("version", num(MANIFEST_VERSION as f64)),
+            ("version", inum(MANIFEST_VERSION)),
             ("complete", Json::Bool(self.complete)),
-            ("shards", num(self.num_shards() as f64)),
+            ("shards", inum(self.num_shards())),
             (
                 "shard_sentences",
-                arr(self.shard_sentences.iter().map(|&n| num(n as f64)).collect()),
+                arr(self.shard_sentences.iter().map(|&n| inum(n)).collect()),
             ),
-            ("sentences", num(self.total_sentences() as f64)),
-            ("tokens", num(self.tokens as f64)),
+            ("sentences", inum(self.total_sentences())),
+            ("tokens", inum(self.tokens)),
         ];
         if let Some(sched) = &self.schedule {
             fields.push(("schedule", sched.to_json()));

@@ -386,7 +386,7 @@ fn ingest_file_impl(
                 json::num(stats.bytes as f64 / 1e6 / stats.pass1_secs.max(1e-9)),
             ),
             ("lines", u64s(stats.lines)),
-            ("vocab", json::num(stats.vocab_size as f64)),
+            ("vocab", json::inum(stats.vocab_size)),
         ],
     );
     // vocab.tsv is fully known after pass 1 — write it before any shard
@@ -470,7 +470,7 @@ fn ingest_file_impl(
         jrn.event(
             "shard_published",
             vec![
-                ("shard", json::num(idx as f64)),
+                ("shard", json::inum(idx)),
                 ("sentences", u64s(pending.len() as u64)),
             ],
         );
@@ -531,7 +531,7 @@ fn ingest_file_impl(
         "pass2_done",
         vec![
             ("secs", json::num(stats.pass2_secs)),
-            ("shards", json::num(stats.shards as f64)),
+            ("shards", json::inum(stats.shards)),
             ("sentences", u64s(stats.written_sentences)),
         ],
     );

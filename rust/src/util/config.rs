@@ -2,7 +2,7 @@
 //! loadable from JSON with CLI overrides. This is the single source of
 //! truth an experiment run is reproducible from (together with `seed`).
 
-use super::json::{num, obj, s, Json};
+use super::json::{fnum, inum, num, obj, s, Json};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum DivideStrategy {
@@ -201,32 +201,32 @@ impl ExperimentConfig {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
-            ("seed", num(self.seed as f64)),
-            ("sentences", num(self.sentences as f64)),
-            ("vocab", num(self.vocab as f64)),
-            ("clusters", num(self.clusters as f64)),
-            ("truth_dim", num(self.truth_dim as f64)),
+            ("seed", inum(self.seed)),
+            ("sentences", inum(self.sentences)),
+            ("vocab", inum(self.vocab)),
+            ("clusters", inum(self.clusters)),
+            ("truth_dim", inum(self.truth_dim)),
             ("zipf_exponent", num(self.zipf_exponent)),
-            ("avg_sentence_len", num(self.avg_sentence_len as f64)),
-            ("dim", num(self.dim as f64)),
-            ("window", num(self.window as f64)),
-            ("negatives", num(self.negatives as f64)),
+            ("avg_sentence_len", inum(self.avg_sentence_len)),
+            ("dim", inum(self.dim)),
+            ("window", inum(self.window)),
+            ("negatives", inum(self.negatives)),
             ("subsample_t", num(self.subsample_t)),
-            ("lr0", num(self.lr0 as f64)),
-            ("lr_min", num(self.lr_min as f64)),
-            ("epochs", num(self.epochs as f64)),
+            ("lr0", fnum(self.lr0)),
+            ("lr_min", fnum(self.lr_min)),
+            ("epochs", inum(self.epochs)),
             ("min_count_base", num(self.min_count_base)),
             ("strategy", s(self.strategy.name())),
             ("rate_percent", num(self.rate_percent)),
             ("merge", s(self.merge.name())),
-            ("alir_rounds", num(self.alir_rounds as f64)),
+            ("alir_rounds", inum(self.alir_rounds)),
             ("alir_tol", num(self.alir_tol)),
-            ("mappers", num(self.mappers as f64)),
-            ("queue_capacity", num(self.queue_capacity as f64)),
+            ("mappers", inum(self.mappers)),
+            ("queue_capacity", inum(self.queue_capacity)),
             ("backend", s(self.backend.name())),
             ("artifact_dir", s(&self.artifact_dir)),
-            ("trainer_batch", num(self.trainer_batch as f64)),
-            ("trainer_steps", num(self.trainer_steps as f64)),
+            ("trainer_batch", inum(self.trainer_batch)),
+            ("trainer_steps", inum(self.trainer_steps)),
         ])
     }
 

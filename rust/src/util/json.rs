@@ -205,6 +205,48 @@ pub fn s(v: &str) -> Json {
     Json::Str(v.to_string())
 }
 
+/// Largest integer a JSON number can carry exactly (the f64 mantissa).
+pub const MAX_SAFE_INT: u64 = 1 << 53;
+
+/// An integer as a JSON number, checked against the f64 precision
+/// ceiling. Ids, sizes and config knobs belong here; counters that can
+/// realistically pass 2^53 (token/pair totals) must use [`u64s`]
+/// instead — `cargo xtask lint` (rule `json-int-precision`) rejects the
+/// unchecked `num(x as f64)` spelling everywhere outside this module.
+pub fn inum<T>(v: T) -> Json
+where
+    u64: TryFrom<T>,
+{
+    let v = u64::try_from(v)
+        .unwrap_or_else(|_| panic!("inum: negative integer cannot enter JSON as a count"));
+    assert!(
+        v <= MAX_SAFE_INT,
+        "inum({v}): past the 2^53 f64 ceiling — serialize with u64s() instead"
+    );
+    Json::Num(v as f64)
+}
+
+/// An f32 field as a JSON number — the f64 widening is exact, so this
+/// is the one integer-free cast the precision rule blesses by name.
+pub fn fnum(v: f32) -> Json {
+    Json::Num(f64::from(v))
+}
+
+/// A u64 as a decimal-string JSON value — the repo convention for
+/// counters that would lose precision as f64 above 2^53.
+pub fn u64s(n: u64) -> Json {
+    s(&n.to_string())
+}
+
+/// Read a u64 back from either encoding (decimal string or number).
+pub fn json_u64(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(text) => text.parse::<u64>().ok(),
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+        _ => None,
+    }
+}
+
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
@@ -439,6 +481,32 @@ mod tests {
     fn integer_formatting_has_no_fraction() {
         assert_eq!(num(3.0).to_string(), "3");
         assert_eq!(num(3.25).to_string(), "3.25");
+    }
+
+    #[test]
+    fn inum_accepts_every_unsigned_width_and_checks_the_ceiling() {
+        assert_eq!(inum(7u32).to_string(), "7");
+        assert_eq!(inum(7u64).to_string(), "7");
+        assert_eq!(inum(7usize).to_string(), "7");
+        assert_eq!(inum(7u128).to_string(), "7");
+        assert_eq!(inum(MAX_SAFE_INT).to_string(), MAX_SAFE_INT.to_string());
+        assert!(std::panic::catch_unwind(|| inum(MAX_SAFE_INT + 1)).is_err());
+        assert!(std::panic::catch_unwind(|| inum(-1i64)).is_err());
+    }
+
+    #[test]
+    fn fnum_widens_exactly() {
+        assert_eq!(fnum(0.25f32), Json::Num(0.25));
+        assert_eq!(fnum(1e-3f32).as_f64().unwrap() as f32, 1e-3f32);
+    }
+
+    #[test]
+    fn u64s_roundtrips_past_the_f64_ceiling() {
+        let big = (1u64 << 60) + 1;
+        assert_eq!(json_u64(&u64s(big)), Some(big));
+        assert_eq!(json_u64(&num(5.0)), Some(5), "legacy numeric encoding reads back");
+        assert_eq!(json_u64(&num(5.5)), None);
+        assert_eq!(json_u64(&s("nope")), None);
     }
 
     #[test]

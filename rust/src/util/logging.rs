@@ -20,6 +20,7 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 
 pub fn set_level(level: Level) {
+    // lint-allow: relaxed-ordering independent filter flag; no data is published under it
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
@@ -60,6 +61,7 @@ pub fn set_role(role: &str) {
 }
 
 pub fn enabled(level: Level) -> bool {
+    // lint-allow: relaxed-ordering independent filter flag; no data is published under it
     level as u8 <= LEVEL.load(Ordering::Relaxed)
 }
 

@@ -6,3 +6,4 @@ pub mod env;
 pub mod json;
 pub mod logging;
 pub mod rng;
+pub mod sync;

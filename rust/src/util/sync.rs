@@ -1,0 +1,27 @@
+//! Atomics shim: std by default, loom's model-checked atomics when the
+//! crate is built with `RUSTFLAGS="--cfg loom"`.
+//!
+//! Only the atomic types (and `yield_now`) are switched. `Arc`, `Mutex`
+//! and `OnceLock` stay `std` everywhere: the registry hands `Arc`
+//! handles across module boundaries (e.g. `Registry::counter` →
+//! `serve`/`engine`), and swapping `Arc` under loom would change those
+//! public types crate-wide for no modeling benefit — loom tracks the
+//! atomics themselves regardless of what shares them.
+//!
+//! The `loom` dependency is intentionally **not** in the checked-in
+//! manifest (builds must resolve offline); the CI loom job appends a
+//! `[target.'cfg(loom)'.dependencies]` section before running, which is
+//! the loom-documented setup. Under a normal build every `cfg(loom)`
+//! item here compiles away.
+
+#[cfg(not(loom))]
+pub use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+#[cfg(not(loom))]
+pub use std::thread::yield_now;
+
+#[cfg(loom)]
+pub use loom::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+#[cfg(loom)]
+pub use loom::thread::yield_now;

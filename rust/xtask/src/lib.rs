@@ -1,0 +1,105 @@
+//! # xtask — first-party static analysis for the dw2v workspace
+//!
+//! `cargo xtask lint` (aliased in `.cargo/config.toml`) lexes every
+//! `rust/src/**/*.rs` file with the repo's delimiter-scan technique and
+//! enforces the architecture invariants the paper's zero-synchronization
+//! design depends on. The rules are conventions that previous PRs
+//! introduced and that review alone had been guarding; async-training
+//! bugs surface as silent quality loss rather than crashes, so the
+//! invariants are machine-checked before the remote-membership and SIMD
+//! work churns these layers.
+//!
+//! ## Rule catalog
+//!
+//! | id | invariant | introduced |
+//! |----|-----------|------------|
+//! | `fs-outside-seam` | R1: the coordinator layer never touches the filesystem directly; every shard/artifact/beacon/checkpoint exchange goes through `transport::{ShardStore, ArtifactStore, ControlPlane}`. Keeps the FS and TCP transports interchangeable (bitwise-equal merges). | PR 9 |
+//! | `final-path-create` | R2: final artifact names (`*.dwsm`, `*.ckpt`, `shards.json`, `beacon_*.json`, `BENCH_*.json`) are never written in place — publish to a tmp name, then rename. Readers (feed manifest, beacon poller, artifact collector) rely on never observing a torn file. | PR 5/6/7 |
+//! | `json-int-precision` | R3: integers never enter JSON as a bare `x as f64` — `util::json::inum` (checked number, panics past 2^53), `util::json::u64s` (decimal string, for counters that can exceed 2^53) or `util::json::fnum` (exact f32 widening) make the precision contract explicit. | PR 7/8 |
+//! | `env-var-outside-env` | R4: `env::var` appears only in `util/env.rs`; every `DW2V_*` knob is read, validated and documented in one table. | PR 9 |
+//! | `nondeterministic-call` | R5: `SystemTime::now` / `rand::` never appear in `coordinator/divider.rs`, `sgns/trainer.rs` or `runtime/native.rs` — the checkpoint-resume, overlap and FS-vs-TCP equivalence tests all assert *bitwise* identical models, which only holds while routing and training are pure functions of the config. | PR 5/6/7 |
+//! | `unhandled-message` | R6: every `pub const MSG_*` in `transport/frame.rs` is matched somewhere in `transport/server.rs` — adding a frame type without a dispatch arm is a compile-time-invisible protocol hole. | PR 9 |
+//! | `relaxed-ordering` | R7: `Ordering::Relaxed` is sanctioned only in `obs/metrics.rs` and `sgns/hogwild.rs` (the documented lock-free hot paths, covered by the loom/TSan jobs); anywhere else it needs a `lint-allow` justification. | PR 1/8 |
+//! | `bad-lint-allow` | meta: a `lint-allow` naming an unknown rule, or carrying no reason, is itself an error — suppressions stay auditable. | PR 10 |
+//!
+//! ## Suppression
+//!
+//! ```text
+//! counter.fetch_add(1, Ordering::Relaxed); // lint-allow: relaxed-ordering monotonic telemetry
+//! ```
+//!
+//! A `lint-allow` comment silences a finding of the named rule on the
+//! same line or the line directly below the comment. `#[cfg(test)] mod`
+//! blocks are exempt from all rules.
+//!
+//! ## Scope and limits
+//!
+//! The linter sees `rust/src/**/*.rs` only (benches, tests/ and this
+//! crate are out of scope) and matches tokens in a comment- and
+//! string-blanked view of the source, so it cannot be fooled by literals
+//! or doc text — but it is a lexer, not a type checker: it enforces
+//! *conventions at the call-site spelling level*, which is exactly how
+//! the conventions are written. The dynamic side (loom models under
+//! `--cfg loom`, ThreadSanitizer and Miri CI jobs) covers what a lexer
+//! cannot: the actual memory-ordering protocols of the allowlisted
+//! modules.
+
+pub mod rules;
+pub mod scan;
+
+pub use rules::{lint_files, lint_files_full, Finding, RULES};
+
+use std::path::{Path, PathBuf};
+
+/// Collect every `.rs` file under `root/rust/src`, sorted, as
+/// `(repo-relative path, contents)` pairs.
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let src = root.join("rust").join("src");
+    let mut paths = Vec::new();
+    walk(&src, &mut paths)?;
+    paths.sort();
+    let mut files = Vec::new();
+    for p in paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(&p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        files.push((rel, std::fs::read_to_string(&p)?));
+    }
+    Ok(files)
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the tree rooted at `root` (the directory containing `rust/src`).
+/// Returns `(unsuppressed findings, suppressed count, files seen)`.
+pub fn lint_tree(root: &Path) -> std::io::Result<(Vec<Finding>, usize, usize)> {
+    let files = collect_sources(root)?;
+    let n = files.len();
+    let (findings, suppressed) = lint_files_full(&files);
+    Ok((findings, suppressed, n))
+}
+
+/// Walk upward from `start` to the first directory containing `rust/src`.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = start.to_path_buf();
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! `cargo xtask <command>` — workspace automation. The only command today
+//! is `lint`; see the crate docs ([`xtask`]) for the rule catalog.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn usage() -> ExitCode {
+    eprintln!("usage: cargo xtask lint [--root DIR] [--rules]");
+    eprintln!();
+    eprintln!("  lint          check rust/src/**/*.rs against the invariant catalog;");
+    eprintln!("                exit 1 when any unsuppressed finding remains");
+    eprintln!("  --root DIR    lint the tree rooted at DIR (default: walk up from cwd");
+    eprintln!("                to the first directory containing rust/src)");
+    eprintln!("  --rules       print the rule catalog and exit");
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root: Option<PathBuf> = None;
+    let mut print_rules = false;
+    let mut cmd: Option<String> = None;
+    let mut it = args.into_iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => return usage(),
+            },
+            "--rules" => print_rules = true,
+            "lint" if cmd.is_none() => cmd = Some(a),
+            _ => return usage(),
+        }
+    }
+    if cmd.as_deref() != Some("lint") {
+        return usage();
+    }
+    if print_rules {
+        for (id, doc) in xtask::RULES {
+            println!("{id}\n    {doc}\n");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().expect("cwd");
+            match xtask::find_root(&cwd) {
+                Some(r) => r,
+                None => {
+                    eprintln!("lint: no rust/src found above {}", cwd.display());
+                    return ExitCode::from(2);
+                }
+            }
+        }
+    };
+    match xtask::lint_tree(&root) {
+        Ok((findings, suppressed, files)) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!(
+                    "lint: clean — {files} files, {suppressed} suppressed finding(s)"
+                );
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "lint: {} finding(s) in {files} files ({suppressed} suppressed)",
+                    findings.len()
+                );
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("lint: cannot read tree at {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+    }
+}

@@ -1,0 +1,381 @@
+//! The rule catalog. Each rule is a small substring/paren-scan check over
+//! the blanked code view from [`crate::scan`]; the catalog text below is
+//! the normative description (also printed by `cargo xtask lint --rules`).
+//!
+//! Suppression: any finding can be silenced with a trailing (or
+//! directly-above) `// lint-allow: <rule-id> <reason>` comment. The
+//! reason is mandatory and an unknown rule id is itself an error
+//! (`bad-lint-allow`), so suppressions stay auditable. `#[cfg(test)]
+//! mod` blocks are exempt from every rule — test fixtures may take
+//! shortcuts without ceremony.
+
+use crate::scan::{balanced_arg, find_bounded, FileView};
+
+/// One lint finding. `path` is repo-relative, `line` 1-based.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{} {} — {}", self.path, self.line, self.rule, self.msg)
+    }
+}
+
+/// `(id, summary)` for every rule, in catalog order.
+pub const RULES: &[(&str, &str)] = &[
+    (
+        "fs-outside-seam",
+        "R1: no direct filesystem calls in coordinator/ — all shard/artifact/beacon/checkpoint \
+         I/O goes through the transport seams (ShardStore/ArtifactStore/ControlPlane, PR 9)",
+    ),
+    (
+        "final-path-create",
+        "R2: never File::create/fs::write/fs::copy a final artifact path (*.dwsm, *.ckpt, \
+         shards.json, beacon_*.json, BENCH_*.json) — publish tmp, then rename (PR 5/6/7)",
+    ),
+    (
+        "json-int-precision",
+        "R3: no bare `num(x as f64)` / `Json::Num(x as f64)` — integers entering JSON go \
+         through util::json::{inum, u64s} (and f32 fields through fnum), which enforce the \
+         2^53 precision ceiling (PR 7/8)",
+    ),
+    (
+        "env-var-outside-env",
+        "R4: `env::var` only inside util/env.rs — every DW2V_* knob is read, documented and \
+         validated in one place (PR 9)",
+    ),
+    (
+        "nondeterministic-call",
+        "R5: no SystemTime::now / rand:: in the bitwise-deterministic paths \
+         (coordinator/divider.rs, sgns/trainer.rs, runtime/native.rs) — resume/overlap \
+         equivalence proofs depend on them being pure (PR 5/6/7)",
+    ),
+    (
+        "unhandled-message",
+        "R6: every `pub const MSG_*` frame type in transport/frame.rs must be dispatched in \
+         transport/server.rs (PR 9)",
+    ),
+    (
+        "relaxed-ordering",
+        "R7: Ordering::Relaxed outside the allowlisted lock-free modules (obs/metrics.rs, \
+         sgns/hogwild.rs) requires a lint-allow justification (PR 1/8)",
+    ),
+    (
+        "bad-lint-allow",
+        "meta: a lint-allow comment with an unknown rule id or no reason is itself a finding",
+    ),
+];
+
+/// Modules whose lock-free protocols are documented at module level and
+/// verified by the loom/TSan jobs — `Ordering::Relaxed` is sanctioned.
+const RELAXED_ALLOWLIST: &[&str] = &["rust/src/obs/metrics.rs", "rust/src/sgns/hogwild.rs"];
+
+/// Paths whose output must be bitwise-deterministic from the config.
+const DETERMINISTIC_PATHS: &[&str] = &[
+    "rust/src/coordinator/divider.rs",
+    "rust/src/sgns/trainer.rs",
+    "rust/src/runtime/native.rs",
+];
+
+/// Final (post-rename) artifact names — the tmp→rename publication set.
+const FINAL_PATTERNS: &[&str] = &[".dwsm", ".ckpt", "shards.json", "beacon_", "BENCH_"];
+
+const ENV_HOME: &str = "rust/src/util/env.rs";
+const JSON_HOME: &str = "rust/src/util/json.rs";
+const COORDINATOR_DIR: &str = "rust/src/coordinator/";
+const FRAME_FILE: &str = "rust/src/transport/frame.rs";
+const SERVER_FILE: &str = "rust/src/transport/server.rs";
+
+fn known_rule(id: &str) -> bool {
+    RULES.iter().any(|(r, _)| *r == id)
+}
+
+/// Lint a set of `(repo-relative path, contents)` sources. Returns only
+/// the unsuppressed findings, sorted by path and line.
+pub fn lint_files(files: &[(String, String)]) -> Vec<Finding> {
+    lint_files_full(files).0
+}
+
+/// As [`lint_files`], but also returns the count of suppressed findings.
+pub fn lint_files_full(files: &[(String, String)]) -> (Vec<Finding>, usize) {
+    let views: Vec<FileView> = files
+        .iter()
+        .map(|(path, text)| FileView::new(path, text))
+        .collect();
+    let mut findings = Vec::new();
+    for view in &views {
+        check_env_var(view, &mut findings);
+        check_coordinator_fs(view, &mut findings);
+        check_final_path_create(view, &mut findings);
+        check_json_int_cast(view, &mut findings);
+        check_nondeterminism(view, &mut findings);
+        check_relaxed_ordering(view, &mut findings);
+    }
+    check_frame_dispatch(&views, &mut findings);
+
+    // apply suppressions, then validate the allow comments themselves
+    let mut kept = Vec::new();
+    let mut suppressed = 0usize;
+    for f in findings {
+        let view = views.iter().find(|v| v.path == f.path);
+        let allowed = view.is_some_and(|v| {
+            v.allows.iter().any(|a| {
+                a.rule == f.rule
+                    && !a.reason.is_empty()
+                    && (a.line == f.line || a.line + 1 == f.line)
+            })
+        });
+        if allowed {
+            suppressed += 1;
+        } else {
+            kept.push(f);
+        }
+    }
+    for view in &views {
+        for a in &view.allows {
+            if !known_rule(&a.rule) {
+                kept.push(Finding {
+                    rule: "bad-lint-allow",
+                    path: view.path.clone(),
+                    line: a.line,
+                    msg: format!("unknown rule {:?} in lint-allow", a.rule),
+                });
+            } else if a.reason.is_empty() {
+                kept.push(Finding {
+                    rule: "bad-lint-allow",
+                    path: view.path.clone(),
+                    line: a.line,
+                    msg: format!("lint-allow: {} needs a written reason", a.rule),
+                });
+            }
+        }
+    }
+    kept.sort_by(|a, b| (&a.path, a.line).cmp(&(&b.path, b.line)));
+    (kept, suppressed)
+}
+
+fn emit(out: &mut Vec<Finding>, rule: &'static str, view: &FileView, off: usize, msg: String) {
+    out.push(Finding {
+        rule,
+        path: view.path.clone(),
+        line: view.line_of(off),
+        msg,
+    });
+}
+
+/// R4 — `env::var` (and `env::var_os`) anywhere outside util/env.rs.
+fn check_env_var(view: &FileView, out: &mut Vec<Finding>) {
+    if view.path == ENV_HOME {
+        return;
+    }
+    for off in find_bounded(&view.code, "env::var", true) {
+        if view.in_test(off) {
+            continue;
+        }
+        emit(
+            out,
+            "env-var-outside-env",
+            view,
+            off,
+            "direct environment read; DW2V_* knobs go through util::env".to_string(),
+        );
+    }
+}
+
+/// R1 — direct filesystem access in coordinator/.
+fn check_coordinator_fs(view: &FileView, out: &mut Vec<Finding>) {
+    if !view.path.starts_with(COORDINATOR_DIR) {
+        return;
+    }
+    for needle in ["std::fs::", "fs::", "File::", "OpenOptions::"] {
+        for off in find_bounded(&view.code, needle, false) {
+            if view.in_test(off) {
+                continue;
+            }
+            emit(
+                out,
+                "fs-outside-seam",
+                view,
+                off,
+                format!("direct filesystem call `{needle}` in the coordinator layer"),
+            );
+        }
+    }
+}
+
+/// R2 — writing a final artifact path without tmp→rename. The argument
+/// span is taken from the *raw* view so path fragments inside string
+/// literals are visible.
+fn check_final_path_create(view: &FileView, out: &mut Vec<Finding>) {
+    for needle in ["File::create(", "fs::write(", "fs::copy("] {
+        for off in find_bounded(&view.code, needle, true) {
+            if view.in_test(off) {
+                continue;
+            }
+            let open = off + needle.len() - 1;
+            let arg = balanced_arg(&view.raw, open);
+            let hits: Vec<&str> = FINAL_PATTERNS
+                .iter()
+                .filter(|p| arg.contains(*p))
+                .copied()
+                .collect();
+            if !hits.is_empty() {
+                emit(
+                    out,
+                    "final-path-create",
+                    view,
+                    off,
+                    format!(
+                        "writes final artifact path ({}) directly — publish to a tmp name \
+                         and rename",
+                        hits.join(", ")
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// R3 — whole-argument integer→f64 casts entering a JSON number.
+fn check_json_int_cast(view: &FileView, out: &mut Vec<Finding>) {
+    if view.path == JSON_HOME {
+        return; // the helpers' own implementation performs the checked cast
+    }
+    for needle in ["num(", "Num("] {
+        for off in find_bounded(&view.code, needle, true) {
+            if view.in_test(off) {
+                continue;
+            }
+            let open = off + needle.len() - 1;
+            let arg = balanced_arg(&view.code, open).trim();
+            if arg.ends_with("as f64") {
+                emit(
+                    out,
+                    "json-int-precision",
+                    view,
+                    off,
+                    format!(
+                        "`{needle}{arg})` — use util::json::inum / fnum / u64s so the \
+                         2^53 ceiling is enforced"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// R5 — nondeterminism in the bitwise-deterministic paths.
+fn check_nondeterminism(view: &FileView, out: &mut Vec<Finding>) {
+    if !DETERMINISTIC_PATHS.contains(&view.path.as_str()) {
+        return;
+    }
+    for needle in ["SystemTime::now", "rand::"] {
+        for off in find_bounded(&view.code, needle, false) {
+            if view.in_test(off) {
+                continue;
+            }
+            emit(
+                out,
+                "nondeterministic-call",
+                view,
+                off,
+                format!("`{needle}` in a bitwise-deterministic path"),
+            );
+        }
+    }
+}
+
+/// R7 — Relaxed ordering outside the sanctioned lock-free modules.
+fn check_relaxed_ordering(view: &FileView, out: &mut Vec<Finding>) {
+    if RELAXED_ALLOWLIST.contains(&view.path.as_str()) {
+        return;
+    }
+    for (off, _) in view.code.match_indices("Ordering::Relaxed") {
+        if view.in_test(off) {
+            continue;
+        }
+        emit(
+            out,
+            "relaxed-ordering",
+            view,
+            off,
+            "Relaxed ordering outside obs/metrics.rs and sgns/hogwild.rs — justify with a \
+             lint-allow or use Acquire/Release"
+                .to_string(),
+        );
+    }
+}
+
+/// R6 — every frame message constant must appear in the server dispatch.
+fn check_frame_dispatch(views: &[FileView], out: &mut Vec<Finding>) {
+    let Some(frame) = views.iter().find(|v| v.path == FRAME_FILE) else {
+        return;
+    };
+    let Some(server) = views.iter().find(|v| v.path == SERVER_FILE) else {
+        return;
+    };
+    for (off, _) in frame.code.match_indices("pub const MSG_") {
+        let rest = &frame.code[off + "pub const ".len()..];
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if !rest[name.len()..].trim_start().starts_with(':') {
+            continue;
+        }
+        let handled = find_bounded(&server.code, &name, true).into_iter().any(|p| {
+            let after = server.code.as_bytes().get(p + name.len());
+            !matches!(after, Some(b) if b.is_ascii_alphanumeric() || *b == b'_')
+        });
+        if !handled {
+            emit(
+                out,
+                "unhandled-message",
+                frame,
+                off,
+                format!("{name} is not handled in transport/server.rs dispatch"),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+        lint_files(&[(path.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn clean_file_has_no_findings() {
+        let src = "pub fn f() -> u64 {\n    42\n}\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_must_name_a_known_rule_and_a_reason() {
+        let src = "use std::sync::atomic::Ordering;\n\
+                   fn f(a: &std::sync::atomic::AtomicU64) -> u64 {\n\
+                   a.load(Ordering::Relaxed) // lint-allow: relaxed-ordering telemetry only\n\
+                   }\n";
+        assert!(lint_one("rust/src/x.rs", src).is_empty());
+
+        let bad_rule = src.replace("relaxed-ordering telemetry only", "no-such-rule yes");
+        let f = lint_one("rust/src/x.rs", &bad_rule);
+        assert_eq!(f.len(), 2, "{f:?}"); // the finding survives + bad-lint-allow
+        assert!(f.iter().any(|x| x.rule == "bad-lint-allow"));
+        assert!(f.iter().any(|x| x.rule == "relaxed-ordering"));
+
+        let no_reason = src.replace(" telemetry only", "");
+        let f = lint_one("rust/src/x.rs", &no_reason);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == "bad-lint-allow"
+            && x.msg.contains("needs a written reason")));
+    }
+}

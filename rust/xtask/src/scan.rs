@@ -1,0 +1,400 @@
+//! Delimiter-scan lexer: the same technique the repo's JSON parser and
+//! shard readers use, applied to Rust source.
+//!
+//! [`FileView::new`] walks a file once and produces:
+//!
+//! * `code` — the source with every comment and every string/char
+//!   literal *content* replaced by spaces (delimiters kept), byte
+//!   positions preserved. Rules match against this view so `"fs::write"`
+//!   inside a log message can never trip a rule.
+//! * `raw` — the untouched source, used when a rule needs to look
+//!   *inside* string literals (e.g. the final-artifact path patterns of
+//!   rule `final-path-create`).
+//! * `allows` — every `// lint-allow: <rule> <reason>` comment, with its
+//!   line number. A finding is suppressed by an allow for the same rule
+//!   on the same line (trailing comment) or the line directly above.
+//! * `test_spans` — byte ranges of `#[cfg(test)] mod … { … }` blocks.
+//!   Findings inside them are dropped: test code may take shortcuts
+//!   (direct `fs::` fixtures, `Relaxed` counters) without ceremony.
+//!
+//! The lexer understands line comments, nested block comments, string
+//! literals with escapes, raw strings (`r#"…"#`, any hash depth, with
+//! `b` prefixes), char literals (including escaped ones) and leaves
+//! lifetimes alone. That is the entire Rust surface this repo uses.
+
+/// One `// lint-allow: <rule> <reason>` comment.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// A lexed source file, ready for the rules in [`crate::rules`].
+pub struct FileView {
+    /// path relative to the repo root, e.g. `rust/src/obs/metrics.rs`
+    pub path: String,
+    /// comments and literal contents blanked; byte-identical layout
+    pub code: String,
+    /// the file exactly as read
+    pub raw: String,
+    pub allows: Vec<Allow>,
+    /// byte ranges of `#[cfg(test)] mod` blocks in `code`/`raw`
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+fn utf8_len(lead: u8) -> usize {
+    if lead < 0x80 {
+        1
+    } else if lead >> 5 == 0b110 {
+        2
+    } else if lead >> 4 == 0b1110 {
+        3
+    } else {
+        4
+    }
+}
+
+impl FileView {
+    pub fn new(path: &str, raw: &str) -> FileView {
+        let bytes = raw.as_bytes();
+        let n = bytes.len();
+        let mut code = Vec::with_capacity(n);
+        let mut comments: Vec<(usize, String)> = Vec::new();
+        let mut line = 1usize;
+        let mut i = 0usize;
+        while i < n {
+            let c = bytes[i];
+            let nxt = if i + 1 < n { bytes[i + 1] } else { 0 };
+            // line comment — capture its text for lint-allow parsing
+            if c == b'/' && nxt == b'/' {
+                let start = i + 2;
+                let mut j = start;
+                while j < n && bytes[j] != b'\n' {
+                    j += 1;
+                }
+                let text = String::from_utf8_lossy(&bytes[start..j]).into_owned();
+                comments.push((line, text));
+                code.resize(code.len() + (j - i), b' ');
+                i = j;
+                continue;
+            }
+            // block comment (nested)
+            if c == b'/' && nxt == b'*' {
+                let mut depth = 0usize;
+                while i < n {
+                    if bytes[i] == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                        depth += 1;
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if bytes[i] == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                        depth -= 1;
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        if bytes[i] == b'\n' {
+                            line += 1;
+                            code.push(b'\n');
+                        } else {
+                            code.push(b' ');
+                        }
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // raw string (with optional b prefix): r"…", r#"…"#, br"…"
+            if c == b'r' || (c == b'b' && nxt == b'r') {
+                let mut j = i + if c == b'r' { 1 } else { 2 };
+                let mut hashes = 0usize;
+                while j < n && bytes[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && bytes[j] == b'"' {
+                    code.extend_from_slice(&bytes[i..=j]);
+                    i = j + 1;
+                    loop {
+                        if i >= n {
+                            break;
+                        }
+                        if bytes[i] == b'"'
+                            && bytes[i + 1..].len() >= hashes
+                            && bytes[i + 1..i + 1 + hashes].iter().all(|&b| b == b'#')
+                        {
+                            code.push(b'"');
+                            code.resize(code.len() + hashes, b'#');
+                            i += 1 + hashes;
+                            break;
+                        }
+                        if bytes[i] == b'\n' {
+                            line += 1;
+                            code.push(b'\n');
+                        } else {
+                            code.push(b' ');
+                        }
+                        i += 1;
+                    }
+                    continue;
+                }
+                // plain identifier starting with r/br — fall through
+            }
+            // string literal
+            if c == b'"' {
+                code.push(b'"');
+                i += 1;
+                while i < n {
+                    if bytes[i] == b'\\' && i + 1 < n {
+                        code.extend_from_slice(b"  ");
+                        i += 2;
+                    } else if bytes[i] == b'"' {
+                        code.push(b'"');
+                        i += 1;
+                        break;
+                    } else {
+                        if bytes[i] == b'\n' {
+                            line += 1;
+                            code.push(b'\n');
+                        } else {
+                            code.push(b' ');
+                        }
+                        i += 1;
+                    }
+                }
+                continue;
+            }
+            // char literal vs lifetime
+            if c == b'\'' && i + 1 < n {
+                if bytes[i + 1] == b'\\' {
+                    // escaped char literal: '\n', '\'', '\u{8}' …
+                    let mut j = i + 3; // skip quote, backslash, escaped byte
+                    while j < n && bytes[j] != b'\'' {
+                        j += 1;
+                    }
+                    code.push(b'\'');
+                    code.resize(code.len() + (j - i - 1), b' ');
+                    code.push(b'\'');
+                    i = j + 1;
+                    continue;
+                }
+                let ch = utf8_len(bytes[i + 1]);
+                if bytes[i + 1] != b'\'' && i + 1 + ch < n && bytes[i + 1 + ch] == b'\'' {
+                    // plain char literal: 'x' (possibly multibyte)
+                    code.push(b'\'');
+                    code.resize(code.len() + ch, b' ');
+                    code.push(b'\'');
+                    i += 2 + ch;
+                    continue;
+                }
+                // lifetime — keep the quote, stay in code state
+            }
+            if c == b'\n' {
+                line += 1;
+            }
+            code.push(c);
+            i += 1;
+        }
+        let code = String::from_utf8(code).expect("blanking preserves utf8");
+        debug_assert_eq!(code.len(), raw.len());
+        let test_spans = find_test_spans(&code);
+        let allows = parse_allows(&comments);
+        FileView {
+            path: path.to_string(),
+            code,
+            raw: raw.to_string(),
+            allows,
+            test_spans,
+        }
+    }
+
+    /// Is this byte offset inside a `#[cfg(test)] mod` block?
+    pub fn in_test(&self, offset: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| a <= offset && offset < b)
+    }
+
+    /// 1-based line number of a byte offset.
+    pub fn line_of(&self, offset: usize) -> usize {
+        self.code[..offset].bytes().filter(|&b| b == b'\n').count() + 1
+    }
+}
+
+/// Byte ranges of `#[cfg(test)] mod name { … }` blocks in the code view.
+fn find_test_spans(code: &str) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let needle = "#[cfg(test)]";
+    for (pos, _) in code.match_indices(needle) {
+        let mut j = pos + needle.len();
+        let bytes = code.as_bytes();
+        while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+            j += 1;
+        }
+        if code[j..].starts_with("pub ") {
+            j += 4;
+            while j < bytes.len() && (bytes[j] as char).is_whitespace() {
+                j += 1;
+            }
+        }
+        let after_mod = &code[j..];
+        if !after_mod.starts_with("mod")
+            || !after_mod[3..].starts_with(|c: char| c.is_whitespace())
+        {
+            continue;
+        }
+        // scan to the opening brace (a `mod name;` file reference has
+        // none — stop at the `;`), then brace-match to the block end
+        let open = match after_mod.find(['{', ';']) {
+            Some(k) if after_mod.as_bytes()[k] == b'{' => j + k,
+            _ => continue,
+        };
+        let mut depth = 0usize;
+        let mut end = code.len();
+        for (k, b) in code.bytes().enumerate().skip(open) {
+            match b {
+                b'{' => depth += 1,
+                b'}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = k + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        spans.push((pos, end));
+    }
+    spans
+}
+
+/// Extract `lint-allow: <rule> <reason…>` from the captured line comments.
+/// Malformed allows (missing rule or empty reason) are kept with an empty
+/// field so the rules layer can report them as `bad-lint-allow`.
+fn parse_allows(comments: &[(usize, String)]) -> Vec<Allow> {
+    let mut allows = Vec::new();
+    for (line, text) in comments {
+        let Some(pos) = text.find("lint-allow:") else {
+            continue;
+        };
+        let rest = text[pos + "lint-allow:".len()..].trim();
+        let mut words = rest.splitn(2, char::is_whitespace);
+        let rule = words.next().unwrap_or("").to_string();
+        let reason = words.next().unwrap_or("").trim().to_string();
+        allows.push(Allow {
+            line: *line,
+            rule,
+            reason,
+        });
+    }
+    allows
+}
+
+/// Find every occurrence of `needle` in `hay` whose preceding byte is not
+/// an identifier byte (and, when `allow_colon` is false, not a `:` — used
+/// to avoid re-matching `fs::` inside an already-matched `std::fs::`).
+pub fn find_bounded(hay: &str, needle: &str, allow_colon: bool) -> Vec<usize> {
+    hay.match_indices(needle)
+        .filter(|(pos, _)| {
+            if *pos == 0 {
+                return true;
+            }
+            let prev = hay.as_bytes()[pos - 1];
+            let ident = prev.is_ascii_alphanumeric() || prev == b'_';
+            !ident && (allow_colon || prev != b':')
+        })
+        .map(|(pos, _)| pos)
+        .collect()
+}
+
+/// The contents of the balanced-paren span starting at `open` (which must
+/// point at `(`). Returns the text between the parens.
+pub fn balanced_arg(text: &str, open: usize) -> &str {
+    let bytes = text.as_bytes();
+    let mut depth = 0usize;
+    for (k, &b) in bytes.iter().enumerate().skip(open) {
+        match b {
+            b'(' => depth += 1,
+            b')' => {
+                depth -= 1;
+                if depth == 0 {
+                    return &text[open + 1..k];
+                }
+            }
+            _ => {}
+        }
+    }
+    &text[open + 1..]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blanking_hides_strings_and_comments_but_keeps_layout() {
+        let src = "let x = \"fs::write\"; // fs::write\nfs::write(p);\n";
+        let v = FileView::new("rust/src/t.rs", src);
+        assert_eq!(v.code.len(), src.len());
+        assert_eq!(v.code.matches("fs::write").count(), 1);
+        assert_eq!(v.line_of(v.code.find("fs::write").unwrap()), 2);
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_are_blanked() {
+        let src = "let a = r#\"Ordering::Relaxed\"#; let b = '\\''; let c: &'static str = \"\";";
+        let v = FileView::new("rust/src/t.rs", src);
+        assert_eq!(v.code.len(), src.len());
+        assert!(!v.code.contains("Ordering::Relaxed"));
+        assert!(v.code.contains("&'static str"));
+    }
+
+    #[test]
+    fn nested_block_comments_are_blanked() {
+        let src = "/* outer /* env::var */ still */ env::var(\"X\")";
+        let v = FileView::new("rust/src/t.rs", src);
+        assert_eq!(v.code.matches("env::var").count(), 1);
+    }
+
+    #[test]
+    fn cfg_test_mod_spans_are_found() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() { fs::write(p); }\n}\n";
+        let v = FileView::new("rust/src/t.rs", src);
+        assert_eq!(v.test_spans.len(), 1);
+        let off = v.code.find("fs::write").unwrap();
+        assert!(v.in_test(off));
+        assert!(!v.in_test(0));
+    }
+
+    #[test]
+    fn lint_allow_comments_are_parsed() {
+        let src = "x(); // lint-allow: relaxed-ordering telemetry counter, no protocol\n\
+                   y(); // lint-allow: nope\n";
+        let v = FileView::new("rust/src/t.rs", src);
+        assert_eq!(v.allows.len(), 2);
+        assert_eq!(v.allows[0].line, 1);
+        assert_eq!(v.allows[0].rule, "relaxed-ordering");
+        assert!(v.allows[0].reason.starts_with("telemetry"));
+        assert_eq!(v.allows[1].rule, "nope");
+        assert_eq!(v.allows[1].reason, "");
+    }
+
+    #[test]
+    fn bounded_find_respects_identifier_and_colon_boundaries() {
+        let hay = "transport::fs::x std::fs::y fs::z inumx";
+        let hits = find_bounded(hay, "fs::", false);
+        assert_eq!(hits.len(), 1, "only the bare fs:: matches: {hits:?}");
+        let hits = find_bounded(hay, "std::fs::", false);
+        assert_eq!(hits.len(), 1);
+        let hits = find_bounded(hay, "num", true);
+        assert!(hits.is_empty(), "inumx must not match num: {hits:?}");
+    }
+
+    #[test]
+    fn balanced_arg_spans_nested_parens() {
+        let text = "num((a + b(c)) as f64) + 1";
+        let open = text.find('(').unwrap();
+        assert_eq!(balanced_arg(text, open), "(a + b(c)) as f64");
+    }
+}

@@ -1,0 +1,250 @@
+//! Per-rule fixture snippets: each rule gets a known-good source that
+//! passes and a known-bad source that fails with the right rule id on
+//! the right file:line — plus the meta checks (unknown lint-allow rule,
+//! cfg(test) exemption) and the linchpin: the real tree lints clean.
+
+use xtask::{lint_files, Finding};
+
+fn lint_one(path: &str, src: &str) -> Vec<Finding> {
+    lint_files(&[(path.to_string(), src.to_string())])
+}
+
+fn assert_clean(path: &str, src: &str) {
+    let f = lint_one(path, src);
+    assert!(f.is_empty(), "expected clean, got: {f:?}");
+}
+
+fn assert_finds(path: &str, src: &str, rule: &str, line: usize) {
+    let f = lint_one(path, src);
+    assert!(
+        f.iter().any(|x| x.rule == rule && x.path == path && x.line == line),
+        "expected {rule} at {path}:{line}, got: {f:?}"
+    );
+}
+
+// ---- R1 fs-outside-seam ---------------------------------------------------
+
+#[test]
+fn r1_coordinator_fs_is_flagged() {
+    let bad = "pub fn collect(p: &std::path::Path) {\n\
+                   let _ = std::fs::read(p);\n\
+               }\n";
+    assert_finds("rust/src/coordinator/procs.rs", bad, "fs-outside-seam", 2);
+}
+
+#[test]
+fn r1_transport_fs_is_fine_and_seam_reexports_are_fine() {
+    let good = "pub fn collect(p: &std::path::Path) {\n\
+                    let _ = std::fs::read(p);\n\
+                }\n";
+    assert_clean("rust/src/transport/fs.rs", good);
+    // re-exporting the transport fs seam from the coordinator is the seam
+    let reexport = "pub use crate::transport::fs::{checkpoint_path, collect_artifact};\n";
+    assert_clean("rust/src/coordinator/procs.rs", reexport);
+}
+
+// ---- R2 final-path-create -------------------------------------------------
+
+#[test]
+fn r2_direct_final_artifact_write_is_flagged() {
+    let bad = "pub fn publish(dir: &std::path::Path, bytes: &[u8]) {\n\
+                   std::fs::write(dir.join(\"shards.json\"), bytes).unwrap();\n\
+               }\n";
+    assert_finds("rust/src/text/feed.rs", bad, "final-path-create", 2);
+}
+
+#[test]
+fn r2_tmp_then_rename_is_fine() {
+    let good = "pub fn publish(dir: &std::path::Path, bytes: &[u8]) {\n\
+                    let tmp = dir.join(\"manifest.tmp\");\n\
+                    std::fs::write(&tmp, bytes).unwrap();\n\
+                    std::fs::rename(&tmp, dir.join(\"shards.json\")).unwrap();\n\
+                }\n";
+    assert_clean("rust/src/text/feed.rs", good);
+}
+
+// ---- R3 json-int-precision ------------------------------------------------
+
+#[test]
+fn r3_bare_integer_cast_into_num_is_flagged() {
+    let bad = "pub fn row(n: u64) -> Json {\n\
+                   num(n as f64)\n\
+               }\n";
+    assert_finds("rust/src/obs/report.rs", bad, "json-int-precision", 2);
+    let bad_direct = "pub fn row(n: usize) -> Json {\n\
+                      Json::Num(n as f64)\n\
+                      }\n";
+    assert_finds("rust/src/obs/report.rs", bad_direct, "json-int-precision", 2);
+}
+
+#[test]
+fn r3_helpers_and_float_arithmetic_are_fine() {
+    let good = "pub fn row(n: u64, secs: f64, bytes: u64) -> Json {\n\
+                    obj(vec![\n\
+                        (\"n\", inum(n)),\n\
+                        (\"count\", u64s(n)),\n\
+                        (\"rate\", num(bytes as f64 / secs / 1e6)),\n\
+                        (\"lr\", fnum(0.025f32)),\n\
+                    ])\n\
+                }\n";
+    assert_clean("rust/src/obs/report.rs", good);
+}
+
+// ---- R4 env-var-outside-env -----------------------------------------------
+
+#[test]
+fn r4_env_read_outside_util_env_is_flagged() {
+    let bad = "pub fn knob() -> Option<String> {\n\
+                   std::env::var(\"DW2V_LOG\").ok()\n\
+               }\n";
+    assert_finds("rust/src/coordinator/supervisor.rs", bad, "env-var-outside-env", 2);
+}
+
+#[test]
+fn r4_util_env_is_the_home() {
+    let good = "pub fn var(name: &str) -> Option<String> {\n\
+                    std::env::var(name).ok()\n\
+                }\n";
+    assert_clean("rust/src/util/env.rs", good);
+}
+
+// ---- R5 nondeterministic-call ---------------------------------------------
+
+#[test]
+fn r5_wall_clock_in_deterministic_path_is_flagged() {
+    let bad = "pub fn route() -> u64 {\n\
+                   let t = std::time::SystemTime::now();\n\
+                   0\n\
+               }\n";
+    assert_finds("rust/src/coordinator/divider.rs", bad, "nondeterministic-call", 2);
+}
+
+#[test]
+fn r5_other_files_may_read_the_clock() {
+    let good = "pub fn stamp() -> std::time::SystemTime {\n\
+                    std::time::SystemTime::now()\n\
+                }\n";
+    assert_clean("rust/src/obs/journal.rs", good);
+}
+
+// ---- R6 unhandled-message -------------------------------------------------
+
+const FRAME_OK: &str = "pub const MSG_REGISTER: u8 = 0x01;\n\
+                        pub const MSG_GET_SHARD: u8 = 0x02;\n";
+
+#[test]
+fn r6_unhandled_frame_message_is_flagged() {
+    let server = "fn handle(t: u8) {\n\
+                      match t {\n\
+                          frame::MSG_REGISTER => {}\n\
+                          _ => {}\n\
+                      }\n\
+                  }\n";
+    let f = lint_files(&[
+        ("rust/src/transport/frame.rs".to_string(), FRAME_OK.to_string()),
+        ("rust/src/transport/server.rs".to_string(), server.to_string()),
+    ]);
+    assert!(
+        f.iter().any(|x| x.rule == "unhandled-message"
+            && x.path == "rust/src/transport/frame.rs"
+            && x.line == 2
+            && x.msg.contains("MSG_GET_SHARD")),
+        "got: {f:?}"
+    );
+}
+
+#[test]
+fn r6_fully_dispatched_frame_is_fine() {
+    let server = "fn handle(t: u8) {\n\
+                      match t {\n\
+                          frame::MSG_REGISTER => {}\n\
+                          frame::MSG_GET_SHARD => {}\n\
+                          _ => {}\n\
+                      }\n\
+                  }\n";
+    let f = lint_files(&[
+        ("rust/src/transport/frame.rs".to_string(), FRAME_OK.to_string()),
+        ("rust/src/transport/server.rs".to_string(), server.to_string()),
+    ]);
+    assert!(f.is_empty(), "got: {f:?}");
+}
+
+// ---- R7 relaxed-ordering --------------------------------------------------
+
+#[test]
+fn r7_undocumented_relaxed_is_flagged_and_allowlist_is_honored() {
+    let bad = "use std::sync::atomic::{AtomicU64, Ordering};\n\
+               pub fn bump(c: &AtomicU64) {\n\
+                   c.fetch_add(1, Ordering::Relaxed);\n\
+               }\n";
+    assert_finds("rust/src/exec/channel.rs", bad, "relaxed-ordering", 3);
+    assert_clean("rust/src/obs/metrics.rs", bad);
+    assert_clean("rust/src/sgns/hogwild.rs", bad);
+}
+
+#[test]
+fn r7_justified_relaxed_passes() {
+    let good = "use std::sync::atomic::{AtomicU64, Ordering};\n\
+                pub fn bump(c: &AtomicU64) {\n\
+                    // lint-allow: relaxed-ordering monotonic telemetry counter\n\
+                    c.fetch_add(1, Ordering::Relaxed);\n\
+                }\n";
+    assert_clean("rust/src/exec/channel.rs", good);
+}
+
+// ---- meta ------------------------------------------------------------------
+
+#[test]
+fn unknown_lint_allow_rule_is_itself_an_error() {
+    let src = "pub fn f() {}\n// lint-allow: not-a-rule because reasons\n";
+    let f = lint_one("rust/src/x.rs", src);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "bad-lint-allow");
+    assert_eq!(f[0].line, 2);
+    assert!(f[0].msg.contains("not-a-rule"));
+}
+
+#[test]
+fn findings_inside_cfg_test_mods_are_exempt() {
+    let src = "pub fn f() {}\n\
+               #[cfg(test)]\n\
+               mod tests {\n\
+                   use std::sync::atomic::{AtomicU64, Ordering};\n\
+                   fn g(c: &AtomicU64) {\n\
+                       c.fetch_add(1, Ordering::Relaxed);\n\
+                       let _ = std::env::var(\"DW2V_LOG\");\n\
+                   }\n\
+               }\n";
+    assert_clean("rust/src/exec/channel.rs", src);
+}
+
+#[test]
+fn strings_and_comments_cannot_trip_rules() {
+    let src = "pub fn f() -> &'static str {\n\
+                   // Ordering::Relaxed is discussed here, and std::env::var too\n\
+                   \"Ordering::Relaxed env::var(\\\"DW2V_X\\\") num(x as f64)\"\n\
+               }\n";
+    assert_clean("rust/src/exec/channel.rs", src);
+}
+
+// ---- the linchpin: the shipped tree is clean --------------------------------
+
+#[test]
+fn the_real_tree_has_zero_unsuppressed_findings() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .and_then(|p| p.parent())
+        .expect("xtask lives at <root>/rust/xtask")
+        .to_path_buf();
+    let (findings, _suppressed, files) = xtask::lint_tree(&root).expect("readable tree");
+    assert!(files > 50, "tree walk looks broken: only {files} files");
+    assert!(
+        findings.is_empty(),
+        "the tree must lint clean; run `cargo xtask lint`:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
